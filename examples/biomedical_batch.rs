@@ -1,0 +1,59 @@
+//! Domain scenario from the paper's introduction: batched question answering
+//! over a knowledge graph (the paper motivates medical QA over biomedical
+//! KGs; our stand-in is the OAG academic graph — same shape: typed entities,
+//! typed relations, link-style questions arriving in volume).
+//!
+//! Demonstrates the end-to-end in-batch flow with GRAG retrieval + GAT
+//! subgraph encoding, sweeping the batch size the way a deployment would
+//! size its batching window.
+//!
+//! ```bash
+//! cargo run --release --offline --example biomedical_batch -- --batches 25,50,100
+//! ```
+
+use subgcache::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let store = ArtifactStore::discover()?;
+    let ds = store.dataset("oag")?;
+    let engine = Engine::start(&store)?;
+    let retriever = GragRetriever::default();
+
+    let batches: Vec<usize> = args
+        .list_or("batches", "25,50,100")
+        .iter()
+        .map(|s| s.parse().expect("bad --batches"))
+        .collect();
+
+    let cfg = ServeConfig {
+        backbone: args.get_or("backbone", "llama-3.2-3b-sim").to_string(),
+        n_clusters: 2,
+        ..Default::default()
+    };
+    let coord = Coordinator::new(&store, &engine, cfg)?;
+
+    println!("in-batch KGQA over {} ({} entities, {} relations)",
+             ds.graph.name, ds.graph.n_nodes(), ds.graph.n_edges());
+    let mut t = Table::new(&["batch", "method", "ACC (%)", "TTFT (ms)", "PFTT (ms)",
+                             "cluster stage (ms)"]);
+    for &b in &batches {
+        let queries = ds.sample_test(b, 13);
+        let base = coord.serve_baseline(&ds, &queries, &retriever)?;
+        let ours = coord.serve_subgcache(&ds, &queries, &retriever)?;
+        t.row(&[b.to_string(), "GRAG".into(),
+                format!("{:.1}", base.metrics.acc()),
+                format!("{:.1}", base.metrics.ttft_ms()),
+                format!("{:.1}", base.metrics.pftt_ms()),
+                "-".into()]);
+        t.row(&[b.to_string(), "GRAG+SubGCache".into(),
+                format!("{:.1}", ours.metrics.acc()),
+                format!("{:.1}", ours.metrics.ttft_ms()),
+                format!("{:.1}", ours.metrics.pftt_ms()),
+                format!("{:.1}", ours.metrics.cluster_time * 1e3)]);
+    }
+    t.print();
+    println!("\nlarger batches expose more subgraph overlap: the shared \
+              representative prefill amortizes further and PFTT keeps dropping.");
+    Ok(())
+}

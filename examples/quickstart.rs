@@ -1,0 +1,60 @@
+//! Quickstart: load the Scene Graph dataset, serve a small in-batch workload
+//! with and without SubGCache, and print the speedup.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example quickstart
+//! ```
+
+use subgcache::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // artifacts/ holds everything `make artifacts` produced: datasets, vocab,
+    // AOT HLO and trained weights. Python is NOT needed from here on.
+    let store = ArtifactStore::discover()?;
+    let ds = store.dataset("scene_graph")?;
+    println!("loaded {}: {} nodes, {} edges, {} queries",
+             ds.graph.name, ds.graph.n_nodes(), ds.graph.n_edges(), ds.queries.len());
+
+    // The PJRT engine thread compiles the AOT artifacts on first use.
+    let engine = Engine::start(&store)?;
+
+    // An in-batch workload: 16 test queries arriving together.
+    let queries = ds.sample_test(16, 7);
+    let retriever = GRetriever::default();
+
+    let cfg = ServeConfig {
+        backbone: "llama-3.2-3b-sim".into(),
+        n_clusters: 1, // the paper's best Scene Graph setting (§4.3)
+        ..Default::default()
+    };
+    let coord = Coordinator::new(&store, &engine, cfg)?;
+
+    println!("\nserving baseline (per-query full prefill)...");
+    let base = coord.serve_baseline(&ds, &queries, &retriever)?;
+    println!("serving with SubGCache (clustered KV reuse)...");
+    let ours = coord.serve_subgcache(&ds, &queries, &retriever)?;
+
+    let d = delta(&base.metrics, &ours.metrics);
+    let mut t = Table::new(&["method", "ACC (%)", "RT (ms)", "TTFT (ms)", "PFTT (ms)"]);
+    t.row(&["G-Retriever".into(),
+            format!("{:.1}", base.metrics.acc()),
+            format!("{:.1}", base.metrics.rt_ms()),
+            format!("{:.1}", base.metrics.ttft_ms()),
+            format!("{:.1}", base.metrics.pftt_ms())]);
+    t.row(&["+SubGCache".into(),
+            format!("{:.1}", ours.metrics.acc()),
+            format!("{:.1}", ours.metrics.rt_ms()),
+            format!("{:.1}", ours.metrics.ttft_ms()),
+            format!("{:.1}", ours.metrics.pftt_ms())]);
+    t.print();
+    println!("\nspeedups: RT {:.2}x, TTFT {:.2}x, PFTT {:.2}x (ΔACC {:+.1})",
+             d.rt_x, d.ttft_x, d.pftt_x, d.acc_points);
+    println!("cache: {} prefills, {} hits, peak {} KiB",
+             ours.cache.prefills, ours.cache.hits, ours.cache.peak_bytes / 1024);
+
+    // A few generated answers:
+    for r in ours.results.iter().take(4) {
+        println!("  [{}] {:?} -> {:?} (gold {:?})", r.id, r.query, r.predicted, r.gold);
+    }
+    Ok(())
+}

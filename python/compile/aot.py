@@ -1,0 +1,363 @@
+"""AOT compile path: python runs ONCE here, never on the request path.
+
+``python -m compile.aot`` produces everything the Rust runtime needs:
+
+    artifacts/
+      data/{scene_graph,oag}.json      synthetic datasets (Table 1 stats)
+      vocab.json                       word-level tokenizer vocabulary
+      weights/<module>.npz             flattened parameters (p000..pNNN)
+      hlo/<module>.<entry>.hlo.txt     HLO *text* per entry point
+      manifest.json                    shapes, param order, constants
+      golden/*.json                    cross-language golden vectors
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+Incremental: training is skipped when the weights file already exists
+(delete ``artifacts/weights`` to retrain); lowering is always re-run (fast
+relative to training).
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import config, datasets, gnn, model, train, verbalize
+from .hashembed import embed_text
+from .tokenizer import Tokenizer
+
+
+def to_hlo_text(fn, *abstract_args) -> str:
+    lowered = jax.jit(fn).lower(*abstract_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+import re as _re
+
+_ARG_RE = _re.compile(r"%?Arg_(\d+)\.[0-9.]* = \S+ parameter\((\d+)\)")
+
+
+def entry_arg_map(hlo_text: str) -> list:
+    """Map HLO entry parameter position -> original flattened argument index.
+
+    XLA may dead-code-eliminate unused arguments (renumbering the survivors),
+    so the Rust runtime must not assume position == flatten order. We keep
+    every argument live by construction (each entry returns something that
+    depends on all params), but parse the map defensively: arg_map[n] = m
+    means HLO parameter(n) is flattened argument m.
+    """
+    entry = hlo_text[hlo_text.index("ENTRY"):]
+    pairs = sorted((int(n), int(m)) for m, n in _ARG_RE.findall(entry))
+    positions = [n for n, _ in pairs]
+    assert positions == list(range(len(pairs))), f"non-contiguous params: {positions}"
+    return [m for _, m in pairs]
+
+
+def abstract(params):
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype), params
+    )
+
+
+def _write(path: str, text: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) / 1e6:.1f} MB)", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Golden vectors (cross-language pinning; consumed by rust tests)
+# ---------------------------------------------------------------------------
+
+def write_goldens(out: str, tok: Tokenizer, dsets) -> None:
+    gdir = os.path.join(out, "golden")
+    os.makedirs(gdir, exist_ok=True)
+
+    texts = [
+        "what is the color of the cords ?",
+        'how is " a dynamic environment for video surveillance " connected to'
+        ' " computer science " ?',
+        "graph : cords color blue ; laptop ; cords left of laptop ;",
+        "Mixed CASE with   spaces\tand-punct.uation!",
+        "",
+    ]
+    with open(os.path.join(gdir, "tokenizer.json"), "w") as f:
+        json.dump([{"text": t, "ids": tok.encode(t)} for t in texts], f)
+    with open(os.path.join(gdir, "embed.json"), "w") as f:
+        json.dump([{"text": t, "vec": [float(x) for x in embed_text(t)]}
+                   for t in texts], f)
+
+    scene = dsets[0]
+    cases = []
+    for nodes, edges, q in [
+        ([0, 1, 2], [0, 1], "what is the color of the cords ?"),
+        (list(range(8)), list(range(12)), "what color is the laptop ?"),
+        ([2], [], "what is the material of the screen ?"),
+    ]:
+        cases.append({
+            "nodes": nodes, "edges": edges, "query": q,
+            "prefix": verbalize.prefix_text(scene, nodes, edges),
+            "prefix_capped": verbalize.prefix_text(scene, nodes, edges, max_tokens=24),
+            "prompt": verbalize.full_prompt(scene, nodes, edges, q),
+        })
+    with open(os.path.join(gdir, "verbalize.json"), "w") as f:
+        json.dump(cases, f)
+
+
+def write_llm_golden(out: str, name: str, tok: Tokenizer, params, dims) -> None:
+    """End-to-end numeric golden: prefill→extend→generate on the Pallas path.
+
+    Pins the Rust runtime (HLO executables + buffer plumbing) to the Python
+    semantics, including the SubGCache consistency property: the golden is
+    produced via the *split* path exactly as Rust serves it.
+    """
+    prefill, extend, generate = model.make_entries(dims, use_kernel=True)
+    prefix = "graph : cords color blue ; laptop ; screen material glass ; " \
+             "cords left of laptop ; screen above laptop ;"
+    question = " question : what is the color of the cords ? answer :"
+    p_ids = [config.BOS_ID] + tok.encode(prefix)
+    q_ids = tok.encode(question)
+    S, Qm = dims.max_seq, config.MAX_Q
+    tokens = np.full(S, config.PAD_ID, np.int32)
+    tokens[: len(p_ids)] = p_ids
+    q_tok = np.full(Qm, config.PAD_ID, np.int32)
+    q_tok[: len(q_ids)] = q_ids
+
+    kv_k, kv_v, _ = jax.jit(prefill)(params, jnp.asarray(tokens),
+                                     jnp.int32(len(p_ids)))
+    kv_k, kv_v, logits = jax.jit(extend)(params, kv_k, kv_v,
+                                         jnp.int32(len(p_ids)), jnp.asarray(q_tok))
+    first = int(jnp.argmax(logits[len(q_ids) - 1]))
+    gen = jax.jit(generate)(params, kv_k, kv_v,
+                            jnp.int32(len(p_ids) + len(q_ids)), jnp.int32(first))
+    gen = [int(x) for x in np.asarray(gen)]
+
+    # Baseline (monolithic) path golden: prefill(prefix ⊕ question) directly.
+    full = np.full(S, config.PAD_ID, np.int32)
+    full[: len(p_ids)] = p_ids
+    full[len(p_ids): len(p_ids) + len(q_ids)] = q_ids
+    flen = len(p_ids) + len(q_ids)
+    bk, bv, blogits = jax.jit(prefill)(params, jnp.asarray(full), jnp.int32(flen))
+    bfirst = int(jnp.argmax(blogits))
+    bgen = jax.jit(generate)(params, bk, bv, jnp.int32(flen), jnp.int32(bfirst))
+    bgen = [int(x) for x in np.asarray(bgen)]
+
+    golden = {
+        "backbone": name,
+        "prefix_tokens": tokens.tolist(),
+        "prefix_len": len(p_ids),
+        "q_tokens": q_tok.tolist(),
+        "q_len": len(q_ids),
+        "first_token": first,
+        "generated": gen,
+        "answer_text": tok.decode(gen),
+        "extend_logits_row": [float(x) for x in np.asarray(logits[len(q_ids) - 1])[:32]],
+        "baseline_tokens": full.tolist(),
+        "baseline_len": flen,
+        "baseline_first_token": bfirst,
+        "baseline_generated": bgen,
+        "baseline_answer_text": tok.decode(bgen),
+    }
+    with open(os.path.join(out, "golden", f"llm_{name}.json"), "w") as f:
+        json.dump(golden, f)
+    print(f"  golden answer [{name}]: {golden['answer_text']!r}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Main build
+# ---------------------------------------------------------------------------
+
+def build(out: str, backbones, steps_override=None, skip_train=False):
+    t0 = time.time()
+    os.makedirs(out, exist_ok=True)
+
+    print("[1/5] datasets", flush=True)
+    datasets.write_datasets(os.path.join(out, "data"))
+    with open(os.path.join(out, "data", "scene_graph.json")) as f:
+        scene = json.load(f)
+    with open(os.path.join(out, "data", "oag.json")) as f:
+        oag = json.load(f)
+    dsets = [scene, oag]
+
+    print("[2/5] tokenizer", flush=True)
+    tok = train.build_tokenizer(dsets)
+    tok.save(os.path.join(out, "vocab.json"))
+    vocab = tok.padded_size
+    print(f"  vocab: {len(tok)} tokens (padded to {vocab})", flush=True)
+
+    manifest = {
+        "constants": {
+            "max_seq": config.MAX_SEQ, "max_q": config.MAX_Q,
+            "max_gen": config.MAX_GEN, "max_prefix": config.MAX_PREFIX,
+            "vocab": vocab, "feat_dim": config.FEAT_DIM, "n_max": config.N_MAX,
+            "gnn_emb": config.GNN_EMB,
+            "pad_id": config.PAD_ID, "bos_id": config.BOS_ID,
+            "eos_id": config.EOS_ID, "unk_id": config.UNK_ID,
+        },
+        "modules": {},
+    }
+
+    print("[3/5] LLM backbones", flush=True)
+    from . import synth
+    rng = np.random.default_rng(1)
+    # Mostly procedurally-sampled graphs (forces extraction over memorization
+    # — see synth.py) plus the real datasets' train splits for distribution
+    # anchoring.
+    n_synth = int(os.environ.get("SUBGCACHE_SYNTH", "12000"))
+    synth_toks, synth_masks = synth.make_synth_examples(n_synth, tok, rng)
+    real_ex = [train.make_examples(ds, tok, rng) for ds in dsets]
+    real_toks, real_masks = train.balance_examples(real_ex, rng)
+    all_toks = np.concatenate([synth_toks, real_toks])
+    all_masks = np.concatenate([synth_masks, real_masks])
+    order = rng.permutation(all_toks.shape[0])
+    all_toks, all_masks = all_toks[order], all_masks[order]
+    print(f"  {all_toks.shape[0]} training examples "
+          f"({n_synth} synthetic + {real_toks.shape[0]} real, shuffled), "
+          f"seq {all_toks.shape[1]}", flush=True)
+
+    for name in backbones:
+        bb = config.BACKBONES[name]
+        dims = model.dims_for(bb, vocab)
+        wpath = os.path.join(out, "weights", f"{name}.npz")
+        if os.path.exists(wpath) and not steps_override:
+            print(f"  [{name}] weights exist, skipping training", flush=True)
+            spec = json.load(open(os.path.join(out, "weights", f"{name}.spec.json")))
+            params = load_params(out, name, dims)
+        else:
+            if skip_train:
+                params = model.init_params(dims, bb.seed)
+            else:
+                params = train.train_backbone(bb, dims, all_toks, all_masks,
+                                              steps=steps_override)
+                acc = train.teacher_forced_acc(params, dims, all_toks, all_masks)
+                print(f"  [{name}] teacher-forced answer ACC: {acc:.2%}", flush=True)
+            spec = train.save_weights(params, wpath)
+            with open(os.path.join(out, "weights", f"{name}.spec.json"), "w") as f:
+                json.dump(spec, f)
+
+        prefill, extend, generate = model.make_entries(dims, use_kernel=True)
+        S, Q = dims.max_seq, config.MAX_Q
+        kv = jax.ShapeDtypeStruct((dims.n_layers, S, dims.n_heads, dims.d_head),
+                                  jnp.float32)
+        ab_params = abstract(params)
+        i32 = jax.ShapeDtypeStruct((), jnp.int32)
+        toks_s = jax.ShapeDtypeStruct((S,), jnp.int32)
+        toks_q = jax.ShapeDtypeStruct((Q,), jnp.int32)
+
+        print(f"  [{name}] lowering prefill/extend/generate", flush=True)
+        hlo_prefill = to_hlo_text(prefill, ab_params, toks_s, i32)
+        hlo_extend = to_hlo_text(extend, ab_params, kv, kv, i32, toks_q)
+        hlo_generate = to_hlo_text(generate, ab_params, kv, kv, i32, i32)
+        _write(os.path.join(out, "hlo", f"{name}.prefill.hlo.txt"), hlo_prefill)
+        _write(os.path.join(out, "hlo", f"{name}.extend.hlo.txt"), hlo_extend)
+        _write(os.path.join(out, "hlo", f"{name}.generate.hlo.txt"), hlo_generate)
+
+        n_params = len(spec)
+        manifest["modules"][name] = {
+            "kind": "llm", "params": spec,
+            "dims": {"vocab": vocab, "d_model": bb.d_model,
+                     "n_layers": bb.n_layers, "n_heads": bb.n_heads,
+                     "d_head": bb.d_head, "d_ff": bb.d_ff,
+                     "max_seq": S},
+            "entries": {
+                "prefill": {"hlo": f"hlo/{name}.prefill.hlo.txt",
+                            "extra_args": [["tokens", "i32", [S]],
+                                           ["plen", "i32", []]],
+                            "outputs": 3,
+                            "arg_map": entry_arg_map(hlo_prefill)},
+                "extend": {"hlo": f"hlo/{name}.extend.hlo.txt",
+                           "extra_args": [["kv_k", "f32", list(kv.shape)],
+                                          ["kv_v", "f32", list(kv.shape)],
+                                          ["plen", "i32", []],
+                                          ["q_tokens", "i32", [Q]]],
+                           "outputs": 3,
+                           "arg_map": entry_arg_map(hlo_extend)},
+                "generate": {"hlo": f"hlo/{name}.generate.hlo.txt",
+                             "extra_args": [["kv_k", "f32", list(kv.shape)],
+                                            ["kv_v", "f32", list(kv.shape)],
+                                            ["cur_len", "i32", []],
+                                            ["first_tok", "i32", []]],
+                             "outputs": 1,
+                             "arg_map": entry_arg_map(hlo_generate)},
+            },
+        }
+        for entry, meta in manifest["modules"][name]["entries"].items():
+            n_extra = len(meta["extra_args"])
+            assert len(meta["arg_map"]) == n_params + n_extra, \
+                f"{name}.{entry}: {len(meta['arg_map'])} live args, " \
+                f"expected {n_params + n_extra} (dead parameters?)"
+
+        if name == config.PRIMARY_BACKBONE:
+            os.makedirs(os.path.join(out, "golden"), exist_ok=True)
+            write_llm_golden(out, name, tok, params, dims)
+
+    print("[4/5] GNN encoders", flush=True)
+    for gname, (init, encode) in gnn.ENCODERS.items():
+        params = init()
+        spec = train.save_weights(params, os.path.join(out, "weights", f"{gname}.npz"))
+        with open(os.path.join(out, "weights", f"{gname}.spec.json"), "w") as f:
+            json.dump(spec, f)
+        N, F = config.N_MAX, config.FEAT_DIM
+        x = jax.ShapeDtypeStruct((N, F), jnp.float32)
+        adj = jax.ShapeDtypeStruct((N, N), jnp.float32)
+        mask = jax.ShapeDtypeStruct((N,), jnp.float32)
+        hlo_enc = to_hlo_text(encode, abstract(params), x, adj, mask)
+        _write(os.path.join(out, "hlo", f"{gname}.encode.hlo.txt"), hlo_enc)
+        manifest["modules"][gname] = {
+            "kind": "gnn", "params": spec,
+            "entries": {"encode": {"hlo": f"hlo/{gname}.encode.hlo.txt",
+                                   "extra_args": [["x", "f32", [N, F]],
+                                                  ["adj", "f32", [N, N]],
+                                                  ["mask", "f32", [N]]],
+                                   "outputs": 1,
+                                   "arg_map": entry_arg_map(hlo_enc)}},
+        }
+        assert len(manifest["modules"][gname]["entries"]["encode"]["arg_map"]) \
+            == len(spec) + 3
+
+    print("[5/5] goldens + manifest", flush=True)
+    write_goldens(out, tok, dsets)
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"done in {time.time() - t0:.0f}s", flush=True)
+
+
+def load_params(out: str, name: str, dims) -> dict:
+    """Rebuild a params pytree from a saved npz (used for goldens/tests)."""
+    spec = json.load(open(os.path.join(out, "weights", f"{name}.spec.json")))
+    data = np.load(os.path.join(out, "weights", f"{name}.npz"))
+    flat = [jnp.asarray(data[e["key"]]) for e in spec]
+    template = model.init_params(dims, 0)
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    assert len(leaves) == len(flat), "weight count mismatch"
+    return jax.tree_util.tree_unflatten(treedef, flat)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--backbones", default=",".join(config.BACKBONES),
+                    help="comma-separated subset of backbones to build")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override train steps (forces retraining)")
+    ap.add_argument("--skip-train", action="store_true",
+                    help="random-init weights (CI smoke mode)")
+    args = ap.parse_args()
+    build(os.path.abspath(args.out), args.backbones.split(","),
+          steps_override=args.steps, skip_train=args.skip_train)
+
+
+if __name__ == "__main__":
+    main()

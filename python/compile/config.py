@@ -1,0 +1,78 @@
+"""Shared build-time configuration for the SubGCache compile path.
+
+Everything here is baked into the AOT artifacts and mirrored (via
+``artifacts/manifest.json``) into the Rust runtime — keep it the single
+source of truth for shapes and backbone definitions.
+"""
+
+from dataclasses import dataclass, field
+
+# ---------------------------------------------------------------------------
+# Sequence geometry (static — AOT requires fixed shapes).
+# ---------------------------------------------------------------------------
+MAX_SEQ = 768  # total KV budget: prefix + query + generation
+MAX_Q = 32  # query (question) token budget for the `extend` entry
+MAX_GEN = 32  # greedy decode budget for the `generate` entry
+MAX_PREFIX = MAX_SEQ - MAX_Q - MAX_GEN  # 704
+
+# ---------------------------------------------------------------------------
+# Hash embedder / GNN geometry.
+# ---------------------------------------------------------------------------
+FEAT_DIM = 64  # FNV bag-of-tokens feature dim (SentenceBERT substitute)
+GNN_HIDDEN = 64
+GNN_LAYERS = 4
+GNN_HEADS = 4
+GNN_EMB = 64  # subgraph embedding dim used for clustering
+N_MAX = 64  # max nodes of a retrieved subgraph fed to the GNN
+
+
+@dataclass(frozen=True)
+class Backbone:
+    """A toy decoder-only LM standing in for one of the paper's backbones.
+
+    The paper's latency claims hinge on *where* prefill FLOPs are spent, not
+    on model scale, so each simulated backbone keeps the architecture family
+    distinct (depth/width/head layout) while staying trainable on CPU.
+    """
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_head: int
+    d_ff: int
+    seed: int
+    train_steps: int
+    lr: float = 3e-3
+
+    @property
+    def params_note(self) -> str:
+        return f"{self.name}: L={self.n_layers} d={self.d_model} H={self.n_heads}"
+
+
+BACKBONES = {
+    "llama-3.2-3b-sim": Backbone("llama-3.2-3b-sim", 96, 3, 3, 32, 192, seed=11, train_steps=1300),
+    "llama-2-7b-sim": Backbone("llama-2-7b-sim", 96, 4, 3, 32, 192, seed=23, train_steps=800),
+    "mistral-7b-sim": Backbone("mistral-7b-sim", 112, 4, 4, 28, 224, seed=37, train_steps=800),
+    "falcon-7b-sim": Backbone("falcon-7b-sim", 80, 3, 4, 20, 160, seed=53, train_steps=800),
+}
+PRIMARY_BACKBONE = "llama-3.2-3b-sim"
+
+# Pallas attention kernel tiling (VMEM-oriented; see DESIGN.md §5).
+BLK_T = 64  # query tile
+BLK_S = 128  # key/value tile streamed through VMEM
+
+# Special token ids — fixed, the tokenizer builds vocab around them.
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+UNK_ID = 3
+
+# Dataset generation seeds (Table 1 statistics are reproduced exactly).
+SCENE_GRAPH_SEED = 7
+OAG_SEED = 13
+
+# Training-time sequence budget (shorter than MAX_SEQ for CPU speed; RoPE +
+# extractive answers + merged-prompt augmentation give length generalization).
+TRAIN_SEQ = 320
+TRAIN_BATCH = 8

@@ -1,0 +1,246 @@
+"""Synthetic dataset generators reproducing the paper's Table 1 statistics.
+
+The originals (a GQA scene graph subset and an OAG sample) are not
+redistributable here, so we generate graphs with identical statistics and the
+same query styles (DESIGN.md §4):
+
+* **Scene Graph** — 22 nodes, 147 edges, 426 queries; attribute questions
+  ("what is the color of the cords ?") and spatial-relation questions,
+  including the unique-source multi-hop form. Split 113/113/200.
+* **OAG** — 1071 nodes, 2022 edges, 3434 link-relation-prediction queries
+  ('how is "<a>" connected to "<b>" ?' → relation). Split 1617/1617/200.
+
+Everything is seeded and deterministic; the JSON schema is consumed by both
+the Python trainer and the Rust runtime.
+"""
+
+import json
+import os
+from typing import Dict, List
+
+import numpy as np
+
+from . import config
+
+# ---------------------------------------------------------------------------
+# Scene Graph
+# ---------------------------------------------------------------------------
+
+_OBJECTS = [
+    "eye glasses", "laptop", "cords", "windows", "man", "woman", "jeans",
+    "sweater", "screen", "pants", "shirt", "building", "camera", "jacket",
+    "table", "chair", "phone", "cup", "bag", "door", "shoes", "hat",
+]
+_COLORS = ["black", "blue", "orange", "red", "gray", "green", "white", "brown"]
+_MATERIALS = ["glass", "wood", "metal", "plastic", "leather"]
+_RELATIONS = [
+    "left of", "right of", "above", "below", "behind", "in front of",
+    "near", "on", "wearing", "holding", "under", "beside",
+]
+
+
+def _node_text(name: str, color: str = "", material: str = "") -> str:
+    parts = [name]
+    if color:
+        parts += ["color", color]
+    if material:
+        parts += ["material", material]
+    return " ".join(parts)
+
+
+def gen_scene_graph(seed: int = config.SCENE_GRAPH_SEED) -> Dict:
+    rng = np.random.default_rng(seed)
+    n = 22
+    names = list(_OBJECTS[:n])
+
+    nodes = []
+    colors: Dict[int, str] = {}
+    materials: Dict[int, str] = {}
+    for i, name in enumerate(names):
+        color = _COLORS[rng.integers(len(_COLORS))] if rng.random() < 0.65 else ""
+        material = _MATERIALS[rng.integers(len(_MATERIALS))] if rng.random() < 0.3 else ""
+        if i in (2, 4):  # the paper's example entities keep their attributes
+            color = "blue" if i == 2 else color
+        if color:
+            colors[i] = color
+        if material:
+            materials[i] = material
+        nodes.append({"id": i, "name": name, "text": _node_text(name, color, material)})
+
+    # 147 distinct directed edges over 22 nodes, one relation per ordered pair.
+    pairs = [(a, b) for a in range(n) for b in range(n) if a != b]
+    idx = rng.permutation(len(pairs))[:147]
+    edges = []
+    rel_of: Dict[tuple, str] = {}
+    for k in sorted(idx.tolist()):
+        a, b = pairs[k]
+        rel = _RELATIONS[rng.integers(len(_RELATIONS))]
+        rel_of[(a, b)] = rel
+        edges.append({"src": a, "dst": b, "text": rel})
+
+    # Query pool: attribute, relation, and unique-source (multi-hop) styles.
+    pool = []
+
+    def support_edges_of(node_id: int) -> List[int]:
+        return [ei for ei, e in enumerate(edges) if e["src"] == node_id or e["dst"] == node_id][:4]
+
+    for i, c in sorted(colors.items()):
+        pool.append({"text": f"what is the color of the {names[i]} ?", "answer": c,
+                     "support_nodes": [i], "support_edges": support_edges_of(i)[:2]})
+        pool.append({"text": f"what color is the {names[i]} ?", "answer": c,
+                     "support_nodes": [i], "support_edges": support_edges_of(i)[:2]})
+    for i, m in sorted(materials.items()):
+        pool.append({"text": f"what is the material of the {names[i]} ?", "answer": m,
+                     "support_nodes": [i], "support_edges": support_edges_of(i)[:2]})
+    for ei, e in enumerate(edges):
+        a, b = e["src"], e["dst"]
+        pool.append({"text": f"what is the relation between the {names[a]} and the {names[b]} ?",
+                     "answer": e["text"], "support_nodes": [a, b], "support_edges": [ei]})
+        pool.append({"text": f"how is the {names[a]} related to the {names[b]} ?",
+                     "answer": e["text"], "support_nodes": [a, b], "support_edges": [ei]})
+    # unique-source: exactly one edge (x, rel, b) -> answer x.
+    from collections import defaultdict
+    by_rel_dst = defaultdict(list)
+    for ei, e in enumerate(edges):
+        by_rel_dst[(e["text"], e["dst"])].append(ei)
+    for (rel, b), eis in sorted(by_rel_dst.items()):
+        if len(eis) == 1:
+            a = edges[eis[0]]["src"]
+            pool.append({"text": f"what is {rel} the {names[b]} ?", "answer": names[a],
+                         "support_nodes": [a, b], "support_edges": eis})
+            pool.append({"text": f"which object is {rel} the {names[b]} ?", "answer": names[a],
+                         "support_nodes": [a, b], "support_edges": eis})
+
+    order = rng.permutation(len(pool))[:426]
+    queries = []
+    for qid, k in enumerate(order.tolist()):
+        q = dict(pool[k])
+        q["id"] = qid
+        q["split"] = "train" if qid < 113 else ("val" if qid < 226 else "test")
+        queries.append(q)
+    assert len(queries) == 426
+    return {"name": "scene_graph", "nodes": nodes, "edges": edges, "queries": queries}
+
+
+# ---------------------------------------------------------------------------
+# OAG
+# ---------------------------------------------------------------------------
+
+_TOPICS = [
+    "graph", "neural", "networks", "retrieval", "augmented", "generation",
+    "language", "models", "caching", "inference", "latency", "attention",
+    "transformer", "knowledge", "reasoning", "clustering", "embedding",
+    "scene", "understanding", "video", "surveillance", "tabletops",
+    "interface", "learning", "systems", "databases", "query", "processing",
+    "batch", "spatial", "indexing", "vision", "detection", "segmentation",
+    "recommendation", "ranking", "search", "hashing", "distributed",
+    "scheduling", "memory", "compression", "pruning", "alignment",
+]
+_FIRST = ["wei", "li", "ana", "jose", "emma", "noah", "olivia", "liam", "mia",
+          "lucas", "sofia", "ethan", "nina", "omar", "ivan", "yuki", "chen",
+          "raj", "zoe", "marco"]
+_LAST = ["zhang", "smith", "garcia", "kumar", "tanaka", "mueller", "rossi",
+         "novak", "silva", "khan", "lee", "brown", "wilson", "martin",
+         "lopez", "dubois", "ivanov", "yamamoto", "olsen", "costa"]
+_CITIES = ["castilla", "copenhagen", "london", "singapore", "toronto",
+           "zurich", "melbourne", "austin", "kyoto", "munich", "lyon",
+           "oslo", "porto", "seoul", "taipei", "delhi", "cairo", "quito",
+           "lima", "bergen"]
+_FIELDS = [
+    "artificial intelligence", "computer vision", "machine learning",
+    "natural language processing", "information retrieval", "data mining",
+    "computer graphics", "human computer interaction", "databases",
+    "distributed systems", "computer networks", "software engineering",
+    "operating systems", "computer security", "computational biology",
+    "robotics", "speech processing", "computer architecture",
+    "programming languages", "theory of computation", "graph mining",
+    "recommender systems", "knowledge graphs", "computer science",
+]
+
+N_FIELDS, N_AFFILS, N_AUTHORS, N_PAPERS = 24, 40, 400, 607  # = 1071 nodes
+OAG_EDGES = 2022
+
+
+def gen_oag(seed: int = config.OAG_SEED) -> Dict:
+    rng = np.random.default_rng(seed)
+    nodes = []
+    # fields, affiliations, authors, papers — contiguous id ranges.
+    for f in _FIELDS[:N_FIELDS]:
+        nodes.append({"id": len(nodes), "name": f, "text": f})
+    for i in range(N_AFFILS):
+        name = f"university of {_CITIES[i % len(_CITIES)]}" if i < len(_CITIES) \
+            else f"{_CITIES[i % len(_CITIES)]} institute of technology"
+        nodes.append({"id": len(nodes), "name": name, "text": name})
+    author_names = set()
+    while len(author_names) < N_AUTHORS:
+        author_names.add(f"{_FIRST[rng.integers(len(_FIRST))]} {_LAST[rng.integers(len(_LAST))]}"
+                         f" {rng.integers(10)}")
+    for name in sorted(author_names):
+        nodes.append({"id": len(nodes), "name": name, "text": name})
+    for _ in range(N_PAPERS):
+        k = int(rng.integers(4, 7))
+        words = [_TOPICS[rng.integers(len(_TOPICS))] for _ in range(k)]
+        title = " ".join(words)
+        nodes.append({"id": len(nodes), "name": title, "text": title})
+    assert len(nodes) == 1071
+
+    field_ids = range(0, N_FIELDS)
+    affil_ids = range(N_FIELDS, N_FIELDS + N_AFFILS)
+    author_ids = range(N_FIELDS + N_AFFILS, N_FIELDS + N_AFFILS + N_AUTHORS)
+    paper_ids = range(N_FIELDS + N_AFFILS + N_AUTHORS, 1071)
+
+    edges = []
+    seen = set()
+
+    def add(src: int, dst: int, rel: str) -> bool:
+        if (src, dst) in seen or src == dst:
+            return False
+        seen.add((src, dst))
+        edges.append({"src": int(src), "dst": int(dst), "text": rel})
+        return True
+
+    for p in paper_ids:  # every paper is answerable for written_by/focuses_on
+        add(p, int(rng.choice(author_ids)), "written by")
+        add(p, int(rng.choice(field_ids)), "focuses on")
+    for i, a in enumerate(author_ids):  # affiliation membership
+        if i % 2 == 0:
+            add(int(rng.choice(affil_ids)), a, "has member")
+    extra_writers = 0
+    while len(edges) < OAG_EDGES - 300:
+        add(int(rng.choice(paper_ids)), int(rng.choice(author_ids)), "written by")
+        extra_writers += 1
+    while len(edges) < OAG_EDGES:
+        add(int(rng.choice(paper_ids)), int(rng.choice(paper_ids)), "cites")
+    assert len(edges) == OAG_EDGES
+
+    # 3434 relation-prediction queries over the edges (two phrasings).
+    name_of = {nd["id"]: nd["name"] for nd in nodes}
+    pool = []
+    for ei, e in enumerate(edges):
+        a, b = name_of[e["src"]], name_of[e["dst"]]
+        pool.append({"text": f'how is " {a} " connected to " {b} " ?', "answer": e["text"],
+                     "support_nodes": [e["src"], e["dst"]], "support_edges": [ei]})
+        pool.append({"text": f'what is the relation between " {a} " and " {b} " ?',
+                     "answer": e["text"],
+                     "support_nodes": [e["src"], e["dst"]], "support_edges": [ei]})
+    order = rng.permutation(len(pool))[:3434]
+    queries = []
+    for qid, k in enumerate(order.tolist()):
+        q = dict(pool[k])
+        q["id"] = qid
+        q["split"] = "train" if qid < 1617 else ("val" if qid < 3234 else "test")
+        queries.append(q)
+    assert len(queries) == 3434
+    return {"name": "oag", "nodes": nodes, "edges": edges, "queries": queries}
+
+
+def write_datasets(out_dir: str) -> List[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    paths = []
+    for gen in (gen_scene_graph, gen_oag):
+        ds = gen()
+        path = os.path.join(out_dir, f"{ds['name']}.json")
+        with open(path, "w") as f:
+            json.dump(ds, f)
+        paths.append(path)
+    return paths

@@ -1,0 +1,121 @@
+"""L2: graph encoders producing subgraph embeddings for query clustering.
+
+Two architectures, matching the paper's baselines: a **Graph Transformer**
+(G-Retriever; Shi et al. masked-attention message passing) and a **GAT**
+(GRAG; Veličković et al.). Both consume FNV-hashed node features, a dense
+adjacency mask and a node-validity mask, and mean-pool to a fixed-size
+subgraph embedding.
+
+Per DESIGN.md §4 the encoders are deterministically seeded but untrained —
+they serve as fixed structure-aware feature maps, which is all the paper's
+clustering stage requires. Edge attributes are folded into the adjacency
+mask only (documented substitution).
+
+AOT entry per encoder::
+
+    encode(params, x[N,F], adj[N,N], mask[N]) -> emb[GNN_EMB]
+"""
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import config
+
+N = config.N_MAX
+F = config.FEAT_DIM
+H = config.GNN_HIDDEN
+HEADS = config.GNN_HEADS
+LAYERS = config.GNN_LAYERS
+EMB = config.GNN_EMB
+DH = H // HEADS
+NEG = jnp.float32(-1e30)
+
+
+def _dense(k, fan_in, shape):
+    return (jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Graph Transformer (masked multi-head attention along edges)
+# ---------------------------------------------------------------------------
+
+def init_graph_transformer(seed: int = 101) -> Dict:
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 2 + LAYERS)
+    params = {"w_in": _dense(ks[0], F, (F, H)), "w_out": _dense(ks[1], H, (H, EMB)),
+              "layers": []}
+    for l in range(LAYERS):
+        lk = jax.random.split(ks[2 + l], 5)
+        params["layers"].append({
+            "wq": _dense(lk[0], H, (H, H)),
+            "wk": _dense(lk[1], H, (H, H)),
+            "wv": _dense(lk[2], H, (H, H)),
+            "wo": _dense(lk[3], H, (H, H)),
+            "w_ff": _dense(lk[4], H, (H, H)),
+        })
+    return params
+
+
+def graph_transformer_encode(params, x, adj, mask):
+    """x [N,F], adj [N,N] (1.0 where edge or self-loop), mask [N] -> emb [EMB]."""
+    h = jnp.tanh(x @ params["w_in"])  # [N, H]
+    allow = (adj + jnp.eye(N, dtype=adj.dtype)) * mask[None, :] * mask[:, None]
+    for lp in params["layers"]:
+        q = (h @ lp["wq"]).reshape(N, HEADS, DH)
+        k = (h @ lp["wk"]).reshape(N, HEADS, DH)
+        v = (h @ lp["wv"]).reshape(N, HEADS, DH)
+        scores = jnp.einsum("ihd,jhd->hij", q, k) / jnp.sqrt(jnp.float32(DH))
+        scores = jnp.where(allow[None, :, :] > 0, scores, NEG)
+        p = jax.nn.softmax(scores, axis=-1)
+        # isolated/padded rows have all-masked scores -> uniform p; zero them.
+        p = p * (allow.sum(axis=1)[None, :, None] > 0)
+        att = jnp.einsum("hij,jhd->ihd", p, v).reshape(N, H)
+        h = h + att @ lp["wo"]
+        h = h + jnp.tanh(h @ lp["w_ff"])
+    pooled = (h * mask[:, None]).sum(axis=0) / jnp.maximum(mask.sum(), 1.0)
+    return pooled @ params["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# GAT
+# ---------------------------------------------------------------------------
+
+def init_gat(seed: int = 211) -> Dict:
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 2 + LAYERS)
+    params = {"w_in": _dense(ks[0], F, (F, H)), "w_out": _dense(ks[1], H, (H, EMB)),
+              "layers": []}
+    for l in range(LAYERS):
+        lk = jax.random.split(ks[2 + l], 3)
+        params["layers"].append({
+            "w": _dense(lk[0], H, (H, H)),
+            "a_src": _dense(lk[1], DH, (HEADS, DH)),
+            "a_dst": _dense(lk[2], DH, (HEADS, DH)),
+        })
+    return params
+
+
+def gat_encode(params, x, adj, mask):
+    """GAT with LeakyReLU attention coefficients; same contract as above."""
+    h = jnp.tanh(x @ params["w_in"])
+    allow = (adj + jnp.eye(N, dtype=adj.dtype)) * mask[None, :] * mask[:, None]
+    for lp in params["layers"]:
+        wh = (h @ lp["w"]).reshape(N, HEADS, DH)
+        e_src = jnp.einsum("ihd,hd->ih", wh, lp["a_src"])  # [N, HEADS]
+        e_dst = jnp.einsum("jhd,hd->jh", wh, lp["a_dst"])
+        e = jax.nn.leaky_relu(e_src[:, None, :] + e_dst[None, :, :], 0.2)  # [N,N,HEADS]
+        e = jnp.where(allow[:, :, None] > 0, e, NEG)
+        alpha = jax.nn.softmax(e, axis=1)
+        alpha = alpha * (allow.sum(axis=1)[:, None, None] > 0)
+        out = jnp.einsum("ijh,jhd->ihd", alpha, wh).reshape(N, H)
+        h = h + jax.nn.elu(out)
+    pooled = (h * mask[:, None]).sum(axis=0) / jnp.maximum(mask.sum(), 1.0)
+    return pooled @ params["w_out"]
+
+
+ENCODERS = {
+    "graph_transformer": (init_graph_transformer, graph_transformer_encode),
+    "gat": (init_gat, gat_encode),
+}

@@ -1,0 +1,57 @@
+"""FNV-1a feature-hashing bag-of-tokens embedder.
+
+Substitute for SentenceBERT (see DESIGN.md §4): both retrieval scoring and
+GNN node features only need a *consistent* text→vector map where token
+overlap implies vector similarity. Mirrored exactly by ``rust/src/embed``;
+golden-tested across the language boundary.
+"""
+
+import math
+from typing import List
+
+import numpy as np
+
+from . import config
+from .tokenizer import split_text
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_MASK64 = (1 << 64) - 1
+
+
+def fnv1a(data: bytes) -> int:
+    """64-bit FNV-1a hash (identical constants on the Rust side)."""
+    h = _FNV_OFFSET
+    for b in data:
+        h ^= b
+        h = (h * _FNV_PRIME) & _MASK64
+    return h
+
+
+def embed_text(text: str, dim: int = config.FEAT_DIM) -> np.ndarray:
+    """L2-normalized hashed bag-of-tokens embedding.
+
+    Each token contributes ±1 to one bucket: bucket = hash % dim, sign from
+    bit 63. The signed variant keeps E[dot] ≈ 0 for disjoint token sets, so
+    cosine similarity tracks token overlap.
+    """
+    v = np.zeros(dim, dtype=np.float64)
+    for tok in split_text(text):
+        h = fnv1a(tok.encode("utf-8"))
+        sign = 1.0 if (h >> 63) == 0 else -1.0
+        v[h % dim] += sign
+    n = math.sqrt(float(np.dot(v, v)))
+    if n > 0:
+        v /= n
+    return v.astype(np.float32)
+
+
+def embed_texts(texts: List[str], dim: int = config.FEAT_DIM) -> np.ndarray:
+    return np.stack([embed_text(t, dim) for t in texts]) if texts else np.zeros((0, dim), np.float32)
+
+
+def cosine(a: np.ndarray, b: np.ndarray) -> float:
+    na, nb = float(np.linalg.norm(a)), float(np.linalg.norm(b))
+    if na == 0.0 or nb == 0.0:
+        return 0.0
+    return float(np.dot(a, b) / (na * nb))

@@ -1,0 +1,120 @@
+"""L1 Pallas kernel: KV-cache-aware tiled attention (flash-style).
+
+The compute hot-spot of prefill, extend and decode. TPU-shaped even though it
+executes here under ``interpret=True`` (the CPU PJRT plugin cannot run Mosaic
+custom-calls — see /opt/xla-example/README.md):
+
+* grid = (heads, query tiles, kv tiles), kv innermost so one ``(BLK_T,
+  BLK_S)`` score tile is live at a time;
+* the BlockSpecs express the HBM↔VMEM schedule a CUDA version would do with
+  threadblocks + shared memory: K/V stream through VMEM tile by tile while an
+  online-softmax accumulator (m, l, acc) lives in VMEM scratch;
+* accumulation is always f32 regardless of input dtype (MXU-style).
+
+VMEM budget per grid step (f32 words): BLK_T·D + 2·BLK_S·D + BLK_T·BLK_S +
+scratch (BLK_T·(D+2)) ≈ 82 KB at (64, 128, D=32) — far below the ~16 MB VMEM
+of a TPU core, leaving headroom for double buffering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import config
+
+
+def _attention_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                      *, blk_t: int, blk_s: int, n_s_blocks: int, scale: float):
+    """One (head, q-tile, kv-tile) grid step of the online-softmax recurrence."""
+    s_idx = pl.program_id(2)
+    t_idx = pl.program_id(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)[:, 0, :]  # [BLK_T, D]
+    k = k_ref[...].astype(jnp.float32)[:, 0, :]  # [BLK_S, D]
+    v = v_ref[...].astype(jnp.float32)[:, 0, :]  # [BLK_S, D]
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [BLK_T, BLK_S]
+
+    # Causal mask in absolute positions: row i (at q_offset + t_idx*BLK_T + i)
+    # may attend to cache slot j (at s_idx*BLK_S + j) iff slot <= row position.
+    off = off_ref[0, 0]
+    rows = t_idx * blk_t + jax.lax.broadcasted_iota(jnp.int32, (blk_t, blk_s), 0)
+    cols = s_idx * blk_s + jax.lax.broadcasted_iota(jnp.int32, (blk_t, blk_s), 1)
+    scores = jnp.where(cols <= off + rows, scores, -1e30)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, scores.max(axis=1, keepdims=True))
+    p = jnp.exp(scores - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * alpha + p.sum(axis=1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(s_idx == n_s_blocks - 1)
+    def _flush():
+        out = acc_ref[...] / l_ref[...]
+        o_ref[...] = out[:, None, :].astype(o_ref.dtype)
+
+
+@functools.partial(jax.named_call, name="cached_attention")
+def cached_attention(q, k, v, q_offset, *, blk_t: int = config.BLK_T,
+                     blk_s: int = config.BLK_S):
+    """Pallas cached attention; same contract as ``ref.cached_attention_ref``.
+
+    ``T`` and ``S`` need not be tile multiples: the tile sizes are clamped to
+    the actual extents (AOT entry points use a handful of static shapes, so
+    each lowering picks its own tiling).
+    """
+    T, H, D = q.shape
+    S = k.shape[0]
+    blk_t = min(blk_t, T)
+    blk_s = min(blk_s, S)
+    if T % blk_t:  # fall back to one row per tile rather than padding
+        blk_t = 1
+    if S % blk_s:
+        blk_s = next(b for b in (64, 32, 16, 8, 4, 2, 1) if S % b == 0)
+    n_t, n_s = T // blk_t, S // blk_s
+    scale = 1.0 / (D ** 0.5)
+
+    off = jnp.asarray(q_offset, jnp.int32).reshape(1, 1)
+    kernel = functools.partial(
+        _attention_kernel, blk_t=blk_t, blk_s=blk_s, n_s_blocks=n_s, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(H, n_t, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda h, t, s: (0, 0)),  # q_offset scalar
+            pl.BlockSpec((blk_t, 1, D), lambda h, t, s: (t, h, 0)),  # q tile
+            pl.BlockSpec((blk_s, 1, D), lambda h, t, s: (s, h, 0)),  # k tile
+            pl.BlockSpec((blk_s, 1, D), lambda h, t, s: (s, h, 0)),  # v tile
+        ],
+        out_specs=pl.BlockSpec((blk_t, 1, D), lambda h, t, s: (t, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, H, D), q.dtype),
+        scratch_shapes=[
+            pl.MemorySpace.ANY(shape=(blk_t, 1), dtype=jnp.float32),  # m
+            pl.MemorySpace.ANY(shape=(blk_t, 1), dtype=jnp.float32),  # l
+            pl.MemorySpace.ANY(shape=(blk_t, D), dtype=jnp.float32),  # acc
+        ],
+        interpret=True,
+    )(off, q, k, v)
+
+
+def vmem_footprint_bytes(blk_t: int, blk_s: int, d: int, elt: int = 4) -> int:
+    """Analytic VMEM bytes per grid step (used by the §Perf accounting)."""
+    tiles = blk_t * d + 2 * blk_s * d + blk_t * blk_s  # q + k,v + scores
+    scratch = blk_t * (d + 2)
+    return (tiles + scratch) * elt

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the cached-attention kernel.
+
+This is the CORE correctness signal: the Pallas kernel (and therefore every
+AOT artifact built on it) is validated against this reference by pytest +
+hypothesis sweeps.
+"""
+
+import jax.numpy as jnp
+
+
+def cached_attention_ref(q, k, v, q_offset):
+    """Masked scaled-dot-product attention over a KV cache.
+
+    Args:
+      q: ``[T, H, D]`` query block whose row ``i`` sits at absolute sequence
+         position ``q_offset + i``.
+      k, v: ``[S, H, D]`` KV cache. Slots ``> q_offset + i`` may hold garbage
+         (unwritten cache) — the causal mask guarantees they are ignored.
+      q_offset: scalar i32, absolute position of ``q[0]``.
+
+    Returns:
+      ``[T, H, D]`` attention output, same dtype as ``q``.
+    """
+    T, H, D = q.shape
+    S = k.shape[0]
+    dtype = q.dtype
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(D))
+    scores = jnp.einsum("thd,shd->hts", qf, kf) * scale  # [H, T, S]
+    i = jnp.arange(T)[None, :, None]
+    j = jnp.arange(S)[None, None, :]
+    mask = j <= (q_offset + i)
+    scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("hts,shd->thd", p, vf)
+    return out.astype(dtype)

@@ -1,0 +1,233 @@
+"""L2: decoder-only transformer LM with an explicit KV cache.
+
+Three static-shaped entry points per backbone are AOT-lowered for the Rust
+runtime (DESIGN.md §2):
+
+* ``prefill(params, tokens[S])               -> (kv_k, kv_v)``
+* ``extend (params, kv_k, kv_v, plen, q[Q])  -> (kv_k', kv_v', logits[Q,V])``
+* ``generate(params, kv_k, kv_v, cur, tok)   -> gen[G]`` (greedy scan decode)
+
+Cache-slot invariant: KV slot ``j`` always holds the KV of absolute sequence
+position ``j``. Prefill writes slots ``[0,S)`` (garbage beyond the real
+prefix length — provably never attended, because the causal mask only admits
+slots ``<= position`` and positions never exceed the written frontier).
+Extend writes ``[plen, plen+Q)``, decode writes one slot per step at its own
+position. This is what makes ``prefill(p) ⊕ extend(q)`` numerically
+equivalent to ``prefill(p ⊕ q)`` (up to tiling-order float association) —
+the correctness core of SubGCache (tested in
+``tests/test_model.py`` and again from Rust).
+
+Training uses the pure-jnp reference attention (fast on CPU); serving
+artifacts use the Pallas kernel. Both are pinned together by the kernel
+tests, and the prefill/extend consistency tests run on the Pallas path.
+"""
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import config
+from .kernels.attention import cached_attention
+from .kernels.ref import cached_attention_ref
+
+EPS = 1e-6
+ROPE_BASE = 10000.0
+
+
+class ModelDims(NamedTuple):
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_head: int
+    d_ff: int
+    max_seq: int = config.MAX_SEQ
+
+
+def dims_for(backbone: config.Backbone, vocab: int) -> ModelDims:
+    return ModelDims(vocab, backbone.d_model, backbone.n_layers,
+                     backbone.n_heads, backbone.d_head, backbone.d_ff)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(dims: ModelDims, seed: int) -> Dict:
+    """Deterministic init. Layout is a nested dict; the AOT manifest records
+    the tree-flatten order so Rust feeds weights positionally."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 2 + dims.n_layers)
+
+    def dense(k, fan_in, shape):
+        return (jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(jnp.float32)
+
+    params = {
+        "embed": dense(ks[0], dims.d_model ** 0.5, (dims.vocab, dims.d_model)),
+        "ln_f": jnp.ones((dims.d_model,), jnp.float32),
+        "layers": [],
+    }
+    hd = dims.n_heads * dims.d_head
+    for l in range(dims.n_layers):
+        lk = jax.random.split(ks[2 + l], 7)
+        params["layers"].append({
+            "ln1": jnp.ones((dims.d_model,), jnp.float32),
+            "wq": dense(lk[0], dims.d_model, (dims.d_model, hd)),
+            "wk": dense(lk[1], dims.d_model, (dims.d_model, hd)),
+            "wv": dense(lk[2], dims.d_model, (dims.d_model, hd)),
+            "wo": dense(lk[3], hd, (hd, dims.d_model)),
+            "ln2": jnp.ones((dims.d_model,), jnp.float32),
+            "w_gate": dense(lk[4], dims.d_model, (dims.d_model, dims.d_ff)),
+            "w_up": dense(lk[5], dims.d_model, (dims.d_model, dims.d_ff)),
+            "w_down": dense(lk[6], dims.d_ff, (dims.d_ff, dims.d_model)),
+        })
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale):
+    return x * scale * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS)
+
+
+def rope(x, positions):
+    """Rotary embedding; x [T, H, D], positions [T] (absolute)."""
+    d = x.shape[-1]
+    half = d // 2
+    inv_freq = ROPE_BASE ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    freqs = positions[:, None].astype(jnp.float32) * inv_freq  # [T, half]
+    cos = jnp.cos(freqs)[:, None, :]
+    sin = jnp.sin(freqs)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+def _attend(q, k, v, q_offset, use_kernel: bool):
+    return (cached_attention if use_kernel else cached_attention_ref)(q, k, v, q_offset)
+
+
+def _block(lp, x, kv_k_l, kv_v_l, q_offset, dims: ModelDims, use_kernel: bool):
+    """One decoder block over a [T, d] slice with cache update.
+
+    kv_*_l: [S, H, D] cache for this layer; returns the updated cache.
+    """
+    T = x.shape[0]
+    positions = q_offset + jnp.arange(T, dtype=jnp.int32)
+    h = rmsnorm(x, lp["ln1"])
+    q = (h @ lp["wq"]).reshape(T, dims.n_heads, dims.d_head)
+    k = (h @ lp["wk"]).reshape(T, dims.n_heads, dims.d_head)
+    v = (h @ lp["wv"]).reshape(T, dims.n_heads, dims.d_head)
+    q = rope(q, positions)
+    k = rope(k, positions)
+    kv_k_l = jax.lax.dynamic_update_slice(kv_k_l, k, (q_offset, 0, 0))
+    kv_v_l = jax.lax.dynamic_update_slice(kv_v_l, v, (q_offset, 0, 0))
+    att = _attend(q, kv_k_l, kv_v_l, q_offset, use_kernel)
+    x = x + att.reshape(T, dims.n_heads * dims.d_head) @ lp["wo"]
+    h2 = rmsnorm(x, lp["ln2"])
+    x = x + (jax.nn.silu(h2 @ lp["w_gate"]) * (h2 @ lp["w_up"])) @ lp["w_down"]
+    return x, kv_k_l, kv_v_l
+
+
+def forward_tokens(params, tokens, q_offset, kv_k, kv_v, dims: ModelDims,
+                   use_kernel: bool = True, logits_at=None):
+    """Run T tokens starting at absolute position ``q_offset``.
+
+    tokens [T] i32; kv_[kv] [L, S, H, D]. Returns (logits, kv_k, kv_v) where
+    logits is [T, V], or [V] at a single row when ``logits_at`` is given
+    (avoids the full [T, V] lm-head matmul in prefill).
+    """
+    x = params["embed"][tokens]
+    new_k, new_v = [], []
+    for l, lp in enumerate(params["layers"]):
+        x, kk, vv = _block(lp, x, kv_k[l], kv_v[l], q_offset, dims, use_kernel)
+        new_k.append(kk)
+        new_v.append(vv)
+    x = rmsnorm(x, params["ln_f"])
+    if logits_at is not None:
+        x = jax.lax.dynamic_index_in_dim(x, logits_at, axis=0, keepdims=False)
+    logits = x @ params["embed"].T
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points
+# ---------------------------------------------------------------------------
+
+def make_entries(dims: ModelDims, use_kernel: bool = True):
+    """Build the three serving entry points for a backbone."""
+    S, G = dims.max_seq, config.MAX_GEN
+    kv_shape = (dims.n_layers, S, dims.n_heads, dims.d_head)
+
+    def prefill(params, tokens, plen):
+        """tokens [S] i32 (padded), real length plen -> (kv_k, kv_v, logits[V]).
+
+        ``logits`` is the next-token distribution after position ``plen - 1``
+        — the baseline path needs it to emit its first token straight from
+        the monolithic prefill (and it keeps every parameter live, so the
+        lowered HLO keeps the flatten parameter order; see aot.arg_map).
+        """
+        kv_k = jnp.zeros(kv_shape, jnp.float32)
+        kv_v = jnp.zeros(kv_shape, jnp.float32)
+        logits, kv_k, kv_v = forward_tokens(params, tokens, jnp.int32(0), kv_k,
+                                            kv_v, dims, use_kernel,
+                                            logits_at=plen - 1)
+        return kv_k, kv_v, logits
+
+    def extend(params, kv_k, kv_v, plen, q_tokens):
+        """Append Q query tokens at position plen -> (kv', logits [Q, V])."""
+        logits, kv_k, kv_v = forward_tokens(params, q_tokens, plen, kv_k, kv_v,
+                                            dims, use_kernel)
+        return kv_k, kv_v, logits
+
+    def generate(params, kv_k, kv_v, cur_len, first_tok):
+        """Greedy decode up to G tokens (first_tok included as gen[0]).
+
+        The whole decode loop is a lax.scan inside the HLO: one PJRT call
+        produces the full answer — no per-token host round-trips (L3 perf).
+        """
+        eos = jnp.int32(config.EOS_ID)
+
+        def step(carry, _):
+            kv_k, kv_v, pos, tok, done = carry
+            logits, kv_k, kv_v = forward_tokens(params, tok[None], pos, kv_k,
+                                                kv_v, dims, use_kernel)
+            nxt = jnp.argmax(logits[0]).astype(jnp.int32)
+            nxt = jnp.where(done, eos, nxt)
+            done = done | (nxt == eos)
+            return (kv_k, kv_v, pos + 1, nxt, done), nxt
+
+        carry = (kv_k, kv_v, cur_len, first_tok, first_tok == eos)
+        _, toks = jax.lax.scan(step, carry, None, length=G - 1)
+        return jnp.concatenate([first_tok[None], toks])
+
+    return prefill, extend, generate
+
+
+# ---------------------------------------------------------------------------
+# Training forward (batched, no cache, reference attention for speed)
+# ---------------------------------------------------------------------------
+
+def forward_train(params, tokens, dims: ModelDims):
+    """Batched causal LM forward: tokens [B, T] -> logits [B, T, V]."""
+
+    def one(tok):
+        T = tok.shape[0]
+        kv = jnp.zeros((dims.n_layers, T, dims.n_heads, dims.d_head), jnp.float32)
+        logits, _, _ = forward_tokens(params, tok, jnp.int32(0), kv, kv, dims,
+                                      use_kernel=False)
+        return logits
+
+    return jax.vmap(one)(tokens)
+
+
+def lm_loss(params, tokens, loss_mask, dims: ModelDims):
+    """Next-token cross-entropy where loss_mask[b, t] marks target positions."""
+    logits = forward_train(params, tokens, dims)  # [B, T, V]
+    targets = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    mask = loss_mask[:, 1:].astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,77 @@
+"""Word-level tokenizer, mirrored byte-for-byte by ``rust/src/tokenizer``.
+
+The tokenization rule is deliberately trivial so the two implementations can
+be proven identical with golden tests: lowercase the text, then emit maximal
+runs of ``[a-z0-9_]`` and every other non-whitespace character as its own
+token.
+"""
+
+import json
+import re
+from typing import Dict, Iterable, List
+
+from . import config
+
+_TOKEN_RE = re.compile(r"[a-z0-9_]+|[^\sa-z0-9_]")
+
+SPECIALS = ["<pad>", "<bos>", "<eos>", "<unk>"]
+
+
+def split_text(text: str) -> List[str]:
+    """Split ``text`` into word tokens (lowercased)."""
+    return _TOKEN_RE.findall(text.lower())
+
+
+class Tokenizer:
+    """Vocabulary-backed word tokenizer."""
+
+    def __init__(self, vocab: Dict[str, int]):
+        for i, sp in enumerate(SPECIALS):
+            if vocab.get(sp) != i:
+                raise ValueError(f"special token {sp} must map to id {i}")
+        self.vocab = vocab
+        self.inv = {i: t for t, i in vocab.items()}
+
+    @classmethod
+    def build(cls, corpus: Iterable[str]) -> "Tokenizer":
+        """Build a vocabulary over ``corpus``; ids are assigned in sorted
+        token order after the specials, so the mapping is deterministic."""
+        tokens = set()
+        for text in corpus:
+            tokens.update(split_text(text))
+        vocab = {sp: i for i, sp in enumerate(SPECIALS)}
+        for tok in sorted(tokens):
+            vocab[tok] = len(vocab)
+        return cls(vocab)
+
+    def __len__(self) -> int:
+        return len(self.vocab)
+
+    @property
+    def padded_size(self) -> int:
+        """Vocab size rounded up to a multiple of 64 (MXU-friendly lm head)."""
+        return (len(self.vocab) + 63) // 64 * 64
+
+    def encode(self, text: str) -> List[int]:
+        unk = config.UNK_ID
+        return [self.vocab.get(tok, unk) for tok in split_text(text)]
+
+    def decode(self, ids: Iterable[int]) -> str:
+        words = []
+        for i in ids:
+            i = int(i)
+            if i == config.EOS_ID:
+                break
+            if i in (config.PAD_ID, config.BOS_ID):
+                continue
+            words.append(self.inv.get(i, "<unk>"))
+        return " ".join(words)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.vocab, f, indent=0, sort_keys=True)
+
+    @classmethod
+    def load(cls, path: str) -> "Tokenizer":
+        with open(path) as f:
+            return cls(json.load(f))

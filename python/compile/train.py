@@ -1,0 +1,228 @@
+"""Build-time trainer for the simulated LLM backbones.
+
+Trains each toy backbone (config.BACKBONES) on the synthetic datasets' train
+splits: extractive graph-QA in the exact verbalization format the Rust
+serving path reconstructs at request time. Two prompt styles per query —
+a retrieval-sized subgraph and a merged (representative-subgraph-style)
+union — so cached-prefix prompts are in-distribution (DESIGN.md §2).
+
+Optimizer: hand-rolled AdamW (optax is not installable offline). The paper
+trains its (frozen-LLM) soft prompts with AdamW/1e-5; our from-scratch toy
+models need a larger lr — recorded as a substitution in DESIGN.md.
+"""
+
+import json
+import os
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import config, model, verbalize
+from .tokenizer import Tokenizer
+
+ANS_BUDGET = 6  # answer tokens + <eos>
+
+
+# ---------------------------------------------------------------------------
+# Tokenizer construction
+# ---------------------------------------------------------------------------
+
+def build_tokenizer(datasets: List[Dict]) -> Tokenizer:
+    from .synth import pool_corpus
+    corpus = ["graph : ; question answer ? \"", "which object is related how"]
+    corpus += pool_corpus()  # synthetic-sampler coverage
+    for ds in datasets:
+        corpus += [n["text"] for n in ds["nodes"]]
+        corpus += [n["name"] for n in ds["nodes"]]
+        corpus += [e["text"] for e in ds["edges"]]
+        corpus += [q["text"] for q in ds["queries"]]
+        corpus += [q["answer"] for q in ds["queries"]]
+    return Tokenizer.build(corpus)
+
+
+# ---------------------------------------------------------------------------
+# Example construction
+# ---------------------------------------------------------------------------
+
+def _example_tokens(tok: Tokenizer, graph: Dict, nodes, edges, q: Dict,
+                    seq_len: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Tokenize one (subgraph, question, answer) example, padded to seq_len."""
+    ans_ids = tok.encode(q["answer"])[: ANS_BUDGET - 1] + [config.EOS_ID]
+    q_ids = tok.encode(verbalize.question_text(q["text"]))
+    max_prefix = seq_len - 1 - len(q_ids) - len(ans_ids)
+    prefix = verbalize.prefix_text(graph, nodes, edges, max_tokens=max_prefix)
+    ids = [config.BOS_ID] + tok.encode(prefix) + q_ids
+    tokens = np.full(seq_len, config.PAD_ID, np.int32)
+    mask = np.zeros(seq_len, np.int32)
+    n = min(len(ids), seq_len - len(ans_ids))
+    tokens[:n] = ids[:n]
+    tokens[n: n + len(ans_ids)] = ans_ids
+    # loss over the answer span; include the position of the first answer
+    # token's *target* by masking from n (predicting tokens[n] uses n-1).
+    mask[n: n + len(ans_ids)] = 1
+    return tokens, mask
+
+
+def make_examples(ds: Dict, tok: Tokenizer, rng: np.random.Generator,
+                  seq_len: int = config.TRAIN_SEQ) -> Tuple[np.ndarray, np.ndarray]:
+    """Two examples per training query: retrieval-sized and merged-style."""
+    train_qs = [q for q in ds["queries"] if q["split"] == "train"]
+    n_edges = len(ds["edges"])
+    toks, masks = [], []
+    for q in train_qs:
+        for merged in (False, True):
+            nodes = set(q["support_nodes"])
+            edges = set(q["support_edges"])
+            if merged:  # union with other queries' supports (representative style)
+                for _ in range(int(rng.integers(1, 4))):
+                    other = train_qs[rng.integers(len(train_qs))]
+                    nodes.update(other["support_nodes"])
+                    edges.update(other["support_edges"])
+            # distractor edges + their endpoints
+            for _ in range(int(rng.integers(3, 9))):
+                ei = int(rng.integers(n_edges))
+                edges.add(ei)
+            for ei in edges:
+                e = ds["edges"][ei]
+                nodes.update((e["src"], e["dst"]))
+            t, m = _example_tokens(tok, ds, sorted(nodes), sorted(edges), q, seq_len)
+            toks.append(t)
+            masks.append(m)
+    return np.stack(toks), np.stack(masks)
+
+
+def balance_examples(per_dataset, rng: np.random.Generator):
+    """Oversample smaller datasets to parity, then shuffle.
+
+    Without this, Scene Graph (226 examples) is swamped 14:1 by OAG (3234)
+    and the model never learns the scene-QA format (observed: 6% vs 90%+
+    teacher-forced ACC per dataset).
+    """
+    target = max(t.shape[0] for t, _ in per_dataset)
+    toks, masks = [], []
+    for t, m in per_dataset:
+        reps = int(np.ceil(target / t.shape[0]))
+        toks.append(np.tile(t, (reps, 1))[:target])
+        masks.append(np.tile(m, (reps, 1))[:target])
+    toks = np.concatenate(toks)
+    masks = np.concatenate(masks)
+    order = rng.permutation(toks.shape[0])
+    return toks[order], masks[order]
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, wd=0.05, b1=0.9, b2=0.999, eps=1e-8):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        return p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p), m, v
+
+    out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+    leaves, treedef = jax.tree_util.tree_flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = treedef.unflatten([l[0] for l in leaves])
+    new_m = treedef.unflatten([l[1] for l in leaves])
+    new_v = treedef.unflatten([l[2] for l in leaves])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Training loop
+# ---------------------------------------------------------------------------
+
+def train_backbone(backbone: config.Backbone, dims: model.ModelDims,
+                   toks: np.ndarray, masks: np.ndarray,
+                   steps: int = None, log_every: int = 100) -> Dict:
+    steps = steps or backbone.train_steps
+    params = model.init_params(dims, backbone.seed)
+    opt = adamw_init(params)
+    rng = np.random.default_rng(backbone.seed)
+    warmup = 30
+
+    @jax.jit
+    def train_step(params, opt, batch_t, batch_m, lr):
+        loss, grads = jax.value_and_grad(model.lm_loss)(params, batch_t, batch_m, dims)
+        params, opt = adamw_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    n = toks.shape[0]
+    t0 = time.time()
+    for s in range(steps):
+        idx = rng.integers(0, n, size=config.TRAIN_BATCH)
+        # linear warmup then cosine decay to 10% of the base lr
+        wu = min(1.0, (s + 1) / warmup)
+        cos = 0.55 + 0.45 * np.cos(np.pi * s / steps)
+        lr = backbone.lr * wu * cos
+        params, opt, loss = train_step(params, opt, jnp.asarray(toks[idx]),
+                                       jnp.asarray(masks[idx]), jnp.float32(lr))
+        if s % log_every == 0 or s == steps - 1:
+            print(f"  [{backbone.name}] step {s:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    return params
+
+
+def teacher_forced_acc(params, dims, toks: np.ndarray, masks: np.ndarray,
+                       limit: int = 64) -> float:
+    """Fraction of examples whose entire answer span is argmax-correct."""
+    fwd = jax.jit(lambda t: model.forward_train(params, t, dims))
+    hits, total = 0, 0
+    for i in range(0, min(limit, toks.shape[0]), 8):
+        bt = jnp.asarray(toks[i: i + 8])
+        bm = masks[i: i + 8]
+        logits = np.asarray(fwd(bt))
+        pred = logits[:, :-1].argmax(-1)
+        tgt = np.asarray(bt)[:, 1:]
+        m = bm[:, 1:] > 0
+        for b in range(bt.shape[0]):
+            if m[b].sum() == 0:
+                continue
+            hits += int((pred[b][m[b]] == tgt[b][m[b]]).all())
+            total += 1
+    return hits / max(total, 1)
+
+
+# ---------------------------------------------------------------------------
+# Weight export
+# ---------------------------------------------------------------------------
+
+def flatten_with_names(params) -> Tuple[List[str], List[np.ndarray]]:
+    """Flatten a pytree in jax order, producing stable path names."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    names, arrays = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        arrays.append(np.asarray(leaf))
+    return names, arrays
+
+
+def save_weights(params, path: str) -> List[Dict]:
+    """Save flattened params as p000..pNNN; return the manifest spec."""
+    names, arrays = flatten_with_names(params)
+    spec = []
+    payload = {}
+    for i, (name, arr) in enumerate(zip(names, arrays)):
+        key = f"p{i:03d}"
+        payload[key] = arr
+        spec.append({"key": key, "path": name, "shape": list(arr.shape),
+                     "dtype": str(arr.dtype)})
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    np.savez(path, **payload)
+    return spec

@@ -1,0 +1,57 @@
+"""Canonical subgraph→prompt verbalization, mirrored by ``rust/src/graph``.
+
+The exact byte layout matters twice: (1) the trainer teaches the LM this
+format, (2) the Rust serving path reconstructs it at request time for both
+baseline prompts and representative-subgraph prefixes. Golden tests pin the
+two implementations together.
+
+Format::
+
+    graph : <node text> ; <node text> ; ... ; <src name> <rel> <dst name> ; ... ;
+     question : <query text> answer :
+
+Nodes are sorted by id, edges by (src, dst). When a token budget is given,
+whole node/edge clauses are dropped from the tail (the paper likewise caps
+prompt length at 1024 tokens).
+"""
+
+from typing import Dict, Iterable, List, Optional
+
+from .tokenizer import split_text
+
+
+def node_clauses(graph: Dict, node_ids: Iterable[int]) -> List[str]:
+    by_id = {n["id"]: n for n in graph["nodes"]}
+    return [by_id[i]["text"] for i in sorted(set(node_ids))]
+
+
+def edge_clauses(graph: Dict, edge_ids: Iterable[int]) -> List[str]:
+    name_of = {n["id"]: n["name"] for n in graph["nodes"]}
+    picked = [graph["edges"][i] for i in sorted(set(edge_ids))]
+    picked.sort(key=lambda e: (e["src"], e["dst"]))
+    return [f"{name_of[e['src']]} {e['text']} {name_of[e['dst']]}" for e in picked]
+
+
+def prefix_text(graph: Dict, node_ids: Iterable[int], edge_ids: Iterable[int],
+                max_tokens: Optional[int] = None) -> str:
+    """Verbalize a subgraph. ``max_tokens`` counts word tokens including the
+    leading "graph :" and each trailing ";" (but not BOS)."""
+    clauses = node_clauses(graph, node_ids) + edge_clauses(graph, edge_ids)
+    out = "graph :"
+    used = 2  # "graph", ":"
+    for c in clauses:
+        cost = len(split_text(c)) + 1  # clause + ";"
+        if max_tokens is not None and used + cost > max_tokens:
+            break
+        out += f" {c} ;"
+        used += cost
+    return out
+
+
+def question_text(query_text: str) -> str:
+    return f" question : {query_text} answer :"
+
+
+def full_prompt(graph: Dict, node_ids: Iterable[int], edge_ids: Iterable[int],
+                query_text: str, max_prefix_tokens: Optional[int] = None) -> str:
+    return prefix_text(graph, node_ids, edge_ids, max_prefix_tokens) + question_text(query_text)

@@ -1,0 +1,142 @@
+"""Dataset generators (Table 1 statistics) and the canonical verbalizer."""
+
+import numpy as np
+import pytest
+
+from compile import config, verbalize
+from compile.datasets import gen_oag, gen_scene_graph
+from compile.tokenizer import split_text
+
+
+@pytest.fixture(scope="module")
+def scene():
+    return gen_scene_graph()
+
+
+@pytest.fixture(scope="module")
+def oag():
+    return gen_oag()
+
+
+# ---- Table 1 statistics -----------------------------------------------------
+
+def test_scene_graph_stats(scene):
+    assert len(scene["nodes"]) == 22
+    assert len(scene["edges"]) == 147
+    assert len(scene["queries"]) == 426
+
+
+def test_oag_stats(oag):
+    assert len(oag["nodes"]) == 1071
+    assert len(oag["edges"]) == 2022
+    assert len(oag["queries"]) == 3434
+
+
+def test_scene_split_sizes(scene):
+    splits = [q["split"] for q in scene["queries"]]
+    assert splits.count("train") == 113
+    assert splits.count("val") == 113
+    assert splits.count("test") == 200
+
+
+def test_oag_split_sizes(oag):
+    splits = [q["split"] for q in oag["queries"]]
+    assert splits.count("train") == 1617
+    assert splits.count("val") == 1617
+    assert splits.count("test") == 200
+
+
+def test_generators_deterministic(scene):
+    again = gen_scene_graph()
+    assert again == scene
+
+
+# ---- structural sanity ------------------------------------------------------
+
+def test_scene_edges_are_valid_and_unique(scene):
+    seen = set()
+    n = len(scene["nodes"])
+    for e in scene["edges"]:
+        assert 0 <= e["src"] < n and 0 <= e["dst"] < n and e["src"] != e["dst"]
+        assert (e["src"], e["dst"]) not in seen
+        seen.add((e["src"], e["dst"]))
+
+
+def test_oag_edge_relations(oag):
+    rels = {e["text"] for e in oag["edges"]}
+    assert rels == {"written by", "focuses on", "cites", "has member"}
+
+
+def test_node_ids_contiguous(scene, oag):
+    for ds in (scene, oag):
+        assert [n["id"] for n in ds["nodes"]] == list(range(len(ds["nodes"])))
+
+
+# ---- answerability: support subgraph contains the answer --------------------
+
+def test_scene_queries_answerable(scene):
+    for q in scene["queries"][:80]:
+        support_text = " ".join(
+            scene["nodes"][i]["text"] for i in q["support_nodes"]
+        ) + " " + " ".join(scene["edges"][i]["text"] for i in q["support_edges"])
+        for w in split_text(q["answer"]):
+            assert w in split_text(support_text), (q, support_text)
+
+
+def test_oag_queries_answer_is_edge_relation(oag):
+    for q in oag["queries"][:80]:
+        e = oag["edges"][q["support_edges"][0]]
+        assert q["answer"] == e["text"]
+        assert set(q["support_nodes"]) == {e["src"], e["dst"]}
+
+
+def test_answers_fit_budget(scene, oag):
+    for ds in (scene, oag):
+        for q in ds["queries"]:
+            assert len(split_text(q["answer"])) <= 5
+
+
+# ---- verbalizer -------------------------------------------------------------
+
+def test_prefix_format(scene):
+    text = verbalize.prefix_text(scene, [0, 1], [0])
+    assert text.startswith("graph :")
+    assert text.endswith(";")
+    e = scene["edges"][0]
+    names = {n["id"]: n["name"] for n in scene["nodes"]}
+    assert f"{names[e['src']]} {e['text']} {names[e['dst']]}" in text
+
+
+def test_prefix_sorted_and_deduped(scene):
+    a = verbalize.prefix_text(scene, [2, 0, 2, 1], [3, 1, 3])
+    b = verbalize.prefix_text(scene, [0, 1, 2], [1, 3])
+    assert a == b
+
+
+def test_prefix_token_budget(scene):
+    full = verbalize.prefix_text(scene, range(22), range(147))
+    capped = verbalize.prefix_text(scene, range(22), range(147), max_tokens=100)
+    assert len(split_text(capped)) <= 100
+    assert len(split_text(capped)) < len(split_text(full))
+    assert capped.startswith("graph :")
+
+
+def test_prefix_budget_drops_whole_clauses(scene):
+    capped = verbalize.prefix_text(scene, range(22), range(147), max_tokens=50)
+    # every clause between ';' separators must be a complete node/edge clause
+    body = capped[len("graph :"):].strip()
+    clauses = [c.strip() for c in body.split(";") if c.strip()]
+    names = {n["name"] for n in scene["nodes"]}
+    texts = {n["text"] for n in scene["nodes"]}
+    for c in clauses:
+        ok = c in texts or any(c.startswith(nm + " ") for nm in names)
+        assert ok, c
+
+
+def test_full_prompt_contains_question(scene):
+    p = verbalize.full_prompt(scene, [0], [], "what color is the laptop ?")
+    assert p.endswith(" question : what color is the laptop ? answer :")
+
+
+def test_question_text_format():
+    assert verbalize.question_text("x ?") == " question : x ? answer :"

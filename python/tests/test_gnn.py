@@ -1,0 +1,107 @@
+"""GNN encoder tests: contract + the property clustering relies on —
+overlapping subgraphs embed closer than disjoint ones."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import config, gnn
+from compile.hashembed import embed_text
+
+N, F = config.N_MAX, config.FEAT_DIM
+RNG = np.random.default_rng(5)
+
+
+def _pack(texts, edges):
+    """Build (x, adj, mask) from node texts + edge index pairs."""
+    x = np.zeros((N, F), np.float32)
+    adj = np.zeros((N, N), np.float32)
+    mask = np.zeros((N,), np.float32)
+    for i, t in enumerate(texts):
+        x[i] = embed_text(t)
+        mask[i] = 1.0
+    for a, b in edges:
+        adj[a, b] = 1.0
+        adj[b, a] = 1.0
+    return jnp.asarray(x), jnp.asarray(adj), jnp.asarray(mask)
+
+
+@pytest.fixture(scope="module", params=list(gnn.ENCODERS))
+def encoder(request):
+    init, encode = gnn.ENCODERS[request.param]
+    return init(), jax.jit(encode)
+
+
+def test_output_shape_finite(encoder):
+    params, encode = encoder
+    x, adj, mask = _pack(["red laptop", "blue cords", "gray table"],
+                         [(0, 1), (1, 2)])
+    emb = np.asarray(encode(params, x, adj, mask))
+    assert emb.shape == (config.GNN_EMB,)
+    assert np.isfinite(emb).all()
+
+
+def test_padded_nodes_do_not_affect_embedding(encoder):
+    """Garbage features in masked-out slots must be invisible."""
+    params, encode = encoder
+    x, adj, mask = _pack(["red laptop", "blue cords"], [(0, 1)])
+    e1 = np.asarray(encode(params, x, adj, mask))
+    x2 = x.at[10:].set(99.0)  # masked slots
+    e2 = np.asarray(encode(params, x2, adj, mask))
+    np.testing.assert_allclose(e1, e2, atol=1e-5)
+
+
+def test_structure_sensitivity(encoder):
+    """Same node set, different topology ⇒ different embedding."""
+    params, encode = encoder
+    texts = ["a b", "c d", "e f", "g h"]
+    x, adj1, mask = _pack(texts, [(0, 1), (2, 3)])
+    _, adj2, _ = _pack(texts, [(0, 2), (1, 3)])
+    e1 = np.asarray(encode(params, x, adj1, mask))
+    e2 = np.asarray(encode(params, x, adj2, mask))
+    assert np.abs(e1 - e2).max() > 1e-6
+
+
+def test_overlap_embeds_closer_than_disjoint(encoder):
+    """The clustering premise: high node/edge overlap ⇒ small distance."""
+    params, encode = encoder
+    base_texts = ["red laptop", "blue cords", "gray screen", "black camera"]
+    base_edges = [(0, 1), (1, 2), (2, 3)]
+    x0, a0, m0 = _pack(base_texts, base_edges)
+    # near-duplicate: one extra node
+    x1, a1, m1 = _pack(base_texts + ["white door"], base_edges + [(3, 4)])
+    # disjoint content
+    x2, a2, m2 = _pack(["graph neural networks", "retrieval augmented",
+                        "batch query processing", "kv cache reuse"],
+                       [(0, 1), (1, 2), (2, 3)])
+    e0 = np.asarray(encode(params, x0, a0, m0))
+    e1 = np.asarray(encode(params, x1, a1, m1))
+    e2 = np.asarray(encode(params, x2, a2, m2))
+    d_overlap = np.linalg.norm(e0 - e1)
+    d_disjoint = np.linalg.norm(e0 - e2)
+    assert d_overlap < d_disjoint
+
+
+def test_encode_deterministic(encoder):
+    params, encode = encoder
+    x, adj, mask = _pack(["x y", "z w"], [(0, 1)])
+    np.testing.assert_array_equal(np.asarray(encode(params, x, adj, mask)),
+                                  np.asarray(encode(params, x, adj, mask)))
+
+
+def test_empty_graph_is_finite(encoder):
+    params, encode = encoder
+    x, adj, mask = _pack([], [])
+    emb = np.asarray(encode(params, x, adj, mask))
+    assert np.isfinite(emb).all()
+
+
+def test_encoders_differ():
+    """The two baselines must not share an encoder (paper uses GT vs GAT)."""
+    pgt, egt = gnn.ENCODERS["graph_transformer"][0](), gnn.ENCODERS["graph_transformer"][1]
+    pga, ega = gnn.ENCODERS["gat"][0](), gnn.ENCODERS["gat"][1]
+    x, adj, mask = _pack(["red laptop", "blue cords"], [(0, 1)])
+    a = np.asarray(egt(pgt, x, adj, mask))
+    b = np.asarray(ega(pga, x, adj, mask))
+    assert np.abs(a - b).max() > 1e-6

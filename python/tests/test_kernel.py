@@ -1,0 +1,118 @@
+"""L1 kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes/dtypes/offsets; fixed cases pin the serving-shaped
+configurations used by the AOT entries (prefill T=S, extend T=32, decode T=1).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import cached_attention, vmem_footprint_bytes
+from compile.kernels.ref import cached_attention_ref
+
+RNG = np.random.default_rng(42)
+
+
+def _mk(T, S, H, D, dtype=jnp.float32, scale=1.0):
+    q = jnp.asarray(RNG.normal(size=(T, H, D)) * scale, dtype)
+    k = jnp.asarray(RNG.normal(size=(S, H, D)) * scale, dtype)
+    v = jnp.asarray(RNG.normal(size=(S, H, D)) * scale, dtype)
+    return q, k, v
+
+
+def _check(T, S, H, D, off, dtype=jnp.float32, tol=2e-5):
+    q, k, v = _mk(T, S, H, D, dtype)
+    out = cached_attention(q, k, v, off)
+    ref = cached_attention_ref(q, k, v, off)
+    assert out.shape == (T, H, D)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+# ---- serving-shaped fixed cases -------------------------------------------
+
+@pytest.mark.parametrize("T,S,H,D,off", [
+    (768, 768, 3, 32, 0),    # prefill (primary backbone geometry)
+    (32, 768, 3, 32, 401),   # extend
+    (1, 768, 3, 32, 433),    # decode step
+    (1, 768, 3, 32, 766),    # decode at the end of the budget
+    (32, 768, 4, 28, 100),   # mistral-sim head geometry (non-pow2 D)
+    (32, 768, 4, 20, 100),   # falcon-sim head geometry
+])
+def test_serving_shapes(T, S, H, D, off):
+    _check(T, S, H, D, off)
+
+
+def test_offset_zero_single_token():
+    _check(1, 128, 2, 16, 0)
+
+
+def test_full_causal_equals_ref_tril():
+    """At q_offset=0, T==S, the kernel must equal plain causal attention."""
+    T = S = 64
+    q, k, v = _mk(T, S, 2, 16)
+    out = np.asarray(cached_attention(q, k, v, 0), np.float32)
+    # dense reference with tril mask
+    qf, kf, vf = (np.asarray(a, np.float32) for a in (q, k, v))
+    scores = np.einsum("thd,shd->hts", qf, kf) / np.sqrt(16)
+    mask = np.tril(np.ones((T, S), bool))
+    scores = np.where(mask[None], scores, -1e30)
+    p = np.exp(scores - scores.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    ref = np.einsum("hts,shd->thd", p, vf)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_garbage_cache_beyond_frontier_is_ignored():
+    """Slots > q_offset+i may hold arbitrary garbage without changing output."""
+    T, S, H, D, off = 4, 64, 2, 16, 10
+    q, k, v = _mk(T, S, H, D)
+    out1 = cached_attention(q, k, v, off)
+    k2 = k.at[off + T:].set(1e6)
+    v2 = v.at[off + T:].set(-1e6)
+    out2 = cached_attention(q, k2, v2, off)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=0, rtol=0)
+
+
+def test_bf16_inputs():
+    _check(8, 128, 2, 16, 5, dtype=jnp.bfloat16, tol=2e-2)
+
+
+def test_large_magnitude_stability():
+    """Online softmax must not overflow with large score magnitudes."""
+    q, k, v = _mk(8, 128, 2, 16, scale=30.0)
+    out = np.asarray(cached_attention(q, k, v, 64))
+    assert np.isfinite(out).all()
+
+
+# ---- hypothesis sweep ------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    T=st.sampled_from([1, 2, 3, 8, 17, 32]),
+    S=st.sampled_from([32, 48, 64, 96, 128, 256]),
+    H=st.integers(1, 4),
+    D=st.sampled_from([4, 8, 16, 20, 28, 32]),
+    off_frac=st.floats(0.0, 1.0),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_hypothesis_sweep(T, S, H, D, off_frac, dtype):
+    off = int(off_frac * max(S - T, 0))
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    _check(T, S, H, D, off, dtype, tol)
+
+
+# ---- VMEM accounting -------------------------------------------------------
+
+def test_vmem_footprint_under_budget():
+    """The default tiling must fit a TPU core's VMEM with double-buffer room."""
+    from compile import config
+    fp = vmem_footprint_bytes(config.BLK_T, config.BLK_S, 32)
+    assert fp < 2 * 1024 * 1024, f"VMEM/step {fp} too large"
+
+
+def test_vmem_footprint_formula():
+    assert vmem_footprint_bytes(1, 1, 1) == (1 + 2 + 1 + 3) * 4

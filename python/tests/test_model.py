@@ -1,0 +1,196 @@
+"""L2 model tests: entry-point contracts and the SubGCache correctness core.
+
+The decisive property: serving from a cached prefix (prefill(p) → extend(q))
+must match monolithic prefill(p ⊕ q) — this is exactly what lets SubGCache
+reuse a representative-subgraph KV cache across queries.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import config, model
+
+DIMS = model.ModelDims(vocab=128, d_model=32, n_layers=2, n_heads=2, d_head=8,
+                       d_ff=64, max_seq=96)
+RNG = np.random.default_rng(7)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(DIMS, seed=3)
+
+
+@pytest.fixture(scope="module")
+def entries(params):
+    return model.make_entries(DIMS, use_kernel=True)
+
+
+def _tokens(n, total):
+    t = np.full(total, config.PAD_ID, np.int32)
+    t[:n] = RNG.integers(4, DIMS.vocab, size=n)
+    return t
+
+
+def test_param_count_and_shapes(params):
+    leaves = jax.tree_util.tree_leaves(params)
+    assert len(leaves) == 2 + DIMS.n_layers * 9
+    assert params["embed"].shape == (DIMS.vocab, DIMS.d_model)
+
+
+def test_init_deterministic():
+    a = model.init_params(DIMS, seed=3)
+    b = model.init_params(DIMS, seed=3)
+    for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_prefill_shapes(params, entries):
+    prefill = entries[0]
+    kv_k, kv_v, logits = jax.jit(prefill)(params, jnp.asarray(_tokens(10, DIMS.max_seq)), jnp.int32(10))
+    assert kv_k.shape == (DIMS.n_layers, DIMS.max_seq, DIMS.n_heads, DIMS.d_head)
+    assert kv_v.shape == kv_k.shape
+
+
+def test_cached_extend_matches_full_prefill(params, entries):
+    """prefill(p) ⊕ extend(q) == prefill(p ⊕ q) on the written KV slots."""
+    prefill, extend, _ = entries
+    plen, qlen = 20, 5
+    p = _tokens(plen, DIMS.max_seq)
+    q_part = RNG.integers(4, DIMS.vocab, size=qlen).astype(np.int32)
+    q_tok = np.full(config.MAX_Q, config.PAD_ID, np.int32)
+    q_tok[:qlen] = q_part
+
+    kv_k, kv_v, _ = jax.jit(prefill)(params, jnp.asarray(p), jnp.int32(plen))
+    kv_k2, kv_v2, logits_split = jax.jit(extend)(
+        params, kv_k, kv_v, jnp.int32(plen), jnp.asarray(q_tok))
+
+    full = p.copy()
+    full[plen: plen + qlen] = q_part
+    kk_full, vv_full, _ = jax.jit(prefill)(params, jnp.asarray(full), jnp.int32(plen + qlen))
+
+    n = plen + qlen
+    np.testing.assert_allclose(np.asarray(kv_k2[:, :n]), np.asarray(kk_full[:, :n]),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(kv_v2[:, :n]), np.asarray(vv_full[:, :n]),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_extend_logits_match_full_forward(params, entries):
+    """Next-token distribution from the cached path equals the monolithic one."""
+    prefill, extend, _ = entries
+    plen, qlen = 16, 4
+    p = _tokens(plen, DIMS.max_seq)
+    q_part = RNG.integers(4, DIMS.vocab, size=qlen).astype(np.int32)
+    q_tok = np.full(config.MAX_Q, config.PAD_ID, np.int32)
+    q_tok[:qlen] = q_part
+
+    kv_k, kv_v, _ = jax.jit(prefill)(params, jnp.asarray(p), jnp.int32(plen))
+    _, _, logits_split = jax.jit(extend)(params, kv_k, kv_v, jnp.int32(plen),
+                                         jnp.asarray(q_tok))
+
+    full = np.concatenate([p[:plen], q_part]).astype(np.int32)
+    kv0 = jnp.zeros((DIMS.n_layers, DIMS.max_seq, DIMS.n_heads, DIMS.d_head),
+                    jnp.float32)
+    logits_full, _, _ = model.forward_tokens(params, jnp.asarray(full),
+                                             jnp.int32(0), kv0, kv0, DIMS)
+    np.testing.assert_allclose(np.asarray(logits_split[qlen - 1]),
+                               np.asarray(logits_full[plen + qlen - 1]),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_generate_stops_at_eos_and_pads_with_eos(params, entries):
+    prefill, extend, generate = entries
+    p = _tokens(8, DIMS.max_seq)
+    kv_k, kv_v, _ = jax.jit(prefill)(params, jnp.asarray(p), jnp.int32(8))
+    gen = jax.jit(generate)(params, kv_k, kv_v, jnp.int32(8),
+                            jnp.int32(config.EOS_ID))
+    gen = np.asarray(gen)
+    assert gen.shape == (config.MAX_GEN,)
+    np.testing.assert_array_equal(gen, config.EOS_ID)
+
+
+def test_generate_deterministic(params, entries):
+    prefill, _, generate = entries
+    p = _tokens(12, DIMS.max_seq)
+    kv_k, kv_v, _ = jax.jit(prefill)(params, jnp.asarray(p), jnp.int32(12))
+    g1 = np.asarray(jax.jit(generate)(params, kv_k, kv_v, jnp.int32(12), jnp.int32(5)))
+    g2 = np.asarray(jax.jit(generate)(params, kv_k, kv_v, jnp.int32(12), jnp.int32(5)))
+    np.testing.assert_array_equal(g1, g2)
+    assert g1[0] == 5
+
+
+def test_generate_matches_manual_decode(params, entries):
+    """The in-HLO scan decode equals a step-by-step python decode."""
+    prefill, _, generate = entries
+    plen = 10
+    p = _tokens(plen, DIMS.max_seq)
+    kv_k, kv_v, _ = jax.jit(prefill)(params, jnp.asarray(p), jnp.int32(plen))
+    first = 7
+    gen = np.asarray(jax.jit(generate)(params, kv_k, kv_v, jnp.int32(plen),
+                                       jnp.int32(first)))
+
+    # manual loop on the same cache
+    kk, vv = kv_k, kv_v
+    toks = [first]
+    pos, tok, done = plen, first, False
+    for _ in range(config.MAX_GEN - 1):
+        logits, kk, vv = model.forward_tokens(params, jnp.asarray([tok], jnp.int32),
+                                              jnp.int32(pos), kk, vv, DIMS)
+        nxt = int(jnp.argmax(logits[0]))
+        if done:
+            nxt = config.EOS_ID
+        done = done or nxt == config.EOS_ID
+        toks.append(nxt)
+        pos += 1
+        tok = nxt
+    np.testing.assert_array_equal(gen, np.asarray(toks, np.int32))
+
+
+def test_rope_position_dependence():
+    x = jnp.asarray(RNG.normal(size=(4, 2, 8)), jnp.float32)
+    a = model.rope(x, jnp.arange(4, dtype=jnp.int32))
+    b = model.rope(x, 10 + jnp.arange(4, dtype=jnp.int32))
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+    # position 0 is the identity rotation
+    c = model.rope(x[:1], jnp.zeros(1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(c), np.asarray(x[:1]), atol=1e-6)
+
+
+def test_rope_preserves_norm():
+    x = jnp.asarray(RNG.normal(size=(6, 2, 8)), jnp.float32)
+    y = model.rope(x, jnp.arange(6, dtype=jnp.int32) * 37)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1), atol=1e-4)
+
+
+def test_rmsnorm_scale_invariance():
+    x = jnp.asarray(RNG.normal(size=(3, 16)), jnp.float32)
+    y1 = np.asarray(model.rmsnorm(x, jnp.ones(16)))
+    y2 = np.asarray(model.rmsnorm(x * 100.0, jnp.ones(16)))
+    np.testing.assert_allclose(y1, y2, atol=1e-4)
+
+
+def test_lm_loss_decreases_with_training_signal(params):
+    """One gradient step on a repeated batch lowers the loss."""
+    toks = np.tile(_tokens(24, 48), (4, 1))
+    mask = np.zeros_like(toks)
+    mask[:, 10:20] = 1
+    toks_j, mask_j = jnp.asarray(toks), jnp.asarray(mask)
+    loss0, grads = jax.value_and_grad(model.lm_loss)(params, toks_j, mask_j, DIMS)
+    stepped = jax.tree_util.tree_map(lambda p, g: p - 0.1 * g, params, grads)
+    loss1 = model.lm_loss(stepped, toks_j, mask_j, DIMS)
+    assert float(loss1) < float(loss0)
+
+
+def test_forward_train_matches_forward_tokens(params):
+    """Batched training forward (ref attention) equals the serving forward."""
+    toks = _tokens(14, 32)
+    logits_b = model.forward_train(params, jnp.asarray(toks[None]),
+                                   DIMS._replace(max_seq=32))
+    kv0 = jnp.zeros((DIMS.n_layers, 32, DIMS.n_heads, DIMS.d_head), jnp.float32)
+    logits_s, _, _ = model.forward_tokens(params, jnp.asarray(toks), jnp.int32(0),
+                                          kv0, kv0, DIMS._replace(max_seq=32))
+    np.testing.assert_allclose(np.asarray(logits_b[0]), np.asarray(logits_s),
+                               atol=2e-4, rtol=2e-4)

@@ -1,0 +1,129 @@
+"""Tokenizer + hash-embedder tests (the Rust side re-runs the same goldens)."""
+
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import config
+from compile.hashembed import cosine, embed_text, fnv1a
+from compile.tokenizer import SPECIALS, Tokenizer, split_text
+
+
+# ---- splitting -------------------------------------------------------------
+
+def test_split_lowercases_and_separates_punct():
+    assert split_text("What is the COLOR, of x_1?") == \
+        ["what", "is", "the", "color", ",", "of", "x_1", "?"]
+
+
+def test_split_empty_and_whitespace():
+    assert split_text("") == []
+    assert split_text(" \t\n ") == []
+
+
+def test_split_quotes():
+    assert split_text('how is " a b " connected') == \
+        ["how", "is", '"', "a", "b", '"', "connected"]
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.text(max_size=80))
+def test_split_total_and_reconstructible(s):
+    toks = split_text(s)
+    for t in toks:
+        assert t  # non-empty
+        assert t == t.lower()
+        # each token is either a word-run or a single symbol
+        if len(t) > 1:
+            assert all(c.isalnum() or c == "_" for c in t)
+
+
+# ---- vocab / encode / decode ------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tok():
+    return Tokenizer.build(["what is the color of the cords ?",
+                            "blue laptop screen graph : ; answer question"])
+
+
+def test_specials_fixed(tok):
+    for i, sp in enumerate(SPECIALS):
+        assert tok.vocab[sp] == i
+    assert config.PAD_ID == 0 and config.BOS_ID == 1
+    assert config.EOS_ID == 2 and config.UNK_ID == 3
+
+
+def test_encode_decode_roundtrip(tok):
+    ids = tok.encode("what is the color of the cords ?")
+    assert config.UNK_ID not in ids
+    assert tok.decode(ids) == "what is the color of the cords ?"
+
+
+def test_unknown_maps_to_unk(tok):
+    assert tok.encode("zebra") == [config.UNK_ID]
+
+
+def test_decode_stops_at_eos(tok):
+    ids = tok.encode("blue laptop") + [config.EOS_ID] + tok.encode("screen")
+    assert tok.decode(ids) == "blue laptop"
+
+
+def test_build_deterministic():
+    a = Tokenizer.build(["b a c", "d a"]).vocab
+    b = Tokenizer.build(["d a", "b a c"]).vocab
+    assert a == b
+
+
+def test_padded_size(tok):
+    assert tok.padded_size % 64 == 0
+    assert tok.padded_size >= len(tok)
+
+
+def test_save_load_roundtrip(tok, tmp_path):
+    p = tmp_path / "vocab.json"
+    tok.save(str(p))
+    tok2 = Tokenizer.load(str(p))
+    assert tok2.vocab == tok.vocab
+
+
+# ---- hash embedder ----------------------------------------------------------
+
+def test_fnv1a_known_vectors():
+    # standard FNV-1a test vectors (64-bit)
+    assert fnv1a(b"") == 0xCBF29CE484222325
+    assert fnv1a(b"a") == 0xAF63DC4C8601EC8C
+    assert fnv1a(b"foobar") == 0x85944171F73967E8
+
+
+def test_embed_unit_norm():
+    v = embed_text("what is the color of the cords ?")
+    assert abs(float(np.linalg.norm(v)) - 1.0) < 1e-5
+
+
+def test_embed_empty_is_zero():
+    assert np.all(embed_text("") == 0)
+
+
+def test_embed_similarity_tracks_overlap():
+    a = embed_text("the red laptop on the table")
+    b = embed_text("the red laptop near the chair")
+    c = embed_text("graph neural network caching inference")
+    assert cosine(a, b) > cosine(a, c)
+
+
+def test_embed_deterministic():
+    np.testing.assert_array_equal(embed_text("alpha beta"), embed_text("alpha beta"))
+
+
+def test_embed_case_insensitive():
+    np.testing.assert_array_equal(embed_text("Alpha BETA"), embed_text("alpha beta"))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.text(alphabet="abcdefgh ", max_size=60))
+def test_embed_norm_property(s):
+    v = embed_text(s)
+    n = float(np.linalg.norm(v))
+    assert n == 0.0 or abs(n - 1.0) < 1e-5

@@ -1,0 +1,157 @@
+"""Trainer + AOT lowering tests (tiny dims — fast)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import config, model, train
+from compile.aot import abstract, to_hlo_text
+from compile.datasets import gen_scene_graph
+
+DIMS = model.ModelDims(vocab=704, d_model=16, n_layers=1, n_heads=2, d_head=8,
+                       d_ff=32, max_seq=64)
+
+
+@pytest.fixture(scope="module")
+def scene():
+    return gen_scene_graph()
+
+
+@pytest.fixture(scope="module")
+def tok(scene):
+    return train.build_tokenizer([scene])
+
+
+def test_tokenizer_covers_dataset(tok, scene):
+    """No dataset token may be <unk> — answers must be generatable."""
+    for q in scene["queries"][:50]:
+        assert config.UNK_ID not in tok.encode(q["text"])
+        assert config.UNK_ID not in tok.encode(q["answer"])
+    for n in scene["nodes"]:
+        assert config.UNK_ID not in tok.encode(n["text"])
+
+
+def test_make_examples_shapes_and_masks(tok, scene):
+    rng = np.random.default_rng(0)
+    toks, masks = train.make_examples(scene, tok, rng, seq_len=160)
+    n_train = sum(q["split"] == "train" for q in scene["queries"])
+    assert toks.shape == (2 * n_train, 160)
+    assert masks.shape == toks.shape
+    assert toks[0][0] == config.BOS_ID
+    # every example has a supervised answer span ending in EOS
+    for t, m in zip(toks[:20], masks[:20]):
+        span = np.where(m > 0)[0]
+        assert len(span) >= 2
+        assert t[span[-1]] == config.EOS_ID
+        assert (np.diff(span) == 1).all()
+
+
+def test_examples_answer_inside_prompt(tok, scene):
+    """Extractive QA: the answer tokens must appear inside the prompt span."""
+    rng = np.random.default_rng(0)
+    toks, masks = train.make_examples(scene, tok, rng, seq_len=200)
+    hits = 0
+    for t, m in zip(toks[:40], masks[:40]):
+        span = np.where(m > 0)[0]
+        ans = [x for x in t[span] if x != config.EOS_ID]
+        prompt = list(t[: span[0]])
+        if all(a in prompt for a in ans):
+            hits += 1
+    assert hits >= 36  # a few relation words may be split across clauses
+
+
+def test_adamw_reduces_loss():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = train.adamw_init(params)
+
+    def loss_fn(p):
+        return jnp.sum(p["w"] ** 2)
+
+    losses = []
+    for _ in range(50):
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, opt = train.adamw_update(params, g, opt, lr=0.1)
+        losses.append(float(loss))
+    assert losses[-1] < 0.1 * losses[0]
+    assert int(opt["step"]) == 50
+
+
+def test_adamw_weight_decay_pulls_to_zero():
+    params = {"w": jnp.asarray([1.0])}
+    opt = train.adamw_init(params)
+    for _ in range(20):
+        # zero gradient: only decay acts
+        params, opt = train.adamw_update(params, {"w": jnp.zeros(1)}, opt, lr=0.1)
+    assert float(params["w"][0]) < 1.0
+
+
+def test_save_load_weights_roundtrip(tmp_path):
+    params = model.init_params(DIMS, seed=9)
+    spec = train.save_weights(params, str(tmp_path / "w.npz"))
+    assert [e["key"] for e in spec] == [f"p{i:03d}" for i in range(len(spec))]
+    data = np.load(tmp_path / "w.npz")
+    flat, _ = jax.tree_util.tree_flatten(params)
+    assert len(flat) == len(spec)
+    for e, leaf in zip(spec, flat):
+        np.testing.assert_array_equal(data[e["key"]], np.asarray(leaf))
+        assert e["shape"] == list(np.shape(leaf))
+
+
+def test_flatten_order_matches_jit_parameter_order():
+    """The npz order must equal the HLO parameter order (rust feeds by index)."""
+    params = model.init_params(DIMS, seed=1)
+    names, arrays = train.flatten_with_names(params)
+    # jit flattens (params, extra...) depth-first in the same pytree order
+    flat, _ = jax.tree_util.tree_flatten(params)
+    for a, b in zip(arrays, flat):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+def test_lowering_produces_parseable_hlo():
+    params = model.init_params(DIMS, seed=2)
+    prefill, extend, generate = model.make_entries(DIMS, use_kernel=True)
+    txt = to_hlo_text(prefill, abstract(params),
+                      jax.ShapeDtypeStruct((DIMS.max_seq,), jnp.int32),
+                      jax.ShapeDtypeStruct((), jnp.int32))
+    assert "HloModule" in txt
+    assert "ENTRY" in txt
+
+
+def test_entry_arg_map_is_complete_for_all_entries():
+    """Every flattened argument must stay live in the lowered entry — the
+    Rust runtime feeds weights positionally through arg_map."""
+    from compile.aot import entry_arg_map
+    params = model.init_params(DIMS, seed=2)
+    n_params = len(jax.tree_util.tree_leaves(params))
+    prefill, extend, generate = model.make_entries(DIMS, use_kernel=True)
+    kv = jax.ShapeDtypeStruct((DIMS.n_layers, DIMS.max_seq, DIMS.n_heads,
+                               DIMS.d_head), jnp.float32)
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+    toks_s = jax.ShapeDtypeStruct((DIMS.max_seq,), jnp.int32)
+    toks_q = jax.ShapeDtypeStruct((config.MAX_Q,), jnp.int32)
+    cases = [
+        (prefill, (abstract(params), toks_s, i32), n_params + 2),
+        (extend, (abstract(params), kv, kv, i32, toks_q), n_params + 4),
+        (generate, (abstract(params), kv, kv, i32, i32), n_params + 4),
+    ]
+    for fn, args, want in cases:
+        amap = entry_arg_map(to_hlo_text(fn, *args))
+        assert len(amap) == want, (fn, len(amap), want)
+        assert sorted(amap) == list(range(want))
+
+
+def test_entry_arg_map_detects_dead_args():
+    """A function with an unused argument must yield a *shorter* map (jax
+    renumbers surviving args, so the build asserts on length, not indices)."""
+    from compile.aot import entry_arg_map
+
+    def f(a, b, c):
+        return a + c  # b is dead
+
+    s = jax.ShapeDtypeStruct((4,), jnp.float32)
+    amap = entry_arg_map(to_hlo_text(f, s, s, s))
+    assert len(amap) == 2  # build() would reject this entry (wants 3)

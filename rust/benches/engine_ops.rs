@@ -1,0 +1,68 @@
+//! Engine-level micro-benchmarks: the FLOP asymmetry behind every paper
+//! table — full prefill (S=768) vs query extend (Q=32) vs scan-decode — plus
+//! GNN encode. Run with `cargo bench --offline`.
+
+use subgcache::retrieval::GraphFeatures;
+use subgcache::runtime::{pack_subgraph, ArtifactStore, Engine};
+use subgcache::util::bench::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let store = ArtifactStore::discover()?;
+    let engine = Engine::start(&store)?;
+    let c = *store.constants();
+    let backbone = "llama-3.2-3b-sim";
+    engine.warmup(backbone)?;
+    engine.warmup("graph_transformer")?;
+    engine.warmup("gat")?;
+
+    let mut tokens = vec![c.pad_id; c.max_seq];
+    tokens[0] = c.bos_id;
+    for (i, t) in tokens.iter_mut().enumerate().take(400).skip(1) {
+        *t = 4 + (i as i32 % 200);
+    }
+    let q = {
+        let mut q = vec![c.pad_id; c.max_q];
+        for (i, t) in q.iter_mut().enumerate().take(12) {
+            *t = 4 + i as i32;
+        }
+        q
+    };
+    let (kv, _) = engine.prefill(backbone, &tokens, 400)?;
+
+    let mut b = Bench::default();
+    println!("== engine ops ({backbone}, S={}, Q={}, G={}) ==",
+             c.max_seq, c.max_q, c.max_gen);
+    b.run("prefill full prompt (400 real tokens)", || {
+        let (h, _) = engine.prefill(backbone, &tokens, 400).unwrap();
+        engine.release(h);
+    });
+    b.run("prefill short prompt (64 real tokens)", || {
+        let (h, _) = engine.prefill(backbone, &tokens, 64).unwrap();
+        engine.release(h);
+    });
+    b.run("extend query against cached prefix (Q=32)", || {
+        let (h, _) = engine.extend(backbone, &kv, 400, &q).unwrap();
+        engine.release(h);
+    });
+    b.run("generate 32 tokens (in-HLO scan decode)", || {
+        engine.generate(backbone, &kv, 412, 5).unwrap();
+    });
+
+    let ds = store.dataset("scene_graph")?;
+    let feats = GraphFeatures::build(&ds.graph);
+    let sg = subgcache::graph::Subgraph::from_parts(0..12, 0..8);
+    for gnn in ["graph_transformer", "gat"] {
+        let p = pack_subgraph(&ds.graph, &feats, &sg, c.n_max, c.feat_dim);
+        let (x, adj, mask) = (p.x, p.adj, p.mask);
+        b.run(&format!("gnn encode ({gnn}, N={})", c.n_max), || {
+            engine.encode(gnn, x.clone(), adj.clone(), mask.clone()).unwrap();
+        });
+    }
+    engine.release(kv);
+
+    let s = b.results();
+    let ratio = s[0].median_ns / s[2].median_ns;
+    println!("\nprefill/extend ratio: {ratio:.1}x \
+              (the per-query PFTT saving SubGCache banks per cache hit)");
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! End-to-end pipeline benchmarks — one group per paper table shape:
+//! Table 2 (baseline vs +SubGCache per-query cost), Table 3 (linkage),
+//! Table 4 / Fig. 3 (batch & cluster scaling). Uses small batches; the
+//! table binaries produce the full-protocol numbers.
+
+use subgcache::cluster::Linkage;
+use subgcache::coordinator::{Coordinator, ServeConfig};
+use subgcache::prelude::*;
+use subgcache::runtime::{ArtifactStore, Engine};
+use subgcache::util::bench::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let store = ArtifactStore::discover()?;
+    let engine = Engine::start(&store)?;
+    let ds = store.dataset("scene_graph")?;
+    let queries = ds.sample_test(12, 7);
+    let retriever = GRetriever::default();
+
+    let mut b = Bench::quick();
+
+    println!("== bench_table2_e2e: per-batch serving cost (12 queries) ==");
+    let coord = Coordinator::new(&store, &engine,
+                                 ServeConfig { n_clusters: 1, ..Default::default() })?;
+    coord.serve_baseline(&ds, &queries, &retriever)?; // warm compile
+    b.run("baseline: 12-query batch", || {
+        coord.serve_baseline(&ds, &queries, &retriever).unwrap();
+    });
+    b.run("subgcache: 12-query batch (c=1)", || {
+        coord.serve_subgcache(&ds, &queries, &retriever).unwrap();
+    });
+
+    println!("\n== bench_table3_linkage: cluster stage per linkage ==");
+    for linkage in Linkage::ALL {
+        let coord = Coordinator::new(&store, &engine, ServeConfig {
+            n_clusters: 3, linkage, ..Default::default()
+        })?;
+        b.run(&format!("subgcache c=3 linkage={}", linkage.name()), || {
+            coord.serve_subgcache(&ds, &queries, &retriever).unwrap();
+        });
+    }
+
+    println!("\n== bench_table4_scaling / bench_fig3_sweep: batch & c scaling ==");
+    for &n in &[4usize, 8, 16] {
+        let qs = ds.sample_test(n, 7);
+        let coord = Coordinator::new(&store, &engine,
+                                     ServeConfig { n_clusters: 2, ..Default::default() })?;
+        b.run(&format!("subgcache batch={n} (c=2)"), || {
+            coord.serve_subgcache(&ds, &qs, &retriever).unwrap();
+        });
+    }
+    for &c in &[1usize, 4, 12] {
+        let coord = Coordinator::new(&store, &engine,
+                                     ServeConfig { n_clusters: c, ..Default::default() })?;
+        b.run(&format!("subgcache c={c} (batch=12)"), || {
+            coord.serve_subgcache(&ds, &queries, &retriever).unwrap();
+        });
+    }
+    Ok(())
+}

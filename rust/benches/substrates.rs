@@ -1,0 +1,70 @@
+//! Substrate micro-benchmarks: the non-LLM stages on the request path —
+//! retrieval (PCST vs ego), clustering per linkage and batch size,
+//! representative merge, verbalization + tokenization.
+
+use subgcache::cluster::{cluster, Linkage};
+use subgcache::graph::{prefix_text, Subgraph};
+use subgcache::prelude::*;
+use subgcache::runtime::ArtifactStore;
+use subgcache::util::bench::Bench;
+use subgcache::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let store = ArtifactStore::discover()?;
+    let scene = store.dataset("scene_graph")?;
+    let oag = store.dataset("oag")?;
+    let tok = store.tokenizer();
+    let mut b = Bench::quick();
+
+    println!("== retrieval ==");
+    for (ds, name) in [(&scene, "scene_graph"), (&oag, "oag")] {
+        let feats = GraphFeatures::build(&ds.graph);
+        let q = &ds.queries[0].text;
+        let gr = GRetriever::default();
+        let grag = GragRetriever::default();
+        b.run(&format!("g-retriever (PCST) on {name}"), || {
+            std::hint::black_box(gr.retrieve(&ds.graph, &feats, q));
+        });
+        b.run(&format!("grag (2-hop ego) on {name}"), || {
+            std::hint::black_box(grag.retrieve(&ds.graph, &feats, q));
+        });
+    }
+
+    println!("\n== clustering (64-dim embeddings) ==");
+    let mut rng = Rng::new(3);
+    for &m in &[50usize, 100, 200] {
+        let embs: Vec<Vec<f32>> = (0..m)
+            .map(|_| (0..64).map(|_| rng.normal() as f32).collect())
+            .collect();
+        b.run(&format!("ward m={m} c=2"), || {
+            std::hint::black_box(cluster(&embs, 2, Linkage::Ward));
+        });
+    }
+    let embs: Vec<Vec<f32>> = (0..100)
+        .map(|_| (0..64).map(|_| rng.normal() as f32).collect())
+        .collect();
+    for linkage in Linkage::ALL {
+        b.run(&format!("{} m=100 c=5", linkage.name()), || {
+            std::hint::black_box(cluster(&embs, 5, linkage));
+        });
+    }
+
+    println!("\n== representative merge + verbalize + tokenize ==");
+    let feats = GraphFeatures::build(&scene.graph);
+    let gr = GRetriever::default();
+    let subs: Vec<Subgraph> = scene.queries.iter().take(50)
+        .map(|q| gr.retrieve(&scene.graph, &feats, &q.text)).collect();
+    let refs: Vec<&Subgraph> = subs.iter().collect();
+    b.run("representative merge (50 subgraphs)", || {
+        std::hint::black_box(Subgraph::representative(&refs));
+    });
+    let rep = Subgraph::representative(&refs);
+    b.run("verbalize representative (budget 704)", || {
+        std::hint::black_box(prefix_text(&scene.graph, &rep, Some(704)));
+    });
+    let text = prefix_text(&scene.graph, &rep, Some(704));
+    b.run("tokenize representative prompt", || {
+        std::hint::black_box(tok.encode(&text));
+    });
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Figure 3: impact of the cluster number on ACC and TTFT —
+//! G-Retriever vs G-Retriever+SubGCache, c ∈ {1..5, 10, 20, 30, 40, 50},
+//! both datasets, Llama-3.2-3B-sim. Prints the two series per dataset
+//! (the paper's line plots) plus the baseline reference lines.
+
+use subgcache::harness::{batch_from_env, run_cell, Cell};
+use subgcache::metrics::Table;
+use subgcache::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let store = match args.get("artifacts") {
+        Some(p) => ArtifactStore::open(p)?,
+        None => ArtifactStore::discover()?,
+    };
+    let engine = Engine::start(&store)?;
+    let batch = batch_from_env(args.usize_or("batch", 100));
+    let backbone = args.get_or("backbone", "llama-3.2-3b-sim");
+    let cs: Vec<usize> = args
+        .list_or("clusters", "1,2,3,4,5,10,20,30,40,50")
+        .iter()
+        .map(|s| s.parse().expect("bad --clusters"))
+        .collect();
+
+    println!("== Figure 3: cluster-number sweep (batch = {batch}, {backbone}) ==");
+    for dataset in ["scene_graph", "oag"] {
+        println!("\n-- dataset: {dataset} --");
+        let mut t = Table::new(&["c", "ACC (%)", "TTFT (s)", "ΔACC vs base", "TTFT speedup"]);
+        let mut baseline_acc = 0.0;
+        let mut baseline_ttft = 0.0;
+        for (i, &c) in cs.iter().enumerate() {
+            let mut cell = Cell::new(dataset, "g-retriever", backbone, batch);
+            cell.n_clusters = c;
+            let r = run_cell(&store, &engine, &cell)?;
+            if i == 0 {
+                baseline_acc = r.baseline.metrics.acc();
+                baseline_ttft = r.baseline.metrics.ttft_ms() / 1e3;
+                t.row(&["base".into(), format!("{baseline_acc:.2}"),
+                        format!("{baseline_ttft:.3}"), "-".into(), "-".into()]);
+            }
+            let acc = r.subgcache.metrics.acc();
+            let ttft = r.subgcache.metrics.ttft_ms() / 1e3;
+            t.row(&[
+                c.to_string(),
+                format!("{acc:.2}"),
+                format!("{ttft:.3}"),
+                format!("{:+.2}", acc - baseline_acc),
+                format!("{:.2}x", baseline_ttft / ttft),
+            ]);
+        }
+        t.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Figure 4: cluster processing time (GNN encoding + hierarchical clustering
+//! + representative construction) vs LLM response time across cluster
+//! counts, per dataset. Reproduces the paper's four observations: minimal
+//! overhead (low %), higher cost on the larger graph, non-monotone variation,
+//! and LLM time generally rising with c.
+
+use subgcache::harness::{batch_from_env, run_cell, Cell};
+use subgcache::metrics::Table;
+use subgcache::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let store = match args.get("artifacts") {
+        Some(p) => ArtifactStore::open(p)?,
+        None => ArtifactStore::discover()?,
+    };
+    let engine = Engine::start(&store)?;
+    let batch = batch_from_env(args.usize_or("batch", 100));
+    let backbone = args.get_or("backbone", "llama-3.2-3b-sim");
+    let cs: Vec<usize> = args
+        .list_or("clusters", "1,2,3,4,5,10,20,30,40,50")
+        .iter()
+        .map(|s| s.parse().expect("bad --clusters"))
+        .collect();
+
+    println!("== Figure 4: cluster processing vs LLM response time (batch = {batch}) ==");
+    for dataset in ["scene_graph", "oag"] {
+        println!("\n-- dataset: {dataset} --");
+        let mut t = Table::new(&["c", "cluster stage (ms)", "LLM time (ms)",
+                                 "stage share (%)"]);
+        for &c in &cs {
+            let mut cell = Cell::new(dataset, "g-retriever", backbone, batch);
+            cell.n_clusters = c;
+            let r = run_cell(&store, &engine, &cell)?;
+            let m = &r.subgcache.metrics;
+            let stage_ms = m.cluster_time * 1e3;
+            let llm_ms = m.llm_time * 1e3;
+            t.row(&[
+                c.to_string(),
+                format!("{stage_ms:.1}"),
+                format!("{llm_ms:.1}"),
+                format!("{:.2}", 100.0 * stage_ms / (stage_ms + llm_ms)),
+            ]);
+        }
+        t.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Table 2: overall performance — ACC/RT/TTFT/PFTT for {G-Retriever, GRAG}
+//! × {baseline, +SubGCache} on both datasets across every LLM backbone.
+//!
+//! Paper protocol: 100 sampled test queries, Ward linkage, c = 1 (Scene
+//! Graph) / 2 (OAG). `SUBGCACHE_BATCH` / `SUBGCACHE_BACKBONES` trim the run.
+
+use subgcache::harness::{batch_from_env, backbones_from_env, push_block, run_cell, Cell,
+                         METRIC_HEADER};
+use subgcache::metrics::Table;
+use subgcache::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let store = match args.get("artifacts") {
+        Some(p) => ArtifactStore::open(p)?,
+        None => ArtifactStore::discover()?,
+    };
+    let engine = Engine::start(&store)?;
+    let batch = batch_from_env(args.usize_or("batch", 100));
+    let backbones = backbones_from_env(&store);
+
+    println!("== Table 2: overall performance (batch = {batch}) ==");
+    for backbone in &backbones {
+        for dataset in ["scene_graph", "oag"] {
+            println!("\n-- backbone: {backbone} | dataset: {dataset} --");
+            let mut t = Table::new(&METRIC_HEADER);
+            for retriever in ["g-retriever", "grag"] {
+                let cell = Cell::new(dataset, retriever, backbone, batch);
+                let r = run_cell(&store, &engine, &cell)?;
+                let label = if retriever == "g-retriever" { "G-Retriever" } else { "GRAG" };
+                push_block(&mut t, label, &r);
+            }
+            t.print();
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Table 3: linkage-strategy sensitivity — Δ rows (ACC gain and RT/TTFT/PFTT
+//! speedups vs the baseline) for all five linkages, both retrievers, both
+//! datasets (Llama-3.2-3B-sim backbone, per the paper).
+
+use subgcache::harness::{batch_from_env, run_cell, Cell};
+use subgcache::metrics::{delta, Table};
+use subgcache::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let store = match args.get("artifacts") {
+        Some(p) => ArtifactStore::open(p)?,
+        None => ArtifactStore::discover()?,
+    };
+    let engine = Engine::start(&store)?;
+    let batch = batch_from_env(args.usize_or("batch", 100));
+    let backbone = args.get_or("backbone", "llama-3.2-3b-sim");
+
+    println!("== Table 3: impact of linkage strategies (batch = {batch}) ==");
+    for retriever in ["g-retriever", "grag"] {
+        for dataset in ["scene_graph", "oag"] {
+            println!("\n-- Δ_{retriever} | dataset: {dataset} --");
+            let mut t = Table::new(&["Strategy", "ΔACC", "ΔRT", "ΔTTFT", "ΔPFTT"]);
+            for linkage in Linkage::ALL {
+                let mut cell = Cell::new(dataset, retriever, backbone, batch);
+                cell.linkage = linkage;
+                let r = run_cell(&store, &engine, &cell)?;
+                let d = delta(&r.baseline.metrics, &r.subgcache.metrics);
+                t.row(&[
+                    linkage.name().to_string(),
+                    format!("{:+.2}", d.acc_points),
+                    format!("{:.2}x", d.rt_x),
+                    format!("{:.2}x", d.ttft_x),
+                    format!("{:.2}x", d.pftt_x),
+                ]);
+            }
+            t.print();
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Table 4: effect of in-batch query size (50/100/150/200) on both datasets
+//! with the Llama-3.2-3B-sim backbone.
+
+use subgcache::harness::{push_block, run_cell, Cell, METRIC_HEADER};
+use subgcache::metrics::Table;
+use subgcache::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let store = match args.get("artifacts") {
+        Some(p) => ArtifactStore::open(p)?,
+        None => ArtifactStore::discover()?,
+    };
+    let engine = Engine::start(&store)?;
+    let backbone = args.get_or("backbone", "llama-3.2-3b-sim");
+    let batches: Vec<usize> = args
+        .list_or("batches", "50,100,150,200")
+        .iter()
+        .map(|s| s.parse().expect("bad --batches"))
+        .collect();
+
+    println!("== Table 4: in-batch query size sweep (backbone: {backbone}) ==");
+    for &batch in &batches {
+        for dataset in ["scene_graph", "oag"] {
+            println!("\n-- {batch} in-batch queries | dataset: {dataset} --");
+            let mut t = Table::new(&METRIC_HEADER);
+            for retriever in ["g-retriever", "grag"] {
+                let cell = Cell::new(dataset, retriever, backbone, batch);
+                let r = run_cell(&store, &engine, &cell)?;
+                let label = if retriever == "g-retriever" { "G-Retriever" } else { "GRAG" };
+                push_block(&mut t, label, &r);
+            }
+            t.print();
+        }
+    }
+    println!("\nnote: test splits hold 200 queries; batches beyond 200 resample.");
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Tables 6/7/8 (appendix A.4): the in-batch-size sweep of Table 4 repeated
+//! for the other three backbones (Llama-2-7B / Mistral-7B / Falcon-7B sims).
+
+use subgcache::harness::{batch_from_env, push_block, run_cell, Cell, METRIC_HEADER};
+use subgcache::metrics::Table;
+use subgcache::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let store = match args.get("artifacts") {
+        Some(p) => ArtifactStore::open(p)?,
+        None => ArtifactStore::discover()?,
+    };
+    let engine = Engine::start(&store)?;
+    let batches: Vec<usize> = args
+        .list_or("batches", "50,150,200")
+        .iter()
+        .map(|s| s.parse().expect("bad --batches"))
+        .collect();
+    let _ = batch_from_env(0); // env override documented; batches flag rules here
+
+    for (table, backbone) in
+        [("Table 6", "llama-2-7b-sim"), ("Table 7", "mistral-7b-sim"),
+         ("Table 8", "falcon-7b-sim")]
+    {
+        println!("\n==== {table}: batch-size sweep (backbone: {backbone}) ====");
+        for &batch in &batches {
+            for dataset in ["scene_graph", "oag"] {
+                println!("\n-- {batch} in-batch queries | dataset: {dataset} --");
+                let mut t = Table::new(&METRIC_HEADER);
+                for retriever in ["g-retriever", "grag"] {
+                    let cell = Cell::new(dataset, retriever, backbone, batch);
+                    let r = run_cell(&store, &engine, &cell)?;
+                    let label =
+                        if retriever == "g-retriever" { "G-Retriever" } else { "GRAG" };
+                    push_block(&mut t, label, &r);
+                }
+                t.print();
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,180 @@
+//! Subgraph-level KV cache manager (the paper §3.4).
+//!
+//! Cluster-wise lifecycle: at most one resident representative-subgraph KV
+//! cache at a time — computed once per cluster, hit by every member query,
+//! released before the next cluster (bounding GPU/host memory for large
+//! in-batch workloads). Generic over the handle type so the policy is
+//! testable without a PJRT engine; the real handle is
+//! [`crate::runtime::KvHandle`].
+
+/// Accounting snapshot (reported in EXPERIMENTS.md and Fig. 4 harness).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    pub prefills: u64,
+    pub hits: u64,
+    pub released: u64,
+    pub resident_bytes: usize,
+    pub peak_bytes: usize,
+}
+
+/// One resident cluster cache.
+struct Resident<H> {
+    cluster_id: usize,
+    handle: H,
+    bytes: usize,
+}
+
+/// The subgraph-level KV cache. `H` is an opaque device-cache handle; the
+/// `release` callback passed at construction returns it to the engine.
+pub struct KvCacheManager<H> {
+    resident: Option<Resident<H>>,
+    stats: CacheStats,
+}
+
+impl<H> Default for KvCacheManager<H> {
+    fn default() -> Self {
+        KvCacheManager { resident: None, stats: CacheStats::default() }
+    }
+}
+
+impl<H> KvCacheManager<H> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install the KV cache of `cluster_id`'s representative subgraph.
+    /// Returns the evicted handle (caller must release it on the engine).
+    pub fn install(&mut self, cluster_id: usize, handle: H, bytes: usize) -> Option<H> {
+        let evicted = self.take_resident();
+        self.stats.prefills += 1;
+        self.stats.resident_bytes = bytes;
+        self.stats.peak_bytes = self.stats.peak_bytes.max(bytes);
+        self.resident = Some(Resident { cluster_id, handle, bytes });
+        evicted
+    }
+
+    /// Look up the resident cache for a cluster (a hit in the paper's terms).
+    pub fn lookup(&mut self, cluster_id: usize) -> Option<&H> {
+        match &self.resident {
+            Some(r) if r.cluster_id == cluster_id => {
+                self.stats.hits += 1;
+                Some(&r.handle)
+            }
+            _ => None,
+        }
+    }
+
+    /// Release the resident cache (end of cluster); returns its handle.
+    pub fn release(&mut self) -> Option<H> {
+        self.take_resident()
+    }
+
+    fn take_resident(&mut self) -> Option<H> {
+        self.resident.take().map(|r| {
+            self.stats.released += 1;
+            self.stats.resident_bytes = 0;
+            debug_assert!(r.bytes <= self.stats.peak_bytes);
+            r.handle
+        })
+    }
+
+    pub fn resident_cluster(&self) -> Option<usize> {
+        self.resident.as_ref().map(|r| r.cluster_id)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+impl<H> Drop for KvCacheManager<H> {
+    fn drop(&mut self) {
+        // dropping a still-resident handle is fine for host-owned handles;
+        // engine-owned ones should be released explicitly (tested below).
+        debug_assert!(
+            self.resident.is_none() || !std::thread::panicking(),
+            "KV cache dropped while resident"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn install_lookup_release_cycle() {
+        let mut m: KvCacheManager<u32> = KvCacheManager::new();
+        assert!(m.lookup(0).is_none());
+        assert!(m.install(0, 111, 1024).is_none());
+        assert_eq!(m.lookup(0), Some(&111));
+        assert_eq!(m.lookup(0), Some(&111));
+        assert!(m.lookup(1).is_none()); // other cluster: miss, no eviction
+        assert_eq!(m.resident_cluster(), Some(0));
+        assert_eq!(m.release(), Some(111));
+        assert!(m.lookup(0).is_none());
+        let s = m.stats();
+        assert_eq!((s.prefills, s.hits, s.released), (1, 2, 1));
+        assert_eq!(s.resident_bytes, 0);
+        assert_eq!(s.peak_bytes, 1024);
+    }
+
+    #[test]
+    fn install_evicts_previous() {
+        let mut m: KvCacheManager<u32> = KvCacheManager::new();
+        m.install(0, 1, 10);
+        let evicted = m.install(1, 2, 20);
+        assert_eq!(evicted, Some(1));
+        assert_eq!(m.resident_cluster(), Some(1));
+        assert_eq!(m.stats().peak_bytes, 20);
+    }
+
+    #[test]
+    fn at_most_one_resident_property() {
+        prop_check(100, |rng| {
+            let mut m: KvCacheManager<u64> = KvCacheManager::new();
+            let mut live: Vec<u64> = Vec::new(); // handles we must get back
+            let mut next_handle = 0u64;
+            for _ in 0..rng.range(1, 40) {
+                match rng.below(3) {
+                    0 => {
+                        let h = next_handle;
+                        next_handle += 1;
+                        live.push(h);
+                        if let Some(e) = m.install(rng.below(5), h, rng.range(1, 100)) {
+                            live.retain(|&x| x != e);
+                        }
+                    }
+                    1 => {
+                        let _ = m.lookup(rng.below(5));
+                    }
+                    _ => {
+                        if let Some(h) = m.release() {
+                            live.retain(|&x| x != h);
+                        }
+                    }
+                }
+                // invariant: exactly the resident handle is outstanding
+                assert!(live.len() <= 1, "leaked handles: {live:?}");
+                assert_eq!(live.len() == 1, m.resident_cluster().is_some());
+            }
+            if let Some(h) = m.release() {
+                live.retain(|&x| x != h);
+            }
+            assert!(live.is_empty());
+            assert_eq!(m.stats().resident_bytes, 0);
+        });
+    }
+
+    #[test]
+    fn stats_peak_monotone() {
+        let mut m: KvCacheManager<()> = KvCacheManager::new();
+        m.install(0, (), 100);
+        m.release();
+        m.install(1, (), 50);
+        assert_eq!(m.stats().peak_bytes, 100);
+        assert_eq!(m.stats().resident_bytes, 50);
+        m.release();
+    }
+}

@@ -1,0 +1,270 @@
+//! Agglomerative hierarchical clustering over subgraph embeddings
+//! (the paper §3.2: Euclidean metric, dendrogram cut at a preset cluster
+//! count, five linkage strategies — Table 3).
+//!
+//! Lance–Williams updates on a dense dissimilarity matrix: O(m³) worst case,
+//! which is fine at in-batch scale (m ≤ a few hundred; Fig. 4 measures this
+//! stage end-to-end).
+
+use crate::embed::sq_dist;
+
+/// Linkage strategies evaluated in the paper's Table 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Linkage {
+    Ward,
+    Single,
+    Average,
+    Complete,
+    Centroid,
+}
+
+impl Linkage {
+    pub const ALL: [Linkage; 5] =
+        [Linkage::Ward, Linkage::Single, Linkage::Average, Linkage::Complete, Linkage::Centroid];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Linkage::Ward => "ward",
+            Linkage::Single => "single",
+            Linkage::Average => "average",
+            Linkage::Complete => "complete",
+            Linkage::Centroid => "centroid",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Linkage> {
+        Linkage::ALL.iter().copied().find(|l| l.name() == s)
+    }
+
+    /// Ward/centroid operate on *squared* Euclidean dissimilarities
+    /// (the Lance–Williams recurrences below assume it); the min/max/mean
+    /// linkages are metric-agnostic.
+    fn squared(&self) -> bool {
+        matches!(self, Linkage::Ward | Linkage::Centroid)
+    }
+}
+
+/// Flat clustering: assign each embedding to one of `c` clusters.
+/// Labels are canonicalized by first occurrence (deterministic).
+pub fn cluster(embs: &[Vec<f32>], c: usize, linkage: Linkage) -> Vec<usize> {
+    let m = embs.len();
+    if m == 0 {
+        return vec![];
+    }
+    let c = c.clamp(1, m);
+
+    // dissimilarity matrix
+    let mut d = vec![vec![0f32; m]; m];
+    for i in 0..m {
+        for j in (i + 1)..m {
+            let sq = sq_dist(&embs[i], &embs[j]);
+            let v = if linkage.squared() { sq } else { sq.sqrt() };
+            d[i][j] = v;
+            d[j][i] = v;
+        }
+    }
+
+    let mut active: Vec<bool> = vec![true; m];
+    let mut size: Vec<f32> = vec![1.0; m];
+    let mut label: Vec<usize> = (0..m).collect(); // representative per point
+    let mut n_clusters = m;
+
+    while n_clusters > c {
+        // find the closest active pair (deterministic tie-break)
+        let (mut bi, mut bj, mut best) = (usize::MAX, usize::MAX, f32::INFINITY);
+        for i in 0..m {
+            if !active[i] {
+                continue;
+            }
+            for j in (i + 1)..m {
+                if !active[j] {
+                    continue;
+                }
+                if d[i][j] < best {
+                    best = d[i][j];
+                    bi = i;
+                    bj = j;
+                }
+            }
+        }
+        debug_assert!(bi != usize::MAX);
+
+        // Lance–Williams: merge bj into bi, update distances d[bi][k].
+        let (si, sj) = (size[bi], size[bj]);
+        for k in 0..m {
+            if !active[k] || k == bi || k == bj {
+                continue;
+            }
+            let (dik, djk, dij) = (d[bi][k], d[bj][k], d[bi][bj]);
+            let sk = size[k];
+            let new = match linkage {
+                Linkage::Single => dik.min(djk),
+                Linkage::Complete => dik.max(djk),
+                Linkage::Average => (si * dik + sj * djk) / (si + sj),
+                Linkage::Ward => {
+                    let t = si + sj + sk;
+                    ((si + sk) * dik + (sj + sk) * djk - sk * dij) / t
+                }
+                Linkage::Centroid => {
+                    let t = si + sj;
+                    (si * dik + sj * djk) / t - (si * sj * dij) / (t * t)
+                }
+            };
+            d[bi][k] = new;
+            d[k][bi] = new;
+        }
+        size[bi] += size[bj];
+        active[bj] = false;
+        for l in label.iter_mut() {
+            if *l == bj {
+                *l = bi;
+            }
+        }
+        n_clusters -= 1;
+    }
+
+    canonicalize(&label)
+}
+
+/// Relabel representatives to 0..k-1 by first occurrence.
+fn canonicalize(label: &[usize]) -> Vec<usize> {
+    let mut map = std::collections::HashMap::new();
+    label
+        .iter()
+        .map(|&l| {
+            let next = map.len();
+            *map.entry(l).or_insert(next)
+        })
+        .collect()
+}
+
+/// Group query indices per cluster label (cluster id -> member indices).
+pub fn groups(assignment: &[usize]) -> Vec<Vec<usize>> {
+    let k = assignment.iter().copied().max().map_or(0, |m| m + 1);
+    let mut out = vec![Vec::new(); k];
+    for (i, &a) in assignment.iter().enumerate() {
+        out[a].push(i);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    fn blobs() -> Vec<Vec<f32>> {
+        // two well-separated 2-d blobs of 4 points each
+        let mut v = Vec::new();
+        for i in 0..4 {
+            v.push(vec![0.0 + 0.01 * i as f32, 0.0]);
+        }
+        for i in 0..4 {
+            v.push(vec![10.0 + 0.01 * i as f32, 10.0]);
+        }
+        v
+    }
+
+    #[test]
+    fn separates_blobs_all_linkages() {
+        for l in Linkage::ALL {
+            let a = cluster(&blobs(), 2, l);
+            assert_eq!(a[..4], [a[0]; 4][..], "{l:?}");
+            assert_eq!(a[4..], [a[4]; 4][..], "{l:?}");
+            assert_ne!(a[0], a[4], "{l:?}");
+        }
+    }
+
+    #[test]
+    fn c_equals_m_is_singletons() {
+        let e = blobs();
+        let a = cluster(&e, e.len(), Linkage::Ward);
+        let mut sorted = a.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), e.len());
+    }
+
+    #[test]
+    fn c_one_is_single_cluster() {
+        let a = cluster(&blobs(), 1, Linkage::Average);
+        assert!(a.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        assert_eq!(cluster(&[], 3, Linkage::Ward), Vec::<usize>::new());
+        assert_eq!(cluster(&[vec![1.0]], 3, Linkage::Ward), vec![0]);
+    }
+
+    #[test]
+    fn partition_property() {
+        prop_check(60, |rng| {
+            let m = rng.range(1, 25);
+            let dim = rng.range(1, 6);
+            let embs: Vec<Vec<f32>> = (0..m)
+                .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let c = rng.range(1, m + 1);
+            let linkage = *rng.choose(&Linkage::ALL);
+            let a = cluster(&embs, c, linkage);
+            assert_eq!(a.len(), m);
+            let k = a.iter().copied().max().unwrap() + 1;
+            assert_eq!(k, c.min(m), "wanted {c} clusters, got {k} ({linkage:?})");
+            // labels are contiguous 0..k and canonical by first occurrence
+            let mut seen = vec![false; k];
+            let mut next = 0usize;
+            for &l in &a {
+                assert!(l < k);
+                if !seen[l] {
+                    assert_eq!(l, next, "non-canonical labels {a:?}");
+                    seen[l] = true;
+                    next += 1;
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn identical_points_merge_first() {
+        let mut e = vec![vec![5.0f32, 5.0]; 3];
+        e.push(vec![100.0, 100.0]);
+        for l in Linkage::ALL {
+            let a = cluster(&e, 2, l);
+            assert_eq!(a[0], a[1]);
+            assert_eq!(a[1], a[2]);
+            assert_ne!(a[0], a[3]);
+        }
+    }
+
+    #[test]
+    fn groups_inverts_assignment() {
+        let a = vec![0, 1, 0, 2, 1];
+        let g = groups(&a);
+        assert_eq!(g, vec![vec![0, 2], vec![1, 4], vec![3]]);
+        for (cid, members) in g.iter().enumerate() {
+            for &m in members {
+                assert_eq!(a[m], cid);
+            }
+        }
+    }
+
+    #[test]
+    fn ward_prefers_balanced_merges() {
+        // A classic ward behaviour: merging into big clusters is penalized.
+        // points: tight pair far from a third point
+        let e = vec![vec![0.0f32], vec![0.1], vec![0.2], vec![9.0]];
+        let a = cluster(&e, 2, Linkage::Ward);
+        assert_eq!(a[0], a[1]);
+        assert_eq!(a[1], a[2]);
+        assert_ne!(a[3], a[0]);
+    }
+
+    #[test]
+    fn linkage_parse_roundtrip() {
+        for l in Linkage::ALL {
+            assert_eq!(Linkage::parse(l.name()), Some(l));
+        }
+        assert_eq!(Linkage::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,180 @@
+//! Dataset loading: the synthetic Scene Graph / OAG JSON files produced by
+//! `python/compile/datasets.py` (Table 1 statistics), plus query/answer
+//! bookkeeping and ACC scoring.
+
+use std::path::Path;
+
+use crate::graph::{Edge, Node, Subgraph, TextualGraph};
+use crate::util::json::{parse_file, Json};
+
+/// Data split tags (113/113/200 and 1617/1617/200 per the paper App. A.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+    Test,
+}
+
+impl Split {
+    fn parse(s: &str) -> anyhow::Result<Split> {
+        Ok(match s {
+            "train" => Split::Train,
+            "val" => Split::Val,
+            "test" => Split::Test,
+            other => anyhow::bail!("unknown split {other}"),
+        })
+    }
+}
+
+/// One benchmark query with its gold answer and answer-bearing support set
+/// (support is used by tests/diagnostics only — never by serving).
+#[derive(Debug, Clone)]
+pub struct Query {
+    pub id: usize,
+    pub text: String,
+    pub answer: String,
+    pub split: Split,
+    pub support: Subgraph,
+}
+
+/// A loaded dataset: the textual graph plus its query set.
+pub struct Dataset {
+    pub graph: TextualGraph,
+    pub queries: Vec<Query>,
+}
+
+impl Dataset {
+    pub fn load(path: &Path) -> anyhow::Result<Dataset> {
+        let v = parse_file(path)?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Dataset> {
+        let name = v.get("name").as_str().unwrap_or("unnamed");
+        let nodes = v
+            .get("nodes")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("missing nodes"))?
+            .iter()
+            .map(|n| {
+                Ok(Node {
+                    id: n.get("id").as_usize().ok_or_else(|| anyhow::anyhow!("node id"))?,
+                    name: n.get("name").as_str().unwrap_or_default().to_string(),
+                    text: n.get("text").as_str().unwrap_or_default().to_string(),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let edges = v
+            .get("edges")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("missing edges"))?
+            .iter()
+            .map(|e| {
+                Ok(Edge {
+                    src: e.get("src").as_usize().ok_or_else(|| anyhow::anyhow!("edge src"))?,
+                    dst: e.get("dst").as_usize().ok_or_else(|| anyhow::anyhow!("edge dst"))?,
+                    text: e.get("text").as_str().unwrap_or_default().to_string(),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let graph = TextualGraph::new(name, nodes, edges)?;
+        let queries = v
+            .get("queries")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("missing queries"))?
+            .iter()
+            .map(|q| {
+                let support = Subgraph::from_parts(
+                    q.get("support_nodes").as_arr().unwrap_or(&[]).iter()
+                        .filter_map(Json::as_usize),
+                    q.get("support_edges").as_arr().unwrap_or(&[]).iter()
+                        .filter_map(Json::as_usize),
+                );
+                Ok(Query {
+                    id: q.get("id").as_usize().ok_or_else(|| anyhow::anyhow!("query id"))?,
+                    text: q.get("text").as_str().unwrap_or_default().to_string(),
+                    answer: q.get("answer").as_str().unwrap_or_default().to_string(),
+                    split: Split::parse(q.get("split").as_str().unwrap_or("test"))?,
+                    support,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Dataset { graph, queries })
+    }
+
+    pub fn split(&self, split: Split) -> Vec<&Query> {
+        self.queries.iter().filter(|q| q.split == split).collect()
+    }
+
+    /// The paper's main-table protocol: the first `n` test queries under a
+    /// deterministic seed-shuffled order ("randomly sample 100 test queries").
+    pub fn sample_test(&self, n: usize, seed: u64) -> Vec<&Query> {
+        let mut test = self.split(Split::Test);
+        let mut rng = crate::util::rng::Rng::new(seed);
+        rng.shuffle(&mut test);
+        test.truncate(n);
+        test
+    }
+}
+
+/// ACC scoring: normalized exact match over word tokens (answers are short
+/// relation phrases / attribute words).
+pub fn answer_correct(predicted: &str, gold: &str) -> bool {
+    crate::tokenizer::split_text(predicted) == crate::tokenizer::split_text(gold)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn ds_json() -> Json {
+        parse(
+            r#"{"name":"t",
+                "nodes":[{"id":0,"name":"a","text":"a x"},{"id":1,"name":"b","text":"b"}],
+                "edges":[{"src":0,"dst":1,"text":"rel"}],
+                "queries":[
+                  {"id":0,"text":"q0 ?","answer":"x","split":"train",
+                   "support_nodes":[0],"support_edges":[]},
+                  {"id":1,"text":"q1 ?","answer":"rel","split":"test",
+                   "support_nodes":[0,1],"support_edges":[0]}
+                ]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn loads_dataset() {
+        let ds = Dataset::from_json(&ds_json()).unwrap();
+        assert_eq!(ds.graph.n_nodes(), 2);
+        assert_eq!(ds.graph.n_edges(), 1);
+        assert_eq!(ds.queries.len(), 2);
+        assert_eq!(ds.split(Split::Test).len(), 1);
+        assert!(ds.queries[1].support.edges.contains(&0));
+    }
+
+    #[test]
+    fn sample_test_deterministic() {
+        let ds = Dataset::from_json(&ds_json()).unwrap();
+        let a: Vec<usize> = ds.sample_test(1, 9).iter().map(|q| q.id).collect();
+        let b: Vec<usize> = ds.sample_test(1, 9).iter().map(|q| q.id).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Dataset::from_json(&parse(r#"{"name":"x"}"#).unwrap()).is_err());
+        assert!(Dataset::from_json(
+            &parse(r#"{"nodes":[{"id":0,"name":"a","text":"a"}],
+                       "edges":[{"src":0,"dst":9,"text":"r"}],"queries":[]}"#).unwrap()
+        ).is_err());
+    }
+
+    #[test]
+    fn acc_scoring_is_token_normalized() {
+        assert!(answer_correct("Left  of", "left of"));
+        assert!(answer_correct("blue", "blue"));
+        assert!(!answer_correct("blue", "red"));
+        assert!(!answer_correct("left", "left of"));
+    }
+}

@@ -1,0 +1,127 @@
+//! FNV-1a feature-hashing bag-of-tokens embedder — exact mirror of
+//! `python/compile/hashembed.py` (SentenceBERT substitute, DESIGN.md §4).
+//!
+//! Used on the request path for (a) retrieval similarity scoring and (b)
+//! GNN node features. Pinned cross-language by `artifacts/golden/embed.json`.
+
+use crate::tokenizer::split_text;
+
+pub const FEAT_DIM: usize = 64;
+
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x1_0000_0001_B3;
+
+/// 64-bit FNV-1a (identical constants to the Python side).
+pub fn fnv1a(data: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// L2-normalized hashed bag-of-tokens embedding. Each token adds ±1 to one
+/// bucket (bucket = hash % dim, sign = bit 63), keeping E[dot] ≈ 0 for
+/// disjoint token sets so cosine tracks token overlap.
+pub fn embed_text_dim(text: &str, dim: usize) -> Vec<f32> {
+    let mut v = vec![0f64; dim];
+    for tok in split_text(text) {
+        let h = fnv1a(tok.as_bytes());
+        let sign = if h >> 63 == 0 { 1.0 } else { -1.0 };
+        v[(h % dim as u64) as usize] += sign;
+    }
+    let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+    }
+    v.into_iter().map(|x| x as f32).collect()
+}
+
+pub fn embed_text(text: &str) -> Vec<f32> {
+    embed_text_dim(text, FEAT_DIM)
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let (na, nb) = (norm(a), norm(b));
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot(a, b) / (na * nb)
+    }
+}
+
+/// Squared Euclidean distance (clustering hot path).
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        assert_eq!(fnv1a(b""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xAF63_DC4C_8601_EC8C);
+        assert_eq!(fnv1a(b"foobar"), 0x8594_4171_F739_67E8);
+    }
+
+    #[test]
+    fn unit_norm() {
+        let v = embed_text("what is the color of the cords ?");
+        assert!((norm(&v) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        assert!(embed_text("").iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn similarity_tracks_overlap() {
+        let a = embed_text("the red laptop on the table");
+        let b = embed_text("the red laptop near the chair");
+        let c = embed_text("graph neural network caching inference");
+        assert!(cosine(&a, &b) > cosine(&a, &c));
+    }
+
+    #[test]
+    fn case_insensitive() {
+        assert_eq!(embed_text("Alpha BETA"), embed_text("alpha beta"));
+    }
+
+    #[test]
+    fn norm_property() {
+        prop_check(100, |rng| {
+            let n_words = rng.below(8);
+            let words: Vec<String> = (0..n_words)
+                .map(|_| format!("w{}", rng.below(20)))
+                .collect();
+            let v = embed_text(&words.join(" "));
+            let n = norm(&v);
+            assert!(n == 0.0 || (n - 1.0).abs() < 1e-5, "norm {n}");
+        });
+    }
+
+    #[test]
+    fn sq_dist_cosine_consistency() {
+        // for unit vectors: ||a-b||² = 2 - 2 cos(a,b)
+        let a = embed_text("red laptop table");
+        let b = embed_text("blue cords chair");
+        let d = sq_dist(&a, &b);
+        let c = cosine(&a, &b);
+        assert!((d - (2.0 - 2.0 * c)).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,332 @@
+//! Textual graph store, subgraphs, representative-subgraph merging, and the
+//! canonical verbalizer (exact mirror of `python/compile/verbalize.py`,
+//! pinned by `artifacts/golden/verbalize.json`).
+
+use std::collections::BTreeSet;
+
+use crate::tokenizer::split_text;
+
+/// A node of the textual graph: `name` is the entity mention used in edge
+/// clauses, `text` the full attribute string used as its own clause.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub id: usize,
+    pub name: String,
+    pub text: String,
+}
+
+/// A directed, attributed edge (attribute = relation phrase).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Edge {
+    pub src: usize,
+    pub dst: usize,
+    pub text: String,
+}
+
+/// The external knowledge graph G.
+#[derive(Debug, Clone, Default)]
+pub struct TextualGraph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub edges: Vec<Edge>,
+    /// adjacency: for each node, (edge index, neighbor, outgoing?) triples.
+    adj: Vec<Vec<(usize, usize, bool)>>,
+}
+
+impl TextualGraph {
+    pub fn new(name: &str, nodes: Vec<Node>, edges: Vec<Edge>) -> anyhow::Result<Self> {
+        for (i, n) in nodes.iter().enumerate() {
+            anyhow::ensure!(n.id == i, "node ids must be contiguous (got {} at {i})", n.id);
+        }
+        let mut adj = vec![Vec::new(); nodes.len()];
+        for (ei, e) in edges.iter().enumerate() {
+            anyhow::ensure!(e.src < nodes.len() && e.dst < nodes.len(),
+                            "edge {ei} out of range");
+            adj[e.src].push((ei, e.dst, true));
+            adj[e.dst].push((ei, e.src, false));
+        }
+        Ok(TextualGraph { name: name.to_string(), nodes, edges, adj })
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Incident edges of `node`: (edge index, neighbor id, outgoing?).
+    pub fn incident(&self, node: usize) -> &[(usize, usize, bool)] {
+        &self.adj[node]
+    }
+
+    /// Undirected k-hop neighborhood node set of a seed.
+    pub fn k_hop(&self, seed: usize, k: usize) -> BTreeSet<usize> {
+        let mut seen: BTreeSet<usize> = BTreeSet::new();
+        seen.insert(seed);
+        let mut frontier = vec![seed];
+        for _ in 0..k {
+            let mut next = Vec::new();
+            for &u in &frontier {
+                for &(_, v, _) in &self.adj[u] {
+                    if seen.insert(v) {
+                        next.push(v);
+                    }
+                }
+            }
+            frontier = next;
+        }
+        seen
+    }
+}
+
+/// A retrieved subgraph: sorted node/edge id sets over a `TextualGraph`.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Subgraph {
+    pub nodes: BTreeSet<usize>,
+    pub edges: BTreeSet<usize>,
+}
+
+impl Subgraph {
+    pub fn from_parts(nodes: impl IntoIterator<Item = usize>,
+                      edges: impl IntoIterator<Item = usize>) -> Self {
+        Subgraph { nodes: nodes.into_iter().collect(), edges: edges.into_iter().collect() }
+    }
+
+    /// Close the node set over edge endpoints (every edge's ends included).
+    pub fn close_over(&mut self, g: &TextualGraph) {
+        for &ei in &self.edges {
+            self.nodes.insert(g.edges[ei].src);
+            self.nodes.insert(g.edges[ei].dst);
+        }
+    }
+
+    /// Union-merge (the paper's representative-subgraph construction §3.3).
+    pub fn union(&mut self, other: &Subgraph) {
+        self.nodes.extend(other.nodes.iter().copied());
+        self.edges.extend(other.edges.iter().copied());
+    }
+
+    /// Merge many retrieved subgraphs into the representative subgraph.
+    pub fn representative(parts: &[&Subgraph]) -> Subgraph {
+        let mut out = Subgraph::default();
+        for p in parts {
+            out.union(p);
+        }
+        out
+    }
+
+    pub fn is_superset_of(&self, other: &Subgraph) -> bool {
+        other.nodes.is_subset(&self.nodes) && other.edges.is_subset(&self.edges)
+    }
+
+    pub fn len(&self) -> (usize, usize) {
+        (self.nodes.len(), self.edges.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty() && self.edges.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Verbalizer (canonical; mirrors python/compile/verbalize.py)
+// ---------------------------------------------------------------------------
+
+/// Count tokens of one clause (clause tokens + its trailing ";").
+fn clause_cost(clause: &str) -> usize {
+    split_text(clause).len() + 1
+}
+
+/// Verbalize a subgraph into the canonical prompt prefix. `max_tokens`
+/// bounds the word-token count (including the leading "graph :"), dropping
+/// whole clauses from the tail like the Python reference.
+pub fn prefix_text(g: &TextualGraph, sg: &Subgraph, max_tokens: Option<usize>) -> String {
+    let mut out = String::from("graph :");
+    let mut used = 2usize;
+    let mut push = |clause: &str, used: &mut usize, out: &mut String| -> bool {
+        let cost = clause_cost(clause);
+        if let Some(m) = max_tokens {
+            if *used + cost > m {
+                return false;
+            }
+        }
+        out.push(' ');
+        out.push_str(clause);
+        out.push_str(" ;");
+        *used += cost;
+        true
+    };
+    for &ni in &sg.nodes {
+        if !push(&g.nodes[ni].text, &mut used, &mut out) {
+            return out;
+        }
+    }
+    // edges sorted by (src, dst) — BTreeSet gives edge-id order, so re-sort.
+    let mut eids: Vec<usize> = sg.edges.iter().copied().collect();
+    eids.sort_by_key(|&ei| (g.edges[ei].src, g.edges[ei].dst));
+    for ei in eids {
+        let e = &g.edges[ei];
+        let clause = format!("{} {} {}", g.nodes[e.src].name, e.text, g.nodes[e.dst].name);
+        if !push(&clause, &mut used, &mut out) {
+            return out;
+        }
+    }
+    out
+}
+
+/// The query suffix appended after the (possibly cached) prefix.
+pub fn question_text(query_text: &str) -> String {
+    format!(" question : {query_text} answer :")
+}
+
+/// Full baseline prompt = prefix ⊕ question.
+pub fn full_prompt(g: &TextualGraph, sg: &Subgraph, query_text: &str,
+                   max_prefix_tokens: Option<usize>) -> String {
+    let mut s = prefix_text(g, sg, max_prefix_tokens);
+    s.push_str(&question_text(query_text));
+    s
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Rng;
+
+    pub(crate) fn tiny_graph() -> TextualGraph {
+        TextualGraph::new(
+            "t",
+            vec![
+                Node { id: 0, name: "cords".into(), text: "cords color blue".into() },
+                Node { id: 1, name: "laptop".into(), text: "laptop".into() },
+                Node { id: 2, name: "screen".into(), text: "screen material glass".into() },
+            ],
+            vec![
+                Edge { src: 0, dst: 1, text: "left of".into() },
+                Edge { src: 2, dst: 1, text: "above".into() },
+            ],
+        )
+        .unwrap()
+    }
+
+    pub(crate) fn random_graph(rng: &mut Rng, n: usize, m: usize) -> TextualGraph {
+        let nodes = (0..n)
+            .map(|i| Node { id: i, name: format!("n{i}"), text: format!("n{i} attr a{}", i % 5) })
+            .collect();
+        let edges = (0..m)
+            .map(|_| {
+                let a = rng.below(n);
+                let mut b = rng.below(n);
+                if b == a {
+                    b = (b + 1) % n;
+                }
+                Edge { src: a, dst: b, text: format!("rel{}", rng.below(4)) }
+            })
+            .collect();
+        TextualGraph::new("rand", nodes, edges).unwrap()
+    }
+
+    #[test]
+    fn rejects_bad_edges_and_ids() {
+        assert!(TextualGraph::new("x",
+            vec![Node { id: 1, name: "a".into(), text: "a".into() }], vec![]).is_err());
+        assert!(TextualGraph::new("x",
+            vec![Node { id: 0, name: "a".into(), text: "a".into() }],
+            vec![Edge { src: 0, dst: 5, text: "r".into() }]).is_err());
+    }
+
+    #[test]
+    fn k_hop_grows_monotonically() {
+        let g = tiny_graph();
+        let h0 = g.k_hop(0, 0);
+        let h1 = g.k_hop(0, 1);
+        let h2 = g.k_hop(0, 2);
+        assert_eq!(h0.len(), 1);
+        assert!(h0.is_subset(&h1) && h1.is_subset(&h2));
+        assert_eq!(h2, [0, 1, 2].into_iter().collect());
+    }
+
+    #[test]
+    fn prefix_format_matches_reference() {
+        let g = tiny_graph();
+        let sg = Subgraph::from_parts([0, 1], [0]);
+        assert_eq!(prefix_text(&g, &sg, None),
+                   "graph : cords color blue ; laptop ; cords left of laptop ;");
+    }
+
+    #[test]
+    fn question_format() {
+        assert_eq!(question_text("x ?"), " question : x ? answer :");
+    }
+
+    #[test]
+    fn budget_drops_whole_clauses() {
+        let g = tiny_graph();
+        let sg = Subgraph::from_parts([0, 1, 2], [0, 1]);
+        // "graph :"(2) + node0(3+1) + node1(1+1) = 8 tokens; next clause won't fit in 10
+        let s = prefix_text(&g, &sg, Some(10));
+        assert_eq!(s, "graph : cords color blue ; laptop ;");
+        let full = prefix_text(&g, &sg, None);
+        assert!(split_text(&full).len() > 10);
+    }
+
+    #[test]
+    fn representative_is_superset_of_members() {
+        prop_check(100, |rng| {
+            let g = random_graph(rng, 12, 30);
+            let subs: Vec<Subgraph> = (0..rng.range(1, 5))
+                .map(|_| {
+                    let kn = rng.range(1, 6);
+                    let ke = rng.below(8);
+                    let mut sg = Subgraph::from_parts(
+                        rng.sample_indices(12, kn),
+                        rng.sample_indices(30, ke),
+                    );
+                    sg.close_over(&g);
+                    sg
+                })
+                .collect();
+            let refs: Vec<&Subgraph> = subs.iter().collect();
+            let rep = Subgraph::representative(&refs);
+            for s in &subs {
+                assert!(rep.is_superset_of(s));
+            }
+            // idempotent and commutative under shuffle
+            let mut shuffled: Vec<&Subgraph> = subs.iter().collect();
+            rng.shuffle(&mut shuffled);
+            assert_eq!(rep, Subgraph::representative(&shuffled));
+        });
+    }
+
+    #[test]
+    fn close_over_adds_endpoints() {
+        let g = tiny_graph();
+        let mut sg = Subgraph::from_parts([], [1]);
+        sg.close_over(&g);
+        assert!(sg.nodes.contains(&1) && sg.nodes.contains(&2));
+    }
+
+    #[test]
+    fn verbalize_dedups_and_sorts() {
+        let g = tiny_graph();
+        let a = prefix_text(&g, &Subgraph::from_parts([2, 0, 2], [1, 0, 1]), None);
+        let b = prefix_text(&g, &Subgraph::from_parts([0, 2], [0, 1]), None);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn budget_is_respected_property() {
+        prop_check(60, |rng| {
+            let g = random_graph(rng, 10, 25);
+            let mut sg = Subgraph::from_parts(rng.sample_indices(10, 6),
+                                              rng.sample_indices(25, 12));
+            sg.close_over(&g);
+            let budget = rng.range(2, 60);
+            let s = prefix_text(&g, &sg, Some(budget));
+            assert!(split_text(&s).len() <= budget.max(2));
+            assert!(s.starts_with("graph :"));
+        });
+    }
+}

@@ -1,0 +1,137 @@
+//! Experiment harness shared by the table/figure binaries and benches:
+//! runs one (dataset × retriever × backbone × config) cell — baseline and
+//! +SubGCache — and renders paper-style tables (DESIGN.md §3).
+
+use crate::cluster::Linkage;
+use crate::coordinator::{Coordinator, ServeConfig, ServeReport};
+use crate::data::Dataset;
+use crate::metrics::{delta, delta_cells, metric_cells, Table};
+use crate::retrieval::{GRetriever, GragRetriever, Retriever};
+use crate::runtime::{ArtifactStore, Engine};
+
+/// The paper's default cluster counts per dataset (§4.3: Scene Graph shines
+/// at c=1, OAG at c=2).
+pub fn default_clusters(dataset: &str) -> usize {
+    match dataset {
+        "scene_graph" => 1,
+        _ => 2,
+    }
+}
+
+pub fn retriever_by_name(name: &str) -> anyhow::Result<Box<dyn Retriever>> {
+    Ok(match name {
+        "g-retriever" => Box::new(GRetriever::default()),
+        "grag" => Box::new(GragRetriever::default()),
+        other => anyhow::bail!("unknown retriever '{other}' (g-retriever | grag)"),
+    })
+}
+
+/// One experiment cell specification.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub dataset: String,
+    pub retriever: String,
+    pub backbone: String,
+    pub batch: usize,
+    pub n_clusters: usize,
+    pub linkage: Linkage,
+    pub seed: u64,
+}
+
+impl Cell {
+    pub fn new(dataset: &str, retriever: &str, backbone: &str, batch: usize) -> Cell {
+        Cell {
+            dataset: dataset.into(),
+            retriever: retriever.into(),
+            backbone: backbone.into(),
+            batch,
+            n_clusters: default_clusters(dataset),
+            linkage: Linkage::Ward,
+            seed: 7,
+        }
+    }
+}
+
+/// Baseline + SubGCache reports for one cell.
+pub struct CellResult {
+    pub cell: Cell,
+    pub baseline: ServeReport,
+    pub subgcache: ServeReport,
+}
+
+/// Run one cell (both methods on the identical query sample).
+pub fn run_cell(store: &ArtifactStore, engine: &Engine, cell: &Cell)
+                -> anyhow::Result<CellResult> {
+    let ds = store.dataset(&cell.dataset)?;
+    let retriever = retriever_by_name(&cell.retriever)?;
+    let queries = ds.sample_test(cell.batch, cell.seed);
+    anyhow::ensure!(!queries.is_empty(), "dataset {} has no test queries", cell.dataset);
+
+    let cfg = ServeConfig {
+        backbone: cell.backbone.clone(),
+        n_clusters: cell.n_clusters,
+        linkage: cell.linkage,
+        gnn: None,
+    };
+    let coord = Coordinator::new(store, engine, cfg)?;
+    let baseline = coord.serve_baseline(&ds, &queries, retriever.as_ref())?;
+    let subgcache = coord.serve_subgcache(&ds, &queries, retriever.as_ref())?;
+    Ok(CellResult { cell: cell.clone(), baseline, subgcache })
+}
+
+/// Render one retriever block of a paper table (method, +SubGCache, Δ rows).
+pub fn push_block(t: &mut Table, label: &str, r: &CellResult) {
+    t.row(&metric_cells(label, &r.baseline.metrics));
+    t.row(&metric_cells(&format!("{label}+SubGCache"), &r.subgcache.metrics));
+    t.row(&delta_cells(&format!("Δ_{label}"), &delta(&r.baseline.metrics,
+                                                     &r.subgcache.metrics)));
+}
+
+pub const METRIC_HEADER: [&str; 5] = ["Model", "ACC↑", "RT↓(ms)", "TTFT↓(ms)", "PFTT↓(ms)"];
+
+/// Standard env-tunable batch size for the harness binaries: the paper's
+/// main tables use 100; `SUBGCACHE_BATCH` overrides for quick runs.
+pub fn batch_from_env(default: usize) -> usize {
+    std::env::var("SUBGCACHE_BATCH")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Backbone list filtered by `SUBGCACHE_BACKBONES` (comma separated).
+pub fn backbones_from_env(store: &ArtifactStore) -> Vec<String> {
+    let all: Vec<String> =
+        store.manifest().llm_names().iter().map(|s| s.to_string()).collect();
+    match std::env::var("SUBGCACHE_BACKBONES") {
+        Ok(list) => {
+            let want: Vec<String> = list.split(',').map(|s| s.trim().to_string()).collect();
+            all.into_iter().filter(|b| want.contains(b)).collect()
+        }
+        Err(_) => all,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_clusters_match_paper() {
+        assert_eq!(default_clusters("scene_graph"), 1);
+        assert_eq!(default_clusters("oag"), 2);
+    }
+
+    #[test]
+    fn retriever_lookup() {
+        assert!(retriever_by_name("g-retriever").is_ok());
+        assert!(retriever_by_name("grag").is_ok());
+        assert!(retriever_by_name("gpt").is_err());
+    }
+
+    #[test]
+    fn cell_defaults() {
+        let c = Cell::new("oag", "grag", "bb", 50);
+        assert_eq!(c.n_clusters, 2);
+        assert_eq!(c.linkage, Linkage::Ward);
+    }
+}

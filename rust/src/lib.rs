@@ -1,0 +1,52 @@
+//! # SubGCache
+//!
+//! Reproduction of *"SubGCache: Accelerating Graph-based RAG with
+//! Subgraph-level KV Cache"* (AAAI 2026) as a three-layer Rust + JAX +
+//! Pallas serving stack (see DESIGN.md):
+//!
+//! * **L3 (this crate)** — the serving coordinator: retrieval, query
+//!   clustering on GNN subgraph embeddings, representative-subgraph
+//!   construction, cluster-wise KV-cache reuse, metrics.
+//! * **L2/L1 (python/compile, build-time only)** — the simulated LLM
+//!   backbones + GNN encoders, with the attention hot-spot as a Pallas
+//!   kernel; AOT-lowered to HLO text consumed by [`runtime`] via PJRT.
+//!
+//! Quickstart (after `make artifacts`):
+//!
+//! ```no_run
+//! use subgcache::prelude::*;
+//!
+//! let art = ArtifactStore::open("artifacts").unwrap();
+//! let ds = art.dataset("scene_graph").unwrap();
+//! let engine = Engine::start(&art).unwrap();
+//! let cfg = ServeConfig { backbone: "llama-3.2-3b-sim".into(), ..Default::default() };
+//! let coord = Coordinator::new(&art, &engine, cfg).unwrap();
+//! let queries = ds.sample_test(8, 7);
+//! let report = coord.serve_subgcache(&ds, &queries, &GRetriever::default()).unwrap();
+//! println!("ACC {:.1}% TTFT {:.1} ms", report.metrics.acc(), report.metrics.ttft_ms());
+//! ```
+
+pub mod cache;
+pub mod cluster;
+pub mod coordinator;
+pub mod data;
+pub mod embed;
+pub mod graph;
+pub mod harness;
+pub mod metrics;
+pub mod retrieval;
+pub mod runtime;
+pub mod tokenizer;
+pub mod util;
+
+/// Common imports for examples and binaries.
+pub mod prelude {
+    pub use crate::cluster::Linkage;
+    pub use crate::coordinator::{Coordinator, ServeConfig, ServeReport};
+    pub use crate::data::{Dataset, Split};
+    pub use crate::graph::{Subgraph, TextualGraph};
+    pub use crate::metrics::{delta, BatchMetrics, Table};
+    pub use crate::retrieval::{GRetriever, GragRetriever, GraphFeatures, Retriever};
+    pub use crate::runtime::{ArtifactStore, Engine};
+    pub use crate::util::cli::Args;
+}

@@ -1,0 +1,92 @@
+//! `subgcache` — leader binary: serve an in-batch workload with or without
+//! SubGCache and print the paper-style metrics.
+//!
+//! ```text
+//! subgcache --dataset scene_graph --retriever g-retriever \
+//!           --backbone llama-3.2-3b-sim --batch 100 --clusters 1 \
+//!           [--baseline] [--linkage ward] [--seed 7] [--artifacts PATH]
+//! ```
+
+use subgcache::prelude::*;
+use subgcache::retrieval;
+
+fn retriever_by_name(name: &str) -> anyhow::Result<Box<dyn Retriever>> {
+    Ok(match name {
+        "g-retriever" => Box::new(GRetriever::default()),
+        "grag" => Box::new(GragRetriever::default()),
+        other => anyhow::bail!("unknown retriever '{other}' (g-retriever | grag)"),
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    if args.flag("help") {
+        println!("{}", include_str!("main.rs").lines().take(8)
+                 .map(|l| l.trim_start_matches("//! ").trim_start_matches("//!"))
+                 .collect::<Vec<_>>().join("\n"));
+        return Ok(());
+    }
+
+    let store = match args.get("artifacts") {
+        Some(p) => ArtifactStore::open(p)?,
+        None => ArtifactStore::discover()?,
+    };
+    let ds = store.dataset(args.get_or("dataset", "scene_graph"))?;
+    let retriever = retriever_by_name(args.get_or("retriever", "g-retriever"))?;
+    let batch = args.usize_or("batch", 100);
+    let seed = args.usize_or("seed", 7) as u64;
+    let queries = ds.sample_test(batch, seed);
+
+    let cfg = ServeConfig {
+        backbone: args.get_or("backbone", "llama-3.2-3b-sim").to_string(),
+        n_clusters: args.usize_or("clusters", 2),
+        linkage: Linkage::parse(args.get_or("linkage", "ward"))
+            .ok_or_else(|| anyhow::anyhow!("bad --linkage"))?,
+        gnn: args.get("gnn").map(|s| s.to_string()),
+    };
+
+    let engine = Engine::start(&store)?;
+    let coord = Coordinator::new(&store, &engine, cfg.clone())?;
+
+    eprintln!(
+        "serving {} queries from {} via {} on {} ({} mode, c={})",
+        queries.len(),
+        ds.graph.name,
+        retriever.name(),
+        cfg.backbone,
+        if args.flag("baseline") { "baseline" } else { "subgcache" },
+        cfg.n_clusters,
+    );
+
+    let report = if args.flag("baseline") {
+        coord.serve_baseline(&ds, &queries, retriever.as_ref())?
+    } else {
+        coord.serve_subgcache(&ds, &queries, retriever.as_ref())?
+    };
+
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["ACC (%)".into(), format!("{:.2}", report.metrics.acc())]);
+    t.row(&["RT (ms)".into(), format!("{:.2}", report.metrics.rt_ms())]);
+    t.row(&["TTFT (ms)".into(), format!("{:.2}", report.metrics.ttft_ms())]);
+    t.row(&["PFTT (ms)".into(), format!("{:.2}", report.metrics.pftt_ms())]);
+    t.row(&["cluster stage (ms)".into(),
+            format!("{:.2}", report.metrics.cluster_time * 1e3)]);
+    if !report.cluster_sizes.is_empty() {
+        t.row(&["cluster sizes".into(), format!("{:?}", report.cluster_sizes)]);
+    }
+    t.print();
+
+    if args.flag("verbose") {
+        for r in report.results.iter().take(10) {
+            println!("[{}] q={:?} pred={:?} gold={:?} ok={}",
+                     r.id, r.query, r.predicted, r.gold, r.correct);
+        }
+        let st = engine.stats();
+        println!("engine: compile {:.2}s, live_kv {}", st.compile_secs, st.live_kv);
+        for (k, n, s) in st.calls {
+            println!("  {k}: {n} calls, {:.1} ms avg", s / n as f64 * 1e3);
+        }
+    }
+    let _ = retrieval::MAX_RETRIEVED_NODES; // re-export sanity
+    Ok(())
+}

@@ -1,0 +1,254 @@
+//! Serving metrics: the paper's four measures (ACC, RT, TTFT, PFTT) plus the
+//! cluster-processing-time breakdown of Fig. 4, with aggregation and table
+//! printing used by every table/figure harness.
+
+use std::time::{Duration, Instant};
+
+/// Per-query latency record. All fields in seconds.
+///
+/// * `rt`   — submit → full answer (paper: Response Time)
+/// * `ttft` — submit → first token (includes retrieval, prompt build, the
+///            query's *amortized share* of cluster-stage work, and PFTT)
+/// * `pftt` — prompt-ready → first token (prefill/extend + first logits;
+///            isolates the KV-reuse benefit, per App. A.3)
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QueryLatency {
+    pub rt: f64,
+    pub ttft: f64,
+    pub pftt: f64,
+    pub correct: bool,
+}
+
+/// Batch-level result for one (dataset, method, backbone) cell of a table.
+#[derive(Debug, Clone, Default)]
+pub struct BatchMetrics {
+    pub per_query: Vec<QueryLatency>,
+    /// one-time cluster stage (Fig. 4): GNN encoding + clustering +
+    /// representative construction, in seconds (0 for the baseline).
+    pub cluster_time: f64,
+    /// one-time representative prefill total (amortized into ttft/pftt).
+    pub shared_prefill_time: f64,
+    /// LLM-only time (Fig. 4's blue series).
+    pub llm_time: f64,
+}
+
+impl BatchMetrics {
+    pub fn acc(&self) -> f64 {
+        if self.per_query.is_empty() {
+            return 0.0;
+        }
+        100.0 * self.per_query.iter().filter(|q| q.correct).count() as f64
+            / self.per_query.len() as f64
+    }
+
+    fn mean(&self, f: impl Fn(&QueryLatency) -> f64) -> f64 {
+        if self.per_query.is_empty() {
+            return 0.0;
+        }
+        self.per_query.iter().map(f).sum::<f64>() / self.per_query.len() as f64
+    }
+
+    /// Mean per-query metrics in milliseconds (the units of Tables 2/4/6–8).
+    pub fn rt_ms(&self) -> f64 {
+        self.mean(|q| q.rt) * 1e3
+    }
+    pub fn ttft_ms(&self) -> f64 {
+        self.mean(|q| q.ttft) * 1e3
+    }
+    pub fn pftt_ms(&self) -> f64 {
+        self.mean(|q| q.pftt) * 1e3
+    }
+}
+
+/// Speedup row (the Δ lines in the paper's tables).
+#[derive(Debug, Clone, Copy)]
+pub struct Delta {
+    pub acc_points: f64,
+    pub rt_x: f64,
+    pub ttft_x: f64,
+    pub pftt_x: f64,
+}
+
+pub fn delta(base: &BatchMetrics, ours: &BatchMetrics) -> Delta {
+    let ratio = |b: f64, o: f64| if o > 0.0 { b / o } else { f64::NAN };
+    Delta {
+        acc_points: ours.acc() - base.acc(),
+        rt_x: ratio(base.rt_ms(), ours.rt_ms()),
+        ttft_x: ratio(base.ttft_ms(), ours.ttft_ms()),
+        pftt_x: ratio(base.pftt_ms(), ours.pftt_ms()),
+    }
+}
+
+/// Simple scoped wall-clock timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(Instant::now())
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn lap(&mut self) -> f64 {
+        let d = self.0.elapsed().as_secs_f64();
+        self.0 = Instant::now();
+        d
+    }
+}
+
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{:.1}ms", s * 1e3)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table printing
+// ---------------------------------------------------------------------------
+
+/// Fixed-width table printer for the paper-style outputs.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+/// Format the method row of a paper table.
+pub fn metric_cells(name: &str, m: &BatchMetrics) -> Vec<String> {
+    vec![
+        name.to_string(),
+        format!("{:.2}", m.acc()),
+        format!("{:.2}", m.rt_ms()),
+        format!("{:.2}", m.ttft_ms()),
+        format!("{:.2}", m.pftt_ms()),
+    ]
+}
+
+/// Format the Δ row of a paper table.
+pub fn delta_cells(name: &str, d: &Delta) -> Vec<String> {
+    let arrow = |x: f64| {
+        if x >= 0.0 {
+            format!("↑ {:.2}", x)
+        } else {
+            format!("↓ {:.2}", -x)
+        }
+    };
+    vec![
+        name.to_string(),
+        arrow(d.acc_points),
+        format!("↑ {:.2}x", d.rt_x),
+        format!("↑ {:.2}x", d.ttft_x),
+        format!("↑ {:.2}x", d.pftt_x),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bm(rts: &[(f64, bool)]) -> BatchMetrics {
+        BatchMetrics {
+            per_query: rts
+                .iter()
+                .map(|&(rt, ok)| QueryLatency { rt, ttft: rt * 0.9, pftt: rt * 0.5, correct: ok })
+                .collect(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn acc_and_means() {
+        let m = bm(&[(0.1, true), (0.3, false)]);
+        assert!((m.acc() - 50.0).abs() < 1e-9);
+        assert!((m.rt_ms() - 200.0).abs() < 1e-9);
+        assert!((m.ttft_ms() - 180.0).abs() < 1e-6);
+        assert!((m.pftt_ms() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = BatchMetrics::default();
+        assert_eq!(m.acc(), 0.0);
+        assert_eq!(m.rt_ms(), 0.0);
+    }
+
+    #[test]
+    fn delta_ratios() {
+        let base = bm(&[(1.0, true)]);
+        let ours = bm(&[(0.25, true)]);
+        let d = delta(&base, &ours);
+        assert!((d.rt_x - 4.0).abs() < 1e-9);
+        assert_eq!(d.acc_points, 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Model", "ACC"]);
+        t.row(&["base".to_string(), "62.00".to_string()]);
+        t.row(&["ours+long".to_string(), "64.00".to_string()]);
+        let s = t.to_string();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("Model"));
+        assert!(lines[2].contains("62.00"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["x".to_string()]);
+    }
+
+    #[test]
+    fn timer_monotone() {
+        let mut t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let a = t.lap();
+        assert!(a >= 0.002);
+        assert!(t.secs() < a);
+    }
+}

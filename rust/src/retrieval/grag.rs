@@ -1,0 +1,159 @@
+//! GRAG (Hu et al., 2024): retrieve top-k *subgraphs* directly by embedding
+//! k-hop ego networks, then prune irrelevant components.
+//!
+//! Per the paper's configuration (App. A.2): top-k = 3 subgraphs, keeping the
+//! top-10 entities within two hops. The ego-network embedding here is the
+//! mean of member node text embeddings — a textual proxy for the GNN soft
+//! prompt, which is sufficient for ranking (DESIGN.md §4).
+
+use std::collections::BTreeSet;
+
+use super::{top_k_desc, GraphFeatures, Retriever, MAX_RETRIEVED_NODES};
+use crate::embed::{cosine, embed_text, FEAT_DIM};
+use crate::graph::{Subgraph, TextualGraph};
+
+pub struct GragRetriever {
+    /// number of ego subgraphs retrieved (paper: 3).
+    pub top_k_subgraphs: usize,
+    /// entities kept per retrieval (paper: top-10 within 2 hops).
+    pub top_entities: usize,
+    /// ego-network radius (paper: 2).
+    pub hops: usize,
+}
+
+impl Default for GragRetriever {
+    fn default() -> Self {
+        GragRetriever { top_k_subgraphs: 3, top_entities: 10, hops: 2 }
+    }
+}
+
+impl GragRetriever {
+    fn ego_embedding(&self, feats: &GraphFeatures, members: &BTreeSet<usize>) -> Vec<f32> {
+        let mut v = vec![0f32; FEAT_DIM];
+        for &n in members {
+            for (i, x) in feats.node_emb[n].iter().enumerate() {
+                v[i] += x;
+            }
+        }
+        let k = members.len().max(1) as f32;
+        v.iter_mut().for_each(|x| *x /= k);
+        v
+    }
+}
+
+impl Retriever for GragRetriever {
+    fn name(&self) -> &'static str {
+        "grag"
+    }
+
+    fn retrieve(&self, g: &TextualGraph, feats: &GraphFeatures, query: &str) -> Subgraph {
+        let q_emb = embed_text(query);
+        let node_scores: Vec<f32> =
+            feats.node_emb.iter().map(|e| cosine(&q_emb, e)).collect();
+
+        // Candidate ego networks around the most similar seeds.
+        let seeds = top_k_desc(&node_scores, (2 * self.top_k_subgraphs).min(g.n_nodes()));
+        let mut egos: Vec<(f32, BTreeSet<usize>)> = seeds
+            .iter()
+            .map(|&s| {
+                let members = g.k_hop(s, self.hops);
+                let emb = self.ego_embedding(feats, &members);
+                (cosine(&q_emb, &emb), members)
+            })
+            .collect();
+        egos.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        egos.truncate(self.top_k_subgraphs);
+
+        // Union of retrieved egos, pruned to the top entities by similarity.
+        let mut union: BTreeSet<usize> = BTreeSet::new();
+        for (_, members) in &egos {
+            union.extend(members.iter().copied());
+        }
+        let mut ranked: Vec<usize> = union.into_iter().collect();
+        ranked.sort_by(|&a, &b| {
+            node_scores[b].partial_cmp(&node_scores[a]).unwrap().then(a.cmp(&b))
+        });
+        ranked.truncate(self.top_entities.min(MAX_RETRIEVED_NODES));
+
+        let mut sg = Subgraph::default();
+        sg.nodes.extend(ranked.iter().copied());
+        // keep every graph edge internal to the kept node set
+        for &n in &sg.nodes.clone() {
+            for &(ei, v, _) in g.incident(n) {
+                if sg.nodes.contains(&v) {
+                    sg.edges.insert(ei);
+                }
+            }
+        }
+        sg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Edge, Node};
+    use crate::retrieval::check_subgraph_valid;
+    use crate::util::prop::prop_check;
+
+    fn star_graph() -> TextualGraph {
+        // hub 0 with spokes 1..6; a disconnected pair 7-8
+        let mut nodes: Vec<Node> = (0..9)
+            .map(|i| Node { id: i, name: format!("e{i}"), text: format!("e{i} topic t{}", i % 3) })
+            .collect();
+        nodes[7].text = "paper about graph caching".into();
+        nodes[8].text = "paper about kv reuse".into();
+        let mut edges: Vec<Edge> = (1..7)
+            .map(|i| Edge { src: 0, dst: i, text: "links".into() })
+            .collect();
+        edges.push(Edge { src: 7, dst: 8, text: "cites".into() });
+        TextualGraph::new("star", nodes, edges).unwrap()
+    }
+
+    #[test]
+    fn retrieves_relevant_component() {
+        let g = star_graph();
+        let feats = GraphFeatures::build(&g);
+        let sg = GragRetriever::default().retrieve(&g, &feats, "graph caching kv reuse ?");
+        assert!(sg.nodes.contains(&7) && sg.nodes.contains(&8), "{:?}", sg.nodes);
+        assert!(check_subgraph_valid(&g, &sg));
+        // the 7-8 edge must be kept (both endpoints retained)
+        assert!(sg.edges.iter().any(|&e| g.edges[e].src == 7));
+    }
+
+    #[test]
+    fn respects_entity_budget() {
+        let g = star_graph();
+        let feats = GraphFeatures::build(&g);
+        let r = GragRetriever { top_k_subgraphs: 3, top_entities: 4, hops: 2 };
+        let sg = r.retrieve(&g, &feats, "e0 t0 ?");
+        assert!(sg.nodes.len() <= 4);
+        assert!(check_subgraph_valid(&g, &sg));
+    }
+
+    #[test]
+    fn valid_on_random_graphs_property() {
+        prop_check(40, |rng| {
+            let n = rng.range(2, 40);
+            let m = rng.range(1, 80);
+            let g = crate::graph::tests::random_graph(rng, n, m);
+            let feats = GraphFeatures::build(&g);
+            let r = GragRetriever {
+                top_k_subgraphs: rng.range(1, 5),
+                top_entities: rng.range(1, 15),
+                hops: rng.range(1, 4),
+            };
+            let sg = r.retrieve(&g, &feats, &format!("n{} ?", rng.below(n)));
+            assert!(check_subgraph_valid(&g, &sg));
+            assert!(!sg.nodes.is_empty());
+        });
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = star_graph();
+        let feats = GraphFeatures::build(&g);
+        let r = GragRetriever::default();
+        assert_eq!(r.retrieve(&g, &feats, "e3 ?"), r.retrieve(&g, &feats, "e3 ?"));
+    }
+}

@@ -1,0 +1,77 @@
+//! Graph retrieval: the two baseline front-ends the paper plugs SubGCache
+//! into — **G-Retriever** (PCST over similarity prizes) and **GRAG**
+//! (k-hop ego-network ranking). Both consume hash embeddings of node/edge
+//! attribute text (the SentenceBERT substitute, DESIGN.md §4).
+
+mod grag;
+mod gretriever;
+
+pub use grag::GragRetriever;
+pub use gretriever::GRetriever;
+
+use crate::embed::{embed_text, FEAT_DIM};
+use crate::graph::{Subgraph, TextualGraph};
+
+/// Hard cap on retrieved-subgraph node count (the GNN encoder's N_MAX).
+pub const MAX_RETRIEVED_NODES: usize = 64;
+
+/// Precomputed text embeddings for a graph (built once per dataset, reused
+/// across the whole batch — not on the per-query hot path).
+pub struct GraphFeatures {
+    pub node_emb: Vec<Vec<f32>>,
+    pub edge_emb: Vec<Vec<f32>>,
+}
+
+impl GraphFeatures {
+    pub fn build(g: &TextualGraph) -> GraphFeatures {
+        GraphFeatures {
+            node_emb: g.nodes.iter().map(|n| embed_text(&n.text)).collect(),
+            edge_emb: g.edges.iter().map(|e| embed_text(&e.text)).collect(),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        FEAT_DIM
+    }
+}
+
+/// A pluggable retriever (the paper's "graph-based RAG framework" axis).
+pub trait Retriever: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Retrieve the query-relevant subgraph. Must return at most
+    /// [`MAX_RETRIEVED_NODES`] nodes and only edges whose endpoints are in
+    /// the node set.
+    fn retrieve(&self, g: &TextualGraph, feats: &GraphFeatures, query: &str) -> Subgraph;
+}
+
+/// Rank indices by descending score (deterministic tie-break by index).
+pub(crate) fn top_k_desc(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+    idx.truncate(k);
+    idx
+}
+
+/// Shared invariant check used by tests and debug assertions.
+pub fn check_subgraph_valid(g: &TextualGraph, sg: &Subgraph) -> bool {
+    sg.nodes.len() <= MAX_RETRIEVED_NODES
+        && sg.nodes.iter().all(|&n| n < g.n_nodes())
+        && sg.edges.iter().all(|&e| {
+            e < g.n_edges()
+                && sg.nodes.contains(&g.edges[e].src)
+                && sg.nodes.contains(&g.edges[e].dst)
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_desc_orders_and_breaks_ties() {
+        let s = [0.1f32, 0.9, 0.9, 0.3];
+        assert_eq!(top_k_desc(&s, 3), vec![1, 2, 3]);
+        assert_eq!(top_k_desc(&s, 10).len(), 4);
+    }
+}

@@ -1,0 +1,489 @@
+//! PJRT execution engine.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so a dedicated
+//! engine thread owns the client, the lazily-compiled executables, the
+//! weight buffers and the resident KV caches; the rest of the system talks
+//! to it over channels. This mirrors the single-engine-loop design of
+//! production LLM servers (vLLM et al.) and makes the L3 side trivially
+//! thread-safe.
+//!
+//! KV caches never leave the engine: `prefill`/`extend` return opaque
+//! [`KvHandle`]s that later calls reference, so the coordinator moves tokens
+//! and logits only.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+
+use super::manifest::{EntrySpec, Manifest, ModuleSpec};
+
+/// Opaque reference to an engine-resident KV cache (k & v buffers).
+/// Deliberately not `Clone`: exactly one owner, released explicitly.
+#[derive(Debug, PartialEq, Eq, Hash)]
+pub struct KvHandle(pub(crate) u64);
+
+/// Per-entry execution counters (returned by [`Engine::stats`]).
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    /// (module.entry, calls, total seconds inside execute).
+    pub calls: Vec<(String, u64, f64)>,
+    pub live_kv: usize,
+    pub compile_secs: f64,
+}
+
+enum Req {
+    Prefill {
+        module: String,
+        tokens: Vec<i32>,
+        plen: i32,
+        reply: Sender<anyhow::Result<(u64, Vec<f32>)>>,
+    },
+    Extend {
+        module: String,
+        kv: u64,
+        plen: i32,
+        q_tokens: Vec<i32>,
+        reply: Sender<anyhow::Result<(u64, Vec<f32>)>>,
+    },
+    Generate {
+        module: String,
+        kv: u64,
+        cur_len: i32,
+        first_tok: i32,
+        reply: Sender<anyhow::Result<Vec<i32>>>,
+    },
+    Encode {
+        module: String,
+        x: Vec<f32>,
+        adj: Vec<f32>,
+        mask: Vec<f32>,
+        reply: Sender<anyhow::Result<Vec<f32>>>,
+    },
+    Release {
+        kv: u64,
+    },
+    Warmup {
+        module: String,
+        reply: Sender<anyhow::Result<()>>,
+    },
+    Stats {
+        reply: Sender<EngineStats>,
+    },
+    Shutdown,
+}
+
+/// Thread-safe handle to the engine thread.
+pub struct Engine {
+    tx: Mutex<Sender<Req>>,
+    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Engine {
+    /// Spawn the engine thread over an artifact directory.
+    pub fn start_at(root: PathBuf, manifest: Manifest) -> anyhow::Result<Engine> {
+        let (tx, rx) = channel::<Req>();
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+        let thread = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || engine_main(root, manifest, rx, ready_tx))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
+        Ok(Engine { tx: Mutex::new(tx), thread: Mutex::new(Some(thread)) })
+    }
+
+    fn send(&self, req: Req) {
+        self.tx.lock().unwrap().send(req).expect("engine thread gone");
+    }
+
+    fn roundtrip<T>(&self, make: impl FnOnce(Sender<T>) -> Req) -> T {
+        let (reply, rx) = channel();
+        self.send(make(reply));
+        rx.recv().expect("engine dropped reply")
+    }
+
+    /// Prefill `tokens` (padded to S) with real length `plen`; returns the
+    /// new KV handle and the next-token logits after position `plen - 1`.
+    pub fn prefill(&self, module: &str, tokens: &[i32], plen: i32)
+                   -> anyhow::Result<(KvHandle, Vec<f32>)> {
+        let (id, logits) = self.roundtrip(|reply| Req::Prefill {
+            module: module.into(), tokens: tokens.to_vec(), plen, reply,
+        })?;
+        Ok((KvHandle(id), logits))
+    }
+
+    /// Append `q_tokens` (padded to Q) at position `plen` on top of `kv`
+    /// (which is NOT consumed — it stays reusable, the SubGCache property).
+    /// Returns a new handle and the logits matrix `[Q, V]` flattened.
+    pub fn extend(&self, module: &str, kv: &KvHandle, plen: i32, q_tokens: &[i32])
+                  -> anyhow::Result<(KvHandle, Vec<f32>)> {
+        let (id, logits) = self.roundtrip(|reply| Req::Extend {
+            module: module.into(), kv: kv.0, plen, q_tokens: q_tokens.to_vec(), reply,
+        })?;
+        Ok((KvHandle(id), logits))
+    }
+
+    /// Greedy-decode up to G tokens starting from `first_tok` at `cur_len`.
+    /// `kv` is not consumed.
+    pub fn generate(&self, module: &str, kv: &KvHandle, cur_len: i32, first_tok: i32)
+                    -> anyhow::Result<Vec<i32>> {
+        self.roundtrip(|reply| Req::Generate {
+            module: module.into(), kv: kv.0, cur_len, first_tok, reply,
+        })
+    }
+
+    /// GNN subgraph embedding: x [N,F], adj [N,N], mask [N] (row-major flat).
+    pub fn encode(&self, module: &str, x: Vec<f32>, adj: Vec<f32>, mask: Vec<f32>)
+                  -> anyhow::Result<Vec<f32>> {
+        self.roundtrip(|reply| Req::Encode { module: module.into(), x, adj, mask, reply })
+    }
+
+    /// Return a KV cache to the engine.
+    pub fn release(&self, kv: KvHandle) {
+        self.send(Req::Release { kv: kv.0 });
+    }
+
+    /// Load weights + compile all entries of `module` ahead of timing runs.
+    pub fn warmup(&self, module: &str) -> anyhow::Result<()> {
+        self.roundtrip(|reply| Req::Warmup { module: module.into(), reply })
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.roundtrip(|reply| Req::Stats { reply })
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Req::Shutdown);
+        if let Some(t) = self.thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine thread internals
+// ---------------------------------------------------------------------------
+
+struct LoadedModule {
+    spec: ModuleSpec,
+    weights: Vec<xla::PjRtBuffer>,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// An engine-resident KV cache (k & v device buffers).
+struct KvEntry {
+    k: xla::PjRtBuffer,
+    v: xla::PjRtBuffer,
+}
+
+struct State {
+    root: PathBuf,
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    modules: HashMap<String, LoadedModule>,
+    kvs: HashMap<u64, KvEntry>,
+    next_id: u64,
+    counters: HashMap<String, (u64, f64)>,
+    compile_secs: f64,
+}
+
+fn xerr(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+fn engine_main(root: PathBuf, manifest: Manifest, rx: Receiver<Req>,
+               ready: Sender<anyhow::Result<()>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            let _ = ready.send(Err(xerr(e)));
+            return;
+        }
+    };
+    let mut st = State {
+        root,
+        manifest,
+        client,
+        modules: HashMap::new(),
+        kvs: HashMap::new(),
+        next_id: 1,
+        counters: HashMap::new(),
+        compile_secs: 0.0,
+    };
+    let _ = ready.send(Ok(()));
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Prefill { module, tokens, plen, reply } => {
+                let _ = reply.send(st.prefill(&module, &tokens, plen));
+            }
+            Req::Extend { module, kv, plen, q_tokens, reply } => {
+                let _ = reply.send(st.extend(&module, kv, plen, &q_tokens));
+            }
+            Req::Generate { module, kv, cur_len, first_tok, reply } => {
+                let _ = reply.send(st.generate(&module, kv, cur_len, first_tok));
+            }
+            Req::Encode { module, x, adj, mask, reply } => {
+                let _ = reply.send(st.encode(&module, &x, &adj, &mask));
+            }
+            Req::Release { kv } => {
+                st.kvs.remove(&kv);
+            }
+            Req::Warmup { module, reply } => {
+                let _ = reply.send(st.warmup(&module));
+            }
+            Req::Stats { reply } => {
+                let mut calls: Vec<(String, u64, f64)> = st
+                    .counters
+                    .iter()
+                    .map(|(k, &(n, s))| (k.clone(), n, s))
+                    .collect();
+                calls.sort_by(|a, b| a.0.cmp(&b.0));
+                let _ = reply.send(EngineStats {
+                    calls,
+                    live_kv: st.kvs.len(),
+                    compile_secs: st.compile_secs,
+                });
+            }
+            Req::Shutdown => break,
+        }
+    }
+}
+
+impl State {
+    fn ensure_module(&mut self, name: &str) -> anyhow::Result<()> {
+        if self.modules.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.module(name)?.clone();
+        // weights: npz -> device buffers, once. NOTE: read via Literal, not
+        // PjRtBuffer::read_npz_by_name — the crate's raw-bytes buffer path
+        // passes ElementType where a PrimitiveType code is expected and
+        // materializes F32 arrays as F16 (observed: embed buffer at half
+        // size). The literal path round-trips correctly.
+        let npz = self.root.join("weights").join(format!("{name}.npz"));
+        let keys: Vec<&str> = spec.params.iter().map(|p| p.key.as_str()).collect();
+        let lits = <xla::Literal as xla::FromRawBytes>::read_npz_by_name(&npz, &(), &keys)
+            .map_err(|e| anyhow::anyhow!("loading {}: {e}", npz.display()))?;
+        anyhow::ensure!(lits.len() == spec.params.len(), "weight count mismatch");
+        let mut weights = Vec::with_capacity(lits.len());
+        for (lit, p) in lits.iter().zip(&spec.params) {
+            let dims: Vec<usize> = xla::ArrayShape::try_from(&lit.shape().map_err(xerr)?)
+                .map(|s| s.dims().iter().map(|&d| d as usize).collect())
+                .unwrap_or_default();
+            anyhow::ensure!(dims == p.shape,
+                            "{name}.{}: npz shape {dims:?} != manifest {:?}",
+                            p.key, p.shape);
+            weights.push(self.buf_from_f32_literal(lit, &dims)?);
+        }
+        self.modules.insert(
+            name.to_string(),
+            LoadedModule { spec, weights, exes: HashMap::new() },
+        );
+        Ok(())
+    }
+
+    fn ensure_entry(&mut self, module: &str, entry: &str) -> anyhow::Result<()> {
+        self.ensure_module(module)?;
+        if self.modules[module].exes.contains_key(entry) {
+            return Ok(());
+        }
+        let spec = {
+            let m = &self.modules[module].spec;
+            m.entries
+                .get(entry)
+                .ok_or_else(|| anyhow::anyhow!("{module}: no entry {entry}"))?
+                .clone()
+        };
+        // arg order sanity: all args live and in flatten order.
+        for (i, &m) in spec.arg_map.iter().enumerate() {
+            anyhow::ensure!(m == i, "{module}.{entry}: non-identity arg_map at {i} -> {m}");
+        }
+        let path = self.root.join(&spec.hlo);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(xerr)?;
+        self.compile_secs += t0.elapsed().as_secs_f64();
+        self.modules.get_mut(module).unwrap().exes.insert(entry.to_string(), exe);
+        Ok(())
+    }
+
+    fn entry_spec(&self, module: &str, entry: &str) -> &EntrySpec {
+        &self.modules[module].spec.entries[entry]
+    }
+
+    fn warmup(&mut self, module: &str) -> anyhow::Result<()> {
+        self.ensure_module(module)?;
+        let entries: Vec<String> =
+            self.modules[module].spec.entries.keys().cloned().collect();
+        for e in entries {
+            self.ensure_entry(module, &e)?;
+        }
+        Ok(())
+    }
+
+    fn buf_i32(&self, data: &[i32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None).map_err(xerr)
+    }
+
+    /// Literal -> device buffer via the *synchronous* host-buffer path.
+    /// `buffer_from_host_literal` enqueues an async CopyFromLiteral that may
+    /// run after the literal (or even the buffer) is dropped — observed as
+    /// SIGSEGVs on the TFRT CPU client's worker threads. The host-buffer
+    /// path uses kImmutableOnlyDuringCall semantics (copy completes before
+    /// returning), so no lifetime coupling remains.
+    fn buf_from_f32_literal(&self, lit: &xla::Literal, dims: &[usize])
+                            -> anyhow::Result<xla::PjRtBuffer> {
+        let n: usize = dims.iter().product();
+        let mut host = vec![0f32; n];
+        lit.copy_raw_to(&mut host).map_err(xerr)?;
+        self.client.buffer_from_host_buffer(&host, dims, None).map_err(xerr)
+    }
+
+    fn buf_f32(&self, data: &[f32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None).map_err(xerr)
+    }
+
+    /// Execute `module.entry` with the module weights + `extras`, untuple the
+    /// result literals, record timing. KV extras are borrowed straight from
+    /// the handle map — no device copies on the hot path.
+    fn call(&mut self, module: &str, entry: &str, extras: Vec<Extra>)
+            -> anyhow::Result<Vec<xla::Literal>> {
+        self.ensure_entry(module, entry)?;
+        let (parts, dt) = {
+            let m = &self.modules[module];
+            let spec = &m.spec.entries[entry];
+            let n_out = spec.outputs;
+            let mut inputs: Vec<&xla::PjRtBuffer> = m.weights.iter().collect();
+            for e in &extras {
+                match e {
+                    Extra::Own(b) => inputs.push(b),
+                    Extra::Kv(id) => {
+                        let e = self
+                            .kvs
+                            .get(id)
+                            .ok_or_else(|| anyhow::anyhow!("unknown/released KV handle {id}"))?;
+                        inputs.push(&e.k);
+                        inputs.push(&e.v);
+                    }
+                }
+            }
+            anyhow::ensure!(
+                inputs.len() == m.weights.len() + spec.extra_args.len(),
+                "{module}.{entry}: got {} inputs, want {}",
+                inputs.len(), m.weights.len() + spec.extra_args.len()
+            );
+            let t0 = std::time::Instant::now();
+            let exe = &m.exes[entry];
+            if std::env::var("SUBGCACHE_TRACE").is_ok() {
+                eprintln!("[engine] exec {module}.{entry} with {} inputs", inputs.len());
+            }
+            let mut out = exe.execute_b(&inputs).map_err(xerr)?;
+            if std::env::var("SUBGCACHE_TRACE").is_ok() {
+                eprintln!("[engine] exec done");
+            }
+            anyhow::ensure!(!out.is_empty() && !out[0].is_empty(), "empty execute output");
+            let lit = out.remove(0).remove(0).to_literal_sync().map_err(xerr)?;
+            let parts = if n_out == 1 {
+                vec![lit.to_tuple1().map_err(xerr)?]
+            } else {
+                lit.to_tuple().map_err(xerr)?
+            };
+            anyhow::ensure!(parts.len() == n_out, "{module}.{entry}: {} outputs, want {n_out}",
+                            parts.len());
+            (parts, t0.elapsed().as_secs_f64())
+        };
+        let c = self.counters.entry(format!("{module}.{entry}")).or_insert((0, 0.0));
+        c.0 += 1;
+        c.1 += dt;
+        Ok(parts)
+    }
+
+    fn store_kv(&mut self, module: &str, k: xla::Literal, v: xla::Literal)
+                -> anyhow::Result<u64> {
+        let dims = self.manifest.module(module)?.dims
+            .ok_or_else(|| anyhow::anyhow!("{module}: not an llm module"))?;
+        let shape = [dims.n_layers, dims.max_seq, dims.n_heads, dims.d_head];
+        let kb = self.buf_from_f32_literal(&k, &shape)?;
+        let vb = self.buf_from_f32_literal(&v, &shape)?;
+        let id = self.next_id;
+        self.next_id += 1;
+        self.kvs.insert(id, KvEntry { k: kb, v: vb });
+        Ok(id)
+    }
+
+    fn prefill(&mut self, module: &str, tokens: &[i32], plen: i32)
+               -> anyhow::Result<(u64, Vec<f32>)> {
+        self.ensure_entry(module, "prefill")?;
+        let s = self.entry_spec(module, "prefill").extra_args[0].shape[0];
+        anyhow::ensure!(tokens.len() == s, "prefill: {} tokens, want {s}", tokens.len());
+        let extras = vec![
+            Extra::Own(self.buf_i32(tokens, &[s])?),
+            Extra::Own(self.buf_i32(&[plen], &[])?),
+        ];
+        let mut parts = self.call(module, "prefill", extras)?;
+        let logits = parts[2].to_vec::<f32>().map_err(xerr)?;
+        let v = parts.swap_remove(1);
+        let k = parts.swap_remove(0);
+        let id = self.store_kv(module, k, v)?;
+        Ok((id, logits))
+    }
+
+    fn extend(&mut self, module: &str, kv: u64, plen: i32, q_tokens: &[i32])
+              -> anyhow::Result<(u64, Vec<f32>)> {
+        self.ensure_entry(module, "extend")?;
+        let q = self.entry_spec(module, "extend").extra_args[3].shape[0];
+        anyhow::ensure!(q_tokens.len() == q, "extend: {} tokens, want {q}", q_tokens.len());
+        let extras = vec![
+            Extra::Kv(kv),
+            Extra::Own(self.buf_i32(&[plen], &[])?),
+            Extra::Own(self.buf_i32(q_tokens, &[q])?),
+        ];
+        let mut parts = self.call(module, "extend", extras)?;
+        let logits = parts[2].to_vec::<f32>().map_err(xerr)?;
+        let v = parts.swap_remove(1);
+        let k = parts.swap_remove(0);
+        let id = self.store_kv(module, k, v)?;
+        Ok((id, logits))
+    }
+
+    fn generate(&mut self, module: &str, kv: u64, cur_len: i32, first_tok: i32)
+                -> anyhow::Result<Vec<i32>> {
+        self.ensure_entry(module, "generate")?;
+        let extras = vec![
+            Extra::Kv(kv),
+            Extra::Own(self.buf_i32(&[cur_len], &[])?),
+            Extra::Own(self.buf_i32(&[first_tok], &[])?),
+        ];
+        let parts = self.call(module, "generate", extras)?;
+        parts[0].to_vec::<i32>().map_err(xerr)
+    }
+
+    fn encode(&mut self, module: &str, x: &[f32], adj: &[f32], mask: &[f32])
+              -> anyhow::Result<Vec<f32>> {
+        self.ensure_entry(module, "encode")?;
+        let spec = self.entry_spec(module, "encode");
+        let (n, f) = (spec.extra_args[0].shape[0], spec.extra_args[0].shape[1]);
+        anyhow::ensure!(x.len() == n * f && adj.len() == n * n && mask.len() == n,
+                        "encode: bad input sizes");
+        let extras = vec![
+            Extra::Own(self.buf_f32(x, &[n, f])?),
+            Extra::Own(self.buf_f32(adj, &[n, n])?),
+            Extra::Own(self.buf_f32(mask, &[n])?),
+        ];
+        let parts = self.call(module, "encode", extras)?;
+        parts[0].to_vec::<f32>().map_err(xerr)
+    }
+}
+
+/// An entry-point argument: an owned host-built buffer, or a KV handle
+/// expanding to its (k, v) buffer pair borrowed from the engine map.
+enum Extra {
+    Own(xla::PjRtBuffer),
+    Kv(u64),
+}

@@ -1,0 +1,97 @@
+//! Packing retrieved subgraphs into the GNN encoder's fixed-shape inputs
+//! (x [N_MAX, F], adj [N_MAX, N_MAX], mask [N_MAX]) — the request-path
+//! counterpart of `python/compile/gnn.py`'s contract.
+
+use crate::graph::{Subgraph, TextualGraph};
+use crate::retrieval::GraphFeatures;
+
+/// Dense GNN inputs for one subgraph (row-major flattened).
+pub struct PackedSubgraph {
+    pub x: Vec<f32>,
+    pub adj: Vec<f32>,
+    pub mask: Vec<f32>,
+    pub n_used: usize,
+}
+
+/// Pack `sg` into fixed [n_max, feat_dim] tensors. Nodes are laid out in
+/// ascending id order; subgraphs larger than `n_max` are truncated (the
+/// retrievers already cap at `MAX_RETRIEVED_NODES`, asserted upstream).
+pub fn pack_subgraph(g: &TextualGraph, feats: &GraphFeatures, sg: &Subgraph,
+                     n_max: usize, feat_dim: usize) -> PackedSubgraph {
+    let ids: Vec<usize> = sg.nodes.iter().copied().take(n_max).collect();
+    let mut local = std::collections::HashMap::with_capacity(ids.len());
+    for (i, &id) in ids.iter().enumerate() {
+        local.insert(id, i);
+    }
+    let mut x = vec![0f32; n_max * feat_dim];
+    let mut mask = vec![0f32; n_max];
+    for (i, &id) in ids.iter().enumerate() {
+        x[i * feat_dim..(i + 1) * feat_dim].copy_from_slice(&feats.node_emb[id]);
+        mask[i] = 1.0;
+    }
+    let mut adj = vec![0f32; n_max * n_max];
+    for &ei in &sg.edges {
+        let e = &g.edges[ei];
+        if let (Some(&a), Some(&b)) = (local.get(&e.src), local.get(&e.dst)) {
+            adj[a * n_max + b] = 1.0;
+            adj[b * n_max + a] = 1.0;
+        }
+    }
+    PackedSubgraph { x, adj, mask, n_used: ids.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Edge, Node};
+
+    fn g() -> TextualGraph {
+        TextualGraph::new(
+            "t",
+            vec![
+                Node { id: 0, name: "a".into(), text: "a red".into() },
+                Node { id: 1, name: "b".into(), text: "b blue".into() },
+                Node { id: 2, name: "c".into(), text: "c".into() },
+            ],
+            vec![
+                Edge { src: 0, dst: 1, text: "r".into() },
+                Edge { src: 1, dst: 2, text: "r".into() },
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn packs_features_and_adjacency() {
+        let g = g();
+        let feats = GraphFeatures::build(&g);
+        let sg = Subgraph::from_parts([0, 1], [0]);
+        let p = pack_subgraph(&g, &feats, &sg, 4, 64);
+        assert_eq!(p.n_used, 2);
+        assert_eq!(p.mask, vec![1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(&p.x[..64], feats.node_emb[0].as_slice());
+        assert_eq!(p.adj[0 * 4 + 1], 1.0);
+        assert_eq!(p.adj[1 * 4 + 0], 1.0);
+        assert_eq!(p.adj[0 * 4 + 0], 0.0);
+    }
+
+    #[test]
+    fn drops_edges_with_missing_endpoints() {
+        let g = g();
+        let feats = GraphFeatures::build(&g);
+        // edge 1 connects node 1-2 but node 2 is not in the subgraph
+        let sg = Subgraph::from_parts([0, 1], [0, 1]);
+        let p = pack_subgraph(&g, &feats, &sg, 4, 64);
+        assert_eq!(p.adj.iter().filter(|&&v| v != 0.0).count(), 2);
+    }
+
+    #[test]
+    fn truncates_over_capacity() {
+        let g = g();
+        let feats = GraphFeatures::build(&g);
+        let sg = Subgraph::from_parts([0, 1, 2], [0, 1]);
+        let p = pack_subgraph(&g, &feats, &sg, 2, 64);
+        assert_eq!(p.n_used, 2);
+        assert_eq!(p.mask, vec![1.0, 1.0]);
+    }
+}

@@ -1,0 +1,272 @@
+//! `artifacts/manifest.json` — the contract between the Python compile path
+//! and this runtime: module/entry inventory, flattened parameter order,
+//! argument specs and the shape constants.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::{parse_file, Json};
+
+/// Shape/id constants shared across the stack (config.py is the source).
+#[derive(Debug, Clone, Copy)]
+pub struct Constants {
+    pub max_seq: usize,
+    pub max_q: usize,
+    pub max_gen: usize,
+    pub max_prefix: usize,
+    pub vocab: usize,
+    pub feat_dim: usize,
+    pub n_max: usize,
+    pub gnn_emb: usize,
+    pub pad_id: i32,
+    pub bos_id: i32,
+    pub eos_id: i32,
+    pub unk_id: i32,
+}
+
+/// One flattened parameter (npz key + shape, in HLO argument order).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub key: String,
+    pub path: String,
+    pub shape: Vec<usize>,
+}
+
+/// One runtime-supplied argument of an entry point.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub dtype: String, // "f32" | "i32"
+    pub shape: Vec<usize>,
+}
+
+/// One AOT entry point of a module.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub hlo: String,
+    pub extra_args: Vec<ArgSpec>,
+    pub outputs: usize,
+    /// HLO parameter position -> flattened argument index (identity when all
+    /// arguments are live; asserted complete at build time).
+    pub arg_map: Vec<usize>,
+}
+
+/// LLM geometry (absent for GNN modules).
+#[derive(Debug, Clone, Copy)]
+pub struct LlmDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+}
+
+impl LlmDims {
+    /// Bytes of one KV side ([L, S, H, D] f32).
+    pub fn kv_bytes_each(&self) -> usize {
+        self.n_layers * self.max_seq * self.n_heads * self.d_head * 4
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModuleSpec {
+    pub name: String,
+    pub kind: String, // "llm" | "gnn"
+    pub params: Vec<ParamSpec>,
+    pub entries: BTreeMap<String, EntrySpec>,
+    pub dims: Option<LlmDims>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub constants: Constants,
+    pub modules: BTreeMap<String, ModuleSpec>,
+}
+
+fn usz(v: &Json, key: &str) -> anyhow::Result<usize> {
+    v.get(key).as_usize().ok_or_else(|| anyhow::anyhow!("manifest: missing {key}"))
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> anyhow::Result<Manifest> {
+        Self::from_json(&parse_file(path)?)
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Manifest> {
+        let c = v.get("constants");
+        let constants = Constants {
+            max_seq: usz(c, "max_seq")?,
+            max_q: usz(c, "max_q")?,
+            max_gen: usz(c, "max_gen")?,
+            max_prefix: usz(c, "max_prefix")?,
+            vocab: usz(c, "vocab")?,
+            feat_dim: usz(c, "feat_dim")?,
+            n_max: usz(c, "n_max")?,
+            gnn_emb: usz(c, "gnn_emb")?,
+            pad_id: usz(c, "pad_id")? as i32,
+            bos_id: usz(c, "bos_id")? as i32,
+            eos_id: usz(c, "eos_id")? as i32,
+            unk_id: usz(c, "unk_id")? as i32,
+        };
+        let mut modules = BTreeMap::new();
+        let mods = v
+            .get("modules")
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("manifest: missing modules"))?;
+        for (name, m) in mods {
+            let params = m
+                .get("params")
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("module {name}: missing params"))?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        key: p.get("key").as_str().unwrap_or_default().to_string(),
+                        path: p.get("path").as_str().unwrap_or_default().to_string(),
+                        shape: p
+                            .get("shape")
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(Json::as_usize)
+                            .collect(),
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let mut entries = BTreeMap::new();
+            for (ename, e) in m
+                .get("entries")
+                .as_obj()
+                .ok_or_else(|| anyhow::anyhow!("module {name}: missing entries"))?
+            {
+                let extra_args = e
+                    .get("extra_args")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|a| ArgSpec {
+                        name: a.idx(0).as_str().unwrap_or_default().to_string(),
+                        dtype: a.idx(1).as_str().unwrap_or_default().to_string(),
+                        shape: a.idx(2).as_arr().unwrap_or(&[]).iter()
+                            .filter_map(Json::as_usize).collect(),
+                    })
+                    .collect::<Vec<_>>();
+                let arg_map: Vec<usize> = e
+                    .get("arg_map")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect();
+                anyhow::ensure!(
+                    arg_map.len() == params.len() + extra_args.len(),
+                    "module {name}.{ename}: arg_map len {} != params {} + extras {}",
+                    arg_map.len(), params.len(), extra_args.len()
+                );
+                entries.insert(
+                    ename.clone(),
+                    EntrySpec {
+                        hlo: e.get("hlo").as_str().unwrap_or_default().to_string(),
+                        extra_args,
+                        outputs: usz(e, "outputs")?,
+                        arg_map,
+                    },
+                );
+            }
+            let dims = if m.get("kind").as_str() == Some("llm") {
+                let d = m.get("dims");
+                Some(LlmDims {
+                    vocab: usz(d, "vocab")?,
+                    d_model: usz(d, "d_model")?,
+                    n_layers: usz(d, "n_layers")?,
+                    n_heads: usz(d, "n_heads")?,
+                    d_head: usz(d, "d_head")?,
+                    d_ff: usz(d, "d_ff")?,
+                    max_seq: usz(d, "max_seq")?,
+                })
+            } else {
+                None
+            };
+            modules.insert(
+                name.clone(),
+                ModuleSpec {
+                    name: name.clone(),
+                    kind: m.get("kind").as_str().unwrap_or_default().to_string(),
+                    params,
+                    entries,
+                    dims,
+                },
+            );
+        }
+        Ok(Manifest { constants, modules })
+    }
+
+    pub fn module(&self, name: &str) -> anyhow::Result<&ModuleSpec> {
+        self.modules
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown module '{name}' (have: {:?})",
+                                           self.modules.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn llm_names(&self) -> Vec<&str> {
+        self.modules.values().filter(|m| m.kind == "llm").map(|m| m.name.as_str()).collect()
+    }
+
+    pub fn gnn_names(&self) -> Vec<&str> {
+        self.modules.values().filter(|m| m.kind == "gnn").map(|m| m.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn mini_manifest() -> Json {
+        parse(
+            r#"{"constants":{"max_seq":768,"max_q":32,"max_gen":32,"max_prefix":704,
+                 "vocab":704,"feat_dim":64,"n_max":64,"gnn_emb":64,
+                 "pad_id":0,"bos_id":1,"eos_id":2,"unk_id":3},
+                "modules":{"m":{"kind":"llm",
+                  "params":[{"key":"p000","path":"e","shape":[704,96],"dtype":"float32"}],
+                  "dims":{"vocab":704,"d_model":96,"n_layers":3,"n_heads":3,
+                          "d_head":32,"d_ff":192,"max_seq":768},
+                  "entries":{"prefill":{"hlo":"hlo/m.prefill.hlo.txt",
+                    "extra_args":[["tokens","i32",[768]],["plen","i32",[]]],
+                    "outputs":3,"arg_map":[0,1,2]}}}}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::from_json(&mini_manifest()).unwrap();
+        assert_eq!(m.constants.max_seq, 768);
+        assert_eq!(m.constants.eos_id, 2);
+        let ms = m.module("m").unwrap();
+        assert_eq!(ms.params.len(), 1);
+        let e = &ms.entries["prefill"];
+        assert_eq!(e.extra_args.len(), 2);
+        assert_eq!(e.extra_args[0].shape, vec![768]);
+        assert_eq!(e.outputs, 3);
+        let d = ms.dims.unwrap();
+        assert_eq!(d.kv_bytes_each(), 3 * 768 * 3 * 32 * 4);
+    }
+
+    #[test]
+    fn rejects_inconsistent_arg_map() {
+        let mut txt = mini_manifest().to_string();
+        txt = txt.replace("[0,1,2]", "[0,1]");
+        assert!(Manifest::from_json(&parse(&txt).unwrap()).is_err());
+    }
+
+    #[test]
+    fn unknown_module_is_error() {
+        let m = Manifest::from_json(&mini_manifest()).unwrap();
+        assert!(m.module("nope").is_err());
+        assert_eq!(m.llm_names(), vec!["m"]);
+        assert!(m.gnn_names().is_empty());
+    }
+}

@@ -1,0 +1,93 @@
+//! Runtime layer: the artifact store (datasets, vocab, manifest, HLO,
+//! weights produced once by `make artifacts`) and the PJRT [`Engine`] that
+//! loads and executes the AOT-compiled HLO on the request path. Python never
+//! runs here.
+
+mod engine;
+mod gnn;
+mod manifest;
+
+pub use engine::{Engine, EngineStats, KvHandle};
+pub use gnn::{pack_subgraph, PackedSubgraph};
+pub use manifest::{ArgSpec, Constants, EntrySpec, LlmDims, Manifest, ModuleSpec, ParamSpec};
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::data::Dataset;
+use crate::tokenizer::Tokenizer;
+
+struct Inner {
+    root: PathBuf,
+    manifest: Manifest,
+    tokenizer: Tokenizer,
+}
+
+/// Read-only view over the `artifacts/` directory. Cheap to clone.
+#[derive(Clone)]
+pub struct ArtifactStore(Arc<Inner>);
+
+impl ArtifactStore {
+    pub fn open<P: AsRef<Path>>(root: P) -> anyhow::Result<ArtifactStore> {
+        let root = root.as_ref().to_path_buf();
+        anyhow::ensure!(
+            root.join("manifest.json").exists(),
+            "{} has no manifest.json — run `make artifacts` first",
+            root.display()
+        );
+        let manifest = Manifest::load(&root.join("manifest.json"))?;
+        let tokenizer = Tokenizer::load(&root.join("vocab.json"))?;
+        anyhow::ensure!(
+            tokenizer.padded_size() == manifest.constants.vocab,
+            "vocab.json ({} -> padded {}) disagrees with manifest vocab {}",
+            tokenizer.len(), tokenizer.padded_size(), manifest.constants.vocab
+        );
+        Ok(ArtifactStore(Arc::new(Inner { root, manifest, tokenizer })))
+    }
+
+    /// Locate the artifacts dir next to the current dir or its parents
+    /// (lets examples run from anywhere inside the repo).
+    pub fn discover() -> anyhow::Result<ArtifactStore> {
+        let mut dir = std::env::current_dir()?;
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return Self::open(cand);
+            }
+            if !dir.pop() {
+                anyhow::bail!("no artifacts/ directory found — run `make artifacts`");
+            }
+        }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.0.root
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.0.manifest
+    }
+
+    pub fn constants(&self) -> &Constants {
+        &self.0.manifest.constants
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.0.tokenizer
+    }
+
+    pub fn dataset(&self, name: &str) -> anyhow::Result<Dataset> {
+        Dataset::load(&self.0.root.join("data").join(format!("{name}.json")))
+    }
+
+    pub fn golden(&self, name: &str) -> anyhow::Result<crate::util::json::Json> {
+        crate::util::json::parse_file(&self.0.root.join("golden").join(name))
+    }
+}
+
+impl Engine {
+    /// Spawn the engine thread for an artifact store.
+    pub fn start(store: &ArtifactStore) -> anyhow::Result<Engine> {
+        Engine::start_at(store.root().to_path_buf(), store.manifest().clone())
+    }
+}

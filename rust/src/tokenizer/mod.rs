@@ -1,0 +1,181 @@
+//! Word-level tokenizer — byte-for-byte mirror of `python/compile/tokenizer.py`.
+//!
+//! Rule: lowercase, then emit maximal runs of `[a-z0-9_]` and every other
+//! non-whitespace char as its own token. Cross-language equality is pinned
+//! by `artifacts/golden/tokenizer.json` (see `tests/golden.rs`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::util::json::{parse_file, Json};
+
+pub const PAD_ID: i32 = 0;
+pub const BOS_ID: i32 = 1;
+pub const EOS_ID: i32 = 2;
+pub const UNK_ID: i32 = 3;
+
+/// Split text into word tokens (the canonical rule above).
+pub fn split_text(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut word = String::new();
+    for c in text.chars().flat_map(|c| c.to_lowercase()) {
+        if c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' {
+            word.push(c);
+        } else {
+            if !word.is_empty() {
+                out.push(std::mem::take(&mut word));
+            }
+            if !c.is_whitespace() {
+                out.push(c.to_string());
+            }
+        }
+    }
+    if !word.is_empty() {
+        out.push(word);
+    }
+    out
+}
+
+/// Vocabulary-backed tokenizer loaded from `artifacts/vocab.json`.
+pub struct Tokenizer {
+    vocab: HashMap<String, i32>,
+    inv: Vec<String>,
+}
+
+impl Tokenizer {
+    pub fn from_vocab(vocab: HashMap<String, i32>) -> anyhow::Result<Self> {
+        for (sp, id) in [("<pad>", PAD_ID), ("<bos>", BOS_ID), ("<eos>", EOS_ID), ("<unk>", UNK_ID)] {
+            anyhow::ensure!(vocab.get(sp) == Some(&id), "special {sp} must map to {id}");
+        }
+        let n = vocab.len();
+        let mut inv = vec![String::new(); n];
+        for (tok, &id) in &vocab {
+            anyhow::ensure!((id as usize) < n, "non-contiguous vocab id {id}");
+            inv[id as usize] = tok.clone();
+        }
+        Ok(Tokenizer { vocab, inv })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let v = parse_file(path)?;
+        let obj = v.as_obj().ok_or_else(|| anyhow::anyhow!("vocab.json: not an object"))?;
+        let mut vocab = HashMap::with_capacity(obj.len());
+        for (k, id) in obj {
+            let id = id.as_i64().ok_or_else(|| anyhow::anyhow!("bad id for {k}"))? as i32;
+            vocab.insert(k.clone(), id);
+        }
+        Self::from_vocab(vocab)
+    }
+
+    pub fn len(&self) -> usize {
+        self.vocab.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vocab.is_empty()
+    }
+
+    /// Vocab size rounded up to a multiple of 64 (matches the lm head).
+    pub fn padded_size(&self) -> usize {
+        (self.vocab.len() + 63) / 64 * 64
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        split_text(text)
+            .iter()
+            .map(|t| *self.vocab.get(t).unwrap_or(&UNK_ID))
+            .collect()
+    }
+
+    /// Append-encode into an existing buffer (hot-path, no realloc churn).
+    pub fn encode_into(&self, text: &str, out: &mut Vec<i32>) {
+        for t in split_text(text) {
+            out.push(*self.vocab.get(&t).unwrap_or(&UNK_ID));
+        }
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut words: Vec<&str> = Vec::new();
+        for &i in ids {
+            if i == EOS_ID {
+                break;
+            }
+            if i == PAD_ID || i == BOS_ID {
+                continue;
+            }
+            words.push(self.inv.get(i as usize).map(|s| s.as_str()).unwrap_or("<unk>"));
+        }
+        words.join(" ")
+    }
+
+    pub fn token(&self, id: i32) -> Option<&str> {
+        self.inv.get(id as usize).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        let words = ["<pad>", "<bos>", "<eos>", "<unk>", "?", "blue", "color",
+                     "cords", "is", "of", "the", "what"];
+        let vocab: HashMap<String, i32> =
+            words.iter().enumerate().map(|(i, w)| (w.to_string(), i as i32)).collect();
+        Tokenizer::from_vocab(vocab).unwrap()
+    }
+
+    #[test]
+    fn split_matches_python_rule() {
+        assert_eq!(split_text("What is the COLOR, of x_1?"),
+                   vec!["what", "is", "the", "color", ",", "of", "x_1", "?"]);
+        assert_eq!(split_text(""), Vec::<String>::new());
+        assert_eq!(split_text(" \t\n "), Vec::<String>::new());
+        assert_eq!(split_text("a-b.c"), vec!["a", "-", "b", ".", "c"]);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let t = tok();
+        let ids = t.encode("what is the color of the cords ?");
+        assert!(!ids.contains(&UNK_ID));
+        assert_eq!(t.decode(&ids), "what is the color of the cords ?");
+    }
+
+    #[test]
+    fn unknown_words_unk() {
+        assert_eq!(tok().encode("zebra"), vec![UNK_ID]);
+    }
+
+    #[test]
+    fn decode_stops_at_eos_skips_specials() {
+        let t = tok();
+        let mut ids = vec![BOS_ID];
+        ids.extend(t.encode("blue cords"));
+        ids.push(EOS_ID);
+        ids.extend(t.encode("what"));
+        assert_eq!(t.decode(&ids), "blue cords");
+    }
+
+    #[test]
+    fn rejects_bad_specials() {
+        let mut vocab = HashMap::new();
+        vocab.insert("<pad>".to_string(), 1);
+        assert!(Tokenizer::from_vocab(vocab).is_err());
+    }
+
+    #[test]
+    fn padded_size_multiple_of_64() {
+        let t = tok();
+        assert_eq!(t.padded_size() % 64, 0);
+        assert!(t.padded_size() >= t.len());
+    }
+
+    #[test]
+    fn encode_into_appends() {
+        let t = tok();
+        let mut buf = vec![BOS_ID];
+        t.encode_into("what is", &mut buf);
+        assert_eq!(buf, vec![BOS_ID, 11, 8]);
+    }
+}

@@ -1,0 +1,155 @@
+//! Statistical micro-benchmark harness (criterion is not installable
+//! offline). Used by `rust/benches/*` with `harness = false`.
+//!
+//! Methodology: warmup runs, then timed iterations until both a minimum
+//! iteration count and a minimum wall budget are met; reports mean, median,
+//! p95 and standard deviation. Deliberately simple but honest — the paper
+//! comparisons in EXPERIMENTS.md cite median values.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} median {:>12}  mean {:>12}  p95 {:>12}  (n={})",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark runner with a per-case time budget.
+pub struct Bench {
+    pub warmup: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget: Duration,
+    results: Vec<Stats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: 2,
+            min_iters: 5,
+            max_iters: 200,
+            budget: Duration::from_secs(3),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup: 1, min_iters: 3, max_iters: 50, budget: Duration::from_millis(800),
+                results: Vec::new() }
+    }
+
+    /// Time `f`, which should perform one complete operation per call.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while samples_ns.len() < self.min_iters
+            || (start.elapsed() < self.budget && samples_ns.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            f();
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        let stats = summarize(name, &mut samples_ns);
+        println!("{stats}");
+        self.results.push(stats.clone());
+        stats
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+}
+
+fn summarize(name: &str, samples_ns: &mut [f64]) -> Stats {
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples_ns.len();
+    let mean = samples_ns.iter().sum::<f64>() / n as f64;
+    let median = if n % 2 == 1 {
+        samples_ns[n / 2]
+    } else {
+        (samples_ns[n / 2 - 1] + samples_ns[n / 2]) / 2.0
+    };
+    let p95 = samples_ns[((n as f64 * 0.95) as usize).min(n - 1)];
+    let var = samples_ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    Stats {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        median_ns: median,
+        p95_ns: p95,
+        stddev_ns: var.sqrt(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_stats() {
+        let mut b = Bench { warmup: 1, min_iters: 5, max_iters: 10,
+                            budget: Duration::from_millis(50), results: vec![] };
+        let s = b.run("noop-ish", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(s.iters >= 5);
+        assert!(s.median_ns > 0.0);
+        assert!(s.p95_ns >= s.median_ns);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn summarize_median_even_odd() {
+        let mut xs = vec![3.0, 1.0, 2.0];
+        let s = summarize("t", &mut xs);
+        assert_eq!(s.median_ns, 2.0);
+        let mut ys = vec![4.0, 1.0, 2.0, 3.0];
+        let s = summarize("t", &mut ys);
+        assert_eq!(s.median_ns, 2.5);
+    }
+}

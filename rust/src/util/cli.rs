@@ -1,0 +1,108 @@
+//! Tiny CLI argument parser (clap is not installable offline).
+//!
+//! Supports `--flag`, `--key value`, and `--key=value`; everything else is a
+//! positional. Each binary declares its options by querying this by name.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) or `std::env::args` (binaries).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.opts.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).map(|v| v.parse().expect("bad integer option")).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).map(|v| v.parse().expect("bad float option")).unwrap_or(default)
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, name: &str, default: &str) -> Vec<String> {
+        self.get_or(name, default).split(',').map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        // note the grammar: a bare `--name` followed by a non-`--` token
+        // consumes that token as its value, so flags go last or use `=`.
+        let a = args("--n 5 --mode=fast pos1 pos2 --verbose");
+        assert_eq!(a.get("n"), Some("5"));
+        assert_eq!(a.get("mode"), Some("fast"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn flag_before_positional_binds_as_value() {
+        let a = args("--verbose pos");
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.get("verbose"), Some("pos"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = args("--count 12 --ratio 0.5 --names a,b,c");
+        assert_eq!(a.usize_or("count", 0), 12);
+        assert_eq!(a.f64_or("ratio", 1.0), 0.5);
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.list_or("names", ""), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = args("--x 1 --dry-run");
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get("x"), Some("1"));
+    }
+}

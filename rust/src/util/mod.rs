@@ -1,0 +1,10 @@
+//! Environment substrates: JSON, RNG, CLI parsing, property testing and a
+//! statistical bench harness. The offline image only ships the xla crate's
+//! vendor set, so these stand in for serde/rand/clap/proptest/criterion
+//! (DESIGN.md §4).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,54 @@
+//! Property-testing harness (proptest is not installable offline).
+//!
+//! Deterministic seeded case generation with failure reporting that prints
+//! the reproducing seed. No shrinking — cases are kept small by construction.
+//!
+//! ```ignore
+//! prop_check(200, |rng| {
+//!     let xs = rng.sample_indices(50, rng.below(50));
+//!     // ... assert invariant ...
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `cases` generated checks. The closure receives a per-case RNG; panics
+/// are caught and re-raised with the case seed for reproduction.
+pub fn prop_check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: u64, f: F) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        prop_check(50, |rng| {
+            let n = rng.range(1, 100);
+            assert!(rng.below(n) < n);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed on case")]
+    fn reports_failing_case_with_seed() {
+        prop_check(50, |rng| {
+            assert!(rng.below(10) < 9, "hit the 1-in-10 failure");
+        });
+    }
+}

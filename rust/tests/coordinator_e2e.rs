@@ -1,0 +1,154 @@
+//! Coordinator end-to-end tests over real artifacts: the full SubGCache
+//! pipeline vs the baseline on small in-batch workloads.
+
+use subgcache::cluster::Linkage;
+use subgcache::coordinator::{Coordinator, ServeConfig};
+use subgcache::prelude::*;
+use subgcache::runtime::{ArtifactStore, Engine};
+
+fn store() -> ArtifactStore {
+    ArtifactStore::open(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("run `make artifacts` first")
+}
+
+fn with_engine<T>(f: impl FnOnce(&ArtifactStore, &Engine) -> T) -> T {
+    let s = store();
+    let e = Engine::start(&s).expect("engine start");
+    f(&s, &e)
+}
+
+#[test]
+fn subgcache_answers_match_baseline_with_singleton_clusters() {
+    // c = m degenerates SubGCache to per-query prompts built from the query's
+    // own retrieved subgraph — answers must match the baseline exactly
+    // (greedy decoding; same tokens reach the model either way).
+    with_engine(|store, engine| {
+        let ds = store.dataset("scene_graph").unwrap();
+        let queries = ds.sample_test(6, 3);
+        let cfg = ServeConfig { n_clusters: queries.len(), ..Default::default() };
+        let coord = Coordinator::new(store, engine, cfg).unwrap();
+        let r = GRetriever::default();
+        let base = coord.serve_baseline(&ds, &queries, &r).unwrap();
+        let ours = coord.serve_subgcache(&ds, &queries, &r).unwrap();
+        assert_eq!(ours.cluster_sizes.len(), queries.len());
+        for (b, o) in base.results.iter().zip(&ours.results) {
+            assert_eq!(b.id, o.id);
+            assert_eq!(b.predicted, o.predicted,
+                       "q{}: baseline {:?} vs singleton-subgcache {:?}",
+                       b.id, b.predicted, o.predicted);
+        }
+    })
+}
+
+#[test]
+fn pipeline_reports_are_complete_and_consistent() {
+    with_engine(|store, engine| {
+        let ds = store.dataset("oag").unwrap();
+        let queries = ds.sample_test(10, 5);
+        let coord = Coordinator::new(store, engine, ServeConfig::default()).unwrap();
+        let rep = coord.serve_subgcache(&ds, &queries, &GragRetriever::default()).unwrap();
+
+        assert_eq!(rep.results.len(), queries.len());
+        assert_eq!(rep.metrics.per_query.len(), queries.len());
+        // results are in submit order
+        for (r, q) in rep.results.iter().zip(&queries) {
+            assert_eq!(r.id, q.id);
+            assert_eq!(r.gold, q.answer);
+        }
+        // cluster bookkeeping
+        assert_eq!(rep.cluster_sizes.iter().sum::<usize>(), queries.len());
+        assert_eq!(rep.cluster_sizes.len(), rep.representative_sizes.len());
+        assert!(rep.cluster_sizes.len() <= 2);
+        // every member's retrieved subgraph ⊆ its representative
+        for r in &rep.results {
+            let (rn, re) = rep.representative_sizes[r.cluster];
+            let (qn, qe) = r.retrieved.len();
+            assert!(qn <= rn && qe <= re, "representative smaller than member");
+        }
+        // cache: one prefill + one release per cluster, one hit per query
+        assert_eq!(rep.cache.prefills as usize, rep.cluster_sizes.len());
+        assert_eq!(rep.cache.released as usize, rep.cluster_sizes.len());
+        assert_eq!(rep.cache.hits as usize, queries.len());
+        assert_eq!(rep.cache.resident_bytes, 0, "cache must be drained");
+        // latency sanity
+        for q in &rep.metrics.per_query {
+            assert!(q.pftt > 0.0 && q.ttft >= q.pftt && q.rt >= q.ttft);
+        }
+    })
+}
+
+#[test]
+fn subgcache_cuts_pftt_vs_baseline() {
+    // The headline claim at small scale: shared-prefix extend is much
+    // cheaper than per-query full prefill.
+    with_engine(|store, engine| {
+        let ds = store.dataset("scene_graph").unwrap();
+        let queries = ds.sample_test(8, 11);
+        let cfg = ServeConfig { n_clusters: 1, ..Default::default() };
+        let coord = Coordinator::new(store, engine, cfg).unwrap();
+        let r = GRetriever::default();
+        let base = coord.serve_baseline(&ds, &queries, &r).unwrap();
+        let ours = coord.serve_subgcache(&ds, &queries, &r).unwrap();
+        assert!(
+            ours.metrics.pftt_ms() < base.metrics.pftt_ms(),
+            "PFTT should drop: baseline {:.1} ms vs subgcache {:.1} ms",
+            base.metrics.pftt_ms(), ours.metrics.pftt_ms()
+        );
+    })
+}
+
+#[test]
+fn no_kv_leaks_after_serving() {
+    with_engine(|store, engine| {
+        let ds = store.dataset("scene_graph").unwrap();
+        let queries = ds.sample_test(5, 17);
+        let coord = Coordinator::new(store, engine, ServeConfig::default()).unwrap();
+        let r = GRetriever::default();
+        let live_before = engine.stats().live_kv;
+        coord.serve_baseline(&ds, &queries, &r).unwrap();
+        coord.serve_subgcache(&ds, &queries, &r).unwrap();
+        assert_eq!(engine.stats().live_kv, live_before, "leaked KV handles");
+    })
+}
+
+#[test]
+fn works_across_all_backbones() {
+    with_engine(|store, engine| {
+        let ds = store.dataset("scene_graph").unwrap();
+        let queries = ds.sample_test(3, 23);
+        for backbone in store.manifest().llm_names() {
+            let cfg = ServeConfig { backbone: backbone.to_string(), n_clusters: 1,
+                                    ..Default::default() };
+            let coord = Coordinator::new(store, engine, cfg).unwrap();
+            let rep = coord.serve_subgcache(&ds, &queries, &GRetriever::default()).unwrap();
+            assert_eq!(rep.results.len(), 3, "{backbone}");
+            for r in &rep.results {
+                assert!(!r.predicted.is_empty() || r.gold.is_empty(),
+                        "{backbone}: empty generation for {:?}", r.query);
+            }
+        }
+    })
+}
+
+#[test]
+fn linkage_strategies_all_serve() {
+    with_engine(|store, engine| {
+        let ds = store.dataset("oag").unwrap();
+        let queries = ds.sample_test(6, 29);
+        for linkage in Linkage::ALL {
+            let cfg = ServeConfig { n_clusters: 3, linkage, ..Default::default() };
+            let coord = Coordinator::new(store, engine, cfg).unwrap();
+            let rep = coord.serve_subgcache(&ds, &queries, &GragRetriever::default()).unwrap();
+            assert_eq!(rep.cluster_sizes.len(), 3, "{linkage:?}");
+            assert_eq!(rep.results.len(), 6);
+        }
+    })
+}
+
+#[test]
+fn rejects_unknown_backbone() {
+    with_engine(|store, engine| {
+        let cfg = ServeConfig { backbone: "gpt-5".into(), ..Default::default() };
+        assert!(Coordinator::new(store, engine, cfg).is_err());
+    })
+}

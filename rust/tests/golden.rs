@@ -1,0 +1,113 @@
+//! Cross-language golden tests: the Rust tokenizer / embedder / verbalizer
+//! must reproduce the Python compile path byte-for-byte (the prompts the LM
+//! was trained on ARE the serving prompts). Goldens are emitted by
+//! `python -m compile.aot` into `artifacts/golden/`.
+
+use subgcache::embed::embed_text;
+use subgcache::graph::{prefix_text, full_prompt, Subgraph};
+use subgcache::runtime::ArtifactStore;
+use subgcache::util::json::Json;
+
+fn store() -> ArtifactStore {
+    ArtifactStore::open(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("run `make artifacts` first")
+}
+
+#[test]
+fn tokenizer_matches_python() {
+    let store = store();
+    let tok = store.tokenizer();
+    let cases = store.golden("tokenizer.json").unwrap();
+    let cases = cases.as_arr().unwrap();
+    assert!(cases.len() >= 4);
+    for case in cases {
+        let text = case.get("text").as_str().unwrap();
+        let want: Vec<i32> = case.get("ids").as_arr().unwrap()
+            .iter().map(|v| v.as_i64().unwrap() as i32).collect();
+        assert_eq!(tok.encode(text), want, "tokenizer mismatch on {text:?}");
+    }
+}
+
+#[test]
+fn embedder_matches_python() {
+    let store = store();
+    let cases = store.golden("embed.json").unwrap();
+    for case in cases.as_arr().unwrap() {
+        let text = case.get("text").as_str().unwrap();
+        let want: Vec<f32> = case.get("vec").as_arr().unwrap()
+            .iter().map(|v| v.as_f64().unwrap() as f32).collect();
+        let got = embed_text(text);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 1e-6, "embed mismatch on {text:?} dim {i}: {g} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn verbalizer_matches_python() {
+    let store = store();
+    let ds = store.dataset("scene_graph").unwrap();
+    let cases = store.golden("verbalize.json").unwrap();
+    for case in cases.as_arr().unwrap() {
+        let nodes: Vec<usize> = case.get("nodes").as_arr().unwrap()
+            .iter().map(|v| v.as_usize().unwrap()).collect();
+        let edges: Vec<usize> = case.get("edges").as_arr().unwrap()
+            .iter().map(|v| v.as_usize().unwrap()).collect();
+        let sg = Subgraph::from_parts(nodes, edges);
+        assert_eq!(prefix_text(&ds.graph, &sg, None),
+                   case.get("prefix").as_str().unwrap());
+        assert_eq!(prefix_text(&ds.graph, &sg, Some(24)),
+                   case.get("prefix_capped").as_str().unwrap());
+        let q = case.get("query").as_str().unwrap();
+        assert_eq!(full_prompt(&ds.graph, &sg, q, None),
+                   case.get("prompt").as_str().unwrap());
+    }
+}
+
+#[test]
+fn datasets_match_table1() {
+    let store = store();
+    let scene = store.dataset("scene_graph").unwrap();
+    assert_eq!((scene.graph.n_nodes(), scene.graph.n_edges(), scene.queries.len()),
+               (22, 147, 426));
+    let oag = store.dataset("oag").unwrap();
+    assert_eq!((oag.graph.n_nodes(), oag.graph.n_edges(), oag.queries.len()),
+               (1071, 2022, 3434));
+}
+
+#[test]
+fn dataset_vocab_fully_covered() {
+    // Serving must never hit <unk> on dataset content (answers would be
+    // ungeneratable) — mirrors python tests/test_train_aot.py.
+    let store = store();
+    let tok = store.tokenizer();
+    for name in ["scene_graph", "oag"] {
+        let ds = store.dataset(name).unwrap();
+        for n in &ds.graph.nodes {
+            assert!(!tok.encode(&n.text).contains(&subgcache::tokenizer::UNK_ID),
+                    "{name}: unk in node {:?}", n.text);
+        }
+        for q in ds.queries.iter().take(200) {
+            assert!(!tok.encode(&q.text).contains(&subgcache::tokenizer::UNK_ID));
+            assert!(!tok.encode(&q.answer).contains(&subgcache::tokenizer::UNK_ID));
+        }
+    }
+}
+
+#[test]
+fn manifest_covers_all_modules() {
+    let store = store();
+    let m = store.manifest();
+    assert_eq!(m.llm_names().len(), 4, "expected 4 simulated backbones");
+    assert_eq!(m.gnn_names().len(), 2, "expected graph_transformer + gat");
+    for name in m.llm_names() {
+        let ms = m.module(name).unwrap();
+        for entry in ["prefill", "extend", "generate"] {
+            let e = ms.entries.get(entry).expect(entry);
+            assert!(store.root().join(&e.hlo).exists(), "missing {}", e.hlo);
+        }
+        assert!(store.root().join("weights").join(format!("{name}.npz")).exists());
+    }
+    let _ = Json::Null; // keep util::json linked into this test crate
+}
