@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     for dataset in ["scene_graph", "oag"] {
         println!("\n-- dataset: {dataset} --");
         let mut t = Table::new(&["c", "cluster stage (ms)", "LLM time (ms)",
-                                 "stage share (%)"]);
+                                 "stage share (%)", "kept to drain", "evictions"]);
         for &c in &cs {
             let mut cell = Cell::new(dataset, "g-retriever", backbone, batch);
             cell.n_clusters = c;
@@ -35,11 +35,17 @@ fn main() -> anyhow::Result<()> {
             let m = &r.subgcache.metrics;
             let stage_ms = m.cluster_time * 1e3;
             let llm_ms = m.llm_time * 1e3;
+            let cache = r.subgcache.cache;
             t.row(&[
                 c.to_string(),
                 format!("{stage_ms:.1}"),
                 format!("{llm_ms:.1}"),
                 format!("{:.2}", 100.0 * stage_ms / (stage_ms + llm_ms)),
+                // representatives the budget never evicted — they survived
+                // until the end-of-batch drain (nothing stays resident
+                // across calls; the cache is per-batch).
+                format!("{}", cache.prefills - cache.evictions),
+                cache.evictions.to_string(),
             ]);
         }
         t.print();

@@ -1,7 +1,10 @@
 //! Table 4: effect of in-batch query size (50/100/150/200) on both datasets
-//! with the Llama-3.2-3B-sim backbone.
+//! with the Llama-3.2-3B-sim backbone. `--cache-entries` bounds how many
+//! representative KV caches stay resident (LRU beyond that); the cache
+//! summary line under each block shows the resulting hit/eviction picture.
 
-use subgcache::harness::{push_block, run_cell, Cell, METRIC_HEADER};
+use subgcache::harness::{cache_policy_from_args, cache_summary, push_block, run_cell,
+                         Cell, METRIC_HEADER};
 use subgcache::metrics::Table;
 use subgcache::prelude::*;
 
@@ -13,6 +16,7 @@ fn main() -> anyhow::Result<()> {
     };
     let engine = Engine::start(&store)?;
     let backbone = args.get_or("backbone", "llama-3.2-3b-sim");
+    let cache = cache_policy_from_args(&args)?;
     let batches: Vec<usize> = args
         .list_or("batches", "50,100,150,200")
         .iter()
@@ -24,13 +28,19 @@ fn main() -> anyhow::Result<()> {
         for dataset in ["scene_graph", "oag"] {
             println!("\n-- {batch} in-batch queries | dataset: {dataset} --");
             let mut t = Table::new(&METRIC_HEADER);
+            let mut summaries = Vec::new();
             for retriever in ["g-retriever", "grag"] {
-                let cell = Cell::new(dataset, retriever, backbone, batch);
+                let mut cell = Cell::new(dataset, retriever, backbone, batch);
+                cell.cache = cache;
                 let r = run_cell(&store, &engine, &cell)?;
                 let label = if retriever == "g-retriever" { "G-Retriever" } else { "GRAG" };
                 push_block(&mut t, label, &r);
+                summaries.push(format!("{label}: {}", cache_summary(&r.subgcache)));
             }
             t.print();
+            for s in summaries {
+                println!("  {s}");
+            }
         }
     }
     println!("\nnote: test splits hold 200 queries; batches beyond 200 resample.");

@@ -1,29 +1,50 @@
-//! L3 coordinator — the paper's system contribution (§3).
+//! L3 coordinator — the paper's system contribution (§3), organized as a
+//! session-based serving core across three files:
 //!
-//! Two serving paths over the same engine and retrievers:
+//! * [`session`] — a [`session::ServeSession`] owns the per-query machinery
+//!   shared by every serving path: tokenization, prompt construction,
+//!   decode, and raw latency splits.
+//! * [`pipeline`] — the two in-batch paths. [`Coordinator::serve_baseline`]
+//!   is standard graph-based RAG (every query pays a full prefill over its
+//!   own retrieved-subgraph prompt); [`Coordinator::serve_subgcache`] is the
+//!   SubGCache pipeline (GNN subgraph embeddings → hierarchical clustering →
+//!   representative subgraph per cluster → prefill once → per-query `extend`
+//!   + decode), now running over the byte-budgeted multi-resident
+//!   [`crate::cache::KvCacheManager`] so several representatives stay warm
+//!   when the budget allows.
+//! * [`online`] — [`Coordinator::serve_online`], the streaming deployment
+//!   the paper's §3 sketches: queries arrive one at a time, are matched to
+//!   the nearest existing cluster centroid (or open a new cluster), and
+//!   reuse a still-resident representative KV cache when one is warm.
 //!
-//! * [`Coordinator::serve_baseline`] — standard graph-based RAG: every query
-//!   pays a full prefill over its own retrieved-subgraph prompt.
-//! * [`Coordinator::serve_subgcache`] — the SubGCache pipeline: GNN subgraph
-//!   embeddings → hierarchical clustering → representative subgraph per
-//!   cluster → prefill once → per-query `extend` + decode against the shared
-//!   KV cache, released cluster-by-cluster.
+//! # Latency accounting
 //!
-//! Latency accounting (App. A.3, documented in EXPERIMENTS.md): one-time
+//! **In-batch** (App. A.3, documented in EXPERIMENTS.md): one-time
 //! cluster-stage work (GNN encoding, clustering, representative merge) is
 //! amortized equally across the batch into TTFT; the one-time representative
 //! prefill is amortized across its cluster's members into both TTFT and
 //! PFTT. With c = m (singleton clusters) the pipeline degenerates to the
-//! baseline, which `tests/consistency.rs` checks end-to-end.
+//! baseline, which `tests/coordinator_e2e.rs` checks end-to-end.
+//!
+//! **Online**: nothing is amortized — each query pays, in wall-clock order,
+//! its own retrieval, GNN encoding + centroid assignment, and prompt build.
+//! A **hit** (warm representative resident) pays only the question `extend`
+//! in PFTT; a **miss** (new cluster, or representative evicted under the
+//! byte budget) additionally pays the full representative prefill in PFTT.
+//! The hit/miss split is recorded per query
+//! ([`crate::metrics::QueryLatency::cache_hit`]) and surfaces as
+//! `ttft_hit_ms` / `ttft_miss_ms` on [`crate::metrics::BatchMetrics`].
 
-use crate::cache::{CacheStats, KvCacheManager};
-use crate::cluster::{cluster, groups, Linkage};
-use crate::data::{answer_correct, Dataset, Query};
-use crate::graph::{full_prompt, prefix_text, question_text, Subgraph, TextualGraph};
-use crate::metrics::{BatchMetrics, QueryLatency, Timer};
-use crate::retrieval::{GraphFeatures, Retriever};
-use crate::runtime::{pack_subgraph, ArtifactStore, Engine, KvHandle};
-use crate::tokenizer::Tokenizer;
+mod online;
+mod pipeline;
+mod session;
+
+use crate::cache::{CachePolicy, CacheStats};
+use crate::cluster::Linkage;
+use crate::graph::Subgraph;
+use crate::metrics::BatchMetrics;
+use crate::retrieval::Retriever;
+use crate::runtime::{ArtifactStore, Engine};
 
 /// Serving configuration (one table cell = one config).
 #[derive(Debug, Clone)]
@@ -35,6 +56,12 @@ pub struct ServeConfig {
     /// GNN encoder module; `None` derives it from the retriever
     /// (G-Retriever → graph_transformer, GRAG → GAT, per App. A.2).
     pub gnn: Option<String>,
+    /// Byte/entry budget for resident representative KV caches.
+    pub cache: CachePolicy,
+    /// Online path only: squared-Euclidean distance bound for joining an
+    /// existing cluster centroid; farther queries open a new cluster.
+    /// Negative means "never join" (every query becomes its own cluster).
+    pub online_threshold: f32,
 }
 
 impl Default for ServeConfig {
@@ -44,6 +71,8 @@ impl Default for ServeConfig {
             n_clusters: 2,
             linkage: Linkage::Ward,
             gnn: None,
+            cache: CachePolicy::default(),
+            online_threshold: 0.5,
         }
     }
 }
@@ -61,7 +90,7 @@ pub struct QueryResult {
     pub retrieved: Subgraph,
 }
 
-/// Full result of serving one in-batch workload.
+/// Full result of serving one workload (batch or stream).
 #[derive(Debug, Clone, Default)]
 pub struct ServeReport {
     pub metrics: BatchMetrics,
@@ -79,29 +108,47 @@ impl ServeReport {
 }
 
 /// Greedy next-token choice over a logits row.
+///
+/// Total order made explicit: the highest non-NaN value wins and ties break
+/// to the lowest index; NaN entries are skipped entirely. An empty or
+/// all-NaN slice returns 0 (a safe pad/BOS id) instead of panicking — a
+/// degenerate logits row must fail one answer, not the process.
 pub fn argmax(logits: &[f32]) -> i32 {
-    let mut best = 0usize;
+    let mut best: Option<(usize, f32)> = None;
     for (i, &v) in logits.iter().enumerate() {
-        if v > logits[best] {
-            best = i;
+        if v.is_nan() {
+            continue;
+        }
+        match best {
+            Some((_, bv)) if v <= bv => {}
+            _ => best = Some((i, v)),
         }
     }
-    best as i32
+    best.map_or(0, |(i, _)| i as i32)
 }
 
-/// The serving coordinator. Owns prompt construction and the two pipelines;
+/// The serving coordinator. Owns configuration and the serving pipelines;
 /// borrows the engine so several coordinators (backbones) can share it.
 pub struct Coordinator<'e> {
-    store: ArtifactStore,
-    engine: &'e Engine,
-    cfg: ServeConfig,
+    pub(crate) store: ArtifactStore,
+    pub(crate) engine: &'e Engine,
+    pub(crate) cfg: ServeConfig,
 }
 
 impl<'e> Coordinator<'e> {
     pub fn new(store: &ArtifactStore, engine: &'e Engine, cfg: ServeConfig)
                -> anyhow::Result<Self> {
-        store.manifest().module(&cfg.backbone)?; // fail fast on bad config
+        // fail fast on bad config: the backbone must exist AND carry LLM KV
+        // geometry — otherwise the byte budget would silently size every
+        // cache entry at 0 and measure nothing.
+        let module = store.manifest().module(&cfg.backbone)?;
+        anyhow::ensure!(
+            module.dims.is_some(),
+            "backbone '{}' has no LLM KV geometry (kind: {})",
+            cfg.backbone, module.kind
+        );
         anyhow::ensure!(cfg.n_clusters >= 1, "n_clusters must be >= 1");
+        anyhow::ensure!(cfg.cache.max_entries >= 1, "cache must admit >= 1 entry");
         Ok(Coordinator { store: store.clone(), engine, cfg })
     }
 
@@ -109,237 +156,23 @@ impl<'e> Coordinator<'e> {
         &self.cfg
     }
 
-    fn tok(&self) -> &Tokenizer {
-        self.store.tokenizer()
+    pub(crate) fn session(&self) -> session::ServeSession<'_> {
+        session::ServeSession::new(&self.store, self.engine, &self.cfg.backbone)
     }
 
-    fn gnn_module(&self, retriever: &dyn Retriever) -> String {
+    pub(crate) fn gnn_module(&self, retriever: &dyn Retriever) -> String {
         self.cfg.gnn.clone().unwrap_or_else(|| {
             if retriever.name() == "grag" { "gat".into() } else { "graph_transformer".into() }
         })
     }
 
-    // -- prompt construction -------------------------------------------------
-
-    /// Prefix tokens: [BOS] + verbalized subgraph, padded to S.
-    fn prefix_tokens(&self, g: &TextualGraph, sg: &Subgraph) -> (Vec<i32>, usize) {
-        let c = self.store.constants();
-        let text = prefix_text(g, sg, Some(c.max_prefix));
-        let mut ids = Vec::with_capacity(c.max_seq);
-        ids.push(c.bos_id);
-        self.tok().encode_into(&text, &mut ids);
-        ids.truncate(c.max_seq - c.max_q - c.max_gen);
-        let plen = ids.len();
-        ids.resize(c.max_seq, c.pad_id);
-        (ids, plen)
-    }
-
-    /// Full baseline prompt tokens: [BOS] + prefix + question, padded to S.
-    fn full_tokens(&self, g: &TextualGraph, sg: &Subgraph, qtext: &str)
-                   -> (Vec<i32>, usize) {
-        let c = self.store.constants();
-        let text = full_prompt(g, sg, qtext, Some(c.max_prefix));
-        let mut ids = Vec::with_capacity(c.max_seq);
-        ids.push(c.bos_id);
-        self.tok().encode_into(&text, &mut ids);
-        ids.truncate(c.max_seq - c.max_gen);
-        let plen = ids.len();
-        ids.resize(c.max_seq, c.pad_id);
-        (ids, plen)
-    }
-
-    /// Question tokens padded to Q.
-    fn question_tokens(&self, qtext: &str) -> (Vec<i32>, usize) {
-        let c = self.store.constants();
-        let mut ids = Vec::with_capacity(c.max_q);
-        self.tok().encode_into(&question_text(qtext), &mut ids);
-        ids.truncate(c.max_q);
-        let qlen = ids.len();
-        ids.resize(c.max_q, c.pad_id);
-        (ids, qlen)
-    }
-
-    fn decode_answer(&self, first: i32, gen: &[i32]) -> String {
-        debug_assert!(gen.first().copied() == Some(first));
-        self.tok().decode(gen)
-    }
-
-    // -- baseline pipeline ---------------------------------------------------
-
-    /// Standard graph-based RAG: retrieve → verbalize → full prefill → decode,
-    /// independently per query (Fig. 1a).
-    pub fn serve_baseline(&self, ds: &Dataset, queries: &[&Query],
-                          retriever: &dyn Retriever) -> anyhow::Result<ServeReport> {
-        self.engine.warmup(&self.cfg.backbone)?;
-        let feats = GraphFeatures::build(&ds.graph);
-        let mut report = ServeReport::default();
-        let mut llm_time = 0.0;
-
-        for q in queries {
-            let t_all = Timer::start();
-            let sg = retriever.retrieve(&ds.graph, &feats, &q.text);
-            let (tokens, plen) = self.full_tokens(&ds.graph, &sg, &q.text);
-            let t_prompt_ready = t_all.secs();
-
-            let (kv, logits) = self.engine.prefill(&self.cfg.backbone, &tokens, plen as i32)?;
-            let first = argmax(&logits);
-            let ttft = t_all.secs();
-            let pftt = ttft - t_prompt_ready;
-
-            let gen = self.engine.generate(&self.cfg.backbone, &kv, plen as i32, first)?;
-            self.engine.release(kv);
-            let rt = t_all.secs();
-            llm_time += rt - t_prompt_ready;
-
-            let predicted = self.decode_answer(first, &gen);
-            let correct = answer_correct(&predicted, &q.answer);
-            report.metrics.per_query.push(QueryLatency { rt, ttft, pftt, correct });
-            report.results.push(QueryResult {
-                id: q.id,
-                query: q.text.clone(),
-                predicted,
-                gold: q.answer.clone(),
-                correct,
-                cluster: usize::MAX,
-                retrieved: sg,
-            });
-        }
-        report.metrics.llm_time = llm_time;
-        Ok(report)
-    }
-
-    // -- SubGCache pipeline ---------------------------------------------------
-
-    /// The in-batch SubGCache pipeline (Fig. 1b / §3).
-    pub fn serve_subgcache(&self, ds: &Dataset, queries: &[&Query],
-                           retriever: &dyn Retriever) -> anyhow::Result<ServeReport> {
-        let m = queries.len();
-        if m == 0 {
-            return Ok(ServeReport::default());
-        }
-        self.engine.warmup(&self.cfg.backbone)?;
-        let gnn = self.gnn_module(retriever);
-        self.engine.warmup(&gnn)?;
-        let c = *self.store.constants();
-        let feats = GraphFeatures::build(&ds.graph);
-
-        // 1) per-query retrieval (charged individually, as in the baseline).
-        let mut retrieval_secs = Vec::with_capacity(m);
-        let mut subgraphs = Vec::with_capacity(m);
-        for q in queries {
-            let t = Timer::start();
-            subgraphs.push(retriever.retrieve(&ds.graph, &feats, &q.text));
-            retrieval_secs.push(t.secs());
-        }
-
-        // 2) cluster stage (Fig. 4's red series): GNN encoding + hierarchical
-        //    clustering + representative construction. One-time, amortized.
-        let t_cluster = Timer::start();
-        let mut embs = Vec::with_capacity(m);
-        for sg in &subgraphs {
-            let p = pack_subgraph(&ds.graph, &feats, sg, c.n_max, c.feat_dim);
-            embs.push(self.engine.encode(&gnn, p.x, p.adj, p.mask)?);
-        }
-        let assignment = cluster(&embs, self.cfg.n_clusters, self.cfg.linkage);
-        let clusters = groups(&assignment);
-        let representatives: Vec<Subgraph> = clusters
-            .iter()
-            .map(|members| {
-                let parts: Vec<&Subgraph> = members.iter().map(|&i| &subgraphs[i]).collect();
-                Subgraph::representative(&parts)
-            })
-            .collect();
-        let cluster_secs = t_cluster.secs();
-        let cluster_share = cluster_secs / m as f64;
-
-        // 3) cluster-wise serving with subgraph-level KV cache reuse.
-        let mut cache: KvCacheManager<KvHandle> = KvCacheManager::new();
-        let mut report = ServeReport::default();
-        report.cluster_sizes = clusters.iter().map(|c| c.len()).collect();
-        report.representative_sizes = representatives.iter().map(|r| r.len()).collect();
-        report.metrics.cluster_time = cluster_secs;
-        report.results = Vec::with_capacity(m);
-        let mut llm_time = 0.0;
-        let mut shared_prefill_total = 0.0;
-        let mut slots: Vec<Option<(QueryLatency, QueryResult)>> = (0..m).map(|_| None).collect();
-
-        for (cid, members) in clusters.iter().enumerate() {
-            // prefill the representative-subgraph prompt once per cluster.
-            let t_prefill = Timer::start();
-            let (tokens, plen) = self.prefix_tokens(&ds.graph, &representatives[cid]);
-            let (kv, _logits) = self.engine.prefill(&self.cfg.backbone, &tokens, plen as i32)?;
-            let prefill_secs = t_prefill.secs();
-            shared_prefill_total += prefill_secs;
-            let prefill_share = prefill_secs / members.len() as f64;
-            if let Some(evicted) = cache.install(cid, kv, 2 * self.kv_bytes()) {
-                self.engine.release(evicted);
-            }
-
-            for &qi in members {
-                let q = queries[qi];
-                let t_q = Timer::start();
-                let (q_tokens, qlen) = self.question_tokens(&q.text);
-                let t_prompt = t_q.secs();
-
-                let kv_cluster = cache
-                    .lookup(cid)
-                    .ok_or_else(|| anyhow::anyhow!("cluster cache missing"))?;
-                let (kv_q, logits) =
-                    self.engine.extend(&self.cfg.backbone, kv_cluster, plen as i32, &q_tokens)?;
-                let row = &logits[(qlen - 1) * c.vocab..qlen * c.vocab];
-                let first = argmax(row);
-                let t_first = t_q.secs();
-
-                let gen = self.engine.generate(&self.cfg.backbone, &kv_q,
-                                               (plen + qlen) as i32, first)?;
-                self.engine.release(kv_q);
-                let t_done = t_q.secs();
-                llm_time += t_done - t_prompt;
-
-                let pftt = (t_first - t_prompt) + prefill_share;
-                let ttft = retrieval_secs[qi] + cluster_share + t_prompt + pftt;
-                let rt = ttft + (t_done - t_first);
-
-                let predicted = self.decode_answer(first, &gen);
-                let correct = answer_correct(&predicted, &q.answer);
-                slots[qi] = Some((
-                    QueryLatency { rt, ttft, pftt, correct },
-                    QueryResult {
-                        id: q.id,
-                        query: q.text.clone(),
-                        predicted,
-                        gold: q.answer.clone(),
-                        correct,
-                        cluster: cid,
-                        retrieved: subgraphs[qi].clone(),
-                    },
-                ));
-            }
-            // release before moving to the next cluster (§3.4).
-            if let Some(h) = cache.release() {
-                self.engine.release(h);
-            }
-        }
-
-        for s in slots.into_iter() {
-            let (lat, res) = s.expect("every query served");
-            report.metrics.per_query.push(lat);
-            report.results.push(res);
-        }
-        report.metrics.llm_time = llm_time + shared_prefill_total;
-        report.metrics.shared_prefill_time = shared_prefill_total;
-        report.cache = cache.stats();
-        Ok(report)
-    }
-
-    fn kv_bytes(&self) -> usize {
-        self.store
-            .manifest()
-            .module(&self.cfg.backbone)
-            .ok()
-            .and_then(|m| m.dims)
-            .map(|d| d.kv_bytes_each())
-            .unwrap_or(0)
+    /// Resident bytes of one representative KV cache (k + v), sized from the
+    /// engine's manifest. `new()` guarantees the backbone has KV geometry,
+    /// so an error here means the manifest changed underneath us — propagate
+    /// it rather than silently sizing entries at 0 (which would disable the
+    /// byte budget).
+    pub(crate) fn kv_entry_bytes(&self) -> anyhow::Result<usize> {
+        self.engine.kv_bytes(&self.cfg.backbone)
     }
 }
 
@@ -353,12 +186,37 @@ mod tests {
         assert_eq!(c.backbone, "llama-3.2-3b-sim");
         assert_eq!(c.linkage, Linkage::Ward);
         assert!(c.gnn.is_none());
+        assert!(c.cache.max_entries >= 2, "default policy must be multi-resident");
+        assert!(c.online_threshold > 0.0);
     }
 
     #[test]
     fn argmax_picks_max() {
         assert_eq!(argmax(&[0.1, 3.0, -1.0, 2.0]), 1);
         assert_eq!(argmax(&[5.0]), 0);
-        assert_eq!(argmax(&[1.0, 1.0]), 0); // deterministic tie-break
+    }
+
+    #[test]
+    fn argmax_breaks_ties_to_lowest_index() {
+        assert_eq!(argmax(&[1.0, 1.0]), 0);
+        assert_eq!(argmax(&[-2.0, 7.0, 7.0, 7.0]), 1);
+    }
+
+    #[test]
+    fn argmax_empty_is_zero_not_panic() {
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn argmax_ignores_nan() {
+        assert_eq!(argmax(&[f32::NAN, 1.0, 2.0]), 2);
+        assert_eq!(argmax(&[3.0, f32::NAN]), 0);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0, "all-NaN falls back to 0");
+    }
+
+    #[test]
+    fn argmax_handles_infinities() {
+        assert_eq!(argmax(&[f32::NEG_INFINITY, 0.0, f32::INFINITY]), 2);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), 0);
     }
 }

@@ -1,0 +1,199 @@
+//! Online (streaming) SubGCache: the deployment setting the paper's §3
+//! sketches but the in-batch pipeline never implements.
+//!
+//! Queries arrive one at a time. Each arriving query's retrieved subgraph is
+//! GNN-encoded and assigned to the nearest existing cluster centroid within
+//! `ServeConfig::online_threshold` (squared Euclidean over GNN embeddings);
+//! farther queries open a new cluster whose representative subgraph — and
+//! therefore prefix prompt — is frozen at open time, so a later warm hit
+//! extends exactly the prefix that was prefilled. Centroids keep a running
+//! mean of member embeddings so clusters track their query population.
+//!
+//! A query whose cluster's representative KV cache is still resident is a
+//! **hit**: it pays only the question `extend`. A query that opens a new
+//! cluster, or whose representative was evicted under the cache budget, is a
+//! **miss**: it additionally pays the representative prefill in full — no
+//! amortization exists online because membership is unknown at serve time.
+
+use crate::cache::KvCacheManager;
+use crate::data::{Dataset, Query};
+use crate::embed::sq_dist;
+use crate::graph::Subgraph;
+use crate::metrics::{QueryLatency, Timer};
+use crate::retrieval::{GraphFeatures, Retriever};
+use crate::runtime::{pack_subgraph, KvHandle};
+
+use super::{Coordinator, ServeReport};
+
+/// One open cluster of the stream. Deliberately small — a centroid, a
+/// member count, and the frozen representative subgraph (node/edge id
+/// sets) — because cluster metadata outlives the KV budget: the
+/// [`crate::cache::CachePolicy`] bounds resident KV bytes, not this state,
+/// which grows with the number of clusters the stream opens. An evicted
+/// representative is re-verbalized from `rep` on its next miss rather than
+/// keeping a padded max_seq token vector per cluster alive forever.
+/// Expiring cold clusters outright is future work (ROADMAP).
+struct OnlineCluster {
+    /// running mean of member embeddings.
+    centroid: Vec<f32>,
+    members: usize,
+    /// representative subgraph, frozen when the cluster opened.
+    rep: Subgraph,
+    /// real prefix length of `rep`'s verbalization (stable: the
+    /// verbalizer and tokenizer are deterministic over a frozen `rep`).
+    plen: usize,
+}
+
+impl<'e> Coordinator<'e> {
+    /// Serve a stream of queries online. `query_stream` is consumed in
+    /// arrival order; each query is matched against the clusters opened by
+    /// the queries before it — nothing about the batch is known up front.
+    ///
+    /// The report's `per_query` entries carry `cache_hit` so
+    /// [`crate::metrics::BatchMetrics::ttft_hit_ms`] /
+    /// [`crate::metrics::BatchMetrics::ttft_miss_ms`] split cleanly.
+    pub fn serve_online<'q, I>(&self, ds: &Dataset, query_stream: I,
+                               retriever: &dyn Retriever) -> anyhow::Result<ServeReport>
+    where
+        I: IntoIterator<Item = &'q Query>,
+    {
+        self.engine.warmup(&self.cfg.backbone)?;
+        let gnn = self.gnn_module(retriever);
+        self.engine.warmup(&gnn)?;
+        let c = *self.store.constants();
+        let session = self.session();
+        let feats = GraphFeatures::build(&ds.graph);
+        let entry_bytes = self.kv_entry_bytes()?;
+        let threshold = self.cfg.online_threshold;
+
+        let mut clusters: Vec<OnlineCluster> = Vec::new();
+        let mut cache: KvCacheManager<KvHandle> = KvCacheManager::new(self.cfg.cache);
+        let mut report = ServeReport::default();
+        let mut llm_time = 0.0;
+        let mut prefill_total = 0.0;
+
+        for q in query_stream {
+            // 1) retrieval (always per-query, as in every path).
+            let t_retr = Timer::start();
+            let sg = retriever.retrieve(&ds.graph, &feats, &q.text);
+            let retrieval_secs = t_retr.secs();
+
+            // 2) encode + centroid assignment. Charged in full to this query:
+            //    online there is no batch to amortize over.
+            let t_assign = Timer::start();
+            let p = pack_subgraph(&ds.graph, &feats, &sg, c.n_max, c.feat_dim);
+            let emb = self.engine.encode(&gnn, p.x, p.adj, p.mask)?;
+            let nearest = clusters
+                .iter()
+                .enumerate()
+                .map(|(i, cl)| (i, sq_dist(&cl.centroid, &emb)))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+            let joined = nearest.filter(|&(_, d)| d <= threshold).map(|(i, _)| i);
+            let assign_secs = t_assign.secs();
+
+            // 3) open a new cluster if nothing was close enough. The prefix
+            //    prompt is built here (prompt-construction time), frozen for
+            //    the cluster's lifetime; the padded token vector itself is
+            //    NOT retained — see `OnlineCluster`.
+            let t_open = Timer::start();
+            let mut fresh_tokens: Option<Vec<i32>> = None;
+            let cid = match joined {
+                Some(cid) => {
+                    let cl = &mut clusters[cid];
+                    cl.members += 1;
+                    let n = cl.members as f32;
+                    for (ci, ei) in cl.centroid.iter_mut().zip(&emb) {
+                        *ci += (ei - *ci) / n;
+                    }
+                    cid
+                }
+                None => {
+                    let (tokens, plen) = session.prefix_tokens(&ds.graph, &sg);
+                    fresh_tokens = Some(tokens);
+                    clusters.push(OnlineCluster {
+                        centroid: emb,
+                        members: 1,
+                        rep: sg.clone(),
+                        plen,
+                    });
+                    clusters.len() - 1
+                }
+            };
+            let open_secs = t_open.secs();
+
+            // 4) warm-cache check. `lookup` records exactly one hit or miss
+            //    (and refreshes LRU / bytes_saved on a hit).
+            let hit = cache.lookup(cid).is_some();
+            let mut rebuild_secs = 0.0;
+            let prefill_secs = if hit {
+                cache.pin(cid);
+                0.0
+            } else {
+                // an evicted-miss re-verbalizes the frozen representative.
+                // That rebuild is prompt-construction (charged like a fresh
+                // cluster's token build in step 3), NOT prefill — PFTT and
+                // llm_time must mean the same engine work for both miss
+                // flavors.
+                let tokens = match fresh_tokens.take() {
+                    Some(t) => t,
+                    None => {
+                        let t_rebuild = Timer::start();
+                        let (t, plen) =
+                            session.prefix_tokens(&ds.graph, &clusters[cid].rep);
+                        debug_assert_eq!(plen, clusters[cid].plen,
+                                         "frozen rep must re-verbalize identically");
+                        rebuild_secs = t_rebuild.secs();
+                        t
+                    }
+                };
+                let t_prefill = Timer::start();
+                let (kv, _logits) = self.engine.prefill(&self.cfg.backbone, &tokens,
+                                                        clusters[cid].plen as i32)?;
+                let secs = t_prefill.secs();
+                // admitted pinned; colder representatives may fall out.
+                let evicted = cache.install(cid, kv, entry_bytes);
+                self.engine.release_many(evicted);
+                secs
+            };
+            prefill_total += prefill_secs;
+
+            // 5) extend + decode against the resident representative cache.
+            let plen = clusters[cid].plen;
+            let out = {
+                let kv = cache
+                    .peek(cid)
+                    .ok_or_else(|| anyhow::anyhow!("online cluster cache missing"))?;
+                session.extend_decode(kv, plen, q)?
+            };
+            cache.unpin(cid);
+            llm_time += prefill_secs + (out.t_done - out.t_prompt);
+
+            // 6) wall-clock latency accounting (no amortization — see the
+            //    module docs in `coordinator`): a miss pays its prefill in
+            //    PFTT, a hit does not. That asymmetry IS the online speedup.
+            let prompt_ready =
+                retrieval_secs + assign_secs + open_secs + rebuild_secs + out.t_prompt;
+            let pftt = prefill_secs + (out.t_first - out.t_prompt);
+            let ttft = prompt_ready + pftt;
+            let rt = ttft + (out.t_done - out.t_first);
+
+            let result = session.result(q, out.predicted, cid, sg);
+            report.metrics.per_query.push(QueryLatency {
+                rt,
+                ttft,
+                pftt,
+                correct: result.correct,
+                cache_hit: Some(hit),
+            });
+            report.results.push(result);
+        }
+
+        report.cluster_sizes = clusters.iter().map(|cl| cl.members).collect();
+        report.representative_sizes = clusters.iter().map(|cl| cl.rep.len()).collect();
+        report.metrics.llm_time = llm_time;
+        report.metrics.shared_prefill_time = prefill_total;
+        self.engine.release_many(cache.release_all());
+        report.cache = cache.stats();
+        Ok(report)
+    }
+}

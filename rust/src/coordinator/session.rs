@@ -1,0 +1,173 @@
+//! Per-query serving session: the machinery every serving path shares.
+//!
+//! The seed duplicated tokenization, prompt construction, decode and latency
+//! plumbing between the baseline and SubGCache paths; [`ServeSession`] owns
+//! all of it once. The pipelines differ only in *which* engine calls they
+//! make (full prefill vs. cached-prefix extend) and in how raw timing splits
+//! are composed into [`QueryLatency`] (amortized in-batch, wall-clock
+//! online) — see the module docs in [`super`].
+
+use crate::data::{answer_correct, Query};
+use crate::graph::{full_prompt, prefix_text, question_text, Subgraph, TextualGraph};
+use crate::metrics::{QueryLatency, Timer};
+use crate::runtime::{ArtifactStore, Engine, KvHandle};
+use crate::tokenizer::Tokenizer;
+
+use super::{argmax, QueryResult};
+
+/// Raw timing splits of one question served against a cached prefix.
+/// All fields are seconds since the query's own timer started.
+pub(crate) struct ExtendOutcome {
+    pub predicted: String,
+    /// question tokenization done (prompt ready)
+    pub t_prompt: f64,
+    /// extend + first-token argmax done
+    pub t_first: f64,
+    /// greedy decode done
+    pub t_done: f64,
+}
+
+/// One query served with a full prompt (the baseline path).
+pub(crate) struct FullOutcome {
+    pub latency: QueryLatency,
+    pub result: QueryResult,
+    /// LLM-only seconds (prefill + decode), for `BatchMetrics::llm_time`.
+    pub llm_secs: f64,
+}
+
+/// Borrowed view over everything the per-query flow needs.
+pub(crate) struct ServeSession<'a> {
+    store: &'a ArtifactStore,
+    engine: &'a Engine,
+    backbone: &'a str,
+}
+
+impl<'a> ServeSession<'a> {
+    pub fn new(store: &'a ArtifactStore, engine: &'a Engine, backbone: &'a str) -> Self {
+        ServeSession { store, engine, backbone }
+    }
+
+    fn tok(&self) -> &Tokenizer {
+        self.store.tokenizer()
+    }
+
+    // -- prompt construction -------------------------------------------------
+
+    /// Prefix tokens: [BOS] + verbalized subgraph, padded to S.
+    pub fn prefix_tokens(&self, g: &TextualGraph, sg: &Subgraph) -> (Vec<i32>, usize) {
+        let c = self.store.constants();
+        let text = prefix_text(g, sg, Some(c.max_prefix));
+        let mut ids = Vec::with_capacity(c.max_seq);
+        ids.push(c.bos_id);
+        self.tok().encode_into(&text, &mut ids);
+        ids.truncate(c.max_seq - c.max_q - c.max_gen);
+        let plen = ids.len();
+        ids.resize(c.max_seq, c.pad_id);
+        (ids, plen)
+    }
+
+    /// Full baseline prompt tokens: [BOS] + prefix + question, padded to S.
+    pub fn full_tokens(&self, g: &TextualGraph, sg: &Subgraph, qtext: &str)
+                       -> (Vec<i32>, usize) {
+        let c = self.store.constants();
+        let text = full_prompt(g, sg, qtext, Some(c.max_prefix));
+        let mut ids = Vec::with_capacity(c.max_seq);
+        ids.push(c.bos_id);
+        self.tok().encode_into(&text, &mut ids);
+        ids.truncate(c.max_seq - c.max_gen);
+        let plen = ids.len();
+        ids.resize(c.max_seq, c.pad_id);
+        (ids, plen)
+    }
+
+    /// Question tokens padded to Q.
+    pub fn question_tokens(&self, qtext: &str) -> (Vec<i32>, usize) {
+        let c = self.store.constants();
+        let mut ids = Vec::with_capacity(c.max_q);
+        self.tok().encode_into(&question_text(qtext), &mut ids);
+        ids.truncate(c.max_q);
+        let qlen = ids.len();
+        ids.resize(c.max_q, c.pad_id);
+        (ids, qlen)
+    }
+
+    fn decode_answer(&self, first: i32, gen: &[i32]) -> String {
+        debug_assert!(gen.first().copied() == Some(first));
+        self.tok().decode(gen)
+    }
+
+    /// Assemble the per-query outcome record.
+    pub fn result(&self, q: &Query, predicted: String, cluster: usize,
+                  retrieved: Subgraph) -> QueryResult {
+        let correct = answer_correct(&predicted, &q.answer);
+        QueryResult {
+            id: q.id,
+            query: q.text.clone(),
+            predicted,
+            gold: q.answer.clone(),
+            correct,
+            cluster,
+            retrieved,
+        }
+    }
+
+    // -- serving flows -------------------------------------------------------
+
+    /// Baseline flow for one query: verbalize → full prefill → decode, with
+    /// the seed's exact latency accounting (retrieval already charged by the
+    /// caller is NOT included here — pass the retrieved subgraph in).
+    pub fn serve_full(&self, g: &TextualGraph, sg: Subgraph, q: &Query)
+                      -> anyhow::Result<FullOutcome> {
+        let t_all = Timer::start();
+        let (tokens, plen) = self.full_tokens(g, &sg, &q.text);
+        let t_prompt_ready = t_all.secs();
+
+        let (kv, logits) = self.engine.prefill(self.backbone, &tokens, plen as i32)?;
+        let first = argmax(&logits);
+        let ttft = t_all.secs();
+        let pftt = ttft - t_prompt_ready;
+
+        let gen = self.engine.generate(self.backbone, &kv, plen as i32, first)?;
+        self.engine.release(kv);
+        let rt = t_all.secs();
+
+        let predicted = self.decode_answer(first, &gen);
+        let result = self.result(q, predicted, usize::MAX, sg);
+        Ok(FullOutcome {
+            latency: QueryLatency { rt, ttft, pftt, correct: result.correct,
+                                    cache_hit: None },
+            result,
+            llm_secs: rt - t_prompt_ready,
+        })
+    }
+
+    /// Cached-prefix flow for one question: tokenize → `extend` against the
+    /// resident representative KV → decode. Returns raw timing splits; the
+    /// caller composes them into `QueryLatency` under its own accounting
+    /// rules (amortized shares in-batch, wall-clock online).
+    pub fn extend_decode(&self, kv_prefix: &KvHandle, plen: usize, q: &Query)
+                         -> anyhow::Result<ExtendOutcome> {
+        let c = self.store.constants();
+        let t_q = Timer::start();
+        let (q_tokens, qlen) = self.question_tokens(&q.text);
+        let t_prompt = t_q.secs();
+
+        let (kv_q, logits) =
+            self.engine.extend(self.backbone, kv_prefix, plen as i32, &q_tokens)?;
+        let row = &logits[(qlen - 1) * c.vocab..qlen * c.vocab];
+        let first = argmax(row);
+        let t_first = t_q.secs();
+
+        let gen = self.engine.generate(self.backbone, &kv_q,
+                                       (plen + qlen) as i32, first)?;
+        self.engine.release(kv_q);
+        let t_done = t_q.secs();
+
+        Ok(ExtendOutcome {
+            predicted: self.decode_answer(first, &gen),
+            t_prompt,
+            t_first,
+            t_done,
+        })
+    }
+}

@@ -1,7 +1,9 @@
 //! Experiment harness shared by the table/figure binaries and benches:
-//! runs one (dataset × retriever × backbone × config) cell — baseline and
-//! +SubGCache — and renders paper-style tables (DESIGN.md §3).
+//! runs one (dataset × retriever × backbone × config) cell — baseline,
+//! +SubGCache, and optionally the online streaming path — and renders
+//! paper-style tables (DESIGN.md §3).
 
+use crate::cache::CachePolicy;
 use crate::cluster::Linkage;
 use crate::coordinator::{Coordinator, ServeConfig, ServeReport};
 use crate::data::Dataset;
@@ -36,6 +38,10 @@ pub struct Cell {
     pub n_clusters: usize,
     pub linkage: Linkage,
     pub seed: u64,
+    /// KV-cache byte/entry budget for the SubGCache paths.
+    pub cache: CachePolicy,
+    /// squared-distance centroid join bound for the online path.
+    pub online_threshold: f32,
 }
 
 impl Cell {
@@ -48,6 +54,19 @@ impl Cell {
             n_clusters: default_clusters(dataset),
             linkage: Linkage::Ward,
             seed: 7,
+            cache: CachePolicy::default(),
+            online_threshold: ServeConfig::default().online_threshold,
+        }
+    }
+
+    fn serve_config(&self) -> ServeConfig {
+        ServeConfig {
+            backbone: self.backbone.clone(),
+            n_clusters: self.n_clusters,
+            linkage: self.linkage,
+            gnn: None,
+            cache: self.cache,
+            online_threshold: self.online_threshold,
         }
     }
 }
@@ -67,16 +86,32 @@ pub fn run_cell(store: &ArtifactStore, engine: &Engine, cell: &Cell)
     let queries = ds.sample_test(cell.batch, cell.seed);
     anyhow::ensure!(!queries.is_empty(), "dataset {} has no test queries", cell.dataset);
 
-    let cfg = ServeConfig {
-        backbone: cell.backbone.clone(),
-        n_clusters: cell.n_clusters,
-        linkage: cell.linkage,
-        gnn: None,
-    };
-    let coord = Coordinator::new(store, engine, cfg)?;
+    let coord = Coordinator::new(store, engine, cell.serve_config())?;
     let baseline = coord.serve_baseline(&ds, &queries, retriever.as_ref())?;
     let subgcache = coord.serve_subgcache(&ds, &queries, retriever.as_ref())?;
     Ok(CellResult { cell: cell.clone(), baseline, subgcache })
+}
+
+/// Baseline + streaming-SubGCache reports for one cell (Table 5).
+pub struct OnlineCellResult {
+    pub cell: Cell,
+    pub baseline: ServeReport,
+    pub online: ServeReport,
+}
+
+/// Run one online cell: the same seed-sampled queries, but served one at a
+/// time against clusters formed on the fly, vs the per-query baseline.
+pub fn run_online_cell(store: &ArtifactStore, engine: &Engine, cell: &Cell)
+                       -> anyhow::Result<OnlineCellResult> {
+    let ds = store.dataset(&cell.dataset)?;
+    let retriever = retriever_by_name(&cell.retriever)?;
+    let queries = ds.sample_test(cell.batch, cell.seed);
+    anyhow::ensure!(!queries.is_empty(), "dataset {} has no test queries", cell.dataset);
+
+    let coord = Coordinator::new(store, engine, cell.serve_config())?;
+    let baseline = coord.serve_baseline(&ds, &queries, retriever.as_ref())?;
+    let online = coord.serve_online(&ds, queries.iter().copied(), retriever.as_ref())?;
+    Ok(OnlineCellResult { cell: cell.clone(), baseline, online })
 }
 
 /// Render one retriever block of a paper table (method, +SubGCache, Δ rows).
@@ -89,6 +124,46 @@ pub fn push_block(t: &mut Table, label: &str, r: &CellResult) {
 
 pub const METRIC_HEADER: [&str; 5] = ["Model", "ACC↑", "RT↓(ms)", "TTFT↓(ms)", "PFTT↓(ms)"];
 
+/// Header for the online (streaming) table: the hit/miss TTFT split is the
+/// headline, since online speedup is exactly the warm-hit asymmetry.
+pub const ONLINE_HEADER: [&str; 8] = [
+    "Model", "ACC↑", "RT↓(ms)", "TTFT↓(ms)", "TTFT(hit)", "TTFT(miss)",
+    "hits/misses", "hit-rate",
+];
+
+/// Format the online-method row of Table 5. An empty hit/miss bucket prints
+/// "-" (no measurement), never a zero that reads as 0 ms latency.
+pub fn online_cells(name: &str, r: &ServeReport) -> Vec<String> {
+    let m = &r.metrics;
+    let bucket = |count: usize, ms: f64| {
+        if count == 0 { "-".to_string() } else { format!("{ms:.2}") }
+    };
+    vec![
+        name.to_string(),
+        format!("{:.2}", m.acc()),
+        format!("{:.2}", m.rt_ms()),
+        format!("{:.2}", m.ttft_ms()),
+        bucket(m.hit_count(), m.ttft_hit_ms()),
+        bucket(m.miss_count(), m.ttft_miss_ms()),
+        format!("{}/{}", m.hit_count(), m.miss_count()),
+        format!("{:.0}%", 100.0 * r.cache.hit_rate()),
+    ]
+}
+
+/// One-line cache summary for diagnostics under a table. Deliberately no
+/// hit-rate: the batch pipeline installs then looks up each cluster, so its
+/// rate is trivially 100% — the rate is only meaningful on the online path,
+/// where the table's own hit-rate column reports it.
+pub fn cache_summary(r: &ServeReport) -> String {
+    let s = r.cache;
+    format!(
+        "cache: {} prefills, {} hits, {} evictions, peak {:.0} KiB, \
+         {:.0} KiB prefill bytes saved",
+        s.prefills, s.hits, s.evictions,
+        s.peak_bytes as f64 / 1024.0, s.bytes_saved as f64 / 1024.0
+    )
+}
+
 /// Standard env-tunable batch size for the harness binaries: the paper's
 /// main tables use 100; `SUBGCACHE_BATCH` overrides for quick runs.
 pub fn batch_from_env(default: usize) -> usize {
@@ -96,6 +171,27 @@ pub fn batch_from_env(default: usize) -> usize {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+/// Parse the shared `--cache-mb` / `--cache-entries` flags into a policy
+/// (one definition for every binary that exposes the cache budget).
+pub fn cache_policy_from_args(args: &crate::util::cli::Args)
+                              -> anyhow::Result<CachePolicy> {
+    let d = CachePolicy::default();
+    let max_bytes = match args.get("cache-mb") {
+        Some(v) => {
+            let mb: usize = v.parse().map_err(|_| {
+                anyhow::anyhow!("bad --cache-mb '{v}' (expected a MiB integer)")
+            })?;
+            mb.checked_mul(1 << 20)
+                .ok_or_else(|| anyhow::anyhow!("--cache-mb {mb} overflows the budget"))?
+        }
+        None => d.max_bytes,
+    };
+    Ok(CachePolicy {
+        max_bytes,
+        max_entries: args.usize_or("cache-entries", d.max_entries),
+    })
 }
 
 /// Backbone list filtered by `SUBGCACHE_BACKBONES` (comma separated).

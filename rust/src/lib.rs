@@ -1,12 +1,23 @@
 //! # SubGCache
 //!
 //! Reproduction of *"SubGCache: Accelerating Graph-based RAG with
-//! Subgraph-level KV Cache"* (AAAI 2026) as a three-layer Rust + JAX +
-//! Pallas serving stack (see DESIGN.md):
+//! Subgraph-level KV Cache"* (AAAI 2026), grown into a session-based serving
+//! core over a three-layer Rust + JAX + Pallas stack (see DESIGN.md):
 //!
-//! * **L3 (this crate)** — the serving coordinator: retrieval, query
+//! * **L3 (this crate)** — the serving [`coordinator`]: retrieval, query
 //!   clustering on GNN subgraph embeddings, representative-subgraph
-//!   construction, cluster-wise KV-cache reuse, metrics.
+//!   construction, KV-cache reuse, metrics. Three serving paths share one
+//!   per-query session core:
+//!   - `serve_baseline` — standard graph-based RAG, full prefill per query;
+//!   - `serve_subgcache` — the paper's in-batch pipeline: cluster, prefill
+//!     each representative once, `extend` per member;
+//!   - `serve_online` — a streaming path: queries arrive one at a time, are
+//!     matched to the nearest existing cluster centroid, and reuse a
+//!     still-warm representative KV cache when one is resident.
+//! * **[`cache`]** — the subgraph-level KV cache grown into a byte-budgeted,
+//!   multi-resident LRU ([`cache::CachePolicy`]) with per-cluster pinning,
+//!   so several representatives stay warm and an admission can never evict
+//!   the in-flight cluster.
 //! * **L2/L1 (python/compile, build-time only)** — the simulated LLM
 //!   backbones + GNN encoders, with the attention hot-spot as a Pallas
 //!   kernel; AOT-lowered to HLO text consumed by [`runtime`] via PJRT.
@@ -22,8 +33,15 @@
 //! let cfg = ServeConfig { backbone: "llama-3.2-3b-sim".into(), ..Default::default() };
 //! let coord = Coordinator::new(&art, &engine, cfg).unwrap();
 //! let queries = ds.sample_test(8, 7);
+//! // in-batch pipeline:
 //! let report = coord.serve_subgcache(&ds, &queries, &GRetriever::default()).unwrap();
 //! println!("ACC {:.1}% TTFT {:.1} ms", report.metrics.acc(), report.metrics.ttft_ms());
+//! // streaming pipeline (same queries arriving one at a time):
+//! let online = coord.serve_online(&ds, queries.iter().copied(),
+//!                                 &GRetriever::default()).unwrap();
+//! println!("hit TTFT {:.1} ms vs miss TTFT {:.1} ms ({} hits)",
+//!          online.metrics.ttft_hit_ms(), online.metrics.ttft_miss_ms(),
+//!          online.metrics.hit_count());
 //! ```
 
 pub mod cache;
@@ -41,6 +59,7 @@ pub mod util;
 
 /// Common imports for examples and binaries.
 pub mod prelude {
+    pub use crate::cache::{CachePolicy, CacheStats};
     pub use crate::cluster::Linkage;
     pub use crate::coordinator::{Coordinator, ServeConfig, ServeReport};
     pub use crate::data::{Dataset, Split};

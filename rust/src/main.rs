@@ -1,10 +1,12 @@
-//! `subgcache` — leader binary: serve an in-batch workload with or without
-//! SubGCache and print the paper-style metrics.
+//! `subgcache` — leader binary: serve a workload with or without SubGCache
+//! (in-batch or streaming) and print the paper-style metrics.
 //!
 //! ```text
 //! subgcache --dataset scene_graph --retriever g-retriever \
 //!           --backbone llama-3.2-3b-sim --batch 100 --clusters 1 \
-//!           [--baseline] [--linkage ward] [--seed 7] [--artifacts PATH]
+//!           [--baseline | --online] [--linkage ward] [--seed 7] \
+//!           [--cache-mb N] [--cache-entries N] [--threshold D] \
+//!           [--artifacts PATH]
 //! ```
 
 use subgcache::prelude::*;
@@ -26,6 +28,11 @@ fn main() -> anyhow::Result<()> {
                  .collect::<Vec<_>>().join("\n"));
         return Ok(());
     }
+    // reject conflicting modes before the expensive engine startup.
+    anyhow::ensure!(
+        !(args.flag("baseline") && args.flag("online")),
+        "--baseline and --online are mutually exclusive"
+    );
 
     let store = match args.get("artifacts") {
         Some(p) => ArtifactStore::open(p)?,
@@ -37,31 +44,48 @@ fn main() -> anyhow::Result<()> {
     let seed = args.usize_or("seed", 7) as u64;
     let queries = ds.sample_test(batch, seed);
 
+    let default_cfg = ServeConfig::default();
+    let cache = subgcache::harness::cache_policy_from_args(&args)?;
     let cfg = ServeConfig {
         backbone: args.get_or("backbone", "llama-3.2-3b-sim").to_string(),
         n_clusters: args.usize_or("clusters", 2),
         linkage: Linkage::parse(args.get_or("linkage", "ward"))
             .ok_or_else(|| anyhow::anyhow!("bad --linkage"))?,
         gnn: args.get("gnn").map(|s| s.to_string()),
+        cache,
+        online_threshold: args.f64_or("threshold", default_cfg.online_threshold as f64)
+            as f32,
     };
 
     let engine = Engine::start(&store)?;
     let coord = Coordinator::new(&store, &engine, cfg.clone())?;
 
+    let mode = if args.flag("baseline") {
+        "baseline"
+    } else if args.flag("online") {
+        "online"
+    } else {
+        "subgcache"
+    };
+    // online clusters form dynamically from --threshold; --clusters is only
+    // read by the batch pipeline, so don't print an inert c.
+    let mode_detail = if mode == "online" {
+        format!("threshold={}", cfg.online_threshold)
+    } else {
+        format!("c={}", cfg.n_clusters)
+    };
     eprintln!(
-        "serving {} queries from {} via {} on {} ({} mode, c={})",
+        "serving {} queries from {} via {} on {} ({mode} mode, {mode_detail})",
         queries.len(),
         ds.graph.name,
         retriever.name(),
         cfg.backbone,
-        if args.flag("baseline") { "baseline" } else { "subgcache" },
-        cfg.n_clusters,
     );
 
-    let report = if args.flag("baseline") {
-        coord.serve_baseline(&ds, &queries, retriever.as_ref())?
-    } else {
-        coord.serve_subgcache(&ds, &queries, retriever.as_ref())?
+    let report = match mode {
+        "baseline" => coord.serve_baseline(&ds, &queries, retriever.as_ref())?,
+        "online" => coord.serve_online(&ds, queries.iter().copied(), retriever.as_ref())?,
+        _ => coord.serve_subgcache(&ds, &queries, retriever.as_ref())?,
     };
 
     let mut t = Table::new(&["metric", "value"]);
@@ -71,6 +95,22 @@ fn main() -> anyhow::Result<()> {
     t.row(&["PFTT (ms)".into(), format!("{:.2}", report.metrics.pftt_ms())]);
     t.row(&["cluster stage (ms)".into(),
             format!("{:.2}", report.metrics.cluster_time * 1e3)]);
+    if mode == "online" {
+        t.row(&["TTFT hit (ms)".into(),
+                format!("{:.2}", report.metrics.ttft_hit_ms())]);
+        t.row(&["TTFT miss (ms)".into(),
+                format!("{:.2}", report.metrics.ttft_miss_ms())]);
+        t.row(&["hits/misses".into(),
+                format!("{}/{}", report.metrics.hit_count(),
+                        report.metrics.miss_count())]);
+        // only meaningful online: the batch pipeline's lookups always follow
+        // its own installs, so its rate is trivially 100%.
+        t.row(&["cache hit-rate (%)".into(),
+                format!("{:.0}", 100.0 * report.cache.hit_rate())]);
+    }
+    if mode != "baseline" {
+        t.row(&["cache evictions".into(), report.cache.evictions.to_string()]);
+    }
     if !report.cluster_sizes.is_empty() {
         t.row(&["cluster sizes".into(), format!("{:?}", report.cluster_sizes)]);
     }
@@ -81,7 +121,7 @@ fn main() -> anyhow::Result<()> {
             println!("[{}] q={:?} pred={:?} gold={:?} ok={}",
                      r.id, r.query, r.predicted, r.gold, r.correct);
         }
-        let st = engine.stats();
+        let st = engine.stats()?;
         println!("engine: compile {:.2}s, live_kv {}", st.compile_secs, st.live_kv);
         for (k, n, s) in st.calls {
             println!("  {k}: {n} calls, {:.1} ms avg", s / n as f64 * 1e3);

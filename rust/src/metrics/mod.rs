@@ -11,12 +11,17 @@ use std::time::{Duration, Instant};
 ///            query's *amortized share* of cluster-stage work, and PFTT)
 /// * `pftt` — prompt-ready → first token (prefill/extend + first logits;
 ///            isolates the KV-reuse benefit, per App. A.3)
+/// * `cache_hit` — online path only: `Some(true)` if the query's cluster
+///            representative KV cache was still resident (warm extend),
+///            `Some(false)` if it paid a representative prefill. `None` for
+///            the batch paths, where prefills are amortized instead.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct QueryLatency {
     pub rt: f64,
     pub ttft: f64,
     pub pftt: f64,
     pub correct: bool,
+    pub cache_hit: Option<bool>,
 }
 
 /// Batch-level result for one (dataset, method, backbone) cell of a table.
@@ -57,6 +62,51 @@ impl BatchMetrics {
     }
     pub fn pftt_ms(&self) -> f64 {
         self.mean(|q| q.pftt) * 1e3
+    }
+
+    // -- online hit/miss split (Table 5) ------------------------------------
+
+    fn mean_where(&self, hit: bool, f: impl Fn(&QueryLatency) -> f64) -> f64 {
+        let sel: Vec<f64> = self
+            .per_query
+            .iter()
+            .filter(|q| q.cache_hit == Some(hit))
+            .map(f)
+            .collect();
+        if sel.is_empty() {
+            return 0.0;
+        }
+        sel.iter().sum::<f64>() / sel.len() as f64
+    }
+
+    /// Queries served against a warm resident representative cache.
+    pub fn hit_count(&self) -> usize {
+        self.per_query.iter().filter(|q| q.cache_hit == Some(true)).count()
+    }
+
+    /// Queries that paid a representative prefill (new or evicted cluster).
+    pub fn miss_count(&self) -> usize {
+        self.per_query.iter().filter(|q| q.cache_hit == Some(false)).count()
+    }
+
+    /// Mean TTFT (ms) over cache hits; 0.0 when no hits were recorded.
+    pub fn ttft_hit_ms(&self) -> f64 {
+        self.mean_where(true, |q| q.ttft) * 1e3
+    }
+
+    /// Mean TTFT (ms) over cache misses; 0.0 when no misses were recorded.
+    pub fn ttft_miss_ms(&self) -> f64 {
+        self.mean_where(false, |q| q.ttft) * 1e3
+    }
+
+    /// Mean PFTT (ms) over cache hits.
+    pub fn pftt_hit_ms(&self) -> f64 {
+        self.mean_where(true, |q| q.pftt) * 1e3
+    }
+
+    /// Mean PFTT (ms) over cache misses.
+    pub fn pftt_miss_ms(&self) -> f64 {
+        self.mean_where(false, |q| q.pftt) * 1e3
     }
 }
 
@@ -193,7 +243,10 @@ mod tests {
         BatchMetrics {
             per_query: rts
                 .iter()
-                .map(|&(rt, ok)| QueryLatency { rt, ttft: rt * 0.9, pftt: rt * 0.5, correct: ok })
+                .map(|&(rt, ok)| QueryLatency {
+                    rt, ttft: rt * 0.9, pftt: rt * 0.5, correct: ok,
+                    ..Default::default()
+                })
                 .collect(),
             ..Default::default()
         }
@@ -213,6 +266,32 @@ mod tests {
         let m = BatchMetrics::default();
         assert_eq!(m.acc(), 0.0);
         assert_eq!(m.rt_ms(), 0.0);
+    }
+
+    #[test]
+    fn hit_miss_split() {
+        let mut m = BatchMetrics::default();
+        for (ttft, hit) in [(0.1, Some(false)), (0.02, Some(true)), (0.04, Some(true))] {
+            m.per_query.push(QueryLatency {
+                rt: ttft, ttft, pftt: ttft / 2.0, correct: true, cache_hit: hit,
+            });
+        }
+        assert_eq!((m.hit_count(), m.miss_count()), (2, 1));
+        assert!((m.ttft_hit_ms() - 30.0).abs() < 1e-9);
+        assert!((m.ttft_miss_ms() - 100.0).abs() < 1e-9);
+        assert!((m.pftt_miss_ms() - 50.0).abs() < 1e-9);
+        // batch-path records (cache_hit: None) stay out of both splits
+        m.per_query.push(QueryLatency { rt: 9.0, ttft: 9.0, ..Default::default() });
+        assert_eq!((m.hit_count(), m.miss_count()), (2, 1));
+        assert!((m.ttft_hit_ms() - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_split_is_zero() {
+        let m = bm(&[(0.1, true)]);
+        assert_eq!(m.hit_count() + m.miss_count(), 0);
+        assert_eq!(m.ttft_hit_ms(), 0.0);
+        assert_eq!(m.ttft_miss_ms(), 0.0);
     }
 
     #[test]

@@ -63,6 +63,9 @@ enum Req {
     Release {
         kv: u64,
     },
+    ReleaseMany {
+        kvs: Vec<u64>,
+    },
     Warmup {
         module: String,
         reply: Sender<anyhow::Result<()>>,
@@ -77,6 +80,9 @@ enum Req {
 pub struct Engine {
     tx: Mutex<Sender<Req>>,
     thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Copy of the manifest kept on the handle side so byte-sizing queries
+    /// ([`Engine::kv_bytes`]) need no engine-thread roundtrip.
+    manifest: Manifest,
 }
 
 impl Engine {
@@ -84,23 +90,36 @@ impl Engine {
     pub fn start_at(root: PathBuf, manifest: Manifest) -> anyhow::Result<Engine> {
         let (tx, rx) = channel::<Req>();
         let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+        let thread_manifest = manifest.clone();
         let thread = std::thread::Builder::new()
             .name("pjrt-engine".into())
-            .spawn(move || engine_main(root, manifest, rx, ready_tx))?;
+            .spawn(move || engine_main(root, thread_manifest, rx, ready_tx))?;
         ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
-        Ok(Engine { tx: Mutex::new(tx), thread: Mutex::new(Some(thread)) })
+        Ok(Engine {
+            tx: Mutex::new(tx),
+            thread: Mutex::new(Some(thread)),
+            manifest,
+        })
     }
 
-    fn send(&self, req: Req) {
-        self.tx.lock().unwrap().send(req).expect("engine thread gone");
+    /// Enqueue a request. A dead or poisoned engine yields an error (failing
+    /// the one request) instead of panicking the caller's thread.
+    fn send(&self, req: Req) -> anyhow::Result<()> {
+        let tx = self
+            .tx
+            .lock()
+            .map_err(|_| anyhow::anyhow!("engine sender poisoned by an earlier panic"))?;
+        tx.send(req)
+            .map_err(|_| anyhow::anyhow!("engine thread has shut down"))
     }
 
-    fn roundtrip<T>(&self, make: impl FnOnce(Sender<T>) -> Req) -> T {
+    fn roundtrip<T>(&self, make: impl FnOnce(Sender<T>) -> Req) -> anyhow::Result<T> {
         let (reply, rx) = channel();
-        self.send(make(reply));
-        rx.recv().expect("engine dropped reply")
+        self.send(make(reply))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died before replying"))
     }
 
     /// Prefill `tokens` (padded to S) with real length `plen`; returns the
@@ -109,7 +128,7 @@ impl Engine {
                    -> anyhow::Result<(KvHandle, Vec<f32>)> {
         let (id, logits) = self.roundtrip(|reply| Req::Prefill {
             module: module.into(), tokens: tokens.to_vec(), plen, reply,
-        })?;
+        })??;
         Ok((KvHandle(id), logits))
     }
 
@@ -120,7 +139,7 @@ impl Engine {
                   -> anyhow::Result<(KvHandle, Vec<f32>)> {
         let (id, logits) = self.roundtrip(|reply| Req::Extend {
             module: module.into(), kv: kv.0, plen, q_tokens: q_tokens.to_vec(), reply,
-        })?;
+        })??;
         Ok((KvHandle(id), logits))
     }
 
@@ -130,35 +149,61 @@ impl Engine {
                     -> anyhow::Result<Vec<i32>> {
         self.roundtrip(|reply| Req::Generate {
             module: module.into(), kv: kv.0, cur_len, first_tok, reply,
-        })
+        })?
     }
 
     /// GNN subgraph embedding: x [N,F], adj [N,N], mask [N] (row-major flat).
     pub fn encode(&self, module: &str, x: Vec<f32>, adj: Vec<f32>, mask: Vec<f32>)
                   -> anyhow::Result<Vec<f32>> {
-        self.roundtrip(|reply| Req::Encode { module: module.into(), x, adj, mask, reply })
+        self.roundtrip(|reply| Req::Encode { module: module.into(), x, adj, mask, reply })?
     }
 
-    /// Return a KV cache to the engine.
+    /// Return a KV cache to the engine. Best-effort: a dead engine has
+    /// already dropped its device buffers, so failure to enqueue is ignored.
     pub fn release(&self, kv: KvHandle) {
-        self.send(Req::Release { kv: kv.0 });
+        let _ = self.send(Req::Release { kv: kv.0 });
+    }
+
+    /// Return a batch of KV caches in one engine message (the cache layer's
+    /// eviction/drain path). Best-effort, like [`Engine::release`].
+    pub fn release_many(&self, kvs: Vec<KvHandle>) {
+        if kvs.is_empty() {
+            return;
+        }
+        let _ = self.send(Req::ReleaseMany { kvs: kvs.into_iter().map(|h| h.0).collect() });
+    }
+
+    /// Resident bytes of one KV cache of `module` (k + v buffers, f32),
+    /// sized from the manifest. Errors for non-LLM modules.
+    pub fn kv_bytes(&self, module: &str) -> anyhow::Result<usize> {
+        let dims = self
+            .manifest
+            .module(module)?
+            .dims
+            .ok_or_else(|| anyhow::anyhow!("{module}: not an llm module, no KV geometry"))?;
+        Ok(2 * dims.kv_bytes_each())
     }
 
     /// Load weights + compile all entries of `module` ahead of timing runs.
     pub fn warmup(&self, module: &str) -> anyhow::Result<()> {
-        self.roundtrip(|reply| Req::Warmup { module: module.into(), reply })
+        self.roundtrip(|reply| Req::Warmup { module: module.into(), reply })?
     }
 
-    pub fn stats(&self) -> EngineStats {
+    pub fn stats(&self) -> anyhow::Result<EngineStats> {
         self.roundtrip(|reply| Req::Stats { reply })
     }
 }
 
 impl Drop for Engine {
     fn drop(&mut self) {
-        let _ = self.tx.lock().unwrap().send(Req::Shutdown);
-        if let Some(t) = self.thread.lock().unwrap().take() {
-            let _ = t.join();
+        // tolerate a poisoned mutex: shutdown must still reach the thread.
+        if let Ok(tx) = self.tx.lock().or_else(|p| Ok::<_, ()>(p.into_inner())) {
+            let _ = tx.send(Req::Shutdown);
+        }
+        if let Ok(mut th) = self.thread.lock().or_else(|p| Ok::<_, ()>(p.into_inner())) {
+            if let Some(t) = th.take() {
+                let _ = t.join();
+            }
         }
     }
 }
@@ -231,6 +276,11 @@ fn engine_main(root: PathBuf, manifest: Manifest, rx: Receiver<Req>,
             }
             Req::Release { kv } => {
                 st.kvs.remove(&kv);
+            }
+            Req::ReleaseMany { kvs } => {
+                for kv in kvs {
+                    st.kvs.remove(&kv);
+                }
             }
             Req::Warmup { module, reply } => {
                 let _ = reply.send(st.warmup(&module));

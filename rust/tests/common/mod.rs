@@ -1,0 +1,32 @@
+//! Shared artifact gating for the integration test binaries.
+//!
+//! The e2e/golden tests need the `artifacts/` directory that `make
+//! artifacts` produces; on a fresh clone they skip (with a message) instead
+//! of failing, so `cargo test -q` stays green. `what` names the caller in
+//! the skip message (e.g. "golden test").
+
+use subgcache::runtime::{ArtifactStore, Engine};
+
+pub const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+/// `None` (with a skip message) when artifacts/ is absent.
+#[allow(dead_code)] // each test binary uses the subset it needs
+pub fn store(what: &str) -> Option<ArtifactStore> {
+    if !std::path::Path::new(ARTIFACTS).join("manifest.json").exists() {
+        eprintln!("skipping {what}: {ARTIFACTS} not found — run `make artifacts` first");
+        return None;
+    }
+    Some(ArtifactStore::open(ARTIFACTS).expect("artifacts present but unreadable"))
+}
+
+/// Fresh engine per test: a process-static engine thread would still own
+/// the PJRT client while C++ static destructors run at exit (observed as an
+/// exit-time SIGSEGV); Engine::drop joins the thread deterministically.
+/// Tests in one binary run sequentially, so compile cost stays bounded.
+#[allow(dead_code)]
+pub fn with_engine<T>(what: &str, f: impl FnOnce(&ArtifactStore, &Engine) -> T)
+                      -> Option<T> {
+    let s = store(what)?;
+    let e = Engine::start(&s).expect("engine start");
+    Some(f(&s, &e))
+}

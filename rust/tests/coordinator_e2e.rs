@@ -1,20 +1,18 @@
 //! Coordinator end-to-end tests over real artifacts: the full SubGCache
 //! pipeline vs the baseline on small in-batch workloads.
+//!
+//! Skipped (with a message) when `artifacts/` is absent, so `cargo test -q`
+//! stays green on a fresh clone; run `make artifacts` to enable.
 
 use subgcache::cluster::Linkage;
 use subgcache::coordinator::{Coordinator, ServeConfig};
 use subgcache::prelude::*;
 use subgcache::runtime::{ArtifactStore, Engine};
 
-fn store() -> ArtifactStore {
-    ArtifactStore::open(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
-        .expect("run `make artifacts` first")
-}
+mod common;
 
-fn with_engine<T>(f: impl FnOnce(&ArtifactStore, &Engine) -> T) -> T {
-    let s = store();
-    let e = Engine::start(&s).expect("engine start");
-    f(&s, &e)
+fn with_engine<T>(f: impl FnOnce(&ArtifactStore, &Engine) -> T) -> Option<T> {
+    common::with_engine("coordinator e2e test", f)
 }
 
 #[test]
@@ -37,7 +35,7 @@ fn subgcache_answers_match_baseline_with_singleton_clusters() {
                        "q{}: baseline {:?} vs singleton-subgcache {:?}",
                        b.id, b.predicted, o.predicted);
         }
-    })
+    });
 }
 
 #[test]
@@ -65,16 +63,17 @@ fn pipeline_reports_are_complete_and_consistent() {
             let (qn, qe) = r.retrieved.len();
             assert!(qn <= rn && qe <= re, "representative smaller than member");
         }
-        // cache: one prefill + one release per cluster, one hit per query
+        // cache: one prefill + one release per cluster; a hit per member
+        // beyond each cluster's first (the first rides the fresh prefill)
         assert_eq!(rep.cache.prefills as usize, rep.cluster_sizes.len());
         assert_eq!(rep.cache.released as usize, rep.cluster_sizes.len());
-        assert_eq!(rep.cache.hits as usize, queries.len());
+        assert_eq!(rep.cache.hits as usize, queries.len() - rep.cluster_sizes.len());
         assert_eq!(rep.cache.resident_bytes, 0, "cache must be drained");
         // latency sanity
         for q in &rep.metrics.per_query {
             assert!(q.pftt > 0.0 && q.ttft >= q.pftt && q.rt >= q.ttft);
         }
-    })
+    });
 }
 
 #[test]
@@ -94,7 +93,7 @@ fn subgcache_cuts_pftt_vs_baseline() {
             "PFTT should drop: baseline {:.1} ms vs subgcache {:.1} ms",
             base.metrics.pftt_ms(), ours.metrics.pftt_ms()
         );
-    })
+    });
 }
 
 #[test]
@@ -104,11 +103,11 @@ fn no_kv_leaks_after_serving() {
         let queries = ds.sample_test(5, 17);
         let coord = Coordinator::new(store, engine, ServeConfig::default()).unwrap();
         let r = GRetriever::default();
-        let live_before = engine.stats().live_kv;
+        let live_before = engine.stats().unwrap().live_kv;
         coord.serve_baseline(&ds, &queries, &r).unwrap();
         coord.serve_subgcache(&ds, &queries, &r).unwrap();
-        assert_eq!(engine.stats().live_kv, live_before, "leaked KV handles");
-    })
+        assert_eq!(engine.stats().unwrap().live_kv, live_before, "leaked KV handles");
+    });
 }
 
 #[test]
@@ -127,7 +126,7 @@ fn works_across_all_backbones() {
                         "{backbone}: empty generation for {:?}", r.query);
             }
         }
-    })
+    });
 }
 
 #[test]
@@ -142,7 +141,7 @@ fn linkage_strategies_all_serve() {
             assert_eq!(rep.cluster_sizes.len(), 3, "{linkage:?}");
             assert_eq!(rep.results.len(), 6);
         }
-    })
+    });
 }
 
 #[test]
@@ -150,5 +149,9 @@ fn rejects_unknown_backbone() {
     with_engine(|store, engine| {
         let cfg = ServeConfig { backbone: "gpt-5".into(), ..Default::default() };
         assert!(Coordinator::new(store, engine, cfg).is_err());
-    })
+        // a GNN module exists in the manifest but has no KV geometry — the
+        // coordinator must reject it up front, not size cache entries at 0.
+        let cfg = ServeConfig { backbone: "gat".into(), ..Default::default() };
+        assert!(Coordinator::new(store, engine, cfg).is_err());
+    });
 }

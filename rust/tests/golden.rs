@@ -8,14 +8,15 @@ use subgcache::graph::{prefix_text, full_prompt, Subgraph};
 use subgcache::runtime::ArtifactStore;
 use subgcache::util::json::Json;
 
-fn store() -> ArtifactStore {
-    ArtifactStore::open(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
-        .expect("run `make artifacts` first")
+mod common;
+
+fn store() -> Option<ArtifactStore> {
+    common::store("golden test")
 }
 
 #[test]
 fn tokenizer_matches_python() {
-    let store = store();
+    let Some(store) = store() else { return };
     let tok = store.tokenizer();
     let cases = store.golden("tokenizer.json").unwrap();
     let cases = cases.as_arr().unwrap();
@@ -30,7 +31,7 @@ fn tokenizer_matches_python() {
 
 #[test]
 fn embedder_matches_python() {
-    let store = store();
+    let Some(store) = store() else { return };
     let cases = store.golden("embed.json").unwrap();
     for case in cases.as_arr().unwrap() {
         let text = case.get("text").as_str().unwrap();
@@ -46,7 +47,7 @@ fn embedder_matches_python() {
 
 #[test]
 fn verbalizer_matches_python() {
-    let store = store();
+    let Some(store) = store() else { return };
     let ds = store.dataset("scene_graph").unwrap();
     let cases = store.golden("verbalize.json").unwrap();
     for case in cases.as_arr().unwrap() {
@@ -67,7 +68,7 @@ fn verbalizer_matches_python() {
 
 #[test]
 fn datasets_match_table1() {
-    let store = store();
+    let Some(store) = store() else { return };
     let scene = store.dataset("scene_graph").unwrap();
     assert_eq!((scene.graph.n_nodes(), scene.graph.n_edges(), scene.queries.len()),
                (22, 147, 426));
@@ -80,7 +81,7 @@ fn datasets_match_table1() {
 fn dataset_vocab_fully_covered() {
     // Serving must never hit <unk> on dataset content (answers would be
     // ungeneratable) — mirrors python tests/test_train_aot.py.
-    let store = store();
+    let Some(store) = store() else { return };
     let tok = store.tokenizer();
     for name in ["scene_graph", "oag"] {
         let ds = store.dataset(name).unwrap();
@@ -97,7 +98,7 @@ fn dataset_vocab_fully_covered() {
 
 #[test]
 fn manifest_covers_all_modules() {
-    let store = store();
+    let Some(store) = store() else { return };
     let m = store.manifest();
     assert_eq!(m.llm_names().len(), 4, "expected 4 simulated backbones");
     assert_eq!(m.gnn_names().len(), 2, "expected graph_transformer + gat");

@@ -7,23 +7,18 @@ use subgcache::runtime::{ArtifactStore, Engine};
 
 const BACKBONE: &str = "llama-3.2-3b-sim";
 
-fn store() -> ArtifactStore {
-    ArtifactStore::open(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
-        .expect("run `make artifacts` first")
+mod common;
+
+fn store() -> Option<ArtifactStore> {
+    common::store("runtime e2e test")
 }
 
 fn ivec(v: &subgcache::util::json::Json, key: &str) -> Vec<i32> {
     v.get(key).as_arr().unwrap().iter().map(|x| x.as_i64().unwrap() as i32).collect()
 }
 
-/// Fresh engine per test: a process-static engine thread would still own
-/// the PJRT client while C++ static destructors run at exit (observed as an
-/// exit-time SIGSEGV); Engine::drop joins the thread deterministically.
-/// Tests in one binary run sequentially, so compile cost stays bounded.
-fn with_engine<T>(f: impl FnOnce(&ArtifactStore, &Engine) -> T) -> T {
-    let s = store();
-    let e = Engine::start(&s).expect("engine start");
-    f(&s, &e)
+fn with_engine<T>(f: impl FnOnce(&ArtifactStore, &Engine) -> T) -> Option<T> {
+    common::with_engine("runtime e2e test", f)
 }
 
 #[test]
@@ -58,7 +53,7 @@ fn split_path_matches_python_golden() {
 
         engine.release(kv2);
         engine.release(kv);
-    })
+    });
 }
 
 #[test]
@@ -73,7 +68,7 @@ fn baseline_path_matches_python_golden() {
         let gen = engine.generate(BACKBONE, &kv, flen, first).unwrap();
         assert_eq!(gen, ivec(&g, "baseline_generated"));
         engine.release(kv);
-    })
+    });
 }
 
 #[test]
@@ -99,7 +94,7 @@ fn cached_prefix_is_reusable_across_queries() {
         for h in [kv_a, kv_b, kv_c, kv] {
             engine.release(h);
         }
-    })
+    });
 }
 
 #[test]
@@ -120,7 +115,7 @@ fn release_invalidates_handle() {
             kv2
         };
         engine.release(stale);
-    })
+    });
 }
 
 #[test]
@@ -150,22 +145,58 @@ fn gnn_encoders_run_and_discriminate() {
             let e1b = engine.encode(gnn, p1b.x, p1b.adj, p1b.mask).unwrap();
             assert_eq!(e1, e1b, "{gnn}: encode must be deterministic");
         }
-    })
+    });
 }
 
 #[test]
 fn engine_stats_track_calls() {
     with_engine(|store, engine| {
-        let before: u64 = engine.stats().calls.iter()
+        let before: u64 = engine.stats().unwrap().calls.iter()
             .filter(|(k, _, _)| k.starts_with(BACKBONE))
             .map(|&(_, n, _)| n).sum();
         let g = store.golden(&format!("llm_{BACKBONE}.json")).unwrap();
         let prefix_tokens = ivec(&g, "prefix_tokens");
         let (kv, _) = engine.prefill(BACKBONE, &prefix_tokens, 5).unwrap();
         engine.release(kv);
-        let after: u64 = engine.stats().calls.iter()
+        let after: u64 = engine.stats().unwrap().calls.iter()
             .filter(|(k, _, _)| k.starts_with(BACKBONE))
             .map(|&(_, n, _)| n).sum();
         assert_eq!(after, before + 1);
-    })
+    });
+}
+
+#[test]
+fn release_many_returns_all_handles() {
+    with_engine(|store, engine| {
+        let g = store.golden(&format!("llm_{BACKBONE}.json")).unwrap();
+        let prefix_tokens = ivec(&g, "prefix_tokens");
+        let plen = g.get("prefix_len").as_i64().unwrap() as i32;
+        let live_before = engine.stats().unwrap().live_kv;
+        let mut handles = Vec::new();
+        for _ in 0..3 {
+            let (kv, _) = engine.prefill(BACKBONE, &prefix_tokens, plen).unwrap();
+            handles.push(kv);
+        }
+        assert_eq!(engine.stats().unwrap().live_kv, live_before + 3);
+        engine.release_many(handles);
+        assert_eq!(engine.stats().unwrap().live_kv, live_before,
+                   "release_many must drop every handle");
+        engine.release_many(Vec::new()); // empty batch is a no-op
+        assert_eq!(engine.stats().unwrap().live_kv, live_before);
+    });
+}
+
+#[test]
+fn kv_bytes_sized_from_manifest() {
+    let Some(store) = store() else { return };
+    let engine = Engine::start(&store).expect("engine start");
+    for name in store.manifest().llm_names() {
+        let dims = store.manifest().module(name).unwrap().dims.unwrap();
+        assert_eq!(engine.kv_bytes(name).unwrap(), 2 * dims.kv_bytes_each(),
+                   "{name}: k + v buffers");
+    }
+    for name in store.manifest().gnn_names() {
+        assert!(engine.kv_bytes(name).is_err(), "{name}: GNNs have no KV geometry");
+    }
+    assert!(engine.kv_bytes("no-such-module").is_err());
 }
