@@ -1,0 +1,217 @@
+//! Engine hot-path benchmarks: device-resident KV (the zero-copy
+//! prefill→extend handoff) and pipelined submit/wait, with a JSON emitter
+//! (`BENCH_engine.json`) so the wins are tracked run over run.
+//!
+//! Two modes:
+//! * **full** (artifacts present): device benchmarks of prefill / extend /
+//!   handoff / TTFT on the default engine vs a forced host-bounce engine
+//!   (`SUBGCACHE_KV_HOST_BOUNCE=1` — the seed's device→host→device KV
+//!   path), plus a serial-vs-pipelined two-query comparison, plus the host
+//!   cases below. The `*_host_kv_bytes` fields in the JSON record how many
+//!   KV bytes each engine moved through the host (0 is the zero-copy
+//!   target).
+//! * **host-only** (artifacts absent, e.g. the CI smoke step): only the
+//!   engine-free cases, in `Bench::quick()` budgets — the perf surface
+//!   still compiles, runs, and emits JSON on a fresh clone.
+
+use subgcache::cache::{CachePolicy, KvCacheManager};
+use subgcache::coordinator::argmax;
+use subgcache::graph::{Edge, Node, Subgraph, TextualGraph};
+use subgcache::retrieval::GraphFeatures;
+use subgcache::runtime::{pack_subgraph, ArtifactStore, Engine};
+use subgcache::util::bench::{Bench, Stats};
+
+const BACKBONE: &str = "llama-3.2-3b-sim";
+
+/// Small synthetic chain graph so the host-side cases need no artifacts.
+fn synth_graph(n: usize) -> TextualGraph {
+    let nodes = (0..n)
+        .map(|i| Node {
+            id: i,
+            name: format!("n{i}"),
+            text: format!("node {i} with attribute {}", i * 7 % 13),
+        })
+        .collect();
+    let edges = (0..n.saturating_sub(1))
+        .map(|i| Edge { src: i, dst: i + 1, text: "linked to".into() })
+        .collect();
+    TextualGraph::new("synthetic", nodes, edges).expect("chain graph is valid")
+}
+
+/// Engine-free cases: the host work that pipelining hides in device shadows.
+fn host_side_cases(b: &mut Bench) {
+    b.run("host: cache install+lookup+evict churn (64 clusters)", || {
+        let mut m: KvCacheManager<u64> = KvCacheManager::new(CachePolicy::new(1 << 20, 8));
+        for cid in 0..64usize {
+            let _ = m.install(cid, cid as u64, 96 * 1024);
+            m.unpin(cid);
+            let _ = m.lookup(cid % 8);
+        }
+        let _ = m.release_all();
+    });
+
+    let row: Vec<f32> = (0..4096)
+        .map(|i: u64| ((i.wrapping_mul(2654435761)) % 9973) as f32 * 1e-3)
+        .collect();
+    b.run("host: argmax over 4096-logit row", || {
+        std::hint::black_box(argmax(std::hint::black_box(&row)));
+    });
+
+    let g = synth_graph(64);
+    let feats = GraphFeatures::build(&g);
+    let sg = Subgraph::from_parts(0..16, 0..12);
+    let dim = feats.dim();
+    b.run("host: pack_subgraph (N=64)", || {
+        std::hint::black_box(pack_subgraph(&g, &feats, &sg, 64, dim));
+    });
+}
+
+/// Stand-in for per-query host prompt prep (retrieve + verbalize +
+/// tokenize) in the serial-vs-pipelined comparison.
+fn host_prep() {
+    let mut acc = 0u64;
+    for i in 0..200_000u64 {
+        acc = acc.wrapping_add(i ^ (acc >> 3));
+    }
+    std::hint::black_box(acc);
+}
+
+/// Device cases; returns extra (key, numeric-value) pairs for the JSON.
+fn full_cases(b: &mut Bench, store: &ArtifactStore)
+              -> anyhow::Result<Vec<(String, String)>> {
+    let c = *store.constants();
+    // the env flag is read once per Engine start, so two engines started
+    // with the flag flipped give both KV paths in one process.
+    std::env::remove_var("SUBGCACHE_KV_HOST_BOUNCE");
+    let fast = Engine::start(store)?;
+    std::env::set_var("SUBGCACHE_KV_HOST_BOUNCE", "1");
+    let slow = Engine::start(store)?;
+    std::env::remove_var("SUBGCACHE_KV_HOST_BOUNCE");
+    fast.warmup(BACKBONE)?;
+    slow.warmup(BACKBONE)?;
+
+    let mut tokens = vec![c.pad_id; c.max_seq];
+    tokens[0] = c.bos_id;
+    for (i, t) in tokens.iter_mut().enumerate().take(400).skip(1) {
+        *t = 4 + (i as i32 % 200);
+    }
+    let mut q = vec![c.pad_id; c.max_q];
+    for (i, t) in q.iter_mut().enumerate().take(12) {
+        *t = 4 + i as i32;
+    }
+    let qlen = 12i32;
+
+    for (name, engine) in [("device-resident", &fast), ("host-bounce", &slow)] {
+        let (kv, _) = engine.prefill(BACKBONE, &tokens, 400)?;
+        b.run(&format!("prefill 400 tokens [{name}]"), || {
+            let (h, _) = engine.prefill(BACKBONE, &tokens, 400).unwrap();
+            engine.release(h);
+        });
+        b.run(&format!("extend Q={} [{name}]", c.max_q), || {
+            let (h, _) = engine.extend(BACKBONE, &kv, 400, &q, qlen).unwrap();
+            engine.release(h);
+        });
+        b.run(&format!("prefill->extend handoff [{name}]"), || {
+            let (h, _) = engine.prefill(BACKBONE, &tokens, 400).unwrap();
+            let (h2, _) = engine.extend(BACKBONE, &h, 400, &q, qlen).unwrap();
+            engine.release(h2);
+            engine.release(h);
+        });
+        // TTFT core: prompt-ready -> first token over a cold prefix
+        // (prefill + extend + argmax over the returned [V] row).
+        b.run(&format!("ttft prefix+question [{name}]"), || {
+            let (h, _) = engine.prefill(BACKBONE, &tokens, 400).unwrap();
+            let (h2, row) = engine.extend(BACKBONE, &h, 400, &q, qlen).unwrap();
+            std::hint::black_box(argmax(&row));
+            engine.release(h2);
+            engine.release(h);
+        });
+        engine.release(kv);
+    }
+
+    // pipelined vs serial submission: the same two-query workload, with the
+    // second query's host prep either serialized or ridden in the first
+    // prefill's shadow via submit/wait.
+    b.run("2 queries serial (prep then prefill, twice)", || {
+        for _ in 0..2 {
+            host_prep();
+            let (h, _) = fast.prefill(BACKBONE, &tokens, 400).unwrap();
+            fast.release(h);
+        }
+    });
+    b.run("2 queries pipelined (next prep in prefill shadow)", || {
+        host_prep(); // the opening query's prep has no shadow to ride
+        let pending = fast.submit_prefill(BACKBONE, &tokens, 400).unwrap();
+        host_prep(); // second query's prep overlaps the first prefill
+        let (h, _) = pending.wait().unwrap();
+        fast.release(h);
+        let pending = fast.submit_prefill(BACKBONE, &tokens, 400).unwrap();
+        let (h, _) = pending.wait().unwrap();
+        fast.release(h);
+    });
+
+    let fs = fast.stats()?;
+    let ss = slow.stats()?;
+    println!(
+        "\nhost KV bytes moved: device-resident {} vs host-bounce {}",
+        fs.host_kv_bytes, ss.host_kv_bytes
+    );
+    Ok(vec![
+        ("device_host_kv_bytes".into(), fs.host_kv_bytes.to_string()),
+        ("bounce_host_kv_bytes".into(), ss.host_kv_bytes.to_string()),
+    ])
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn emit_json(path: &str, mode: &str, results: &[Stats],
+             extra: &[(String, String)]) -> anyhow::Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!(
+        "  \"bench\": \"engine_hot_path\",\n  \"mode\": \"{mode}\",\n"
+    ));
+    for (k, v) in extra {
+        s.push_str(&format!("  \"{}\": {v},\n", json_escape(k)));
+    }
+    s.push_str("  \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"iters\": {}, \"median_ns\": {:.0}, \
+             \"mean_ns\": {:.0}, \"p95_ns\": {:.0}, \"stddev_ns\": {:.0}}}{}\n",
+            json_escape(&r.name),
+            r.iters,
+            r.median_ns,
+            r.mean_ns,
+            r.p95_ns,
+            r.stddev_ns,
+            if i + 1 == results.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s)?;
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = ArtifactStore::discover().ok();
+    let quick = artifacts.is_none() || std::env::var("SUBGCACHE_BENCH_QUICK").is_ok();
+    let mut b = if quick { Bench::quick() } else { Bench::default() };
+    let mode = if artifacts.is_some() { "full" } else { "host-only" };
+    println!("== engine hot path ({mode}) ==");
+
+    host_side_cases(&mut b);
+    let extra = match &artifacts {
+        Some(store) => full_cases(&mut b, store)?,
+        None => {
+            println!("(artifacts/ absent: device cases skipped, quick budgets)");
+            Vec::new()
+        }
+    };
+
+    emit_json("BENCH_engine.json", mode, b.results(), &extra)?;
+    println!("\nwrote BENCH_engine.json ({} cases)", b.results().len());
+    Ok(())
+}

@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
         engine.release(h);
     });
     b.run("extend query against cached prefix (Q=32)", || {
-        let (h, _) = engine.extend(backbone, &kv, 400, &q).unwrap();
+        let (h, _) = engine.extend(backbone, &kv, 400, &q, 12).unwrap();
         engine.release(h);
     });
     b.run("generate 32 tokens (in-HLO scan decode)", || {

@@ -4,7 +4,7 @@
 //! summary line under each block shows the resulting hit/eviction picture.
 
 use subgcache::harness::{cache_policy_from_args, cache_summary, push_block, run_cell,
-                         Cell, METRIC_HEADER};
+                         throughput_summary, Cell, METRIC_HEADER};
 use subgcache::metrics::Table;
 use subgcache::prelude::*;
 
@@ -35,7 +35,9 @@ fn main() -> anyhow::Result<()> {
                 let r = run_cell(&store, &engine, &cell)?;
                 let label = if retriever == "g-retriever" { "G-Retriever" } else { "GRAG" };
                 push_block(&mut t, label, &r);
-                summaries.push(format!("{label}: {}", cache_summary(&r.subgcache)));
+                summaries.push(format!("{label}: {} | {}",
+                                       cache_summary(&r.subgcache),
+                                       throughput_summary(&r.subgcache)));
             }
             t.print();
             for s in summaries {

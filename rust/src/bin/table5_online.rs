@@ -9,7 +9,8 @@
 //! online analogue of the paper's baseline-vs-SubGCache gap.
 
 use subgcache::harness::{batch_from_env, cache_policy_from_args, cache_summary,
-                         online_cells, run_online_cell, Cell, ONLINE_HEADER};
+                         online_cells, run_online_cell, throughput_summary, Cell,
+                         ONLINE_HEADER};
 use subgcache::metrics::Table;
 use subgcache::prelude::*;
 
@@ -53,9 +54,10 @@ fn main() -> anyhow::Result<()> {
             ]);
             t.row(&online_cells(&format!("{label}+SubGCache-online"), &r.online));
             summaries.push(format!(
-                "{label}: {} clusters opened, {}",
+                "{label}: {} clusters opened, {} | {}",
                 r.online.cluster_sizes.len(),
-                cache_summary(&r.online)
+                cache_summary(&r.online),
+                throughput_summary(&r.online)
             ));
         }
         t.print();

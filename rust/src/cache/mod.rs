@@ -263,7 +263,17 @@ impl<H> KvCacheManager<H> {
     }
 
     pub fn is_pinned(&self, cluster_id: usize) -> bool {
-        self.idx(cluster_id).map(|i| self.entries[i].pins > 0).unwrap_or(false)
+        self.pin_count(cluster_id) > 0
+    }
+
+    /// Current pin count of a resident entry (0 when absent). Pins nest,
+    /// and under pipelined serving they are the lifetime anchor for
+    /// in-flight engine tickets: a cluster is pinned from before its
+    /// prefill/extend ticket is submitted until after `wait` returns, so
+    /// host-side overlap work running in the ticket's shadow can never
+    /// admit an entry that evicts the one the device is still reading.
+    pub fn pin_count(&self, cluster_id: usize) -> u32 {
+        self.idx(cluster_id).map(|i| self.entries[i].pins).unwrap_or(0)
     }
 
     /// Explicitly release one cluster's cache (pins are the caller's own
@@ -588,6 +598,31 @@ mod tests {
             assert_eq!(m.stats().resident_bytes, 0);
             assert_eq!(m.stats().released as usize, returned.len());
         });
+    }
+
+    #[test]
+    fn nested_pins_cover_overlapping_tickets() {
+        // Two in-flight tickets on the same cluster (e.g. a warm hit's
+        // extend submitted while the install pin is still held) must stack:
+        // the entry survives budget pressure until the LAST ticket unpins.
+        let mut m: KvCacheManager<u32> = KvCacheManager::new(CachePolicy::new(usize::MAX, 1));
+        m.install(0, 10, 1); // ticket 1 (install pin)
+        assert_eq!(m.pin_count(0), 1);
+        assert!(m.pin(0)); // ticket 2
+        assert_eq!(m.pin_count(0), 2);
+        m.unpin(0); // ticket 1 completes
+        assert_eq!(m.pin_count(0), 1);
+        let evicted = m.install(1, 11, 1); // budget pressure: still pinned
+        assert!(evicted.is_empty(), "cluster with a live ticket must survive");
+        assert!(m.contains(0));
+        m.unpin(0); // ticket 2 completes
+        assert_eq!(m.pin_count(0), 0);
+        let evicted = m.install(2, 12, 1);
+        assert_eq!(evicted, vec![10], "unpinned entry finally reclaimable");
+        assert_eq!(m.pin_count(99), 0, "absent cluster has no pins");
+        m.unpin(1);
+        m.unpin(2);
+        m.release_all();
     }
 
     #[test]

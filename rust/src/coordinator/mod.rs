@@ -26,7 +26,7 @@
 //! PFTT. With c = m (singleton clusters) the pipeline degenerates to the
 //! baseline, which `tests/coordinator_e2e.rs` checks end-to-end.
 //!
-//! **Online**: nothing is amortized — each query pays, in wall-clock order,
+//! **Online**: nothing is amortized — each query pays, in arrival order,
 //! its own retrieval, GNN encoding + centroid assignment, and prompt build.
 //! A **hit** (warm representative resident) pays only the question `extend`
 //! in PFTT; a **miss** (new cluster, or representative evicted under the
@@ -34,6 +34,25 @@
 //! The hit/miss split is recorded per query
 //! ([`crate::metrics::QueryLatency::cache_hit`]) and surfaces as
 //! `ttft_hit_ms` / `ttft_miss_ms` on [`crate::metrics::BatchMetrics`].
+//!
+//! # Pipelined submission
+//!
+//! Engine calls go through the runtime's submit/wait ticket API
+//! ([`crate::runtime::PendingPrefill`] et al.), and both SubGCache paths
+//! overlap host work with in-flight device execution: `serve_subgcache`
+//! tokenizes a cluster's member questions in the shadow of the
+//! representative prefill, and `serve_online` runs query *i+1*'s retrieval,
+//! GNN packing and question tokenization while the engine executes query
+//! *i*'s prefill/extend. To keep PFTT/TTFT semantics honest under that
+//! overlap, per-query latencies are composed from component times — host
+//! stages timed where they execute and charged to their own query, engine
+//! stages charged from the engine-thread [`crate::runtime::CallTiming`]
+//! (queue seconds + execution span) — never from a wall timer spanning a
+//! neighbor's shadow work. The overlap win is reported separately as
+//! [`crate::metrics::BatchMetrics::wall_time`] /
+//! [`crate::metrics::BatchMetrics::qps`], with
+//! [`crate::metrics::BatchMetrics::overlap_time`] sizing how much host prep
+//! rode in engine shadows.
 
 mod online;
 mod pipeline;

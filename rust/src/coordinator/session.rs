@@ -6,6 +6,19 @@
 //! make (full prefill vs. cached-prefix extend) and in how raw timing splits
 //! are composed into [`QueryLatency`] (amortized in-batch, wall-clock
 //! online) — see the module docs in [`super`].
+//!
+//! # Timing under pipelined submission
+//!
+//! Engine calls go through the submit/wait ticket API, so the coordinator
+//! may run *another* query's host prep between submit and wait. A plain
+//! wall timer around that window would charge the neighbor's shadow work to
+//! this query, so every outcome here is composed from per-component
+//! measurements instead: host stages are timed where they execute (whoever
+//! ran them in whichever shadow), engine stages use the engine-thread
+//! [`crate::runtime::CallTiming`] (queue seconds charged to the query,
+//! execution span measured on the engine thread). The pipelining win
+//! therefore shows up in `BatchMetrics::wall_time`/`qps`, never as
+//! mysteriously shrunken per-query latencies.
 
 use crate::data::{answer_correct, Query};
 use crate::graph::{full_prompt, prefix_text, question_text, Subgraph, TextualGraph};
@@ -16,7 +29,11 @@ use crate::tokenizer::Tokenizer;
 use super::{argmax, QueryResult};
 
 /// Raw timing splits of one question served against a cached prefix.
-/// All fields are seconds since the query's own timer started.
+/// Composed component times (see the module docs), all in seconds since the
+/// query's own prompt stage began:
+/// `t_prompt` = question tokenization; `t_first` adds the extend
+/// (queue + engine span) and the first-token argmax; `t_done` adds the
+/// scan-decode generate.
 pub(crate) struct ExtendOutcome {
     pub predicted: String,
     /// question tokenization done (prompt ready)
@@ -33,6 +50,16 @@ pub(crate) struct FullOutcome {
     pub result: QueryResult,
     /// LLM-only seconds (prefill + decode), for `BatchMetrics::llm_time`.
     pub llm_secs: f64,
+}
+
+/// A tokenized question, ready to extend a cached prefix. Producing one is
+/// pure host work, so pipelined callers build it in the shadow of an
+/// in-flight engine call; `tok_secs` is charged to the owning query's
+/// prompt time regardless of whose shadow it ran in.
+pub(crate) struct PreparedQuestion {
+    pub tokens: Vec<i32>,
+    pub qlen: usize,
+    pub tok_secs: f64,
 }
 
 /// Borrowed view over everything the per-query flow needs.
@@ -80,7 +107,9 @@ impl<'a> ServeSession<'a> {
         (ids, plen)
     }
 
-    /// Question tokens padded to Q.
+    /// Question tokens padded to Q. `qlen` may be 0 for empty question
+    /// text — the engine clamps its logits-row selection, so a degenerate
+    /// query costs one answer, not the process.
     pub fn question_tokens(&self, qtext: &str) -> (Vec<i32>, usize) {
         let c = self.store.constants();
         let mut ids = Vec::with_capacity(c.max_q);
@@ -89,6 +118,14 @@ impl<'a> ServeSession<'a> {
         let qlen = ids.len();
         ids.resize(c.max_q, c.pad_id);
         (ids, qlen)
+    }
+
+    /// Tokenize one question, timing the work (host-only — safe to run in
+    /// the shadow of an in-flight engine call).
+    pub fn prepare_question(&self, qtext: &str) -> PreparedQuestion {
+        let t = Timer::start();
+        let (tokens, qlen) = self.question_tokens(qtext);
+        PreparedQuestion { tokens, qlen, tok_secs: t.secs() }
     }
 
     fn decode_answer(&self, first: i32, gen: &[i32]) -> String {
@@ -114,22 +151,28 @@ impl<'a> ServeSession<'a> {
     // -- serving flows -------------------------------------------------------
 
     /// Baseline flow for one query: verbalize → full prefill → decode, with
-    /// the seed's exact latency accounting (retrieval already charged by the
-    /// caller is NOT included here — pass the retrieved subgraph in).
+    /// the seed's latency accounting composed from components (retrieval
+    /// already charged by the caller is NOT included here — pass the
+    /// retrieved subgraph in).
     pub fn serve_full(&self, g: &TextualGraph, sg: Subgraph, q: &Query)
                       -> anyhow::Result<FullOutcome> {
-        let t_all = Timer::start();
+        let t_build = Timer::start();
         let (tokens, plen) = self.full_tokens(g, &sg, &q.text);
-        let t_prompt_ready = t_all.secs();
+        let t_prompt_ready = t_build.secs();
 
-        let (kv, logits) = self.engine.prefill(self.backbone, &tokens, plen as i32)?;
+        let (kv, logits, prefill_t) = self.engine
+            .submit_prefill(self.backbone, &tokens, plen as i32)?
+            .wait_timed()?;
+        let t_host = Timer::start();
         let first = argmax(&logits);
-        let ttft = t_all.secs();
-        let pftt = ttft - t_prompt_ready;
+        let pftt = prefill_t.secs() + t_host.secs();
+        let ttft = t_prompt_ready + pftt;
 
-        let gen = self.engine.generate(self.backbone, &kv, plen as i32, first)?;
+        let (gen, gen_t) = self.engine
+            .submit_generate(self.backbone, &kv, plen as i32, first)?
+            .wait_timed()?;
         self.engine.release(kv);
-        let rt = t_all.secs();
+        let rt = ttft + gen_t.secs();
 
         let predicted = self.decode_answer(first, &gen);
         let result = self.result(q, predicted, usize::MAX, sg);
@@ -137,35 +180,36 @@ impl<'a> ServeSession<'a> {
             latency: QueryLatency { rt, ttft, pftt, correct: result.correct,
                                     cache_hit: None },
             result,
-            llm_secs: rt - t_prompt_ready,
+            llm_secs: prefill_t.secs() + gen_t.secs(),
         })
     }
 
-    /// Cached-prefix flow for one question: tokenize → `extend` against the
-    /// resident representative KV → decode. Returns raw timing splits; the
-    /// caller composes them into `QueryLatency` under its own accounting
-    /// rules (amortized shares in-batch, wall-clock online).
-    pub fn extend_decode(&self, kv_prefix: &KvHandle, plen: usize, q: &Query)
-                         -> anyhow::Result<ExtendOutcome> {
-        let c = self.store.constants();
-        let t_q = Timer::start();
-        let (q_tokens, qlen) = self.question_tokens(&q.text);
-        let t_prompt = t_q.secs();
+    /// Cached-prefix flow for one pre-tokenized question: `extend` against
+    /// the resident representative KV → decode. `overlap` runs exactly once,
+    /// in the shadow of the in-flight extend — pipelined callers use it for
+    /// the next query's host prep, serial callers pass `|| {}`. Returns raw
+    /// timing splits; the caller composes them into `QueryLatency` under its
+    /// own accounting rules (amortized shares in-batch, wall-clock online).
+    pub fn extend_decode_prepared(&self, kv_prefix: &KvHandle, plen: usize,
+                                  prep: &PreparedQuestion, mut overlap: impl FnMut())
+                                  -> anyhow::Result<ExtendOutcome> {
+        let pending = self.engine.submit_extend(self.backbone, kv_prefix, plen as i32,
+                                                &prep.tokens, prep.qlen as i32)?;
+        overlap();
+        let (kv_q, row, ext_t) = pending.wait_timed()?;
+        let t_host = Timer::start();
+        let first = argmax(&row);
+        let t_first = prep.tok_secs + ext_t.secs() + t_host.secs();
 
-        let (kv_q, logits) =
-            self.engine.extend(self.backbone, kv_prefix, plen as i32, &q_tokens)?;
-        let row = &logits[(qlen - 1) * c.vocab..qlen * c.vocab];
-        let first = argmax(row);
-        let t_first = t_q.secs();
-
-        let gen = self.engine.generate(self.backbone, &kv_q,
-                                       (plen + qlen) as i32, first)?;
+        let (gen, gen_t) = self.engine
+            .submit_generate(self.backbone, &kv_q, (plen + prep.qlen) as i32, first)?
+            .wait_timed()?;
         self.engine.release(kv_q);
-        let t_done = t_q.secs();
+        let t_done = t_first + gen_t.secs();
 
         Ok(ExtendOutcome {
             predicted: self.decode_answer(first, &gen),
-            t_prompt,
+            t_prompt: prep.tok_secs,
             t_first,
             t_done,
         })

@@ -164,6 +164,19 @@ pub fn cache_summary(r: &ServeReport) -> String {
     )
 }
 
+/// One-line wall-clock/throughput summary for diagnostics under a table.
+/// Per-query latencies stay composed from each query's own component times
+/// (see `coordinator` docs), so the submit/wait pipelining win is only
+/// visible here: wall-clock, queries per second, and how much host prep ran
+/// in the shadow of in-flight engine calls.
+pub fn throughput_summary(r: &ServeReport) -> String {
+    let m = &r.metrics;
+    format!(
+        "wall {:.2}s ({:.1} q/s), {:.1} ms host prep overlapped",
+        m.wall_time, m.qps(), m.overlap_time * 1e3
+    )
+}
+
 /// Standard env-tunable batch size for the harness binaries: the paper's
 /// main tables use 100; `SUBGCACHE_BATCH` overrides for quick runs.
 pub fn batch_from_env(default: usize) -> usize {

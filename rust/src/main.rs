@@ -95,6 +95,12 @@ fn main() -> anyhow::Result<()> {
     t.row(&["PFTT (ms)".into(), format!("{:.2}", report.metrics.pftt_ms())]);
     t.row(&["cluster stage (ms)".into(),
             format!("{:.2}", report.metrics.cluster_time * 1e3)]);
+    t.row(&["wall (s)".into(), format!("{:.2}", report.metrics.wall_time)]);
+    t.row(&["throughput (q/s)".into(), format!("{:.2}", report.metrics.qps())]);
+    if report.metrics.overlap_time > 0.0 {
+        t.row(&["host prep overlapped (ms)".into(),
+                format!("{:.2}", report.metrics.overlap_time * 1e3)]);
+    }
     if mode == "online" {
         t.row(&["TTFT hit (ms)".into(),
                 format!("{:.2}", report.metrics.ttft_hit_ms())]);
@@ -122,7 +128,8 @@ fn main() -> anyhow::Result<()> {
                      r.id, r.query, r.predicted, r.gold, r.correct);
         }
         let st = engine.stats()?;
-        println!("engine: compile {:.2}s, live_kv {}", st.compile_secs, st.live_kv);
+        println!("engine: compile {:.2}s, live_kv {}, host KV bytes {}",
+                 st.compile_secs, st.live_kv, st.host_kv_bytes);
         for (k, n, s) in st.calls {
             println!("  {k}: {n} calls, {:.1} ms avg", s / n as f64 * 1e3);
         }

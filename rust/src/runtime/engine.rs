@@ -1,4 +1,5 @@
-//! PJRT execution engine.
+//! PJRT execution engine: device-resident KV caches behind a ticketed
+//! submit/wait API.
 //!
 //! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so a dedicated
 //! engine thread owns the client, the lazily-compiled executables, the
@@ -7,14 +8,46 @@
 //! production LLM servers (vLLM et al.) and makes the L3 side trivially
 //! thread-safe.
 //!
+//! # Zero-copy KV
+//!
+//! `prefill`/`extend` keep their K/V outputs **on the device**: when PJRT
+//! hands back the executable's root tuple as one buffer per leaf (the
+//! flattened form), the K and V buffers go straight into the engine's handle
+//! map without ever visiting the host. Only logits travel host-ward:
+//! prefill's HLO already emits the single `[V]` next-token row (selected by
+//! `plen` on device); extend's `[Q,V]` matrix crosses to the host once, the
+//! engine slices the `qlen` row there, and only `[V]` floats go over the
+//! reply channel (moving that slice into the HLO is a documented ROADMAP
+//! follow-on). If the binding instead returns a single tuple-shaped buffer, the
+//! only untuple path it offers runs through a host literal — that fallback
+//! (the seed's original behaviour) is kept, and every KV byte it bounces is
+//! counted in [`EngineStats::host_kv_bytes`] so the regression is visible.
+//! `SUBGCACHE_KV_HOST_BOUNCE=1` forces the bounce for parity testing.
+//!
+//! # Submit/wait
+//!
+//! Every execute request can be issued without blocking: `submit_prefill` /
+//! `submit_extend` / `submit_generate` / `submit_encode` enqueue the call
+//! and return a ticket ([`PendingPrefill`], [`PendingExtend`],
+//! [`PendingGenerate`], [`PendingEncode`]). The caller overlaps host work
+//! with device execution and collects the result with `wait` (or
+//! `wait_timed`, which adds the engine-side [`CallTiming`]: queue seconds —
+//! charged to the query — and the engine-thread execution span). The
+//! blocking `prefill`/`extend`/`generate`/`encode` wrappers are submit +
+//! wait. Dropping an unawaited KV-producing ticket abandons its handle until
+//! engine shutdown (a bounded leak, same class as an error-path unwind), so
+//! pipelined callers should always wait.
+//!
 //! KV caches never leave the engine: `prefill`/`extend` return opaque
 //! [`KvHandle`]s that later calls reference, so the coordinator moves tokens
-//! and logits only.
+//! and one logits row per call. Environment flags (`SUBGCACHE_TRACE`,
+//! `SUBGCACHE_KV_HOST_BOUNCE`) are read once at [`Engine::start_at`] on the
+//! caller's thread — never on the hot path.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Mutex;
+use std::time::Instant;
 
 use super::manifest::{EntrySpec, Manifest, ModuleSpec};
 
@@ -30,35 +63,64 @@ pub struct EngineStats {
     pub calls: Vec<(String, u64, f64)>,
     pub live_kv: usize,
     pub compile_secs: f64,
+    /// KV bytes that moved through the host while storing prefill/extend
+    /// outputs. 0 on the zero-copy path; non-zero means the tuple-literal
+    /// fallback (or forced `SUBGCACHE_KV_HOST_BOUNCE`) is in effect.
+    pub host_kv_bytes: u64,
 }
+
+/// Engine-side timing of one executed call, measured on the engine thread
+/// so it stays honest under pipelined submission: `queue_secs` is how long
+/// the request sat in the channel before the engine picked it up (charged
+/// to the query), `device_secs` the engine-thread span of the call itself
+/// (execute + result materialization).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CallTiming {
+    pub queue_secs: f64,
+    pub device_secs: f64,
+}
+
+impl CallTiming {
+    /// Total submit→reply engine time (queue + execution).
+    pub fn secs(&self) -> f64 {
+        self.queue_secs + self.device_secs
+    }
+}
+
+type KvReply = Sender<anyhow::Result<(u64, Vec<f32>, CallTiming)>>;
 
 enum Req {
     Prefill {
         module: String,
         tokens: Vec<i32>,
         plen: i32,
-        reply: Sender<anyhow::Result<(u64, Vec<f32>)>>,
+        submitted: Instant,
+        reply: KvReply,
     },
     Extend {
         module: String,
         kv: u64,
         plen: i32,
         q_tokens: Vec<i32>,
-        reply: Sender<anyhow::Result<(u64, Vec<f32>)>>,
+        qlen: i32,
+        submitted: Instant,
+        reply: KvReply,
     },
     Generate {
         module: String,
         kv: u64,
         cur_len: i32,
         first_tok: i32,
-        reply: Sender<anyhow::Result<Vec<i32>>>,
+        submitted: Instant,
+        reply: Sender<anyhow::Result<(Vec<i32>, CallTiming)>>,
     },
     Encode {
         module: String,
         x: Vec<f32>,
         adj: Vec<f32>,
         mask: Vec<f32>,
-        reply: Sender<anyhow::Result<Vec<f32>>>,
+        submitted: Instant,
+        reply: Sender<anyhow::Result<(Vec<f32>, CallTiming)>>,
     },
     Release {
         kv: u64,
@@ -76,10 +138,88 @@ enum Req {
     Shutdown,
 }
 
-/// Thread-safe handle to the engine thread.
+/// One in-flight reply slot. `wait` blocks until the engine answers; a
+/// dropped reply sender (engine died, or the request was never processed)
+/// surfaces as an error instead of hanging forever.
+struct Ticket<T> {
+    rx: Receiver<anyhow::Result<T>>,
+}
+
+impl<T> Ticket<T> {
+    fn wait(self) -> anyhow::Result<T> {
+        self.rx.recv().map_err(|_| {
+            anyhow::anyhow!(
+                "engine dropped the reply channel before answering \
+                 (engine shut down or the ticket's request was never run)"
+            )
+        })?
+    }
+}
+
+/// Ticket for an in-flight KV-producing call — `prefill`
+/// ([`Engine::submit_prefill`]) or `extend` ([`Engine::submit_extend`]);
+/// yields the new KV handle and the next-token logits row.
+pub struct PendingKv(Ticket<(u64, Vec<f32>, CallTiming)>);
+
+/// Ticket for an in-flight `prefill` (see [`Engine::submit_prefill`]).
+pub type PendingPrefill = PendingKv;
+/// Ticket for an in-flight `extend` (see [`Engine::submit_extend`]).
+pub type PendingExtend = PendingKv;
+
+impl PendingKv {
+    /// Block for the new KV handle and the next-token logits row.
+    pub fn wait(self) -> anyhow::Result<(KvHandle, Vec<f32>)> {
+        let (kv, logits, _) = self.wait_timed()?;
+        Ok((kv, logits))
+    }
+
+    /// Like [`wait`](Self::wait), plus the engine-side [`CallTiming`].
+    pub fn wait_timed(self) -> anyhow::Result<(KvHandle, Vec<f32>, CallTiming)> {
+        let (id, logits, t) = self.0.wait()?;
+        Ok((KvHandle(id), logits, t))
+    }
+}
+
+/// Ticket for an in-flight `generate` (see [`Engine::submit_generate`]).
+pub struct PendingGenerate(Ticket<(Vec<i32>, CallTiming)>);
+
+impl PendingGenerate {
+    pub fn wait(self) -> anyhow::Result<Vec<i32>> {
+        Ok(self.wait_timed()?.0)
+    }
+
+    pub fn wait_timed(self) -> anyhow::Result<(Vec<i32>, CallTiming)> {
+        self.0.wait()
+    }
+}
+
+/// Ticket for an in-flight GNN `encode` (see [`Engine::submit_encode`]).
+pub struct PendingEncode(Ticket<(Vec<f32>, CallTiming)>);
+
+impl PendingEncode {
+    pub fn wait(self) -> anyhow::Result<Vec<f32>> {
+        Ok(self.wait_timed()?.0)
+    }
+
+    pub fn wait_timed(self) -> anyhow::Result<(Vec<f32>, CallTiming)> {
+        self.0.wait()
+    }
+}
+
+/// Flags resolved once at engine start (no hot-path env lookups).
+#[derive(Debug, Clone, Copy)]
+struct EngineOpts {
+    trace: bool,
+    host_bounce: bool,
+}
+
+/// Thread-safe handle to the engine thread. The request sender is held
+/// directly (mpsc senders are `Send` + `Sync` over `Send` payloads), so
+/// enqueuing a call costs one channel push — no lock, no poisoned-mutex
+/// failure mode.
 pub struct Engine {
-    tx: Mutex<Sender<Req>>,
-    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    tx: Sender<Req>,
+    thread: Option<std::thread::JoinHandle<()>>,
     /// Copy of the manifest kept on the handle side so byte-sizing queries
     /// ([`Engine::kv_bytes`]) need no engine-thread roundtrip.
     manifest: Manifest,
@@ -90,72 +230,105 @@ impl Engine {
     pub fn start_at(root: PathBuf, manifest: Manifest) -> anyhow::Result<Engine> {
         let (tx, rx) = channel::<Req>();
         let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+        // Environment is read here, once, on the caller's thread: hot-path
+        // calls never touch the environment, and tests can flip the flags
+        // between engine starts without racing the engine thread.
+        let opts = EngineOpts {
+            trace: std::env::var("SUBGCACHE_TRACE").is_ok(),
+            host_bounce: std::env::var("SUBGCACHE_KV_HOST_BOUNCE").is_ok(),
+        };
         let thread_manifest = manifest.clone();
         let thread = std::thread::Builder::new()
             .name("pjrt-engine".into())
-            .spawn(move || engine_main(root, thread_manifest, rx, ready_tx))?;
+            .spawn(move || engine_main(root, thread_manifest, opts, rx, ready_tx))?;
         ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
-        Ok(Engine {
-            tx: Mutex::new(tx),
-            thread: Mutex::new(Some(thread)),
-            manifest,
-        })
+        Ok(Engine { tx, thread: Some(thread), manifest })
     }
 
-    /// Enqueue a request. A dead or poisoned engine yields an error (failing
-    /// the one request) instead of panicking the caller's thread.
+    /// Enqueue a request. A dead engine yields an error (failing the one
+    /// request) instead of panicking the caller's thread.
     fn send(&self, req: Req) -> anyhow::Result<()> {
-        let tx = self
-            .tx
-            .lock()
-            .map_err(|_| anyhow::anyhow!("engine sender poisoned by an earlier panic"))?;
-        tx.send(req)
+        self.tx
+            .send(req)
             .map_err(|_| anyhow::anyhow!("engine thread has shut down"))
     }
 
-    fn roundtrip<T>(&self, make: impl FnOnce(Sender<T>) -> Req) -> anyhow::Result<T> {
+    /// Submit a prefill of `tokens` (padded to S, real length `plen`)
+    /// without blocking; the ticket yields the new KV handle and the
+    /// next-token logits row after position `plen - 1`.
+    pub fn submit_prefill(&self, module: &str, tokens: &[i32], plen: i32)
+                          -> anyhow::Result<PendingPrefill> {
         let (reply, rx) = channel();
-        self.send(make(reply))?;
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("engine thread died before replying"))
+        self.send(Req::Prefill {
+            module: module.into(), tokens: tokens.to_vec(), plen,
+            submitted: Instant::now(), reply,
+        })?;
+        Ok(PendingKv(Ticket { rx }))
     }
 
-    /// Prefill `tokens` (padded to S) with real length `plen`; returns the
-    /// new KV handle and the next-token logits after position `plen - 1`.
+    /// Blocking prefill: [`Engine::submit_prefill`] + wait.
     pub fn prefill(&self, module: &str, tokens: &[i32], plen: i32)
                    -> anyhow::Result<(KvHandle, Vec<f32>)> {
-        let (id, logits) = self.roundtrip(|reply| Req::Prefill {
-            module: module.into(), tokens: tokens.to_vec(), plen, reply,
-        })??;
-        Ok((KvHandle(id), logits))
+        self.submit_prefill(module, tokens, plen)?.wait()
     }
 
-    /// Append `q_tokens` (padded to Q) at position `plen` on top of `kv`
-    /// (which is NOT consumed — it stays reusable, the SubGCache property).
-    /// Returns a new handle and the logits matrix `[Q, V]` flattened.
-    pub fn extend(&self, module: &str, kv: &KvHandle, plen: i32, q_tokens: &[i32])
-                  -> anyhow::Result<(KvHandle, Vec<f32>)> {
-        let (id, logits) = self.roundtrip(|reply| Req::Extend {
-            module: module.into(), kv: kv.0, plen, q_tokens: q_tokens.to_vec(), reply,
-        })??;
-        Ok((KvHandle(id), logits))
+    /// Submit an extend of `q_tokens` (padded to Q, real length `qlen`) at
+    /// position `plen` on top of `kv` (which is NOT consumed — it stays
+    /// reusable, the SubGCache property) without blocking. The ticket yields
+    /// a new handle and the `[V]` logits row after the last real question
+    /// token (row `qlen - 1`, clamped — an empty question selects row 0
+    /// instead of panicking).
+    pub fn submit_extend(&self, module: &str, kv: &KvHandle, plen: i32,
+                         q_tokens: &[i32], qlen: i32) -> anyhow::Result<PendingExtend> {
+        let (reply, rx) = channel();
+        self.send(Req::Extend {
+            module: module.into(), kv: kv.0, plen, q_tokens: q_tokens.to_vec(), qlen,
+            submitted: Instant::now(), reply,
+        })?;
+        Ok(PendingKv(Ticket { rx }))
     }
 
-    /// Greedy-decode up to G tokens starting from `first_tok` at `cur_len`.
-    /// `kv` is not consumed.
+    /// Blocking extend: [`Engine::submit_extend`] + wait.
+    pub fn extend(&self, module: &str, kv: &KvHandle, plen: i32, q_tokens: &[i32],
+                  qlen: i32) -> anyhow::Result<(KvHandle, Vec<f32>)> {
+        self.submit_extend(module, kv, plen, q_tokens, qlen)?.wait()
+    }
+
+    /// Submit a greedy decode of up to G tokens starting from `first_tok`
+    /// at `cur_len`. `kv` is not consumed.
+    pub fn submit_generate(&self, module: &str, kv: &KvHandle, cur_len: i32,
+                           first_tok: i32) -> anyhow::Result<PendingGenerate> {
+        let (reply, rx) = channel();
+        self.send(Req::Generate {
+            module: module.into(), kv: kv.0, cur_len, first_tok,
+            submitted: Instant::now(), reply,
+        })?;
+        Ok(PendingGenerate(Ticket { rx }))
+    }
+
+    /// Blocking generate: [`Engine::submit_generate`] + wait.
     pub fn generate(&self, module: &str, kv: &KvHandle, cur_len: i32, first_tok: i32)
                     -> anyhow::Result<Vec<i32>> {
-        self.roundtrip(|reply| Req::Generate {
-            module: module.into(), kv: kv.0, cur_len, first_tok, reply,
-        })?
+        self.submit_generate(module, kv, cur_len, first_tok)?.wait()
     }
 
-    /// GNN subgraph embedding: x [N,F], adj [N,N], mask [N] (row-major flat).
+    /// Submit a GNN subgraph embedding: x [N,F], adj [N,N], mask [N]
+    /// (row-major flat) without blocking.
+    pub fn submit_encode(&self, module: &str, x: Vec<f32>, adj: Vec<f32>,
+                         mask: Vec<f32>) -> anyhow::Result<PendingEncode> {
+        let (reply, rx) = channel();
+        self.send(Req::Encode {
+            module: module.into(), x, adj, mask, submitted: Instant::now(), reply,
+        })?;
+        Ok(PendingEncode(Ticket { rx }))
+    }
+
+    /// Blocking encode: [`Engine::submit_encode`] + wait.
     pub fn encode(&self, module: &str, x: Vec<f32>, adj: Vec<f32>, mask: Vec<f32>)
                   -> anyhow::Result<Vec<f32>> {
-        self.roundtrip(|reply| Req::Encode { module: module.into(), x, adj, mask, reply })?
+        self.submit_encode(module, x, adj, mask)?.wait()
     }
 
     /// Return a KV cache to the engine. Best-effort: a dead engine has
@@ -186,24 +359,24 @@ impl Engine {
 
     /// Load weights + compile all entries of `module` ahead of timing runs.
     pub fn warmup(&self, module: &str) -> anyhow::Result<()> {
-        self.roundtrip(|reply| Req::Warmup { module: module.into(), reply })?
+        let (reply, rx) = channel();
+        self.send(Req::Warmup { module: module.into(), reply })?;
+        Ticket { rx }.wait()
     }
 
     pub fn stats(&self) -> anyhow::Result<EngineStats> {
-        self.roundtrip(|reply| Req::Stats { reply })
+        let (reply, rx) = channel();
+        self.send(Req::Stats { reply })?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died before replying"))
     }
 }
 
 impl Drop for Engine {
     fn drop(&mut self) {
-        // tolerate a poisoned mutex: shutdown must still reach the thread.
-        if let Ok(tx) = self.tx.lock().or_else(|p| Ok::<_, ()>(p.into_inner())) {
-            let _ = tx.send(Req::Shutdown);
-        }
-        if let Ok(mut th) = self.thread.lock().or_else(|p| Ok::<_, ()>(p.into_inner())) {
-            if let Some(t) = th.take() {
-                let _ = t.join();
-            }
+        let _ = self.tx.send(Req::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
         }
     }
 }
@@ -233,13 +406,35 @@ struct State {
     next_id: u64,
     counters: HashMap<String, (u64, f64)>,
     compile_secs: f64,
+    host_kv_bytes: u64,
+    opts: EngineOpts,
 }
 
 fn xerr(e: xla::Error) -> anyhow::Error {
     anyhow::anyhow!("xla: {e}")
 }
 
-fn engine_main(root: PathBuf, manifest: Manifest, rx: Receiver<Req>,
+/// Row of a `[rows, V]` logits matrix holding the next-token distribution
+/// after the last real question token: `qlen - 1`, clamped into range so a
+/// zero-length question (empty text tokenizes to nothing) selects row 0
+/// instead of underflowing, and an overlong count cannot index past the end.
+pub(crate) fn logits_row(qlen: i32, rows: usize) -> usize {
+    debug_assert!(rows > 0, "logits matrix must have at least one row");
+    (qlen.max(1) as usize).min(rows) - 1
+}
+
+/// Engine-side timing wrapper for one request: `queue` is how long the
+/// request waited in the channel, `device` the engine-thread span of the
+/// handler (execute + result materialization).
+fn timed<T>(submitted: Instant, f: impl FnOnce() -> anyhow::Result<T>)
+            -> anyhow::Result<(T, CallTiming)> {
+    let queue_secs = submitted.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let out = f()?;
+    Ok((out, CallTiming { queue_secs, device_secs: t0.elapsed().as_secs_f64() }))
+}
+
+fn engine_main(root: PathBuf, manifest: Manifest, opts: EngineOpts, rx: Receiver<Req>,
                ready: Sender<anyhow::Result<()>>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => c,
@@ -257,22 +452,30 @@ fn engine_main(root: PathBuf, manifest: Manifest, rx: Receiver<Req>,
         next_id: 1,
         counters: HashMap::new(),
         compile_secs: 0.0,
+        host_kv_bytes: 0,
+        opts,
     };
     let _ = ready.send(Ok(()));
 
     while let Ok(req) = rx.recv() {
         match req {
-            Req::Prefill { module, tokens, plen, reply } => {
-                let _ = reply.send(st.prefill(&module, &tokens, plen));
+            Req::Prefill { module, tokens, plen, submitted, reply } => {
+                let res = timed(submitted, || st.prefill(&module, &tokens, plen))
+                    .map(|((id, logits), t)| (id, logits, t));
+                let _ = reply.send(res);
             }
-            Req::Extend { module, kv, plen, q_tokens, reply } => {
-                let _ = reply.send(st.extend(&module, kv, plen, &q_tokens));
+            Req::Extend { module, kv, plen, q_tokens, qlen, submitted, reply } => {
+                let res = timed(submitted, || st.extend(&module, kv, plen, &q_tokens, qlen))
+                    .map(|((id, logits), t)| (id, logits, t));
+                let _ = reply.send(res);
             }
-            Req::Generate { module, kv, cur_len, first_tok, reply } => {
-                let _ = reply.send(st.generate(&module, kv, cur_len, first_tok));
+            Req::Generate { module, kv, cur_len, first_tok, submitted, reply } => {
+                let _ = reply.send(timed(submitted, || {
+                    st.generate(&module, kv, cur_len, first_tok)
+                }));
             }
-            Req::Encode { module, x, adj, mask, reply } => {
-                let _ = reply.send(st.encode(&module, &x, &adj, &mask));
+            Req::Encode { module, x, adj, mask, submitted, reply } => {
+                let _ = reply.send(timed(submitted, || st.encode(&module, &x, &adj, &mask)));
             }
             Req::Release { kv } => {
                 st.kvs.remove(&kv);
@@ -296,11 +499,25 @@ fn engine_main(root: PathBuf, manifest: Manifest, rx: Receiver<Req>,
                     calls,
                     live_kv: st.kvs.len(),
                     compile_secs: st.compile_secs,
+                    host_kv_bytes: st.host_kv_bytes,
                 });
             }
             Req::Shutdown => break,
         }
     }
+}
+
+/// Outputs of one entry-point execution.
+enum ExecOut {
+    /// PJRT flattened the root tuple: one device buffer per output leaf.
+    /// This is the zero-copy path — KV leaves go straight back into the
+    /// handle map without visiting the host.
+    Leaves(Vec<xla::PjRtBuffer>),
+    /// A single result buffer holding the whole output tuple: the binding
+    /// can only untuple it through a host literal (the seed's original
+    /// path, kept as a fallback and surfaced via
+    /// [`EngineStats::host_kv_bytes`]).
+    HostTuple(Vec<xla::Literal>),
 }
 
 impl State {
@@ -353,7 +570,7 @@ impl State {
             anyhow::ensure!(m == i, "{module}.{entry}: non-identity arg_map at {i} -> {m}");
         }
         let path = self.root.join(&spec.hlo);
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(&path)
             .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
@@ -399,11 +616,13 @@ impl State {
         self.client.buffer_from_host_buffer(data, dims, None).map_err(xerr)
     }
 
-    /// Execute `module.entry` with the module weights + `extras`, untuple the
-    /// result literals, record timing. KV extras are borrowed straight from
-    /// the handle map — no device copies on the hot path.
+    /// Execute `module.entry` with the module weights + `extras`, record
+    /// timing, and return the outputs with device residency preserved
+    /// whenever the runtime grants it (see [`ExecOut`]). KV extras are
+    /// borrowed straight from the handle map — no device copies on the hot
+    /// path.
     fn call(&mut self, module: &str, entry: &str, extras: Vec<Extra>)
-            -> anyhow::Result<Vec<xla::Literal>> {
+            -> anyhow::Result<ExecOut> {
         self.ensure_entry(module, entry)?;
         let (parts, dt) = {
             let m = &self.modules[module];
@@ -428,24 +647,40 @@ impl State {
                 "{module}.{entry}: got {} inputs, want {}",
                 inputs.len(), m.weights.len() + spec.extra_args.len()
             );
-            let t0 = std::time::Instant::now();
+            let t0 = Instant::now();
             let exe = &m.exes[entry];
-            if std::env::var("SUBGCACHE_TRACE").is_ok() {
+            if self.opts.trace {
                 eprintln!("[engine] exec {module}.{entry} with {} inputs", inputs.len());
             }
             let mut out = exe.execute_b(&inputs).map_err(xerr)?;
-            if std::env::var("SUBGCACHE_TRACE").is_ok() {
+            if self.opts.trace {
                 eprintln!("[engine] exec done");
             }
             anyhow::ensure!(!out.is_empty() && !out[0].is_empty(), "empty execute output");
-            let lit = out.remove(0).remove(0).to_literal_sync().map_err(xerr)?;
-            let parts = if n_out == 1 {
-                vec![lit.to_tuple1().map_err(xerr)?]
+            let mut bufs = out.remove(0);
+            let parts = if bufs.len() == n_out && n_out > 1 {
+                ExecOut::Leaves(bufs)
+            } else if bufs.len() == 1 {
+                let lit = bufs.remove(0).to_literal_sync().map_err(xerr)?;
+                // the single buffer is either the whole output tuple or —
+                // for single-output entries the runtime already untupled —
+                // the lone leaf itself; the literal's shape disambiguates.
+                let leaf = n_out == 1
+                    && xla::ArrayShape::try_from(&lit.shape().map_err(xerr)?).is_ok();
+                let parts = if leaf {
+                    vec![lit]
+                } else if n_out == 1 {
+                    vec![lit.to_tuple1().map_err(xerr)?]
+                } else {
+                    lit.to_tuple().map_err(xerr)?
+                };
+                anyhow::ensure!(parts.len() == n_out,
+                                "{module}.{entry}: {} outputs, want {n_out}", parts.len());
+                ExecOut::HostTuple(parts)
             } else {
-                lit.to_tuple().map_err(xerr)?
+                anyhow::bail!("{module}.{entry}: {} result buffers, want {n_out} or 1 tuple",
+                              bufs.len());
             };
-            anyhow::ensure!(parts.len() == n_out, "{module}.{entry}: {} outputs, want {n_out}",
-                            parts.len());
             (parts, t0.elapsed().as_secs_f64())
         };
         let c = self.counters.entry(format!("{module}.{entry}")).or_insert((0, 0.0));
@@ -454,17 +689,85 @@ impl State {
         Ok(parts)
     }
 
-    fn store_kv(&mut self, module: &str, k: xla::Literal, v: xla::Literal)
-                -> anyhow::Result<u64> {
+    /// Insert device-resident K/V buffers under a fresh handle id.
+    fn insert_kv(&mut self, k: xla::PjRtBuffer, v: xla::PjRtBuffer) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.kvs.insert(id, KvEntry { k, v });
+        id
+    }
+
+    /// Host-bounce KV storage: literal → host vec → fresh device buffer.
+    /// Only reached on the tuple-literal fallback or under forced
+    /// `SUBGCACHE_KV_HOST_BOUNCE`; every byte is counted so the zero-copy
+    /// property stays observable.
+    fn store_kv_literals(&mut self, module: &str, k: xla::Literal, v: xla::Literal)
+                         -> anyhow::Result<u64> {
         let dims = self.manifest.module(module)?.dims
             .ok_or_else(|| anyhow::anyhow!("{module}: not an llm module"))?;
         let shape = [dims.n_layers, dims.max_seq, dims.n_heads, dims.d_head];
         let kb = self.buf_from_f32_literal(&k, &shape)?;
         let vb = self.buf_from_f32_literal(&v, &shape)?;
-        let id = self.next_id;
-        self.next_id += 1;
-        self.kvs.insert(id, KvEntry { k: kb, v: vb });
-        Ok(id)
+        self.host_kv_bytes += 2 * dims.kv_bytes_each() as u64;
+        Ok(self.insert_kv(kb, vb))
+    }
+
+    /// Store the (k, v, logits) outputs of a prefill/extend: KV stays on
+    /// device when the runtime returned leaves, and only the needed logits
+    /// row crosses to the host. `row = Some((qlen, rows))` selects row
+    /// [`logits_row`]`(qlen, rows)` of a `[rows, V]` matrix; `None` means
+    /// the entry already emits a single `[V]` row.
+    fn finish_kv_entry(&mut self, module: &str, out: ExecOut, row: Option<(i32, usize)>)
+                       -> anyhow::Result<(u64, Vec<f32>)> {
+        let vocab = self.manifest.module(module)?.dims
+            .ok_or_else(|| anyhow::anyhow!("{module}: not an llm module"))?
+            .vocab;
+        let (id, logits) = match out {
+            ExecOut::Leaves(mut leaves) => {
+                anyhow::ensure!(leaves.len() == 3,
+                                "{module}: {} kv-entry outputs, want (k, v, logits)",
+                                leaves.len());
+                let logits_buf = leaves.pop().unwrap();
+                let v = leaves.pop().unwrap();
+                let k = leaves.pop().unwrap();
+                let id = if self.opts.host_bounce {
+                    let kl = k.to_literal_sync().map_err(xerr)?;
+                    let vl = v.to_literal_sync().map_err(xerr)?;
+                    self.store_kv_literals(module, kl, vl)?
+                } else {
+                    self.insert_kv(k, v)
+                };
+                let logits = logits_buf
+                    .to_literal_sync().map_err(xerr)?
+                    .to_vec::<f32>().map_err(xerr)?;
+                (id, logits)
+            }
+            ExecOut::HostTuple(mut parts) => {
+                anyhow::ensure!(parts.len() == 3,
+                                "{module}: {} kv-entry outputs, want (k, v, logits)",
+                                parts.len());
+                let logits = parts[2].to_vec::<f32>().map_err(xerr)?;
+                let v = parts.swap_remove(1);
+                let k = parts.swap_remove(0);
+                let id = self.store_kv_literals(module, k, v)?;
+                (id, logits)
+            }
+        };
+        let logits = match row {
+            None => {
+                anyhow::ensure!(logits.len() == vocab,
+                                "{module}: {} prefill logits, want [{vocab}]", logits.len());
+                logits
+            }
+            Some((qlen, rows)) => {
+                anyhow::ensure!(logits.len() == rows * vocab,
+                                "{module}: {} extend logits, want [{rows}, {vocab}]",
+                                logits.len());
+                let r = logits_row(qlen, rows);
+                logits[r * vocab..(r + 1) * vocab].to_vec()
+            }
+        };
+        Ok((id, logits))
     }
 
     fn prefill(&mut self, module: &str, tokens: &[i32], plen: i32)
@@ -476,15 +779,12 @@ impl State {
             Extra::Own(self.buf_i32(tokens, &[s])?),
             Extra::Own(self.buf_i32(&[plen], &[])?),
         ];
-        let mut parts = self.call(module, "prefill", extras)?;
-        let logits = parts[2].to_vec::<f32>().map_err(xerr)?;
-        let v = parts.swap_remove(1);
-        let k = parts.swap_remove(0);
-        let id = self.store_kv(module, k, v)?;
-        Ok((id, logits))
+        let out = self.call(module, "prefill", extras)?;
+        // prefill's HLO already selects the plen-1 logits row on device.
+        self.finish_kv_entry(module, out, None)
     }
 
-    fn extend(&mut self, module: &str, kv: u64, plen: i32, q_tokens: &[i32])
+    fn extend(&mut self, module: &str, kv: u64, plen: i32, q_tokens: &[i32], qlen: i32)
               -> anyhow::Result<(u64, Vec<f32>)> {
         self.ensure_entry(module, "extend")?;
         let q = self.entry_spec(module, "extend").extra_args[3].shape[0];
@@ -494,12 +794,8 @@ impl State {
             Extra::Own(self.buf_i32(&[plen], &[])?),
             Extra::Own(self.buf_i32(q_tokens, &[q])?),
         ];
-        let mut parts = self.call(module, "extend", extras)?;
-        let logits = parts[2].to_vec::<f32>().map_err(xerr)?;
-        let v = parts.swap_remove(1);
-        let k = parts.swap_remove(0);
-        let id = self.store_kv(module, k, v)?;
-        Ok((id, logits))
+        let out = self.call(module, "extend", extras)?;
+        self.finish_kv_entry(module, out, Some((qlen, q)))
     }
 
     fn generate(&mut self, module: &str, kv: u64, cur_len: i32, first_tok: i32)
@@ -510,8 +806,8 @@ impl State {
             Extra::Own(self.buf_i32(&[cur_len], &[])?),
             Extra::Own(self.buf_i32(&[first_tok], &[])?),
         ];
-        let parts = self.call(module, "generate", extras)?;
-        parts[0].to_vec::<i32>().map_err(xerr)
+        let out = self.call(module, "generate", extras)?;
+        first_output_literal(out)?.to_vec::<i32>().map_err(xerr)
     }
 
     fn encode(&mut self, module: &str, x: &[f32], adj: &[f32], mask: &[f32])
@@ -526,8 +822,24 @@ impl State {
             Extra::Own(self.buf_f32(adj, &[n, n])?),
             Extra::Own(self.buf_f32(mask, &[n])?),
         ];
-        let parts = self.call(module, "encode", extras)?;
-        parts[0].to_vec::<f32>().map_err(xerr)
+        let out = self.call(module, "encode", extras)?;
+        first_output_literal(out)?.to_vec::<f32>().map_err(xerr)
+    }
+}
+
+/// First output of a single-output entry as a host literal. The `Leaves`
+/// arm is defensive: `call` currently only returns leaves for multi-output
+/// entries, but a runtime that untuples single outputs too lands here.
+fn first_output_literal(out: ExecOut) -> anyhow::Result<xla::Literal> {
+    match out {
+        ExecOut::Leaves(mut leaves) => {
+            anyhow::ensure!(!leaves.is_empty(), "no output leaves");
+            leaves.swap_remove(0).to_literal_sync().map_err(xerr)
+        }
+        ExecOut::HostTuple(mut parts) => {
+            anyhow::ensure!(!parts.is_empty(), "no output literals");
+            Ok(parts.swap_remove(0))
+        }
     }
 }
 
@@ -536,4 +848,65 @@ impl State {
 enum Extra {
     Own(xla::PjRtBuffer),
     Kv(u64),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logits_row_selects_last_real_token() {
+        assert_eq!(logits_row(1, 32), 0);
+        assert_eq!(logits_row(12, 32), 11);
+        assert_eq!(logits_row(32, 32), 31);
+    }
+
+    #[test]
+    fn logits_row_clamps_degenerate_lengths() {
+        // the seed panicked on (qlen - 1) with qlen = 0 — an empty question
+        // must clamp to row 0, and an overlong count must not overrun.
+        assert_eq!(logits_row(0, 32), 0);
+        assert_eq!(logits_row(-3, 32), 0);
+        assert_eq!(logits_row(99, 32), 31);
+        assert_eq!(logits_row(5, 1), 0);
+    }
+
+    #[test]
+    fn wait_on_dropped_ticket_errors_instead_of_hanging() {
+        let (tx, rx) = channel::<anyhow::Result<(u64, Vec<f32>, CallTiming)>>();
+        drop(tx);
+        let err = PendingKv(Ticket { rx }).wait().unwrap_err();
+        assert!(err.to_string().contains("engine"), "unhelpful error: {err}");
+
+        let (tx, rx) = channel::<anyhow::Result<(u64, Vec<f32>, CallTiming)>>();
+        drop(tx);
+        assert!(PendingKv(Ticket { rx }).wait_timed().is_err());
+
+        let (tx, rx) = channel::<anyhow::Result<(Vec<i32>, CallTiming)>>();
+        drop(tx);
+        assert!(PendingGenerate(Ticket { rx }).wait().is_err());
+
+        let (tx, rx) = channel::<anyhow::Result<(Vec<f32>, CallTiming)>>();
+        drop(tx);
+        assert!(PendingEncode(Ticket { rx }).wait().is_err());
+    }
+
+    #[test]
+    fn ticket_delivers_value_sent_before_drop() {
+        // a reply that was already sent must still arrive after the engine
+        // side dropped its sender — wait is recv, not a liveness check.
+        let (tx, rx) = channel::<anyhow::Result<(u64, Vec<f32>, CallTiming)>>();
+        tx.send(Ok((7, vec![1.0], CallTiming::default()))).unwrap();
+        drop(tx);
+        let (kv, logits, t) = PendingKv(Ticket { rx }).wait_timed().unwrap();
+        assert_eq!(kv, KvHandle(7));
+        assert_eq!(logits, vec![1.0]);
+        assert_eq!(t.secs(), 0.0);
+    }
+
+    #[test]
+    fn call_timing_sums_components() {
+        let t = CallTiming { queue_secs: 0.25, device_secs: 0.5 };
+        assert!((t.secs() - 0.75).abs() < 1e-12);
+    }
 }

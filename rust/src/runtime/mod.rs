@@ -7,7 +7,8 @@ mod engine;
 mod gnn;
 mod manifest;
 
-pub use engine::{Engine, EngineStats, KvHandle};
+pub use engine::{CallTiming, Engine, EngineStats, KvHandle, PendingEncode, PendingExtend,
+                 PendingGenerate, PendingKv, PendingPrefill};
 pub use gnn::{pack_subgraph, PackedSubgraph};
 pub use manifest::{ArgSpec, Constants, EntrySpec, LlmDims, Manifest, ModuleSpec, ParamSpec};
 

@@ -1,0 +1,88 @@
+//! Golden parity between the device-resident KV path and the seed's
+//! host-bounce path: storing prefill/extend K/V outputs as device buffers
+//! (zero-copy) must change *nothing* about what the model computes — same
+//! logits bit for bit, same generated tokens. `SUBGCACHE_KV_HOST_BOUNCE=1`
+//! forces the old device→host→device path for the comparison engine; the
+//! flag is read once per `Engine::start`, on the caller's thread.
+//!
+//! Everything lives in ONE #[test]: libtest runs a binary's tests on
+//! parallel threads, and mutating the process environment while a sibling
+//! test calls `Engine::start` (which reads it) would be a data race — so
+//! this binary deliberately has a single test and no other env mutators.
+//!
+//! Skipped (with a message) when `artifacts/` is absent, so `cargo test -q`
+//! stays green on a fresh clone; run `make artifacts` to enable.
+
+use subgcache::coordinator::argmax;
+use subgcache::runtime::Engine;
+
+mod common;
+
+const BACKBONE: &str = "llama-3.2-3b-sim";
+
+fn ivec(v: &subgcache::util::json::Json, key: &str) -> Vec<i32> {
+    v.get(key).as_arr().unwrap().iter().map(|x| x.as_i64().unwrap() as i32).collect()
+}
+
+#[test]
+fn device_resident_kv_matches_host_bounce_bit_exact() {
+    let Some(store) = common::store("engine parity test") else { return };
+    // `fast` is the default zero-copy engine, `slow` the forced host-bounce
+    // one. Both env flips happen before any other engine in this process
+    // could read them (single test in this binary — see module docs).
+    std::env::remove_var("SUBGCACHE_KV_HOST_BOUNCE");
+    let fast = Engine::start(&store).expect("engine start (device-resident)");
+    std::env::set_var("SUBGCACHE_KV_HOST_BOUNCE", "1");
+    let slow = Engine::start(&store).expect("engine start (host-bounce)");
+    std::env::remove_var("SUBGCACHE_KV_HOST_BOUNCE");
+
+    let g = store.golden(&format!("llm_{BACKBONE}.json")).unwrap();
+    let prefix_tokens = ivec(&g, "prefix_tokens");
+    let plen = g.get("prefix_len").as_i64().unwrap() as i32;
+    let q_tokens = ivec(&g, "q_tokens");
+    let qlen = g.get("q_len").as_i64().unwrap() as i32;
+    let c = *store.constants();
+
+    let run = |engine: &Engine| {
+        let (kv, prefill_logits) = engine.prefill(BACKBONE, &prefix_tokens, plen).unwrap();
+        let (kv2, row) = engine.extend(BACKBONE, &kv, plen, &q_tokens, qlen).unwrap();
+        let first = argmax(&row);
+        let gen = engine.generate(BACKBONE, &kv2, plen + qlen, first).unwrap();
+        engine.release(kv2);
+        engine.release(kv);
+        (prefill_logits, row, first, gen)
+    };
+    let (a_pre, a_row, a_first, a_gen) = run(&fast);
+    let (b_pre, b_row, b_first, b_gen) = run(&slow);
+
+    assert_eq!(a_pre, b_pre, "prefill logits must be bit-identical across KV paths");
+    assert_eq!(a_row, b_row, "extend logits row must be bit-identical across KV paths");
+    assert_eq!(a_first, b_first, "first token must agree");
+    assert_eq!(a_gen, b_gen, "generated tokens must be identical across KV paths");
+
+    // The transfer asymmetry IS this optimization: the device-resident path
+    // must move zero KV bytes through the host, the forced bounce plenty.
+    let fs = fast.stats().unwrap();
+    let ss = slow.stats().unwrap();
+    assert_eq!(fs.host_kv_bytes, 0,
+               "device-resident path bounced {} KV bytes through the host",
+               fs.host_kv_bytes);
+    assert!(ss.host_kv_bytes > 0,
+            "forced host-bounce path must account its KV transfers");
+
+    // Regression (both KV paths): the seed sliced extend logits with
+    // (qlen - 1) unchecked, so a question that tokenizes to zero tokens
+    // panicked. The engine now clamps the row selection; a degenerate query
+    // must cost one odd answer, never the process.
+    for engine in [&fast, &slow] {
+        let (kv, _) = engine.prefill(BACKBONE, &prefix_tokens, plen).unwrap();
+        let all_pad = vec![c.pad_id; c.max_q];
+        let (kv2, row) = engine
+            .extend(BACKBONE, &kv, plen, &all_pad, 0)
+            .expect("qlen = 0 must clamp, not panic");
+        assert_eq!(row.len(), c.vocab, "extend must return exactly one [V] row");
+        assert!(row.iter().all(|v| v.is_finite()));
+        engine.release(kv2);
+        engine.release(kv);
+    }
+}

@@ -32,8 +32,11 @@ fn split_path_matches_python_golden() {
         let vocab = store.constants().vocab;
 
         let (kv, _) = engine.prefill(BACKBONE, &prefix_tokens, plen).unwrap();
-        let (kv2, logits) = engine.extend(BACKBONE, &kv, plen, &q_tokens).unwrap();
-        let row = &logits[(qlen - 1) * vocab..qlen * vocab];
+        // the engine now returns only the [V] row after the last real
+        // question token (selected on the engine side from qlen).
+        let (kv2, row) = engine.extend(BACKBONE, &kv, plen, &q_tokens,
+                                       qlen as i32).unwrap();
+        assert_eq!(row.len(), vocab, "extend must return a single [V] row");
 
         // logits row prefix must match python's to float tolerance
         let want_row: Vec<f64> = g.get("extend_logits_row").as_arr().unwrap()
@@ -43,7 +46,7 @@ fn split_path_matches_python_golden() {
                     "logit {i}: {} vs python {w}", row[i]);
         }
 
-        let first = argmax(row);
+        let first = argmax(&row);
         assert_eq!(first as i64, g.get("first_token").as_i64().unwrap());
 
         let gen = engine.generate(BACKBONE, &kv2, plen + qlen as i32, first).unwrap();
@@ -80,16 +83,17 @@ fn cached_prefix_is_reusable_across_queries() {
         let prefix_tokens = ivec(&g, "prefix_tokens");
         let plen = g.get("prefix_len").as_i64().unwrap() as i32;
         let q_tokens = ivec(&g, "q_tokens");
+        let qlen = g.get("q_len").as_i64().unwrap() as i32;
 
         let (kv, _) = engine.prefill(BACKBONE, &prefix_tokens, plen).unwrap();
-        let (kv_a, logits_a) = engine.extend(BACKBONE, &kv, plen, &q_tokens).unwrap();
+        let (kv_a, logits_a) = engine.extend(BACKBONE, &kv, plen, &q_tokens, qlen).unwrap();
         // a different question against the same cache
         let mut other = q_tokens.clone();
         other.swap(3, 5);
-        let (kv_b, logits_b) = engine.extend(BACKBONE, &kv, plen, &other).unwrap();
+        let (kv_b, logits_b) = engine.extend(BACKBONE, &kv, plen, &other, qlen).unwrap();
         assert_ne!(logits_a, logits_b);
         // and the original question again: bitwise identical to the first hit
-        let (kv_c, logits_c) = engine.extend(BACKBONE, &kv, plen, &q_tokens).unwrap();
+        let (kv_c, logits_c) = engine.extend(BACKBONE, &kv, plen, &q_tokens, qlen).unwrap();
         assert_eq!(logits_a, logits_c, "cache reuse must be deterministic");
         for h in [kv_a, kv_b, kv_c, kv] {
             engine.release(h);
@@ -110,7 +114,7 @@ fn release_invalidates_handle() {
         let stale = {
             // fabricate by prefilling + releasing again, then using the old id
             let (kv2, _) = engine.prefill(BACKBONE, &prefix_tokens, plen).unwrap();
-            let err = engine.extend(BACKBONE, &kv2, plen, &q[..1]);
+            let err = engine.extend(BACKBONE, &kv2, plen, &q[..1], 1);
             assert!(err.is_err(), "wrong-length q_tokens must be rejected");
             kv2
         };
