@@ -19,7 +19,7 @@ use subgcache::coordinator::argmax;
 use subgcache::graph::{Edge, Node, Subgraph, TextualGraph};
 use subgcache::retrieval::GraphFeatures;
 use subgcache::runtime::{pack_subgraph, ArtifactStore, Engine};
-use subgcache::util::bench::{Bench, Stats};
+use subgcache::util::bench::{emit_bench_json, Bench, JsonRow};
 
 const BACKBONE: &str = "llama-3.2-3b-sim";
 
@@ -162,39 +162,6 @@ fn full_cases(b: &mut Bench, store: &ArtifactStore)
     ])
 }
 
-fn json_escape(s: &str) -> String {
-    s.replace('\\', "\\\\").replace('"', "\\\"")
-}
-
-fn emit_json(path: &str, mode: &str, results: &[Stats],
-             extra: &[(String, String)]) -> anyhow::Result<()> {
-    let mut s = String::new();
-    s.push_str("{\n");
-    s.push_str(&format!(
-        "  \"bench\": \"engine_hot_path\",\n  \"mode\": \"{mode}\",\n"
-    ));
-    for (k, v) in extra {
-        s.push_str(&format!("  \"{}\": {v},\n", json_escape(k)));
-    }
-    s.push_str("  \"results\": [\n");
-    for (i, r) in results.iter().enumerate() {
-        s.push_str(&format!(
-            "    {{\"name\": \"{}\", \"iters\": {}, \"median_ns\": {:.0}, \
-             \"mean_ns\": {:.0}, \"p95_ns\": {:.0}, \"stddev_ns\": {:.0}}}{}\n",
-            json_escape(&r.name),
-            r.iters,
-            r.median_ns,
-            r.mean_ns,
-            r.p95_ns,
-            r.stddev_ns,
-            if i + 1 == results.len() { "" } else { "," }
-        ));
-    }
-    s.push_str("  ]\n}\n");
-    std::fs::write(path, s)?;
-    Ok(())
-}
-
 fn main() -> anyhow::Result<()> {
     let artifacts = ArtifactStore::discover().ok();
     let quick = artifacts.is_none() || std::env::var("SUBGCACHE_BENCH_QUICK").is_ok();
@@ -211,7 +178,8 @@ fn main() -> anyhow::Result<()> {
         }
     };
 
-    emit_json("BENCH_engine.json", mode, b.results(), &extra)?;
+    let rows: Vec<JsonRow> = b.results().iter().map(JsonRow::from).collect();
+    emit_bench_json("BENCH_engine.json", "engine_hot_path", mode, &extra, &rows)?;
     println!("\nwrote BENCH_engine.json ({} cases)", b.results().len());
     Ok(())
 }

@@ -1,0 +1,86 @@
+//! Serving-workload bench: the table 4 (in-batch sweep) and table 5
+//! (online streaming) wall/qps summaries as a tracked JSON artifact
+//! (`BENCH_serving.json`, same shape as `BENCH_engine.json`) so every PR
+//! can be compared on the same serving workloads.
+//!
+//! Two modes:
+//! * **artifacts** (present): the real PJRT engine on the real datasets,
+//!   modest batch sizes.
+//! * **sim-quick** (fresh clone / CI smoke): the deterministic
+//!   [`SimBackend`] over the in-memory world with millisecond virtual
+//!   latencies — the scheduler, lanes and emitter are exercised end to end
+//!   without `make artifacts`, and the depth sweep shows the k=1 vs k≥2
+//!   pipeline difference in the JSON.
+
+use subgcache::harness::{run_cell_with, run_online_cell_with, Cell, ServingBench};
+use subgcache::prelude::*;
+use subgcache::runtime::{SimBackend, SIM_BACKBONE};
+
+const OUT: &str = "BENCH_serving.json";
+
+fn artifact_mode(store: &ArtifactStore) -> anyhow::Result<ServingBench> {
+    let mut bench = ServingBench::new("artifacts");
+    let engine = Engine::start(store)?;
+    let backbone = "llama-3.2-3b-sim";
+    for dataset in ["scene_graph", "oag"] {
+        let ds = store.dataset(dataset)?;
+        for &batch in &[25usize, 50] {
+            let cell = Cell::new(dataset, "g-retriever", backbone, batch);
+            let r = run_cell_with(store, &engine, &ds, &cell)?;
+            println!("batch {dataset} b={batch}: subgcache {:.2}s wall",
+                     r.subgcache.metrics.wall_time);
+            bench.push(&format!("batch {dataset} b={batch} baseline"), &r.baseline);
+            bench.push(&format!("batch {dataset} b={batch} subgcache"), &r.subgcache);
+        }
+        for depth in [1usize, 2] {
+            let mut cell = Cell::new(dataset, "g-retriever", backbone, 50);
+            cell.pipeline_depth = depth;
+            let r = run_online_cell_with(store, &engine, &ds, &cell)?;
+            println!("online {dataset} k={depth}: {:.2}s wall ({:.1} q/s)",
+                     r.online.metrics.wall_time, r.online.metrics.qps());
+            bench.push(&format!("online {dataset} k={depth}"), &r.online);
+        }
+    }
+    Ok(bench)
+}
+
+fn sim_quick_mode() -> anyhow::Result<ServingBench> {
+    let mut bench = ServingBench::new("sim-quick");
+    let store = sim_store();
+    let ds = sim_dataset(4, 4);
+    // virtual latencies with encode ≈ prefill, the regime where the lane
+    // split and depth-k scheduler show their overlap in the numbers.
+    let sim = SimBackend::start(&store, SimLatency::from_millis(6, 2, 2, 6))?;
+    for &batch in &[8usize, 16] {
+        let cell = Cell::new("sim", "g-retriever", SIM_BACKBONE, batch);
+        let r = run_cell_with(&store, &sim, &ds, &cell)?;
+        println!("batch sim b={batch}: subgcache {:.3}s wall",
+                 r.subgcache.metrics.wall_time);
+        bench.push(&format!("batch sim b={batch} baseline"), &r.baseline);
+        bench.push(&format!("batch sim b={batch} subgcache"), &r.subgcache);
+    }
+    for depth in [1usize, 2, 4] {
+        let mut cell = Cell::new("sim", "g-retriever", SIM_BACKBONE, 12);
+        cell.pipeline_depth = depth;
+        cell.online_threshold = f32::INFINITY;
+        let r = run_online_cell_with(&store, &sim, &ds, &cell)?;
+        println!("online sim k={depth}: {:.3}s wall ({:.1} q/s, {:.1} ms overlapped)",
+                 r.online.metrics.wall_time, r.online.metrics.qps(),
+                 r.online.metrics.overlap_time * 1e3);
+        bench.push(&format!("online sim k={depth}"), &r.online);
+    }
+    Ok(bench)
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = ArtifactStore::discover().ok();
+    let mode = if artifacts.is_some() { "artifacts" } else { "sim-quick" };
+    println!("== serving bench ({mode}) ==");
+    let bench = match &artifacts {
+        Some(store) => artifact_mode(store)?,
+        None => sim_quick_mode()?,
+    };
+    bench.emit(OUT)?;
+    println!("\nwrote {OUT} ({} rows)", bench.len());
+    Ok(())
+}

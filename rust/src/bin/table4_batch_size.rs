@@ -2,9 +2,13 @@
 //! with the Llama-3.2-3B-sim backbone. `--cache-entries` bounds how many
 //! representative KV caches stay resident (LRU beyond that); the cache
 //! summary line under each block shows the resulting hit/eviction picture.
+//! `--bench-json [PATH]` additionally emits the wall/qps summaries as
+//! `BENCH_serving.json` (same shape as `BENCH_engine.json`) so runs are
+//! comparable PR over PR.
 
-use subgcache::harness::{cache_policy_from_args, cache_summary, push_block, run_cell,
-                         throughput_summary, Cell, METRIC_HEADER};
+use subgcache::harness::{bench_json_from_args, cache_policy_from_args, cache_summary,
+                         push_block, run_cell, throughput_summary, Cell, ServingBench,
+                         METRIC_HEADER};
 use subgcache::metrics::Table;
 use subgcache::prelude::*;
 
@@ -17,6 +21,8 @@ fn main() -> anyhow::Result<()> {
     let engine = Engine::start(&store)?;
     let backbone = args.get_or("backbone", "llama-3.2-3b-sim");
     let cache = cache_policy_from_args(&args)?;
+    let bench_json = bench_json_from_args(&args);
+    let mut bench = ServingBench::new("artifacts");
     let batches: Vec<usize> = args
         .list_or("batches", "50,100,150,200")
         .iter()
@@ -38,12 +44,20 @@ fn main() -> anyhow::Result<()> {
                 summaries.push(format!("{label}: {} | {}",
                                        cache_summary(&r.subgcache),
                                        throughput_summary(&r.subgcache)));
+                bench.push(&format!("table4 {dataset} {label} b={batch} baseline"),
+                           &r.baseline);
+                bench.push(&format!("table4 {dataset} {label} b={batch} subgcache"),
+                           &r.subgcache);
             }
             t.print();
             for s in summaries {
                 println!("  {s}");
             }
         }
+    }
+    if let Some(path) = bench_json {
+        bench.emit(&path)?;
+        println!("\nwrote {path} ({} rows)", bench.len());
     }
     println!("\nnote: test splits hold 200 queries; batches beyond 200 resample.");
     Ok(())

@@ -7,10 +7,16 @@
 //! The headline columns are the hit/miss TTFT split: a hit pays only the
 //! question `extend`, a miss pays the full representative prefill — the
 //! online analogue of the paper's baseline-vs-SubGCache gap.
+//!
+//! Scheduler knobs: `--depth k` sets the pipeline lookahead (k ≥ 2 overlaps
+//! query i+1's GNN encode with query i's LLM work and decouples the decode
+//! stage), `--ttl N` expires clusters unused for more than N arrivals.
+//! `--bench-json [PATH]` emits the wall/qps summaries as
+//! `BENCH_serving.json` (same shape as `BENCH_engine.json`).
 
-use subgcache::harness::{batch_from_env, cache_policy_from_args, cache_summary,
-                         online_cells, run_online_cell, throughput_summary, Cell,
-                         ONLINE_HEADER};
+use subgcache::harness::{batch_from_env, bench_json_from_args, cache_policy_from_args,
+                         cache_summary, online_cells, run_online_cell,
+                         throughput_summary, Cell, ServingBench, ONLINE_HEADER};
 use subgcache::metrics::Table;
 use subgcache::prelude::*;
 
@@ -26,9 +32,14 @@ fn main() -> anyhow::Result<()> {
     let threshold = args.f64_or("threshold",
                                 ServeConfig::default().online_threshold as f64) as f32;
     let cache = cache_policy_from_args(&args)?;
+    let depth = args.usize_or("depth", ServeConfig::default().pipeline_depth);
+    let ttl: Option<u64> = args.get("ttl").map(|v| v.parse().expect("bad --ttl (arrivals)"));
+    let bench_json = bench_json_from_args(&args);
+    let mut bench = ServingBench::new("artifacts");
 
     println!("== Table 5: online (streaming) serving \
-              (backbone: {backbone}, batch = {batch}, threshold = {threshold}) ==");
+              (backbone: {backbone}, batch = {batch}, threshold = {threshold}, \
+              depth = {depth}, ttl = {ttl:?}) ==");
     for dataset in ["scene_graph", "oag"] {
         println!("\n-- dataset: {dataset} --");
         let mut t = Table::new(&ONLINE_HEADER);
@@ -37,6 +48,8 @@ fn main() -> anyhow::Result<()> {
             let mut cell = Cell::new(dataset, retriever, backbone, batch);
             cell.online_threshold = threshold;
             cell.cache = cache;
+            cell.pipeline_depth = depth;
+            cell.cluster_ttl = ttl;
             let r = run_online_cell(&store, &engine, &cell)?;
             let label = if retriever == "g-retriever" { "G-Retriever" } else { "GRAG" };
             // baseline row: every query is a full prefill, so its TTFT is
@@ -54,16 +67,23 @@ fn main() -> anyhow::Result<()> {
             ]);
             t.row(&online_cells(&format!("{label}+SubGCache-online"), &r.online));
             summaries.push(format!(
-                "{label}: {} clusters opened, {} | {}",
+                "{label}: {} clusters opened ({} expired), {} | {}",
                 r.online.cluster_sizes.len(),
+                r.online.expired_clusters,
                 cache_summary(&r.online),
                 throughput_summary(&r.online)
             ));
+            bench.push(&format!("table5 {dataset} {label} baseline"), &r.baseline);
+            bench.push(&format!("table5 {dataset} {label} online k={depth}"), &r.online);
         }
         t.print();
         for s in summaries {
             println!("  {s}");
         }
+    }
+    if let Some(path) = bench_json {
+        bench.emit(&path)?;
+        println!("\nwrote {path} ({} rows)", bench.len());
     }
     println!("\nnote: misses pay the representative prefill in full (no batch to \
               amortize over); hits extend a warm cache and skip it entirely.");

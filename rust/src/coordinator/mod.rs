@@ -35,24 +35,32 @@
 //! ([`crate::metrics::QueryLatency::cache_hit`]) and surfaces as
 //! `ttft_hit_ms` / `ttft_miss_ms` on [`crate::metrics::BatchMetrics`].
 //!
-//! # Pipelined submission
+//! # Pipelined submission over per-lane queues
 //!
-//! Engine calls go through the runtime's submit/wait ticket API
-//! ([`crate::runtime::PendingPrefill`] et al.), and both SubGCache paths
-//! overlap host work with in-flight device execution: `serve_subgcache`
+//! Backend calls go through the runtime's submit/wait ticket API
+//! ([`crate::runtime::PendingPrefill`] et al.) against per-lane worker
+//! threads ([`crate::runtime::Lane`]): KV-touching LLM calls on one lane,
+//! GNN encodes on another. Both SubGCache paths overlap host work with
+//! in-flight execution — `serve_subgcache` pipelines its encode stage and
 //! tokenizes a cluster's member questions in the shadow of the
-//! representative prefill, and `serve_online` runs query *i+1*'s retrieval,
-//! GNN packing and question tokenization while the engine executes query
-//! *i*'s prefill/extend. To keep PFTT/TTFT semantics honest under that
-//! overlap, per-query latencies are composed from component times — host
-//! stages timed where they execute and charged to their own query, engine
-//! stages charged from the engine-thread [`crate::runtime::CallTiming`]
+//! representative prefill; `serve_online` runs a depth-k scheduler
+//! (`ServeConfig::pipeline_depth`): a prep queue of up to k queries
+//! (retrieval, GNN packing, question tokenization, refilled in engine
+//! shadows), eager encode submission on the GNN lane so query *i+1*'s
+//! encode executes under query *i*'s prefill/extend, and a decoupled decode
+//! stage whose generate of query *i* overlaps query *i+1*'s extend (they
+//! touch different KV entries). To keep PFTT/TTFT semantics honest under
+//! that overlap, per-query latencies are composed from component times —
+//! host stages timed where they execute and charged to their own query,
+//! engine stages charged from the lane-side [`crate::runtime::CallTiming`]
 //! (queue seconds + execution span) — never from a wall timer spanning a
 //! neighbor's shadow work. The overlap win is reported separately as
 //! [`crate::metrics::BatchMetrics::wall_time`] /
 //! [`crate::metrics::BatchMetrics::qps`], with
 //! [`crate::metrics::BatchMetrics::overlap_time`] sizing how much host prep
-//! rode in engine shadows.
+//! rode in engine shadows and [`crate::metrics::BatchMetrics::lane_llm`] /
+//! [`crate::metrics::BatchMetrics::lane_gnn`] splitting queue/device time
+//! per lane.
 
 mod online;
 mod pipeline;
@@ -63,7 +71,7 @@ use crate::cluster::Linkage;
 use crate::graph::Subgraph;
 use crate::metrics::BatchMetrics;
 use crate::retrieval::Retriever;
-use crate::runtime::{ArtifactStore, Engine};
+use crate::runtime::{ArtifactStore, Backend};
 
 /// Serving configuration (one table cell = one config).
 #[derive(Debug, Clone)]
@@ -81,6 +89,17 @@ pub struct ServeConfig {
     /// existing cluster centroid; farther queries open a new cluster.
     /// Negative means "never join" (every query becomes its own cluster).
     pub online_threshold: f32,
+    /// Online scheduler lookahead k (≥ 1). k = 1 reproduces the serial
+    /// one-query-lookahead pipeline; k ≥ 2 preps up to k queries ahead,
+    /// submits their GNN encodes eagerly on the GNN lane, and decouples the
+    /// decode stage (query *i*'s generate overlaps query *i+1*'s extend).
+    pub pipeline_depth: usize,
+    /// Online path only: expire a cluster whose centroid has not matched
+    /// (or been opened by) a query for more than this many arrivals,
+    /// releasing its KV cache entry with it. `None` keeps every cluster for
+    /// the stream's lifetime (the pre-TTL behaviour). A pinned (in-flight)
+    /// representative always survives a sweep, however stale.
+    pub cluster_ttl: Option<u64>,
 }
 
 impl Default for ServeConfig {
@@ -92,6 +111,8 @@ impl Default for ServeConfig {
             gnn: None,
             cache: CachePolicy::default(),
             online_threshold: 0.5,
+            pipeline_depth: 2,
+            cluster_ttl: None,
         }
     }
 }
@@ -117,6 +138,9 @@ pub struct ServeReport {
     pub cluster_sizes: Vec<usize>,
     /// representative subgraph (nodes, edges) per cluster.
     pub representative_sizes: Vec<(usize, usize)>,
+    /// Online path only: clusters reclaimed by the TTL sweep
+    /// (`ServeConfig::cluster_ttl`). Their sizes stay in `cluster_sizes`.
+    pub expired_clusters: usize,
     pub cache: CacheStats,
 }
 
@@ -147,15 +171,17 @@ pub fn argmax(logits: &[f32]) -> i32 {
 }
 
 /// The serving coordinator. Owns configuration and the serving pipelines;
-/// borrows the engine so several coordinators (backbones) can share it.
+/// borrows the execution [`Backend`] (the PJRT engine in production, the
+/// deterministic sim in scheduling tests) so several coordinators
+/// (backbones) can share it.
 pub struct Coordinator<'e> {
     pub(crate) store: ArtifactStore,
-    pub(crate) engine: &'e Engine,
+    pub(crate) engine: &'e dyn Backend,
     pub(crate) cfg: ServeConfig,
 }
 
 impl<'e> Coordinator<'e> {
-    pub fn new(store: &ArtifactStore, engine: &'e Engine, cfg: ServeConfig)
+    pub fn new(store: &ArtifactStore, engine: &'e dyn Backend, cfg: ServeConfig)
                -> anyhow::Result<Self> {
         // fail fast on bad config: the backbone must exist AND carry LLM KV
         // geometry — otherwise the byte budget would silently size every
@@ -168,6 +194,7 @@ impl<'e> Coordinator<'e> {
         );
         anyhow::ensure!(cfg.n_clusters >= 1, "n_clusters must be >= 1");
         anyhow::ensure!(cfg.cache.max_entries >= 1, "cache must admit >= 1 entry");
+        anyhow::ensure!(cfg.pipeline_depth >= 1, "pipeline_depth must be >= 1");
         Ok(Coordinator { store: store.clone(), engine, cfg })
     }
 
@@ -207,6 +234,8 @@ mod tests {
         assert!(c.gnn.is_none());
         assert!(c.cache.max_entries >= 2, "default policy must be multi-resident");
         assert!(c.online_threshold > 0.0);
+        assert!(c.pipeline_depth >= 1, "scheduler needs at least serial lookahead");
+        assert!(c.cluster_ttl.is_none(), "TTL is opt-in");
     }
 
     #[test]

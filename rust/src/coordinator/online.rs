@@ -15,40 +15,88 @@
 //! **miss**: it additionally pays the representative prefill in full — no
 //! amortization exists online because membership is unknown at serve time.
 //!
-//! # Two-stage pipeline
+//! # The depth-k scheduler
 //!
-//! The stream is served as a software pipeline with one query of lookahead:
-//! while the engine executes query *i*'s prefill (miss) or extend (hit),
-//! the coordinator runs query *i+1*'s engine-free host prep — retrieval,
-//! GNN input packing, and question tokenization — in the shadow of the
-//! in-flight ticket. Each prep component is timed where it executes and
-//! charged to its own query, and engine stages are charged from the
-//! engine-thread [`crate::runtime::CallTiming`], so the per-query
-//! PFTT/TTFT (and their hit/miss split) mean exactly what they meant under
-//! serial serving; the overlap win surfaces in `BatchMetrics::wall_time` /
-//! `overlap_time`. Cluster assignment, prefix verbalization and cache state
-//! stay strictly in arrival order — only order-independent host work moves
-//! into the shadow.
+//! The stream is served as a software pipeline over the backend's two lanes
+//! (`ServeConfig::pipeline_depth` = k):
+//!
+//! * **Prep queue** — up to k queries of engine-free host prep (retrieval,
+//!   GNN input packing, question tokenization) run ahead of the query
+//!   currently being served, refilled in the shadow of in-flight tickets.
+//! * **Eager encode** (k ≥ 2) — a prepped query's GNN encode is submitted
+//!   to the GNN lane at prep time, so query *i+1*'s encode executes while
+//!   the LLM lane runs query *i*'s prefill/extend/generate. At its own turn
+//!   the query only pays the *stall* it actually spends waiting for the
+//!   embedding (often ~0) — not lane time that overlapped earlier work.
+//! * **Decoupled decode** (k ≥ 2) — the greedy `generate` of query *i* is
+//!   left in flight while query *i+1* is assigned and its `extend`
+//!   submitted; the two touch different KV entries (the private
+//!   prefix+question cache vs the next query's representative), so the LLM
+//!   lane streams generate(i) → extend(i+1) back to back with no
+//!   coordinator round-trip between them. Query *i* is finalized — decode
+//!   waited, answer detokenized, latency recorded — in the shadow of query
+//!   *i+1*'s extend. With k = 1 the decode is waited inline, reproducing
+//!   the serial one-query-lookahead pipeline.
+//!
+//! Arrival order is never violated: cluster assignment, prefix
+//! verbalization, cache state, and result records advance strictly in
+//! stream order — only order-independent work moves into shadows.
+//!
+//! # Pin safety
+//!
+//! A cluster's representative entry is pinned from its lookup/install until
+//! the query's *finalize* (not merely until the extend returns), so neither
+//! a shadow-prep admission, budget eviction, nor a TTL sweep can release an
+//! entry any in-flight ticket might still reference. Pins nest across
+//! back-to-back queries of one cluster.
+//!
+//! # Cluster TTL
+//!
+//! With `ServeConfig::cluster_ttl = Some(ttl)`, a sweep at the top of every
+//! turn expires clusters whose centroid has not been opened/joined for more
+//! than `ttl` arrivals: the centroid stops participating in matching and
+//! its resident KV entry (if any) is released back to the backend. A pinned
+//! (in-flight) representative always survives a sweep regardless of
+//! staleness — it is reconsidered once unpinned. Expired clusters keep
+//! their slot (ids are stable) and are counted in
+//! [`super::ServeReport::expired_clusters`].
+//!
+//! # Latency accounting
+//!
+//! Each prep component is timed where it executes and charged to its own
+//! query; LLM-lane stages are charged from the lane-side
+//! [`crate::runtime::CallTiming`] (queue seconds — the query really did
+//! wait behind earlier lane work — plus execution span); the eagerly
+//! submitted encode is charged its measured *stall* at the query's turn
+//! (queue/device time that overlapped other queries' engine work did not
+//! delay this query's first token, and claiming otherwise would punish
+//! pipelining in per-query numbers). The per-query PFTT/TTFT (and their
+//! hit/miss split) therefore mean exactly what they meant under serial
+//! serving; the pipeline win surfaces in `BatchMetrics::wall_time` /
+//! `overlap_time` / per-lane `lane_llm` / `lane_gnn`.
+
+use std::collections::VecDeque;
 
 use crate::cache::KvCacheManager;
 use crate::data::{Dataset, Query};
 use crate::embed::sq_dist;
 use crate::graph::Subgraph;
-use crate::metrics::{QueryLatency, Timer};
+use crate::metrics::{LaneTimes, QueryLatency, Timer};
 use crate::retrieval::{GraphFeatures, Retriever};
-use crate::runtime::{pack_subgraph, KvHandle, PackedSubgraph};
+use crate::runtime::{pack_subgraph, KvHandle, PackedSubgraph, PendingEncode,
+                     PendingGenerate};
 
 use super::session::PreparedQuestion;
-use super::{Coordinator, ServeReport};
+use super::{argmax, Coordinator, ServeReport};
 
 /// One open cluster of the stream. Deliberately small — a centroid, a
 /// member count, and the frozen representative subgraph (node/edge id
 /// sets) — because cluster metadata outlives the KV budget: the
-/// [`crate::cache::CachePolicy`] bounds resident KV bytes, not this state,
-/// which grows with the number of clusters the stream opens. An evicted
-/// representative is re-verbalized from `rep` on its next miss rather than
-/// keeping a padded max_seq token vector per cluster alive forever.
-/// Expiring cold clusters outright is future work (ROADMAP).
+/// [`crate::cache::CachePolicy`] bounds resident KV bytes, not this state.
+/// An evicted representative is re-verbalized from `rep` on its next miss
+/// rather than keeping a padded max_seq token vector per cluster alive
+/// forever. Cold clusters are reclaimed by the TTL sweep (module docs)
+/// when `ServeConfig::cluster_ttl` is set.
 struct OnlineCluster {
     /// running mean of member embeddings.
     centroid: Vec<f32>,
@@ -58,19 +106,49 @@ struct OnlineCluster {
     /// real prefix length of `rep`'s verbalization (stable: the
     /// verbalizer and tokenizer are deterministic over a frozen `rep`).
     plen: usize,
+    /// arrival index of the query that most recently opened/joined this
+    /// cluster (drives the TTL sweep).
+    last_used: u64,
+    /// TTL-expired: the centroid no longer participates in matching and
+    /// the KV entry has been released. The slot stays so ids are stable.
+    expired: bool,
+}
+
+/// The encode stage of a prepped query: already in flight on the GNN lane
+/// (depth ≥ 2), or still packed host-side (depth 1 submits at the turn).
+enum EncStage {
+    Pending(PendingEncode),
+    Packed(PackedSubgraph),
 }
 
 /// Engine-free host prep for one arriving query, runnable in the shadow of
-/// the previous query's in-flight engine call: retrieval, GNN input
-/// packing, question tokenization. Nothing here depends on cluster state,
-/// which is exactly why it can run ahead of the query's turn.
+/// an in-flight engine call: retrieval, GNN input packing, question
+/// tokenization — plus, at depth ≥ 2, the eagerly submitted encode.
+/// Nothing here depends on cluster state, which is exactly why it can run
+/// ahead of the query's turn.
 struct PreppedQuery<'q> {
     q: &'q Query,
     sg: Subgraph,
-    packed: PackedSubgraph,
+    enc: EncStage,
     question: PreparedQuestion,
     retrieval_secs: f64,
     pack_secs: f64,
+}
+
+/// The decoupled decode stage: everything needed to finalize query *i*
+/// while query *i+1* runs. Holds the query's cache pin (released at
+/// finalize) and its private prefix+question KV handle.
+struct InflightDecode<'q> {
+    q: &'q Query,
+    cid: usize,
+    sg: Subgraph,
+    hit: bool,
+    kv_q: KvHandle,
+    first: i32,
+    pending: PendingGenerate,
+    /// composed component times up to the first token
+    prompt_ready: f64,
+    pftt: f64,
 }
 
 impl<'e> Coordinator<'e> {
@@ -96,11 +174,15 @@ impl<'e> Coordinator<'e> {
         let feats = GraphFeatures::build(&ds.graph);
         let entry_bytes = self.kv_entry_bytes()?;
         let threshold = self.cfg.online_threshold;
+        let depth = self.cfg.pipeline_depth.max(1);
+        let eager_encode = depth >= 2;
 
         // Host-only prep, shared by the pipeline's lookahead and the
         // first/fallback (non-overlapped) cases. Every component is timed
-        // here so it gets charged to its own query wherever it runs.
-        let prep = |q: &'q Query| -> PreppedQuery<'q> {
+        // here so it gets charged to its own query wherever it runs. At
+        // depth >= 2 the encode ships to the GNN lane immediately — the
+        // overlap the lane split exists for.
+        let prep = |q: &'q Query| -> anyhow::Result<PreppedQuery<'q>> {
             let t = Timer::start();
             let sg = retriever.retrieve(&ds.graph, &feats, &q.text);
             let retrieval_secs = t.secs();
@@ -108,7 +190,36 @@ impl<'e> Coordinator<'e> {
             let packed = pack_subgraph(&ds.graph, &feats, &sg, c.n_max, c.feat_dim);
             let pack_secs = t.secs();
             let question = session.prepare_question(&q.text);
-            PreppedQuery { q, sg, packed, question, retrieval_secs, pack_secs }
+            let enc = if eager_encode {
+                EncStage::Pending(self.engine.submit_encode(
+                    &gnn, packed.x, packed.adj, packed.mask)?)
+            } else {
+                EncStage::Packed(packed)
+            };
+            Ok(PreppedQuery { q, sg, enc, question, retrieval_secs, pack_secs })
+        };
+
+        // Refill the prep queue up to depth k. `in_shadow` marks calls made
+        // under an in-flight engine ticket, whose prep time counts toward
+        // `overlap_time` (the work itself is always charged to its query).
+        let top_up = |queue: &mut VecDeque<PreppedQuery<'q>>,
+                      stream: &mut dyn Iterator<Item = &'q Query>,
+                      overlap_time: &mut f64,
+                      in_shadow: bool|
+         -> anyhow::Result<()> {
+            while queue.len() < depth {
+                match stream.next() {
+                    Some(q) => {
+                        let t = Timer::start();
+                        queue.push_back(prep(q)?);
+                        if in_shadow {
+                            *overlap_time += t.secs();
+                        }
+                    }
+                    None => break,
+                }
+            }
+            Ok(())
         };
 
         let mut clusters: Vec<OnlineCluster> = Vec::new();
@@ -117,50 +228,100 @@ impl<'e> Coordinator<'e> {
         let mut llm_time = 0.0;
         let mut prefill_total = 0.0;
         let mut overlap_time = 0.0;
+        let mut lane_llm = LaneTimes::default();
+        let mut lane_gnn = LaneTimes::default();
+        let mut expired_clusters = 0usize;
         let t_wall = Timer::start();
 
+        // Finalize one decoupled decode: wait the generate, detokenize,
+        // compose the record, release the private KV, drop the pin.
+        let finalize = |dec: InflightDecode<'q>,
+                        cache: &mut KvCacheManager<KvHandle>,
+                        report: &mut ServeReport,
+                        llm_time: &mut f64,
+                        lane_llm: &mut LaneTimes|
+         -> anyhow::Result<()> {
+            let (gen, gen_t) = dec.pending.wait_timed()?;
+            lane_llm.add(&gen_t);
+            let t_host = Timer::start();
+            let predicted = session.decode_answer(dec.first, &gen);
+            let result = session.result(dec.q, predicted, dec.cid, dec.sg);
+            let ttft = dec.prompt_ready + dec.pftt;
+            let rt = ttft + gen_t.secs() + t_host.secs();
+            *llm_time += gen_t.secs();
+            report.metrics.per_query.push(QueryLatency {
+                rt,
+                ttft,
+                pftt: dec.pftt,
+                correct: result.correct,
+                cache_hit: Some(dec.hit),
+            });
+            report.results.push(result);
+            self.engine.release(dec.kv_q);
+            cache.unpin(dec.cid);
+            Ok(())
+        };
+
         let mut stream = query_stream.into_iter();
-        // the opening query has no predecessor to shadow: prep it inline.
-        let mut current: Option<PreppedQuery<'q>> = stream.next().map(&prep);
+        let mut queue: VecDeque<PreppedQuery<'q>> = VecDeque::new();
+        // the opening fill has no shadow to ride: prep inline.
+        top_up(&mut queue, &mut stream, &mut overlap_time, false)?;
+        let mut pending_decode: Option<InflightDecode<'q>> = None;
+        let mut arrival: u64 = 0;
 
-        while let Some(cur) = current.take() {
-            let PreppedQuery { q, sg, packed, question, retrieval_secs, pack_secs } = cur;
-            let next_q = stream.next();
-            let mut next_prepped: Option<PreppedQuery<'q>> = None;
-            // One-query lookahead: the first in-flight engine call of this
-            // query hosts the next query's prep in its shadow. Idempotent,
-            // so the miss path (prefill shadow) and the common path (extend
-            // shadow) can both offer the slot.
-            let mut do_overlap = || {
-                if next_prepped.is_some() {
-                    return; // the slot already ran in an earlier shadow
+        while let Some(cur) = queue.pop_front() {
+            let PreppedQuery { q, sg, enc, question, retrieval_secs, pack_secs } = cur;
+            let now = arrival;
+            arrival += 1;
+
+            // 0) TTL sweep: expire clusters whose centroid went cold, and
+            //    release their KV entries. A pinned entry belongs to an
+            //    in-flight query (extend or decoupled decode) — skip it,
+            //    however stale; it is reconsidered once unpinned.
+            if let Some(ttl) = self.cfg.cluster_ttl {
+                let mut reclaimed: Vec<KvHandle> = Vec::new();
+                for (cid, cl) in clusters.iter_mut().enumerate() {
+                    if cl.expired || now.saturating_sub(cl.last_used) <= ttl {
+                        continue;
+                    }
+                    if cache.pin_count(cid) > 0 {
+                        continue; // in-flight representative survives expiry
+                    }
+                    cl.expired = true;
+                    expired_clusters += 1;
+                    if let Some(h) = cache.release(cid) {
+                        reclaimed.push(h);
+                    }
                 }
-                if let Some(nq) = next_q {
-                    let t = Timer::start();
-                    next_prepped = Some(prep(nq));
-                    overlap_time += t.secs();
-                }
+                self.engine.release_many(reclaimed);
+            }
+
+            // 1) retrieval/pack/tokenize already ran at prep time (charged
+            //    below, wherever they executed).
+            // 2) GNN embedding + centroid assignment. The query is charged
+            //    the *stall* it spends blocked on its embedding here: under
+            //    eager submission the encode ran in the shadow of earlier
+            //    LLM work and the stall is ~0; at depth 1 (submit + wait
+            //    inline) the stall is the full queue + device time, exactly
+            //    the serial accounting.
+            let pending_enc = match enc {
+                EncStage::Pending(p) => p,
+                EncStage::Packed(packed) => self.engine.submit_encode(
+                    &gnn, packed.x, packed.adj, packed.mask)?,
             };
-
-            // 1) retrieval already ran at prep time (charged below).
-            // 2) GNN encode + centroid assignment. Charged in full to this
-            //    query: online there is no batch to amortize over. The
-            //    packing cost was measured at prep time and lands here too.
-            //    The overlap slot is deliberately NOT offered here: it runs
-            //    once, and the prefill/extend below cast a longer device
-            //    shadow than the encode — offering it first would hide the
-            //    next prep under the smallest call instead of the largest.
-            let pending_enc = self.engine.submit_encode(
-                &gnn, packed.x, packed.adj, packed.mask)?;
+            let t_stall = Timer::start();
             let (emb, enc_t) = pending_enc.wait_timed()?;
+            let enc_stall = t_stall.secs();
+            lane_gnn.add(&enc_t);
             let t_scan = Timer::start();
             let nearest = clusters
                 .iter()
                 .enumerate()
+                .filter(|(_, cl)| !cl.expired)
                 .map(|(i, cl)| (i, sq_dist(&cl.centroid, &emb)))
                 .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
             let joined = nearest.filter(|&(_, d)| d <= threshold).map(|(i, _)| i);
-            let assign_secs = pack_secs + enc_t.secs() + t_scan.secs();
+            let assign_secs = pack_secs + enc_stall + t_scan.secs();
 
             // 3) open a new cluster if nothing was close enough. The prefix
             //    prompt is built here (prompt-construction time), frozen for
@@ -172,6 +333,7 @@ impl<'e> Coordinator<'e> {
                 Some(cid) => {
                     let cl = &mut clusters[cid];
                     cl.members += 1;
+                    cl.last_used = now;
                     let n = cl.members as f32;
                     for (ci, ei) in cl.centroid.iter_mut().zip(&emb) {
                         *ci += (ei - *ci) / n;
@@ -186,6 +348,8 @@ impl<'e> Coordinator<'e> {
                         members: 1,
                         rep: sg.clone(),
                         plen,
+                        last_used: now,
+                        expired: false,
                     });
                     clusters.len() - 1
                 }
@@ -193,7 +357,9 @@ impl<'e> Coordinator<'e> {
             let open_secs = t_open.secs();
 
             // 4) warm-cache check. `lookup` records exactly one hit or miss
-            //    (and refreshes LRU / bytes_saved on a hit).
+            //    (and refreshes LRU / bytes_saved on a hit). The pin taken
+            //    here (or by install below) is held until this query's
+            //    finalize — see the pin-safety section of the module docs.
             let hit = cache.lookup(cid).is_some();
             let mut rebuild_secs = 0.0;
             let prefill_secs = if hit {
@@ -219,10 +385,11 @@ impl<'e> Coordinator<'e> {
                 };
                 let pending = self.engine.submit_prefill(&self.cfg.backbone, &tokens,
                                                          clusters[cid].plen as i32)?;
-                // the next query's host prep rides the representative
-                // prefill — the longest call a miss makes before decode.
-                do_overlap();
+                // the prep queue refills in the representative prefill's
+                // shadow — the longest call a miss makes before decode.
+                top_up(&mut queue, &mut stream, &mut overlap_time, true)?;
                 let (kv, _logits, prefill_t) = pending.wait_timed()?;
+                lane_llm.add(&prefill_t);
                 let secs = prefill_t.secs();
                 // admitted pinned; colder representatives may fall out.
                 let evicted = cache.install(cid, kv, entry_bytes);
@@ -231,53 +398,67 @@ impl<'e> Coordinator<'e> {
             };
             prefill_total += prefill_secs;
 
-            // 5) extend + decode against the resident representative cache.
-            //    The entry stays pinned across the in-flight ticket (install
-            //    admits pinned; a hit pinned explicitly above), so the
-            //    overlap work can never race it out of residency.
+            // 5) extend against the resident representative cache. In the
+            //    extend's shadow: finalize the previous query's decoupled
+            //    decode (its generate runs on the LLM lane just ahead of
+            //    this extend) and refill the prep queue.
             let plen = clusters[cid].plen;
             debug_assert!(cache.pin_count(cid) >= 1,
                           "in-flight cluster must hold a pin across its tickets");
-            let out = {
+            let pending_ext = {
                 let kv = cache
                     .peek(cid)
                     .ok_or_else(|| anyhow::anyhow!("online cluster cache missing"))?;
-                session.extend_decode_prepared(kv, plen, &question, &mut do_overlap)?
+                self.engine.submit_extend(&self.cfg.backbone, kv, plen as i32,
+                                          &question.tokens, question.qlen as i32)?
             };
-            cache.unpin(cid);
-            llm_time += prefill_secs + (out.t_done - out.t_prompt);
+            if let Some(dec) = pending_decode.take() {
+                finalize(dec, &mut cache, &mut report, &mut llm_time, &mut lane_llm)?;
+            }
+            top_up(&mut queue, &mut stream, &mut overlap_time, true)?;
+            let (kv_q, row, ext_t) = pending_ext.wait_timed()?;
+            lane_llm.add(&ext_t);
+            let t_host = Timer::start();
+            let first = argmax(&row);
+            let first_host_secs = t_host.secs();
+            llm_time += prefill_secs + ext_t.secs();
 
             // 6) latency accounting (no amortization — see the module docs
             //    in `coordinator`): a miss pays its prefill in PFTT, a hit
             //    does not. That asymmetry IS the online speedup. Every term
             //    is this query's own component time.
             let prompt_ready =
-                retrieval_secs + assign_secs + open_secs + rebuild_secs + out.t_prompt;
-            let pftt = prefill_secs + (out.t_first - out.t_prompt);
-            let ttft = prompt_ready + pftt;
-            let rt = ttft + (out.t_done - out.t_first);
+                retrieval_secs + assign_secs + open_secs + rebuild_secs + question.tok_secs;
+            let pftt = prefill_secs + ext_t.secs() + first_host_secs;
 
-            let result = session.result(q, out.predicted, cid, sg);
-            report.metrics.per_query.push(QueryLatency {
-                rt,
-                ttft,
-                pftt,
-                correct: result.correct,
-                cache_hit: Some(hit),
-            });
-            report.results.push(result);
-
-            // advance the pipeline: the shadow prep (if any) becomes the
-            // next stage-2 input; otherwise prep inline (first iteration
-            // after an all-engine-error-free query always has it already).
-            current = next_prepped.or_else(|| next_q.map(&prep));
+            // 7) decode. k >= 2 leaves the generate in flight (finalized in
+            //    the next query's extend shadow, or drained after the loop);
+            //    k = 1 waits inline, reproducing the serial pipeline.
+            let pending_gen = self.engine.submit_generate(
+                &self.cfg.backbone, &kv_q, (plen + question.qlen) as i32, first)?;
+            let dec = InflightDecode {
+                q, cid, sg, hit, kv_q, first, pending: pending_gen, prompt_ready, pftt,
+            };
+            if depth >= 2 {
+                pending_decode = Some(dec);
+            } else {
+                finalize(dec, &mut cache, &mut report, &mut llm_time, &mut lane_llm)?;
+            }
+        }
+        // drain the last in-flight decode
+        if let Some(dec) = pending_decode.take() {
+            finalize(dec, &mut cache, &mut report, &mut llm_time, &mut lane_llm)?;
         }
 
         report.cluster_sizes = clusters.iter().map(|cl| cl.members).collect();
         report.representative_sizes = clusters.iter().map(|cl| cl.rep.len()).collect();
+        report.expired_clusters = expired_clusters;
         report.metrics.llm_time = llm_time;
         report.metrics.shared_prefill_time = prefill_total;
         report.metrics.overlap_time = overlap_time;
+        report.metrics.pipeline_depth = depth;
+        report.metrics.lane_llm = lane_llm;
+        report.metrics.lane_gnn = lane_gnn;
         self.engine.release_many(cache.release_all());
         report.cache = cache.stats();
         report.metrics.wall_time = t_wall.secs();

@@ -50,6 +50,8 @@ impl<'e> Coordinator<'e> {
             out.latency.ttft += retrieval_secs;
             out.latency.rt += retrieval_secs;
             llm_time += out.llm_secs;
+            report.metrics.lane_llm.add(&out.prefill_timing);
+            report.metrics.lane_llm.add(&out.gen_timing);
             report.metrics.per_query.push(out.latency);
             report.results.push(out.result);
         }
@@ -89,11 +91,21 @@ impl<'e> Coordinator<'e> {
 
         // 2) cluster stage (Fig. 4's red series): GNN encoding + hierarchical
         //    clustering + representative construction. One-time, amortized.
+        //    The encodes are pipelined onto the GNN lane: subgraph j+1 is
+        //    packed host-side while subgraph j executes, then the tickets
+        //    are collected in order (the lane is FIFO, so nothing reorders).
         let t_cluster = Timer::start();
-        let mut embs = Vec::with_capacity(m);
+        let mut pending_encs = Vec::with_capacity(m);
         for sg in &subgraphs {
             let p = pack_subgraph(&ds.graph, &feats, sg, c.n_max, c.feat_dim);
-            embs.push(self.engine.encode(&gnn, p.x, p.adj, p.mask)?);
+            pending_encs.push(self.engine.submit_encode(&gnn, p.x, p.adj, p.mask)?);
+        }
+        let mut embs = Vec::with_capacity(m);
+        let mut lane_gnn = crate::metrics::LaneTimes::default();
+        for pending in pending_encs {
+            let (emb, enc_t) = pending.wait_timed()?;
+            lane_gnn.add(&enc_t);
+            embs.push(emb);
         }
         let assignment = cluster(&embs, self.cfg.n_clusters, self.cfg.linkage);
         let clusters = groups(&assignment);
@@ -116,6 +128,10 @@ impl<'e> Coordinator<'e> {
             results: Vec::with_capacity(m),
             metrics: crate::metrics::BatchMetrics {
                 cluster_time: cluster_secs,
+                // one overlap slot per cluster (members tokenize in the
+                // representative prefill's shadow) = a depth-1 pipeline
+                pipeline_depth: 1,
+                lane_gnn,
                 ..Default::default()
             },
             ..Default::default()
@@ -142,6 +158,7 @@ impl<'e> Coordinator<'e> {
                 .collect();
             overlap_time += t_shadow.secs();
             let (kv, _logits, prefill_t) = pending.wait_timed()?;
+            report.metrics.lane_llm.add(&prefill_t);
             let prefill_secs = build_secs + prefill_t.secs();
             shared_prefill_total += prefill_secs;
             let prefill_share = prefill_secs / members.len() as f64;
@@ -164,6 +181,8 @@ impl<'e> Coordinator<'e> {
                     .ok_or_else(|| anyhow::anyhow!("cluster cache missing"))?;
                     session.extend_decode_prepared(kv_cluster, plen, &prepped[mi], || {})?
                 };
+                report.metrics.lane_llm.add(&out.ext_timing);
+                report.metrics.lane_llm.add(&out.gen_timing);
                 llm_time += out.t_done - out.t_prompt;
 
                 // amortized accounting (App. A.3): the member's share of the

@@ -23,7 +23,7 @@
 use crate::data::{answer_correct, Query};
 use crate::graph::{full_prompt, prefix_text, question_text, Subgraph, TextualGraph};
 use crate::metrics::{QueryLatency, Timer};
-use crate::runtime::{ArtifactStore, Engine, KvHandle};
+use crate::runtime::{ArtifactStore, Backend, CallTiming, KvHandle};
 use crate::tokenizer::Tokenizer;
 
 use super::{argmax, QueryResult};
@@ -42,6 +42,10 @@ pub(crate) struct ExtendOutcome {
     pub t_first: f64,
     /// greedy decode done
     pub t_done: f64,
+    /// lane-side timings of the two LLM calls, for
+    /// `BatchMetrics::lane_llm` accounting by the caller.
+    pub ext_timing: CallTiming,
+    pub gen_timing: CallTiming,
 }
 
 /// One query served with a full prompt (the baseline path).
@@ -50,6 +54,9 @@ pub(crate) struct FullOutcome {
     pub result: QueryResult,
     /// LLM-only seconds (prefill + decode), for `BatchMetrics::llm_time`.
     pub llm_secs: f64,
+    /// lane-side timings of the two LLM calls (prefill, generate).
+    pub prefill_timing: CallTiming,
+    pub gen_timing: CallTiming,
 }
 
 /// A tokenized question, ready to extend a cached prefix. Producing one is
@@ -65,12 +72,12 @@ pub(crate) struct PreparedQuestion {
 /// Borrowed view over everything the per-query flow needs.
 pub(crate) struct ServeSession<'a> {
     store: &'a ArtifactStore,
-    engine: &'a Engine,
+    engine: &'a dyn Backend,
     backbone: &'a str,
 }
 
 impl<'a> ServeSession<'a> {
-    pub fn new(store: &'a ArtifactStore, engine: &'a Engine, backbone: &'a str) -> Self {
+    pub fn new(store: &'a ArtifactStore, engine: &'a dyn Backend, backbone: &'a str) -> Self {
         ServeSession { store, engine, backbone }
     }
 
@@ -128,7 +135,9 @@ impl<'a> ServeSession<'a> {
         PreparedQuestion { tokens, qlen, tok_secs: t.secs() }
     }
 
-    fn decode_answer(&self, first: i32, gen: &[i32]) -> String {
+    /// Detokenize a generated sequence (used inline by the online path's
+    /// decoupled decode stage as well as the session flows below).
+    pub fn decode_answer(&self, first: i32, gen: &[i32]) -> String {
         debug_assert!(gen.first().copied() == Some(first));
         self.tok().decode(gen)
     }
@@ -181,6 +190,8 @@ impl<'a> ServeSession<'a> {
                                     cache_hit: None },
             result,
             llm_secs: prefill_t.secs() + gen_t.secs(),
+            prefill_timing: prefill_t,
+            gen_timing: gen_t,
         })
     }
 
@@ -212,6 +223,8 @@ impl<'a> ServeSession<'a> {
             t_prompt: prep.tok_secs,
             t_first,
             t_done,
+            ext_timing: ext_t,
+            gen_timing: gen_t,
         })
     }
 }

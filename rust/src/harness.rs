@@ -9,7 +9,8 @@ use crate::coordinator::{Coordinator, ServeConfig, ServeReport};
 use crate::data::Dataset;
 use crate::metrics::{delta, delta_cells, metric_cells, Table};
 use crate::retrieval::{GRetriever, GragRetriever, Retriever};
-use crate::runtime::{ArtifactStore, Engine};
+use crate::runtime::{ArtifactStore, Backend};
+use crate::util::bench::JsonRow;
 
 /// The paper's default cluster counts per dataset (§4.3: Scene Graph shines
 /// at c=1, OAG at c=2).
@@ -42,10 +43,15 @@ pub struct Cell {
     pub cache: CachePolicy,
     /// squared-distance centroid join bound for the online path.
     pub online_threshold: f32,
+    /// online scheduler lookahead k (see `ServeConfig::pipeline_depth`).
+    pub pipeline_depth: usize,
+    /// online cluster TTL in arrivals (see `ServeConfig::cluster_ttl`).
+    pub cluster_ttl: Option<u64>,
 }
 
 impl Cell {
     pub fn new(dataset: &str, retriever: &str, backbone: &str, batch: usize) -> Cell {
+        let d = ServeConfig::default();
         Cell {
             dataset: dataset.into(),
             retriever: retriever.into(),
@@ -55,7 +61,9 @@ impl Cell {
             linkage: Linkage::Ward,
             seed: 7,
             cache: CachePolicy::default(),
-            online_threshold: ServeConfig::default().online_threshold,
+            online_threshold: d.online_threshold,
+            pipeline_depth: d.pipeline_depth,
+            cluster_ttl: d.cluster_ttl,
         }
     }
 
@@ -67,6 +75,8 @@ impl Cell {
             gnn: None,
             cache: self.cache,
             online_threshold: self.online_threshold,
+            pipeline_depth: self.pipeline_depth,
+            cluster_ttl: self.cluster_ttl,
         }
     }
 }
@@ -78,17 +88,25 @@ pub struct CellResult {
     pub subgcache: ServeReport,
 }
 
-/// Run one cell (both methods on the identical query sample).
-pub fn run_cell(store: &ArtifactStore, engine: &Engine, cell: &Cell)
+/// Run one cell (both methods on the identical query sample), loading the
+/// dataset from the artifact store.
+pub fn run_cell(store: &ArtifactStore, engine: &dyn Backend, cell: &Cell)
                 -> anyhow::Result<CellResult> {
-    let ds = store.dataset(&cell.dataset)?;
+    run_cell_with(store, engine, &store.dataset(&cell.dataset)?, cell)
+}
+
+/// [`run_cell`] over a caller-supplied dataset — the entry point for sim
+/// runs, whose in-memory store has no data files on disk (pair with
+/// [`crate::runtime::sim_dataset`]).
+pub fn run_cell_with(store: &ArtifactStore, engine: &dyn Backend, ds: &Dataset,
+                     cell: &Cell) -> anyhow::Result<CellResult> {
     let retriever = retriever_by_name(&cell.retriever)?;
     let queries = ds.sample_test(cell.batch, cell.seed);
     anyhow::ensure!(!queries.is_empty(), "dataset {} has no test queries", cell.dataset);
 
     let coord = Coordinator::new(store, engine, cell.serve_config())?;
-    let baseline = coord.serve_baseline(&ds, &queries, retriever.as_ref())?;
-    let subgcache = coord.serve_subgcache(&ds, &queries, retriever.as_ref())?;
+    let baseline = coord.serve_baseline(ds, &queries, retriever.as_ref())?;
+    let subgcache = coord.serve_subgcache(ds, &queries, retriever.as_ref())?;
     Ok(CellResult { cell: cell.clone(), baseline, subgcache })
 }
 
@@ -101,16 +119,21 @@ pub struct OnlineCellResult {
 
 /// Run one online cell: the same seed-sampled queries, but served one at a
 /// time against clusters formed on the fly, vs the per-query baseline.
-pub fn run_online_cell(store: &ArtifactStore, engine: &Engine, cell: &Cell)
+pub fn run_online_cell(store: &ArtifactStore, engine: &dyn Backend, cell: &Cell)
                        -> anyhow::Result<OnlineCellResult> {
-    let ds = store.dataset(&cell.dataset)?;
+    run_online_cell_with(store, engine, &store.dataset(&cell.dataset)?, cell)
+}
+
+/// [`run_online_cell`] over a caller-supplied dataset (sim runs).
+pub fn run_online_cell_with(store: &ArtifactStore, engine: &dyn Backend, ds: &Dataset,
+                            cell: &Cell) -> anyhow::Result<OnlineCellResult> {
     let retriever = retriever_by_name(&cell.retriever)?;
     let queries = ds.sample_test(cell.batch, cell.seed);
     anyhow::ensure!(!queries.is_empty(), "dataset {} has no test queries", cell.dataset);
 
     let coord = Coordinator::new(store, engine, cell.serve_config())?;
-    let baseline = coord.serve_baseline(&ds, &queries, retriever.as_ref())?;
-    let online = coord.serve_online(&ds, queries.iter().copied(), retriever.as_ref())?;
+    let baseline = coord.serve_baseline(ds, &queries, retriever.as_ref())?;
+    let online = coord.serve_online(ds, queries.iter().copied(), retriever.as_ref())?;
     Ok(OnlineCellResult { cell: cell.clone(), baseline, online })
 }
 
@@ -172,9 +195,75 @@ pub fn cache_summary(r: &ServeReport) -> String {
 pub fn throughput_summary(r: &ServeReport) -> String {
     let m = &r.metrics;
     format!(
-        "wall {:.2}s ({:.1} q/s), {:.1} ms host prep overlapped",
-        m.wall_time, m.qps(), m.overlap_time * 1e3
+        "wall {:.2}s ({:.1} q/s), {:.1} ms host prep overlapped, k={}, \
+         lanes llm {:.0}%/gnn {:.0}% busy",
+        m.wall_time, m.qps(), m.overlap_time * 1e3, m.pipeline_depth,
+        100.0 * m.lane_busy_frac(crate::runtime::Lane::Llm),
+        100.0 * m.lane_busy_frac(crate::runtime::Lane::Gnn)
     )
+}
+
+/// One serving report as a `BENCH_serving.json` result row: the wall/qps
+/// throughput summary plus the overlap and per-lane splits — the numbers
+/// PRs are compared on, in the same file shape as `BENCH_engine.json`.
+pub fn serving_row(name: &str, r: &ServeReport) -> JsonRow {
+    let m = &r.metrics;
+    JsonRow::new(name)
+        .int("queries", m.per_query.len() as u64)
+        .num("wall_s", m.wall_time)
+        .num("qps", m.qps())
+        .num("ttft_ms", m.ttft_ms())
+        .num("pftt_ms", m.pftt_ms())
+        .num("overlap_ms", m.overlap_time * 1e3)
+        .int("pipeline_depth", m.pipeline_depth as u64)
+        .num("llm_lane_device_s", m.lane_llm.device_time)
+        .num("llm_lane_queue_s", m.lane_llm.queue_time)
+        .num("gnn_lane_device_s", m.lane_gnn.device_time)
+        .num("gnn_lane_queue_s", m.lane_gnn.queue_time)
+        .int("cache_hits", r.cache.hits)
+        .int("cache_evictions", r.cache.evictions)
+}
+
+/// Collector for the serving bench JSON: table harnesses push one row per
+/// (cell, method) and emit on exit. Same top-level shape as
+/// `BENCH_engine.json` (see `util::bench::emit_bench_json`).
+pub struct ServingBench {
+    mode: String,
+    rows: Vec<JsonRow>,
+}
+
+impl ServingBench {
+    pub fn new(mode: &str) -> ServingBench {
+        ServingBench { mode: mode.to_string(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, name: &str, report: &ServeReport) {
+        self.rows.push(serving_row(name, report));
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn emit(&self, path: &str) -> anyhow::Result<()> {
+        crate::util::bench::emit_bench_json(path, "serving", &self.mode, &[], &self.rows)
+    }
+}
+
+/// Shared `--bench-json [PATH]` flag for the table binaries: `None` when
+/// absent, `Some(path)` (defaulting to `BENCH_serving.json`) when given.
+pub fn bench_json_from_args(args: &crate::util::cli::Args) -> Option<String> {
+    if let Some(p) = args.get("bench-json") {
+        return Some(p.to_string());
+    }
+    if args.flag("bench-json") {
+        return Some("BENCH_serving.json".to_string());
+    }
+    None
 }
 
 /// Standard env-tunable batch size for the harness binaries: the paper's
@@ -242,5 +331,47 @@ mod tests {
         let c = Cell::new("oag", "grag", "bb", 50);
         assert_eq!(c.n_clusters, 2);
         assert_eq!(c.linkage, Linkage::Ward);
+        assert_eq!(c.pipeline_depth, ServeConfig::default().pipeline_depth);
+        assert!(c.cluster_ttl.is_none());
+    }
+
+    #[test]
+    fn serving_row_carries_throughput_and_lane_fields() {
+        let mut r = ServeReport::default();
+        r.metrics.per_query.push(crate::metrics::QueryLatency::default());
+        r.metrics.wall_time = 2.0;
+        r.metrics.pipeline_depth = 2;
+        let row = serving_row("online k=2", &r);
+        assert_eq!(row.name, "online k=2");
+        let keys: Vec<&str> = row.fields.iter().map(|(k, _)| k.as_str()).collect();
+        for want in ["queries", "wall_s", "qps", "overlap_ms", "pipeline_depth",
+                     "llm_lane_device_s", "gnn_lane_device_s"] {
+            assert!(keys.contains(&want), "missing field {want}");
+        }
+    }
+
+    #[test]
+    fn bench_json_flag_forms() {
+        let parse = |s: &str| crate::util::cli::Args::parse(
+            s.split_whitespace().map(String::from));
+        assert_eq!(bench_json_from_args(&parse("")), None);
+        assert_eq!(bench_json_from_args(&parse("--x 1 --bench-json")),
+                   Some("BENCH_serving.json".into()));
+        assert_eq!(bench_json_from_args(&parse("--bench-json out.json")),
+                   Some("out.json".into()));
+    }
+
+    #[test]
+    fn serving_bench_collects_and_emits() {
+        let mut b = ServingBench::new("sim-quick");
+        assert!(b.is_empty());
+        b.push("cell", &ServeReport::default());
+        assert_eq!(b.len(), 1);
+        let path = std::env::temp_dir().join("subgcache_serving_bench_test.json");
+        b.emit(path.to_str().unwrap()).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(s.contains("\"bench\": \"serving\""));
+        assert!(s.contains("\"mode\": \"sim-quick\""));
     }
 }

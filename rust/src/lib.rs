@@ -18,6 +18,11 @@
 //!   multi-resident LRU ([`cache::CachePolicy`]) with per-cluster pinning,
 //!   so several representatives stay warm and an admission can never evict
 //!   the in-flight cluster.
+//! * **[`runtime`]** — the execution layer behind the
+//!   [`runtime::Backend`] trait: the per-lane PJRT [`runtime::Engine`]
+//!   (LLM and GNN lanes on separate worker threads, device-resident KV)
+//!   and the deterministic [`runtime::SimBackend`] that makes scheduling
+//!   behaviour testable without artifacts.
 //! * **L2/L1 (python/compile, build-time only)** — the simulated LLM
 //!   backbones + GNN encoders, with the attention hot-spot as a Pallas
 //!   kernel; AOT-lowered to HLO text consumed by [`runtime`] via PJRT.
@@ -66,6 +71,7 @@ pub mod prelude {
     pub use crate::graph::{Subgraph, TextualGraph};
     pub use crate::metrics::{delta, BatchMetrics, Table};
     pub use crate::retrieval::{GRetriever, GragRetriever, GraphFeatures, Retriever};
-    pub use crate::runtime::{ArtifactStore, Engine};
+    pub use crate::runtime::{sim_dataset, sim_store, ArtifactStore, Backend, Engine,
+                             Lane, SimBackend, SimLatency};
     pub use crate::util::cli::Args;
 }

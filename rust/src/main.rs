@@ -6,7 +6,7 @@
 //!           --backbone llama-3.2-3b-sim --batch 100 --clusters 1 \
 //!           [--baseline | --online] [--linkage ward] [--seed 7] \
 //!           [--cache-mb N] [--cache-entries N] [--threshold D] \
-//!           [--artifacts PATH]
+//!           [--depth K] [--ttl N] [--artifacts PATH]
 //! ```
 
 use subgcache::prelude::*;
@@ -23,7 +23,7 @@ fn retriever_by_name(name: &str) -> anyhow::Result<Box<dyn Retriever>> {
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     if args.flag("help") {
-        println!("{}", include_str!("main.rs").lines().take(8)
+        println!("{}", include_str!("main.rs").lines().take(10)
                  .map(|l| l.trim_start_matches("//! ").trim_start_matches("//!"))
                  .collect::<Vec<_>>().join("\n"));
         return Ok(());
@@ -55,6 +55,8 @@ fn main() -> anyhow::Result<()> {
         cache,
         online_threshold: args.f64_or("threshold", default_cfg.online_threshold as f64)
             as f32,
+        pipeline_depth: args.usize_or("depth", default_cfg.pipeline_depth),
+        cluster_ttl: args.get("ttl").map(|v| v.parse().expect("bad --ttl (arrivals)")),
     };
 
     let engine = Engine::start(&store)?;

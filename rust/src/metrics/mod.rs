@@ -24,6 +24,35 @@ pub struct QueryLatency {
     pub cache_hit: Option<bool>,
 }
 
+/// Aggregate lane-side timing for one serving run: how long this run's
+/// requests sat in one lane's queue and how long the lane spent executing
+/// them. Accumulated from the per-call [`crate::runtime::CallTiming`]s, so
+/// it stays honest under pipelined submission (both components are measured
+/// on the lane worker, never inferred from coordinator wall clocks).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LaneTimes {
+    /// Calls this run executed on the lane.
+    pub calls: u64,
+    /// Total submit→pickup seconds (queueing behind earlier lane work).
+    pub queue_time: f64,
+    /// Total lane-side execution seconds.
+    pub device_time: f64,
+}
+
+impl LaneTimes {
+    /// Fold one call's timing into the aggregate.
+    pub fn add(&mut self, t: &crate::runtime::CallTiming) {
+        self.calls += 1;
+        self.queue_time += t.queue_secs;
+        self.device_time += t.device_secs;
+    }
+
+    /// Total lane seconds attributable to this run (queue + execution).
+    pub fn total(&self) -> f64 {
+        self.queue_time + self.device_time
+    }
+}
+
 /// Batch-level result for one (dataset, method, backbone) cell of a table.
 #[derive(Debug, Clone, Default)]
 pub struct BatchMetrics {
@@ -45,6 +74,14 @@ pub struct BatchMetrics {
     /// engine call. Informational: this work is already charged to its own
     /// query's component times — the field sizes the pipelining headroom.
     pub overlap_time: f64,
+    /// Configured scheduler lookahead for this run (1 = serial lookahead,
+    /// k ≥ 2 = depth-k prep queue with eager encodes + decoupled decode;
+    /// 0 for paths without a pipeline, e.g. the baseline).
+    pub pipeline_depth: usize,
+    /// LLM-lane (prefill/extend/generate) queue/device totals for this run.
+    pub lane_llm: LaneTimes,
+    /// GNN-lane (encode) queue/device totals for this run.
+    pub lane_gnn: LaneTimes,
 }
 
 impl BatchMetrics {
@@ -81,6 +118,20 @@ impl BatchMetrics {
         } else {
             0.0
         }
+    }
+
+    /// Fraction of the run's wall clock one lane spent executing (its
+    /// utilization; 0.0 until `wall_time` is set). With two busy lanes the
+    /// fractions can sum past 1.0 — that surplus IS the lane-overlap win.
+    pub fn lane_busy_frac(&self, lane: crate::runtime::Lane) -> f64 {
+        if self.wall_time <= 0.0 {
+            return 0.0;
+        }
+        let lt = match lane {
+            crate::runtime::Lane::Llm => &self.lane_llm,
+            crate::runtime::Lane::Gnn => &self.lane_gnn,
+        };
+        lt.device_time / self.wall_time
     }
 
     // -- online hit/miss split (Table 5) ------------------------------------
@@ -321,6 +372,31 @@ mod tests {
         assert_eq!(m.hit_count() + m.miss_count(), 0);
         assert_eq!(m.ttft_hit_ms(), 0.0);
         assert_eq!(m.ttft_miss_ms(), 0.0);
+    }
+
+    #[test]
+    fn lane_times_accumulate_call_timings() {
+        let mut lt = LaneTimes::default();
+        lt.add(&crate::runtime::CallTiming { queue_secs: 0.1, device_secs: 0.4 });
+        lt.add(&crate::runtime::CallTiming { queue_secs: 0.2, device_secs: 0.3 });
+        assert_eq!(lt.calls, 2);
+        assert!((lt.queue_time - 0.3).abs() < 1e-12);
+        assert!((lt.device_time - 0.7).abs() < 1e-12);
+        assert!((lt.total() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lane_busy_frac_needs_wall_time_and_can_sum_past_one() {
+        let mut m = BatchMetrics::default();
+        m.lane_llm.add(&crate::runtime::CallTiming { queue_secs: 0.0, device_secs: 1.5 });
+        m.lane_gnn.add(&crate::runtime::CallTiming { queue_secs: 0.0, device_secs: 1.0 });
+        assert_eq!(m.lane_busy_frac(crate::runtime::Lane::Llm), 0.0, "no wall_time yet");
+        m.wall_time = 2.0;
+        assert!((m.lane_busy_frac(crate::runtime::Lane::Llm) - 0.75).abs() < 1e-12);
+        assert!((m.lane_busy_frac(crate::runtime::Lane::Gnn) - 0.5).abs() < 1e-12);
+        // 0.75 + 0.5 > 1.0: both lanes busy at once — the overlap win
+        assert!(m.lane_busy_frac(crate::runtime::Lane::Llm)
+                + m.lane_busy_frac(crate::runtime::Lane::Gnn) > 1.0);
     }
 
     #[test]

@@ -1,0 +1,330 @@
+//! The engine's execution surface as a trait, plus the ticket types every
+//! backend shares.
+//!
+//! # Why a trait
+//!
+//! The serving coordinator only ever needs six operations — prefill, extend,
+//! generate, encode, release, and a handful of queries (KV byte sizing,
+//! warmup, stats). [`Backend`] names exactly that surface so the scheduling
+//! logic above it (lane overlap, depth-k prep queues, pin-safety under
+//! eviction, hit/miss TTFT composition) is testable in plain `cargo test`
+//! against the deterministic [`crate::runtime::SimBackend`], while
+//! production serving runs the PJRT [`crate::runtime::Engine`] unchanged.
+//!
+//! # Lanes
+//!
+//! A backend executes requests on independent **lanes**: at minimum an
+//! [`Lane::Llm`] lane (prefill / extend / generate — everything that touches
+//! a KV cache) and a [`Lane::Gnn`] lane (subgraph encode). Each lane is its
+//! own worker thread with its own queue, so an encode submitted while a
+//! prefill is in flight genuinely overlaps instead of queueing behind it.
+//! KV handles are meaningful only on the LLM lane — encode never takes or
+//! returns one — which is what makes the split safe without cross-lane
+//! buffer traffic.
+//!
+//! # Contract
+//!
+//! * `submit_*` enqueues without blocking and returns a ticket; `wait`
+//!   blocks for the reply. A dead lane (worker thread exited) surfaces as an
+//!   `Err` from `submit_*` or from `wait` — never a hang, never a panic.
+//! * `prefill`/`extend` return an opaque [`KvHandle`] the caller must
+//!   eventually pass to [`Backend::release`] / [`Backend::release_many`];
+//!   `extend` does NOT consume its input handle (the SubGCache property).
+//! * [`CallTiming`] is measured on the worker lane: `queue_secs` (submit →
+//!   lane pickup, charged to the query) and `device_secs` (lane-side
+//!   execution span). Timings must stay honest under pipelined submission.
+//! * Requests on one lane execute in FIFO submission order; requests on
+//!   different lanes are unordered with respect to each other.
+
+use std::sync::mpsc::Receiver;
+
+/// A backend execution lane (one worker thread + queue each).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lane {
+    /// KV-touching LLM calls: prefill, extend, generate.
+    Llm,
+    /// GNN subgraph encodes (never touches KV state).
+    Gnn,
+}
+
+impl Lane {
+    pub const ALL: [Lane; 2] = [Lane::Llm, Lane::Gnn];
+
+    /// Stable lowercase name (used in stats keys and thread names).
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Llm => "llm",
+            Lane::Gnn => "gnn",
+        }
+    }
+}
+
+/// Opaque reference to a backend-resident KV cache (k & v buffers).
+/// Deliberately not `Clone`: exactly one owner, released explicitly.
+#[derive(Debug, PartialEq, Eq, Hash)]
+pub struct KvHandle(pub(crate) u64);
+
+/// Per-entry execution counters (returned by [`Backend::stats`]).
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    /// (module.entry, calls, total seconds inside execute), merged across
+    /// lanes and sorted by key.
+    pub calls: Vec<(String, u64, f64)>,
+    pub live_kv: usize,
+    pub compile_secs: f64,
+    /// KV bytes that moved through the host while storing prefill/extend
+    /// outputs. 0 on the zero-copy path; non-zero means the tuple-literal
+    /// fallback (or forced `SUBGCACHE_KV_HOST_BOUNCE`) is in effect.
+    /// Always 0 for the sim backend.
+    pub host_kv_bytes: u64,
+}
+
+/// Lane-side timing of one executed call, measured on the worker thread so
+/// it stays honest under pipelined submission: `queue_secs` is how long the
+/// request sat in the lane's channel before pickup (charged to the query),
+/// `device_secs` the lane-thread span of the call itself (execute + result
+/// materialization).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CallTiming {
+    pub queue_secs: f64,
+    pub device_secs: f64,
+}
+
+impl CallTiming {
+    /// Total submit→reply lane time (queue + execution).
+    pub fn secs(&self) -> f64 {
+        self.queue_secs + self.device_secs
+    }
+}
+
+/// One in-flight reply slot. `wait` blocks until the lane answers; a
+/// dropped reply sender (lane worker died, or the request was never
+/// processed before shutdown) surfaces as an error instead of hanging
+/// forever.
+pub(crate) struct Ticket<T> {
+    pub(crate) rx: Receiver<anyhow::Result<T>>,
+}
+
+impl<T> Ticket<T> {
+    pub(crate) fn wait(self) -> anyhow::Result<T> {
+        self.rx.recv().map_err(|_| {
+            anyhow::anyhow!(
+                "backend lane dropped the reply channel before answering \
+                 (lane worker died or the ticket's request was never run)"
+            )
+        })?
+    }
+}
+
+/// Ticket for an in-flight KV-producing call — `prefill`
+/// ([`Backend::submit_prefill`]) or `extend` ([`Backend::submit_extend`]);
+/// yields the new KV handle and the next-token logits row.
+pub struct PendingKv(pub(crate) Ticket<(u64, Vec<f32>, CallTiming)>);
+
+/// Ticket for an in-flight `prefill` (see [`Backend::submit_prefill`]).
+pub type PendingPrefill = PendingKv;
+/// Ticket for an in-flight `extend` (see [`Backend::submit_extend`]).
+pub type PendingExtend = PendingKv;
+
+impl PendingKv {
+    /// Block for the new KV handle and the next-token logits row.
+    pub fn wait(self) -> anyhow::Result<(KvHandle, Vec<f32>)> {
+        let (kv, logits, _) = self.wait_timed()?;
+        Ok((kv, logits))
+    }
+
+    /// Like [`wait`](Self::wait), plus the lane-side [`CallTiming`].
+    pub fn wait_timed(self) -> anyhow::Result<(KvHandle, Vec<f32>, CallTiming)> {
+        let (id, logits, t) = self.0.wait()?;
+        Ok((KvHandle(id), logits, t))
+    }
+}
+
+/// Ticket for an in-flight `generate` (see [`Backend::submit_generate`]).
+pub struct PendingGenerate(pub(crate) Ticket<(Vec<i32>, CallTiming)>);
+
+impl PendingGenerate {
+    pub fn wait(self) -> anyhow::Result<Vec<i32>> {
+        Ok(self.wait_timed()?.0)
+    }
+
+    pub fn wait_timed(self) -> anyhow::Result<(Vec<i32>, CallTiming)> {
+        self.0.wait()
+    }
+}
+
+/// Ticket for an in-flight GNN `encode` (see [`Backend::submit_encode`]).
+pub struct PendingEncode(pub(crate) Ticket<(Vec<f32>, CallTiming)>);
+
+impl PendingEncode {
+    pub fn wait(self) -> anyhow::Result<Vec<f32>> {
+        Ok(self.wait_timed()?.0)
+    }
+
+    pub fn wait_timed(self) -> anyhow::Result<(Vec<f32>, CallTiming)> {
+        self.0.wait()
+    }
+}
+
+/// The execution surface the serving coordinator is written against. See
+/// the module docs for the contract; [`crate::runtime::Engine`] is the PJRT
+/// implementation, [`crate::runtime::SimBackend`] the deterministic
+/// simulator for scheduling tests.
+pub trait Backend {
+    /// Submit a prefill of `tokens` (padded to S, real length `plen`) on the
+    /// LLM lane without blocking; the ticket yields the new KV handle and
+    /// the next-token logits row after position `plen - 1`.
+    fn submit_prefill(&self, module: &str, tokens: &[i32], plen: i32)
+                      -> anyhow::Result<PendingPrefill>;
+
+    /// Submit an extend of `q_tokens` (padded to Q, real length `qlen`) at
+    /// position `plen` on top of `kv` (NOT consumed — it stays reusable, the
+    /// SubGCache property) on the LLM lane without blocking. The ticket
+    /// yields a new handle and the `[V]` logits row after the last real
+    /// question token (row `qlen - 1`, clamped).
+    fn submit_extend(&self, module: &str, kv: &KvHandle, plen: i32, q_tokens: &[i32],
+                     qlen: i32) -> anyhow::Result<PendingExtend>;
+
+    /// Submit a greedy decode of up to G tokens starting from `first_tok`
+    /// at `cur_len` on the LLM lane. `kv` is not consumed.
+    fn submit_generate(&self, module: &str, kv: &KvHandle, cur_len: i32, first_tok: i32)
+                       -> anyhow::Result<PendingGenerate>;
+
+    /// Submit a GNN subgraph embedding — x [N,F], adj [N,N], mask [N]
+    /// (row-major flat) — on the GNN lane without blocking.
+    fn submit_encode(&self, module: &str, x: Vec<f32>, adj: Vec<f32>, mask: Vec<f32>)
+                     -> anyhow::Result<PendingEncode>;
+
+    /// Return a KV cache to the backend. Best-effort: a dead lane has
+    /// already dropped its buffers, so failure to enqueue is ignored.
+    fn release(&self, kv: KvHandle);
+
+    /// Return a batch of KV caches in one lane message (the cache layer's
+    /// eviction/drain path). Best-effort, like [`Backend::release`].
+    fn release_many(&self, kvs: Vec<KvHandle>);
+
+    /// Resident bytes of one KV cache of `module` (k + v buffers), sized
+    /// from the manifest. Errors for non-LLM modules.
+    fn kv_bytes(&self, module: &str) -> anyhow::Result<usize>;
+
+    /// Load weights + compile all entries of `module` ahead of timing runs
+    /// (routed to the module's lane; a no-op for backends without compile).
+    fn warmup(&self, module: &str) -> anyhow::Result<()>;
+
+    /// Merged execution counters across all lanes.
+    fn stats(&self) -> anyhow::Result<EngineStats>;
+
+    // -- blocking conveniences (submit + wait) -------------------------------
+
+    /// Blocking prefill: [`Backend::submit_prefill`] + wait.
+    fn prefill(&self, module: &str, tokens: &[i32], plen: i32)
+               -> anyhow::Result<(KvHandle, Vec<f32>)> {
+        self.submit_prefill(module, tokens, plen)?.wait()
+    }
+
+    /// Blocking extend: [`Backend::submit_extend`] + wait.
+    fn extend(&self, module: &str, kv: &KvHandle, plen: i32, q_tokens: &[i32], qlen: i32)
+              -> anyhow::Result<(KvHandle, Vec<f32>)> {
+        self.submit_extend(module, kv, plen, q_tokens, qlen)?.wait()
+    }
+
+    /// Blocking generate: [`Backend::submit_generate`] + wait.
+    fn generate(&self, module: &str, kv: &KvHandle, cur_len: i32, first_tok: i32)
+                -> anyhow::Result<Vec<i32>> {
+        self.submit_generate(module, kv, cur_len, first_tok)?.wait()
+    }
+
+    /// Blocking encode: [`Backend::submit_encode`] + wait.
+    fn encode(&self, module: &str, x: Vec<f32>, adj: Vec<f32>, mask: Vec<f32>)
+              -> anyhow::Result<Vec<f32>> {
+        self.submit_encode(module, x, adj, mask)?.wait()
+    }
+}
+
+/// Merge per-lane stats snapshots into one [`EngineStats`] (calls
+/// concatenated and re-sorted, counters summed).
+pub(crate) fn merge_stats(parts: Vec<EngineStats>) -> EngineStats {
+    let mut out = EngineStats::default();
+    for p in parts {
+        out.calls.extend(p.calls);
+        out.live_kv += p.live_kv;
+        out.compile_secs += p.compile_secs;
+        out.host_kv_bytes += p.host_kv_bytes;
+    }
+    out.calls.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn wait_on_dropped_ticket_errors_instead_of_hanging() {
+        let (tx, rx) = channel::<anyhow::Result<(u64, Vec<f32>, CallTiming)>>();
+        drop(tx);
+        let err = PendingKv(Ticket { rx }).wait().unwrap_err();
+        assert!(err.to_string().contains("lane"), "unhelpful error: {err}");
+
+        let (tx, rx) = channel::<anyhow::Result<(u64, Vec<f32>, CallTiming)>>();
+        drop(tx);
+        assert!(PendingKv(Ticket { rx }).wait_timed().is_err());
+
+        let (tx, rx) = channel::<anyhow::Result<(Vec<i32>, CallTiming)>>();
+        drop(tx);
+        assert!(PendingGenerate(Ticket { rx }).wait().is_err());
+
+        let (tx, rx) = channel::<anyhow::Result<(Vec<f32>, CallTiming)>>();
+        drop(tx);
+        assert!(PendingEncode(Ticket { rx }).wait().is_err());
+    }
+
+    #[test]
+    fn ticket_delivers_value_sent_before_drop() {
+        // a reply that was already sent must still arrive after the lane
+        // side dropped its sender — wait is recv, not a liveness check.
+        let (tx, rx) = channel::<anyhow::Result<(u64, Vec<f32>, CallTiming)>>();
+        tx.send(Ok((7, vec![1.0], CallTiming::default()))).unwrap();
+        drop(tx);
+        let (kv, logits, t) = PendingKv(Ticket { rx }).wait_timed().unwrap();
+        assert_eq!(kv, KvHandle(7));
+        assert_eq!(logits, vec![1.0]);
+        assert_eq!(t.secs(), 0.0);
+    }
+
+    #[test]
+    fn call_timing_sums_components() {
+        let t = CallTiming { queue_secs: 0.25, device_secs: 0.5 };
+        assert!((t.secs() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lane_names_are_stable() {
+        assert_eq!(Lane::Llm.name(), "llm");
+        assert_eq!(Lane::Gnn.name(), "gnn");
+        assert_eq!(Lane::ALL.len(), 2);
+    }
+
+    #[test]
+    fn merge_stats_sums_and_sorts() {
+        let a = EngineStats {
+            calls: vec![("m.prefill".into(), 2, 0.5)],
+            live_kv: 3,
+            compile_secs: 1.0,
+            host_kv_bytes: 0,
+        };
+        let b = EngineStats {
+            calls: vec![("gat.encode".into(), 4, 0.25)],
+            live_kv: 0,
+            compile_secs: 0.5,
+            host_kv_bytes: 8,
+        };
+        let m = merge_stats(vec![a, b]);
+        assert_eq!(m.live_kv, 3);
+        assert!((m.compile_secs - 1.5).abs() < 1e-12);
+        assert_eq!(m.host_kv_bytes, 8);
+        assert_eq!(m.calls[0].0, "gat.encode", "calls must be re-sorted");
+        assert_eq!(m.calls[1].0, "m.prefill");
+    }
+}

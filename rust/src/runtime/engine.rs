@@ -1,44 +1,48 @@
-//! PJRT execution engine: device-resident KV caches behind a ticketed
-//! submit/wait API.
+//! PJRT execution engine: device-resident KV caches behind the ticketed
+//! [`Backend`] submit/wait API, executed on per-lane worker threads.
 //!
-//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so a dedicated
-//! engine thread owns the client, the lazily-compiled executables, the
-//! weight buffers and the resident KV caches; the rest of the system talks
-//! to it over channels. This mirrors the single-engine-loop design of
-//! production LLM servers (vLLM et al.) and makes the L3 side trivially
-//! thread-safe.
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so each
+//! **lane** is a dedicated worker thread that owns its own client, its
+//! lazily-compiled executables, weight buffers and — on the LLM lane — the
+//! resident KV caches; the rest of the system talks to the lanes over
+//! channels. Two lanes exist ([`Lane::Llm`] and [`Lane::Gnn`]): prefill /
+//! extend / generate execute on the LLM lane (they share KV state, which
+//! never crosses lanes), GNN encodes on their own lane. A GNN encode
+//! submitted while an LLM prefill is in flight therefore runs concurrently
+//! instead of queueing behind it — the overlap `serve_online` exploits.
+//! Requests on one lane execute in FIFO submission order.
 //!
 //! # Zero-copy KV
 //!
 //! `prefill`/`extend` keep their K/V outputs **on the device**: when PJRT
 //! hands back the executable's root tuple as one buffer per leaf (the
-//! flattened form), the K and V buffers go straight into the engine's handle
-//! map without ever visiting the host. Only logits travel host-ward:
+//! flattened form), the K and V buffers go straight into the LLM lane's
+//! handle map without ever visiting the host. Only logits travel host-ward:
 //! prefill's HLO already emits the single `[V]` next-token row (selected by
 //! `plen` on device); extend's `[Q,V]` matrix crosses to the host once, the
-//! engine slices the `qlen` row there, and only `[V]` floats go over the
+//! lane slices the `qlen` row there, and only `[V]` floats go over the
 //! reply channel (moving that slice into the HLO is a documented ROADMAP
-//! follow-on). If the binding instead returns a single tuple-shaped buffer, the
-//! only untuple path it offers runs through a host literal — that fallback
-//! (the seed's original behaviour) is kept, and every KV byte it bounces is
-//! counted in [`EngineStats::host_kv_bytes`] so the regression is visible.
-//! `SUBGCACHE_KV_HOST_BOUNCE=1` forces the bounce for parity testing.
+//! follow-on). If the binding instead returns a single tuple-shaped buffer,
+//! the only untuple path it offers runs through a host literal — that
+//! fallback (the seed's original behaviour) is kept, and every KV byte it
+//! bounces is counted in [`EngineStats::host_kv_bytes`] so the regression is
+//! visible. `SUBGCACHE_KV_HOST_BOUNCE=1` forces the bounce for parity
+//! testing.
 //!
 //! # Submit/wait
 //!
 //! Every execute request can be issued without blocking: `submit_prefill` /
 //! `submit_extend` / `submit_generate` / `submit_encode` enqueue the call
-//! and return a ticket ([`PendingPrefill`], [`PendingExtend`],
-//! [`PendingGenerate`], [`PendingEncode`]). The caller overlaps host work
-//! with device execution and collects the result with `wait` (or
-//! `wait_timed`, which adds the engine-side [`CallTiming`]: queue seconds —
-//! charged to the query — and the engine-thread execution span). The
-//! blocking `prefill`/`extend`/`generate`/`encode` wrappers are submit +
-//! wait. Dropping an unawaited KV-producing ticket abandons its handle until
+//! on its lane and return a ticket. The caller overlaps host work (and the
+//! other lane's device work) with execution and collects the result with
+//! `wait` (or `wait_timed`, which adds the lane-side [`CallTiming`]).
+//! Dropping an unawaited KV-producing ticket abandons its handle until
 //! engine shutdown (a bounded leak, same class as an error-path unwind), so
-//! pipelined callers should always wait.
+//! pipelined callers should always wait. A lane whose worker thread has
+//! died fails `submit_*` (send error) and outstanding `wait`s (dropped
+//! reply sender) with an error instead of hanging.
 //!
-//! KV caches never leave the engine: `prefill`/`extend` return opaque
+//! KV caches never leave the LLM lane: `prefill`/`extend` return opaque
 //! [`KvHandle`]s that later calls reference, so the coordinator moves tokens
 //! and one logits row per call. Environment flags (`SUBGCACHE_TRACE`,
 //! `SUBGCACHE_KV_HOST_BOUNCE`) are read once at [`Engine::start_at`] on the
@@ -49,43 +53,10 @@ use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Instant;
 
+use super::backend::{merge_stats, Backend, CallTiming, EngineStats, KvHandle, Lane,
+                     PendingEncode, PendingExtend, PendingGenerate, PendingKv,
+                     PendingPrefill, Ticket};
 use super::manifest::{EntrySpec, Manifest, ModuleSpec};
-
-/// Opaque reference to an engine-resident KV cache (k & v buffers).
-/// Deliberately not `Clone`: exactly one owner, released explicitly.
-#[derive(Debug, PartialEq, Eq, Hash)]
-pub struct KvHandle(pub(crate) u64);
-
-/// Per-entry execution counters (returned by [`Engine::stats`]).
-#[derive(Debug, Clone, Default)]
-pub struct EngineStats {
-    /// (module.entry, calls, total seconds inside execute).
-    pub calls: Vec<(String, u64, f64)>,
-    pub live_kv: usize,
-    pub compile_secs: f64,
-    /// KV bytes that moved through the host while storing prefill/extend
-    /// outputs. 0 on the zero-copy path; non-zero means the tuple-literal
-    /// fallback (or forced `SUBGCACHE_KV_HOST_BOUNCE`) is in effect.
-    pub host_kv_bytes: u64,
-}
-
-/// Engine-side timing of one executed call, measured on the engine thread
-/// so it stays honest under pipelined submission: `queue_secs` is how long
-/// the request sat in the channel before the engine picked it up (charged
-/// to the query), `device_secs` the engine-thread span of the call itself
-/// (execute + result materialization).
-#[derive(Debug, Clone, Copy, Default)]
-pub struct CallTiming {
-    pub queue_secs: f64,
-    pub device_secs: f64,
-}
-
-impl CallTiming {
-    /// Total submit→reply engine time (queue + execution).
-    pub fn secs(&self) -> f64 {
-        self.queue_secs + self.device_secs
-    }
-}
 
 type KvReply = Sender<anyhow::Result<(u64, Vec<f32>, CallTiming)>>;
 
@@ -138,74 +109,6 @@ enum Req {
     Shutdown,
 }
 
-/// One in-flight reply slot. `wait` blocks until the engine answers; a
-/// dropped reply sender (engine died, or the request was never processed)
-/// surfaces as an error instead of hanging forever.
-struct Ticket<T> {
-    rx: Receiver<anyhow::Result<T>>,
-}
-
-impl<T> Ticket<T> {
-    fn wait(self) -> anyhow::Result<T> {
-        self.rx.recv().map_err(|_| {
-            anyhow::anyhow!(
-                "engine dropped the reply channel before answering \
-                 (engine shut down or the ticket's request was never run)"
-            )
-        })?
-    }
-}
-
-/// Ticket for an in-flight KV-producing call — `prefill`
-/// ([`Engine::submit_prefill`]) or `extend` ([`Engine::submit_extend`]);
-/// yields the new KV handle and the next-token logits row.
-pub struct PendingKv(Ticket<(u64, Vec<f32>, CallTiming)>);
-
-/// Ticket for an in-flight `prefill` (see [`Engine::submit_prefill`]).
-pub type PendingPrefill = PendingKv;
-/// Ticket for an in-flight `extend` (see [`Engine::submit_extend`]).
-pub type PendingExtend = PendingKv;
-
-impl PendingKv {
-    /// Block for the new KV handle and the next-token logits row.
-    pub fn wait(self) -> anyhow::Result<(KvHandle, Vec<f32>)> {
-        let (kv, logits, _) = self.wait_timed()?;
-        Ok((kv, logits))
-    }
-
-    /// Like [`wait`](Self::wait), plus the engine-side [`CallTiming`].
-    pub fn wait_timed(self) -> anyhow::Result<(KvHandle, Vec<f32>, CallTiming)> {
-        let (id, logits, t) = self.0.wait()?;
-        Ok((KvHandle(id), logits, t))
-    }
-}
-
-/// Ticket for an in-flight `generate` (see [`Engine::submit_generate`]).
-pub struct PendingGenerate(Ticket<(Vec<i32>, CallTiming)>);
-
-impl PendingGenerate {
-    pub fn wait(self) -> anyhow::Result<Vec<i32>> {
-        Ok(self.wait_timed()?.0)
-    }
-
-    pub fn wait_timed(self) -> anyhow::Result<(Vec<i32>, CallTiming)> {
-        self.0.wait()
-    }
-}
-
-/// Ticket for an in-flight GNN `encode` (see [`Engine::submit_encode`]).
-pub struct PendingEncode(Ticket<(Vec<f32>, CallTiming)>);
-
-impl PendingEncode {
-    pub fn wait(self) -> anyhow::Result<Vec<f32>> {
-        Ok(self.wait_timed()?.0)
-    }
-
-    pub fn wait_timed(self) -> anyhow::Result<(Vec<f32>, CallTiming)> {
-        self.0.wait()
-    }
-}
-
 /// Flags resolved once at engine start (no hot-path env lookups).
 #[derive(Debug, Clone, Copy)]
 struct EngineOpts {
@@ -213,55 +116,73 @@ struct EngineOpts {
     host_bounce: bool,
 }
 
-/// Thread-safe handle to the engine thread. The request sender is held
-/// directly (mpsc senders are `Send` + `Sync` over `Send` payloads), so
+/// One worker lane: its request sender plus the join handle.
+struct LaneHandle {
+    tx: Sender<Req>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Thread-safe handle to the per-lane engine workers. Request senders are
+/// held directly (mpsc senders are `Send` + `Sync` over `Send` payloads), so
 /// enqueuing a call costs one channel push — no lock, no poisoned-mutex
 /// failure mode.
 pub struct Engine {
-    tx: Sender<Req>,
-    thread: Option<std::thread::JoinHandle<()>>,
-    /// Copy of the manifest kept on the handle side so byte-sizing queries
-    /// ([`Engine::kv_bytes`]) need no engine-thread roundtrip.
+    /// Indexed by `Lane as usize` ([`Lane::Llm`] = 0, [`Lane::Gnn`] = 1).
+    lanes: [LaneHandle; 2],
+    /// Copy of the manifest kept on the handle side so byte-sizing and
+    /// lane-routing queries need no worker-thread roundtrip.
     manifest: Manifest,
 }
 
 impl Engine {
-    /// Spawn the engine thread over an artifact directory.
+    /// Spawn both lane worker threads over an artifact directory.
     pub fn start_at(root: PathBuf, manifest: Manifest) -> anyhow::Result<Engine> {
-        let (tx, rx) = channel::<Req>();
-        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
         // Environment is read here, once, on the caller's thread: hot-path
         // calls never touch the environment, and tests can flip the flags
-        // between engine starts without racing the engine thread.
+        // between engine starts without racing the worker threads.
         let opts = EngineOpts {
             trace: std::env::var("SUBGCACHE_TRACE").is_ok(),
             host_bounce: std::env::var("SUBGCACHE_KV_HOST_BOUNCE").is_ok(),
         };
-        let thread_manifest = manifest.clone();
-        let thread = std::thread::Builder::new()
-            .name("pjrt-engine".into())
-            .spawn(move || engine_main(root, thread_manifest, opts, rx, ready_tx))?;
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
-        Ok(Engine { tx, thread: Some(thread), manifest })
+        let spawn = |lane: Lane| -> anyhow::Result<LaneHandle> {
+            let (tx, rx) = channel::<Req>();
+            let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+            let root = root.clone();
+            let thread_manifest = manifest.clone();
+            let thread = std::thread::Builder::new()
+                .name(format!("pjrt-{}", lane.name()))
+                .spawn(move || lane_main(root, thread_manifest, opts, rx, ready_tx))?;
+            ready_rx.recv().map_err(|_| {
+                anyhow::anyhow!("engine {} lane died during startup", lane.name())
+            })??;
+            Ok(LaneHandle { tx, thread: Some(thread) })
+        };
+        let llm = spawn(Lane::Llm)?;
+        let gnn = spawn(Lane::Gnn)?;
+        Ok(Engine { lanes: [llm, gnn], manifest })
     }
 
-    /// Enqueue a request. A dead engine yields an error (failing the one
-    /// request) instead of panicking the caller's thread.
-    fn send(&self, req: Req) -> anyhow::Result<()> {
-        self.tx
-            .send(req)
-            .map_err(|_| anyhow::anyhow!("engine thread has shut down"))
+    /// Lane a module executes on, derived from its manifest kind.
+    fn lane_for_module(&self, module: &str) -> anyhow::Result<Lane> {
+        lane_for_kind(&self.manifest.module(module)?.kind)
+            .ok_or_else(|| anyhow::anyhow!("module {module}: no lane for its kind"))
     }
 
-    /// Submit a prefill of `tokens` (padded to S, real length `plen`)
-    /// without blocking; the ticket yields the new KV handle and the
-    /// next-token logits row after position `plen - 1`.
+    /// Enqueue a request on a lane. A dead lane yields an error (failing
+    /// the one request) instead of panicking the caller's thread.
+    fn send(&self, lane: Lane, req: Req) -> anyhow::Result<()> {
+        self.lanes[lane as usize].tx.send(req).map_err(|_| {
+            anyhow::anyhow!("engine {} lane worker has shut down", lane.name())
+        })
+    }
+
+    /// Submit a prefill of `tokens` (padded to S, real length `plen`) on
+    /// the LLM lane without blocking; the ticket yields the new KV handle
+    /// and the next-token logits row after position `plen - 1`.
     pub fn submit_prefill(&self, module: &str, tokens: &[i32], plen: i32)
                           -> anyhow::Result<PendingPrefill> {
         let (reply, rx) = channel();
-        self.send(Req::Prefill {
+        self.send(Lane::Llm, Req::Prefill {
             module: module.into(), tokens: tokens.to_vec(), plen,
             submitted: Instant::now(), reply,
         })?;
@@ -283,7 +204,7 @@ impl Engine {
     pub fn submit_extend(&self, module: &str, kv: &KvHandle, plen: i32,
                          q_tokens: &[i32], qlen: i32) -> anyhow::Result<PendingExtend> {
         let (reply, rx) = channel();
-        self.send(Req::Extend {
+        self.send(Lane::Llm, Req::Extend {
             module: module.into(), kv: kv.0, plen, q_tokens: q_tokens.to_vec(), qlen,
             submitted: Instant::now(), reply,
         })?;
@@ -301,7 +222,7 @@ impl Engine {
     pub fn submit_generate(&self, module: &str, kv: &KvHandle, cur_len: i32,
                            first_tok: i32) -> anyhow::Result<PendingGenerate> {
         let (reply, rx) = channel();
-        self.send(Req::Generate {
+        self.send(Lane::Llm, Req::Generate {
             module: module.into(), kv: kv.0, cur_len, first_tok,
             submitted: Instant::now(), reply,
         })?;
@@ -314,12 +235,12 @@ impl Engine {
         self.submit_generate(module, kv, cur_len, first_tok)?.wait()
     }
 
-    /// Submit a GNN subgraph embedding: x [N,F], adj [N,N], mask [N]
-    /// (row-major flat) without blocking.
+    /// Submit a GNN subgraph embedding — x [N,F], adj [N,N], mask [N]
+    /// (row-major flat) — on the GNN lane without blocking.
     pub fn submit_encode(&self, module: &str, x: Vec<f32>, adj: Vec<f32>,
                          mask: Vec<f32>) -> anyhow::Result<PendingEncode> {
         let (reply, rx) = channel();
-        self.send(Req::Encode {
+        self.send(Lane::Gnn, Req::Encode {
             module: module.into(), x, adj, mask, submitted: Instant::now(), reply,
         })?;
         Ok(PendingEncode(Ticket { rx }))
@@ -331,19 +252,22 @@ impl Engine {
         self.submit_encode(module, x, adj, mask)?.wait()
     }
 
-    /// Return a KV cache to the engine. Best-effort: a dead engine has
-    /// already dropped its device buffers, so failure to enqueue is ignored.
+    /// Return a KV cache to the engine (KV lives on the LLM lane).
+    /// Best-effort: a dead lane has already dropped its device buffers, so
+    /// failure to enqueue is ignored.
     pub fn release(&self, kv: KvHandle) {
-        let _ = self.send(Req::Release { kv: kv.0 });
+        let _ = self.send(Lane::Llm, Req::Release { kv: kv.0 });
     }
 
-    /// Return a batch of KV caches in one engine message (the cache layer's
+    /// Return a batch of KV caches in one lane message (the cache layer's
     /// eviction/drain path). Best-effort, like [`Engine::release`].
     pub fn release_many(&self, kvs: Vec<KvHandle>) {
         if kvs.is_empty() {
             return;
         }
-        let _ = self.send(Req::ReleaseMany { kvs: kvs.into_iter().map(|h| h.0).collect() });
+        let _ = self.send(Lane::Llm, Req::ReleaseMany {
+            kvs: kvs.into_iter().map(|h| h.0).collect(),
+        });
     }
 
     /// Resident bytes of one KV cache of `module` (k + v buffers, f32),
@@ -357,32 +281,95 @@ impl Engine {
         Ok(2 * dims.kv_bytes_each())
     }
 
-    /// Load weights + compile all entries of `module` ahead of timing runs.
+    /// Load weights + compile all entries of `module` ahead of timing runs,
+    /// on the lane the module executes on.
     pub fn warmup(&self, module: &str) -> anyhow::Result<()> {
+        let lane = self.lane_for_module(module)?;
         let (reply, rx) = channel();
-        self.send(Req::Warmup { module: module.into(), reply })?;
+        self.send(lane, Req::Warmup { module: module.into(), reply })?;
         Ticket { rx }.wait()
     }
 
+    /// Merged execution counters across both lanes.
     pub fn stats(&self) -> anyhow::Result<EngineStats> {
-        let (reply, rx) = channel();
-        self.send(Req::Stats { reply })?;
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("engine thread died before replying"))
+        let mut parts = Vec::with_capacity(Lane::ALL.len());
+        for lane in Lane::ALL {
+            let (reply, rx) = channel();
+            self.send(lane, Req::Stats { reply })?;
+            parts.push(rx.recv().map_err(|_| {
+                anyhow::anyhow!("engine {} lane died before replying", lane.name())
+            })?);
+        }
+        Ok(merge_stats(parts))
+    }
+}
+
+impl Backend for Engine {
+    fn submit_prefill(&self, module: &str, tokens: &[i32], plen: i32)
+                      -> anyhow::Result<PendingPrefill> {
+        Engine::submit_prefill(self, module, tokens, plen)
+    }
+
+    fn submit_extend(&self, module: &str, kv: &KvHandle, plen: i32, q_tokens: &[i32],
+                     qlen: i32) -> anyhow::Result<PendingExtend> {
+        Engine::submit_extend(self, module, kv, plen, q_tokens, qlen)
+    }
+
+    fn submit_generate(&self, module: &str, kv: &KvHandle, cur_len: i32, first_tok: i32)
+                       -> anyhow::Result<PendingGenerate> {
+        Engine::submit_generate(self, module, kv, cur_len, first_tok)
+    }
+
+    fn submit_encode(&self, module: &str, x: Vec<f32>, adj: Vec<f32>, mask: Vec<f32>)
+                     -> anyhow::Result<PendingEncode> {
+        Engine::submit_encode(self, module, x, adj, mask)
+    }
+
+    fn release(&self, kv: KvHandle) {
+        Engine::release(self, kv)
+    }
+
+    fn release_many(&self, kvs: Vec<KvHandle>) {
+        Engine::release_many(self, kvs)
+    }
+
+    fn kv_bytes(&self, module: &str) -> anyhow::Result<usize> {
+        Engine::kv_bytes(self, module)
+    }
+
+    fn warmup(&self, module: &str) -> anyhow::Result<()> {
+        Engine::warmup(self, module)
+    }
+
+    fn stats(&self) -> anyhow::Result<EngineStats> {
+        Engine::stats(self)
     }
 }
 
 impl Drop for Engine {
     fn drop(&mut self) {
-        let _ = self.tx.send(Req::Shutdown);
-        if let Some(t) = self.thread.take() {
-            let _ = t.join();
+        for lane in &mut self.lanes {
+            let _ = lane.tx.send(Req::Shutdown);
+        }
+        for lane in &mut self.lanes {
+            if let Some(t) = lane.thread.take() {
+                let _ = t.join();
+            }
         }
     }
 }
 
+/// Lane routing by manifest module kind (shared with the sim backend).
+pub(crate) fn lane_for_kind(kind: &str) -> Option<Lane> {
+    match kind {
+        "llm" => Some(Lane::Llm),
+        "gnn" => Some(Lane::Gnn),
+        _ => None,
+    }
+}
+
 // ---------------------------------------------------------------------------
-// Engine thread internals
+// Lane worker internals
 // ---------------------------------------------------------------------------
 
 struct LoadedModule {
@@ -391,7 +378,7 @@ struct LoadedModule {
     exes: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
-/// An engine-resident KV cache (k & v device buffers).
+/// A lane-resident KV cache (k & v device buffers).
 struct KvEntry {
     k: xla::PjRtBuffer,
     v: xla::PjRtBuffer,
@@ -423,8 +410,8 @@ pub(crate) fn logits_row(qlen: i32, rows: usize) -> usize {
     (qlen.max(1) as usize).min(rows) - 1
 }
 
-/// Engine-side timing wrapper for one request: `queue` is how long the
-/// request waited in the channel, `device` the engine-thread span of the
+/// Lane-side timing wrapper for one request: `queue` is how long the
+/// request waited in the channel, `device` the lane-thread span of the
 /// handler (execute + result materialization).
 fn timed<T>(submitted: Instant, f: impl FnOnce() -> anyhow::Result<T>)
             -> anyhow::Result<(T, CallTiming)> {
@@ -434,8 +421,8 @@ fn timed<T>(submitted: Instant, f: impl FnOnce() -> anyhow::Result<T>)
     Ok((out, CallTiming { queue_secs, device_secs: t0.elapsed().as_secs_f64() }))
 }
 
-fn engine_main(root: PathBuf, manifest: Manifest, opts: EngineOpts, rx: Receiver<Req>,
-               ready: Sender<anyhow::Result<()>>) {
+fn lane_main(root: PathBuf, manifest: Manifest, opts: EngineOpts, rx: Receiver<Req>,
+             ready: Sender<anyhow::Result<()>>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => c,
         Err(e) => {
@@ -844,7 +831,7 @@ fn first_output_literal(out: ExecOut) -> anyhow::Result<xla::Literal> {
 }
 
 /// An entry-point argument: an owned host-built buffer, or a KV handle
-/// expanding to its (k, v) buffer pair borrowed from the engine map.
+/// expanding to its (k, v) buffer pair borrowed from the lane's map.
 enum Extra {
     Own(xla::PjRtBuffer),
     Kv(u64),
@@ -872,41 +859,9 @@ mod tests {
     }
 
     #[test]
-    fn wait_on_dropped_ticket_errors_instead_of_hanging() {
-        let (tx, rx) = channel::<anyhow::Result<(u64, Vec<f32>, CallTiming)>>();
-        drop(tx);
-        let err = PendingKv(Ticket { rx }).wait().unwrap_err();
-        assert!(err.to_string().contains("engine"), "unhelpful error: {err}");
-
-        let (tx, rx) = channel::<anyhow::Result<(u64, Vec<f32>, CallTiming)>>();
-        drop(tx);
-        assert!(PendingKv(Ticket { rx }).wait_timed().is_err());
-
-        let (tx, rx) = channel::<anyhow::Result<(Vec<i32>, CallTiming)>>();
-        drop(tx);
-        assert!(PendingGenerate(Ticket { rx }).wait().is_err());
-
-        let (tx, rx) = channel::<anyhow::Result<(Vec<f32>, CallTiming)>>();
-        drop(tx);
-        assert!(PendingEncode(Ticket { rx }).wait().is_err());
-    }
-
-    #[test]
-    fn ticket_delivers_value_sent_before_drop() {
-        // a reply that was already sent must still arrive after the engine
-        // side dropped its sender — wait is recv, not a liveness check.
-        let (tx, rx) = channel::<anyhow::Result<(u64, Vec<f32>, CallTiming)>>();
-        tx.send(Ok((7, vec![1.0], CallTiming::default()))).unwrap();
-        drop(tx);
-        let (kv, logits, t) = PendingKv(Ticket { rx }).wait_timed().unwrap();
-        assert_eq!(kv, KvHandle(7));
-        assert_eq!(logits, vec![1.0]);
-        assert_eq!(t.secs(), 0.0);
-    }
-
-    #[test]
-    fn call_timing_sums_components() {
-        let t = CallTiming { queue_secs: 0.25, device_secs: 0.5 };
-        assert!((t.secs() - 0.75).abs() < 1e-12);
+    fn lane_routing_by_module_kind() {
+        assert_eq!(lane_for_kind("llm"), Some(Lane::Llm));
+        assert_eq!(lane_for_kind("gnn"), Some(Lane::Gnn));
+        assert_eq!(lane_for_kind("tts"), None);
     }
 }

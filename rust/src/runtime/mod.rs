@@ -1,16 +1,63 @@
 //! Runtime layer: the artifact store (datasets, vocab, manifest, HLO,
-//! weights produced once by `make artifacts`) and the PJRT [`Engine`] that
-//! loads and executes the AOT-compiled HLO on the request path. Python never
-//! runs here.
+//! weights produced once by `make artifacts`) and the execution backends
+//! that serve the request path. Python never runs here.
+//!
+//! # The lane model
+//!
+//! Execution is organized into **lanes** — independent worker threads with
+//! their own FIFO request queues (see [`Lane`]):
+//!
+//! * [`Lane::Llm`] runs everything that touches a KV cache: `prefill`,
+//!   `extend`, `generate`, and KV release. KV handles are created, read and
+//!   destroyed only on this lane, so no KV bytes ever cross threads.
+//! * [`Lane::Gnn`] runs subgraph `encode`s. It shares nothing with the LLM
+//!   lane, so an encode submitted while a prefill is in flight genuinely
+//!   overlaps — the lane split is what lets `serve_online` hide query
+//!   *i+1*'s GNN encode under query *i*'s prefill/extend.
+//!
+//! Requests on one lane execute in submission order; across lanes there is
+//! no ordering. Every submission returns a ticket ([`PendingPrefill`] et
+//! al.) whose `wait`/`wait_timed` blocks for the reply; a lane whose worker
+//! thread has died fails submissions and outstanding waits with an error
+//! instead of hanging.
+//!
+//! # The `Backend` contract
+//!
+//! [`Backend`] names the exact execution surface the coordinator consumes —
+//! the four submit ops, release, KV byte sizing, warmup and stats — so
+//! serving/scheduling logic is written against the trait, not a concrete
+//! engine. Two implementations exist:
+//!
+//! * [`Engine`] — the production PJRT backend: one PJRT client, executable
+//!   set and weight/KV buffer store per lane, zero-copy device-resident KV
+//!   (see `engine.rs` for the HLO/transfer details).
+//! * [`SimBackend`] — a deterministic simulator with configurable per-op
+//!   virtual latencies ([`SimLatency`]) and hash-based but
+//!   composition-faithful model outputs. It exists so pipeline ordering,
+//!   lane overlap, pin-safety under eviction and hit/miss TTFT composition
+//!   can be asserted in plain `cargo test` on a fresh clone.
+//!
+//! # Writing a SimBackend test
+//!
+//! Build the in-memory world with [`sim_store`] + [`sim_dataset`], start a
+//! [`SimBackend`] with the latency profile your assertion needs (zero for
+//! functional checks, a few ms per op for overlap/wall-time checks), and
+//! drive the coordinator exactly as production code would — see the worked
+//! example in `runtime/sim.rs`'s module docs and `rust/tests/sim_serving.rs`
+//! for full scenarios.
 
+mod backend;
 mod engine;
 mod gnn;
 mod manifest;
+mod sim;
 
-pub use engine::{CallTiming, Engine, EngineStats, KvHandle, PendingEncode, PendingExtend,
-                 PendingGenerate, PendingKv, PendingPrefill};
+pub use backend::{Backend, CallTiming, EngineStats, KvHandle, Lane, PendingEncode,
+                  PendingExtend, PendingGenerate, PendingKv, PendingPrefill};
+pub use engine::Engine;
 pub use gnn::{pack_subgraph, PackedSubgraph};
 pub use manifest::{ArgSpec, Constants, EntrySpec, LlmDims, Manifest, ModuleSpec, ParamSpec};
+pub use sim::{sim_dataset, sim_store, SimBackend, SimLatency, SIM_BACKBONE};
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -44,6 +91,21 @@ impl ArtifactStore {
             tokenizer.len(), tokenizer.padded_size(), manifest.constants.vocab
         );
         Ok(ArtifactStore(Arc::new(Inner { root, manifest, tokenizer })))
+    }
+
+    /// Purely in-memory store (no files): the backing for [`sim_store`] and
+    /// any test that fabricates its own manifest + vocab. Disk-backed
+    /// queries ([`ArtifactStore::dataset`], [`ArtifactStore::golden`]) will
+    /// fail on such a store — sim runs build their datasets with
+    /// [`sim_dataset`] instead.
+    pub fn in_memory(manifest: Manifest, tokenizer: Tokenizer) -> ArtifactStore {
+        assert_eq!(tokenizer.padded_size(), manifest.constants.vocab,
+                   "in-memory vocab disagrees with manifest vocab");
+        ArtifactStore(Arc::new(Inner {
+            root: PathBuf::from("<in-memory>"),
+            manifest,
+            tokenizer,
+        }))
     }
 
     /// Locate the artifacts dir next to the current dir or its parents
@@ -87,7 +149,7 @@ impl ArtifactStore {
 }
 
 impl Engine {
-    /// Spawn the engine thread for an artifact store.
+    /// Spawn the engine lane threads for an artifact store.
     pub fn start(store: &ArtifactStore) -> anyhow::Result<Engine> {
         Engine::start_at(store.root().to_path_buf(), store.manifest().clone())
     }

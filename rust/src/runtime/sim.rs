@@ -1,0 +1,769 @@
+//! Deterministic simulation backend + synthetic artifact world, so the
+//! coordinator's scheduling logic (lane overlap, depth-k pipelining,
+//! pin-safety under eviction, hit/miss TTFT composition, cluster TTL) runs
+//! under plain `cargo test` — no `make artifacts`, no PJRT.
+//!
+//! # What it simulates
+//!
+//! [`SimBackend`] implements [`Backend`] with the same lane structure as
+//! the PJRT engine: an LLM lane worker (prefill / extend / generate, owning
+//! the KV map) and a GNN lane worker (encode), each a real thread with a
+//! FIFO queue, so submission-order and overlap behaviour match production.
+//! Each op sleeps its configured [`SimLatency`] — the "device time" — and
+//! replies with a [`CallTiming`] measured exactly like the engine's.
+//!
+//! **Model semantics are deterministic and composition-faithful:** a KV
+//! handle stores the real token sequence it was built from, `extend`
+//! appends to it, and logits are a pure hash of the effective sequence.
+//! Prefilling `prefix ⊕ question` in one call therefore yields bit-identical
+//! logits to prefill(prefix) + extend(question) — the same parity property
+//! the PJRT engine has — so the baseline / SubGCache / online answer-match
+//! e2e tests run unmodified on the sim. Encode is a masked mean over the
+//! packed node features (adjacency is ignored), which keeps similar
+//! subgraphs close in embedding space so centroid matching behaves.
+//!
+//! # Writing a SimBackend test
+//!
+//! ```no_run
+//! use subgcache::runtime::{sim_dataset, sim_store, SimBackend, SimLatency, SIM_BACKBONE};
+//! use subgcache::coordinator::{Coordinator, ServeConfig};
+//! use subgcache::retrieval::GRetriever;
+//!
+//! let store = sim_store();                         // in-memory artifact world
+//! let ds = sim_dataset(4, 3);                      // 4 groups × 3 queries
+//! let lat = SimLatency::from_millis(10, 4, 4, 10); // prefill/extend/gen/encode
+//! let sim = SimBackend::start(&store, lat).unwrap();
+//! let cfg = ServeConfig { backbone: SIM_BACKBONE.into(), ..Default::default() };
+//! let coord = Coordinator::new(&store, &sim, cfg).unwrap();
+//! let queries = ds.sample_test(8, 7);
+//! let report = coord.serve_online(&ds, queries.iter().copied(),
+//!                                 &GRetriever::default()).unwrap();
+//! assert!(report.metrics.wall_time > 0.0);
+//! ```
+//!
+//! Latencies are wall-clock sleeps, so keep them in the 1–20 ms range:
+//! large enough that overlap assertions are robust against scheduler
+//! jitter, small enough that suites stay fast.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::data::{Dataset, Query, Split};
+use crate::embed::FEAT_DIM;
+use crate::graph::{Edge, Node, Subgraph, TextualGraph};
+use crate::tokenizer::{split_text, Tokenizer, BOS_ID, EOS_ID, PAD_ID, UNK_ID};
+
+use super::backend::{merge_stats, Backend, CallTiming, EngineStats, KvHandle, Lane,
+                     PendingEncode, PendingExtend, PendingGenerate, PendingKv,
+                     PendingPrefill, Ticket};
+use super::engine::lane_for_kind;
+use super::manifest::{Constants, LlmDims, Manifest, ModuleSpec};
+use super::ArtifactStore;
+
+/// Virtual per-op device latencies (wall-clock sleeps on the lane worker).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimLatency {
+    pub prefill: Duration,
+    pub extend: Duration,
+    pub generate: Duration,
+    pub encode: Duration,
+}
+
+impl SimLatency {
+    /// All-zero latencies: pure functional simulation, fastest tests.
+    pub fn zero() -> Self {
+        Self::default()
+    }
+
+    pub fn from_millis(prefill: u64, extend: u64, generate: u64, encode: u64) -> Self {
+        SimLatency {
+            prefill: Duration::from_millis(prefill),
+            extend: Duration::from_millis(extend),
+            generate: Duration::from_millis(generate),
+            encode: Duration::from_millis(encode),
+        }
+    }
+
+    /// Serial per-query upper bound: one of each op back to back.
+    pub fn serial_sum(&self) -> f64 {
+        (self.prefill + self.extend + self.generate + self.encode).as_secs_f64()
+    }
+}
+
+type KvReply = Sender<anyhow::Result<(u64, Vec<f32>, CallTiming)>>;
+
+enum SReq {
+    Prefill {
+        module: String,
+        tokens: Vec<i32>,
+        plen: i32,
+        submitted: Instant,
+        reply: KvReply,
+    },
+    Extend {
+        module: String,
+        kv: u64,
+        plen: i32,
+        q_tokens: Vec<i32>,
+        qlen: i32,
+        submitted: Instant,
+        reply: KvReply,
+    },
+    Generate {
+        module: String,
+        kv: u64,
+        first_tok: i32,
+        submitted: Instant,
+        reply: Sender<anyhow::Result<(Vec<i32>, CallTiming)>>,
+    },
+    Encode {
+        module: String,
+        x: Vec<f32>,
+        mask: Vec<f32>,
+        submitted: Instant,
+        reply: Sender<anyhow::Result<(Vec<f32>, CallTiming)>>,
+    },
+    Release {
+        kvs: Vec<u64>,
+    },
+    Warmup {
+        module: String,
+        reply: Sender<anyhow::Result<()>>,
+    },
+    Stats {
+        reply: Sender<EngineStats>,
+    },
+    Shutdown,
+}
+
+struct SimLane {
+    tx: Sender<SReq>,
+    /// Test hook: set before a shutdown nudge to make the worker exit
+    /// *before* draining its queue, dropping queued reply senders.
+    poison: Arc<AtomicBool>,
+    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+/// The deterministic simulation [`Backend`]. See the module docs.
+pub struct SimBackend {
+    lanes: [SimLane; 2],
+    manifest: Manifest,
+}
+
+impl SimBackend {
+    /// Spawn both sim lane workers over `store`'s manifest (use
+    /// [`sim_store`] for a self-contained in-memory world).
+    pub fn start(store: &ArtifactStore, lat: SimLatency) -> anyhow::Result<SimBackend> {
+        let manifest = store.manifest().clone();
+        let spawn = |lane: Lane| -> anyhow::Result<SimLane> {
+            let (tx, rx) = channel::<SReq>();
+            let poison = Arc::new(AtomicBool::new(false));
+            let worker_poison = Arc::clone(&poison);
+            let worker_manifest = manifest.clone();
+            let thread = std::thread::Builder::new()
+                .name(format!("sim-{}", lane.name()))
+                .spawn(move || sim_lane_main(worker_manifest, lat, rx, worker_poison))?;
+            Ok(SimLane { tx, poison, thread: Mutex::new(Some(thread)) })
+        };
+        Ok(SimBackend { lanes: [spawn(Lane::Llm)?, spawn(Lane::Gnn)?], manifest })
+    }
+
+    fn send(&self, lane: Lane, req: SReq) -> anyhow::Result<()> {
+        self.lanes[lane as usize].tx.send(req).map_err(|_| {
+            anyhow::anyhow!("sim {} lane worker has shut down", lane.name())
+        })
+    }
+
+    /// Test hook: kill one lane's worker thread *without* draining its
+    /// queue. Requests already being processed complete; requests still
+    /// queued get their reply senders dropped (so `wait` errors), and
+    /// later `submit_*` calls on the lane fail at the send. This is how the
+    /// dead-lane regression tests exercise the multi-lane ticket contract.
+    pub fn kill_lane_for_test(&self, lane: Lane) {
+        let l = &self.lanes[lane as usize];
+        l.poison.store(true, Ordering::SeqCst);
+        let _ = l.tx.send(SReq::Shutdown); // nudge an idle worker awake
+        if let Some(t) = l.thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Backend for SimBackend {
+    fn submit_prefill(&self, module: &str, tokens: &[i32], plen: i32)
+                      -> anyhow::Result<PendingPrefill> {
+        let (reply, rx) = channel();
+        self.send(Lane::Llm, SReq::Prefill {
+            module: module.into(), tokens: tokens.to_vec(), plen,
+            submitted: Instant::now(), reply,
+        })?;
+        Ok(PendingKv(Ticket { rx }))
+    }
+
+    fn submit_extend(&self, module: &str, kv: &KvHandle, plen: i32, q_tokens: &[i32],
+                     qlen: i32) -> anyhow::Result<PendingExtend> {
+        let (reply, rx) = channel();
+        self.send(Lane::Llm, SReq::Extend {
+            module: module.into(), kv: kv.0, plen, q_tokens: q_tokens.to_vec(), qlen,
+            submitted: Instant::now(), reply,
+        })?;
+        Ok(PendingKv(Ticket { rx }))
+    }
+
+    fn submit_generate(&self, module: &str, kv: &KvHandle, _cur_len: i32, first_tok: i32)
+                       -> anyhow::Result<PendingGenerate> {
+        let (reply, rx) = channel();
+        self.send(Lane::Llm, SReq::Generate {
+            module: module.into(), kv: kv.0, first_tok,
+            submitted: Instant::now(), reply,
+        })?;
+        Ok(PendingGenerate(Ticket { rx }))
+    }
+
+    fn submit_encode(&self, module: &str, x: Vec<f32>, _adj: Vec<f32>, mask: Vec<f32>)
+                     -> anyhow::Result<PendingEncode> {
+        let (reply, rx) = channel();
+        self.send(Lane::Gnn, SReq::Encode {
+            module: module.into(), x, mask, submitted: Instant::now(), reply,
+        })?;
+        Ok(PendingEncode(Ticket { rx }))
+    }
+
+    fn release(&self, kv: KvHandle) {
+        let _ = self.send(Lane::Llm, SReq::Release { kvs: vec![kv.0] });
+    }
+
+    fn release_many(&self, kvs: Vec<KvHandle>) {
+        if kvs.is_empty() {
+            return;
+        }
+        let _ = self.send(Lane::Llm, SReq::Release {
+            kvs: kvs.into_iter().map(|h| h.0).collect(),
+        });
+    }
+
+    fn kv_bytes(&self, module: &str) -> anyhow::Result<usize> {
+        let dims = self.manifest.module(module)?.dims.ok_or_else(|| {
+            anyhow::anyhow!("{module}: not an llm module, no KV geometry")
+        })?;
+        Ok(2 * dims.kv_bytes_each())
+    }
+
+    fn warmup(&self, module: &str) -> anyhow::Result<()> {
+        let lane = lane_for_kind(&self.manifest.module(module)?.kind)
+            .ok_or_else(|| anyhow::anyhow!("module {module}: no lane for its kind"))?;
+        let (reply, rx) = channel();
+        self.send(lane, SReq::Warmup { module: module.into(), reply })?;
+        Ticket { rx }.wait()
+    }
+
+    fn stats(&self) -> anyhow::Result<EngineStats> {
+        let mut parts = Vec::with_capacity(Lane::ALL.len());
+        for lane in Lane::ALL {
+            let (reply, rx) = channel();
+            self.send(lane, SReq::Stats { reply })?;
+            parts.push(rx.recv().map_err(|_| {
+                anyhow::anyhow!("sim {} lane died before replying", lane.name())
+            })?);
+        }
+        Ok(merge_stats(parts))
+    }
+}
+
+impl Drop for SimBackend {
+    fn drop(&mut self) {
+        for lane in &self.lanes {
+            let _ = lane.tx.send(SReq::Shutdown);
+        }
+        for lane in &self.lanes {
+            if let Some(t) = lane.thread.lock().unwrap().take() {
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lane worker
+// ---------------------------------------------------------------------------
+
+struct SimState {
+    manifest: Manifest,
+    lat: SimLatency,
+    /// KV handle -> the effective (unpadded) token sequence it encodes.
+    kvs: HashMap<u64, Vec<i32>>,
+    next_id: u64,
+    counters: HashMap<String, (u64, f64)>,
+}
+
+fn sim_lane_main(manifest: Manifest, lat: SimLatency, rx: Receiver<SReq>,
+                 poison: Arc<AtomicBool>) {
+    let mut st = SimState {
+        manifest,
+        lat,
+        kvs: HashMap::new(),
+        next_id: 1,
+        counters: HashMap::new(),
+    };
+    while let Ok(req) = rx.recv() {
+        if poison.load(Ordering::SeqCst) {
+            break; // test hook: die with the queue undrained
+        }
+        match req {
+            SReq::Prefill { module, tokens, plen, submitted, reply } => {
+                let res = st.timed(&module, "prefill", st.lat.prefill, submitted,
+                                   |st| st.prefill(&module, &tokens, plen));
+                let _ = reply.send(res);
+            }
+            SReq::Extend { module, kv, plen, q_tokens, qlen, submitted, reply } => {
+                let res = st.timed(&module, "extend", st.lat.extend, submitted,
+                                   |st| st.extend(&module, kv, plen, &q_tokens, qlen));
+                let _ = reply.send(res);
+            }
+            SReq::Generate { module, kv, first_tok, submitted, reply } => {
+                let res = st.timed(&module, "generate", st.lat.generate, submitted,
+                                   |st| st.generate(&module, kv, first_tok));
+                let _ = reply.send(res);
+            }
+            SReq::Encode { module, x, mask, submitted, reply } => {
+                let res = st.timed(&module, "encode", st.lat.encode, submitted,
+                                   |st| st.encode(&module, &x, &mask));
+                let _ = reply.send(res);
+            }
+            SReq::Release { kvs } => {
+                for kv in kvs {
+                    st.kvs.remove(&kv);
+                }
+            }
+            SReq::Warmup { module, reply } => {
+                let _ = reply.send(st.manifest.module(&module).map(|_| ()));
+            }
+            SReq::Stats { reply } => {
+                let mut calls: Vec<(String, u64, f64)> = st
+                    .counters
+                    .iter()
+                    .map(|(k, &(n, s))| (k.clone(), n, s))
+                    .collect();
+                calls.sort_by(|a, b| a.0.cmp(&b.0));
+                let _ = reply.send(EngineStats {
+                    calls,
+                    live_kv: st.kvs.len(),
+                    compile_secs: 0.0,
+                    host_kv_bytes: 0,
+                });
+            }
+            SReq::Shutdown => break,
+        }
+    }
+}
+
+impl SimState {
+    /// Run one op: sleep the virtual device latency, execute `f`, record
+    /// counters, and report the same queue/device [`CallTiming`] split the
+    /// PJRT lanes do.
+    fn timed<T>(&mut self, module: &str, op: &str, lat: Duration, submitted: Instant,
+                f: impl FnOnce(&mut Self) -> anyhow::Result<T>)
+                -> anyhow::Result<(T, CallTiming)> {
+        let queue_secs = submitted.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        if !lat.is_zero() {
+            std::thread::sleep(lat);
+        }
+        let out = f(self)?;
+        let device_secs = t0.elapsed().as_secs_f64();
+        let c = self.counters.entry(format!("{module}.{op}")).or_insert((0, 0.0));
+        c.0 += 1;
+        c.1 += device_secs;
+        Ok((out, CallTiming { queue_secs, device_secs }))
+    }
+
+    fn llm_dims(&self, module: &str) -> anyhow::Result<LlmDims> {
+        self.manifest.module(module)?.dims.ok_or_else(|| {
+            anyhow::anyhow!("{module}: not an llm module")
+        })
+    }
+
+    fn insert_kv(&mut self, seq: Vec<i32>) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.kvs.insert(id, seq);
+        id
+    }
+
+    fn prefill(&mut self, module: &str, tokens: &[i32], plen: i32)
+               -> anyhow::Result<(u64, Vec<f32>)> {
+        let dims = self.llm_dims(module)?;
+        let c = self.manifest.constants;
+        anyhow::ensure!(tokens.len() == c.max_seq,
+                        "sim prefill: {} tokens, want {}", tokens.len(), c.max_seq);
+        anyhow::ensure!(plen >= 0 && plen as usize <= tokens.len(),
+                        "sim prefill: plen {plen} out of range");
+        let seq = tokens[..plen as usize].to_vec();
+        let logits = sim_logits(&seq, dims.vocab);
+        Ok((self.insert_kv(seq), logits))
+    }
+
+    fn extend(&mut self, module: &str, kv: u64, _plen: i32, q_tokens: &[i32], qlen: i32)
+              -> anyhow::Result<(u64, Vec<f32>)> {
+        let dims = self.llm_dims(module)?;
+        let c = self.manifest.constants;
+        anyhow::ensure!(q_tokens.len() == c.max_q,
+                        "sim extend: {} tokens, want {}", q_tokens.len(), c.max_q);
+        let qlen = (qlen.max(0) as usize).min(q_tokens.len()); // clamp like the engine
+        let mut seq = self
+            .kvs
+            .get(&kv)
+            .ok_or_else(|| anyhow::anyhow!("unknown/released KV handle {kv}"))?
+            .clone();
+        seq.extend_from_slice(&q_tokens[..qlen]);
+        let logits = sim_logits(&seq, dims.vocab);
+        Ok((self.insert_kv(seq), logits))
+    }
+
+    fn generate(&mut self, module: &str, kv: u64, first_tok: i32)
+                -> anyhow::Result<Vec<i32>> {
+        let dims = self.llm_dims(module)?;
+        let c = self.manifest.constants;
+        let seq = self
+            .kvs
+            .get(&kv)
+            .ok_or_else(|| anyhow::anyhow!("unknown/released KV handle {kv}"))?
+            .clone();
+        // greedy roll-forward, like the generate HLO: the output includes
+        // `first_tok` and stops at max_gen (decode stops at EOS host-side).
+        let mut out = vec![first_tok];
+        let mut cur = seq;
+        cur.push(first_tok);
+        while out.len() < c.max_gen {
+            let next = crate::coordinator::argmax(&sim_logits(&cur, dims.vocab));
+            out.push(next);
+            cur.push(next);
+            if next == c.eos_id {
+                break;
+            }
+        }
+        Ok(out)
+    }
+
+    fn encode(&mut self, module: &str, x: &[f32], mask: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let m = self.manifest.module(module)?;
+        anyhow::ensure!(m.kind == "gnn", "{module}: not a gnn module");
+        let c = self.manifest.constants;
+        let (n, f) = (c.n_max, c.feat_dim);
+        anyhow::ensure!(x.len() == n * f && mask.len() == n, "sim encode: bad input sizes");
+        // masked mean over packed node features: similar subgraphs land
+        // close, disjoint ones far — enough signal for centroid matching.
+        let mut out = vec![0f32; c.gnn_emb];
+        let mut cnt = 0f32;
+        for (i, &mi) in mask.iter().enumerate() {
+            if mi > 0.0 {
+                cnt += 1.0;
+                for (j, &v) in x[i * f..(i + 1) * f].iter().enumerate() {
+                    out[j % c.gnn_emb] += v;
+                }
+            }
+        }
+        if cnt > 0.0 {
+            for o in &mut out {
+                *o /= cnt;
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic next-token logits for an effective token sequence: a pure
+/// hash of the sequence, so any two call paths that assemble the same
+/// sequence (full prefill vs prefill + extend) get bit-identical rows.
+fn sim_logits(seq: &[i32], vocab: usize) -> Vec<f32> {
+    let mut h = 0xcbf29ce484222325u64; // FNV-1a over the token ids
+    for &t in seq {
+        h = (h ^ t as u32 as u64).wrapping_mul(0x100000001b3);
+    }
+    let mut out = vec![0f32; vocab];
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = (splitmix(h ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15)) % 1000) as f32
+            / 1000.0;
+    }
+    // a clear, deterministic winner outside the special ids
+    if vocab > 4 {
+        out[4 + (splitmix(h) % (vocab as u64 - 4)) as usize] = 2.0;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic artifact world
+// ---------------------------------------------------------------------------
+
+/// Default simulated backbone name (an "llm" module in the sim manifest).
+pub const SIM_BACKBONE: &str = "sim-llm";
+
+fn sim_constants(vocab: usize) -> Constants {
+    // mirrors the real artifact relation max_prefix = max_seq - max_q -
+    // max_gen, so full-prompt and prefix+extend truncation agree exactly
+    // (the parity the answer-match tests rely on).
+    Constants {
+        max_seq: 256,
+        max_q: 24,
+        max_gen: 8,
+        max_prefix: 256 - 24 - 8,
+        vocab,
+        feat_dim: FEAT_DIM,
+        n_max: 32,
+        gnn_emb: FEAT_DIM,
+        pad_id: PAD_ID,
+        bos_id: BOS_ID,
+        eos_id: EOS_ID,
+        unk_id: UNK_ID,
+    }
+}
+
+/// In-memory artifact store for sim runs: a manifest with one LLM backbone
+/// ([`SIM_BACKBONE`]) and both GNN encoders, plus a tokenizer whose vocab
+/// covers the [`sim_dataset`] text. Pairs with [`SimBackend::start`].
+pub fn sim_store() -> ArtifactStore {
+    // absorb the full topic/color cycles so any sim_dataset(..) tokenizes
+    // without <unk> surprises
+    let ds = sim_dataset(8, 4);
+    let mut words: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+    let mut absorb = |text: &str| {
+        for w in split_text(text) {
+            words.insert(w);
+        }
+    };
+    absorb("graph : ; question : answer :");
+    for n in &ds.graph.nodes {
+        absorb(&n.name);
+        absorb(&n.text);
+    }
+    for e in &ds.graph.edges {
+        absorb(&e.text);
+    }
+    for q in &ds.queries {
+        absorb(&q.text);
+        absorb(&q.answer);
+    }
+    let mut vocab: HashMap<String, i32> = HashMap::new();
+    for (sp, id) in [("<pad>", PAD_ID), ("<bos>", BOS_ID), ("<eos>", EOS_ID),
+                     ("<unk>", UNK_ID)] {
+        vocab.insert(sp.to_string(), id);
+    }
+    for w in words {
+        let next = vocab.len() as i32;
+        vocab.entry(w).or_insert(next);
+    }
+    let tokenizer = Tokenizer::from_vocab(vocab).expect("sim vocab is well-formed");
+    let constants = sim_constants(tokenizer.padded_size());
+
+    let llm_dims = LlmDims {
+        vocab: constants.vocab,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_head: 8,
+        d_ff: 64,
+        max_seq: constants.max_seq,
+    };
+    let module = |name: &str, kind: &str, dims: Option<LlmDims>| ModuleSpec {
+        name: name.to_string(),
+        kind: kind.to_string(),
+        params: Vec::new(),
+        entries: std::collections::BTreeMap::new(),
+        dims,
+    };
+    let mut modules = std::collections::BTreeMap::new();
+    modules.insert(SIM_BACKBONE.into(), module(SIM_BACKBONE, "llm", Some(llm_dims)));
+    modules.insert("graph_transformer".into(), module("graph_transformer", "gnn", None));
+    modules.insert("gat".into(), module("gat", "gnn", None));
+    ArtifactStore::in_memory(Manifest { constants, modules }, tokenizer)
+}
+
+/// Deterministic synthetic dataset: `n_groups` lexically distinct node
+/// groups, `per_group` test queries each. Queries of one group retrieve
+/// subgraphs inside that group, so GNN embeddings cluster by group — which
+/// gives the online path real hit/miss structure to schedule around.
+pub fn sim_dataset(n_groups: usize, per_group: usize) -> Dataset {
+    let topics = ["river", "forest", "engine", "museum", "harbor", "signal",
+                  "castle", "market"];
+    let colors = ["red", "blue", "green", "amber", "violet", "teal", "ivory",
+                  "coral"];
+    let nodes_per_group = 4usize;
+    let mut nodes = Vec::new();
+    let mut edges = Vec::new();
+    for g in 0..n_groups {
+        let topic = topics[g % topics.len()];
+        let base = g * nodes_per_group;
+        for i in 0..nodes_per_group {
+            let color = colors[(g + i) % colors.len()];
+            nodes.push(Node {
+                id: base + i,
+                name: format!("{topic}_{i}"),
+                text: format!("{topic}_{i} kind {topic} color {color}"),
+            });
+            if i > 0 {
+                edges.push(Edge {
+                    src: base + i - 1,
+                    dst: base + i,
+                    text: format!("near the {topic}"),
+                });
+            }
+        }
+    }
+    let graph = TextualGraph::new("sim", nodes, edges).expect("sim graph is valid");
+
+    let mut queries = Vec::new();
+    for g in 0..n_groups {
+        let topic = topics[g % topics.len()];
+        for i in 0..per_group {
+            let ni = i % nodes_per_group;
+            let color = colors[(g + ni) % colors.len()];
+            queries.push(Query {
+                id: queries.len(),
+                text: format!("what color is {topic}_{ni} of the {topic} ?"),
+                answer: color.to_string(),
+                split: Split::Test,
+                support: Subgraph::from_parts([g * nodes_per_group + ni], 0..0),
+            });
+        }
+    }
+    Dataset { graph, queries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> (ArtifactStore, SimBackend) {
+        let store = sim_store();
+        let sim = SimBackend::start(&store, SimLatency::zero()).unwrap();
+        (store, sim)
+    }
+
+    #[test]
+    fn sim_world_is_consistent() {
+        let store = sim_store();
+        assert_eq!(store.tokenizer().padded_size(), store.constants().vocab);
+        assert_eq!(store.manifest().llm_names(), vec![SIM_BACKBONE]);
+        let mut gnns = store.manifest().gnn_names();
+        gnns.sort_unstable();
+        assert_eq!(gnns, vec!["gat", "graph_transformer"]);
+        let ds = sim_dataset(3, 5);
+        assert_eq!(ds.sample_test(100, 1).len(), 15, "all queries are test split");
+    }
+
+    #[test]
+    fn prefill_extend_composes_like_full_prefill() {
+        // The parity property the PJRT engine has and every answer-match
+        // e2e test relies on: prefix ⊕ question in one prefill must match
+        // prefill(prefix) + extend(question) bit for bit.
+        let (store, sim) = sim();
+        let c = *store.constants();
+        let mut full = vec![c.pad_id; c.max_seq];
+        let mut prefix = vec![c.pad_id; c.max_seq];
+        let mut q = vec![c.pad_id; c.max_q];
+        for i in 0..40 {
+            full[i] = 5 + i as i32;
+            prefix[i] = 5 + i as i32;
+        }
+        for i in 0..6 {
+            full[40 + i] = 100 + i as i32;
+            q[i] = 100 + i as i32;
+        }
+        let (kv_full, row_full) = sim.prefill(SIM_BACKBONE, &full, 46).unwrap();
+        let (kv_pre, _) = sim.prefill(SIM_BACKBONE, &prefix, 40).unwrap();
+        let (kv_ext, row_ext) = sim.extend(SIM_BACKBONE, &kv_pre, 40, &q, 6).unwrap();
+        assert_eq!(row_full, row_ext, "composed sequence must hash identically");
+        // extend must not consume its input (the SubGCache property)
+        let (kv_ext2, row_ext2) = sim.extend(SIM_BACKBONE, &kv_pre, 40, &q, 6).unwrap();
+        assert_eq!(row_ext, row_ext2);
+        sim.release_many(vec![kv_full, kv_pre, kv_ext, kv_ext2]);
+        let st = sim.stats().unwrap();
+        assert_eq!(st.live_kv, 0, "all sim KV entries released");
+        assert_eq!(st.host_kv_bytes, 0);
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_bounded() {
+        let (store, sim) = sim();
+        let c = *store.constants();
+        let mut toks = vec![c.pad_id; c.max_seq];
+        toks[0] = c.bos_id;
+        let (kv, row) = sim.prefill(SIM_BACKBONE, &toks, 1).unwrap();
+        let first = crate::coordinator::argmax(&row);
+        let a = sim.generate(SIM_BACKBONE, &kv, 1, first).unwrap();
+        let b = sim.generate(SIM_BACKBONE, &kv, 1, first).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a[0], first);
+        assert!(a.len() <= c.max_gen);
+        sim.release(kv);
+    }
+
+    #[test]
+    fn encode_groups_similar_subgraphs() {
+        let (store, sim) = sim();
+        let c = *store.constants();
+        let one = |salt: f32| {
+            let mut x = vec![0f32; c.n_max * c.feat_dim];
+            let mut mask = vec![0f32; c.n_max];
+            for i in 0..4 {
+                mask[i] = 1.0;
+                for j in 0..c.feat_dim {
+                    x[i * c.feat_dim + j] = salt + (j as f32) * 0.01;
+                }
+            }
+            sim.encode("gat", x, vec![0.0; c.n_max * c.n_max], mask).unwrap()
+        };
+        let (a, b, far) = (one(1.0), one(1.0), one(9.0));
+        assert_eq!(a.len(), c.gnn_emb);
+        assert_eq!(a, b, "encode is deterministic");
+        assert!(crate::embed::sq_dist(&a, &far) > 1.0, "distinct inputs separate");
+    }
+
+    #[test]
+    fn unknown_kv_handle_is_an_error_not_a_hang() {
+        let (store, sim) = sim();
+        let q = vec![0i32; store.constants().max_q];
+        let err = sim
+            .extend(SIM_BACKBONE, &KvHandle(777), 4, &q, 3)
+            .unwrap_err();
+        assert!(err.to_string().contains("777"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn killed_lane_fails_tickets_and_submits() {
+        let store = sim_store();
+        let sim = SimBackend::start(&store, SimLatency::from_millis(0, 0, 0, 40)).unwrap();
+        let c = *store.constants();
+        let x = vec![0f32; c.n_max * c.feat_dim];
+        let adj = vec![0f32; c.n_max * c.n_max];
+        let mask = vec![0f32; c.n_max];
+        // first encode occupies the worker (40 ms); the second sits queued
+        // behind it and must be dropped unanswered when the lane dies.
+        let busy = sim.submit_encode("gat", x.clone(), adj.clone(), mask.clone()).unwrap();
+        // give the worker time to pick `busy` up before the poison lands
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let queued = sim.submit_encode("gat", x.clone(), adj.clone(), mask.clone()).unwrap();
+        sim.kill_lane_for_test(Lane::Gnn);
+        assert!(busy.wait().is_ok(), "in-flight request completes");
+        let err = queued.wait().unwrap_err();
+        assert!(err.to_string().contains("lane"), "unhelpful error: {err}");
+        // the dead lane rejects new submissions at the send
+        assert!(sim.submit_encode("gat", x, adj, mask).is_err());
+        // the LLM lane is unaffected
+        let mut toks = vec![c.pad_id; c.max_seq];
+        toks[0] = c.bos_id;
+        let (kv, _) = sim.prefill(SIM_BACKBONE, &toks, 1).unwrap();
+        sim.release(kv);
+    }
+}

@@ -105,6 +105,80 @@ impl Bench {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Bench JSON emission (BENCH_engine.json / BENCH_serving.json share this)
+// ---------------------------------------------------------------------------
+
+/// One result row of a bench JSON file: a name plus pre-rendered JSON
+/// scalar fields (numbers stay unquoted; the caller formats them).
+#[derive(Debug, Clone)]
+pub struct JsonRow {
+    pub name: String,
+    pub fields: Vec<(String, String)>,
+}
+
+impl JsonRow {
+    pub fn new(name: &str) -> JsonRow {
+        JsonRow { name: name.to_string(), fields: Vec::new() }
+    }
+
+    /// Add a numeric field (rendered as a bare JSON number).
+    pub fn num(mut self, key: &str, value: f64) -> JsonRow {
+        let v = if value.is_finite() { format!("{value:.3}") } else { "null".into() };
+        self.fields.push((key.to_string(), v));
+        self
+    }
+
+    /// Add an integer field.
+    pub fn int(mut self, key: &str, value: u64) -> JsonRow {
+        self.fields.push((key.to_string(), value.to_string()));
+        self
+    }
+}
+
+pub fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+impl From<&Stats> for JsonRow {
+    fn from(r: &Stats) -> JsonRow {
+        JsonRow::new(&r.name)
+            .int("iters", r.iters as u64)
+            .num("median_ns", r.median_ns)
+            .num("mean_ns", r.mean_ns)
+            .num("p95_ns", r.p95_ns)
+            .num("stddev_ns", r.stddev_ns)
+    }
+}
+
+/// Write a `BENCH_*.json` file in the shared shape:
+/// `{"bench": ..., "mode": ..., <extra...>, "results": [{"name": ..., ...}]}`.
+/// `extra` values are pre-rendered JSON scalars (numbers unquoted).
+pub fn emit_bench_json(path: &str, bench: &str, mode: &str,
+                       extra: &[(String, String)], rows: &[JsonRow])
+                       -> anyhow::Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!(
+        "  \"bench\": \"{}\",\n  \"mode\": \"{}\",\n",
+        json_escape(bench), json_escape(mode)
+    ));
+    for (k, v) in extra {
+        s.push_str(&format!("  \"{}\": {v},\n", json_escape(k)));
+    }
+    s.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!("    {{\"name\": \"{}\"", json_escape(&r.name)));
+        for (k, v) in &r.fields {
+            s.push_str(&format!(", \"{}\": {v}", json_escape(k)));
+        }
+        s.push_str(&format!("}}{}\n", if i + 1 == rows.len() { "" } else { "," }));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s)?;
+    Ok(())
+}
+
 fn summarize(name: &str, samples_ns: &mut [f64]) -> Stats {
     samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n = samples_ns.len();
@@ -141,6 +215,30 @@ mod tests {
         assert!(s.median_ns > 0.0);
         assert!(s.p95_ns >= s.median_ns);
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn emit_bench_json_renders_shared_shape() {
+        let rows = vec![
+            JsonRow::new("a \"quoted\" case").num("wall_s", 1.25).int("queries", 8),
+            JsonRow::new("b").num("qps", f64::NAN),
+        ];
+        let path = std::env::temp_dir().join("subgcache_bench_emit_test.json");
+        let path_s = path.to_str().unwrap();
+        emit_bench_json(path_s, "serving", "sim-quick",
+                        &[("depth".into(), "2".into())], &rows).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(s.contains("\"bench\": \"serving\""));
+        assert!(s.contains("\"mode\": \"sim-quick\""));
+        assert!(s.contains("\"depth\": 2"));
+        assert!(s.contains("\"a \\\"quoted\\\" case\""));
+        assert!(s.contains("\"wall_s\": 1.250"));
+        assert!(s.contains("\"queries\": 8"));
+        assert!(s.contains("\"qps\": null"), "non-finite numbers must not break JSON");
+        // it must parse back with the in-tree JSON substrate
+        let parsed = crate::util::json::parse(&s).unwrap();
+        assert_eq!(parsed.get("results").as_arr().unwrap().len(), 2);
     }
 
     #[test]

@@ -1,11 +1,18 @@
-//! Shared artifact gating for the integration test binaries.
+//! Shared environment plumbing for the integration test binaries.
 //!
-//! The e2e/golden tests need the `artifacts/` directory that `make
-//! artifacts` produces; on a fresh clone they skip (with a message) instead
-//! of failing, so `cargo test -q` stays green. `what` names the caller in
-//! the skip message (e.g. "golden test").
+//! Every serving scenario in `coordinator_e2e.rs` / `online_e2e.rs` runs in
+//! two flavors over the same assertions:
+//!
+//! * **sim** (always on): the in-memory artifact world + [`SimBackend`] —
+//!   runs on a fresh clone and in CI, no `make artifacts` needed.
+//! * **artifacts** (opt-in by presence): the real PJRT engine over
+//!   `artifacts/`; self-skips (with a message) when the directory is
+//!   absent, so `cargo test -q` stays green everywhere.
 
-use subgcache::runtime::{ArtifactStore, Engine};
+use subgcache::coordinator::ServeConfig;
+use subgcache::data::Dataset;
+use subgcache::runtime::{sim_dataset, sim_store, ArtifactStore, Engine, SimBackend,
+                         SimLatency, SIM_BACKBONE};
 
 pub const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
 
@@ -21,7 +28,7 @@ pub fn store(what: &str) -> Option<ArtifactStore> {
 
 /// Fresh engine per test: a process-static engine thread would still own
 /// the PJRT client while C++ static destructors run at exit (observed as an
-/// exit-time SIGSEGV); Engine::drop joins the thread deterministically.
+/// exit-time SIGSEGV); Engine::drop joins the lane threads deterministically.
 /// Tests in one binary run sequentially, so compile cost stays bounded.
 #[allow(dead_code)]
 pub fn with_engine<T>(what: &str, f: impl FnOnce(&ArtifactStore, &Engine) -> T)
@@ -29,4 +36,28 @@ pub fn with_engine<T>(what: &str, f: impl FnOnce(&ArtifactStore, &Engine) -> T)
     let s = store(what)?;
     let e = Engine::start(&s).expect("engine start");
     Some(f(&s, &e))
+}
+
+/// One self-contained simulation environment: in-memory store, synthetic
+/// dataset (deterministic; all queries in the test split), and a
+/// [`SimBackend`] with the given latency profile.
+#[allow(dead_code)]
+pub struct SimEnv {
+    pub store: ArtifactStore,
+    pub ds: Dataset,
+    pub backend: SimBackend,
+}
+
+#[allow(dead_code)]
+pub fn sim_env(lat: SimLatency) -> SimEnv {
+    let store = sim_store();
+    let backend = SimBackend::start(&store, lat).expect("sim backend start");
+    SimEnv { store, ds: sim_dataset(4, 4), backend }
+}
+
+/// Default serve config for the sim world (its backbone name differs from
+/// the artifact default).
+#[allow(dead_code)]
+pub fn sim_config() -> ServeConfig {
+    ServeConfig { backbone: SIM_BACKBONE.into(), ..Default::default() }
 }

@@ -1,13 +1,16 @@
-//! Coordinator end-to-end tests over real artifacts: the full SubGCache
-//! pipeline vs the baseline on small in-batch workloads.
+//! Coordinator end-to-end tests: the full SubGCache pipeline vs the
+//! baseline on small in-batch workloads.
 //!
-//! Skipped (with a message) when `artifacts/` is absent, so `cargo test -q`
-//! stays green on a fresh clone; run `make artifacts` to enable.
+//! Each scenario is written once against the `Backend` trait and runs in
+//! two flavors: on the deterministic [`SimBackend`] (always — fresh clone,
+//! CI), and on the real PJRT engine over `artifacts/` (the `*_artifacts`
+//! variants, which self-skip with a message when artifacts are absent).
 
 use subgcache::cluster::Linkage;
 use subgcache::coordinator::{Coordinator, ServeConfig};
+use subgcache::data::Dataset;
 use subgcache::prelude::*;
-use subgcache::runtime::{ArtifactStore, Engine};
+use subgcache::runtime::SimLatency;
 
 mod common;
 
@@ -15,143 +18,236 @@ fn with_engine<T>(f: impl FnOnce(&ArtifactStore, &Engine) -> T) -> Option<T> {
     common::with_engine("coordinator e2e test", f)
 }
 
-#[test]
-fn subgcache_answers_match_baseline_with_singleton_clusters() {
-    // c = m degenerates SubGCache to per-query prompts built from the query's
-    // own retrieved subgraph — answers must match the baseline exactly
-    // (greedy decoding; same tokens reach the model either way).
-    with_engine(|store, engine| {
-        let ds = store.dataset("scene_graph").unwrap();
-        let queries = ds.sample_test(6, 3);
-        let cfg = ServeConfig { n_clusters: queries.len(), ..Default::default() };
-        let coord = Coordinator::new(store, engine, cfg).unwrap();
-        let r = GRetriever::default();
-        let base = coord.serve_baseline(&ds, &queries, &r).unwrap();
-        let ours = coord.serve_subgcache(&ds, &queries, &r).unwrap();
-        assert_eq!(ours.cluster_sizes.len(), queries.len());
-        for (b, o) in base.results.iter().zip(&ours.results) {
-            assert_eq!(b.id, o.id);
-            assert_eq!(b.predicted, o.predicted,
-                       "q{}: baseline {:?} vs singleton-subgcache {:?}",
-                       b.id, b.predicted, o.predicted);
-        }
-    });
+// ---------------------------------------------------------------------------
+// Scenarios (backend-generic)
+// ---------------------------------------------------------------------------
+
+/// c = m degenerates SubGCache to per-query prompts built from the query's
+/// own retrieved subgraph — answers must match the baseline exactly (greedy
+/// decoding; same effective tokens reach the model either way).
+fn check_singleton_parity(store: &ArtifactStore, backend: &dyn Backend, ds: &Dataset,
+                          base_cfg: &ServeConfig) {
+    let queries = ds.sample_test(6, 3);
+    let cfg = ServeConfig { n_clusters: queries.len(), ..base_cfg.clone() };
+    let coord = Coordinator::new(store, backend, cfg).unwrap();
+    let r = GRetriever::default();
+    let base = coord.serve_baseline(ds, &queries, &r).unwrap();
+    let ours = coord.serve_subgcache(ds, &queries, &r).unwrap();
+    assert_eq!(ours.cluster_sizes.len(), queries.len());
+    for (b, o) in base.results.iter().zip(&ours.results) {
+        assert_eq!(b.id, o.id);
+        assert_eq!(b.predicted, o.predicted,
+                   "q{}: baseline {:?} vs singleton-subgcache {:?}",
+                   b.id, b.predicted, o.predicted);
+    }
 }
 
-#[test]
-fn pipeline_reports_are_complete_and_consistent() {
-    with_engine(|store, engine| {
-        let ds = store.dataset("oag").unwrap();
-        let queries = ds.sample_test(10, 5);
-        let coord = Coordinator::new(store, engine, ServeConfig::default()).unwrap();
-        let rep = coord.serve_subgcache(&ds, &queries, &GragRetriever::default()).unwrap();
+fn check_reports_complete(store: &ArtifactStore, backend: &dyn Backend, ds: &Dataset,
+                          base_cfg: &ServeConfig) {
+    let queries = ds.sample_test(10, 5);
+    let coord = Coordinator::new(store, backend, base_cfg.clone()).unwrap();
+    let rep = coord.serve_subgcache(ds, &queries, &GragRetriever::default()).unwrap();
 
-        assert_eq!(rep.results.len(), queries.len());
-        assert_eq!(rep.metrics.per_query.len(), queries.len());
-        // results are in submit order
-        for (r, q) in rep.results.iter().zip(&queries) {
-            assert_eq!(r.id, q.id);
-            assert_eq!(r.gold, q.answer);
-        }
-        // cluster bookkeeping
-        assert_eq!(rep.cluster_sizes.iter().sum::<usize>(), queries.len());
-        assert_eq!(rep.cluster_sizes.len(), rep.representative_sizes.len());
-        assert!(rep.cluster_sizes.len() <= 2);
-        // every member's retrieved subgraph ⊆ its representative
+    assert_eq!(rep.results.len(), queries.len());
+    assert_eq!(rep.metrics.per_query.len(), queries.len());
+    // results are in submit order
+    for (r, q) in rep.results.iter().zip(&queries) {
+        assert_eq!(r.id, q.id);
+        assert_eq!(r.gold, q.answer);
+    }
+    // cluster bookkeeping
+    assert_eq!(rep.cluster_sizes.iter().sum::<usize>(), queries.len());
+    assert_eq!(rep.cluster_sizes.len(), rep.representative_sizes.len());
+    assert!(rep.cluster_sizes.len() <= base_cfg.n_clusters);
+    // every member's retrieved subgraph ⊆ its representative
+    for r in &rep.results {
+        let (rn, re) = rep.representative_sizes[r.cluster];
+        let (qn, qe) = r.retrieved.len();
+        assert!(qn <= rn && qe <= re, "representative smaller than member");
+    }
+    // cache: one prefill + one release per cluster; a hit per member
+    // beyond each cluster's first (the first rides the fresh prefill)
+    assert_eq!(rep.cache.prefills as usize, rep.cluster_sizes.len());
+    assert_eq!(rep.cache.released as usize, rep.cluster_sizes.len());
+    assert_eq!(rep.cache.hits as usize, queries.len() - rep.cluster_sizes.len());
+    assert_eq!(rep.cache.resident_bytes, 0, "cache must be drained");
+    // latency sanity
+    for q in &rep.metrics.per_query {
+        assert!(q.pftt > 0.0 && q.ttft >= q.pftt && q.rt >= q.ttft);
+    }
+    // the encode stage ran on the GNN lane, everything else on the LLM lane
+    assert_eq!(rep.metrics.lane_gnn.calls as usize, queries.len());
+    assert!(rep.metrics.lane_llm.calls > 0);
+}
+
+/// The headline claim at small scale: shared-prefix extend is much cheaper
+/// than per-query full prefill.
+fn check_pftt_cut(store: &ArtifactStore, backend: &dyn Backend, ds: &Dataset,
+                  base_cfg: &ServeConfig) {
+    let queries = ds.sample_test(8, 11);
+    let cfg = ServeConfig { n_clusters: 1, ..base_cfg.clone() };
+    let coord = Coordinator::new(store, backend, cfg).unwrap();
+    let r = GRetriever::default();
+    let base = coord.serve_baseline(ds, &queries, &r).unwrap();
+    let ours = coord.serve_subgcache(ds, &queries, &r).unwrap();
+    assert!(
+        ours.metrics.pftt_ms() < base.metrics.pftt_ms(),
+        "PFTT should drop: baseline {:.1} ms vs subgcache {:.1} ms",
+        base.metrics.pftt_ms(), ours.metrics.pftt_ms()
+    );
+}
+
+fn check_no_kv_leaks(store: &ArtifactStore, backend: &dyn Backend, ds: &Dataset,
+                     base_cfg: &ServeConfig) {
+    let queries = ds.sample_test(5, 17);
+    let coord = Coordinator::new(store, backend, base_cfg.clone()).unwrap();
+    let r = GRetriever::default();
+    let live_before = backend.stats().unwrap().live_kv;
+    coord.serve_baseline(ds, &queries, &r).unwrap();
+    coord.serve_subgcache(ds, &queries, &r).unwrap();
+    assert_eq!(backend.stats().unwrap().live_kv, live_before, "leaked KV handles");
+}
+
+fn check_all_backbones(store: &ArtifactStore, backend: &dyn Backend, ds: &Dataset,
+                       base_cfg: &ServeConfig) {
+    let queries = ds.sample_test(3, 23);
+    for backbone in store.manifest().llm_names() {
+        let cfg = ServeConfig { backbone: backbone.to_string(), n_clusters: 1,
+                                ..base_cfg.clone() };
+        let coord = Coordinator::new(store, backend, cfg).unwrap();
+        let rep = coord.serve_subgcache(ds, &queries, &GRetriever::default()).unwrap();
+        assert_eq!(rep.results.len(), 3, "{backbone}");
         for r in &rep.results {
-            let (rn, re) = rep.representative_sizes[r.cluster];
-            let (qn, qe) = r.retrieved.len();
-            assert!(qn <= rn && qe <= re, "representative smaller than member");
+            assert!(!r.predicted.is_empty() || r.gold.is_empty(),
+                    "{backbone}: empty generation for {:?}", r.query);
         }
-        // cache: one prefill + one release per cluster; a hit per member
-        // beyond each cluster's first (the first rides the fresh prefill)
-        assert_eq!(rep.cache.prefills as usize, rep.cluster_sizes.len());
-        assert_eq!(rep.cache.released as usize, rep.cluster_sizes.len());
-        assert_eq!(rep.cache.hits as usize, queries.len() - rep.cluster_sizes.len());
-        assert_eq!(rep.cache.resident_bytes, 0, "cache must be drained");
-        // latency sanity
-        for q in &rep.metrics.per_query {
-            assert!(q.pftt > 0.0 && q.ttft >= q.pftt && q.rt >= q.ttft);
-        }
-    });
+    }
+}
+
+fn check_linkages(store: &ArtifactStore, backend: &dyn Backend, ds: &Dataset,
+                  base_cfg: &ServeConfig) {
+    let queries = ds.sample_test(6, 29);
+    for linkage in Linkage::ALL {
+        let cfg = ServeConfig { n_clusters: 3, linkage, ..base_cfg.clone() };
+        let coord = Coordinator::new(store, backend, cfg).unwrap();
+        let rep = coord.serve_subgcache(ds, &queries, &GragRetriever::default()).unwrap();
+        assert_eq!(rep.cluster_sizes.len(), 3, "{linkage:?}");
+        assert_eq!(rep.results.len(), 6);
+    }
+}
+
+fn check_rejects_unknown_backbone(store: &ArtifactStore, backend: &dyn Backend) {
+    let cfg = ServeConfig { backbone: "gpt-5".into(), ..Default::default() };
+    assert!(Coordinator::new(store, backend, cfg).is_err());
+    // a GNN module exists in the manifest but has no KV geometry — the
+    // coordinator must reject it up front, not size cache entries at 0.
+    let cfg = ServeConfig { backbone: "gat".into(), ..Default::default() };
+    assert!(Coordinator::new(store, backend, cfg).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Sim flavor (always runs)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sim_subgcache_answers_match_baseline_with_singleton_clusters() {
+    let env = common::sim_env(SimLatency::zero());
+    check_singleton_parity(&env.store, &env.backend, &env.ds, &common::sim_config());
 }
 
 #[test]
-fn subgcache_cuts_pftt_vs_baseline() {
-    // The headline claim at small scale: shared-prefix extend is much
-    // cheaper than per-query full prefill.
+fn sim_pipeline_reports_are_complete_and_consistent() {
+    let env = common::sim_env(SimLatency::zero());
+    check_reports_complete(&env.store, &env.backend, &env.ds, &common::sim_config());
+}
+
+#[test]
+fn sim_subgcache_cuts_pftt_vs_baseline() {
+    // prefill dominates extend, as on real hardware, so the shared-prefix
+    // win is visible and the assertion is robust to scheduler jitter.
+    let env = common::sim_env(SimLatency::from_millis(10, 2, 2, 2));
+    check_pftt_cut(&env.store, &env.backend, &env.ds, &common::sim_config());
+}
+
+#[test]
+fn sim_no_kv_leaks_after_serving() {
+    let env = common::sim_env(SimLatency::zero());
+    check_no_kv_leaks(&env.store, &env.backend, &env.ds, &common::sim_config());
+}
+
+#[test]
+fn sim_works_across_all_backbones() {
+    let env = common::sim_env(SimLatency::zero());
+    check_all_backbones(&env.store, &env.backend, &env.ds, &common::sim_config());
+}
+
+#[test]
+fn sim_linkage_strategies_all_serve() {
+    let env = common::sim_env(SimLatency::zero());
+    check_linkages(&env.store, &env.backend, &env.ds, &common::sim_config());
+}
+
+#[test]
+fn sim_rejects_unknown_backbone() {
+    let env = common::sim_env(SimLatency::zero());
+    check_rejects_unknown_backbone(&env.store, &env.backend);
+}
+
+// ---------------------------------------------------------------------------
+// Artifact flavor (opt-in by presence of artifacts/)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn subgcache_answers_match_baseline_with_singleton_clusters_artifacts() {
     with_engine(|store, engine| {
         let ds = store.dataset("scene_graph").unwrap();
-        let queries = ds.sample_test(8, 11);
-        let cfg = ServeConfig { n_clusters: 1, ..Default::default() };
-        let coord = Coordinator::new(store, engine, cfg).unwrap();
-        let r = GRetriever::default();
-        let base = coord.serve_baseline(&ds, &queries, &r).unwrap();
-        let ours = coord.serve_subgcache(&ds, &queries, &r).unwrap();
-        assert!(
-            ours.metrics.pftt_ms() < base.metrics.pftt_ms(),
-            "PFTT should drop: baseline {:.1} ms vs subgcache {:.1} ms",
-            base.metrics.pftt_ms(), ours.metrics.pftt_ms()
-        );
+        check_singleton_parity(store, engine, &ds, &ServeConfig::default());
     });
 }
 
 #[test]
-fn no_kv_leaks_after_serving() {
-    with_engine(|store, engine| {
-        let ds = store.dataset("scene_graph").unwrap();
-        let queries = ds.sample_test(5, 17);
-        let coord = Coordinator::new(store, engine, ServeConfig::default()).unwrap();
-        let r = GRetriever::default();
-        let live_before = engine.stats().unwrap().live_kv;
-        coord.serve_baseline(&ds, &queries, &r).unwrap();
-        coord.serve_subgcache(&ds, &queries, &r).unwrap();
-        assert_eq!(engine.stats().unwrap().live_kv, live_before, "leaked KV handles");
-    });
-}
-
-#[test]
-fn works_across_all_backbones() {
-    with_engine(|store, engine| {
-        let ds = store.dataset("scene_graph").unwrap();
-        let queries = ds.sample_test(3, 23);
-        for backbone in store.manifest().llm_names() {
-            let cfg = ServeConfig { backbone: backbone.to_string(), n_clusters: 1,
-                                    ..Default::default() };
-            let coord = Coordinator::new(store, engine, cfg).unwrap();
-            let rep = coord.serve_subgcache(&ds, &queries, &GRetriever::default()).unwrap();
-            assert_eq!(rep.results.len(), 3, "{backbone}");
-            for r in &rep.results {
-                assert!(!r.predicted.is_empty() || r.gold.is_empty(),
-                        "{backbone}: empty generation for {:?}", r.query);
-            }
-        }
-    });
-}
-
-#[test]
-fn linkage_strategies_all_serve() {
+fn pipeline_reports_are_complete_and_consistent_artifacts() {
     with_engine(|store, engine| {
         let ds = store.dataset("oag").unwrap();
-        let queries = ds.sample_test(6, 29);
-        for linkage in Linkage::ALL {
-            let cfg = ServeConfig { n_clusters: 3, linkage, ..Default::default() };
-            let coord = Coordinator::new(store, engine, cfg).unwrap();
-            let rep = coord.serve_subgcache(&ds, &queries, &GragRetriever::default()).unwrap();
-            assert_eq!(rep.cluster_sizes.len(), 3, "{linkage:?}");
-            assert_eq!(rep.results.len(), 6);
-        }
+        check_reports_complete(store, engine, &ds, &ServeConfig::default());
     });
 }
 
 #[test]
-fn rejects_unknown_backbone() {
+fn subgcache_cuts_pftt_vs_baseline_artifacts() {
     with_engine(|store, engine| {
-        let cfg = ServeConfig { backbone: "gpt-5".into(), ..Default::default() };
-        assert!(Coordinator::new(store, engine, cfg).is_err());
-        // a GNN module exists in the manifest but has no KV geometry — the
-        // coordinator must reject it up front, not size cache entries at 0.
-        let cfg = ServeConfig { backbone: "gat".into(), ..Default::default() };
-        assert!(Coordinator::new(store, engine, cfg).is_err());
+        let ds = store.dataset("scene_graph").unwrap();
+        check_pftt_cut(store, engine, &ds, &ServeConfig::default());
+    });
+}
+
+#[test]
+fn no_kv_leaks_after_serving_artifacts() {
+    with_engine(|store, engine| {
+        let ds = store.dataset("scene_graph").unwrap();
+        check_no_kv_leaks(store, engine, &ds, &ServeConfig::default());
+    });
+}
+
+#[test]
+fn works_across_all_backbones_artifacts() {
+    with_engine(|store, engine| {
+        let ds = store.dataset("scene_graph").unwrap();
+        check_all_backbones(store, engine, &ds, &ServeConfig::default());
+    });
+}
+
+#[test]
+fn linkage_strategies_all_serve_artifacts() {
+    with_engine(|store, engine| {
+        let ds = store.dataset("oag").unwrap();
+        check_linkages(store, engine, &ds, &ServeConfig::default());
+    });
+}
+
+#[test]
+fn rejects_unknown_backbone_artifacts() {
+    with_engine(|store, engine| {
+        check_rejects_unknown_backbone(store, engine);
     });
 }

@@ -1,13 +1,16 @@
-//! Online (streaming) SubGCache end-to-end tests over real artifacts:
-//! queries arrive one at a time, clusters form on the fly, and warm
-//! representative KV caches are reused across the stream.
+//! Online (streaming) SubGCache end-to-end tests: queries arrive one at a
+//! time, clusters form on the fly, and warm representative KV caches are
+//! reused across the stream.
 //!
-//! Skipped (with a message) when `artifacts/` is absent, so `cargo test -q`
-//! stays green on a fresh clone; run `make artifacts` to enable.
+//! Each scenario is written once against the `Backend` trait and runs in
+//! two flavors: on the deterministic [`SimBackend`] (always — fresh clone,
+//! CI), and on the real PJRT engine over `artifacts/` (the `*_artifacts`
+//! variants, which self-skip with a message when artifacts are absent).
 
 use subgcache::coordinator::{Coordinator, ServeConfig};
+use subgcache::data::Dataset;
 use subgcache::prelude::*;
-use subgcache::runtime::{ArtifactStore, Engine};
+use subgcache::runtime::SimLatency;
 
 mod common;
 
@@ -15,115 +18,191 @@ fn with_engine<T>(f: impl FnOnce(&ArtifactStore, &Engine) -> T) -> Option<T> {
     common::with_engine("online e2e test", f)
 }
 
+// ---------------------------------------------------------------------------
+// Scenarios (backend-generic)
+// ---------------------------------------------------------------------------
+
+/// A negative threshold never joins: every query opens its own cluster
+/// whose representative IS its own retrieved subgraph, so the online path
+/// degenerates to per-query prefix + extend — which must predict exactly
+/// what the baseline's full prompt predicts (greedy decoding).
+fn check_singleton_parity(store: &ArtifactStore, backend: &dyn Backend, ds: &Dataset,
+                          base_cfg: &ServeConfig) {
+    let queries = ds.sample_test(6, 3);
+    let cfg = ServeConfig { online_threshold: -1.0, ..base_cfg.clone() };
+    let coord = Coordinator::new(store, backend, cfg).unwrap();
+    let r = GRetriever::default();
+    let base = coord.serve_baseline(ds, &queries, &r).unwrap();
+    let ours = coord.serve_online(ds, queries.iter().copied(), &r).unwrap();
+    assert_eq!(ours.cluster_sizes.len(), queries.len());
+    assert_eq!(ours.metrics.miss_count(), queries.len(), "never-join = all misses");
+    assert_eq!(ours.metrics.hit_count(), 0);
+    for (b, o) in base.results.iter().zip(&ours.results) {
+        assert_eq!(b.id, o.id);
+        assert_eq!(b.predicted, o.predicted,
+                   "q{}: baseline {:?} vs online-singleton {:?}",
+                   b.id, b.predicted, o.predicted);
+    }
+}
+
+/// An infinite threshold funnels the whole stream into one cluster: the
+/// first query prefills the representative, every later query must hit
+/// the warm cache. Hit PFTT excludes the prefill, so the split must be
+/// visible and ordered.
+fn check_warm_hits_split_ttft(store: &ArtifactStore, backend: &dyn Backend, ds: &Dataset,
+                              base_cfg: &ServeConfig) {
+    let queries = ds.sample_test(8, 11);
+    let cfg = ServeConfig { online_threshold: f32::INFINITY, ..base_cfg.clone() };
+    let coord = Coordinator::new(store, backend, cfg).unwrap();
+    let r = GRetriever::default();
+    let rep = coord.serve_online(ds, queries.iter().copied(), &r).unwrap();
+
+    assert_eq!(rep.results.len(), queries.len());
+    assert_eq!(rep.cluster_sizes, vec![queries.len()]);
+    assert_eq!(rep.metrics.miss_count(), 1, "only the opener prefills");
+    assert_eq!(rep.metrics.hit_count(), queries.len() - 1);
+    assert_eq!(rep.cache.prefills, 1);
+    assert_eq!(rep.cache.hits as usize, queries.len() - 1);
+    assert!((rep.cache.hit_rate() - (queries.len() - 1) as f64
+             / queries.len() as f64).abs() < 1e-9);
+    // the headline asymmetry: a warm hit skips the representative
+    // prefill entirely, so its PFTT (and TTFT) must come in under the
+    // miss's.
+    assert!(rep.metrics.pftt_hit_ms() < rep.metrics.pftt_miss_ms(),
+            "hit PFTT {:.2} ms should undercut miss PFTT {:.2} ms",
+            rep.metrics.pftt_hit_ms(), rep.metrics.pftt_miss_ms());
+    assert!(rep.metrics.ttft_hit_ms() > 0.0 && rep.metrics.ttft_miss_ms() > 0.0);
+    // per-query records carry the split
+    for (i, q) in rep.metrics.per_query.iter().enumerate() {
+        assert_eq!(q.cache_hit, Some(i > 0));
+        assert!(q.pftt > 0.0 && q.ttft >= q.pftt && q.rt >= q.ttft);
+    }
+    // the scheduler reports its configured depth and lane usage
+    assert_eq!(rep.metrics.pipeline_depth, base_cfg.pipeline_depth.max(1));
+    assert_eq!(rep.metrics.lane_gnn.calls as usize, queries.len());
+}
+
+/// max_entries = 1 with singleton clusters: new clusters evict previous
+/// representatives as soon as they are unpinned, so every query is a miss
+/// and the backend gets every evicted handle back (no leaks). How long a
+/// pin is held depends on the decode stage: at depth 1 the decode is waited
+/// inline (the previous representative is already evictable when the next
+/// install runs → N-1 evictions); at depth ≥ 2 the decode is decoupled and
+/// the pin spans into the next turn, so the first install finds only
+/// pinned entries and runs over budget once (→ N-2 evictions).
+fn check_tight_budget_reprefill(store: &ArtifactStore, backend: &dyn Backend, ds: &Dataset,
+                                base_cfg: &ServeConfig) {
+    let queries = ds.sample_test(5, 17);
+    let cfg = ServeConfig {
+        online_threshold: -1.0,
+        cache: CachePolicy::single_resident(),
+        ..base_cfg.clone()
+    };
+    let depth = cfg.pipeline_depth.max(1);
+    let coord = Coordinator::new(store, backend, cfg).unwrap();
+    let live_before = backend.stats().unwrap().live_kv;
+    let rep = coord.serve_online(ds, queries.iter().copied(),
+                                 &GRetriever::default()).unwrap();
+    assert_eq!(rep.metrics.miss_count(), queries.len());
+    assert_eq!(rep.cache.prefills as usize, queries.len());
+    let expected_evictions = if depth >= 2 { queries.len() - 2 } else { queries.len() - 1 };
+    assert_eq!(rep.cache.evictions as usize, expected_evictions,
+               "depth {depth}: pinned in-flight entries must survive installs");
+    assert_eq!(rep.cache.resident_bytes, 0, "cache must be drained");
+    assert_eq!(backend.stats().unwrap().live_kv, live_before, "leaked KV handles");
+}
+
+fn check_report_complete(store: &ArtifactStore, backend: &dyn Backend, ds: &Dataset,
+                         base_cfg: &ServeConfig) {
+    let queries = ds.sample_test(10, 5);
+    let coord = Coordinator::new(store, backend, base_cfg.clone()).unwrap();
+    let rep = coord.serve_online(ds, queries.iter().copied(),
+                                 &GragRetriever::default()).unwrap();
+    assert_eq!(rep.results.len(), queries.len());
+    assert_eq!(rep.metrics.per_query.len(), queries.len());
+    for (r, q) in rep.results.iter().zip(&queries) {
+        assert_eq!(r.id, q.id, "results must be in arrival order");
+        assert_eq!(r.gold, q.answer);
+    }
+    assert_eq!(rep.cluster_sizes.iter().sum::<usize>(), queries.len());
+    assert_eq!(rep.cluster_sizes.len(), rep.representative_sizes.len());
+    assert_eq!(rep.metrics.hit_count() + rep.metrics.miss_count(), queries.len(),
+               "every online query is either a hit or a miss");
+    // misses == prefills == installs; the first member of every cluster
+    // is necessarily a miss.
+    assert!(rep.metrics.miss_count() >= rep.cluster_sizes.len());
+    assert_eq!(rep.cache.prefills as usize, rep.metrics.miss_count());
+    assert_eq!(rep.expired_clusters, 0, "no TTL configured, nothing may expire");
+}
+
+// ---------------------------------------------------------------------------
+// Sim flavor (always runs)
+// ---------------------------------------------------------------------------
+
 #[test]
-fn online_singleton_clusters_match_baseline() {
-    // A negative threshold never joins: every query opens its own cluster
-    // whose representative IS its own retrieved subgraph, so the online path
-    // degenerates to per-query prefix + extend — which must predict exactly
-    // what the baseline's full prompt predicts (greedy decoding).
+fn sim_online_singleton_clusters_match_baseline() {
+    let env = common::sim_env(SimLatency::zero());
+    check_singleton_parity(&env.store, &env.backend, &env.ds, &common::sim_config());
+}
+
+#[test]
+fn sim_online_stream_hits_warm_cache_and_splits_ttft() {
+    // prefill well above extend so the hit/miss asymmetry is unambiguous.
+    let env = common::sim_env(SimLatency::from_millis(12, 2, 2, 2));
+    check_warm_hits_split_ttft(&env.store, &env.backend, &env.ds, &common::sim_config());
+}
+
+#[test]
+fn sim_online_eviction_under_tight_budget_forces_reprefill() {
+    let env = common::sim_env(SimLatency::zero());
+    check_tight_budget_reprefill(&env.store, &env.backend, &env.ds, &common::sim_config());
+}
+
+#[test]
+fn sim_online_eviction_at_depth_1_matches_serial_pin_lifetime() {
+    let env = common::sim_env(SimLatency::zero());
+    let cfg = ServeConfig { pipeline_depth: 1, ..common::sim_config() };
+    check_tight_budget_reprefill(&env.store, &env.backend, &env.ds, &cfg);
+}
+
+#[test]
+fn sim_online_report_is_complete_and_ordered() {
+    let env = common::sim_env(SimLatency::zero());
+    check_report_complete(&env.store, &env.backend, &env.ds, &common::sim_config());
+}
+
+// ---------------------------------------------------------------------------
+// Artifact flavor (opt-in by presence of artifacts/)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn online_singleton_clusters_match_baseline_artifacts() {
     with_engine(|store, engine| {
         let ds = store.dataset("scene_graph").unwrap();
-        let queries = ds.sample_test(6, 3);
-        let cfg = ServeConfig { online_threshold: -1.0, ..Default::default() };
-        let coord = Coordinator::new(store, engine, cfg).unwrap();
-        let r = GRetriever::default();
-        let base = coord.serve_baseline(&ds, &queries, &r).unwrap();
-        let ours = coord.serve_online(&ds, queries.iter().copied(), &r).unwrap();
-        assert_eq!(ours.cluster_sizes.len(), queries.len());
-        assert_eq!(ours.metrics.miss_count(), queries.len(), "never-join = all misses");
-        assert_eq!(ours.metrics.hit_count(), 0);
-        for (b, o) in base.results.iter().zip(&ours.results) {
-            assert_eq!(b.id, o.id);
-            assert_eq!(b.predicted, o.predicted,
-                       "q{}: baseline {:?} vs online-singleton {:?}",
-                       b.id, b.predicted, o.predicted);
-        }
+        check_singleton_parity(store, engine, &ds, &ServeConfig::default());
     });
 }
 
 #[test]
-fn online_stream_hits_warm_cache_and_splits_ttft() {
-    // An infinite threshold funnels the whole stream into one cluster: the
-    // first query prefills the representative, every later query must hit
-    // the warm cache. Hit PFTT excludes the prefill, so the split must be
-    // visible and ordered.
+fn online_stream_hits_warm_cache_and_splits_ttft_artifacts() {
     with_engine(|store, engine| {
         let ds = store.dataset("scene_graph").unwrap();
-        let queries = ds.sample_test(8, 11);
-        let cfg = ServeConfig { online_threshold: f32::INFINITY, ..Default::default() };
-        let coord = Coordinator::new(store, engine, cfg).unwrap();
-        let r = GRetriever::default();
-        let rep = coord.serve_online(&ds, queries.iter().copied(), &r).unwrap();
-
-        assert_eq!(rep.results.len(), queries.len());
-        assert_eq!(rep.cluster_sizes, vec![queries.len()]);
-        assert_eq!(rep.metrics.miss_count(), 1, "only the opener prefills");
-        assert_eq!(rep.metrics.hit_count(), queries.len() - 1);
-        assert_eq!(rep.cache.prefills, 1);
-        assert_eq!(rep.cache.hits as usize, queries.len() - 1);
-        assert!((rep.cache.hit_rate() - (queries.len() - 1) as f64
-                 / queries.len() as f64).abs() < 1e-9);
-        // the headline asymmetry: a warm hit skips the representative
-        // prefill entirely, so its PFTT (and TTFT) must come in under the
-        // miss's.
-        assert!(rep.metrics.pftt_hit_ms() < rep.metrics.pftt_miss_ms(),
-                "hit PFTT {:.2} ms should undercut miss PFTT {:.2} ms",
-                rep.metrics.pftt_hit_ms(), rep.metrics.pftt_miss_ms());
-        assert!(rep.metrics.ttft_hit_ms() > 0.0 && rep.metrics.ttft_miss_ms() > 0.0);
-        // per-query records carry the split
-        for (i, q) in rep.metrics.per_query.iter().enumerate() {
-            assert_eq!(q.cache_hit, Some(i > 0));
-            assert!(q.pftt > 0.0 && q.ttft >= q.pftt && q.rt >= q.ttft);
-        }
+        check_warm_hits_split_ttft(store, engine, &ds, &ServeConfig::default());
     });
 }
 
 #[test]
-fn online_eviction_under_tight_budget_forces_reprefill() {
-    // max_entries = 1 with singleton clusters: each new cluster evicts the
-    // previous representative, so every query is a miss and the engine gets
-    // every evicted handle back (no leaks).
+fn online_eviction_under_tight_budget_forces_reprefill_artifacts() {
     with_engine(|store, engine| {
         let ds = store.dataset("scene_graph").unwrap();
-        let queries = ds.sample_test(5, 17);
-        let cfg = ServeConfig {
-            online_threshold: -1.0,
-            cache: CachePolicy::single_resident(),
-            ..Default::default()
-        };
-        let coord = Coordinator::new(store, engine, cfg).unwrap();
-        let live_before = engine.stats().unwrap().live_kv;
-        let rep = coord.serve_online(&ds, queries.iter().copied(),
-                                     &GRetriever::default()).unwrap();
-        assert_eq!(rep.metrics.miss_count(), queries.len());
-        assert_eq!(rep.cache.prefills as usize, queries.len());
-        assert_eq!(rep.cache.evictions as usize, queries.len() - 1);
-        assert_eq!(rep.cache.resident_bytes, 0, "cache must be drained");
-        assert_eq!(engine.stats().unwrap().live_kv, live_before, "leaked KV handles");
+        check_tight_budget_reprefill(store, engine, &ds, &ServeConfig::default());
     });
 }
 
 #[test]
-fn online_report_is_complete_and_ordered() {
+fn online_report_is_complete_and_ordered_artifacts() {
     with_engine(|store, engine| {
         let ds = store.dataset("oag").unwrap();
-        let queries = ds.sample_test(10, 5);
-        let coord = Coordinator::new(store, engine, ServeConfig::default()).unwrap();
-        let rep = coord.serve_online(&ds, queries.iter().copied(),
-                                     &GragRetriever::default()).unwrap();
-        assert_eq!(rep.results.len(), queries.len());
-        assert_eq!(rep.metrics.per_query.len(), queries.len());
-        for (r, q) in rep.results.iter().zip(&queries) {
-            assert_eq!(r.id, q.id, "results must be in arrival order");
-            assert_eq!(r.gold, q.answer);
-        }
-        assert_eq!(rep.cluster_sizes.iter().sum::<usize>(), queries.len());
-        assert_eq!(rep.cluster_sizes.len(), rep.representative_sizes.len());
-        assert_eq!(rep.metrics.hit_count() + rep.metrics.miss_count(), queries.len(),
-                   "every online query is either a hit or a miss");
-        // misses == prefills == installs; the first member of every cluster
-        // is necessarily a miss.
-        assert!(rep.metrics.miss_count() >= rep.cluster_sizes.len());
-        assert_eq!(rep.cache.prefills as usize, rep.metrics.miss_count());
+        check_report_complete(store, engine, &ds, &ServeConfig::default());
     });
 }
