@@ -43,9 +43,17 @@ fn host_side_cases(b: &mut Bench) {
     b.run("host: cache install+lookup+evict churn (64 clusters)", || {
         let mut m: KvCacheManager<u64> = KvCacheManager::new(CachePolicy::new(1 << 20, 8));
         for cid in 0..64usize {
-            let _ = m.install(cid, cid as u64, 96 * 1024);
+            if !m.lookup(cid).is_hit() {
+                let _ = m.install(cid, cid as u64, 96 * 1024);
+            }
             m.unpin(cid);
-            let _ = m.lookup(cid % 8);
+            // warm-path probe: a hit pins, a miss reserves — both resolved
+            // immediately (the serving discipline in miniature).
+            if m.lookup(cid % 8).is_hit() {
+                m.unpin(cid % 8);
+            } else {
+                m.abort_install(cid % 8);
+            }
         }
         let _ = m.release_all();
     });

@@ -11,14 +11,21 @@
 //!   latencies — the scheduler, lanes and emitter are exercised end to end
 //!   without `make artifacts`, and the depth sweep shows the k=1 vs k≥2
 //!   pipeline difference in the JSON.
+//!
+//! Both modes also run a `--streams N` (default 4) multi-stream case: N
+//! replicated query streams served concurrently over ONE shared KV-cache
+//! pool, emitting the pool-level dedup row (`pool_prefills`,
+//! `shared_hits`, `dedup_bytes_saved`, lock contention) next to the serial
+//! rows — the cross-stream sharing regression surface.
 
-use subgcache::harness::{run_cell_with, run_online_cell_with, Cell, ServingBench};
+use subgcache::harness::{multi_serving_row, run_cell_with, run_multi_online_cell_with,
+                         run_online_cell_with, Cell, ServingBench};
 use subgcache::prelude::*;
 use subgcache::runtime::{SimBackend, SIM_BACKBONE};
 
 const OUT: &str = "BENCH_serving.json";
 
-fn artifact_mode(store: &ArtifactStore) -> anyhow::Result<ServingBench> {
+fn artifact_mode(store: &ArtifactStore, streams: usize) -> anyhow::Result<ServingBench> {
     let mut bench = ServingBench::new("artifacts");
     let engine = Engine::start(store)?;
     let backbone = "llama-3.2-3b-sim";
@@ -40,11 +47,18 @@ fn artifact_mode(store: &ArtifactStore) -> anyhow::Result<ServingBench> {
                      r.online.metrics.wall_time, r.online.metrics.qps());
             bench.push(&format!("online {dataset} k={depth}"), &r.online);
         }
+        let cell = Cell::new(dataset, "g-retriever", backbone, 25);
+        let mr = run_multi_online_cell_with(store, &engine, &ds, &cell, streams)?;
+        println!("online {dataset} streams={streams}: {:.2}s wall ({:.1} q/s, \
+                  {} shared hits)",
+                 mr.multi.wall_time, mr.multi.qps(), mr.multi.shared_hits());
+        bench.push_row(multi_serving_row(
+            &format!("online {dataset} streams={streams}"), &mr.multi));
     }
     Ok(bench)
 }
 
-fn sim_quick_mode() -> anyhow::Result<ServingBench> {
+fn sim_quick_mode(streams: usize) -> anyhow::Result<ServingBench> {
     let mut bench = ServingBench::new("sim-quick");
     let store = sim_store();
     let ds = sim_dataset(4, 4);
@@ -69,16 +83,34 @@ fn sim_quick_mode() -> anyhow::Result<ServingBench> {
                  r.online.metrics.overlap_time * 1e3);
         bench.push(&format!("online sim k={depth}"), &r.online);
     }
+    // cross-stream sharing smoke: N replicated streams, one shared pool.
+    // Prefill dominates, so the dedup (one pool prefill per distinct
+    // representative instead of N) is visible in the wall/qps row.
+    let cell = Cell::new("sim", "g-retriever", SIM_BACKBONE, 12);
+    let mr = run_multi_online_cell_with(&store, &sim, &ds, &cell, streams)?;
+    println!("online sim streams={streams}: {:.3}s wall ({:.1} q/s), \
+              {} pool prefills, {} shared hits, lock {}/{} contended",
+             mr.multi.wall_time, mr.multi.qps(), mr.multi.shared.prefills,
+             mr.multi.shared_hits(), mr.multi.lock.contended,
+             mr.multi.lock.acquisitions);
+    bench.push_row(multi_serving_row(
+        &format!("online sim streams={streams}"), &mr.multi));
     Ok(bench)
 }
 
 fn main() -> anyhow::Result<()> {
+    // cargo passes `--bench` through; `--streams N` picks the multi-stream
+    // fan-out (CI runs `cargo bench --bench serving -- --streams 4`).
+    // `--streams 1` is honored: a one-stream-over-shared-pool row is the
+    // parity reference the concurrency suite compares against.
+    let args = Args::from_env();
+    let streams = args.usize_or("streams", 4).max(1);
     let artifacts = ArtifactStore::discover().ok();
     let mode = if artifacts.is_some() { "artifacts" } else { "sim-quick" };
-    println!("== serving bench ({mode}) ==");
+    println!("== serving bench ({mode}, streams = {streams}) ==");
     let bench = match &artifacts {
-        Some(store) => artifact_mode(store)?,
-        None => sim_quick_mode()?,
+        Some(store) => artifact_mode(store, streams)?,
+        None => sim_quick_mode(streams)?,
     };
     bench.emit(OUT)?;
     println!("\nwrote {OUT} ({} rows)", bench.len());

@@ -11,12 +11,17 @@
 //! Scheduler knobs: `--depth k` sets the pipeline lookahead (k ≥ 2 overlaps
 //! query i+1's GNN encode with query i's LLM work and decouples the decode
 //! stage), `--ttl N` expires clusters unused for more than N arrivals.
-//! `--bench-json [PATH]` emits the wall/qps summaries as
-//! `BENCH_serving.json` (same shape as `BENCH_engine.json`).
+//! `--streams N` (default 1) additionally serves the cell as N concurrent
+//! replicated streams over ONE shared KV-cache pool — the cross-stream
+//! dedup mode: identical representatives are prefilled once for the whole
+//! fleet, and the summary line reports shared hits, dedup bytes saved and
+//! pool-lock contention. `--bench-json [PATH]` emits the wall/qps summaries
+//! as `BENCH_serving.json` (same shape as `BENCH_engine.json`).
 
 use subgcache::harness::{batch_from_env, bench_json_from_args, cache_policy_from_args,
-                         cache_summary, online_cells, run_online_cell,
-                         throughput_summary, Cell, ServingBench, ONLINE_HEADER};
+                         cache_summary, multi_serving_row, multi_summary, online_cells,
+                         run_multi_online_cell, run_online_cell, throughput_summary,
+                         Cell, ServingBench, ONLINE_HEADER};
 use subgcache::metrics::Table;
 use subgcache::prelude::*;
 
@@ -34,12 +39,13 @@ fn main() -> anyhow::Result<()> {
     let cache = cache_policy_from_args(&args)?;
     let depth = args.usize_or("depth", ServeConfig::default().pipeline_depth);
     let ttl: Option<u64> = args.get("ttl").map(|v| v.parse().expect("bad --ttl (arrivals)"));
+    let streams = args.usize_or("streams", 1);
     let bench_json = bench_json_from_args(&args);
     let mut bench = ServingBench::new("artifacts");
 
     println!("== Table 5: online (streaming) serving \
               (backbone: {backbone}, batch = {batch}, threshold = {threshold}, \
-              depth = {depth}, ttl = {ttl:?}) ==");
+              depth = {depth}, ttl = {ttl:?}, streams = {streams}) ==");
     for dataset in ["scene_graph", "oag"] {
         println!("\n-- dataset: {dataset} --");
         let mut t = Table::new(&ONLINE_HEADER);
@@ -75,6 +81,14 @@ fn main() -> anyhow::Result<()> {
             ));
             bench.push(&format!("table5 {dataset} {label} baseline"), &r.baseline);
             bench.push(&format!("table5 {dataset} {label} online k={depth}"), &r.online);
+            if streams > 1 {
+                let mr = run_multi_online_cell(&store, &engine, &cell, streams)?;
+                summaries.push(format!("{label} {}", multi_summary(&mr.multi)));
+                bench.push_row(multi_serving_row(
+                    &format!("table5 {dataset} {label} online k={depth} streams={streams}"),
+                    &mr.multi,
+                ));
+            }
         }
         t.print();
         for s in summaries {

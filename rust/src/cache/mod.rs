@@ -1,36 +1,83 @@
-//! Subgraph-level KV cache manager (the paper §3.4), grown from the seed's
-//! single-resident slot into a real admission/eviction policy.
+//! Subgraph-level KV cache (the paper §3.4), grown from the seed's
+//! single-resident slot into a process-wide, thread-safe pool shared across
+//! concurrent query streams.
 //!
-//! Several cluster-representative KV caches can now be resident at once,
-//! bounded by a [`CachePolicy`] byte/entry budget with LRU eviction — the
-//! knowledge-caching direction RAGCache takes for RAG prefixes. This is what
-//! the online (streaming) serving path needs: a query that lands on a
-//! previously seen cluster reuses the still-warm representative cache
-//! instead of re-prefilling it.
+//! # Architecture
 //!
-//! Entry lifecycle:
+//! Two layers:
 //!
-//! 1. [`KvCacheManager::install`] admits a representative cache **pinned**,
-//!    so a concurrent admission can never evict the in-flight cluster
-//!    mid-extend. Evicted handles are returned to the caller, who must hand
-//!    them back to the engine (batched via
-//!    [`crate::runtime::Engine::release_many`]).
-//! 2. [`KvCacheManager::lookup`] hits refresh the entry's LRU position and
-//!    bank the avoided prefill bytes in [`CacheStats::bytes_saved`].
-//! 3. [`KvCacheManager::unpin`] when the cluster/request completes makes the
-//!    entry evictable; [`KvCacheManager::release_all`] drains the cache at
-//!    end of batch.
+//! * [`SharedKvCache`] — the `Send + Sync` pool. One per process (or per
+//!   backend): a byte/entry-budgeted LRU over representative KV caches,
+//!   keyed by **representative content hash** ([`RepKey`]) so identical
+//!   representatives resident in two streams share ONE entry — the paper's
+//!   intra-stream reuse extended to inter-stream reuse (the same
+//!   deduplication insight prompt-cache systems exploit). Single lock with
+//!   contention counters ([`SharedKvCache::lock_stats`]); critical sections
+//!   are short and allocation-light, so a sharded map is a follow-on, not a
+//!   prerequisite.
+//! * [`KvCacheManager`] — a thin **per-stream view** over a pool. Each
+//!   serving stream owns one view; the view carries the stream's own
+//!   hit/miss accounting ([`CacheStats`]), its cluster-id → content-key
+//!   bindings, and the pins it holds. [`KvCacheManager::new`] wraps a
+//!   private pool (exactly the PR 3 single-stream behaviour);
+//!   [`KvCacheManager::shared_view`] attaches to a shared one.
 //!
-//! Eviction only ever removes unpinned entries, least-recently-used first.
-//! If pinned entries alone exceed the budget the cache runs over budget
-//! rather than corrupting in-flight state (the property tests below pin this
-//! down). Generic over the handle type so the policy is testable without a
-//! PJRT engine; the real handle is [`crate::runtime::KvHandle`].
+//! # The sharing / pinning / eviction contract
+//!
+//! * **Keys.** A shared view [`bind`]s each of its clusters to a [`RepKey`]
+//!   (content hash of backbone + graph + representative subgraph). Two
+//!   streams that bind the same key address the same pool entry. Unbound
+//!   clusters (and every cluster of a private view) get a view-salted key,
+//!   reproducing PR 3's per-stream-private entries exactly.
+//! * **Single-flight installs.** A [`lookup`] miss *reserves* the key: the
+//!   caller must [`install`] (or [`abort_install`]) it. Another stream that
+//!   looks up a reserved key **blocks** until the reservation resolves,
+//!   then hits the freshly installed entry — so N streams racing on one
+//!   representative pay exactly one prefill, never N. A view dropped with
+//!   reservations outstanding (serve path unwound on error) aborts them, so
+//!   waiters never hang on a dead installer: they wake, re-reserve, and
+//!   surface their own error.
+//! * **Pins are global.** An entry's pin count sums every stream's pins.
+//!   [`lookup`] hits and [`install`]s return with the caller holding one
+//!   pin; pins nest; a view can only unpin pins it holds. Eviction (LRU,
+//!   at install under budget pressure) only ever removes entries with
+//!   **zero pins across all streams** — if pinned entries alone exceed the
+//!   budget the pool runs over budget rather than corrupting another
+//!   stream's in-flight extend.
+//! * **Deferred release.** An explicit [`release`] of an entry another
+//!   stream still pins does not return its handle: the entry is marked
+//!   *doomed* and the handle moves to a graveyard when the last pin drops.
+//!   Every handle-returning call drains the graveyard, so deferred handles
+//!   reach the backend at the next natural release point. A lookup hit (or
+//!   a racing re-install) of a doomed entry resurrects it — it is
+//!   demonstrably still hot. TTL sweeps use [`expire`] instead: a private
+//!   view releases now, a shared view only drops its own binding (one
+//!   stream's staleness must not reclaim the fleet's warm entry).
+//! * **Handle conservation.** Every handle passed to [`install`] leaves the
+//!   pool exactly once — through an eviction vector, a release, a deferred
+//!   graveyard drain, or the end-of-run [`SharedKvCache::drain_all`] — and
+//!   is never returned while any stream pins it. The property tests here
+//!   and the concurrent suite in `rust/tests/shared_cache.rs` pin this
+//!   down.
+//!
+//! Generic over the handle type so the policy is testable without a PJRT
+//! engine; the real handle is [`crate::runtime::KvHandle`].
+//!
+//! [`bind`]: KvCacheManager::bind
+//! [`lookup`]: KvCacheManager::lookup
+//! [`install`]: KvCacheManager::install
+//! [`abort_install`]: KvCacheManager::abort_install
+//! [`release`]: KvCacheManager::release
+//! [`expire`]: KvCacheManager::expire
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 
 /// Admission/eviction budget for the multi-resident cache.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CachePolicy {
-    /// Total bytes of resident KV caches (k + v) the manager may hold.
+    /// Total bytes of resident KV caches (k + v) the pool may hold.
     pub max_bytes: usize,
     /// Maximum number of concurrently resident representative caches.
     pub max_entries: usize,
@@ -61,11 +108,17 @@ impl CachePolicy {
 }
 
 /// Accounting snapshot (reported in EXPERIMENTS.md and the table harnesses).
+///
+/// Returned both per stream ([`KvCacheManager::stats`] — the view's own
+/// lookups/installs, with pool-level residency) and for the whole pool
+/// ([`SharedKvCache::stats`]). Per-view `prefills`/`hits`/`misses`/
+/// `evictions` sum to the pool's across all views.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CacheStats {
     /// Installs = representative prefills actually paid.
     pub prefills: u64,
-    /// Lookups that found a warm resident cache.
+    /// Lookups that found a warm resident cache (including lookups that
+    /// waited out another stream's in-flight install of the same key).
     pub hits: u64,
     /// Lookups that found nothing (new cluster or evicted).
     pub misses: u64,
@@ -75,6 +128,15 @@ pub struct CacheStats {
     pub released: u64,
     /// KV bytes of prefill work avoided: sum of entry bytes over hits.
     pub bytes_saved: u64,
+    /// Hits on an entry some *other* stream installed — the cross-stream
+    /// deduplication the shared pool exists for (subset of `hits`).
+    pub shared_hits: u64,
+    /// KV bytes of prefill work another stream paid for us: sum of entry
+    /// bytes over `shared_hits` (subset of `bytes_saved`).
+    pub dedup_bytes_saved: u64,
+    /// Releases deferred past a foreign pin (entry doomed, handle returned
+    /// later through a graveyard drain).
+    pub deferred_releases: u64,
     pub resident_bytes: usize,
     pub peak_bytes: usize,
 }
@@ -87,26 +149,526 @@ impl CacheStats {
     }
 }
 
-/// One resident cluster cache.
-struct Entry<H> {
-    cluster_id: usize,
-    handle: H,
-    bytes: usize,
-    pins: u32,
-    last_used: u64,
+/// Single-lock contention counters for the shared pool (the signal that
+/// says when the map needs sharding).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LockStats {
+    /// Lock acquisitions by any view/pool operation.
+    pub acquisitions: u64,
+    /// Acquisitions that found the lock held and had to block.
+    pub contended: u64,
 }
 
-/// The byte-budgeted, multi-resident subgraph-level KV cache. `H` is an
-/// opaque device-cache handle; every handle passed to [`install`] is
-/// eventually returned exactly once (via the eviction vectors, `release`, or
-/// `release_all`) so the caller can return it to the engine.
-///
-/// [`install`]: KvCacheManager::install
-pub struct KvCacheManager<H> {
-    policy: CachePolicy,
+/// Content-hash identity of a representative: what makes two streams'
+/// cluster representatives "the same" for KV-cache sharing. Build one with
+/// [`RepKey::of_parts`] over everything that determines the prefilled
+/// prefix (backbone name, graph name, representative node/edge ids) — the
+/// verbalizer and tokenizer are deterministic, so equal parts imply a
+/// bit-identical prefill.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RepKey(pub u64);
+
+impl RepKey {
+    /// FNV-1a over a byte stream assembled from string and integer parts.
+    pub fn of_parts<'a, S, I>(strings: S, ids: I) -> RepKey
+    where
+        S: IntoIterator<Item = &'a str>,
+        I: IntoIterator<Item = u64>,
+    {
+        let mut h = 0xcbf29ce484222325u64;
+        let mut eat = |b: u64| {
+            h = (h ^ b).wrapping_mul(0x100000001b3);
+        };
+        for s in strings {
+            for &b in s.as_bytes() {
+                eat(b as u64);
+            }
+            eat(0xFF); // separator so ("ab","c") != ("a","bc")
+        }
+        for id in ids {
+            eat(id);
+            eat(0xFE);
+        }
+        RepKey(h)
+    }
+}
+
+/// Outcome of a [`KvCacheManager::lookup`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[must_use = "a MustInstall outcome carries a reservation that must be \
+              installed or aborted"]
+pub enum Lookup {
+    /// Warm entry found (possibly after waiting out another stream's
+    /// in-flight install). The caller now holds one pin.
+    Hit,
+    /// Nothing resident. The caller holds the key's install reservation and
+    /// must `install` or `abort_install` it (dropping the view also aborts).
+    MustInstall,
+}
+
+impl Lookup {
+    pub fn is_hit(self) -> bool {
+        matches!(self, Lookup::Hit)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared pool
+// ---------------------------------------------------------------------------
+
+/// One resident representative cache.
+struct Entry<H> {
+    key: u64,
+    handle: H,
+    bytes: usize,
+    /// total pins across ALL streams.
+    pins: u32,
+    last_used: u64,
+    /// stream id of the view whose install paid the prefill.
+    installer: u64,
+    /// release was requested while pinned: the handle moves to the
+    /// graveyard when the last pin drops (unless a hit resurrects it).
+    doomed: bool,
+}
+
+struct Inner<H> {
     entries: Vec<Entry<H>>,
+    /// key → reserving stream id: a miss whose install is in flight.
+    pending: HashMap<u64, u64>,
+    /// handles whose release was deferred past a foreign pin; drained by
+    /// the next handle-returning call on any view.
+    graveyard: Vec<H>,
     tick: u64,
     stats: CacheStats,
+}
+
+/// Outcome details handed back to the view so per-stream stats stay exact.
+struct InstallOutcome<H> {
+    /// Handles safe to hand to the backend (evictions, replacements,
+    /// rejected duplicates, drained graveyard).
+    out: Vec<H>,
+    /// How many of `out` were budget evictions.
+    evictions: u64,
+}
+
+/// The process-wide, thread-safe, byte-budgeted KV cache pool. `H` is an
+/// opaque device-cache handle; see the module docs for the full contract.
+/// All mutation goes through [`KvCacheManager`] views; the pool itself
+/// exposes only observation ([`stats`], [`lock_stats`], [`resident_bytes`])
+/// and end-of-run draining ([`drain_all`], [`collect_deferred`]).
+///
+/// [`stats`]: SharedKvCache::stats
+/// [`lock_stats`]: SharedKvCache::lock_stats
+/// [`resident_bytes`]: SharedKvCache::resident_bytes
+/// [`drain_all`]: SharedKvCache::drain_all
+/// [`collect_deferred`]: SharedKvCache::collect_deferred
+pub struct SharedKvCache<H> {
+    policy: CachePolicy,
+    inner: Mutex<Inner<H>>,
+    /// Wakes lookups blocked on another stream's pending install.
+    cv: Condvar,
+    next_stream: AtomicU64,
+    lock_acquisitions: AtomicU64,
+    lock_contended: AtomicU64,
+}
+
+impl<H> SharedKvCache<H> {
+    pub fn new(policy: CachePolicy) -> Self {
+        assert!(policy.max_entries >= 1, "policy must admit at least one entry");
+        SharedKvCache {
+            policy,
+            inner: Mutex::new(Inner {
+                entries: Vec::new(),
+                pending: HashMap::new(),
+                graveyard: Vec::new(),
+                tick: 0,
+                stats: CacheStats::default(),
+            }),
+            cv: Condvar::new(),
+            next_stream: AtomicU64::new(1),
+            lock_acquisitions: AtomicU64::new(0),
+            lock_contended: AtomicU64::new(0),
+        }
+    }
+
+    pub fn policy(&self) -> CachePolicy {
+        self.policy
+    }
+
+    /// Lock the pool, counting contention. Mutex poisoning is recovered:
+    /// every critical section below restores invariants before returning,
+    /// so a panicking test thread must not cascade into every other stream.
+    fn lock(&self) -> MutexGuard<'_, Inner<H>> {
+        self.lock_acquisitions.fetch_add(1, Ordering::Relaxed);
+        match self.inner.try_lock() {
+            Ok(g) => g,
+            Err(std::sync::TryLockError::WouldBlock) => {
+                self.lock_contended.fetch_add(1, Ordering::Relaxed);
+                self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+            }
+            Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
+        }
+    }
+
+    fn register_stream(&self) -> u64 {
+        self.next_stream.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Single-lock contention counters (when `contended` grows a meaningful
+    /// fraction of `acquisitions`, shard the map).
+    pub fn lock_stats(&self) -> LockStats {
+        LockStats {
+            acquisitions: self.lock_acquisitions.load(Ordering::Relaxed),
+            contended: self.lock_contended.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Pool-level accounting: totals across every view.
+    pub fn stats(&self) -> CacheStats {
+        self.lock().stats
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.lock().stats.resident_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().entries.is_empty()
+    }
+
+    /// True while the pool satisfies its budget — or cannot (every resident
+    /// entry pinned), in which case running over budget is the contract.
+    /// This is the **install-point** invariant: eviction only runs at
+    /// install, so between a pinned overrun's unpin and the next install
+    /// the pool may legitimately sit over budget with evictable entries
+    /// (the same window the single-stream property tests have always
+    /// allowed). `install` re-asserts it under the lock on every call; use
+    /// [`consistent`](Self::consistent) for anytime polling instead.
+    pub fn budget_ok(&self) -> bool {
+        let inner = self.lock();
+        Self::budget_ok_inner(&self.policy, &inner)
+    }
+
+    fn budget_ok_inner(policy: &CachePolicy, inner: &Inner<H>) -> bool {
+        let within = inner.stats.resident_bytes <= policy.max_bytes
+            && inner.entries.len() <= policy.max_entries;
+        within || inner.entries.iter().all(|e| e.pins > 0)
+    }
+
+    /// Anytime internal-consistency check for the concurrent property
+    /// tests: byte accounting matches the entries, peak is monotone, a
+    /// doomed entry is always pinned (a doomed entry losing its last pin is
+    /// removed under the same lock), and no pending install reservation
+    /// shadows a resident key.
+    pub fn consistent(&self) -> bool {
+        let inner = self.lock();
+        let bytes: usize = inner.entries.iter().map(|e| e.bytes).sum();
+        bytes == inner.stats.resident_bytes
+            && inner.stats.peak_bytes >= inner.stats.resident_bytes
+            && inner.entries.iter().all(|e| !e.doomed || e.pins > 0)
+            && inner.entries.iter().all(|e| !inner.pending.contains_key(&e.key))
+    }
+
+    /// Drain every resident entry **and** the graveyard, pinned or not.
+    /// Quiescent-only: call after every stream using the pool has finished
+    /// (pins left by an unwound stream are abandoned bookkeeping by then).
+    pub fn drain_all(&self) -> Vec<H> {
+        let mut inner = self.lock();
+        let mut out: Vec<H> = inner.graveyard.drain(..).collect();
+        let drained: Vec<H> = inner.entries.drain(..).map(|e| e.handle).collect();
+        inner.stats.released += (out.len() + drained.len()) as u64;
+        inner.stats.resident_bytes = 0;
+        out.extend(drained);
+        out
+    }
+
+    /// Drain only the graveyard (deferred releases whose last pin dropped).
+    pub fn collect_deferred(&self) -> Vec<H> {
+        let mut inner = self.lock();
+        let out: Vec<H> = inner.graveyard.drain(..).collect();
+        inner.stats.released += out.len() as u64;
+        out
+    }
+
+    // -- internal ops (called by views, under one lock each) ----------------
+
+    fn idx(inner: &Inner<H>, key: u64) -> Option<usize> {
+        inner.entries.iter().position(|e| e.key == key)
+    }
+
+    fn lru_unpinned(inner: &Inner<H>) -> Option<usize> {
+        inner
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.pins == 0)
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(i, _)| i)
+    }
+
+    fn over_budget(&self, inner: &Inner<H>) -> bool {
+        inner.stats.resident_bytes > self.policy.max_bytes
+            || inner.entries.len() > self.policy.max_entries
+    }
+
+    fn evict_at(inner: &mut Inner<H>, i: usize) -> H {
+        let e = inner.entries.swap_remove(i);
+        inner.stats.evictions += 1;
+        inner.stats.released += 1;
+        inner.stats.resident_bytes -= e.bytes;
+        e.handle
+    }
+
+    /// Hit-or-reserve; blocks while another stream's install of `key` is
+    /// pending. Returns `(outcome, entry_bytes, was_shared)`.
+    fn lookup_or_reserve(&self, stream: u64, key: u64) -> (Lookup, usize, bool) {
+        let mut inner = self.lock();
+        loop {
+            if let Some(i) = Self::idx(&inner, key) {
+                inner.tick += 1;
+                let t = inner.tick;
+                let e = &mut inner.entries[i];
+                // a hit on a doomed entry resurrects it: it is demonstrably
+                // still hot, and tearing it down under a fresh pin would
+                // force the next stream into a pointless re-prefill.
+                e.doomed = false;
+                e.last_used = t;
+                e.pins += 1;
+                let bytes = e.bytes;
+                let shared = e.installer != stream;
+                inner.stats.hits += 1;
+                inner.stats.bytes_saved += bytes as u64;
+                if shared {
+                    inner.stats.shared_hits += 1;
+                    inner.stats.dedup_bytes_saved += bytes as u64;
+                }
+                return (Lookup::Hit, bytes, shared);
+            }
+            // copy the owner out so the map borrow ends before the guard
+            // is moved into the condvar wait (NLL cannot see through a
+            // match arm here).
+            let owner = inner.pending.get(&key).copied();
+            match owner {
+                Some(owner) => {
+                    assert_ne!(
+                        owner, stream,
+                        "stream looked up a key it already holds a reservation \
+                         for (install or abort_install it first)"
+                    );
+                    inner = self
+                        .cv
+                        .wait(inner)
+                        .unwrap_or_else(PoisonError::into_inner);
+                }
+                None => {
+                    inner.pending.insert(key, stream);
+                    inner.stats.misses += 1;
+                    return (Lookup::MustInstall, 0, false);
+                }
+            }
+        }
+    }
+
+    /// Install `handle` under `key`, fulfilling `stream`'s reservation if
+    /// one exists. The entry is admitted pinned (one pin for the caller).
+    /// Colder zero-pin entries may be evicted to make room; if only pinned
+    /// entries remain the pool runs over budget instead.
+    fn install(&self, stream: u64, key: u64, handle: H, bytes: usize) -> InstallOutcome<H> {
+        let mut inner = self.lock();
+        // any reservation of this key — ours or another stream's blind-
+        // raced one — is resolved by this install: the key is about to be
+        // resident, so waiters wake into a hit and a reserving stream's
+        // own later install lands on the resident branch (replace/reject).
+        // A pending entry must never shadow a resident key.
+        inner.pending.remove(&key);
+        // peak is taken up front: the incoming cache coexists on the device
+        // with every current resident — including any entries about to be
+        // evicted or replaced — until the caller releases the returned
+        // handles, so this transient sum is the honest high-water mark.
+        inner.stats.peak_bytes =
+            inner.stats.peak_bytes.max(inner.stats.resident_bytes + bytes);
+        let mut out: Vec<H> = inner.graveyard.drain(..).collect();
+        inner.stats.released += out.len() as u64; // deferred backlog leaves here
+        if let Some(i) = Self::idx(&inner, key) {
+            // the key is already resident (e.g. another stream installed it
+            // between this stream's reservation-free admission attempts, or
+            // a rebuild raced an eviction). A pinned resident wins: some
+            // stream's in-flight extend may hold it, so the only safe
+            // answer is to keep it and hand the NEW handle straight back —
+            // with a pin taken for the caller so its later unpin balances.
+            if inner.entries[i].pins > 0 {
+                inner.tick += 1;
+                let t = inner.tick;
+                let e = &mut inner.entries[i];
+                e.pins += 1;
+                e.last_used = t;
+                // the caller just re-demanded this content: a doomed entry
+                // is resurrected, exactly as a lookup hit would.
+                e.doomed = false;
+                // the rejected install still PAID its prefill (the handle
+                // goes straight back for release) — count it, so per-view
+                // prefill counters always sum to the pool's.
+                inner.stats.prefills += 1;
+                inner.stats.released += 1;
+                out.push(handle);
+                self.cv.notify_all();
+                return InstallOutcome { out, evictions: 0 };
+            }
+            // replacement is not budget pressure: count the returned handle
+            // in `released` only, never in `evictions`.
+            let e = inner.entries.swap_remove(i);
+            inner.stats.released += 1;
+            inner.stats.resident_bytes -= e.bytes;
+            out.push(e.handle);
+        }
+        inner.tick += 1;
+        let last_used = inner.tick;
+        inner.stats.prefills += 1;
+        inner.stats.resident_bytes += bytes;
+        inner.entries.push(Entry {
+            key,
+            handle,
+            bytes,
+            pins: 1,
+            last_used,
+            installer: stream,
+            doomed: false,
+        });
+        let mut evictions = 0u64;
+        while self.over_budget(&inner) {
+            match Self::lru_unpinned(&inner) {
+                Some(i) => {
+                    out.push(Self::evict_at(&mut inner, i));
+                    evictions += 1;
+                }
+                None => break, // only pinned entries left: run over budget
+            }
+        }
+        // the budget contract, asserted where it is defined — at the end
+        // of every install, under the lock, for every concurrent caller.
+        debug_assert!(Self::budget_ok_inner(&self.policy, &inner),
+                      "install left the pool over budget with evictable entries");
+        // waiters blocked on this key's reservation can now hit it.
+        self.cv.notify_all();
+        InstallOutcome { out, evictions }
+    }
+
+    /// Cancel `stream`'s reservation of `key` (error path). Waiters wake
+    /// and re-race: one becomes the new installer.
+    fn abort_install(&self, stream: u64, key: u64) {
+        let mut inner = self.lock();
+        if inner.pending.get(&key) == Some(&stream) {
+            inner.pending.remove(&key);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Borrow the resident handle of `key` under the lock. The closure must
+    /// be short and non-blocking (it runs inside the pool's critical
+    /// section) — enqueueing a backend submit is fine, waiting a ticket is
+    /// not.
+    fn with_handle<R>(&self, key: u64, f: impl FnOnce(&H) -> R) -> Option<R> {
+        let inner = self.lock();
+        Self::idx(&inner, key).map(|i| f(&inner.entries[i].handle))
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        let inner = self.lock();
+        Self::idx(&inner, key).is_some()
+    }
+
+    /// Add one pin (nesting) to a resident entry. False if absent.
+    fn pin(&self, key: u64) -> bool {
+        let mut inner = self.lock();
+        match Self::idx(&inner, key) {
+            Some(i) => {
+                inner.entries[i].pins += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop one pin. If that was the last pin of a doomed entry, the entry
+    /// dies and its handle moves to the graveyard.
+    fn unpin(&self, key: u64) -> bool {
+        let mut inner = self.lock();
+        match Self::idx(&inner, key) {
+            Some(i) if inner.entries[i].pins > 0 => {
+                inner.entries[i].pins -= 1;
+                if inner.entries[i].pins == 0 && inner.entries[i].doomed {
+                    let e = inner.entries.swap_remove(i);
+                    inner.stats.resident_bytes -= e.bytes;
+                    inner.graveyard.push(e.handle);
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn pin_count(&self, key: u64) -> u32 {
+        let inner = self.lock();
+        Self::idx(&inner, key).map(|i| inner.entries[i].pins).unwrap_or(0)
+    }
+
+    /// Release `key`'s entry. Unpinned: removed now, handle returned (plus
+    /// any graveyard backlog). Pinned by anyone: the entry is doomed and
+    /// its handle deferred to the graveyard at last unpin. Returns
+    /// `(handles, deferred?)`.
+    fn release(&self, key: u64) -> (Vec<H>, bool) {
+        let mut inner = self.lock();
+        let mut out: Vec<H> = inner.graveyard.drain(..).collect();
+        inner.stats.released += out.len() as u64;
+        let mut deferred = false;
+        if let Some(i) = Self::idx(&inner, key) {
+            if inner.entries[i].pins > 0 {
+                inner.entries[i].doomed = true;
+                inner.stats.deferred_releases += 1;
+                deferred = true;
+            } else {
+                let e = inner.entries.swap_remove(i);
+                inner.stats.released += 1;
+                inner.stats.resident_bytes -= e.bytes;
+                out.push(e.handle);
+            }
+        }
+        (out, deferred)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-stream view
+// ---------------------------------------------------------------------------
+
+/// A per-stream view over a [`SharedKvCache`] pool: the handle every
+/// serving path holds. Carries the stream's own [`CacheStats`], its
+/// cluster-id → content-key bindings, the pins it holds (released on drop),
+/// and any outstanding install reservations (aborted on drop, so waiters on
+/// another thread never hang on an unwound stream).
+///
+/// [`KvCacheManager::new`] wraps a fresh private pool — single-stream
+/// behaviour, metric-for-metric the PR 3 manager. [`shared_view`] attaches
+/// to an existing pool for cross-stream sharing.
+///
+/// [`shared_view`]: KvCacheManager::shared_view
+pub struct KvCacheManager<H> {
+    shared: Arc<SharedKvCache<H>>,
+    stream: u64,
+    private: bool,
+    /// cluster id → pool key (content hash when bound, view-salted id
+    /// otherwise).
+    binds: HashMap<usize, u64>,
+    /// pool keys this view currently holds pins on (pin-count each).
+    held_pins: HashMap<u64, u32>,
+    /// pool keys this view holds install reservations for.
+    reserved: Vec<u64>,
+    /// this stream's own counters (residency fields filled at `stats()`).
+    view: CacheStats,
 }
 
 impl<H> Default for KvCacheManager<H> {
@@ -116,220 +678,322 @@ impl<H> Default for KvCacheManager<H> {
 }
 
 impl<H> KvCacheManager<H> {
+    /// A view over a fresh private pool: exactly the single-stream manager
+    /// the serial serving paths have always used.
     pub fn new(policy: CachePolicy) -> Self {
-        assert!(policy.max_entries >= 1, "policy must admit at least one entry");
-        KvCacheManager { policy, entries: Vec::new(), tick: 0, stats: CacheStats::default() }
+        Self::view_over(Arc::new(SharedKvCache::new(policy)), true)
+    }
+
+    /// A view over an existing shared pool (one per concurrent stream).
+    pub fn shared_view(shared: &Arc<SharedKvCache<H>>) -> Self {
+        Self::view_over(Arc::clone(shared), false)
+    }
+
+    fn view_over(shared: Arc<SharedKvCache<H>>, private: bool) -> Self {
+        let stream = shared.register_stream();
+        KvCacheManager {
+            shared,
+            stream,
+            private,
+            binds: HashMap::new(),
+            held_pins: HashMap::new(),
+            reserved: Vec::new(),
+            view: CacheStats::default(),
+        }
     }
 
     pub fn policy(&self) -> CachePolicy {
-        self.policy
+        self.shared.policy()
     }
 
-    fn bump(&mut self) -> u64 {
-        self.tick += 1;
-        self.tick
+    /// Stream id of this view (diagnostics; unique per pool).
+    pub fn stream_id(&self) -> u64 {
+        self.stream
     }
 
-    fn idx(&self, cluster_id: usize) -> Option<usize> {
-        self.entries.iter().position(|e| e.cluster_id == cluster_id)
+    pub fn is_shared(&self) -> bool {
+        !self.private
     }
 
-    /// Install the KV cache of `cluster_id`'s representative subgraph. The
-    /// entry is admitted **pinned** (call [`unpin`] once the cluster's
-    /// in-flight work completes). Returns every handle the caller must
-    /// release on the engine: entries evicted to make room, an unpinned
-    /// same-cluster entry this install replaces, or — if the cluster is
-    /// already resident *and pinned* — the rejected new `handle` itself
-    /// (the warm in-flight entry wins).
-    ///
-    /// [`unpin`]: KvCacheManager::unpin
+    /// The pool this view is attached to (for pool-level stats/drain).
+    pub fn pool(&self) -> &Arc<SharedKvCache<H>> {
+        &self.shared
+    }
+
+    /// View-salted fallback key: unique per (view, cluster), so unbound
+    /// clusters behave exactly like PR 3's per-stream-private entries.
+    fn private_key(&self, cluster_id: usize) -> u64 {
+        // splitmix of the (stream, cluster) pair; streams are unique per
+        // pool so two views can never collide on a fallback key.
+        crate::util::rng::splitmix64(
+            self.stream
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(cluster_id as u64)
+                .wrapping_add(0xD1B54A32D192ED03),
+        )
+    }
+
+    /// Key for a cluster id without memoizing (for `&self` accessors).
+    fn key_of(&self, cluster_id: usize) -> u64 {
+        self.binds.get(&cluster_id).copied().unwrap_or_else(|| self.private_key(cluster_id))
+    }
+
+    /// Key for a cluster id, memoized so `resident_clusters` can invert it.
+    fn key_for(&mut self, cluster_id: usize) -> u64 {
+        let fallback = self.private_key(cluster_id);
+        *self.binds.entry(cluster_id).or_insert(fallback)
+    }
+
+    /// Bind a cluster to its representative's content key, enabling
+    /// cross-stream sharing for it. Only meaningful on shared views —
+    /// private views keep PR 3's per-cluster-private behaviour (a no-op
+    /// here), so single-stream serving stays metric-for-metric identical
+    /// to the serial path. Must be called before the cluster's first
+    /// lookup; rebinding an already-bound cluster is a bug.
+    pub fn bind(&mut self, cluster_id: usize, key: RepKey) {
+        if self.private {
+            return;
+        }
+        let prev = self.binds.insert(cluster_id, key.0);
+        debug_assert!(prev.is_none() || prev == Some(key.0),
+                      "cluster {cluster_id} rebound to a different key");
+    }
+
+    fn note_pin(&mut self, key: u64) {
+        *self.held_pins.entry(key).or_insert(0) += 1;
+    }
+
+    /// Look up the cluster's entry. A hit refreshes LRU, records the
+    /// stream's hit stats, and takes one pin for the caller. A miss
+    /// reserves the key: the caller must [`install`](Self::install) or
+    /// [`abort_install`](Self::abort_install). Blocks while another stream
+    /// installs the same key, then hits the fresh entry — the single-flight
+    /// discipline that makes N racing streams pay one prefill.
+    pub fn lookup(&mut self, cluster_id: usize) -> Lookup {
+        let key = self.key_for(cluster_id);
+        let (outcome, bytes, shared) = self.shared.lookup_or_reserve(self.stream, key);
+        match outcome {
+            Lookup::Hit => {
+                self.note_pin(key);
+                self.view.hits += 1;
+                self.view.bytes_saved += bytes as u64;
+                if shared {
+                    self.view.shared_hits += 1;
+                    self.view.dedup_bytes_saved += bytes as u64;
+                }
+            }
+            Lookup::MustInstall => {
+                self.view.misses += 1;
+                self.reserved.push(key);
+            }
+        }
+        outcome
+    }
+
+    /// Install the KV cache of `cluster_id`'s representative, fulfilling
+    /// the reservation its `lookup` miss took (reservation-free installs —
+    /// the in-batch pipeline's pattern — are also fine). The entry is
+    /// admitted with one pin held by this view. Returns every handle the
+    /// caller must release on the engine: budget evictions, a replaced
+    /// same-key entry, the rejected new handle itself if a pinned resident
+    /// won the race, and any deferred-release backlog.
     pub fn install(&mut self, cluster_id: usize, handle: H, bytes: usize) -> Vec<H> {
-        // peak is taken up front: the incoming cache coexists on the device
-        // with every current resident — including any entries about to be
-        // evicted or replaced — until the caller releases the returned
-        // handles, so this transient sum is the honest high-water mark.
-        self.stats.peak_bytes =
-            self.stats.peak_bytes.max(self.stats.resident_bytes + bytes);
-        let mut out = Vec::new();
-        // re-installing a cluster replaces its entry (e.g. a representative
-        // rebuilt after eviction raced with a concurrent admission) — unless
-        // the resident entry is pinned: an in-flight extend may hold its
-        // handle, so the only safe answer is to keep it and hand the NEW
-        // handle straight back for release.
-        if let Some(i) = self.idx(cluster_id) {
-            if self.entries[i].pins > 0 {
-                self.stats.released += 1;
-                return vec![handle];
-            }
-            // replacement is not budget pressure: count the returned handle
-            // in `released` only, never in `evictions`.
-            let e = self.entries.swap_remove(i);
-            self.stats.released += 1;
-            self.stats.resident_bytes -= e.bytes;
-            out.push(e.handle);
+        let key = self.key_for(cluster_id);
+        self.reserved.retain(|&k| k != key);
+        let got = self.shared.install(self.stream, key, handle, bytes);
+        self.note_pin(key);
+        self.view.prefills += 1;
+        self.view.evictions += got.evictions;
+        self.view.released += got.out.len() as u64;
+        got.out
+    }
+
+    /// Cancel this view's install reservation of a cluster (error paths;
+    /// dropping the view aborts all of them).
+    pub fn abort_install(&mut self, cluster_id: usize) {
+        let key = self.key_of(cluster_id);
+        if let Some(i) = self.reserved.iter().position(|&k| k == key) {
+            self.reserved.swap_remove(i);
+            self.shared.abort_install(self.stream, key);
         }
-        let last_used = self.bump();
-        self.stats.prefills += 1;
-        self.stats.resident_bytes += bytes;
-        self.entries.push(Entry { cluster_id, handle, bytes, pins: 1, last_used });
-        while self.over_budget() {
-            match self.lru_unpinned() {
-                Some(i) => out.push(self.evict_at(i)),
-                None => break, // only pinned entries left: run over budget
-            }
-        }
-        out
     }
 
-    fn over_budget(&self) -> bool {
-        self.stats.resident_bytes > self.policy.max_bytes
-            || self.entries.len() > self.policy.max_entries
-    }
-
-    fn lru_unpinned(&self) -> Option<usize> {
-        self.entries
-            .iter()
-            .enumerate()
-            .filter(|(_, e)| e.pins == 0)
-            .min_by_key(|(_, e)| e.last_used)
-            .map(|(i, _)| i)
-    }
-
-    fn evict_at(&mut self, i: usize) -> H {
-        let e = self.entries.swap_remove(i);
-        self.stats.evictions += 1;
-        self.stats.released += 1;
-        self.stats.resident_bytes -= e.bytes;
-        e.handle
-    }
-
-    /// Look up the resident cache for a cluster. A hit refreshes the entry's
-    /// LRU position and counts the avoided prefill bytes as saved.
-    pub fn lookup(&mut self, cluster_id: usize) -> Option<&H> {
-        match self.idx(cluster_id) {
-            Some(i) => {
-                let t = self.bump();
-                let bytes = {
-                    let e = &mut self.entries[i];
-                    e.last_used = t;
-                    e.bytes
-                };
-                self.stats.hits += 1;
-                self.stats.bytes_saved += bytes as u64;
-                Some(&self.entries[i].handle)
-            }
-            None => {
-                self.stats.misses += 1;
-                None
-            }
-        }
+    /// Borrow the resident handle under the pool lock. Keep `f` short and
+    /// non-blocking: enqueueing a backend submit is the intended use. The
+    /// caller should hold a pin (lookup/install) so the entry cannot vanish
+    /// between its hit and this access.
+    pub fn with_handle<R>(&self, cluster_id: usize, f: impl FnOnce(&H) -> R) -> Option<R> {
+        self.shared.with_handle(self.key_of(cluster_id), f)
     }
 
     /// Non-mutating residency probe (no stats, no LRU refresh).
     pub fn contains(&self, cluster_id: usize) -> bool {
-        self.idx(cluster_id).is_some()
+        self.shared.contains(self.key_of(cluster_id))
     }
 
-    /// Borrow a resident handle without touching stats or LRU order — for
-    /// serving code that already recorded the hit with [`lookup`].
-    ///
-    /// [`lookup`]: KvCacheManager::lookup
-    pub fn peek(&self, cluster_id: usize) -> Option<&H> {
-        self.idx(cluster_id).map(|i| &self.entries[i].handle)
-    }
-
-    /// Protect a resident entry from eviction (pins nest). Returns false if
-    /// the cluster is not resident.
+    /// Protect a resident entry from eviction (pins nest, and count toward
+    /// the global pin total). Returns false if the cluster is not resident.
     pub fn pin(&mut self, cluster_id: usize) -> bool {
-        match self.idx(cluster_id) {
-            Some(i) => {
-                self.entries[i].pins += 1;
-                true
-            }
-            None => false,
+        let key = self.key_for(cluster_id);
+        if self.shared.pin(key) {
+            self.note_pin(key);
+            true
+        } else {
+            false
         }
     }
 
-    /// Drop one pin from a resident entry. Returns false if the cluster is
-    /// not resident or was not pinned.
+    /// Drop one pin *this view holds*. Returns false if the view holds none
+    /// for the cluster — a view can never unpin another stream's pin.
     pub fn unpin(&mut self, cluster_id: usize) -> bool {
-        match self.idx(cluster_id) {
-            Some(i) if self.entries[i].pins > 0 => {
-                self.entries[i].pins -= 1;
-                true
-            }
-            _ => false,
+        let key = self.key_of(cluster_id);
+        let held = match self.held_pins.get(&key).copied() {
+            Some(n) if n > 0 => n,
+            _ => return false,
+        };
+        if held == 1 {
+            self.held_pins.remove(&key);
+        } else {
+            self.held_pins.insert(key, held - 1);
         }
+        self.shared.unpin(key)
     }
 
+    /// Whether ANY stream currently pins the cluster's entry.
     pub fn is_pinned(&self, cluster_id: usize) -> bool {
         self.pin_count(cluster_id) > 0
     }
 
-    /// Current pin count of a resident entry (0 when absent). Pins nest,
-    /// and under pipelined serving they are the lifetime anchor for
-    /// in-flight engine tickets: a cluster is pinned from before its
-    /// prefill/extend ticket is submitted until after `wait` returns, so
-    /// host-side overlap work running in the ticket's shadow can never
-    /// admit an entry that evicts the one the device is still reading.
+    /// Global pin count of the cluster's entry (0 when absent): the sum of
+    /// every stream's pins, which is what eviction/TTL safety needs. Under
+    /// pipelined serving pins are the lifetime anchor for in-flight engine
+    /// tickets: a cluster is pinned from before its prefill/extend ticket
+    /// is submitted until after `wait` returns, so no concurrent admission,
+    /// sweep, or other stream can release an entry the device still reads.
     pub fn pin_count(&self, cluster_id: usize) -> u32 {
-        self.idx(cluster_id).map(|i| self.entries[i].pins).unwrap_or(0)
+        self.shared.pin_count(self.key_of(cluster_id))
     }
 
-    /// Explicitly release one cluster's cache (pins are the caller's own
-    /// bookkeeping at this point and are discarded). Returns its handle.
-    pub fn release(&mut self, cluster_id: usize) -> Option<H> {
-        self.idx(cluster_id).map(|i| {
-            let e = self.entries.swap_remove(i);
-            self.stats.released += 1;
-            self.stats.resident_bytes -= e.bytes;
-            e.handle
-        })
+    /// Pins this view itself holds on the cluster's entry.
+    pub fn own_pin_count(&self, cluster_id: usize) -> u32 {
+        self.held_pins.get(&self.key_of(cluster_id)).copied().unwrap_or(0)
     }
 
-    /// Drain every resident entry (end of batch), pinned or not. Returns all
-    /// handles for the caller to release on the engine.
-    pub fn release_all(&mut self) -> Vec<H> {
-        let mut drained = Vec::with_capacity(self.entries.len());
-        for e in self.entries.drain(..) {
-            drained.push(e.handle);
+    /// Release one cluster's entry (TTL sweeps). Unpinned: handles come
+    /// back now. Pinned by any stream: deferred — the entry is doomed and
+    /// its handle surfaces through a later drain. Either way the returned
+    /// vector includes any deferred-release backlog that became safe.
+    pub fn release(&mut self, cluster_id: usize) -> Vec<H> {
+        let key = self.key_of(cluster_id);
+        let (out, deferred) = self.shared.release(key);
+        if deferred {
+            self.view.deferred_releases += 1;
         }
-        self.stats.released += drained.len() as u64;
-        self.stats.resident_bytes = 0;
-        drained
+        self.view.released += out.len() as u64;
+        out
     }
 
+    /// TTL-expire this stream's interest in a cluster. On a private view
+    /// the entry is released now (the serial PR 3 semantics). On a shared
+    /// view the entry may be another stream's warm hit — one stream's
+    /// cluster staleness says nothing about the pool-global recency the
+    /// entry's LRU position tracks — so only this stream's binding is
+    /// dropped: the content stays resident for the fleet, and reclamation
+    /// belongs to the byte budget (LRU at install) and the end-of-run
+    /// drain. Re-opening a same-content cluster later simply re-binds the
+    /// key and hits the still-warm entry. Call only when the view holds no
+    /// pins for the cluster (the TTL sweep's pin check guarantees this —
+    /// pins are tracked by key, so even a misuse is cleaned up by drop).
+    pub fn expire(&mut self, cluster_id: usize) -> Vec<H> {
+        if self.private {
+            self.release(cluster_id)
+        } else {
+            self.binds.remove(&cluster_id);
+            Vec::new()
+        }
+    }
+
+    /// End-of-stream cleanup. Private view: drain the whole pool (the
+    /// serial paths' behaviour), pinned or not. Shared view: drop only this
+    /// stream's pins and reservations — other streams' entries stay warm —
+    /// and return any deferred handles that became safe; the pool owner
+    /// drains the rest via [`SharedKvCache::drain_all`] once every stream
+    /// is done.
+    pub fn release_all(&mut self) -> Vec<H> {
+        self.drop_holds();
+        let out = if self.private {
+            self.shared.drain_all()
+        } else {
+            self.shared.collect_deferred()
+        };
+        self.view.released += out.len() as u64;
+        out
+    }
+
+    /// Abort reservations and drop held pins (shared Drop/cleanup path).
+    fn drop_holds(&mut self) {
+        for key in std::mem::take(&mut self.reserved) {
+            self.shared.abort_install(self.stream, key);
+        }
+        for (key, n) in std::mem::take(&mut self.held_pins) {
+            for _ in 0..n {
+                self.shared.unpin(key);
+            }
+        }
+    }
+
+    /// Entries resident in the underlying pool (all streams').
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.shared.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.shared.is_empty()
     }
 
     pub fn resident_bytes(&self) -> usize {
-        self.stats.resident_bytes
+        self.shared.resident_bytes()
     }
 
-    /// Resident cluster ids, sorted (deterministic for tests/diagnostics).
+    /// This view's resident cluster ids, sorted (deterministic for tests).
     pub fn resident_clusters(&self) -> Vec<usize> {
-        let mut ids: Vec<usize> = self.entries.iter().map(|e| e.cluster_id).collect();
+        let mut ids: Vec<usize> = self
+            .binds
+            .iter()
+            .filter(|(_, &key)| self.shared.contains(key))
+            .map(|(&cid, _)| cid)
+            .collect();
         ids.sort_unstable();
         ids
     }
 
+    /// This stream's accounting, with pool-level residency: `hits`/
+    /// `misses`/`prefills`/`evictions`/`released`/`bytes_saved` (and the
+    /// `shared_hits`/`dedup_bytes_saved` cross-stream split) count this
+    /// view's own operations; `resident_bytes`/`peak_bytes` snapshot the
+    /// pool. For a private view the two coincide with the pool totals.
     pub fn stats(&self) -> CacheStats {
-        self.stats
+        let pool = self.shared.stats();
+        CacheStats {
+            resident_bytes: pool.resident_bytes,
+            peak_bytes: pool.peak_bytes,
+            ..self.view
+        }
     }
 }
 
-// No Drop assertion: the serve paths legitimately drop a manager with
-// entries still resident when an engine call errors mid-batch (`?` unwinds
-// past the end-of-batch `release_all` drain). The handles inside are
-// engine-owned ids — the engine reclaims their buffers at shutdown — so the
-// cost of an early drop is a bounded leak for the engine's lifetime, not
-// corruption. Success paths drain via `release_all` (checked by the e2e
-// `live_kv` leak tests) so buffers free promptly.
+impl<H> Drop for KvCacheManager<H> {
+    /// A view dropped mid-error must not strand other streams: outstanding
+    /// install reservations are aborted (waiters wake and re-race) and this
+    /// stream's pins are dropped (its in-flight tickets are dead by now).
+    /// Handles the pool still holds are NOT drained here — the serve paths
+    /// drain on success via `release_all`/`drain_all`; after an unwind the
+    /// pool's handles are engine-owned ids the engine reclaims at shutdown
+    /// (a bounded leak, not corruption).
+    fn drop(&mut self) {
+        self.drop_holds();
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -340,21 +1004,38 @@ mod tests {
         KvCacheManager::new(CachePolicy::unbounded())
     }
 
+    /// install used to return with the caller holding exactly one pin.
+    fn serve_install(m: &mut KvCacheManager<u32>, cid: usize, h: u32, bytes: usize)
+                     -> Vec<u32> {
+        // serving paths reserve via a lookup miss first; tests that install
+        // blind (the in-batch pipeline pattern) call m.install directly.
+        assert!(!m.lookup(cid).is_hit(), "expected a miss for cid {cid}");
+        m.install(cid, h, bytes)
+    }
+
     #[test]
     fn install_lookup_release_cycle() {
         let mut m: KvCacheManager<u32> = unbounded();
-        assert!(m.lookup(0).is_none());
+        assert_eq!(m.lookup(0), Lookup::MustInstall);
         assert!(m.install(0, 111, 1024).is_empty());
-        assert_eq!(m.lookup(0), Some(&111));
-        assert_eq!(m.lookup(0), Some(&111));
-        assert!(m.lookup(1).is_none()); // other cluster: miss, no eviction
+        assert!(m.lookup(0).is_hit());
+        assert!(m.lookup(0).is_hit());
+        assert_eq!(m.lookup(1), Lookup::MustInstall); // other cluster: miss
+        m.abort_install(1);
+        assert_eq!(m.with_handle(0, |h| *h), Some(111));
         assert_eq!(m.resident_clusters(), vec![0]);
-        m.unpin(0);
-        assert_eq!(m.release(0), Some(111));
-        assert!(m.lookup(0).is_none());
+        // 3 pins held: install + two lookup hits
+        assert_eq!(m.own_pin_count(0), 3);
+        for _ in 0..3 {
+            assert!(m.unpin(0));
+        }
+        assert_eq!(m.release(0), vec![111]);
+        assert_eq!(m.lookup(0), Lookup::MustInstall);
+        m.abort_install(0);
         let s = m.stats();
         assert_eq!((s.prefills, s.hits, s.misses, s.released), (1, 2, 3, 1));
         assert_eq!(s.bytes_saved, 2 * 1024);
+        assert_eq!(s.shared_hits, 0, "a private view never counts shared hits");
         assert_eq!(s.resident_bytes, 0);
         assert_eq!(s.peak_bytes, 1024);
         assert!((s.hit_rate() - 0.4).abs() < 1e-12);
@@ -364,12 +1045,14 @@ mod tests {
     fn multiple_residents_under_budget() {
         let mut m: KvCacheManager<u32> = KvCacheManager::new(CachePolicy::new(1000, 8));
         for cid in 0..3 {
-            assert!(m.install(cid, cid as u32, 100).is_empty());
+            assert!(serve_install(&mut m, cid, cid as u32, 100).is_empty());
             m.unpin(cid);
         }
         assert_eq!(m.len(), 3);
         for cid in 0..3 {
-            assert_eq!(m.lookup(cid), Some(&(cid as u32)));
+            assert!(m.lookup(cid).is_hit());
+            assert_eq!(m.with_handle(cid, |h| *h), Some(cid as u32));
+            m.unpin(cid);
         }
         assert_eq!(m.resident_bytes(), 300);
         let drained = m.release_all();
@@ -379,12 +1062,13 @@ mod tests {
     #[test]
     fn lru_eviction_under_entry_budget() {
         let mut m: KvCacheManager<u32> = KvCacheManager::new(CachePolicy::new(usize::MAX, 2));
-        m.install(0, 10, 1);
+        serve_install(&mut m, 0, 10, 1);
         m.unpin(0);
-        m.install(1, 11, 1);
+        serve_install(&mut m, 1, 11, 1);
         m.unpin(1);
-        m.lookup(0); // 0 is now more recently used than 1
-        let evicted = m.install(2, 12, 1);
+        assert!(m.lookup(0).is_hit()); // 0 now more recently used than 1
+        m.unpin(0);
+        let evicted = serve_install(&mut m, 2, 12, 1);
         assert_eq!(evicted, vec![11], "LRU entry (cluster 1) must go first");
         assert_eq!(m.resident_clusters(), vec![0, 2]);
         m.unpin(2);
@@ -394,13 +1078,13 @@ mod tests {
     #[test]
     fn byte_budget_evicts_down() {
         let mut m: KvCacheManager<u32> = KvCacheManager::new(CachePolicy::new(250, 8));
-        m.install(0, 10, 100);
+        serve_install(&mut m, 0, 10, 100);
         m.unpin(0);
-        m.install(1, 11, 100);
+        serve_install(&mut m, 1, 11, 100);
         m.unpin(1);
-        // 100 + 100 + 100 > 250: the two oldest unpinned entries fall out
-        // until the budget holds again.
-        let evicted = m.install(2, 12, 100);
+        // 100 + 100 + 100 > 250: the oldest unpinned entry falls out until
+        // the budget holds again.
+        let evicted = serve_install(&mut m, 2, 12, 100);
         assert_eq!(evicted, vec![10]);
         assert_eq!(m.resident_bytes(), 200);
         m.unpin(2);
@@ -410,13 +1094,13 @@ mod tests {
     #[test]
     fn pinned_entries_survive_eviction_pressure() {
         let mut m: KvCacheManager<u32> = KvCacheManager::new(CachePolicy::new(usize::MAX, 1));
-        m.install(0, 10, 1); // still pinned (in-flight)
-        let evicted = m.install(1, 11, 1);
+        serve_install(&mut m, 0, 10, 1); // still pinned (in-flight)
+        let evicted = serve_install(&mut m, 1, 11, 1);
         assert!(evicted.is_empty(), "pinned cluster 0 must not be evicted");
         assert_eq!(m.len(), 2, "over budget rather than evict pinned");
         m.unpin(0);
         // next admission can now reclaim cluster 0
-        let evicted = m.install(2, 12, 1);
+        let evicted = serve_install(&mut m, 2, 12, 1);
         assert_eq!(evicted, vec![10]);
         m.unpin(1);
         m.unpin(2);
@@ -428,9 +1112,9 @@ mod tests {
         // max_entries = 1 with unpin-before-next-install reproduces the
         // seed's one-slot behaviour: each install evicts the previous.
         let mut m: KvCacheManager<u32> = KvCacheManager::new(CachePolicy::single_resident());
-        m.install(0, 1, 10);
+        serve_install(&mut m, 0, 1, 10);
         m.unpin(0);
-        let evicted = m.install(1, 2, 20);
+        let evicted = serve_install(&mut m, 1, 2, 20);
         assert_eq!(evicted, vec![1]);
         assert_eq!(m.resident_clusters(), vec![1]);
         assert_eq!(m.stats().peak_bytes, 30); // both resident inside install
@@ -445,8 +1129,10 @@ mod tests {
         m.unpin(0);
         let evicted = m.install(0, 2, 20);
         assert_eq!(evicted, vec![1]);
-        assert_eq!(m.lookup(0), Some(&2));
+        assert!(m.lookup(0).is_hit());
+        assert_eq!(m.with_handle(0, |h| *h), Some(2));
         assert_eq!(m.resident_bytes(), 20);
+        m.unpin(0);
         m.unpin(0);
         m.release_all();
     }
@@ -454,16 +1140,126 @@ mod tests {
     #[test]
     fn reinstall_over_pinned_cluster_rejects_new_handle() {
         // An in-flight (pinned) entry may be mid-extend: a racing duplicate
-        // install must not evict it. The new handle comes straight back.
+        // install must not evict it. The new handle comes straight back,
+        // and the caller still ends up holding a pin (so its unpin at
+        // finalize balances).
         let mut m: KvCacheManager<u32> = unbounded();
         m.install(0, 1, 10); // still pinned
         let returned = m.install(0, 2, 20);
         assert_eq!(returned, vec![2], "new handle rejected, not the resident one");
-        assert_eq!(m.peek(0), Some(&1), "in-flight entry survives untouched");
+        assert_eq!(m.with_handle(0, |h| *h), Some(1), "in-flight entry survives");
         assert_eq!(m.resident_bytes(), 10);
         assert_eq!(m.stats().evictions, 0);
+        assert_eq!(m.pin_count(0), 2, "rejecting install still pins for its caller");
+        m.unpin(0);
         m.unpin(0);
         m.release_all();
+    }
+
+    #[test]
+    fn release_of_pinned_entry_is_deferred_until_last_unpin() {
+        // The cross-stream hazard the doomed flag exists for, in one view:
+        // a release while pinned must NOT return the handle (the device may
+        // still read it); it surfaces at the next drain after the last
+        // unpin.
+        let mut m: KvCacheManager<u32> = unbounded();
+        m.install(0, 7, 10); // pinned (in-flight)
+        assert!(m.release(0).is_empty(), "pinned release defers the handle");
+        assert_eq!(m.stats().deferred_releases, 1);
+        assert!(m.contains(0), "doomed entry stays resident while pinned");
+        assert!(m.unpin(0));
+        assert!(!m.contains(0), "last unpin reclaims the doomed entry");
+        assert_eq!(m.resident_bytes(), 0);
+        let drained = m.release_all();
+        assert_eq!(drained, vec![7], "handle surfaces exactly once, at the drain");
+    }
+
+    #[test]
+    fn doomed_entry_resurrected_by_a_hit() {
+        let mut m: KvCacheManager<u32> = unbounded();
+        m.install(0, 7, 10);
+        assert!(m.release(0).is_empty()); // doomed (install pin still held)
+        assert!(m.lookup(0).is_hit(), "a hit resurrects the doomed entry");
+        m.unpin(0); // lookup pin
+        m.unpin(0); // install pin
+        assert!(m.contains(0), "resurrected entry survives its last unpin");
+        assert_eq!(m.release(0), vec![7]);
+    }
+
+    #[test]
+    fn doomed_entry_resurrected_by_a_racing_install() {
+        // install over a pinned doomed entry re-demands its content: like a
+        // lookup hit, it must clear the doom — the caller would otherwise
+        // hold a pin on an entry scheduled to die under it.
+        let mut m: KvCacheManager<u32> = unbounded();
+        m.install(0, 7, 10); // pinned
+        assert!(m.release(0).is_empty()); // doomed
+        let returned = m.install(0, 8, 10); // rejected, but resurrects
+        assert_eq!(returned, vec![8]);
+        m.unpin(0); // first install's pin
+        m.unpin(0); // second install's pin
+        assert!(m.contains(0), "re-demanded entry survives its last unpin");
+        assert_eq!(m.release(0), vec![7]);
+    }
+
+    #[test]
+    fn expire_on_shared_view_keeps_the_fleet_entry_warm() {
+        // One stream's TTL staleness must not reclaim an entry another
+        // stream is actively hitting: expire only drops the binding.
+        let pool: Arc<SharedKvCache<u32>> =
+            Arc::new(SharedKvCache::new(CachePolicy::unbounded()));
+        let mut a = KvCacheManager::shared_view(&pool);
+        let mut b = KvCacheManager::shared_view(&pool);
+        let key = RepKey::of_parts(["bb"], [4]);
+        a.bind(0, key);
+        b.bind(0, key);
+        assert_eq!(a.lookup(0), Lookup::MustInstall);
+        a.install(0, 5, 10);
+        a.unpin(0);
+        assert!(a.expire(0).is_empty(), "shared expiry returns no handles");
+        assert!(b.lookup(0).is_hit(), "B keeps hitting the warm entry");
+        b.unpin(0);
+        // A re-opens a same-content cluster later: re-bind, still warm.
+        a.bind(3, key);
+        assert!(a.lookup(3).is_hit());
+        a.unpin(3);
+        assert_eq!(pool.stats().prefills, 1, "expiry never forced a re-prefill");
+        assert_eq!(pool.drain_all(), vec![5]);
+
+        // a PRIVATE view's expire keeps the serial release-now semantics.
+        let mut p: KvCacheManager<u32> = unbounded();
+        p.install(0, 9, 10);
+        p.unpin(0);
+        assert_eq!(p.expire(0), vec![9]);
+    }
+
+    #[test]
+    fn blind_install_resolves_a_foreign_reservation() {
+        // The in-batch pipeline installs without a reservation; if another
+        // stream holds one for the same key, the install must resolve it —
+        // a pending entry may never shadow a resident key (the invariant
+        // `consistent()` checks), and the reserving stream's own install
+        // then lands on the resident branch.
+        let pool: Arc<SharedKvCache<u32>> =
+            Arc::new(SharedKvCache::new(CachePolicy::unbounded()));
+        let mut a = KvCacheManager::shared_view(&pool);
+        let mut b = KvCacheManager::shared_view(&pool);
+        let key = RepKey::of_parts(["bb"], [6]);
+        a.bind(0, key);
+        b.bind(0, key);
+        assert_eq!(a.lookup(0), Lookup::MustInstall); // A holds the reservation
+        let out = b.install(0, 21, 10); // B installs blind
+        assert!(out.is_empty());
+        assert!(pool.consistent(), "pending must not shadow the resident key");
+        // A's install (it was mid-"prefill") lands on the pinned resident:
+        // its handle comes straight back and A still ends up pinned.
+        let returned = a.install(0, 22, 10);
+        assert_eq!(returned, vec![22]);
+        assert_eq!(a.pin_count(0), 2);
+        a.unpin(0);
+        b.unpin(0);
+        assert_eq!(pool.stats().prefills, 2, "both installs count as paid prefills");
+        assert_eq!(pool.drain_all(), vec![21]);
     }
 
     #[test]
@@ -482,19 +1278,17 @@ mod tests {
                 }
                 let h = next;
                 next += 1;
-                m.install(cid, h, rng.range(1, 120));
+                if !m.lookup(cid).is_hit() {
+                    m.install(cid, h, rng.range(1, 120));
+                }
                 // the invariant holds at install time (eviction only runs
                 // there): within budget, or nothing evictable remains.
                 // It must be checked BEFORE the coin-flip unpin below —
                 // unpinning never triggers eviction, so an over-budget
                 // pinned admission legitimately stays over once unpinned,
                 // until the next install reclaims it.
-                let all_pinned =
-                    m.resident_clusters().iter().all(|&c| m.is_pinned(c));
                 assert!(
-                    (m.resident_bytes() <= policy.max_bytes
-                        && m.len() <= policy.max_entries)
-                        || all_pinned,
+                    m.pool().budget_ok(),
                     "over budget with evictable entries: {} bytes / {} entries",
                     m.resident_bytes(),
                     m.len()
@@ -521,8 +1315,10 @@ mod tests {
                         if !m.contains(cid) {
                             let h = next;
                             next += 1;
-                            m.install(cid, h, rng.range(1, 100));
-                            pinned.push(cid);
+                            if !m.lookup(cid).is_hit() {
+                                m.install(cid, h, rng.range(1, 100));
+                                pinned.push(cid);
+                            }
                         }
                     }
                     1 => {
@@ -533,7 +1329,12 @@ mod tests {
                         }
                     }
                     _ => {
-                        let _ = m.lookup(rng.below(8));
+                        let cid = rng.below(8);
+                        if m.lookup(cid).is_hit() {
+                            m.unpin(cid); // probe only: release the hit pin
+                        } else {
+                            m.abort_install(cid);
+                        }
                     }
                 }
                 for &cid in &pinned {
@@ -547,9 +1348,9 @@ mod tests {
 
     #[test]
     fn every_handle_returned_exactly_once_property() {
-        // Mirrors the seed's at_most_one_resident_property at multi-resident
-        // scale: handles installed minus handles returned == handles resident,
-        // and nothing is returned twice.
+        // Handle conservation at multi-resident scale: handles installed
+        // minus handles returned == handles resident, and nothing is ever
+        // returned twice — now including the doomed/deferred path.
         prop_check(150, |rng| {
             let policy = CachePolicy::new(rng.range(20, 200), rng.range(1, 4));
             let mut m: KvCacheManager<u64> = KvCacheManager::new(policy);
@@ -571,19 +1372,27 @@ mod tests {
                         if !m.contains(cid) {
                             let h = next;
                             next += 1;
-                            live.push(h);
-                            let evicted = m.install(cid, h, rng.range(1, 80));
-                            take(evicted, &mut live, &mut returned);
-                            m.unpin(cid);
+                            if m.lookup(cid).is_hit() {
+                                m.unpin(cid);
+                            } else {
+                                live.push(h);
+                                let evicted = m.install(cid, h, rng.range(1, 80));
+                                take(evicted, &mut live, &mut returned);
+                                m.unpin(cid);
+                            }
                         }
                     }
                     2 => {
-                        let _ = m.lookup(rng.below(6));
+                        let cid = rng.below(6);
+                        if m.lookup(cid).is_hit() {
+                            m.unpin(cid);
+                        } else {
+                            m.abort_install(cid);
+                        }
                     }
                     3 => {
-                        if let Some(h) = m.release(rng.below(6)) {
-                            take(vec![h], &mut live, &mut returned);
-                        }
+                        let out = m.release(rng.below(6));
+                        take(out, &mut live, &mut returned);
                     }
                     _ => {
                         let drained = m.release_all();
@@ -596,7 +1405,6 @@ mod tests {
             take(drained, &mut live, &mut returned);
             assert!(live.is_empty(), "leaked handles: {live:?}");
             assert_eq!(m.stats().resident_bytes, 0);
-            assert_eq!(m.stats().released as usize, returned.len());
         });
     }
 
@@ -606,18 +1414,18 @@ mod tests {
         // extend submitted while the install pin is still held) must stack:
         // the entry survives budget pressure until the LAST ticket unpins.
         let mut m: KvCacheManager<u32> = KvCacheManager::new(CachePolicy::new(usize::MAX, 1));
-        m.install(0, 10, 1); // ticket 1 (install pin)
+        serve_install(&mut m, 0, 10, 1); // ticket 1 (install pin)
         assert_eq!(m.pin_count(0), 1);
         assert!(m.pin(0)); // ticket 2
         assert_eq!(m.pin_count(0), 2);
         m.unpin(0); // ticket 1 completes
         assert_eq!(m.pin_count(0), 1);
-        let evicted = m.install(1, 11, 1); // budget pressure: still pinned
+        let evicted = serve_install(&mut m, 1, 11, 1); // budget pressure: still pinned
         assert!(evicted.is_empty(), "cluster with a live ticket must survive");
         assert!(m.contains(0));
         m.unpin(0); // ticket 2 completes
         assert_eq!(m.pin_count(0), 0);
-        let evicted = m.install(2, 12, 1);
+        let evicted = serve_install(&mut m, 2, 12, 1);
         assert_eq!(evicted, vec![10], "unpinned entry finally reclaimable");
         assert_eq!(m.pin_count(99), 0, "absent cluster has no pins");
         m.unpin(1);
@@ -636,5 +1444,167 @@ mod tests {
         assert_eq!(m.stats().resident_bytes, 50);
         m.unpin(1);
         m.release(1);
+    }
+
+    // -- cross-view (shared pool) unit tests --------------------------------
+
+    #[test]
+    fn two_views_share_one_entry_by_content_key() {
+        let pool: Arc<SharedKvCache<u32>> =
+            Arc::new(SharedKvCache::new(CachePolicy::unbounded()));
+        let mut a = KvCacheManager::shared_view(&pool);
+        let mut b = KvCacheManager::shared_view(&pool);
+        let key = RepKey::of_parts(["backbone", "graph"], [1, 2, 3]);
+        a.bind(0, key);
+        b.bind(5, key); // different local cluster id, same content
+
+        assert_eq!(a.lookup(0), Lookup::MustInstall);
+        assert!(a.install(0, 42, 100).is_empty());
+        assert!(b.lookup(5).is_hit(), "B reuses A's entry via the content key");
+        assert_eq!(b.with_handle(5, |h| *h), Some(42));
+        assert_eq!(pool.stats().prefills, 1, "one prefill across both streams");
+        assert_eq!(b.stats().shared_hits, 1);
+        assert_eq!(b.stats().dedup_bytes_saved, 100);
+        assert_eq!(a.stats().shared_hits, 0, "the installer's own hits aren't shared");
+
+        a.unpin(0);
+        b.unpin(5);
+        assert!(a.release_all().is_empty(), "shared views never drain the pool");
+        assert!(b.release_all().is_empty());
+        assert_eq!(pool.drain_all(), vec![42]);
+        assert_eq!(pool.stats().resident_bytes, 0);
+    }
+
+    #[test]
+    fn unbound_clusters_stay_private_between_views() {
+        let pool: Arc<SharedKvCache<u32>> =
+            Arc::new(SharedKvCache::new(CachePolicy::unbounded()));
+        let mut a = KvCacheManager::shared_view(&pool);
+        let mut b = KvCacheManager::shared_view(&pool);
+        assert_eq!(a.lookup(0), Lookup::MustInstall);
+        a.install(0, 1, 10);
+        assert_eq!(b.lookup(0), Lookup::MustInstall,
+                   "same cluster id without a bind must not collide");
+        b.install(0, 2, 10);
+        assert_eq!(pool.stats().prefills, 2);
+        a.unpin(0);
+        b.unpin(0);
+        let mut drained = pool.drain_all();
+        drained.sort_unstable();
+        assert_eq!(drained, vec![1, 2]);
+    }
+
+    #[test]
+    fn release_by_one_stream_defers_past_another_streams_pin() {
+        // The satellite fix: stream A's TTL release of an entry stream B
+        // still pins must defer the handle, and it must surface exactly
+        // once after B unpins.
+        let pool: Arc<SharedKvCache<u32>> =
+            Arc::new(SharedKvCache::new(CachePolicy::unbounded()));
+        let mut a = KvCacheManager::shared_view(&pool);
+        let mut b = KvCacheManager::shared_view(&pool);
+        let key = RepKey::of_parts(["bb"], [9]);
+        a.bind(0, key);
+        b.bind(0, key);
+
+        assert_eq!(a.lookup(0), Lookup::MustInstall);
+        a.install(0, 77, 10);
+        a.unpin(0);
+        assert!(b.lookup(0).is_hit()); // B's in-flight pin
+
+        assert!(a.release(0).is_empty(), "A's release must defer, not free");
+        assert_eq!(a.stats().deferred_releases, 1);
+        assert_eq!(b.pin_count(0), 1, "B's pin survives A's release");
+        assert_eq!(b.with_handle(0, |h| *h), Some(77), "B's handle stays valid");
+
+        assert!(b.unpin(0));
+        let deferred = pool.collect_deferred();
+        assert_eq!(deferred, vec![77], "handle surfaces once B is done");
+        assert!(pool.collect_deferred().is_empty(), "and only once");
+        assert_eq!(pool.stats().resident_bytes, 0);
+    }
+
+    #[test]
+    fn eviction_skips_entries_pinned_by_other_streams() {
+        let pool: Arc<SharedKvCache<u32>> =
+            Arc::new(SharedKvCache::new(CachePolicy::new(usize::MAX, 1)));
+        let mut a = KvCacheManager::shared_view(&pool);
+        let mut b = KvCacheManager::shared_view(&pool);
+        let key = RepKey::of_parts(["bb"], [1]);
+        a.bind(0, key);
+        b.bind(0, key);
+        assert_eq!(a.lookup(0), Lookup::MustInstall);
+        a.install(0, 10, 1);
+        a.unpin(0);
+        assert!(b.lookup(0).is_hit()); // only B pins now
+
+        // A installs a different rep under a one-entry budget: B's pinned
+        // entry must survive (pool runs over budget instead).
+        assert_eq!(a.lookup(1), Lookup::MustInstall);
+        let evicted = a.install(1, 11, 1);
+        assert!(evicted.is_empty(), "cross-stream pinned entry must not be evicted");
+        assert_eq!(pool.len(), 2);
+
+        b.unpin(0);
+        a.unpin(1);
+        let evicted = {
+            assert_eq!(a.lookup(2), Lookup::MustInstall);
+            a.install(2, 12, 1)
+        };
+        assert!(!evicted.is_empty(), "unpinned entries evict normally again");
+        a.unpin(2);
+        pool.drain_all();
+    }
+
+    #[test]
+    fn view_drop_aborts_reservation_so_waiters_do_not_hang() {
+        use std::sync::mpsc::channel;
+        let pool: Arc<SharedKvCache<u32>> =
+            Arc::new(SharedKvCache::new(CachePolicy::unbounded()));
+        let key = RepKey::of_parts(["bb"], [3]);
+        let mut a = KvCacheManager::shared_view(&pool);
+        a.bind(0, key);
+        assert_eq!(a.lookup(0), Lookup::MustInstall); // reservation held
+
+        let pool2 = Arc::clone(&pool);
+        let (tx, rx) = channel();
+        let waiter = std::thread::spawn(move || {
+            let mut b = KvCacheManager::shared_view(&pool2);
+            b.bind(0, key);
+            tx.send(()).unwrap(); // about to block on A's reservation
+            let out = b.lookup(0);
+            b.abort_install(0);
+            out
+        });
+        rx.recv().unwrap();
+        // give the waiter time to actually park on the condvar
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        drop(a); // unwound installer: reservation must be aborted
+        let out = waiter.join().expect("waiter must not hang or panic");
+        assert_eq!(out, Lookup::MustInstall,
+                   "the waiter becomes the new installer after the abort");
+    }
+
+    #[test]
+    fn contention_counters_move_under_lock_traffic() {
+        let pool: Arc<SharedKvCache<u32>> =
+            Arc::new(SharedKvCache::new(CachePolicy::unbounded()));
+        let mut v = KvCacheManager::shared_view(&pool);
+        assert_eq!(v.lookup(0), Lookup::MustInstall);
+        v.install(0, 1, 1);
+        v.unpin(0);
+        let ls = pool.lock_stats();
+        assert!(ls.acquisitions >= 3, "every op takes the lock: {ls:?}");
+        assert!(ls.contended <= ls.acquisitions);
+        pool.drain_all();
+    }
+
+    #[test]
+    fn rep_key_is_content_sensitive() {
+        let k = |s: &'static str, ids: &[u64]| RepKey::of_parts([s], ids.iter().copied());
+        assert_eq!(k("bb", &[1, 2]), k("bb", &[1, 2]));
+        assert_ne!(k("bb", &[1, 2]), k("bb", &[2, 1]), "order matters");
+        assert_ne!(k("bb", &[1, 2]), k("bb2", &[1, 2]));
+        assert_ne!(RepKey::of_parts(["ab", "c"], []), RepKey::of_parts(["a", "bc"], []));
     }
 }

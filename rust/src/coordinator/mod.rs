@@ -16,6 +16,11 @@
 //!   the paper's §3 sketches: queries arrive one at a time, are matched to
 //!   the nearest existing cluster centroid (or open a new cluster), and
 //!   reuse a still-resident representative KV cache when one is warm.
+//!   [`Coordinator::serve_online_multi`] runs N such streams on worker
+//!   threads against ONE [`crate::cache::SharedKvCache`] pool, so identical
+//!   representatives across streams are prefilled once and shared
+//!   (cross-stream hits surface as [`crate::metrics::BatchMetrics::shared_hits`]
+//!   / `dedup_bytes_saved`, and pool totals in [`MultiStreamReport`]).
 //!
 //! # Latency accounting
 //!
@@ -65,6 +70,8 @@
 mod online;
 mod pipeline;
 mod session;
+
+pub use online::MultiStreamReport;
 
 use crate::cache::{CachePolicy, CacheStats};
 use crate::cluster::Linkage;

@@ -42,23 +42,52 @@
 //! verbalization, cache state, and result records advance strictly in
 //! stream order — only order-independent work moves into shadows.
 //!
+//! # Cross-stream sharing ([`Coordinator::serve_online_multi`])
+//!
+//! Many concurrent streams can serve against **one** [`SharedKvCache`] pool
+//! and one backend: each worker thread runs the same depth-k scheduler over
+//! its own [`KvCacheManager`] view. A stream that opens a cluster binds it
+//! to the representative's content hash ([`RepKey`] over backbone, graph,
+//! and representative node/edge ids), so identical representatives across
+//! streams address one pool entry:
+//!
+//! * a representative stream A prefilled is a warm **shared hit** for
+//!   stream B (`CacheStats::shared_hits` / `dedup_bytes_saved`);
+//! * two streams missing the same representative at once are
+//!   **single-flight coalesced** — the second blocks on the first's install
+//!   reservation and then hits, so N racing streams pay exactly one
+//!   prefill (the stall is charged to the waiting query's PFTT);
+//! * eviction only reclaims entries with **zero pins across all streams**,
+//!   and a TTL release of an entry another stream still pins is *deferred*
+//!   (doomed, handle returned at the last unpin) — see the `cache` module
+//!   docs for the full contract.
+//!
+//! Single-stream `serve_online` runs the identical code path over a private
+//! pool, which keeps it metric-for-metric the PR 3 serial path.
+//!
 //! # Pin safety
 //!
 //! A cluster's representative entry is pinned from its lookup/install until
 //! the query's *finalize* (not merely until the extend returns), so neither
-//! a shadow-prep admission, budget eviction, nor a TTL sweep can release an
-//! entry any in-flight ticket might still reference. Pins nest across
-//! back-to-back queries of one cluster.
+//! a shadow-prep admission, budget eviction, TTL sweep, nor another
+//! stream's activity can release an entry any in-flight ticket might still
+//! reference. Pins nest across back-to-back queries of one cluster, and
+//! count globally across streams.
 //!
 //! # Cluster TTL
 //!
 //! With `ServeConfig::cluster_ttl = Some(ttl)`, a sweep at the top of every
 //! turn expires clusters whose centroid has not been opened/joined for more
-//! than `ttl` arrivals: the centroid stops participating in matching and
-//! its resident KV entry (if any) is released back to the backend. A pinned
-//! (in-flight) representative always survives a sweep regardless of
-//! staleness — it is reconsidered once unpinned. Expired clusters keep
-//! their slot (ids are stable) and are counted in
+//! than `ttl` arrivals: the centroid stops participating in matching and —
+//! on a single-stream (private) run — its resident KV entry is released
+//! back to the backend. On a shared pool the sweep only drops this stream's
+//! binding: the same content may be another stream's warm hit, and one
+//! stream's cluster staleness says nothing about the entry's pool-global
+//! recency, so reclamation stays with the byte budget's LRU and the
+//! end-of-run drain ([`KvCacheManager::expire`]). A pinned (in-flight)
+//! representative — pinned by *any* stream — always survives a sweep
+//! regardless of staleness; it is reconsidered once unpinned. Expired
+//! clusters keep their slot (ids are stable) and are counted in
 //! [`super::ServeReport::expired_clusters`].
 //!
 //! # Latency accounting
@@ -66,21 +95,24 @@
 //! Each prep component is timed where it executes and charged to its own
 //! query; LLM-lane stages are charged from the lane-side
 //! [`crate::runtime::CallTiming`] (queue seconds — the query really did
-//! wait behind earlier lane work — plus execution span); the eagerly
-//! submitted encode is charged its measured *stall* at the query's turn
-//! (queue/device time that overlapped other queries' engine work did not
-//! delay this query's first token, and claiming otherwise would punish
-//! pipelining in per-query numbers). The per-query PFTT/TTFT (and their
-//! hit/miss split) therefore mean exactly what they meant under serial
-//! serving; the pipeline win surfaces in `BatchMetrics::wall_time` /
-//! `overlap_time` / per-lane `lane_llm` / `lane_gnn`.
+//! wait behind earlier lane work, possibly another stream's — plus
+//! execution span); the eagerly submitted encode is charged its measured
+//! *stall* at the query's turn, and a lookup that blocked on another
+//! stream's in-flight install of the same representative is charged that
+//! stall in PFTT (it truly waited, even though the prefill itself was paid
+//! elsewhere). The per-query PFTT/TTFT (and their hit/miss split) therefore
+//! mean exactly what they meant under serial serving; the pipeline win
+//! surfaces in `BatchMetrics::wall_time` / `overlap_time` / per-lane
+//! `lane_llm` / `lane_gnn`, and the sharing win in
+//! `BatchMetrics::shared_hits` / `dedup_bytes_saved`.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
-use crate::cache::KvCacheManager;
+use crate::cache::{CacheStats, KvCacheManager, LockStats, RepKey, SharedKvCache};
 use crate::data::{Dataset, Query};
 use crate::embed::sq_dist;
-use crate::graph::Subgraph;
+use crate::graph::{Subgraph, TextualGraph};
 use crate::metrics::{LaneTimes, QueryLatency, Timer};
 use crate::retrieval::{GraphFeatures, Retriever};
 use crate::runtime::{pack_subgraph, KvHandle, PackedSubgraph, PendingEncode,
@@ -112,6 +144,21 @@ struct OnlineCluster {
     /// TTL-expired: the centroid no longer participates in matching and
     /// the KV entry has been released. The slot stays so ids are stable.
     expired: bool,
+}
+
+/// Content identity of a frozen representative: what makes it "the same"
+/// representative in another stream. The verbalizer and tokenizer are
+/// deterministic over (graph, subgraph), so equal keys imply a bit-identical
+/// prefilled prefix on the same backbone.
+fn rep_key(backbone: &str, graph: &TextualGraph, rep: &Subgraph) -> RepKey {
+    RepKey::of_parts(
+        [backbone, graph.name.as_str()],
+        rep.nodes
+            .iter()
+            .map(|&n| n as u64)
+            .chain(std::iter::once(u64::MAX)) // node/edge boundary
+            .chain(rep.edges.iter().map(|&e| e as u64)),
+    )
 }
 
 /// The encode stage of a prepped query: already in flight on the GNN lane
@@ -151,10 +198,54 @@ struct InflightDecode<'q> {
     pftt: f64,
 }
 
+/// Result of serving N concurrent query streams against one shared
+/// representative pool and one backend ([`Coordinator::serve_online_multi`]).
+#[derive(Debug, Default)]
+pub struct MultiStreamReport {
+    /// Per-stream reports, in stream order. Each carries its own hit/miss
+    /// TTFT split and its own per-stream [`CacheStats`] view (`cache`).
+    pub streams: Vec<ServeReport>,
+    /// Pool-level cache totals across every stream: `prefills` here is the
+    /// number of representative prefills the whole fleet paid (equal to
+    /// distinct representative keys when the budget is ample).
+    pub shared: CacheStats,
+    /// Shared-pool lock contention counters (shard the map when `contended`
+    /// becomes a meaningful fraction of `acquisitions`).
+    pub lock: LockStats,
+    /// Wall-clock seconds from first worker spawn to last join + pool drain.
+    pub wall_time: f64,
+}
+
+impl MultiStreamReport {
+    pub fn total_queries(&self) -> usize {
+        self.streams.iter().map(|r| r.metrics.per_query.len()).sum()
+    }
+
+    /// Fleet throughput: queries served per wall-clock second.
+    pub fn qps(&self) -> f64 {
+        if self.wall_time > 0.0 {
+            self.total_queries() as f64 / self.wall_time
+        } else {
+            0.0
+        }
+    }
+
+    /// Cross-stream warm hits (an entry one stream installed, another hit).
+    pub fn shared_hits(&self) -> u64 {
+        self.shared.shared_hits
+    }
+
+    /// Prefill bytes one stream avoided because another had already paid.
+    pub fn dedup_bytes_saved(&self) -> u64 {
+        self.shared.dedup_bytes_saved
+    }
+}
+
 impl<'e> Coordinator<'e> {
-    /// Serve a stream of queries online. `query_stream` is consumed in
-    /// arrival order; each query is matched against the clusters opened by
-    /// the queries before it — nothing about the batch is known up front.
+    /// Serve a stream of queries online over a private cache pool — the
+    /// single-stream path. `query_stream` is consumed in arrival order;
+    /// each query is matched against the clusters opened by the queries
+    /// before it — nothing about the batch is known up front.
     ///
     /// The report's `per_query` entries carry `cache_hit` so
     /// [`crate::metrics::BatchMetrics::ttft_hit_ms`] /
@@ -166,12 +257,127 @@ impl<'e> Coordinator<'e> {
     where
         I: IntoIterator<Item = &'q Query>,
     {
+        let mut cache: KvCacheManager<KvHandle> = KvCacheManager::new(self.cfg.cache);
+        self.serve_online_with_cache(ds, query_stream, retriever, &mut cache)
+    }
+
+    /// Serve N query streams concurrently — one worker thread per stream,
+    /// all sharing this coordinator's backend and ONE [`SharedKvCache`]
+    /// pool, so identical representatives across streams are prefilled once
+    /// and reused everywhere (module docs: cross-stream sharing).
+    ///
+    /// Fails if any stream fails (each stream surfaces its own error — a
+    /// dead backend lane errors every stream instead of hanging any); the
+    /// pool is drained back to the backend either way. For per-stream
+    /// error inspection drive [`serve_online_with_cache`] over
+    /// [`KvCacheManager::shared_view`]s directly.
+    ///
+    /// [`serve_online_with_cache`]: Coordinator::serve_online_with_cache
+    pub fn serve_online_multi<'q>(&self, ds: &Dataset, streams: &[Vec<&'q Query>],
+                                  retriever: &dyn Retriever)
+                                  -> anyhow::Result<MultiStreamReport> {
+        anyhow::ensure!(!streams.is_empty(), "serve_online_multi needs >= 1 stream");
+        // compile/load once on the caller's thread so the workers race on
+        // serving, not on warmup.
+        self.engine.warmup(&self.cfg.backbone)?;
+        self.engine.warmup(&self.gnn_module(retriever))?;
+        let pool: Arc<SharedKvCache<KvHandle>> =
+            Arc::new(SharedKvCache::new(self.cfg.cache));
+        // one O(graph) feature build shared by every worker, outside the
+        // measured fleet wall time — S-1 redundant rebuilds would otherwise
+        // deflate the qps/wall rows the serving bench tracks.
+        let feats = GraphFeatures::build(&ds.graph);
+        let t_wall = Timer::start();
+        let outcomes: Vec<anyhow::Result<ServeReport>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = streams
+                .iter()
+                .map(|qs| {
+                    let pool = Arc::clone(&pool);
+                    let feats = &feats;
+                    scope.spawn(move || {
+                        let mut view = KvCacheManager::shared_view(&pool);
+                        self.serve_online_inner(ds, qs.iter().copied(),
+                                                retriever, &mut view, feats)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        Err(anyhow::anyhow!("online stream worker panicked"))
+                    })
+                })
+                .collect()
+        });
+        // all workers have joined: the pool is quiescent — drain every
+        // resident entry (and deferred handles) back to the backend before
+        // reporting, whether the streams succeeded or not.
+        self.engine.release_many(pool.drain_all());
+        let wall_time = t_wall.secs();
+
+        let n = outcomes.len();
+        let mut reports = Vec::with_capacity(n);
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut failed = 0usize;
+        for out in outcomes {
+            match out {
+                Ok(r) => reports.push(r),
+                Err(e) => {
+                    failed += 1;
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e.context(format!("{failed}/{n} online streams failed")));
+        }
+        Ok(MultiStreamReport {
+            streams: reports,
+            shared: pool.stats(),
+            lock: pool.lock_stats(),
+            wall_time,
+        })
+    }
+
+    /// The depth-k online scheduler over a caller-supplied cache view: the
+    /// building block behind [`serve_online`] (private view) and
+    /// [`serve_online_multi`] (one shared view per worker thread). On error
+    /// the view keeps this stream's pins/reservations until it is dropped —
+    /// drop it rather than reusing it after a failure.
+    ///
+    /// [`serve_online`]: Coordinator::serve_online
+    /// [`serve_online_multi`]: Coordinator::serve_online_multi
+    pub fn serve_online_with_cache<'q, I>(&self, ds: &Dataset, query_stream: I,
+                                          retriever: &dyn Retriever,
+                                          cache: &mut KvCacheManager<KvHandle>)
+                                          -> anyhow::Result<ServeReport>
+    where
+        I: IntoIterator<Item = &'q Query>,
+    {
+        let feats = GraphFeatures::build(&ds.graph);
+        self.serve_online_inner(ds, query_stream, retriever, cache, &feats)
+    }
+
+    /// [`serve_online_with_cache`] over pre-built retrieval features, so
+    /// the multi-stream path builds them once for the whole fleet.
+    ///
+    /// [`serve_online_with_cache`]: Coordinator::serve_online_with_cache
+    fn serve_online_inner<'q, I>(&self, ds: &Dataset, query_stream: I,
+                                 retriever: &dyn Retriever,
+                                 cache: &mut KvCacheManager<KvHandle>,
+                                 feats: &GraphFeatures)
+                                 -> anyhow::Result<ServeReport>
+    where
+        I: IntoIterator<Item = &'q Query>,
+    {
         self.engine.warmup(&self.cfg.backbone)?;
         let gnn = self.gnn_module(retriever);
         self.engine.warmup(&gnn)?;
         let c = *self.store.constants();
         let session = self.session();
-        let feats = GraphFeatures::build(&ds.graph);
         let entry_bytes = self.kv_entry_bytes()?;
         let threshold = self.cfg.online_threshold;
         let depth = self.cfg.pipeline_depth.max(1);
@@ -184,10 +390,10 @@ impl<'e> Coordinator<'e> {
         // overlap the lane split exists for.
         let prep = |q: &'q Query| -> anyhow::Result<PreppedQuery<'q>> {
             let t = Timer::start();
-            let sg = retriever.retrieve(&ds.graph, &feats, &q.text);
+            let sg = retriever.retrieve(&ds.graph, feats, &q.text);
             let retrieval_secs = t.secs();
             let t = Timer::start();
-            let packed = pack_subgraph(&ds.graph, &feats, &sg, c.n_max, c.feat_dim);
+            let packed = pack_subgraph(&ds.graph, feats, &sg, c.n_max, c.feat_dim);
             let pack_secs = t.secs();
             let question = session.prepare_question(&q.text);
             let enc = if eager_encode {
@@ -223,7 +429,6 @@ impl<'e> Coordinator<'e> {
         };
 
         let mut clusters: Vec<OnlineCluster> = Vec::new();
-        let mut cache: KvCacheManager<KvHandle> = KvCacheManager::new(self.cfg.cache);
         let mut report = ServeReport::default();
         let mut llm_time = 0.0;
         let mut prefill_total = 0.0;
@@ -276,8 +481,11 @@ impl<'e> Coordinator<'e> {
 
             // 0) TTL sweep: expire clusters whose centroid went cold, and
             //    release their KV entries. A pinned entry belongs to an
-            //    in-flight query (extend or decoupled decode) — skip it,
-            //    however stale; it is reconsidered once unpinned.
+            //    in-flight query (extend or decoupled decode) — of THIS
+            //    stream or any other sharing the pool — skip it, however
+            //    stale; it is reconsidered once unpinned. (Even if a pin
+            //    landed between the check and the release, the release
+            //    itself defers past pins — see the cache module docs.)
             if let Some(ttl) = self.cfg.cluster_ttl {
                 let mut reclaimed: Vec<KvHandle> = Vec::new();
                 for (cid, cl) in clusters.iter_mut().enumerate() {
@@ -289,9 +497,12 @@ impl<'e> Coordinator<'e> {
                     }
                     cl.expired = true;
                     expired_clusters += 1;
-                    if let Some(h) = cache.release(cid) {
-                        reclaimed.push(h);
-                    }
+                    // private stream: release the entry now. Shared pool:
+                    // only drop this stream's binding — the same content
+                    // may be another stream's warm hit, and its pool-LRU
+                    // recency (not one stream's cluster staleness) governs
+                    // reclamation under the byte budget.
+                    reclaimed.extend(cache.expire(cid));
                 }
                 self.engine.release_many(reclaimed);
             }
@@ -326,7 +537,10 @@ impl<'e> Coordinator<'e> {
             // 3) open a new cluster if nothing was close enough. The prefix
             //    prompt is built here (prompt-construction time), frozen for
             //    the cluster's lifetime; the padded token vector itself is
-            //    NOT retained — see `OnlineCluster`.
+            //    NOT retained — see `OnlineCluster`. A fresh cluster is
+            //    bound to its representative's content key so another
+            //    stream's identical representative shares the pool entry
+            //    (a no-op on the private single-stream pool).
             let t_open = Timer::start();
             let mut fresh_tokens: Option<Vec<i32>> = None;
             let cid = match joined {
@@ -351,19 +565,27 @@ impl<'e> Coordinator<'e> {
                         last_used: now,
                         expired: false,
                     });
-                    clusters.len() - 1
+                    let cid = clusters.len() - 1;
+                    cache.bind(cid, rep_key(&self.cfg.backbone, &ds.graph, &sg));
+                    cid
                 }
             };
             let open_secs = t_open.secs();
 
             // 4) warm-cache check. `lookup` records exactly one hit or miss
-            //    (and refreshes LRU / bytes_saved on a hit). The pin taken
-            //    here (or by install below) is held until this query's
-            //    finalize — see the pin-safety section of the module docs.
-            let hit = cache.lookup(cid).is_some();
+            //    (refreshing LRU / bytes_saved on a hit) and returns with a
+            //    pin held — kept until this query's finalize (module docs,
+            //    pin safety). A miss holds the key's install reservation:
+            //    other streams racing on the same representative block in
+            //    their lookup until our install below (single-flight). The
+            //    stall a lookup spends blocked on ANOTHER stream's install
+            //    is charged to this query's PFTT — it really waited, even
+            //    though the prefill was paid elsewhere.
+            let t_lookup = Timer::start();
+            let hit = cache.lookup(cid).is_hit();
+            let lookup_stall = t_lookup.secs();
             let mut rebuild_secs = 0.0;
             let prefill_secs = if hit {
-                cache.pin(cid);
                 0.0
             } else {
                 // an evicted-miss re-verbalizes the frozen representative.
@@ -391,29 +613,33 @@ impl<'e> Coordinator<'e> {
                 let (kv, _logits, prefill_t) = pending.wait_timed()?;
                 lane_llm.add(&prefill_t);
                 let secs = prefill_t.secs();
-                // admitted pinned; colder representatives may fall out.
+                // admitted pinned, fulfilling the lookup's reservation
+                // (waiting streams wake and hit); colder representatives
+                // may fall out — never a pinned one, on any stream.
                 let evicted = cache.install(cid, kv, entry_bytes);
                 self.engine.release_many(evicted);
                 secs
             };
             prefill_total += prefill_secs;
 
-            // 5) extend against the resident representative cache. In the
-            //    extend's shadow: finalize the previous query's decoupled
-            //    decode (its generate runs on the LLM lane just ahead of
-            //    this extend) and refill the prep queue.
+            // 5) extend against the resident representative cache, the
+            //    handle borrowed under the pool lock (our pin keeps the
+            //    entry alive; the lock makes handle access and submission
+            //    atomic against other streams). In the extend's shadow:
+            //    finalize the previous query's decoupled decode (its
+            //    generate runs on the LLM lane just ahead of this extend)
+            //    and refill the prep queue.
             let plen = clusters[cid].plen;
             debug_assert!(cache.pin_count(cid) >= 1,
                           "in-flight cluster must hold a pin across its tickets");
-            let pending_ext = {
-                let kv = cache
-                    .peek(cid)
-                    .ok_or_else(|| anyhow::anyhow!("online cluster cache missing"))?;
-                self.engine.submit_extend(&self.cfg.backbone, kv, plen as i32,
-                                          &question.tokens, question.qlen as i32)?
-            };
+            let pending_ext = cache
+                .with_handle(cid, |kv| {
+                    self.engine.submit_extend(&self.cfg.backbone, kv, plen as i32,
+                                              &question.tokens, question.qlen as i32)
+                })
+                .ok_or_else(|| anyhow::anyhow!("online cluster cache missing"))??;
             if let Some(dec) = pending_decode.take() {
-                finalize(dec, &mut cache, &mut report, &mut llm_time, &mut lane_llm)?;
+                finalize(dec, &mut *cache, &mut report, &mut llm_time, &mut lane_llm)?;
             }
             top_up(&mut queue, &mut stream, &mut overlap_time, true)?;
             let (kv_q, row, ext_t) = pending_ext.wait_timed()?;
@@ -426,10 +652,12 @@ impl<'e> Coordinator<'e> {
             // 6) latency accounting (no amortization — see the module docs
             //    in `coordinator`): a miss pays its prefill in PFTT, a hit
             //    does not. That asymmetry IS the online speedup. Every term
-            //    is this query's own component time.
+            //    is this query's own component time (`lookup_stall` is ~0
+            //    except when this query waited out another stream's install
+            //    of its representative).
             let prompt_ready =
                 retrieval_secs + assign_secs + open_secs + rebuild_secs + question.tok_secs;
-            let pftt = prefill_secs + ext_t.secs() + first_host_secs;
+            let pftt = lookup_stall + prefill_secs + ext_t.secs() + first_host_secs;
 
             // 7) decode. k >= 2 leaves the generate in flight (finalized in
             //    the next query's extend shadow, or drained after the loop);
@@ -442,12 +670,12 @@ impl<'e> Coordinator<'e> {
             if depth >= 2 {
                 pending_decode = Some(dec);
             } else {
-                finalize(dec, &mut cache, &mut report, &mut llm_time, &mut lane_llm)?;
+                finalize(dec, &mut *cache, &mut report, &mut llm_time, &mut lane_llm)?;
             }
         }
         // drain the last in-flight decode
         if let Some(dec) = pending_decode.take() {
-            finalize(dec, &mut cache, &mut report, &mut llm_time, &mut lane_llm)?;
+            finalize(dec, &mut *cache, &mut report, &mut llm_time, &mut lane_llm)?;
         }
 
         report.cluster_sizes = clusters.iter().map(|cl| cl.members).collect();
@@ -459,8 +687,13 @@ impl<'e> Coordinator<'e> {
         report.metrics.pipeline_depth = depth;
         report.metrics.lane_llm = lane_llm;
         report.metrics.lane_gnn = lane_gnn;
+        // end of stream: a private view drains the whole pool; a shared
+        // view only drops this stream's pins and returns deferred handles
+        // (the pool owner drains the rest once every stream is done).
         self.engine.release_many(cache.release_all());
         report.cache = cache.stats();
+        report.metrics.shared_hits = report.cache.shared_hits;
+        report.metrics.dedup_bytes_saved = report.cache.dedup_bytes_saved;
         report.metrics.wall_time = t_wall.secs();
         Ok(report)
     }

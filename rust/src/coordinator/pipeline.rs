@@ -5,10 +5,12 @@
 //! representative cache is admitted pinned, unpinned once its members are
 //! served, and left resident until the [`crate::cache::CachePolicy`] budget
 //! evicts it (LRU) or the end-of-batch drain returns it. The cache is still
-//! per-call (drained before the report returns); what the budget buys the
-//! batch path is bounded memory under many clusters without the seed's
-//! forced one-resident churn. Cross-request warm reuse is the online path's
-//! job ([`super::online`]), which keeps its own manager per stream.
+//! per-call (a private [`crate::cache::KvCacheManager`] view, drained before
+//! the report returns); what the budget buys the batch path is bounded
+//! memory under many clusters without the seed's forced one-resident churn.
+//! Cross-request warm reuse is the online path's job ([`super::online`]),
+//! which can additionally share one [`crate::cache::SharedKvCache`] pool
+//! across concurrent streams.
 //!
 //! Pipelining: each cluster's representative prefill is *submitted* and the
 //! members' question tokenization runs in its shadow, so host prompt prep
@@ -169,18 +171,30 @@ impl<'e> Coordinator<'e> {
 
             for (mi, &qi) in members.iter().enumerate() {
                 let q = queries[qi];
+                // the first member rides the prefill just paid above — no
+                // lookup, so stats only count the genuinely avoided
+                // prefills (hits = members - 1 per cluster). Later members
+                // record a hit (which takes a pin, dropped again below —
+                // the install pin already anchors the cluster's serving).
+                if mi > 0 {
+                    anyhow::ensure!(cache.lookup(cid).is_hit(), "cluster cache missing");
+                }
                 let out = {
-                    // the first member rides the prefill just paid above —
-                    // peek, so stats only count the genuinely avoided
-                    // prefills (hits = members - 1 per cluster).
-                    let kv_cluster = if mi == 0 {
-                        cache.peek(cid)
-                    } else {
-                        cache.lookup(cid)
-                    }
-                    .ok_or_else(|| anyhow::anyhow!("cluster cache missing"))?;
-                    session.extend_decode_prepared(kv_cluster, plen, &prepped[mi], || {})?
+                    // the extend is submitted with the representative
+                    // handle borrowed under the cache lock, then waited
+                    // outside it.
+                    let pending = cache
+                        .with_handle(cid, |kv| {
+                            self.engine.submit_extend(&self.cfg.backbone, kv,
+                                                      plen as i32, &prepped[mi].tokens,
+                                                      prepped[mi].qlen as i32)
+                        })
+                        .ok_or_else(|| anyhow::anyhow!("cluster cache missing"))??;
+                    session.extend_decode_submitted(pending, plen, &prepped[mi], || {})?
                 };
+                if mi > 0 {
+                    cache.unpin(cid);
+                }
                 report.metrics.lane_llm.add(&out.ext_timing);
                 report.metrics.lane_llm.add(&out.gen_timing);
                 llm_time += out.t_done - out.t_prompt;

@@ -23,7 +23,7 @@
 use crate::data::{answer_correct, Query};
 use crate::graph::{full_prompt, prefix_text, question_text, Subgraph, TextualGraph};
 use crate::metrics::{QueryLatency, Timer};
-use crate::runtime::{ArtifactStore, Backend, CallTiming, KvHandle};
+use crate::runtime::{ArtifactStore, Backend, CallTiming, PendingExtend};
 use crate::tokenizer::Tokenizer;
 
 use super::{argmax, QueryResult};
@@ -195,17 +195,18 @@ impl<'a> ServeSession<'a> {
         })
     }
 
-    /// Cached-prefix flow for one pre-tokenized question: `extend` against
-    /// the resident representative KV → decode. `overlap` runs exactly once,
-    /// in the shadow of the in-flight extend — pipelined callers use it for
-    /// the next query's host prep, serial callers pass `|| {}`. Returns raw
-    /// timing splits; the caller composes them into `QueryLatency` under its
-    /// own accounting rules (amortized shares in-batch, wall-clock online).
-    pub fn extend_decode_prepared(&self, kv_prefix: &KvHandle, plen: usize,
-                                  prep: &PreparedQuestion, mut overlap: impl FnMut())
-                                  -> anyhow::Result<ExtendOutcome> {
-        let pending = self.engine.submit_extend(self.backbone, kv_prefix, plen as i32,
-                                                &prep.tokens, prep.qlen as i32)?;
+    /// Cached-prefix flow for one pre-tokenized question whose `extend` the
+    /// caller has already submitted (the representative handle is borrowed
+    /// under the cache's lock via `KvCacheManager::with_handle`, so the
+    /// submission happens there): wait the extend → decode. `overlap` runs
+    /// exactly once, in the shadow of the in-flight extend — pipelined
+    /// callers use it for the next query's host prep, serial callers pass
+    /// `|| {}`. Returns raw timing splits; the caller composes them into
+    /// `QueryLatency` under its own accounting rules (amortized shares
+    /// in-batch, wall-clock online).
+    pub fn extend_decode_submitted(&self, pending: PendingExtend, plen: usize,
+                                   prep: &PreparedQuestion, mut overlap: impl FnMut())
+                                   -> anyhow::Result<ExtendOutcome> {
         overlap();
         let (kv_q, row, ext_t) = pending.wait_timed()?;
         let t_host = Timer::start();

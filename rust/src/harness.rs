@@ -5,8 +5,8 @@
 
 use crate::cache::CachePolicy;
 use crate::cluster::Linkage;
-use crate::coordinator::{Coordinator, ServeConfig, ServeReport};
-use crate::data::Dataset;
+use crate::coordinator::{Coordinator, MultiStreamReport, ServeConfig, ServeReport};
+use crate::data::{Dataset, Query};
 use crate::metrics::{delta, delta_cells, metric_cells, Table};
 use crate::retrieval::{GRetriever, GragRetriever, Retriever};
 use crate::runtime::{ArtifactStore, Backend};
@@ -137,6 +137,42 @@ pub fn run_online_cell_with(store: &ArtifactStore, engine: &dyn Backend, ds: &Da
     Ok(OnlineCellResult { cell: cell.clone(), baseline, online })
 }
 
+/// One cell served as N concurrent replicated streams over one shared
+/// KV-cache pool (the `--streams` mode of Table 5 and the serving bench).
+/// Serial/baseline reference numbers come from [`run_online_cell`] on the
+/// same cell — deliberately not re-run here.
+pub struct MultiOnlineCellResult {
+    pub cell: Cell,
+    /// Streams served concurrently.
+    pub streams: usize,
+    pub multi: MultiStreamReport,
+}
+
+/// Run one online cell as `streams` concurrent streams. Every stream serves
+/// the same seed-sampled query sequence — the many-users-asking-similar-
+/// things regime cross-stream sharing exists for: identical representatives
+/// across streams should be prefilled once, not `streams` times.
+pub fn run_multi_online_cell(store: &ArtifactStore, engine: &dyn Backend, cell: &Cell,
+                             streams: usize) -> anyhow::Result<MultiOnlineCellResult> {
+    run_multi_online_cell_with(store, engine, &store.dataset(&cell.dataset)?, cell,
+                               streams)
+}
+
+/// [`run_multi_online_cell`] over a caller-supplied dataset (sim runs).
+pub fn run_multi_online_cell_with(store: &ArtifactStore, engine: &dyn Backend,
+                                  ds: &Dataset, cell: &Cell, streams: usize)
+                                  -> anyhow::Result<MultiOnlineCellResult> {
+    anyhow::ensure!(streams >= 1, "need at least one stream");
+    let retriever = retriever_by_name(&cell.retriever)?;
+    let queries = ds.sample_test(cell.batch, cell.seed);
+    anyhow::ensure!(!queries.is_empty(), "dataset {} has no test queries", cell.dataset);
+
+    let coord = Coordinator::new(store, engine, cell.serve_config())?;
+    let lanes: Vec<Vec<&Query>> = (0..streams).map(|_| queries.clone()).collect();
+    let multi = coord.serve_online_multi(ds, &lanes, retriever.as_ref())?;
+    Ok(MultiOnlineCellResult { cell: cell.clone(), streams, multi })
+}
+
 /// Render one retriever block of a paper table (method, +SubGCache, Δ rows).
 pub fn push_block(t: &mut Table, label: &str, r: &CellResult) {
     t.row(&metric_cells(label, &r.baseline.metrics));
@@ -222,6 +258,36 @@ pub fn serving_row(name: &str, r: &ServeReport) -> JsonRow {
         .num("gnn_lane_queue_s", m.lane_gnn.queue_time)
         .int("cache_hits", r.cache.hits)
         .int("cache_evictions", r.cache.evictions)
+        .int("shared_hits", r.cache.shared_hits)
+        .int("dedup_bytes_saved", r.cache.dedup_bytes_saved)
+}
+
+/// One multi-stream run as a `BENCH_serving.json` row: fleet wall/qps plus
+/// the pool-level dedup and lock-contention counters — the numbers that say
+/// whether cross-stream sharing is actually paying off.
+pub fn multi_serving_row(name: &str, m: &MultiStreamReport) -> JsonRow {
+    JsonRow::new(name)
+        .int("streams", m.streams.len() as u64)
+        .int("queries", m.total_queries() as u64)
+        .num("wall_s", m.wall_time)
+        .num("qps", m.qps())
+        .int("pool_prefills", m.shared.prefills)
+        .int("shared_hits", m.shared.shared_hits)
+        .int("dedup_bytes_saved", m.shared.dedup_bytes_saved)
+        .int("deferred_releases", m.shared.deferred_releases)
+        .int("lock_acquisitions", m.lock.acquisitions)
+        .int("lock_contended", m.lock.contended)
+}
+
+/// One-line summary of a multi-stream run for the table binaries.
+pub fn multi_summary(m: &MultiStreamReport) -> String {
+    format!(
+        "{} streams: wall {:.2}s ({:.1} q/s), {} pool prefills, {} shared hits, \
+         {:.0} KiB dedup-saved, lock {}/{} contended",
+        m.streams.len(), m.wall_time, m.qps(), m.shared.prefills,
+        m.shared.shared_hits, m.shared.dedup_bytes_saved as f64 / 1024.0,
+        m.lock.contended, m.lock.acquisitions
+    )
 }
 
 /// Collector for the serving bench JSON: table harnesses push one row per
@@ -239,6 +305,11 @@ impl ServingBench {
 
     pub fn push(&mut self, name: &str, report: &ServeReport) {
         self.rows.push(serving_row(name, report));
+    }
+
+    /// Push a pre-built row (e.g. [`multi_serving_row`]).
+    pub fn push_row(&mut self, row: JsonRow) {
+        self.rows.push(row);
     }
 
     pub fn len(&self) -> usize {
@@ -345,9 +416,29 @@ mod tests {
         assert_eq!(row.name, "online k=2");
         let keys: Vec<&str> = row.fields.iter().map(|(k, _)| k.as_str()).collect();
         for want in ["queries", "wall_s", "qps", "overlap_ms", "pipeline_depth",
-                     "llm_lane_device_s", "gnn_lane_device_s"] {
+                     "llm_lane_device_s", "gnn_lane_device_s", "shared_hits",
+                     "dedup_bytes_saved"] {
             assert!(keys.contains(&want), "missing field {want}");
         }
+    }
+
+    #[test]
+    fn multi_serving_row_carries_pool_and_contention_fields() {
+        let mut m = MultiStreamReport::default();
+        m.streams.push(ServeReport::default());
+        m.streams.push(ServeReport::default());
+        m.shared.prefills = 3;
+        m.shared.shared_hits = 5;
+        m.lock.acquisitions = 10;
+        m.wall_time = 1.0;
+        let row = multi_serving_row("online streams=2", &m);
+        let keys: Vec<&str> = row.fields.iter().map(|(k, _)| k.as_str()).collect();
+        for want in ["streams", "queries", "wall_s", "qps", "pool_prefills",
+                     "shared_hits", "dedup_bytes_saved", "deferred_releases",
+                     "lock_acquisitions", "lock_contended"] {
+            assert!(keys.contains(&want), "missing field {want}");
+        }
+        assert!(multi_summary(&m).contains("2 streams"));
     }
 
     #[test]

@@ -14,10 +14,14 @@
 //!   - `serve_online` — a streaming path: queries arrive one at a time, are
 //!     matched to the nearest existing cluster centroid, and reuse a
 //!     still-warm representative KV cache when one is resident.
-//! * **[`cache`]** — the subgraph-level KV cache grown into a byte-budgeted,
-//!   multi-resident LRU ([`cache::CachePolicy`]) with per-cluster pinning,
-//!   so several representatives stay warm and an admission can never evict
-//!   the in-flight cluster.
+//! * **[`cache`]** — the subgraph-level KV cache grown into a process-wide,
+//!   thread-safe pool ([`cache::SharedKvCache`]): a byte-budgeted LRU keyed
+//!   by representative *content hash*, with per-stream
+//!   [`cache::KvCacheManager`] views, single-flight install coalescing, and
+//!   globally-counted pins — so several representatives stay warm, an
+//!   admission can never evict any stream's in-flight cluster, and
+//!   identical representatives across concurrent streams are prefilled
+//!   exactly once (`serve_online_multi`).
 //! * **[`runtime`]** — the execution layer behind the
 //!   [`runtime::Backend`] trait: the per-lane PJRT [`runtime::Engine`]
 //!   (LLM and GNN lanes on separate worker threads, device-resident KV)
@@ -64,9 +68,10 @@ pub mod util;
 
 /// Common imports for examples and binaries.
 pub mod prelude {
-    pub use crate::cache::{CachePolicy, CacheStats};
+    pub use crate::cache::{CachePolicy, CacheStats, KvCacheManager, LockStats, Lookup,
+                           RepKey, SharedKvCache};
     pub use crate::cluster::Linkage;
-    pub use crate::coordinator::{Coordinator, ServeConfig, ServeReport};
+    pub use crate::coordinator::{Coordinator, MultiStreamReport, ServeConfig, ServeReport};
     pub use crate::data::{Dataset, Split};
     pub use crate::graph::{Subgraph, TextualGraph};
     pub use crate::metrics::{delta, BatchMetrics, Table};

@@ -82,6 +82,15 @@ pub struct BatchMetrics {
     pub lane_llm: LaneTimes,
     /// GNN-lane (encode) queue/device totals for this run.
     pub lane_gnn: LaneTimes,
+    /// Warm hits this stream scored on entries *another* stream installed
+    /// in a shared KV-cache pool (subset of the cache hit count; always 0
+    /// for single-stream and batch runs). Mirrors
+    /// [`crate::cache::CacheStats::shared_hits`] so throughput rows carry
+    /// the cross-stream dedup signal without digging into the cache stats.
+    pub shared_hits: u64,
+    /// Prefill KV bytes this stream did not pay because another stream
+    /// already had (sum of entry bytes over `shared_hits`).
+    pub dedup_bytes_saved: u64,
 }
 
 impl BatchMetrics {

@@ -170,7 +170,17 @@ impl PendingEncode {
 /// the module docs for the contract; [`crate::runtime::Engine`] is the PJRT
 /// implementation, [`crate::runtime::SimBackend`] the deterministic
 /// simulator for scheduling tests.
-pub trait Backend {
+///
+/// `Sync` is part of the contract: the multi-stream serving path
+/// (`serve_online_multi`) shares one backend across N worker threads, each
+/// submitting to the lanes and waiting its own tickets concurrently. Both
+/// implementations are lock-free on submission (mpsc senders are `Sync`
+/// over `Send` payloads) and every ticket owns its private reply receiver,
+/// so cross-thread submits interleave at the lane queue — FIFO per lane
+/// across ALL threads — and concurrent `wait`s never share state. The
+/// `queue_secs` a request reports may therefore include time spent behind
+/// *other streams'* lane work; that is the honest number.
+pub trait Backend: Sync {
     /// Submit a prefill of `tokens` (padded to S, real length `plen`) on the
     /// LLM lane without blocking; the ticket yields the new KV handle and
     /// the next-token logits row after position `plen - 1`.

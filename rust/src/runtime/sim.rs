@@ -91,6 +91,51 @@ impl SimLatency {
     pub fn serial_sum(&self) -> f64 {
         (self.prefill + self.extend + self.generate + self.encode).as_secs_f64()
     }
+
+    /// Sim-vs-real calibration seed: fit per-op virtual latencies from a
+    /// `BENCH_engine.json` produced by `benches/engine_hot_path.rs`, so sim
+    /// wall-time numbers become predictive of the measured engine instead
+    /// of hand-set. Each op takes the mean of the `median_ns` of result
+    /// rows whose name starts with `"<op> "` — e.g. `"prefill 400 tokens
+    /// [device-resident]"` feeds `prefill`; composite rows like
+    /// `"prefill->extend handoff"` deliberately match no op. An op with no
+    /// matching row keeps zero latency (functional-only). Errors if the
+    /// file is unreadable, has no `results` array, or matches no op at all.
+    pub fn from_bench_json(path: impl AsRef<std::path::Path>) -> anyhow::Result<SimLatency> {
+        let path = path.as_ref();
+        let json = crate::util::json::parse_file(path)?;
+        let rows = json.get("results").as_arr().ok_or_else(|| {
+            anyhow::anyhow!("{}: no results array (not a BENCH json?)", path.display())
+        })?;
+        let fit = |op: &str| -> Option<Duration> {
+            let prefix = format!("{op} ");
+            let medians: Vec<f64> = rows
+                .iter()
+                .filter(|r| {
+                    r.get("name").as_str().is_some_and(|n| n.starts_with(&prefix))
+                })
+                .filter_map(|r| r.get("median_ns").as_f64())
+                .collect();
+            if medians.is_empty() {
+                return None;
+            }
+            let mean = medians.iter().sum::<f64>() / medians.len() as f64;
+            Some(Duration::from_nanos(mean.max(0.0) as u64))
+        };
+        let lat = SimLatency {
+            prefill: fit("prefill").unwrap_or(Duration::ZERO),
+            extend: fit("extend").unwrap_or(Duration::ZERO),
+            generate: fit("generate").unwrap_or(Duration::ZERO),
+            encode: fit("encode").unwrap_or(Duration::ZERO),
+        };
+        anyhow::ensure!(
+            lat.serial_sum() > 0.0,
+            "{}: no per-op rows matched (row names must start with 'prefill ', \
+             'extend ', 'generate ' or 'encode ')",
+            path.display()
+        );
+        Ok(lat)
+    }
 }
 
 type KvReply = Sender<anyhow::Result<(u64, Vec<f32>, CallTiming)>>;
@@ -475,11 +520,8 @@ impl SimState {
     }
 }
 
-fn splitmix(mut z: u64) -> u64 {
-    z = z.wrapping_add(0x9E3779B97F4A7C15);
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-    z ^ (z >> 31)
+fn splitmix(z: u64) -> u64 {
+    crate::util::rng::splitmix64(z.wrapping_add(0x9E3779B97F4A7C15))
 }
 
 /// Deterministic next-token logits for an effective token sequence: a pure
@@ -738,6 +780,21 @@ mod tests {
             .extend(SIM_BACKBONE, &KvHandle(777), 4, &q, 3)
             .unwrap_err();
         assert!(err.to_string().contains("777"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn sim_latency_fits_from_bench_json_fixture() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/BENCH_engine.json");
+        let lat = SimLatency::from_bench_json(path).unwrap();
+        // the fixture carries two prefill rows (8 ms device-resident, 12 ms
+        // host-bounce): the fit is their mean. The "prefill->extend
+        // handoff" row must not contaminate either op.
+        assert_eq!(lat.prefill, Duration::from_millis(10));
+        assert_eq!(lat.extend, Duration::from_millis(3));
+        assert_eq!(lat.generate, Duration::from_millis(5));
+        assert_eq!(lat.encode, Duration::from_millis(2));
+        assert!(lat.serial_sum() > 0.019 && lat.serial_sum() < 0.021);
+        assert!(SimLatency::from_bench_json("/nonexistent/BENCH.json").is_err());
     }
 
     #[test]

@@ -2,6 +2,16 @@
 //! offline, and every experiment in this repo must be bit-reproducible from
 //! a seed anyway (EXPERIMENTS.md records the seeds per table/figure).
 
+/// The splitmix64 finalization mix: the one bit-mixer shared by [`Rng`],
+/// the sim backend's hash logits, and the KV cache's view-salted private
+/// keys — defined once so a future tweak cannot silently diverge between
+/// copies. (Callers add their own golden-ratio increment/salt first.)
+pub fn splitmix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 /// Splitmix64-based PRNG. Small state, passes the usual empirical batteries,
 /// and trivially seedable from a u64.
 #[derive(Debug, Clone)]
@@ -16,10 +26,7 @@ impl Rng {
 
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
-        let mut z = self.state;
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-        z ^ (z >> 31)
+        splitmix64(self.state)
     }
 
     /// Uniform in [0, n) without modulo bias (rejection sampling).

@@ -1,0 +1,556 @@
+//! Concurrency suite for the shared cross-stream KV cache
+//! ([`subgcache::cache::SharedKvCache`]) and the multi-stream serving path
+//! (`Coordinator::serve_online_multi`), driven on the deterministic
+//! [`SimBackend`] so every scenario runs un-skipped in plain `cargo test`
+//! under default parallel test threads.
+//!
+//! What is pinned down here:
+//!
+//! * **Dedup** — with N streams sharing representatives, the pool pays one
+//!   prefill per *distinct* representative (single-flight install
+//!   coalescing), never N; `shared_hits`/`dedup_bytes_saved` surface it.
+//! * **Budget** — the byte/entry budget holds at every observable moment
+//!   under concurrency (or only pinned entries remain, the documented
+//!   overrun), checked by a live poller thread.
+//! * **Pin safety** — no entry is released while any stream pins it: if it
+//!   were, the sim backend would fail the pinned stream's extend with an
+//!   unknown-handle error, so "all streams correct" is the proof.
+//! * **Conservation** — every handle installed into the pool leaves it
+//!   exactly once (evictions, releases, deferred graveyard, final drain),
+//!   under a randomized multi-threaded hammer.
+//! * **Failure** — a dead LLM lane mid-run errors every stream instead of
+//!   hanging any, and aborted install reservations wake their waiters.
+//! * **Parity** — single-stream `serve_online` and a one-stream
+//!   `serve_online_multi` agree metric-for-metric with the serial PR 3
+//!   path for k ∈ {1, 2, 4}.
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use subgcache::data::Query;
+use subgcache::prelude::*;
+use subgcache::runtime::{sim_dataset, SimLatency};
+use subgcache::util::prop::prop_check;
+
+mod common;
+
+/// N identical copies of one seed-sampled query sequence — the
+/// many-users-asking-similar-things regime cross-stream sharing targets.
+fn replicated_streams<'q>(queries: &[&'q Query], n: usize) -> Vec<Vec<&'q Query>> {
+    (0..n).map(|_| queries.to_vec()).collect()
+}
+
+/// Distinct retrieved-subgraph contents across a query set: the expected
+/// number of pool prefills under ample budget (content-keyed dedup).
+fn distinct_reps(ds: &subgcache::data::Dataset, queries: &[&Query]) -> usize {
+    let feats = GraphFeatures::build(&ds.graph);
+    let r = GRetriever::default();
+    let mut seen: BTreeSet<(Vec<usize>, Vec<usize>)> = BTreeSet::new();
+    for q in queries {
+        let sg = r.retrieve(&ds.graph, &feats, &q.text);
+        seen.insert((sg.nodes.iter().copied().collect(),
+                     sg.edges.iter().copied().collect()));
+    }
+    seen.len()
+}
+
+// ---------------------------------------------------------------------------
+// The acceptance criterion: 4 streams, one prefill per distinct rep,
+// dedup_bytes_saved > 0, and multi wall beats 4 serial runs.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn four_streams_share_one_prefill_and_beat_serial_wall() {
+    // prefill-dominant latencies: the dedup (1 pool prefill instead of 4)
+    // must show up in wall time, not just counters.
+    let lat = SimLatency::from_millis(40, 1, 1, 1);
+    let n_queries = 6;
+    let n_streams = 4;
+
+    let env = common::sim_env(lat);
+    let ds = sim_dataset(4, 4);
+    let cfg = ServeConfig {
+        online_threshold: f32::INFINITY, // one cluster per stream, same rep
+        ..common::sim_config()
+    };
+    let coord = Coordinator::new(&env.store, &env.backend, cfg).unwrap();
+    let queries = ds.sample_test(n_queries, 7);
+    assert_eq!(queries.len(), n_queries);
+
+    // serial reference: the same workload as 4 back-to-back single streams.
+    let mut serial_wall = 0.0;
+    let mut serial_answers: Vec<Vec<String>> = Vec::new();
+    for _ in 0..n_streams {
+        let r = coord
+            .serve_online(&ds, queries.iter().copied(), &GRetriever::default())
+            .unwrap();
+        serial_wall += r.metrics.wall_time;
+        serial_answers.push(r.results.iter().map(|x| x.predicted.clone()).collect());
+    }
+
+    let streams = replicated_streams(&queries, n_streams);
+    let multi = coord
+        .serve_online_multi(&ds, &streams, &GRetriever::default())
+        .unwrap();
+
+    // -- dedup: one prefill for the whole fleet, not 4x --------------------
+    assert_eq!(multi.streams.len(), n_streams);
+    assert_eq!(multi.shared.prefills, 1,
+               "identical representatives must be prefilled once, not {n_streams}x");
+    assert!(multi.shared.shared_hits >= (n_streams - 1) as u64,
+            "every non-installing stream scores at least one shared hit: {:?}",
+            multi.shared);
+    assert!(multi.shared.dedup_bytes_saved > 0);
+    assert_eq!(multi.shared.evictions, 0, "ample budget must not evict");
+    // one shared entry means device residency never exceeded one rep cache
+    // — the byte-budget face of the dedup claim.
+    let entry_bytes = env.backend.kv_bytes(subgcache::runtime::SIM_BACKBONE).unwrap();
+    assert_eq!(multi.shared.peak_bytes, entry_bytes,
+               "four streams must never hold more than the one shared entry");
+
+    // per-stream accounting stays complete and consistent with the pool
+    let mut hits = 0u64;
+    let mut misses = 0u64;
+    let mut shared_hits = 0u64;
+    for (si, r) in multi.streams.iter().enumerate() {
+        assert_eq!(r.metrics.per_query.len(), n_queries, "stream {si} incomplete");
+        assert_eq!(r.metrics.hit_count() + r.metrics.miss_count(), n_queries);
+        assert_eq!(r.metrics.shared_hits, r.cache.shared_hits,
+                   "metrics must mirror the stream's cache view");
+        assert_eq!(r.metrics.dedup_bytes_saved, r.cache.dedup_bytes_saved);
+        hits += r.cache.hits;
+        misses += r.cache.misses;
+        shared_hits += r.cache.shared_hits;
+        // sharing must never change answers: every stream matches serial.
+        let got: Vec<String> = r.results.iter().map(|x| x.predicted.clone()).collect();
+        assert_eq!(got, serial_answers[0], "stream {si} diverged from serial answers");
+    }
+    assert_eq!(hits, multi.shared.hits, "view hit counters must sum to the pool's");
+    assert_eq!(misses, multi.shared.misses);
+    assert_eq!(shared_hits, multi.shared.shared_hits);
+    assert_eq!(hits + misses, (n_streams * n_queries) as u64);
+
+    // -- wall time: concurrency + dedup must beat 4 serial runs ------------
+    assert!(
+        multi.wall_time < serial_wall * 0.75,
+        "4 shared streams should clearly beat 4 serial runs: multi {:.3}s vs \
+         serial total {:.3}s",
+        multi.wall_time, serial_wall
+    );
+    assert!(multi.qps() > 0.0);
+    assert!(multi.lock.acquisitions > 0);
+
+    // nothing leaked: the pool was drained back to the backend.
+    assert_eq!(env.backend.stats().unwrap().live_kv, 0, "leaked KV handles");
+}
+
+#[test]
+fn pool_prefills_equal_distinct_reps_under_never_join() {
+    // never-join: every query opens its own cluster, so representative
+    // contents repeat both within and across streams. With an ample budget
+    // the pool must pay exactly one prefill per DISTINCT content.
+    let env = common::sim_env(SimLatency::zero());
+    let ds = sim_dataset(3, 4);
+    let cfg = ServeConfig {
+        online_threshold: -1.0,
+        cache: CachePolicy::unbounded(),
+        ..common::sim_config()
+    };
+    let coord = Coordinator::new(&env.store, &env.backend, cfg).unwrap();
+    let queries = ds.sample_test(8, 11);
+    let expect = distinct_reps(&ds, &queries);
+    assert!(expect >= 2, "fixture should span several distinct reps");
+
+    let streams = replicated_streams(&queries, 3);
+    let multi = coord
+        .serve_online_multi(&ds, &streams, &GRetriever::default())
+        .unwrap();
+    assert_eq!(multi.shared.prefills as usize, expect,
+               "prefills must equal distinct representative contents");
+    assert_eq!(multi.shared.evictions, 0);
+    assert_eq!(env.backend.stats().unwrap().live_kv, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Randomized concurrent workloads (the satellite property tests)
+// ---------------------------------------------------------------------------
+
+/// N threads x M queries with overlapping representatives: byte budget held
+/// at every observed moment, all streams complete with serial-identical
+/// answers (pin safety), and hit/miss/eviction counters sum consistently.
+#[test]
+fn randomized_concurrent_streams_hold_budget_and_stay_consistent() {
+    prop_check(4, |rng| {
+        let n_streams = rng.range(2, 5);
+        let n_queries = rng.range(3, 8);
+        let tight = rng.below(2) == 0;
+        let cache = if tight {
+            CachePolicy::new(usize::MAX, rng.range(1, 3))
+        } else {
+            CachePolicy::unbounded()
+        };
+        let thresholds = [-1.0f32, 0.5, f32::INFINITY];
+        let cfg = ServeConfig {
+            online_threshold: thresholds[rng.below(3)],
+            cache,
+            pipeline_depth: 1 + rng.below(3),
+            ..common::sim_config()
+        };
+        let env = common::sim_env(SimLatency::from_millis(2, 1, 1, 1));
+        let ds = sim_dataset(3, 3);
+        let coord = Coordinator::new(&env.store, &env.backend, cfg).unwrap();
+        let queries = ds.sample_test(n_queries, rng.below(100) as u64);
+        let serial = coord
+            .serve_online(&ds, queries.iter().copied(), &GRetriever::default())
+            .unwrap();
+        let serial_answers: Vec<String> =
+            serial.results.iter().map(|r| r.predicted.clone()).collect();
+
+        // drive the workers over an explicit pool so a live poller can
+        // watch the budget invariant WHILE the streams race.
+        let pool: Arc<SharedKvCache<subgcache::runtime::KvHandle>> =
+            Arc::new(SharedKvCache::new(cache));
+        let done = AtomicBool::new(false);
+        let retr = GRetriever::default();
+        let reports: Vec<anyhow::Result<ServeReport>> = std::thread::scope(|scope| {
+            let poller = scope.spawn(|| {
+                let mut checks = 0u64;
+                // Budget discipline itself is debug-asserted inside every
+                // install (the install-point invariant); this polls the
+                // anytime invariants while the streams race. Bounded so a
+                // failing worker (which panics before setting `done`) can
+                // never strand this thread in the scope join; at least one
+                // check always runs even if the workers finish instantly.
+                loop {
+                    assert!(pool.consistent(),
+                            "pool accounting went inconsistent under concurrency");
+                    checks += 1;
+                    if done.load(Ordering::Relaxed) || checks >= 10_000 {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                checks
+            });
+            let workers: Vec<_> = (0..n_streams)
+                .map(|_| {
+                    let pool = Arc::clone(&pool);
+                    let coord = &coord;
+                    let ds = &ds;
+                    let retr = &retr;
+                    let queries = &queries;
+                    scope.spawn(move || {
+                        let mut view = KvCacheManager::shared_view(&pool);
+                        coord.serve_online_with_cache(ds, queries.iter().copied(),
+                                                      retr, &mut view)
+                    })
+                })
+                .collect();
+            let out: Vec<_> = workers
+                .into_iter()
+                .map(|h| h.join().expect("worker must not panic"))
+                .collect();
+            done.store(true, Ordering::Relaxed);
+            assert!(poller.join().expect("poller must not panic") > 0);
+            out
+        });
+        // quiescent: drain the pool back to the backend.
+        env.backend.release_many(pool.drain_all());
+
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        let mut prefills = 0u64;
+        let mut evictions = 0u64;
+        for (si, rep) in reports.into_iter().enumerate() {
+            let rep = rep.unwrap_or_else(|e| panic!("stream {si} failed: {e}"));
+            assert_eq!(rep.metrics.per_query.len(), n_queries);
+            assert_eq!(rep.metrics.hit_count() + rep.metrics.miss_count(), n_queries);
+            let got: Vec<String> =
+                rep.results.iter().map(|r| r.predicted.clone()).collect();
+            assert_eq!(got, serial_answers,
+                       "stream {si}: sharing changed an answer (pin-safety breach?)");
+            hits += rep.cache.hits;
+            misses += rep.cache.misses;
+            prefills += rep.cache.prefills;
+            evictions += rep.cache.evictions;
+        }
+        let pool_stats = pool.stats();
+        assert_eq!(hits, pool_stats.hits, "hit counters must sum to the pool's");
+        assert_eq!(misses, pool_stats.misses);
+        assert_eq!(prefills, pool_stats.prefills);
+        assert_eq!(evictions, pool_stats.evictions);
+        assert_eq!(hits + misses, (n_streams * n_queries) as u64);
+        assert_eq!(pool_stats.resident_bytes, 0, "pool drained");
+        assert_eq!(env.backend.stats().unwrap().live_kv, 0, "no leaked KV");
+        if !tight {
+            assert_eq!(pool_stats.evictions, 0, "ample budget must not evict");
+        }
+    });
+}
+
+/// Raw multi-threaded hammer on the pool views (no backend): every handle
+/// installed leaves the pool exactly once, across evictions, releases,
+/// deferred (doomed) releases, and the final drain.
+#[test]
+fn hammer_handle_conservation_across_threads() {
+    prop_check(3, |rng| {
+        let n_threads = rng.range(2, 5);
+        let policy = CachePolicy::new(usize::MAX, rng.range(1, 4));
+        let pool: Arc<SharedKvCache<u64>> = Arc::new(SharedKvCache::new(policy));
+        let keys: Vec<RepKey> =
+            (0..6).map(|i| RepKey::of_parts(["hammer"], [i as u64])).collect();
+        let returned: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+        let installed: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+        let seed_base = rng.below(1 << 30) as u64;
+
+        std::thread::scope(|scope| {
+            for t in 0..n_threads {
+                let pool = Arc::clone(&pool);
+                let keys = &keys;
+                let returned = &returned;
+                let installed = &installed;
+                scope.spawn(move || {
+                    let mut rng = subgcache::util::rng::Rng::new(seed_base + t as u64);
+                    let mut view: KvCacheManager<u64> =
+                        KvCacheManager::shared_view(&pool);
+                    for (cid, &k) in keys.iter().enumerate() {
+                        view.bind(cid, k);
+                    }
+                    let mut next: u64 = ((t as u64) << 32) + 1;
+                    for _ in 0..120 {
+                        let cid = rng.below(keys.len());
+                        match rng.below(4) {
+                            // serve-shaped: lookup, install on miss, unpin.
+                            0 | 1 => {
+                                if view.lookup(cid).is_hit() {
+                                    view.unpin(cid);
+                                } else {
+                                    let h = next;
+                                    next += 1;
+                                    installed.lock().unwrap().push(h);
+                                    let out = view.install(cid, h, 10);
+                                    returned.lock().unwrap().extend(out);
+                                    view.unpin(cid);
+                                }
+                            }
+                            // TTL-shaped: release (possibly deferring past
+                            // another thread's pin).
+                            2 => {
+                                let out = view.release(cid);
+                                returned.lock().unwrap().extend(out);
+                            }
+                            // reservation churn: miss then abort.
+                            _ => {
+                                if view.lookup(cid).is_hit() {
+                                    view.unpin(cid);
+                                } else {
+                                    view.abort_install(cid);
+                                }
+                            }
+                        }
+                    }
+                    // end of stream: deferred handles drain through the view.
+                    let out = view.release_all();
+                    returned.lock().unwrap().extend(out);
+                });
+            }
+        });
+        // quiescent: whatever is still resident (or deferred) drains once.
+        returned.lock().unwrap().extend(pool.drain_all());
+
+        let mut got = returned.into_inner().unwrap();
+        let mut want = installed.into_inner().unwrap();
+        got.sort_unstable();
+        want.sort_unstable();
+        let dups: Vec<&u64> = got.windows(2).filter(|w| w[0] == w[1]).map(|w| &w[0])
+            .collect();
+        assert!(dups.is_empty(), "handles returned twice: {dups:?}");
+        assert_eq!(got, want, "installed and returned handle sets must match");
+        assert_eq!(pool.stats().resident_bytes, 0);
+        assert!(pool.consistent());
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Stress/regression: TTL vs foreign pins, dead lane, serial parity
+// ---------------------------------------------------------------------------
+
+/// A TTL-sweeping stream and a no-TTL stream hammer the same representative
+/// pool: sweeps must never invalidate the other stream's in-flight pins
+/// (the sim would error "unknown KV handle" on a freed entry), every
+/// deferred release must still reach the backend, and answers stay
+/// serial-identical on both streams.
+#[test]
+fn ttl_sweep_races_foreign_pins_without_corruption() {
+    let env = common::sim_env(SimLatency::from_millis(1, 2, 1, 1));
+    let ds = sim_dataset(2, 4);
+    let queries = ds.sample_test(12, 3);
+    let retr = GRetriever::default();
+    let base = ServeConfig { online_threshold: f32::INFINITY, ..common::sim_config() };
+    let sweeper_cfg = ServeConfig { cluster_ttl: Some(0), ..base.clone() };
+    let keeper_cfg = base.clone();
+
+    let serial = {
+        let coord = Coordinator::new(&env.store, &env.backend, keeper_cfg.clone()).unwrap();
+        coord.serve_online(&ds, queries.iter().copied(), &retr).unwrap()
+    };
+    let serial_answers: Vec<String> =
+        serial.results.iter().map(|r| r.predicted.clone()).collect();
+
+    let pool: Arc<SharedKvCache<subgcache::runtime::KvHandle>> =
+        Arc::new(SharedKvCache::new(base.cache));
+    let (sweeper, keeper) = std::thread::scope(|scope| {
+        let sweeper = {
+            let pool = Arc::clone(&pool);
+            let (env, ds, retr, queries, cfg) = (&env, &ds, &retr, &queries, &sweeper_cfg);
+            scope.spawn(move || {
+                let coord = Coordinator::new(&env.store, &env.backend, cfg.clone()).unwrap();
+                let mut view = KvCacheManager::shared_view(&pool);
+                coord.serve_online_with_cache(ds, queries.iter().copied(), retr, &mut view)
+            })
+        };
+        let keeper = {
+            let pool = Arc::clone(&pool);
+            let (env, ds, retr, queries, cfg) = (&env, &ds, &retr, &queries, &keeper_cfg);
+            scope.spawn(move || {
+                let coord = Coordinator::new(&env.store, &env.backend, cfg.clone()).unwrap();
+                let mut view = KvCacheManager::shared_view(&pool);
+                coord.serve_online_with_cache(ds, queries.iter().copied(), retr, &mut view)
+            })
+        };
+        (sweeper.join().expect("sweeper must not panic"),
+         keeper.join().expect("keeper must not panic"))
+    });
+    env.backend.release_many(pool.drain_all());
+
+    let sweeper = sweeper.expect("TTL stream must serve cleanly under contention");
+    let keeper = keeper.expect("no-TTL stream must serve cleanly under contention");
+    for (name, rep) in [("sweeper", &sweeper), ("keeper", &keeper)] {
+        let got: Vec<String> = rep.results.iter().map(|r| r.predicted.clone()).collect();
+        assert_eq!(got, serial_answers, "{name} diverged under TTL contention");
+        assert_eq!(rep.metrics.per_query.len(), queries.len());
+    }
+    assert_eq!(env.backend.stats().unwrap().live_kv, 0,
+               "every handle (including deferred TTL releases) must drain");
+}
+
+/// An LLM lane killed MID-run must surface an error on every stream —
+/// never hang any of them (the single-flight waiters are woken by the
+/// failing installer's reservation abort).
+#[test]
+fn dead_llm_lane_mid_run_errors_every_stream() {
+    let env = common::sim_env(SimLatency::from_millis(25, 2, 2, 1));
+    let ds = sim_dataset(3, 4);
+    // long streams so the kill lands mid-serving, not after.
+    let base = ds.sample_test(6, 5);
+    let mut long: Vec<&Query> = Vec::new();
+    for _ in 0..4 {
+        long.extend(base.iter().copied());
+    }
+    let cfg = ServeConfig { online_threshold: f32::INFINITY, ..common::sim_config() };
+    let coord = Coordinator::new(&env.store, &env.backend, cfg).unwrap();
+    let pool: Arc<SharedKvCache<subgcache::runtime::KvHandle>> =
+        Arc::new(SharedKvCache::new(CachePolicy::default()));
+    let retr = GRetriever::default();
+
+    let results: Vec<anyhow::Result<ServeReport>> = std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..3)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                let (coord, ds, retr, long) = (&coord, &ds, &retr, &long);
+                scope.spawn(move || {
+                    let mut view = KvCacheManager::shared_view(&pool);
+                    coord.serve_online_with_cache(ds, long.iter().copied(), retr,
+                                                  &mut view)
+                })
+            })
+            .collect();
+        // let the streams get going, then kill the LLM lane under them.
+        std::thread::sleep(Duration::from_millis(40));
+        env.backend.kill_lane_for_test(Lane::Llm);
+        workers
+            .into_iter()
+            .map(|h| h.join().expect("stream must error, not panic"))
+            .collect()
+    });
+    pool.drain_all(); // sim lane is gone; just empty the bookkeeping
+
+    for (si, r) in results.iter().enumerate() {
+        let err = r.as_ref().expect_err(&format!("stream {si} must surface an error"));
+        assert!(err.to_string().contains("lane"),
+                "stream {si}: unhelpful dead-lane error: {err}");
+    }
+
+    // serve_online_multi over the same dead backend also errors (fast),
+    // reporting how many streams failed.
+    let streams = replicated_streams(&base, 2);
+    let err = coord
+        .serve_online_multi(&ds, &streams, &retr)
+        .expect_err("multi over a dead lane must error, not hang");
+    assert!(err.to_string().contains("lane"), "unhelpful error: {err}");
+}
+
+/// Single-stream serving through the shared-cache machinery must be
+/// metric-for-metric identical to the serial PR 3 path, for k in {1,2,4}.
+///
+/// Two legs per depth:
+/// * default threshold — answers, arrival order, and clustering must be
+///   identical (cluster assignment never depends on which pool backs the
+///   cache);
+/// * infinite threshold (one cluster, the unambiguous-content case) —
+///   additionally the full hit/miss split and every cache counter must be
+///   equal. (At finite thresholds a shared view's content keying may
+///   legitimately dedup a drift-duplicated representative that the serial
+///   salted keying re-prefills — strictly fewer prefills, not comparable
+///   counter-for-counter.)
+#[test]
+fn single_stream_through_shared_pool_matches_serial_metrics() {
+    for depth in [1usize, 2, 4] {
+        for strict in [false, true] {
+            let lat = SimLatency::from_millis(3, 1, 1, 2);
+            let run_env = common::sim_env(lat);
+            let ds = sim_dataset(4, 3);
+            let cfg = ServeConfig {
+                pipeline_depth: depth,
+                online_threshold: if strict { f32::INFINITY } else { 0.5 },
+                ..common::sim_config()
+            };
+            let coord = Coordinator::new(&run_env.store, &run_env.backend, cfg).unwrap();
+            let queries = ds.sample_test(9, 3);
+            let retr = GRetriever::default();
+
+            let serial = coord.serve_online(&ds, queries.iter().copied(), &retr).unwrap();
+            let streams = replicated_streams(&queries, 1);
+            let multi = coord.serve_online_multi(&ds, &streams, &retr).unwrap();
+            assert_eq!(multi.streams.len(), 1);
+            let shared = &multi.streams[0];
+
+            assert_eq!(serial.results.len(), shared.results.len());
+            for (a, b) in serial.results.iter().zip(&shared.results) {
+                assert_eq!(a.id, b.id, "k={depth}: arrival order diverged");
+                assert_eq!(a.predicted, b.predicted, "k={depth}: answer diverged");
+                assert_eq!(a.cluster, b.cluster, "k={depth}: clustering diverged");
+            }
+            assert_eq!(serial.cluster_sizes, shared.cluster_sizes);
+            assert_eq!(serial.expired_clusters, shared.expired_clusters);
+            assert_eq!(shared.cache.shared_hits, 0,
+                       "a lone stream can have nothing shared with it");
+            if strict {
+                assert_eq!(serial.metrics.hit_count(), shared.metrics.hit_count(),
+                           "k={depth}");
+                assert_eq!(serial.metrics.miss_count(), shared.metrics.miss_count());
+                assert_eq!(serial.cache.prefills, shared.cache.prefills);
+                assert_eq!(serial.cache.hits, shared.cache.hits);
+                assert_eq!(serial.cache.misses, shared.cache.misses);
+                assert_eq!(serial.cache.evictions, shared.cache.evictions);
+            } else {
+                // content keying can only ever SAVE prefills.
+                assert!(shared.cache.prefills <= serial.cache.prefills,
+                        "k={depth}: shared pool must never prefill more");
+            }
+            assert_eq!(run_env.backend.stats().unwrap().live_kv, 0);
+        }
+    }
+}
