@@ -18,8 +18,10 @@ use subgcache::cache::{CachePolicy, KvCacheManager};
 use subgcache::coordinator::argmax;
 use subgcache::graph::{Edge, Node, Subgraph, TextualGraph};
 use subgcache::retrieval::GraphFeatures;
-use subgcache::runtime::{pack_subgraph, ArtifactStore, Engine};
+use subgcache::runtime::{pack_subgraph, ArtifactStore, BatchConfig, Engine};
 use subgcache::util::bench::{emit_bench_json, Bench, JsonRow};
+
+use std::time::Duration;
 
 const BACKBONE: &str = "llama-3.2-3b-sim";
 
@@ -158,15 +160,47 @@ fn full_cases(b: &mut Bench, store: &ArtifactStore)
         fast.release(h);
     });
 
+    // fused-batch cases: 4 concurrent submissions ride one lane launch
+    // (a fused device call when the module ships a `prefill_batch4` HLO
+    // entry, a counted per-member fallback loop otherwise). The `batch=<n>`
+    // tag in the row name is what `SimLatency::from_bench_json` fits the
+    // per-item batch slope from, so these rows calibrate the sim's fusion
+    // model against the real engine.
+    let batched = Engine::start_with(store, BatchConfig::new(4, Duration::from_millis(2)))?;
+    batched.warmup(BACKBONE)?;
+    let (bkv, _) = batched.prefill(BACKBONE, &tokens, 400)?;
+    b.run(&format!("extend Q={} batch=4 [fused]", c.max_q), || {
+        let pending: Vec<_> = (0..4)
+            .map(|_| batched.submit_extend(BACKBONE, &bkv, 400, &q, qlen).unwrap())
+            .collect();
+        for p in pending {
+            let (h, _) = p.wait().unwrap();
+            batched.release(h);
+        }
+    });
+    b.run("prefill 400 tokens batch=4 [fused]", || {
+        let pending: Vec<_> = (0..4)
+            .map(|_| batched.submit_prefill(BACKBONE, &tokens, 400).unwrap())
+            .collect();
+        for p in pending {
+            let (h, _) = p.wait().unwrap();
+            batched.release(h);
+        }
+    });
+    batched.release(bkv);
+
     let fs = fast.stats()?;
     let ss = slow.stats()?;
+    let bs = batched.stats()?;
     println!(
-        "\nhost KV bytes moved: device-resident {} vs host-bounce {}",
-        fs.host_kv_bytes, ss.host_kv_bytes
+        "\nhost KV bytes moved: device-resident {} vs host-bounce {}; \
+         batched engine took {} unbatched fallbacks",
+        fs.host_kv_bytes, ss.host_kv_bytes, bs.unbatched_fallbacks
     );
     Ok(vec![
         ("device_host_kv_bytes".into(), fs.host_kv_bytes.to_string()),
         ("bounce_host_kv_bytes".into(), ss.host_kv_bytes.to_string()),
+        ("batched_unbatched_fallbacks".into(), bs.unbatched_fallbacks.to_string()),
     ])
 }
 

@@ -18,16 +18,19 @@
 //! `shared_hits`, `dedup_bytes_saved`, lock contention) next to the serial
 //! rows — the cross-stream sharing regression surface.
 
-use subgcache::harness::{multi_serving_row, run_cell_with, run_multi_online_cell_with,
-                         run_online_cell_with, Cell, ServingBench};
+use subgcache::harness::{batch_config_from_args, multi_serving_row, run_cell_with,
+                         run_multi_online_cell_with, run_online_cell_with, Cell,
+                         ServingBench};
 use subgcache::prelude::*;
 use subgcache::runtime::{SimBackend, SIM_BACKBONE};
 
 const OUT: &str = "BENCH_serving.json";
 
-fn artifact_mode(store: &ArtifactStore, streams: usize) -> anyhow::Result<ServingBench> {
+fn artifact_mode(store: &ArtifactStore, streams: usize, batch_cfg: BatchConfig)
+                 -> anyhow::Result<ServingBench> {
     let mut bench = ServingBench::new("artifacts");
-    let engine = Engine::start(store)?;
+    bench.set_batch(batch_cfg);
+    let engine = Engine::start_with(store, batch_cfg)?;
     let backbone = "llama-3.2-3b-sim";
     for dataset in ["scene_graph", "oag"] {
         let ds = store.dataset(dataset)?;
@@ -58,13 +61,17 @@ fn artifact_mode(store: &ArtifactStore, streams: usize) -> anyhow::Result<Servin
     Ok(bench)
 }
 
-fn sim_quick_mode(streams: usize) -> anyhow::Result<ServingBench> {
+fn sim_quick_mode(streams: usize, batch_cfg: BatchConfig) -> anyhow::Result<ServingBench> {
     let mut bench = ServingBench::new("sim-quick");
+    bench.set_batch(batch_cfg);
     let store = sim_store();
     let ds = sim_dataset(4, 4);
     // virtual latencies with encode ≈ prefill, the regime where the lane
-    // split and depth-k scheduler show their overlap in the numbers.
-    let sim = SimBackend::start(&store, SimLatency::from_millis(6, 2, 2, 6))?;
+    // split and depth-k scheduler show their overlap in the numbers. The
+    // per-item slopes are sub-linear (fused calls cost base + slope·(n−1))
+    // so a `--max-batch > 1` run shows its win in the same JSON.
+    let lat = SimLatency::from_millis(6, 2, 2, 6).with_per_item_millis(2, 1, 1, 6);
+    let sim = SimBackend::start_with(&store, lat, batch_cfg)?;
     for &batch in &[8usize, 16] {
         let cell = Cell::new("sim", "g-retriever", SIM_BACKBONE, batch);
         let r = run_cell_with(&store, &sim, &ds, &cell)?;
@@ -103,16 +110,23 @@ fn main() -> anyhow::Result<()> {
     // fan-out (CI runs `cargo bench --bench serving -- --streams 4`).
     // `--streams 1` is honored: a one-stream-over-shared-pool row is the
     // parity reference the concurrency suite compares against.
+    // `--max-batch N --batch-window MS` turn on the LLM-lane micro-batcher
+    // (default off), and `--out PATH` redirects the JSON so batched and
+    // unbatched runs can sit side by side as artifacts.
     let args = Args::from_env();
     let streams = args.usize_or("streams", 4).max(1);
+    let batch_cfg = batch_config_from_args(&args)?;
+    let out = args.get_or("out", OUT).to_string();
     let artifacts = ArtifactStore::discover().ok();
     let mode = if artifacts.is_some() { "artifacts" } else { "sim-quick" };
-    println!("== serving bench ({mode}, streams = {streams}) ==");
+    println!("== serving bench ({mode}, streams = {streams}, max_batch = {}, \
+              window = {:.1} ms) ==",
+             batch_cfg.max_batch, batch_cfg.max_wait.as_secs_f64() * 1e3);
     let bench = match &artifacts {
-        Some(store) => artifact_mode(store, streams)?,
-        None => sim_quick_mode(streams)?,
+        Some(store) => artifact_mode(store, streams, batch_cfg)?,
+        None => sim_quick_mode(streams, batch_cfg)?,
     };
-    bench.emit(OUT)?;
-    println!("\nwrote {OUT} ({} rows)", bench.len());
+    bench.emit(&out)?;
+    println!("\nwrote {out} ({} rows)", bench.len());
     Ok(())
 }

@@ -15,13 +15,18 @@
 //! replicated streams over ONE shared KV-cache pool — the cross-stream
 //! dedup mode: identical representatives are prefilled once for the whole
 //! fleet, and the summary line reports shared hits, dedup bytes saved and
-//! pool-lock contention. `--bench-json [PATH]` emits the wall/qps summaries
-//! as `BENCH_serving.json` (same shape as `BENCH_engine.json`).
+//! pool-lock contention. `--max-batch N --batch-window MS` turn on the
+//! LLM-lane micro-batcher (concurrent compatible submissions fuse into one
+//! device call; see `runtime` docs) — mostly useful with `--streams > 1`.
+//! `--bench-json [PATH]` emits the wall/qps summaries as
+//! `BENCH_serving.json` (same shape as `BENCH_engine.json`); rows record
+//! the batch config.
 
-use subgcache::harness::{batch_from_env, bench_json_from_args, cache_policy_from_args,
-                         cache_summary, multi_serving_row, multi_summary, online_cells,
-                         run_multi_online_cell, run_online_cell, throughput_summary,
-                         Cell, ServingBench, ONLINE_HEADER};
+use subgcache::harness::{batch_config_from_args, batch_from_env, bench_json_from_args,
+                         cache_policy_from_args, cache_summary, multi_serving_row,
+                         multi_summary, online_cells, run_multi_online_cell,
+                         run_online_cell, throughput_summary, Cell, ServingBench,
+                         ONLINE_HEADER};
 use subgcache::metrics::Table;
 use subgcache::prelude::*;
 
@@ -31,7 +36,8 @@ fn main() -> anyhow::Result<()> {
         Some(p) => ArtifactStore::open(p)?,
         None => ArtifactStore::discover()?,
     };
-    let engine = Engine::start(&store)?;
+    let batch_cfg = batch_config_from_args(&args)?;
+    let engine = Engine::start_with(&store, batch_cfg)?;
     let batch = batch_from_env(args.usize_or("batch", 100));
     let backbone = args.get_or("backbone", "llama-3.2-3b-sim");
     let threshold = args.f64_or("threshold",
@@ -42,10 +48,13 @@ fn main() -> anyhow::Result<()> {
     let streams = args.usize_or("streams", 1);
     let bench_json = bench_json_from_args(&args);
     let mut bench = ServingBench::new("artifacts");
+    bench.set_batch(batch_cfg);
 
     println!("== Table 5: online (streaming) serving \
               (backbone: {backbone}, batch = {batch}, threshold = {threshold}, \
-              depth = {depth}, ttl = {ttl:?}, streams = {streams}) ==");
+              depth = {depth}, ttl = {ttl:?}, streams = {streams}, \
+              max_batch = {}, window = {:.1} ms) ==",
+             batch_cfg.max_batch, batch_cfg.max_wait.as_secs_f64() * 1e3);
     for dataset in ["scene_graph", "oag"] {
         println!("\n-- dataset: {dataset} --");
         let mut t = Table::new(&ONLINE_HEADER);

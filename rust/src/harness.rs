@@ -9,7 +9,7 @@ use crate::coordinator::{Coordinator, MultiStreamReport, ServeConfig, ServeRepor
 use crate::data::{Dataset, Query};
 use crate::metrics::{delta, delta_cells, metric_cells, Table};
 use crate::retrieval::{GRetriever, GragRetriever, Retriever};
-use crate::runtime::{ArtifactStore, Backend};
+use crate::runtime::{ArtifactStore, Backend, BatchConfig};
 use crate::util::bench::JsonRow;
 
 /// The paper's default cluster counts per dataset (§4.3: Scene Graph shines
@@ -254,6 +254,11 @@ pub fn serving_row(name: &str, r: &ServeReport) -> JsonRow {
         .int("pipeline_depth", m.pipeline_depth as u64)
         .num("llm_lane_device_s", m.lane_llm.device_time)
         .num("llm_lane_queue_s", m.lane_llm.queue_time)
+        .num("llm_lane_window_s", m.lane_llm.window_time)
+        .int("llm_device_calls", m.lane_llm.batch.device_calls)
+        .int("llm_fused_calls", m.lane_llm.batch.fused_calls)
+        .num("llm_mean_occupancy", m.lane_llm.batch.mean_occupancy())
+        .int("llm_window_stalls", m.lane_llm.batch.window_stalls)
         .num("gnn_lane_device_s", m.lane_gnn.device_time)
         .num("gnn_lane_queue_s", m.lane_gnn.queue_time)
         .int("cache_hits", r.cache.hits)
@@ -295,20 +300,40 @@ pub fn multi_summary(m: &MultiStreamReport) -> String {
 /// `BENCH_engine.json` (see `util::bench::emit_bench_json`).
 pub struct ServingBench {
     mode: String,
+    batch: Option<BatchConfig>,
     rows: Vec<JsonRow>,
 }
 
 impl ServingBench {
     pub fn new(mode: &str) -> ServingBench {
-        ServingBench { mode: mode.to_string(), rows: Vec::new() }
+        ServingBench { mode: mode.to_string(), batch: None, rows: Vec::new() }
+    }
+
+    /// Stamp the LLM-lane batch config onto every row pushed from here on,
+    /// so batched and unbatched runs landing in the same `BENCH_serving.json`
+    /// stay distinguishable after the fact.
+    pub fn set_batch(&mut self, cfg: BatchConfig) {
+        self.batch = Some(cfg);
+    }
+
+    fn stamp(&self, row: JsonRow) -> JsonRow {
+        match self.batch {
+            Some(cfg) => row
+                .int("max_batch", cfg.max_batch as u64)
+                .num("batch_window_ms", cfg.max_wait.as_secs_f64() * 1e3),
+            None => row,
+        }
     }
 
     pub fn push(&mut self, name: &str, report: &ServeReport) {
-        self.rows.push(serving_row(name, report));
+        let row = self.stamp(serving_row(name, report));
+        self.rows.push(row);
     }
 
-    /// Push a pre-built row (e.g. [`multi_serving_row`]).
+    /// Push a pre-built row (e.g. [`multi_serving_row`]); the batch config
+    /// stamp from [`ServingBench::set_batch`] still applies.
     pub fn push_row(&mut self, row: JsonRow) {
+        let row = self.stamp(row);
         self.rows.push(row);
     }
 
@@ -367,6 +392,29 @@ pub fn cache_policy_from_args(args: &crate::util::cli::Args)
     })
 }
 
+/// Parse the shared `--max-batch` / `--batch-window` (milliseconds) flags
+/// into an LLM-lane [`BatchConfig`] (one definition for every binary that
+/// exposes the micro-batcher). Defaults to batching off.
+pub fn batch_config_from_args(args: &crate::util::cli::Args)
+                              -> anyhow::Result<BatchConfig> {
+    let max_batch: usize = match args.get("max-batch") {
+        Some(v) => v.parse().map_err(|_| {
+            anyhow::anyhow!("bad --max-batch '{v}' (expected a positive integer)")
+        })?,
+        None => 1,
+    };
+    let wait_ms: f64 = match args.get("batch-window") {
+        Some(v) => v.parse().map_err(|_| {
+            anyhow::anyhow!("bad --batch-window '{v}' (expected milliseconds)")
+        })?,
+        None => 0.0,
+    };
+    anyhow::ensure!(wait_ms.is_finite() && wait_ms >= 0.0,
+                    "--batch-window must be a finite, non-negative ms value");
+    Ok(BatchConfig::new(max_batch,
+                        std::time::Duration::from_secs_f64(wait_ms / 1e3)))
+}
+
 /// Backbone list filtered by `SUBGCACHE_BACKBONES` (comma separated).
 pub fn backbones_from_env(store: &ArtifactStore) -> Vec<String> {
     let all: Vec<String> =
@@ -416,10 +464,42 @@ mod tests {
         assert_eq!(row.name, "online k=2");
         let keys: Vec<&str> = row.fields.iter().map(|(k, _)| k.as_str()).collect();
         for want in ["queries", "wall_s", "qps", "overlap_ms", "pipeline_depth",
-                     "llm_lane_device_s", "gnn_lane_device_s", "shared_hits",
-                     "dedup_bytes_saved"] {
+                     "llm_lane_device_s", "llm_lane_window_s", "llm_device_calls",
+                     "llm_fused_calls", "llm_mean_occupancy", "llm_window_stalls",
+                     "gnn_lane_device_s", "shared_hits", "dedup_bytes_saved"] {
             assert!(keys.contains(&want), "missing field {want}");
         }
+    }
+
+    #[test]
+    fn batch_config_flag_forms() {
+        let parse = |s: &str| crate::util::cli::Args::parse(
+            s.split_whitespace().map(String::from));
+        let off = batch_config_from_args(&parse("")).unwrap();
+        assert!(!off.enabled());
+        let cfg = batch_config_from_args(&parse("--max-batch 4 --batch-window 2.5"))
+            .unwrap();
+        assert_eq!(cfg.max_batch, 4);
+        assert_eq!(cfg.max_wait, std::time::Duration::from_micros(2500));
+        assert!(batch_config_from_args(&parse("--max-batch nope")).is_err());
+        assert!(batch_config_from_args(&parse("--batch-window -1")).is_err());
+    }
+
+    #[test]
+    fn serving_bench_stamps_batch_config_on_rows() {
+        let mut b = ServingBench::new("sim-quick");
+        b.set_batch(BatchConfig::new(4, std::time::Duration::from_millis(2)));
+        b.push("cell", &ServeReport::default());
+        b.push_row(JsonRow::new("multi"));
+        for row in &b.rows {
+            let keys: Vec<&str> = row.fields.iter().map(|(k, _)| k.as_str()).collect();
+            assert!(keys.contains(&"max_batch"), "missing max_batch on {}", row.name);
+            assert!(keys.contains(&"batch_window_ms"),
+                    "missing batch_window_ms on {}", row.name);
+        }
+        let stamped = b.rows[0].fields.iter()
+            .find(|(k, _)| k == "max_batch").unwrap().1.clone();
+        assert_eq!(stamped, "4");
     }
 
     #[test]

@@ -76,7 +76,7 @@ pub mod prelude {
     pub use crate::graph::{Subgraph, TextualGraph};
     pub use crate::metrics::{delta, BatchMetrics, Table};
     pub use crate::retrieval::{GRetriever, GragRetriever, GraphFeatures, Retriever};
-    pub use crate::runtime::{sim_dataset, sim_store, ArtifactStore, Backend, Engine,
-                             Lane, SimBackend, SimLatency};
+    pub use crate::runtime::{sim_dataset, sim_store, ArtifactStore, Backend, BatchConfig,
+                             Engine, Lane, SimBackend, SimLatency};
     pub use crate::util::cli::Args;
 }

@@ -24,6 +24,62 @@ pub struct QueryLatency {
     pub cache_hit: Option<bool>,
 }
 
+/// Batch-launch histogram for one lane in one serving run, observed from
+/// the per-call [`crate::runtime::BatchInfo`] leader records (exactly one
+/// leader per fused device call, so launches are counted once no matter
+/// how many members rode them).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatchHistogram {
+    /// Device launches (fused or solo) this run's calls rode in.
+    pub device_calls: u64,
+    /// Launches that fused ≥ 2 members into one device call.
+    pub fused_calls: u64,
+    /// Total members across all launches (= [`LaneTimes::calls`] when every
+    /// member of every launch belongs to this run).
+    pub members: u64,
+    /// Launches whose batch window expired before the batch filled.
+    pub window_stalls: u64,
+    /// Launch counts by occupancy: slots 0..=7 are batch sizes 1..=8, the
+    /// last slot collects 9+.
+    pub occupancy: [u64; 9],
+}
+
+impl BatchHistogram {
+    /// Record one call's batch ride; only leaders mutate the histogram.
+    pub fn observe(&mut self, b: &crate::runtime::BatchInfo) {
+        if !b.leader {
+            return;
+        }
+        self.device_calls += 1;
+        self.members += b.size as u64;
+        if b.size > 1 {
+            self.fused_calls += 1;
+        }
+        if b.stalled {
+            self.window_stalls += 1;
+        }
+        let slot = (b.size.max(1) as usize - 1).min(self.occupancy.len() - 1);
+        self.occupancy[slot] += 1;
+    }
+
+    /// Mean members per device launch (1.0 = batching did nothing).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.device_calls == 0 {
+            return 0.0;
+        }
+        self.members as f64 / self.device_calls as f64
+    }
+
+    /// Mean occupancy as a fraction of the configured `max_batch`
+    /// (0.0 when nothing launched or `max_batch` is 0).
+    pub fn fill_ratio(&self, max_batch: usize) -> f64 {
+        if max_batch == 0 {
+            return 0.0;
+        }
+        self.mean_occupancy() / max_batch as f64
+    }
+}
+
 /// Aggregate lane-side timing for one serving run: how long this run's
 /// requests sat in one lane's queue and how long the lane spent executing
 /// them. Accumulated from the per-call [`crate::runtime::CallTiming`]s, so
@@ -34,9 +90,18 @@ pub struct LaneTimes {
     /// Calls this run executed on the lane.
     pub calls: u64,
     /// Total submit→pickup seconds (queueing behind earlier lane work).
+    /// Excludes time inside an open batch window — that is `window_time` —
+    /// so batching never silently inflates cross-stream queue waits.
     pub queue_time: f64,
-    /// Total lane-side execution seconds.
+    /// Total seconds requests sat inside an open batch window waiting for
+    /// the fused launch (0 when batching is off).
+    pub window_time: f64,
+    /// Total lane-side execution seconds, counted once per device launch
+    /// (leader members only) so fused calls are never double-counted and
+    /// [`BatchMetrics::lane_busy_frac`] stays ≤ 1 relative to wall time.
     pub device_time: f64,
+    /// Occupancy/stall histogram over this run's device launches.
+    pub batch: BatchHistogram,
 }
 
 impl LaneTimes {
@@ -44,12 +109,17 @@ impl LaneTimes {
     pub fn add(&mut self, t: &crate::runtime::CallTiming) {
         self.calls += 1;
         self.queue_time += t.queue_secs;
-        self.device_time += t.device_secs;
+        self.window_time += t.window_secs;
+        if t.batch.leader {
+            self.device_time += t.device_secs;
+        }
+        self.batch.observe(&t.batch);
     }
 
-    /// Total lane seconds attributable to this run (queue + execution).
+    /// Total lane seconds attributable to this run (queue + window +
+    /// execution).
     pub fn total(&self) -> f64 {
-        self.queue_time + self.device_time
+        self.queue_time + self.window_time + self.device_time
     }
 }
 
@@ -386,19 +456,68 @@ mod tests {
     #[test]
     fn lane_times_accumulate_call_timings() {
         let mut lt = LaneTimes::default();
-        lt.add(&crate::runtime::CallTiming { queue_secs: 0.1, device_secs: 0.4 });
-        lt.add(&crate::runtime::CallTiming { queue_secs: 0.2, device_secs: 0.3 });
+        lt.add(&crate::runtime::CallTiming {
+            queue_secs: 0.1, device_secs: 0.4, ..Default::default()
+        });
+        lt.add(&crate::runtime::CallTiming {
+            queue_secs: 0.2, device_secs: 0.3, ..Default::default()
+        });
         assert_eq!(lt.calls, 2);
         assert!((lt.queue_time - 0.3).abs() < 1e-12);
         assert!((lt.device_time - 0.7).abs() < 1e-12);
         assert!((lt.total() - 1.0).abs() < 1e-12);
+        assert_eq!(lt.batch.device_calls, 2, "solo calls are their own launches");
+        assert_eq!(lt.batch.fused_calls, 0);
+    }
+
+    #[test]
+    fn lane_times_split_window_from_queue_and_count_device_once_per_launch() {
+        use crate::runtime::BatchInfo;
+        let mut lt = LaneTimes::default();
+        // a 3-member fused launch: every member carries the full 0.6 s
+        // device span, but only the leader may add it to the aggregate
+        for i in 0..3u32 {
+            lt.add(&crate::runtime::CallTiming {
+                queue_secs: 0.1,
+                window_secs: 0.05,
+                device_secs: 0.6,
+                batch: BatchInfo { size: 3, leader: i == 0, stalled: i == 0 },
+            });
+        }
+        assert_eq!(lt.calls, 3);
+        assert!((lt.queue_time - 0.3).abs() < 1e-12, "queue excludes window residency");
+        assert!((lt.window_time - 0.15).abs() < 1e-12);
+        assert!((lt.device_time - 0.6).abs() < 1e-12, "device counted once per launch");
+        assert_eq!(lt.batch.device_calls, 1);
+        assert_eq!(lt.batch.fused_calls, 1);
+        assert_eq!(lt.batch.members, 3);
+        assert_eq!(lt.batch.window_stalls, 1);
+        assert_eq!(lt.batch.occupancy[2], 1, "size-3 launch lands in slot 2");
+        assert!((lt.batch.mean_occupancy() - 3.0).abs() < 1e-12);
+        assert!((lt.batch.fill_ratio(4) - 0.75).abs() < 1e-12);
+        assert_eq!(lt.batch.fill_ratio(0), 0.0);
+    }
+
+    #[test]
+    fn batch_histogram_clamps_oversized_launches_into_last_slot() {
+        use crate::runtime::BatchInfo;
+        let mut h = BatchHistogram::default();
+        h.observe(&BatchInfo { size: 12, leader: true, stalled: false });
+        h.observe(&BatchInfo { size: 12, leader: false, stalled: false });
+        assert_eq!(h.device_calls, 1, "non-leaders never count");
+        assert_eq!(h.occupancy[8], 1);
+        assert_eq!(h.mean_occupancy(), 12.0);
     }
 
     #[test]
     fn lane_busy_frac_needs_wall_time_and_can_sum_past_one() {
         let mut m = BatchMetrics::default();
-        m.lane_llm.add(&crate::runtime::CallTiming { queue_secs: 0.0, device_secs: 1.5 });
-        m.lane_gnn.add(&crate::runtime::CallTiming { queue_secs: 0.0, device_secs: 1.0 });
+        m.lane_llm.add(&crate::runtime::CallTiming {
+            queue_secs: 0.0, device_secs: 1.5, ..Default::default()
+        });
+        m.lane_gnn.add(&crate::runtime::CallTiming {
+            queue_secs: 0.0, device_secs: 1.0, ..Default::default()
+        });
         assert_eq!(m.lane_busy_frac(crate::runtime::Lane::Llm), 0.0, "no wall_time yet");
         m.wall_time = 2.0;
         assert!((m.lane_busy_frac(crate::runtime::Lane::Llm) - 0.75).abs() < 1e-12);

@@ -38,6 +38,8 @@
 
 use std::sync::mpsc::Receiver;
 
+use super::batch::BatchInfo;
+
 /// A backend execution lane (one worker thread + queue each).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Lane {
@@ -77,23 +79,35 @@ pub struct EngineStats {
     /// fallback (or forced `SUBGCACHE_KV_HOST_BOUNCE`) is in effect.
     /// Always 0 for the sim backend.
     pub host_kv_bytes: u64,
+    /// Multi-member batches the backend could not execute as one fused
+    /// device call (no batched HLO entry for the op) and ran as a counted
+    /// per-member loop instead. Always 0 for the sim backend, which fuses
+    /// everything.
+    pub unbatched_fallbacks: u64,
 }
 
 /// Lane-side timing of one executed call, measured on the worker thread so
 /// it stays honest under pipelined submission: `queue_secs` is how long the
 /// request sat in the lane's channel before pickup (charged to the query),
-/// `device_secs` the lane-thread span of the call itself (execute + result
-/// materialization).
+/// `window_secs` how long it then sat inside an open batch window waiting
+/// for the fused launch (zero when batching is off), and `device_secs` the
+/// lane-thread span of the call itself (execute + result materialization;
+/// for a fused batch, the whole batch's span — every member really waited
+/// that long). `batch` records how the request rode the lane; aggregates
+/// use its `leader` flag to count the shared device span exactly once per
+/// launch (see [`crate::runtime::batch`]).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct CallTiming {
     pub queue_secs: f64,
+    pub window_secs: f64,
     pub device_secs: f64,
+    pub batch: BatchInfo,
 }
 
 impl CallTiming {
-    /// Total submit→reply lane time (queue + execution).
+    /// Total submit→reply lane time (queue + window + execution).
     pub fn secs(&self) -> f64 {
-        self.queue_secs + self.device_secs
+        self.queue_secs + self.window_secs + self.device_secs
     }
 }
 
@@ -260,6 +274,7 @@ pub(crate) fn merge_stats(parts: Vec<EngineStats>) -> EngineStats {
         out.live_kv += p.live_kv;
         out.compile_secs += p.compile_secs;
         out.host_kv_bytes += p.host_kv_bytes;
+        out.unbatched_fallbacks += p.unbatched_fallbacks;
     }
     out.calls.sort_by(|a, b| a.0.cmp(&b.0));
     out
@@ -305,8 +320,11 @@ mod tests {
 
     #[test]
     fn call_timing_sums_components() {
-        let t = CallTiming { queue_secs: 0.25, device_secs: 0.5 };
+        let t = CallTiming { queue_secs: 0.25, device_secs: 0.5, ..Default::default() };
         assert!((t.secs() - 0.75).abs() < 1e-12);
+        let w = CallTiming { queue_secs: 0.25, window_secs: 0.125, device_secs: 0.5,
+                             ..Default::default() };
+        assert!((w.secs() - 0.875).abs() < 1e-12, "window time counts toward secs()");
     }
 
     #[test]
@@ -323,17 +341,20 @@ mod tests {
             live_kv: 3,
             compile_secs: 1.0,
             host_kv_bytes: 0,
+            unbatched_fallbacks: 1,
         };
         let b = EngineStats {
             calls: vec![("gat.encode".into(), 4, 0.25)],
             live_kv: 0,
             compile_secs: 0.5,
             host_kv_bytes: 8,
+            unbatched_fallbacks: 2,
         };
         let m = merge_stats(vec![a, b]);
         assert_eq!(m.live_kv, 3);
         assert!((m.compile_secs - 1.5).abs() < 1e-12);
         assert_eq!(m.host_kv_bytes, 8);
+        assert_eq!(m.unbatched_fallbacks, 3);
         assert_eq!(m.calls[0].0, "gat.encode", "calls must be re-sorted");
         assert_eq!(m.calls[1].0, "m.prefill");
     }

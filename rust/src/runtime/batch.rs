@@ -1,0 +1,248 @@
+//! Lane-side continuous micro-batching: the window/compatibility machinery
+//! shared by the PJRT engine and the sim backend.
+//!
+//! # The batching contract
+//!
+//! A lane worker that receives a *fusible* request (prefill / extend /
+//! generate / encode) opens a **batch window**: it keeps draining its queue
+//! for up to [`BatchConfig::max_wait`], collecting further requests that are
+//! *compatible* with the first — same op kind AND same module (backbone) —
+//! until the batch holds [`BatchConfig::max_batch`] members, the window
+//! expires, or an incompatible request arrives (which closes the window
+//! early and is carried over to execute right after the batch, preserving
+//! lane FIFO order). The collected members execute as ONE device call and
+//! the per-member results are scattered back to each caller's ticket, so
+//! nothing above the `Backend` trait changes shape.
+//!
+//! Members of one batch are always mutually independent: a request that
+//! needs another's result (e.g. an extend on a prefill's handle) can only
+//! be submitted after that ticket resolved, so it can never share a window
+//! with its producer.
+//!
+//! # Timing attribution
+//!
+//! Per-request [`super::CallTiming`] stays honest inside a fused batch:
+//!
+//! * `queue_secs`  — submit → the moment the worker pulled the request off
+//!   the channel (into the forming batch);
+//! * `window_secs` — pulled → batch launch (residency inside the open
+//!   window; zero when batching is off);
+//! * `device_secs` — the batch's device span, attributed to **every**
+//!   member (each really did wait that long for its result).
+//!
+//! So that aggregates don't double-count the shared device span,
+//! [`BatchInfo::leader`] marks exactly one member per launch;
+//! `metrics::LaneTimes` sums `device_secs` over leaders only, keeping
+//! lane-busy fractions ≤ wall time no matter the occupancy.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Lane micro-batcher knobs. The default ([`BatchConfig::off`]) disables
+/// fusion entirely — one request per device call, the pre-batching
+/// behavior, bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchConfig {
+    /// Most members one fused device call may carry (≥ 1; 1 = no fusion).
+    pub max_batch: usize,
+    /// Longest a non-full batch window stays open waiting for more
+    /// compatible work. `ZERO` with `max_batch > 1` fuses only what is
+    /// already queued (opportunistic batching, no added latency).
+    pub max_wait: Duration,
+}
+
+impl BatchConfig {
+    /// Batching disabled: every request is its own device call.
+    pub fn off() -> BatchConfig {
+        BatchConfig { max_batch: 1, max_wait: Duration::ZERO }
+    }
+
+    /// `max_batch` is clamped to ≥ 1.
+    pub fn new(max_batch: usize, max_wait: Duration) -> BatchConfig {
+        BatchConfig { max_batch: max_batch.max(1), max_wait }
+    }
+
+    /// Whether this config can ever fuse two requests.
+    pub fn enabled(&self) -> bool {
+        self.max_batch > 1
+    }
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig::off()
+    }
+}
+
+/// How one request rode the lane: carried on every [`super::CallTiming`]
+/// so run-level metrics can reconstruct launch counts and occupancy from
+/// per-request records alone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchInfo {
+    /// Members in the fused device call this request rode in (1 = alone).
+    pub size: u32,
+    /// Exactly one member per launch carries `leader = true`; aggregates
+    /// count device time and occupancy once per launch through it.
+    pub leader: bool,
+    /// Leader only: the window expired before the batch filled (the launch
+    /// paid `max_wait` without reaching `max_batch`).
+    pub stalled: bool,
+}
+
+impl Default for BatchInfo {
+    fn default() -> Self {
+        BatchInfo { size: 1, leader: true, stalled: false }
+    }
+}
+
+impl BatchInfo {
+    /// Info for member `i` of an `n`-member launch.
+    pub(crate) fn member(i: usize, n: usize, stalled: bool) -> BatchInfo {
+        BatchInfo { size: n as u32, leader: i == 0, stalled: stalled && i == 0 }
+    }
+}
+
+/// One batch window's worth of requests pulled off a lane queue.
+pub(crate) struct Collected<R> {
+    /// The members in arrival order, each with its pickup instant (the end
+    /// of its `queue_secs`).
+    pub members: Vec<(R, Instant)>,
+    /// An incompatible request that closed the window early; the lane must
+    /// process it immediately after the batch (FIFO preserved: it arrived
+    /// after every member).
+    pub carry: Option<R>,
+    /// The window expired before the batch filled.
+    pub stalled: bool,
+    /// Batch launch instant (the end of every member's `window_secs`).
+    pub launched: Instant,
+}
+
+/// Drain a lane queue under the batch window. `first` has already been
+/// received; more requests are pulled while `compatible(&first, &next)`
+/// holds, the batch is under `cfg.max_batch`, and the window has time left.
+/// With `max_batch == 1` this returns immediately — the single-request
+/// fast path costs one `Instant::now()` over the pre-batching code.
+pub(crate) fn collect_window<R>(rx: &Receiver<R>, first: R, cfg: BatchConfig,
+                                compatible: impl Fn(&R, &R) -> bool)
+                                -> Collected<R> {
+    let picked = Instant::now();
+    let mut members = vec![(first, picked)];
+    let mut carry = None;
+    let mut stalled = false;
+    if cfg.max_batch > 1 {
+        let deadline = picked + cfg.max_wait;
+        while members.len() < cfg.max_batch {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            let next = if remaining.is_zero() {
+                match rx.try_recv() {
+                    Ok(r) => Some(r),
+                    Err(_) => {
+                        // nothing instantly available; only a window that
+                        // was actually held open counts as a stall
+                        stalled = !cfg.max_wait.is_zero();
+                        None
+                    }
+                }
+            } else {
+                match rx.recv_timeout(remaining) {
+                    Ok(r) => Some(r),
+                    Err(RecvTimeoutError::Timeout) => {
+                        stalled = true;
+                        None
+                    }
+                    Err(RecvTimeoutError::Disconnected) => None,
+                }
+            };
+            let Some(r) = next else { break };
+            if compatible(&members[0].0, &r) {
+                members.push((r, Instant::now()));
+            } else {
+                carry = Some(r);
+                break;
+            }
+        }
+    }
+    Collected { members, carry, stalled, launched: Instant::now() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn config_default_is_off_and_clamps() {
+        assert_eq!(BatchConfig::default(), BatchConfig::off());
+        assert!(!BatchConfig::off().enabled());
+        let c = BatchConfig::new(0, Duration::from_millis(5));
+        assert_eq!(c.max_batch, 1, "max_batch clamps to >= 1");
+        assert!(BatchConfig::new(4, Duration::ZERO).enabled());
+    }
+
+    #[test]
+    fn batch_info_default_is_a_lone_leader() {
+        let b = BatchInfo::default();
+        assert_eq!((b.size, b.leader, b.stalled), (1, true, false));
+        let m = BatchInfo::member(2, 4, true);
+        assert_eq!((m.size, m.leader, m.stalled), (4, false, false));
+        let l = BatchInfo::member(0, 4, true);
+        assert!(l.leader && l.stalled, "only the leader carries the stall");
+    }
+
+    #[test]
+    fn max_batch_one_returns_immediately() {
+        let (_tx, rx) = channel::<u32>();
+        let t0 = Instant::now();
+        let c = collect_window(&rx, 7, BatchConfig::off(), |_, _| true);
+        assert!(t0.elapsed() < Duration::from_millis(20), "no window held open");
+        assert_eq!(c.members.len(), 1);
+        assert!(c.carry.is_none() && !c.stalled);
+    }
+
+    #[test]
+    fn collects_compatible_until_full_without_stalling() {
+        let (tx, rx) = channel::<u32>();
+        tx.send(2).unwrap();
+        tx.send(3).unwrap();
+        let cfg = BatchConfig::new(3, Duration::from_secs(5));
+        let c = collect_window(&rx, 1, cfg, |_, _| true);
+        assert_eq!(c.members.iter().map(|(r, _)| *r).collect::<Vec<_>>(), [1, 2, 3]);
+        assert!(!c.stalled, "a full batch is not a stall");
+        assert!(c.carry.is_none());
+    }
+
+    #[test]
+    fn incompatible_request_closes_window_and_carries_over() {
+        let (tx, rx) = channel::<u32>();
+        tx.send(10).unwrap(); // compatible (same parity)
+        tx.send(11).unwrap(); // incompatible — must carry, not join
+        let cfg = BatchConfig::new(8, Duration::from_secs(5));
+        let c = collect_window(&rx, 0, cfg, |a, b| a % 2 == b % 2);
+        assert_eq!(c.members.iter().map(|(r, _)| *r).collect::<Vec<_>>(), [0, 10]);
+        assert_eq!(c.carry, Some(11));
+        assert!(!c.stalled);
+    }
+
+    #[test]
+    fn empty_queue_expires_the_window_as_a_stall() {
+        let (_tx, rx) = channel::<u32>();
+        let cfg = BatchConfig::new(4, Duration::from_millis(20));
+        let t0 = Instant::now();
+        let c = collect_window(&rx, 1, cfg, |_, _| true);
+        assert!(t0.elapsed() >= Duration::from_millis(20), "window held open");
+        assert_eq!(c.members.len(), 1);
+        assert!(c.stalled);
+    }
+
+    #[test]
+    fn zero_wait_fuses_only_whats_queued() {
+        let (tx, rx) = channel::<u32>();
+        tx.send(2).unwrap();
+        let cfg = BatchConfig::new(8, Duration::ZERO);
+        let t0 = Instant::now();
+        let c = collect_window(&rx, 1, cfg, |_, _| true);
+        assert!(t0.elapsed() < Duration::from_millis(20));
+        assert_eq!(c.members.len(), 2);
+        assert!(!c.stalled, "no window was held open");
+    }
+}

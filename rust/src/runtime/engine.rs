@@ -47,15 +47,26 @@
 //! and one logits row per call. Environment flags (`SUBGCACHE_TRACE`,
 //! `SUBGCACHE_KV_HOST_BOUNCE`) are read once at [`Engine::start_at`] on the
 //! caller's thread — never on the hot path.
+//!
+//! # Micro-batching
+//!
+//! With a [`BatchConfig`] (explicit via [`Engine::start_at_with`], or from
+//! `SUBGCACHE_MAX_BATCH` / `SUBGCACHE_BATCH_WAIT_MS`), the LLM lane drains
+//! its queue under a time/size window and fuses compatible requests (same
+//! op + module) into one device call — see [`crate::runtime::batch`] for
+//! the full contract. Ops with a batched HLO entry (`prefill_batch<n>`)
+//! execute genuinely fused; a multi-member batch without one runs as a
+//! per-member loop and increments [`EngineStats::unbatched_fallbacks`].
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::backend::{merge_stats, Backend, CallTiming, EngineStats, KvHandle, Lane,
                      PendingEncode, PendingExtend, PendingGenerate, PendingKv,
                      PendingPrefill, Ticket};
+use super::batch::{collect_window, BatchConfig, BatchInfo, Collected};
 use super::manifest::{EntrySpec, Manifest, ModuleSpec};
 
 type KvReply = Sender<anyhow::Result<(u64, Vec<f32>, CallTiming)>>;
@@ -134,9 +145,33 @@ pub struct Engine {
     manifest: Manifest,
 }
 
+/// Default [`BatchConfig`] from the environment (`SUBGCACHE_MAX_BATCH`,
+/// `SUBGCACHE_BATCH_WAIT_MS`); batching off when unset/unparsable.
+fn batch_config_from_env() -> BatchConfig {
+    let max_batch = std::env::var("SUBGCACHE_MAX_BATCH")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+    let wait_ms = std::env::var("SUBGCACHE_BATCH_WAIT_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0u64);
+    BatchConfig::new(max_batch, Duration::from_millis(wait_ms))
+}
+
 impl Engine {
-    /// Spawn both lane worker threads over an artifact directory.
+    /// Spawn both lane worker threads over an artifact directory. The LLM
+    /// lane's batch config comes from the environment
+    /// (`SUBGCACHE_MAX_BATCH` / `SUBGCACHE_BATCH_WAIT_MS`; off when unset).
     pub fn start_at(root: PathBuf, manifest: Manifest) -> anyhow::Result<Engine> {
+        let cfg = batch_config_from_env();
+        Engine::start_at_with(root, manifest, cfg)
+    }
+
+    /// Like [`start_at`](Self::start_at) with an explicit LLM-lane batch
+    /// config (the GNN lane never batches).
+    pub fn start_at_with(root: PathBuf, manifest: Manifest, cfg: BatchConfig)
+                         -> anyhow::Result<Engine> {
         // Environment is read here, once, on the caller's thread: hot-path
         // calls never touch the environment, and tests can flip the flags
         // between engine starts without racing the worker threads.
@@ -149,9 +184,12 @@ impl Engine {
             let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
             let root = root.clone();
             let thread_manifest = manifest.clone();
+            let lane_cfg = if lane == Lane::Llm { cfg } else { BatchConfig::off() };
             let thread = std::thread::Builder::new()
                 .name(format!("pjrt-{}", lane.name()))
-                .spawn(move || lane_main(root, thread_manifest, opts, rx, ready_tx))?;
+                .spawn(move || {
+                    lane_main(root, thread_manifest, opts, lane_cfg, rx, ready_tx)
+                })?;
             ready_rx.recv().map_err(|_| {
                 anyhow::anyhow!("engine {} lane died during startup", lane.name())
             })??;
@@ -394,6 +432,9 @@ struct State {
     counters: HashMap<String, (u64, f64)>,
     compile_secs: f64,
     host_kv_bytes: u64,
+    /// Multi-member batches with no batched HLO entry for their op,
+    /// executed as a per-member loop instead of one fused device call.
+    unbatched_fallbacks: u64,
     opts: EngineOpts,
 }
 
@@ -410,19 +451,21 @@ pub(crate) fn logits_row(qlen: i32, rows: usize) -> usize {
     (qlen.max(1) as usize).min(rows) - 1
 }
 
-/// Lane-side timing wrapper for one request: `queue` is how long the
-/// request waited in the channel, `device` the lane-thread span of the
-/// handler (execute + result materialization).
-fn timed<T>(submitted: Instant, f: impl FnOnce() -> anyhow::Result<T>)
-            -> anyhow::Result<(T, CallTiming)> {
-    let queue_secs = submitted.elapsed().as_secs_f64();
-    let t0 = Instant::now();
-    let out = f()?;
-    Ok((out, CallTiming { queue_secs, device_secs: t0.elapsed().as_secs_f64() }))
+/// Fusibility key: op kind + module (backbone). Two requests may share a
+/// batch iff their keys are equal; control traffic (release / warmup /
+/// stats / shutdown) has no key and never fuses.
+fn req_key(r: &Req) -> Option<(u8, &str)> {
+    match r {
+        Req::Prefill { module, .. } => Some((0, module)),
+        Req::Extend { module, .. } => Some((1, module)),
+        Req::Generate { module, .. } => Some((2, module)),
+        Req::Encode { module, .. } => Some((3, module)),
+        _ => None,
+    }
 }
 
-fn lane_main(root: PathBuf, manifest: Manifest, opts: EngineOpts, rx: Receiver<Req>,
-             ready: Sender<anyhow::Result<()>>) {
+fn lane_main(root: PathBuf, manifest: Manifest, opts: EngineOpts, cfg: BatchConfig,
+             rx: Receiver<Req>, ready: Sender<anyhow::Result<()>>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => c,
         Err(e) => {
@@ -440,58 +483,67 @@ fn lane_main(root: PathBuf, manifest: Manifest, opts: EngineOpts, rx: Receiver<R
         counters: HashMap::new(),
         compile_secs: 0.0,
         host_kv_bytes: 0,
+        unbatched_fallbacks: 0,
         opts,
     };
     let _ = ready.send(Ok(()));
 
-    while let Ok(req) = rx.recv() {
-        match req {
-            Req::Prefill { module, tokens, plen, submitted, reply } => {
-                let res = timed(submitted, || st.prefill(&module, &tokens, plen))
-                    .map(|((id, logits), t)| (id, logits, t));
-                let _ = reply.send(res);
-            }
-            Req::Extend { module, kv, plen, q_tokens, qlen, submitted, reply } => {
-                let res = timed(submitted, || st.extend(&module, kv, plen, &q_tokens, qlen))
-                    .map(|((id, logits), t)| (id, logits, t));
-                let _ = reply.send(res);
-            }
-            Req::Generate { module, kv, cur_len, first_tok, submitted, reply } => {
-                let _ = reply.send(timed(submitted, || {
-                    st.generate(&module, kv, cur_len, first_tok)
-                }));
-            }
-            Req::Encode { module, x, adj, mask, submitted, reply } => {
-                let _ = reply.send(timed(submitted, || st.encode(&module, &x, &adj, &mask)));
-            }
-            Req::Release { kv } => {
-                st.kvs.remove(&kv);
-            }
-            Req::ReleaseMany { kvs } => {
-                for kv in kvs {
+    // An incompatible request that closed the previous batch window; it is
+    // processed before anything newer (lane FIFO).
+    let mut carry: Option<Req> = None;
+    loop {
+        let req = match carry.take() {
+            Some(r) => r,
+            None => match rx.recv() {
+                Ok(r) => r,
+                Err(_) => return,
+            },
+        };
+        if req_key(&req).is_none() {
+            match req {
+                Req::Release { kv } => {
                     st.kvs.remove(&kv);
                 }
+                Req::ReleaseMany { kvs } => {
+                    for kv in kvs {
+                        st.kvs.remove(&kv);
+                    }
+                }
+                Req::Warmup { module, reply } => {
+                    let _ = reply.send(st.warmup(&module));
+                }
+                Req::Stats { reply } => {
+                    let mut calls: Vec<(String, u64, f64)> = st
+                        .counters
+                        .iter()
+                        .map(|(k, &(n, s))| (k.clone(), n, s))
+                        .collect();
+                    calls.sort_by(|a, b| a.0.cmp(&b.0));
+                    let _ = reply.send(EngineStats {
+                        calls,
+                        live_kv: st.kvs.len(),
+                        compile_secs: st.compile_secs,
+                        host_kv_bytes: st.host_kv_bytes,
+                        unbatched_fallbacks: st.unbatched_fallbacks,
+                    });
+                }
+                Req::Shutdown => return,
+                _ => unreachable!("fusible requests are handled below"),
             }
-            Req::Warmup { module, reply } => {
-                let _ = reply.send(st.warmup(&module));
-            }
-            Req::Stats { reply } => {
-                let mut calls: Vec<(String, u64, f64)> = st
-                    .counters
-                    .iter()
-                    .map(|(k, &(n, s))| (k.clone(), n, s))
-                    .collect();
-                calls.sort_by(|a, b| a.0.cmp(&b.0));
-                let _ = reply.send(EngineStats {
-                    calls,
-                    live_kv: st.kvs.len(),
-                    compile_secs: st.compile_secs,
-                    host_kv_bytes: st.host_kv_bytes,
-                });
-            }
-            Req::Shutdown => break,
+            continue;
         }
+        let mut col = collect_window(&rx, req, cfg, |a, b| req_key(a) == req_key(b));
+        carry = col.carry.take();
+        st.run_batch(col);
     }
+}
+
+/// Per-member staged result + reply slot (all members of one batch share a
+/// variant, but the reply channel types differ per variant).
+enum BatchOut {
+    Kv(anyhow::Result<(u64, Vec<f32>)>, KvReply),
+    Gen(anyhow::Result<Vec<i32>>, Sender<anyhow::Result<(Vec<i32>, CallTiming)>>),
+    Enc(anyhow::Result<Vec<f32>>, Sender<anyhow::Result<(Vec<f32>, CallTiming)>>),
 }
 
 /// Outputs of one entry-point execution.
@@ -508,6 +560,178 @@ enum ExecOut {
 }
 
 impl State {
+    /// Execute one collected batch: one fused device call when the op has a
+    /// batched HLO entry (currently `prefill_batch<n>`), otherwise a
+    /// counted per-member fallback loop; then scatter per-member replies
+    /// with the timing split described in [`crate::runtime::batch`]
+    /// (`device_secs` = the whole batch's lane-thread span, for every
+    /// member; the leader flag lets aggregates count it once).
+    fn run_batch(&mut self, mut col: Collected<Req>) {
+        let n = col.members.len();
+        let t0 = Instant::now();
+        let mut outs: Vec<(BatchOut, Instant, Instant)> = Vec::with_capacity(n);
+        let fused_entry = if n > 1 {
+            match &col.members[0].0 {
+                Req::Prefill { module, .. } => {
+                    let entry = format!("prefill_batch{n}");
+                    self.manifest
+                        .module(module)
+                        .ok()
+                        .filter(|m| m.entries.contains_key(&entry))
+                        .map(|_| entry)
+                }
+                _ => None,
+            }
+        } else {
+            None
+        };
+        if let Some(entry) = fused_entry {
+            let mut module = String::new();
+            let mut inputs = Vec::with_capacity(n);
+            let mut slots = Vec::with_capacity(n);
+            for (req, picked) in col.members.drain(..) {
+                match req {
+                    Req::Prefill { module: m, tokens, plen, submitted, reply } => {
+                        module = m;
+                        inputs.push((tokens, plen));
+                        slots.push((reply, submitted, picked));
+                    }
+                    _ => unreachable!("fused batches are homogeneous"),
+                }
+            }
+            match self.prefill_fused(&module, &entry, &inputs) {
+                Ok(results) => {
+                    for (r, (reply, submitted, picked)) in results.into_iter().zip(slots) {
+                        outs.push((BatchOut::Kv(Ok(r), reply), submitted, picked));
+                    }
+                }
+                Err(e) => {
+                    // anyhow errors don't clone; every member gets the text
+                    let msg = format!("fused {module}.{entry} failed: {e:#}");
+                    for (reply, submitted, picked) in slots {
+                        outs.push((BatchOut::Kv(Err(anyhow::anyhow!(msg.clone())), reply),
+                                   submitted, picked));
+                    }
+                }
+            }
+        } else {
+            if n > 1 {
+                self.unbatched_fallbacks += 1;
+            }
+            for (req, picked) in col.members.drain(..) {
+                let (out, submitted) = match req {
+                    Req::Prefill { module, tokens, plen, submitted, reply } => {
+                        (BatchOut::Kv(self.prefill(&module, &tokens, plen), reply),
+                         submitted)
+                    }
+                    Req::Extend { module, kv, plen, q_tokens, qlen, submitted, reply } => {
+                        (BatchOut::Kv(self.extend(&module, kv, plen, &q_tokens, qlen),
+                                      reply),
+                         submitted)
+                    }
+                    Req::Generate { module, kv, cur_len, first_tok, submitted, reply } => {
+                        (BatchOut::Gen(self.generate(&module, kv, cur_len, first_tok),
+                                       reply),
+                         submitted)
+                    }
+                    Req::Encode { module, x, adj, mask, submitted, reply } => {
+                        (BatchOut::Enc(self.encode(&module, &x, &adj, &mask), reply),
+                         submitted)
+                    }
+                    _ => unreachable!("control requests never enter a batch"),
+                };
+                outs.push((out, submitted, picked));
+            }
+        }
+        let device_secs = t0.elapsed().as_secs_f64();
+        for (i, (out, submitted, picked)) in outs.into_iter().enumerate() {
+            let t = CallTiming {
+                queue_secs: picked.saturating_duration_since(submitted).as_secs_f64(),
+                window_secs: col.launched.saturating_duration_since(picked).as_secs_f64(),
+                device_secs,
+                batch: BatchInfo::member(i, n, col.stalled),
+            };
+            match out {
+                BatchOut::Kv(r, reply) => {
+                    let _ = reply.send(r.map(|(id, logits)| (id, logits, t)));
+                }
+                BatchOut::Gen(r, reply) => {
+                    let _ = reply.send(r.map(|toks| (toks, t)));
+                }
+                BatchOut::Enc(r, reply) => {
+                    let _ = reply.send(r.map(|emb| (emb, t)));
+                }
+            }
+        }
+    }
+
+    /// Fused prefill over `prefill_batch<n>`: tokens stacked to `[n, S]`
+    /// plus plens `[n]`, returning `2n + 1` output leaves — `(k_i, v_i)`
+    /// per member in order, then a `[n, V]` logits matrix whose row `i` is
+    /// member `i`'s next-token row. This is the batched-HLO ABI
+    /// python/compile emits for batch-capable entries (ROADMAP follow-on);
+    /// when the entry is absent the batch routes through the counted
+    /// fallback loop instead of this path.
+    fn prefill_fused(&mut self, module: &str, entry: &str, members: &[(Vec<i32>, i32)])
+                     -> anyhow::Result<Vec<(u64, Vec<f32>)>> {
+        let n = members.len();
+        self.ensure_entry(module, entry)?;
+        let shape = &self.entry_spec(module, entry).extra_args[0].shape;
+        anyhow::ensure!(shape.len() == 2 && shape[0] == n,
+                        "{module}.{entry}: tokens arg shape {shape:?}, want [{n}, S]");
+        let s = shape[1];
+        let mut toks = Vec::with_capacity(n * s);
+        let mut plens = Vec::with_capacity(n);
+        for (t, p) in members {
+            anyhow::ensure!(t.len() == s, "fused prefill: {} tokens, want {s}", t.len());
+            toks.extend_from_slice(t);
+            plens.push(*p);
+        }
+        let vocab = self.manifest.module(module)?.dims
+            .ok_or_else(|| anyhow::anyhow!("{module}: not an llm module"))?
+            .vocab;
+        let extras = vec![
+            Extra::Own(self.buf_i32(&toks, &[n, s])?),
+            Extra::Own(self.buf_i32(&plens, &[n])?),
+        ];
+        match self.call(module, entry, extras)? {
+            ExecOut::Leaves(leaves) => {
+                anyhow::ensure!(leaves.len() == 2 * n + 1,
+                                "{module}.{entry}: {} outputs, want 2n+1 = {}",
+                                leaves.len(), 2 * n + 1);
+                let mut it = leaves.into_iter();
+                let mut pairs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let k = it.next().unwrap();
+                    let v = it.next().unwrap();
+                    pairs.push((k, v));
+                }
+                let logits = it.next().unwrap()
+                    .to_literal_sync().map_err(xerr)?
+                    .to_vec::<f32>().map_err(xerr)?;
+                anyhow::ensure!(logits.len() == n * vocab,
+                                "{module}.{entry}: {} logits, want [{n}, {vocab}]",
+                                logits.len());
+                let mut results = Vec::with_capacity(n);
+                for (i, (k, v)) in pairs.into_iter().enumerate() {
+                    let id = if self.opts.host_bounce {
+                        let kl = k.to_literal_sync().map_err(xerr)?;
+                        let vl = v.to_literal_sync().map_err(xerr)?;
+                        self.store_kv_literals(module, kl, vl)?
+                    } else {
+                        self.insert_kv(k, v)
+                    };
+                    results.push((id, logits[i * vocab..(i + 1) * vocab].to_vec()));
+                }
+                Ok(results)
+            }
+            ExecOut::HostTuple(_) => anyhow::bail!(
+                "{module}.{entry}: fused prefill needs leaf outputs; the tuple-literal \
+                 runtime fallback cannot keep per-member KV on device"
+            ),
+        }
+    }
+
     fn ensure_module(&mut self, name: &str) -> anyhow::Result<()> {
         if self.modules.contains_key(name) {
             return Ok(());

@@ -21,6 +21,33 @@
 //! thread has died fails submissions and outstanding waits with an error
 //! instead of hanging.
 //!
+//! # Continuous micro-batching
+//!
+//! With a [`BatchConfig`] (`max_batch`, `max_wait`) the LLM lane worker
+//! becomes a micro-batcher, entirely *below* the `Backend` ticket API —
+//! schedulers and callers are unchanged. The contract:
+//!
+//! * **Compatibility rule** — two requests may share a fused device call
+//!   iff they have the same op kind AND the same module (backbone): N
+//!   `extend`s against different cached KVs fuse, an `extend` never fuses
+//!   with a `prefill` or with another backbone's ops, and control traffic
+//!   (release/warmup/stats) never fuses. An incompatible arrival closes the
+//!   open window early and runs right after the batch (lane FIFO holds).
+//! * **Timing attribution** — each member's [`CallTiming`] splits
+//!   submit→reply into `queue_secs` (channel wait until pickup),
+//!   `window_secs` (residency in the open batch window until launch) and
+//!   `device_secs` (the batch's device span, attributed to every member).
+//!   Exactly one member per launch is the [`BatchInfo::leader`]; aggregates
+//!   (`metrics::LaneTimes`) count device time and occupancy through
+//!   leaders only, so lane-busy sums never double-count a fused call.
+//! * **Fallback counting** — a multi-member batch whose op has no batched
+//!   HLO entry executes as a per-member loop and increments
+//!   [`EngineStats::unbatched_fallbacks`] (the sim fuses everything and
+//!   always reports 0).
+//!
+//! See `runtime/batch.rs` for the window mechanics and `runtime/engine.rs`
+//! for the fused-HLO ABI (`prefill_batch<n>`).
+//!
 //! # The `Backend` contract
 //!
 //! [`Backend`] names the exact execution surface the coordinator consumes —
@@ -47,6 +74,7 @@
 //! for full scenarios.
 
 mod backend;
+mod batch;
 mod engine;
 mod gnn;
 mod manifest;
@@ -54,10 +82,11 @@ mod sim;
 
 pub use backend::{Backend, CallTiming, EngineStats, KvHandle, Lane, PendingEncode,
                   PendingExtend, PendingGenerate, PendingKv, PendingPrefill};
+pub use batch::{BatchConfig, BatchInfo};
 pub use engine::Engine;
 pub use gnn::{pack_subgraph, PackedSubgraph};
 pub use manifest::{ArgSpec, Constants, EntrySpec, LlmDims, Manifest, ModuleSpec, ParamSpec};
-pub use sim::{sim_dataset, sim_store, SimBackend, SimLatency, SIM_BACKBONE};
+pub use sim::{sim_dataset, sim_store, BatchSlope, SimBackend, SimLatency, SIM_BACKBONE};
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -149,8 +178,15 @@ impl ArtifactStore {
 }
 
 impl Engine {
-    /// Spawn the engine lane threads for an artifact store.
+    /// Spawn the engine lane threads for an artifact store (LLM-lane batch
+    /// config from the environment; see [`Engine::start_at`]).
     pub fn start(store: &ArtifactStore) -> anyhow::Result<Engine> {
         Engine::start_at(store.root().to_path_buf(), store.manifest().clone())
+    }
+
+    /// Spawn the engine lane threads with an explicit LLM-lane
+    /// [`BatchConfig`].
+    pub fn start_with(store: &ArtifactStore, cfg: BatchConfig) -> anyhow::Result<Engine> {
+        Engine::start_at_with(store.root().to_path_buf(), store.manifest().clone(), cfg)
     }
 }

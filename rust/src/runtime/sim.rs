@@ -59,17 +59,32 @@ use crate::tokenizer::{split_text, Tokenizer, BOS_ID, EOS_ID, PAD_ID, UNK_ID};
 use super::backend::{merge_stats, Backend, CallTiming, EngineStats, KvHandle, Lane,
                      PendingEncode, PendingExtend, PendingGenerate, PendingKv,
                      PendingPrefill, Ticket};
+use super::batch::{collect_window, BatchConfig, BatchInfo, Collected};
 use super::engine::lane_for_kind;
 use super::manifest::{Constants, LlmDims, Manifest, ModuleSpec};
 use super::ArtifactStore;
 
-/// Virtual per-op device latencies (wall-clock sleeps on the lane worker).
+/// Marginal device cost of each additional member in a fused batch: a
+/// fused call of `n` compatible requests sleeps `base + per_item * (n-1)`.
+/// A slope equal to the base models serial execution (batching saves
+/// nothing on-device); a smaller slope models real batched-HLO wins.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatchSlope {
+    pub prefill: Duration,
+    pub extend: Duration,
+    pub generate: Duration,
+    pub encode: Duration,
+}
+
+/// Virtual per-op device latencies (wall-clock sleeps on the lane worker),
+/// plus the per-item batch slope the fused path adds per extra member.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SimLatency {
     pub prefill: Duration,
     pub extend: Duration,
     pub generate: Duration,
     pub encode: Duration,
+    pub per_item: BatchSlope,
 }
 
 impl SimLatency {
@@ -78,13 +93,36 @@ impl SimLatency {
         Self::default()
     }
 
+    /// Per-op bases; the batch slope defaults to the base itself
+    /// (serial-equivalent — fusion claims no device win until
+    /// [`with_per_item_millis`](Self::with_per_item_millis) or a bench fit
+    /// says otherwise).
     pub fn from_millis(prefill: u64, extend: u64, generate: u64, encode: u64) -> Self {
         SimLatency {
             prefill: Duration::from_millis(prefill),
             extend: Duration::from_millis(extend),
             generate: Duration::from_millis(generate),
             encode: Duration::from_millis(encode),
+            per_item: BatchSlope {
+                prefill: Duration::from_millis(prefill),
+                extend: Duration::from_millis(extend),
+                generate: Duration::from_millis(generate),
+                encode: Duration::from_millis(encode),
+            },
         }
+    }
+
+    /// Override the per-item batch slopes (milliseconds, same op order as
+    /// [`from_millis`](Self::from_millis)).
+    pub fn with_per_item_millis(mut self, prefill: u64, extend: u64, generate: u64,
+                                encode: u64) -> Self {
+        self.per_item = BatchSlope {
+            prefill: Duration::from_millis(prefill),
+            extend: Duration::from_millis(extend),
+            generate: Duration::from_millis(generate),
+            encode: Duration::from_millis(encode),
+        };
+        self
     }
 
     /// Serial per-query upper bound: one of each op back to back.
@@ -92,41 +130,86 @@ impl SimLatency {
         (self.prefill + self.extend + self.generate + self.encode).as_secs_f64()
     }
 
+    /// Device sleep of one fused call carrying `n` members of `op`:
+    /// `base + per_item * (n-1)`.
+    fn batch_sleep(&self, base: Duration, slope: Duration, n: usize) -> Duration {
+        base + slope * (n.saturating_sub(1) as u32)
+    }
+
     /// Sim-vs-real calibration seed: fit per-op virtual latencies from a
     /// `BENCH_engine.json` produced by `benches/engine_hot_path.rs`, so sim
     /// wall-time numbers become predictive of the measured engine instead
-    /// of hand-set. Each op takes the mean of the `median_ns` of result
-    /// rows whose name starts with `"<op> "` — e.g. `"prefill 400 tokens
-    /// [device-resident]"` feeds `prefill`; composite rows like
-    /// `"prefill->extend handoff"` deliberately match no op. An op with no
-    /// matching row keeps zero latency (functional-only). Errors if the
-    /// file is unreadable, has no `results` array, or matches no op at all.
+    /// of hand-set. Each op's base takes the mean of the `median_ns` of
+    /// result rows whose name starts with `"<op> "` and carries no
+    /// `batch=` tag — e.g. `"prefill 400 tokens [device-resident]"` feeds
+    /// `prefill`; composite rows like `"prefill->extend handoff"`
+    /// deliberately match no op. Rows tagged `batch=<n>` (n ≥ 2, e.g.
+    /// `"extend Q=24 batch=4 [fused]"`) instead fit the op's per-item
+    /// batch slope as the mean of `(median - base) / (n - 1)`, clamped to
+    /// ≥ 0; an op with no batched rows keeps the serial-equivalent slope
+    /// (= its base), claiming no fusion win that was never measured. An op
+    /// with no matching row at all keeps zero latency (functional-only).
+    /// Errors if the file is unreadable, has no `results` array, or
+    /// matches no op at all.
     pub fn from_bench_json(path: impl AsRef<std::path::Path>) -> anyhow::Result<SimLatency> {
         let path = path.as_ref();
         let json = crate::util::json::parse_file(path)?;
         let rows = json.get("results").as_arr().ok_or_else(|| {
             anyhow::anyhow!("{}: no results array (not a BENCH json?)", path.display())
         })?;
-        let fit = |op: &str| -> Option<Duration> {
+        // `batch=<n>` anywhere in a row name marks a fused-call measurement
+        let batch_n = |name: &str| -> Option<usize> {
+            let rest = &name[name.find("batch=")? + "batch=".len()..];
+            let digits = &rest[..rest.chars().take_while(char::is_ascii_digit).count()];
+            digits.parse().ok()
+        };
+        // (base, per_item) per op; None when no unbatched row names the op
+        let fit = |op: &str| -> Option<(Duration, Duration)> {
             let prefix = format!("{op} ");
-            let medians: Vec<f64> = rows
-                .iter()
-                .filter(|r| {
-                    r.get("name").as_str().is_some_and(|n| n.starts_with(&prefix))
-                })
-                .filter_map(|r| r.get("median_ns").as_f64())
-                .collect();
-            if medians.is_empty() {
+            let mut bases = Vec::new();
+            let mut batched = Vec::new();
+            for r in rows.iter() {
+                let Some(name) = r.get("name").as_str() else { continue };
+                if !name.starts_with(&prefix) {
+                    continue;
+                }
+                let Some(median) = r.get("median_ns").as_f64() else { continue };
+                match batch_n(name) {
+                    Some(n) if n >= 2 => batched.push((n, median)),
+                    _ => bases.push(median),
+                }
+            }
+            if bases.is_empty() {
                 return None;
             }
-            let mean = medians.iter().sum::<f64>() / medians.len() as f64;
-            Some(Duration::from_nanos(mean.max(0.0) as u64))
+            let base = bases.iter().sum::<f64>() / bases.len() as f64;
+            let slopes: Vec<f64> = batched
+                .iter()
+                .map(|&(n, median)| ((median - base) / (n - 1) as f64).max(0.0))
+                .collect();
+            let per = if slopes.is_empty() {
+                base // serial-equivalent: no measured fusion win
+            } else {
+                slopes.iter().sum::<f64>() / slopes.len() as f64
+            };
+            Some((Duration::from_nanos(base.max(0.0) as u64),
+                  Duration::from_nanos(per.max(0.0) as u64)))
         };
+        let (prefill, per_prefill) = fit("prefill").unwrap_or_default();
+        let (extend, per_extend) = fit("extend").unwrap_or_default();
+        let (generate, per_generate) = fit("generate").unwrap_or_default();
+        let (encode, per_encode) = fit("encode").unwrap_or_default();
         let lat = SimLatency {
-            prefill: fit("prefill").unwrap_or(Duration::ZERO),
-            extend: fit("extend").unwrap_or(Duration::ZERO),
-            generate: fit("generate").unwrap_or(Duration::ZERO),
-            encode: fit("encode").unwrap_or(Duration::ZERO),
+            prefill,
+            extend,
+            generate,
+            encode,
+            per_item: BatchSlope {
+                prefill: per_prefill,
+                extend: per_extend,
+                generate: per_generate,
+                encode: per_encode,
+            },
         };
         anyhow::ensure!(
             lat.serial_sum() > 0.0,
@@ -200,17 +283,29 @@ pub struct SimBackend {
 
 impl SimBackend {
     /// Spawn both sim lane workers over `store`'s manifest (use
-    /// [`sim_store`] for a self-contained in-memory world).
+    /// [`sim_store`] for a self-contained in-memory world) with batching
+    /// off — every request its own device call.
     pub fn start(store: &ArtifactStore, lat: SimLatency) -> anyhow::Result<SimBackend> {
+        SimBackend::start_with(store, lat, BatchConfig::off())
+    }
+
+    /// Like [`start`](Self::start), but the LLM lane micro-batches under
+    /// `cfg` (the GNN lane never batches — encodes already overlap the LLM
+    /// lane and see no cross-stream convergence).
+    pub fn start_with(store: &ArtifactStore, lat: SimLatency, cfg: BatchConfig)
+                      -> anyhow::Result<SimBackend> {
         let manifest = store.manifest().clone();
         let spawn = |lane: Lane| -> anyhow::Result<SimLane> {
             let (tx, rx) = channel::<SReq>();
             let poison = Arc::new(AtomicBool::new(false));
             let worker_poison = Arc::clone(&poison);
             let worker_manifest = manifest.clone();
+            let lane_cfg = if lane == Lane::Llm { cfg } else { BatchConfig::off() };
             let thread = std::thread::Builder::new()
                 .name(format!("sim-{}", lane.name()))
-                .spawn(move || sim_lane_main(worker_manifest, lat, rx, worker_poison))?;
+                .spawn(move || {
+                    sim_lane_main(worker_manifest, lat, lane_cfg, rx, worker_poison)
+                })?;
             Ok(SimLane { tx, poison, thread: Mutex::new(Some(thread)) })
         };
         Ok(SimBackend { lanes: [spawn(Lane::Llm)?, spawn(Lane::Gnn)?], manifest })
@@ -344,7 +439,20 @@ struct SimState {
     counters: HashMap<String, (u64, f64)>,
 }
 
-fn sim_lane_main(manifest: Manifest, lat: SimLatency, rx: Receiver<SReq>,
+/// Fusibility key: op kind + module (backbone). Two requests may share a
+/// batch iff their keys are equal; control traffic (release / warmup /
+/// stats / shutdown) has no key and never fuses.
+fn sreq_key(r: &SReq) -> Option<(u8, &str)> {
+    match r {
+        SReq::Prefill { module, .. } => Some((0, module)),
+        SReq::Extend { module, .. } => Some((1, module)),
+        SReq::Generate { module, .. } => Some((2, module)),
+        SReq::Encode { module, .. } => Some((3, module)),
+        _ => None,
+    }
+}
+
+fn sim_lane_main(manifest: Manifest, lat: SimLatency, cfg: BatchConfig, rx: Receiver<SReq>,
                  poison: Arc<AtomicBool>) {
     let mut st = SimState {
         manifest,
@@ -353,76 +461,141 @@ fn sim_lane_main(manifest: Manifest, lat: SimLatency, rx: Receiver<SReq>,
         next_id: 1,
         counters: HashMap::new(),
     };
-    while let Ok(req) = rx.recv() {
+    // An incompatible request that closed the previous batch window; it is
+    // processed before anything newer (lane FIFO).
+    let mut carry: Option<SReq> = None;
+    loop {
+        let req = match carry.take() {
+            Some(r) => r,
+            None => match rx.recv() {
+                Ok(r) => r,
+                Err(_) => return,
+            },
+        };
         if poison.load(Ordering::SeqCst) {
-            break; // test hook: die with the queue undrained
+            return; // test hook: die with the queue undrained
         }
-        match req {
-            SReq::Prefill { module, tokens, plen, submitted, reply } => {
-                let res = st.timed(&module, "prefill", st.lat.prefill, submitted,
-                                   |st| st.prefill(&module, &tokens, plen));
-                let _ = reply.send(res);
-            }
-            SReq::Extend { module, kv, plen, q_tokens, qlen, submitted, reply } => {
-                let res = st.timed(&module, "extend", st.lat.extend, submitted,
-                                   |st| st.extend(&module, kv, plen, &q_tokens, qlen));
-                let _ = reply.send(res);
-            }
-            SReq::Generate { module, kv, first_tok, submitted, reply } => {
-                let res = st.timed(&module, "generate", st.lat.generate, submitted,
-                                   |st| st.generate(&module, kv, first_tok));
-                let _ = reply.send(res);
-            }
-            SReq::Encode { module, x, mask, submitted, reply } => {
-                let res = st.timed(&module, "encode", st.lat.encode, submitted,
-                                   |st| st.encode(&module, &x, &mask));
-                let _ = reply.send(res);
-            }
-            SReq::Release { kvs } => {
-                for kv in kvs {
-                    st.kvs.remove(&kv);
+        if sreq_key(&req).is_none() {
+            match req {
+                SReq::Release { kvs } => {
+                    for kv in kvs {
+                        st.kvs.remove(&kv);
+                    }
                 }
+                SReq::Warmup { module, reply } => {
+                    let _ = reply.send(st.manifest.module(&module).map(|_| ()));
+                }
+                SReq::Stats { reply } => {
+                    let mut calls: Vec<(String, u64, f64)> = st
+                        .counters
+                        .iter()
+                        .map(|(k, &(n, s))| (k.clone(), n, s))
+                        .collect();
+                    calls.sort_by(|a, b| a.0.cmp(&b.0));
+                    let _ = reply.send(EngineStats {
+                        calls,
+                        live_kv: st.kvs.len(),
+                        compile_secs: 0.0,
+                        host_kv_bytes: 0,
+                        unbatched_fallbacks: 0,
+                    });
+                }
+                SReq::Shutdown => return,
+                _ => unreachable!("fusible requests are handled below"),
             }
-            SReq::Warmup { module, reply } => {
-                let _ = reply.send(st.manifest.module(&module).map(|_| ()));
-            }
-            SReq::Stats { reply } => {
-                let mut calls: Vec<(String, u64, f64)> = st
-                    .counters
-                    .iter()
-                    .map(|(k, &(n, s))| (k.clone(), n, s))
-                    .collect();
-                calls.sort_by(|a, b| a.0.cmp(&b.0));
-                let _ = reply.send(EngineStats {
-                    calls,
-                    live_kv: st.kvs.len(),
-                    compile_secs: 0.0,
-                    host_kv_bytes: 0,
-                });
-            }
-            SReq::Shutdown => break,
+            continue;
         }
+        let mut col = collect_window(&rx, req, cfg, |a, b| sreq_key(a) == sreq_key(b));
+        carry = col.carry.take();
+        if poison.load(Ordering::SeqCst) {
+            // die mid-batch: every member's reply sender drops here, so
+            // each ticket's wait errors instead of hanging
+            return;
+        }
+        st.run_batch(col);
     }
 }
 
+/// Per-member staged result + reply slot (all members of one batch share a
+/// variant, but the reply channel types differ per variant).
+enum BatchOut {
+    Kv(anyhow::Result<(u64, Vec<f32>)>, KvReply),
+    Gen(anyhow::Result<Vec<i32>>, Sender<anyhow::Result<(Vec<i32>, CallTiming)>>),
+    Enc(anyhow::Result<Vec<f32>>, Sender<anyhow::Result<(Vec<f32>, CallTiming)>>),
+}
+
 impl SimState {
-    /// Run one op: sleep the virtual device latency, execute `f`, record
-    /// counters, and report the same queue/device [`CallTiming`] split the
-    /// PJRT lanes do.
-    fn timed<T>(&mut self, module: &str, op: &str, lat: Duration, submitted: Instant,
-                f: impl FnOnce(&mut Self) -> anyhow::Result<T>)
-                -> anyhow::Result<(T, CallTiming)> {
-        let queue_secs = submitted.elapsed().as_secs_f64();
+    /// Execute one collected batch as ONE fused device call: a single
+    /// sleep of `base + per_item * (n-1)`, then every member's semantic op
+    /// in arrival order (determinism: results are bit-identical to the
+    /// unbatched path), then scatter per-member replies with the timing
+    /// split described in [`crate::runtime::batch`].
+    fn run_batch(&mut self, mut col: Collected<SReq>) {
+        let n = col.members.len();
+        let (op, base, slope) = match &col.members[0].0 {
+            SReq::Prefill { .. } => ("prefill", self.lat.prefill, self.lat.per_item.prefill),
+            SReq::Extend { .. } => ("extend", self.lat.extend, self.lat.per_item.extend),
+            SReq::Generate { .. } => {
+                ("generate", self.lat.generate, self.lat.per_item.generate)
+            }
+            SReq::Encode { .. } => ("encode", self.lat.encode, self.lat.per_item.encode),
+            _ => unreachable!("control requests never enter a batch"),
+        };
+        let module = match &col.members[0].0 {
+            SReq::Prefill { module, .. }
+            | SReq::Extend { module, .. }
+            | SReq::Generate { module, .. }
+            | SReq::Encode { module, .. } => module.clone(),
+            _ => unreachable!(),
+        };
         let t0 = Instant::now();
-        if !lat.is_zero() {
-            std::thread::sleep(lat);
+        let sleep = self.lat.batch_sleep(base, slope, n);
+        if !sleep.is_zero() {
+            std::thread::sleep(sleep);
         }
-        let out = f(self)?;
+        let mut outs = Vec::with_capacity(n);
+        for (req, picked) in col.members.drain(..) {
+            let (out, submitted) = match req {
+                SReq::Prefill { module, tokens, plen, submitted, reply } => {
+                    (BatchOut::Kv(self.prefill(&module, &tokens, plen), reply), submitted)
+                }
+                SReq::Extend { module, kv, plen, q_tokens, qlen, submitted, reply } => {
+                    (BatchOut::Kv(self.extend(&module, kv, plen, &q_tokens, qlen), reply),
+                     submitted)
+                }
+                SReq::Generate { module, kv, first_tok, submitted, reply } => {
+                    (BatchOut::Gen(self.generate(&module, kv, first_tok), reply), submitted)
+                }
+                SReq::Encode { module, x, mask, submitted, reply } => {
+                    (BatchOut::Enc(self.encode(&module, &x, &mask), reply), submitted)
+                }
+                _ => unreachable!("control requests never enter a batch"),
+            };
+            outs.push((out, submitted, picked));
+        }
         let device_secs = t0.elapsed().as_secs_f64();
         let c = self.counters.entry(format!("{module}.{op}")).or_insert((0, 0.0));
-        c.0 += 1;
-        c.1 += device_secs;
-        Ok((out, CallTiming { queue_secs, device_secs }))
+        c.0 += n as u64; // members executed
+        c.1 += device_secs; // device span counted once per launch
+        for (i, (out, submitted, picked)) in outs.into_iter().enumerate() {
+            let t = CallTiming {
+                queue_secs: picked.saturating_duration_since(submitted).as_secs_f64(),
+                window_secs: col.launched.saturating_duration_since(picked).as_secs_f64(),
+                device_secs,
+                batch: BatchInfo::member(i, n, col.stalled),
+            };
+            match out {
+                BatchOut::Kv(r, reply) => {
+                    let _ = reply.send(r.map(|(id, logits)| (id, logits, t)));
+                }
+                BatchOut::Gen(r, reply) => {
+                    let _ = reply.send(r.map(|toks| (toks, t)));
+                }
+                BatchOut::Enc(r, reply) => {
+                    let _ = reply.send(r.map(|emb| (emb, t)));
+                }
+            }
+        }
     }
 
     fn llm_dims(&self, module: &str) -> anyhow::Result<LlmDims> {
@@ -794,7 +967,29 @@ mod tests {
         assert_eq!(lat.generate, Duration::from_millis(5));
         assert_eq!(lat.encode, Duration::from_millis(2));
         assert!(lat.serial_sum() > 0.019 && lat.serial_sum() < 0.021);
+        // batched rows (`batch=<n>` in the name) fit the per-item slope and
+        // must NOT contaminate the base fit: prefill batch=4 @ 16 ms over a
+        // 10 ms base → 2 ms/item; extend batch=2 @ 5 ms and batch=4 @ 9 ms
+        // over a 3 ms base → 2 ms/item from both rows.
+        assert_eq!(lat.per_item.prefill, Duration::from_millis(2));
+        assert_eq!(lat.per_item.extend, Duration::from_millis(2));
+        // ops without batched rows keep the serial-equivalent slope (= base)
+        assert_eq!(lat.per_item.generate, lat.generate);
+        assert_eq!(lat.per_item.encode, lat.encode);
         assert!(SimLatency::from_bench_json("/nonexistent/BENCH.json").is_err());
+    }
+
+    #[test]
+    fn from_millis_slope_is_serial_equivalent_until_overridden() {
+        let lat = SimLatency::from_millis(10, 3, 5, 2);
+        assert_eq!(lat.per_item.extend, lat.extend, "no free fusion win");
+        let lat = lat.with_per_item_millis(2, 1, 1, 1);
+        assert_eq!(lat.per_item.prefill, Duration::from_millis(2));
+        assert_eq!(lat.per_item.extend, Duration::from_millis(1));
+        // fused sleep follows base + per_item * (n-1)
+        assert_eq!(lat.batch_sleep(lat.extend, lat.per_item.extend, 4),
+                   Duration::from_millis(6));
+        assert_eq!(lat.batch_sleep(lat.extend, lat.per_item.extend, 1), lat.extend);
     }
 
     #[test]

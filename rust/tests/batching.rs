@@ -1,0 +1,250 @@
+//! Continuous micro-batching suite for the LLM lane, driven on the
+//! deterministic [`SimBackend`] so every scenario runs un-skipped in plain
+//! `cargo test`.
+//!
+//! What is pinned down here:
+//!
+//! * **Lone member** — a window that fires with a single request pays no
+//!   fusion penalty: device cost is the op's base latency, the stall is
+//!   recorded, and the answer is bit-identical to an unbatched backend.
+//! * **Fusion** — compatible extends share ONE device launch (one leader,
+//!   shared device span, occupancy 3) that beats executing them serially.
+//! * **Compatibility** — different op kinds never fuse; the incompatible
+//!   arrival closes the window early (no stall) and runs right after.
+//! * **Failure** — an LLM lane killed while a batch window is open errors
+//!   every member's ticket instead of hanging any of them.
+//! * **Property** — 4 batched streams finish strictly faster than 4
+//!   unbatched streams over the same workload, with bit-identical
+//!   per-query answers and leader-only device accounting that fits inside
+//!   the wall clock.
+
+use std::time::Duration;
+
+use subgcache::data::Query;
+use subgcache::prelude::*;
+use subgcache::runtime::{sim_dataset, SimLatency, SIM_BACKBONE};
+
+mod common;
+
+/// Padded prefix tokens (length `max_seq`) carrying `n` distinct real ids.
+fn prefix_tokens(c: &subgcache::runtime::Constants, n: usize) -> (Vec<i32>, i32) {
+    let mut toks = vec![c.pad_id; c.max_seq];
+    for (i, t) in toks.iter_mut().take(n).enumerate() {
+        *t = 5 + i as i32;
+    }
+    (toks, n as i32)
+}
+
+/// Padded question tokens (length `max_q`) distinct per `salt`.
+fn question_tokens(c: &subgcache::runtime::Constants, salt: i32, n: usize)
+                   -> (Vec<i32>, i32) {
+    let mut q = vec![c.pad_id; c.max_q];
+    for (i, t) in q.iter_mut().take(n).enumerate() {
+        *t = 40 + salt * 16 + i as i32;
+    }
+    (q, n as i32)
+}
+
+#[test]
+fn single_request_window_fires_without_fusion_penalty() {
+    let lat = SimLatency::from_millis(0, 5, 0, 0);
+    let cfg = BatchConfig::new(4, Duration::from_millis(30));
+    let env = common::sim_env_batched(lat, cfg);
+    let c = *env.store.constants();
+    let (toks, plen) = prefix_tokens(&c, 8);
+    let (q, qlen) = question_tokens(&c, 0, 4);
+
+    let (kv, _) = env.backend.prefill(SIM_BACKBONE, &toks, plen).unwrap();
+    let (kv2, logits, t) = env
+        .backend
+        .submit_extend(SIM_BACKBONE, &kv, plen, &q, qlen)
+        .unwrap()
+        .wait_timed()
+        .unwrap();
+    assert_eq!(t.batch.size, 1, "nothing else was queued to fuse with");
+    assert!(t.batch.leader);
+    assert!(t.batch.stalled, "an expired window is a stall");
+    assert!(t.window_secs >= 0.02,
+            "the 30 ms window must show up as window time, got {:.4}s", t.window_secs);
+    assert!(t.device_secs < 0.025,
+            "a lone member pays the base latency only (no per-item penalty), \
+             got {:.4}s", t.device_secs);
+
+    // the stalled-out window must not have changed the answer
+    let unbatched = common::sim_env(lat);
+    let (ukv, _) = unbatched.backend.prefill(SIM_BACKBONE, &toks, plen).unwrap();
+    let (ukv2, ulogits) = unbatched.backend.extend(SIM_BACKBONE, &ukv, plen, &q, qlen)
+        .unwrap();
+    assert_eq!(logits, ulogits, "batched path must be bit-identical to unbatched");
+    env.backend.release_many(vec![kv, kv2]);
+    unbatched.backend.release_many(vec![ukv, ukv2]);
+}
+
+#[test]
+fn compatible_extends_fuse_into_one_device_call() {
+    let lat = SimLatency::from_millis(0, 6, 0, 0).with_per_item_millis(0, 1, 0, 0);
+    let cfg = BatchConfig::new(3, Duration::from_millis(100));
+    let env = common::sim_env_batched(lat, cfg);
+    let c = *env.store.constants();
+    let (toks, plen) = prefix_tokens(&c, 8);
+    let (kv, _) = env.backend.prefill(SIM_BACKBONE, &toks, plen).unwrap();
+
+    let questions: Vec<(Vec<i32>, i32)> =
+        (0..3).map(|s| question_tokens(&c, s, 4)).collect();
+    let pending: Vec<_> = questions
+        .iter()
+        .map(|(q, qlen)| {
+            env.backend.submit_extend(SIM_BACKBONE, &kv, plen, q, *qlen).unwrap()
+        })
+        .collect();
+    let done: Vec<_> = pending.into_iter().map(|p| p.wait_timed().unwrap()).collect();
+
+    let timings: Vec<_> = done.iter().map(|(_, _, t)| *t).collect();
+    for t in &timings {
+        assert_eq!(t.batch.size, 3, "all three extends must ride one launch");
+        assert!(!t.batch.stalled, "a full batch is not a stall");
+        assert!(t.window_secs < 0.05, "the window closed on fill, not expiry");
+        assert_eq!(t.device_secs, timings[0].device_secs,
+                   "every member reports the batch's shared device span");
+    }
+    assert_eq!(timings.iter().filter(|t| t.batch.leader).count(), 1,
+               "exactly one leader per launch");
+    // fused cost: base + per_item * 2 = 8 ms — well under 3 serial extends.
+    assert!(timings[0].device_secs >= 0.008 - 1e-4);
+    assert!(timings[0].device_secs < 0.016,
+            "fused call must beat 3 serial extends (18 ms), got {:.4}s",
+            timings[0].device_secs);
+
+    // fused results match the unbatched backend member-for-member
+    let unbatched = common::sim_env(lat);
+    let (ukv, _) = unbatched.backend.prefill(SIM_BACKBONE, &toks, plen).unwrap();
+    let mut env_kvs = vec![kv];
+    for ((q, qlen), (bkv, blogits, _)) in questions.iter().zip(done) {
+        let (uk, ulogits) = unbatched.backend
+            .extend(SIM_BACKBONE, &ukv, plen, q, *qlen).unwrap();
+        assert_eq!(blogits, ulogits, "fusion must not cross-contaminate members");
+        unbatched.backend.release(uk);
+        env_kvs.push(bkv);
+    }
+    unbatched.backend.release(ukv);
+    // the launch counted once: 3 member calls, ~one 8 ms device span
+    let st = env.backend.stats().unwrap();
+    let extend = st.calls.iter().find(|(k, _, _)| k.ends_with(".extend")).unwrap();
+    assert_eq!(extend.1, 3, "all members counted as calls");
+    assert!(extend.2 < 0.02,
+            "device seconds counted once per launch, got {:.4}s", extend.2);
+    assert_eq!(st.unbatched_fallbacks, 0, "the sim fuses everything");
+    env.backend.release_many(env_kvs);
+}
+
+#[test]
+fn incompatible_ops_never_fuse() {
+    let lat = SimLatency::from_millis(0, 4, 4, 0);
+    let cfg = BatchConfig::new(4, Duration::from_millis(50));
+    let env = common::sim_env_batched(lat, cfg);
+    let c = *env.store.constants();
+    let (toks, plen) = prefix_tokens(&c, 8);
+    let (q, qlen) = question_tokens(&c, 0, 4);
+    let (kv, _) = env.backend.prefill(SIM_BACKBONE, &toks, plen).unwrap();
+
+    // extend opens a window; the generate arriving inside it is a
+    // different op kind and must close the window instead of joining.
+    let e = env.backend.submit_extend(SIM_BACKBONE, &kv, plen, &q, qlen).unwrap();
+    let g = env.backend.submit_generate(SIM_BACKBONE, &kv, plen, 5).unwrap();
+    let (ekv, _, te) = e.wait_timed().unwrap();
+    let (gen_toks, tg) = g.wait_timed().unwrap();
+
+    assert_eq!(te.batch.size, 1, "extend must not have fused with the generate");
+    assert!(!te.batch.stalled,
+            "window closed by the incompatible arrival, not by expiry");
+    assert!(te.window_secs < 0.04, "incompatible arrival closes the window early");
+    assert_eq!(tg.batch.size, 1);
+    assert!(tg.batch.stalled, "the carried generate then stalls out its own window");
+    assert!(!gen_toks.is_empty(), "the carried request still executed (FIFO held)");
+    env.backend.release_many(vec![kv, ekv]);
+}
+
+#[test]
+fn dead_llm_lane_mid_batch_errors_every_member() {
+    let lat = SimLatency::zero();
+    let cfg = BatchConfig::new(8, Duration::from_millis(100));
+    let env = common::sim_env_batched(lat, cfg);
+    let c = *env.store.constants();
+    let (toks, plen) = prefix_tokens(&c, 8);
+    let (kv, _) = env.backend.prefill(SIM_BACKBONE, &toks, plen).unwrap();
+
+    // three extends enter an open window (3 < max_batch, so the worker
+    // keeps the window open waiting for more); the lane dies mid-window.
+    let pending: Vec<_> = (0..3)
+        .map(|s| {
+            let (q, qlen) = question_tokens(&c, s, 4);
+            env.backend.submit_extend(SIM_BACKBONE, &kv, plen, &q, qlen).unwrap()
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(30));
+    env.backend.kill_lane_for_test(Lane::Llm);
+
+    for (i, p) in pending.into_iter().enumerate() {
+        let err = p.wait().expect_err(&format!("member {i} must error, not hang"));
+        assert!(err.to_string().contains("lane"),
+                "member {i}: unhelpful dead-lane error: {err}");
+    }
+    // and the dead lane rejects new submissions at the send
+    assert!(env.backend.submit_prefill(SIM_BACKBONE, &toks, plen).is_err());
+}
+
+/// The acceptance criterion: at 4 streams, the batched backend's wall clock
+/// is strictly below the unbatched backend's on the same workload, per-query
+/// answers are bit-identical, and leader-only device attribution keeps the
+/// fleet's summed LLM device seconds inside the wall clock.
+#[test]
+fn batched_multi_stream_wall_beats_unbatched_with_identical_answers() {
+    let lat = SimLatency::from_millis(6, 4, 2, 1).with_per_item_millis(2, 1, 1, 1);
+    let n_streams = 4;
+    let serve = |bcfg: BatchConfig| {
+        let env = common::sim_env_batched(lat, bcfg);
+        let ds = sim_dataset(4, 4);
+        let cfg = ServeConfig { online_threshold: f32::INFINITY, ..common::sim_config() };
+        let coord = Coordinator::new(&env.store, &env.backend, cfg).unwrap();
+        let queries = ds.sample_test(8, 7);
+        let streams: Vec<Vec<&Query>> =
+            (0..n_streams).map(|_| queries.clone()).collect();
+        let multi = coord
+            .serve_online_multi(&ds, &streams, &GRetriever::default())
+            .unwrap();
+        assert_eq!(multi.streams.len(), n_streams);
+        let answers: Vec<Vec<String>> = multi
+            .streams
+            .iter()
+            .map(|r| r.results.iter().map(|x| x.predicted.clone()).collect())
+            .collect();
+        let device: f64 = multi.streams.iter()
+            .map(|r| r.metrics.lane_llm.device_time).sum();
+        let fused: u64 = multi.streams.iter()
+            .map(|r| r.metrics.lane_llm.batch.fused_calls).sum();
+        assert_eq!(env.backend.stats().unwrap().live_kv, 0, "leaked KV handles");
+        (multi.wall_time, answers, device, fused)
+    };
+
+    let (wall_off, ans_off, dev_off, fused_off) = serve(BatchConfig::off());
+    let (wall_on, ans_on, dev_on, fused_on) =
+        serve(BatchConfig::new(4, Duration::from_millis(4)));
+
+    assert_eq!(fused_off, 0, "batching off must never fuse");
+    assert!(fused_on > 0, "4 concurrent streams must fuse at least one call");
+    assert_eq!(ans_on, ans_off,
+               "fusion must not change any stream's answers, bit for bit");
+    assert!(
+        wall_on < wall_off,
+        "batched fleet must finish strictly faster: batched {wall_on:.3}s vs \
+         unbatched {wall_off:.3}s"
+    );
+    // leader-only counting: one lane cannot have been busy longer than the
+    // run took, whether fused or not.
+    assert!(dev_on <= wall_on + 0.02,
+            "summed LLM device time {dev_on:.3}s exceeds wall {wall_on:.3}s — \
+             a fused launch was double-counted");
+    assert!(dev_off <= wall_off + 0.02,
+            "unbatched device accounting inconsistent: {dev_off:.3}s vs wall \
+             {wall_off:.3}s");
+}

@@ -11,8 +11,8 @@
 
 use subgcache::coordinator::ServeConfig;
 use subgcache::data::Dataset;
-use subgcache::runtime::{sim_dataset, sim_store, ArtifactStore, Engine, SimBackend,
-                         SimLatency, SIM_BACKBONE};
+use subgcache::runtime::{sim_dataset, sim_store, ArtifactStore, BatchConfig, Engine,
+                         SimBackend, SimLatency, SIM_BACKBONE};
 
 pub const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
 
@@ -52,6 +52,15 @@ pub struct SimEnv {
 pub fn sim_env(lat: SimLatency) -> SimEnv {
     let store = sim_store();
     let backend = SimBackend::start(&store, lat).expect("sim backend start");
+    SimEnv { store, ds: sim_dataset(4, 4), backend }
+}
+
+/// [`sim_env`] with an explicit LLM-lane micro-batch config (the batching
+/// test suite's entry point; `BatchConfig::off()` reproduces `sim_env`).
+#[allow(dead_code)]
+pub fn sim_env_batched(lat: SimLatency, cfg: BatchConfig) -> SimEnv {
+    let store = sim_store();
+    let backend = SimBackend::start_with(&store, lat, cfg).expect("sim backend start");
     SimEnv { store, ds: sim_dataset(4, 4), backend }
 }
 

@@ -146,6 +146,45 @@ fn four_streams_share_one_prefill_and_beat_serial_wall() {
     assert_eq!(env.backend.stats().unwrap().live_kv, 0, "leaked KV handles");
 }
 
+/// Single-flight dedup and handle conservation must survive the LLM-lane
+/// micro-batcher: concurrent streams whose extends now fuse into shared
+/// device launches still pay one pool prefill per distinct representative,
+/// still drain every handle, and still answer serial-identically.
+#[test]
+fn batched_streams_keep_dedup_and_answers_consistent() {
+    let lat = SimLatency::from_millis(8, 3, 1, 1).with_per_item_millis(2, 1, 1, 1);
+    let env = common::sim_env_batched(lat, BatchConfig::new(4, Duration::from_millis(3)));
+    let ds = sim_dataset(4, 4);
+    let cfg = ServeConfig { online_threshold: f32::INFINITY, ..common::sim_config() };
+    let coord = Coordinator::new(&env.store, &env.backend, cfg.clone()).unwrap();
+    let queries = ds.sample_test(6, 7);
+
+    // unbatched zero-latency reference answers (sim logits are a pure
+    // function of the token sequences, so backends agree bit for bit)
+    let serial_env = common::sim_env(SimLatency::zero());
+    let serial_coord = Coordinator::new(&serial_env.store, &serial_env.backend, cfg)
+        .unwrap();
+    let serial = serial_coord
+        .serve_online(&ds, queries.iter().copied(), &GRetriever::default())
+        .unwrap();
+    let serial_answers: Vec<String> =
+        serial.results.iter().map(|r| r.predicted.clone()).collect();
+
+    let streams = replicated_streams(&queries, 4);
+    let multi = coord
+        .serve_online_multi(&ds, &streams, &GRetriever::default())
+        .unwrap();
+    assert_eq!(multi.shared.prefills, 1,
+               "single-flight dedup must survive batching");
+    for (si, r) in multi.streams.iter().enumerate() {
+        let got: Vec<String> = r.results.iter().map(|x| x.predicted.clone()).collect();
+        assert_eq!(got, serial_answers, "stream {si} diverged under batching");
+    }
+    let st = env.backend.stats().unwrap();
+    assert_eq!(st.live_kv, 0, "handle conservation must survive batching");
+    assert_eq!(st.unbatched_fallbacks, 0, "the sim fuses everything");
+}
+
 #[test]
 fn pool_prefills_equal_distinct_reps_under_never_join() {
     // never-join: every query opens its own cluster, so representative
