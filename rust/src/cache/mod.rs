@@ -53,9 +53,23 @@
 //!   demonstrably still hot. TTL sweeps use [`expire`] instead: a private
 //!   view releases now, a shared view only drops its own binding (one
 //!   stream's staleness must not reclaim the fleet's warm entry).
+//! * **Quarantine.** When a lane worker dies and restarts, device KV state
+//!   minted by the dead incarnation is gone even though the pool still
+//!   lists its handles. [`quarantine_stale`] sweeps the pool with a
+//!   caller-supplied staleness predicate (in serving:
+//!   `!backend.kv_current(h)`), removing every stale entry — **pinned or
+//!   not**, since pins protect live device reads and a dead incarnation
+//!   has none left to protect — and returning the dead handles for
+//!   bookkeeping release. Entries carry an install-epoch identity, so a
+//!   stream that held a pin on a quarantined entry can never unpin the
+//!   fresh re-install another stream paid for: its pin is orphaned and its
+//!   eventual unpin is a no-op. Re-installs after a quarantine go through
+//!   the normal single-flight reservation, so N streams recovering the
+//!   same representative still pay exactly one repaid prefill.
 //! * **Handle conservation.** Every handle passed to [`install`] leaves the
 //!   pool exactly once — through an eviction vector, a release, a deferred
-//!   graveyard drain, or the end-of-run [`SharedKvCache::drain_all`] — and
+//!   graveyard drain, a quarantine sweep, or the end-of-run
+//!   [`SharedKvCache::drain_all`] — and
 //!   is never returned while any stream pins it. The property tests here
 //!   and the concurrent suite in `rust/tests/shared_cache.rs` pin this
 //!   down.
@@ -69,6 +83,7 @@
 //! [`abort_install`]: KvCacheManager::abort_install
 //! [`release`]: KvCacheManager::release
 //! [`expire`]: KvCacheManager::expire
+//! [`quarantine_stale`]: KvCacheManager::quarantine_stale
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -137,6 +152,10 @@ pub struct CacheStats {
     /// Releases deferred past a foreign pin (entry doomed, handle returned
     /// later through a graveyard drain).
     pub deferred_releases: u64,
+    /// Entries invalidated by [`KvCacheManager::quarantine_stale`] because
+    /// their device handles belonged to a dead lane incarnation (subset of
+    /// `released`).
+    pub quarantined: u64,
     pub resident_bytes: usize,
     pub peak_bytes: usize,
 }
@@ -229,6 +248,11 @@ struct Entry<H> {
     /// release was requested while pinned: the handle moves to the
     /// graveyard when the last pin drops (unless a hit resurrects it).
     doomed: bool,
+    /// Install-epoch identity (the pool tick at admission, unique per
+    /// install under the lock). Distinguishes this entry from a later
+    /// re-install under the same key, so a pin orphaned by a quarantine
+    /// can never unpin the fresh entry that replaced its target.
+    epoch: u64,
 }
 
 struct Inner<H> {
@@ -249,6 +273,9 @@ struct InstallOutcome<H> {
     out: Vec<H>,
     /// How many of `out` were budget evictions.
     evictions: u64,
+    /// Install-epoch of the entry the caller now holds a pin on (the fresh
+    /// entry, or the pinned resident that rejected the install).
+    epoch: u64,
 }
 
 /// The process-wide, thread-safe, byte-budgeted KV cache pool. `H` is an
@@ -424,8 +451,9 @@ impl<H> SharedKvCache<H> {
     }
 
     /// Hit-or-reserve; blocks while another stream's install of `key` is
-    /// pending. Returns `(outcome, entry_bytes, was_shared)`.
-    fn lookup_or_reserve(&self, stream: u64, key: u64) -> (Lookup, usize, bool) {
+    /// pending. Returns `(outcome, entry_bytes, was_shared, epoch)` — the
+    /// epoch identifies the pinned entry (0 on a miss).
+    fn lookup_or_reserve(&self, stream: u64, key: u64) -> (Lookup, usize, bool, u64) {
         let mut inner = self.lock();
         loop {
             if let Some(i) = Self::idx(&inner, key) {
@@ -440,13 +468,14 @@ impl<H> SharedKvCache<H> {
                 e.pins += 1;
                 let bytes = e.bytes;
                 let shared = e.installer != stream;
+                let epoch = e.epoch;
                 inner.stats.hits += 1;
                 inner.stats.bytes_saved += bytes as u64;
                 if shared {
                     inner.stats.shared_hits += 1;
                     inner.stats.dedup_bytes_saved += bytes as u64;
                 }
-                return (Lookup::Hit, bytes, shared);
+                return (Lookup::Hit, bytes, shared, epoch);
             }
             // copy the owner out so the map borrow ends before the guard
             // is moved into the condvar wait (NLL cannot see through a
@@ -467,7 +496,7 @@ impl<H> SharedKvCache<H> {
                 None => {
                     inner.pending.insert(key, stream);
                     inner.stats.misses += 1;
-                    return (Lookup::MustInstall, 0, false);
+                    return (Lookup::MustInstall, 0, false, 0);
                 }
             }
         }
@@ -506,6 +535,7 @@ impl<H> SharedKvCache<H> {
                 let e = &mut inner.entries[i];
                 e.pins += 1;
                 e.last_used = t;
+                let epoch = e.epoch;
                 // the caller just re-demanded this content: a doomed entry
                 // is resurrected, exactly as a lookup hit would.
                 e.doomed = false;
@@ -516,7 +546,7 @@ impl<H> SharedKvCache<H> {
                 inner.stats.released += 1;
                 out.push(handle);
                 self.cv.notify_all();
-                return InstallOutcome { out, evictions: 0 };
+                return InstallOutcome { out, evictions: 0, epoch };
             }
             // replacement is not budget pressure: count the returned handle
             // in `released` only, never in `evictions`.
@@ -537,6 +567,9 @@ impl<H> SharedKvCache<H> {
             last_used,
             installer: stream,
             doomed: false,
+            // the admission tick is unique per install under the lock, so
+            // it doubles as the entry's identity across re-installs.
+            epoch: last_used,
         });
         let mut evictions = 0u64;
         while self.over_budget(&inner) {
@@ -554,7 +587,7 @@ impl<H> SharedKvCache<H> {
                       "install left the pool over budget with evictable entries");
         // waiters blocked on this key's reservation can now hit it.
         self.cv.notify_all();
-        InstallOutcome { out, evictions }
+        InstallOutcome { out, evictions, epoch: last_used }
     }
 
     /// Cancel `stream`'s reservation of `key` (error path). Waiters wake
@@ -581,24 +614,29 @@ impl<H> SharedKvCache<H> {
         Self::idx(&inner, key).is_some()
     }
 
-    /// Add one pin (nesting) to a resident entry. False if absent.
-    fn pin(&self, key: u64) -> bool {
+    /// Add one pin (nesting) to a resident entry. Returns the entry's
+    /// epoch, or `None` if absent.
+    fn pin(&self, key: u64) -> Option<u64> {
         let mut inner = self.lock();
         match Self::idx(&inner, key) {
             Some(i) => {
                 inner.entries[i].pins += 1;
-                true
+                Some(inner.entries[i].epoch)
             }
-            None => false,
+            None => None,
         }
     }
 
-    /// Drop one pin. If that was the last pin of a doomed entry, the entry
-    /// dies and its handle moves to the graveyard.
-    fn unpin(&self, key: u64) -> bool {
+    /// Drop one pin taken on the entry incarnation identified by `epoch`.
+    /// If that was the last pin of a doomed entry, the entry dies and its
+    /// handle moves to the graveyard. A pin orphaned by a quarantine —
+    /// its entry is gone, or the key is now a different incarnation — is
+    /// resolved as a no-op: decrementing the fresh entry here would let
+    /// eviction reclaim KV another stream's in-flight ticket still reads.
+    fn unpin(&self, key: u64, epoch: u64) -> bool {
         let mut inner = self.lock();
         match Self::idx(&inner, key) {
-            Some(i) if inner.entries[i].pins > 0 => {
+            Some(i) if inner.entries[i].epoch == epoch && inner.entries[i].pins > 0 => {
                 inner.entries[i].pins -= 1;
                 if inner.entries[i].pins == 0 && inner.entries[i].doomed {
                     let e = inner.entries.swap_remove(i);
@@ -607,8 +645,38 @@ impl<H> SharedKvCache<H> {
                 }
                 true
             }
-            _ => false,
+            // orphaned pin: the incarnation it protected was quarantined.
+            _ => true,
         }
+    }
+
+    /// Remove every entry whose handle the predicate marks stale (its
+    /// device state died with a lane incarnation), pinned or not — pins
+    /// protect live device reads, and a dead incarnation has none left to
+    /// protect. Pins other streams hold on a removed entry become orphans:
+    /// their epoch no longer matches anything, so their eventual unpin is
+    /// a no-op rather than a corruption of a fresh re-install. Returns the
+    /// dead handles (for bookkeeping release to the backend) plus any
+    /// graveyard backlog, and the count quarantined.
+    pub fn quarantine_stale(&self, mut is_stale: impl FnMut(&H) -> bool) -> (Vec<H>, u64) {
+        let mut inner = self.lock();
+        let mut out: Vec<H> = inner.graveyard.drain(..).collect();
+        inner.stats.released += out.len() as u64;
+        let mut quarantined = 0u64;
+        let mut i = 0;
+        while i < inner.entries.len() {
+            if is_stale(&inner.entries[i].handle) {
+                let e = inner.entries.swap_remove(i);
+                inner.stats.resident_bytes -= e.bytes;
+                inner.stats.released += 1;
+                inner.stats.quarantined += 1;
+                quarantined += 1;
+                out.push(e.handle);
+            } else {
+                i += 1;
+            }
+        }
+        (out, quarantined)
     }
 
     fn pin_count(&self, key: u64) -> u32 {
@@ -663,8 +731,9 @@ pub struct KvCacheManager<H> {
     /// cluster id → pool key (content hash when bound, view-salted id
     /// otherwise).
     binds: HashMap<usize, u64>,
-    /// pool keys this view currently holds pins on (pin-count each).
-    held_pins: HashMap<u64, u32>,
+    /// pool keys this view currently holds pins on — one entry-epoch per
+    /// pin, so unpins always target the incarnation they actually pinned.
+    held_pins: HashMap<u64, Vec<u64>>,
     /// pool keys this view holds install reservations for.
     reserved: Vec<u64>,
     /// this stream's own counters (residency fields filled at `stats()`).
@@ -759,8 +828,8 @@ impl<H> KvCacheManager<H> {
                       "cluster {cluster_id} rebound to a different key");
     }
 
-    fn note_pin(&mut self, key: u64) {
-        *self.held_pins.entry(key).or_insert(0) += 1;
+    fn note_pin(&mut self, key: u64, epoch: u64) {
+        self.held_pins.entry(key).or_default().push(epoch);
     }
 
     /// Look up the cluster's entry. A hit refreshes LRU, records the
@@ -771,10 +840,11 @@ impl<H> KvCacheManager<H> {
     /// discipline that makes N racing streams pay one prefill.
     pub fn lookup(&mut self, cluster_id: usize) -> Lookup {
         let key = self.key_for(cluster_id);
-        let (outcome, bytes, shared) = self.shared.lookup_or_reserve(self.stream, key);
+        let (outcome, bytes, shared, epoch) =
+            self.shared.lookup_or_reserve(self.stream, key);
         match outcome {
             Lookup::Hit => {
-                self.note_pin(key);
+                self.note_pin(key, epoch);
                 self.view.hits += 1;
                 self.view.bytes_saved += bytes as u64;
                 if shared {
@@ -801,7 +871,7 @@ impl<H> KvCacheManager<H> {
         let key = self.key_for(cluster_id);
         self.reserved.retain(|&k| k != key);
         let got = self.shared.install(self.stream, key, handle, bytes);
-        self.note_pin(key);
+        self.note_pin(key, got.epoch);
         self.view.prefills += 1;
         self.view.evictions += got.evictions;
         self.view.released += got.out.len() as u64;
@@ -835,8 +905,8 @@ impl<H> KvCacheManager<H> {
     /// the global pin total). Returns false if the cluster is not resident.
     pub fn pin(&mut self, cluster_id: usize) -> bool {
         let key = self.key_for(cluster_id);
-        if self.shared.pin(key) {
-            self.note_pin(key);
+        if let Some(epoch) = self.shared.pin(key) {
+            self.note_pin(key, epoch);
             true
         } else {
             false
@@ -844,19 +914,21 @@ impl<H> KvCacheManager<H> {
     }
 
     /// Drop one pin *this view holds*. Returns false if the view holds none
-    /// for the cluster — a view can never unpin another stream's pin.
+    /// for the cluster — a view can never unpin another stream's pin. A pin
+    /// orphaned by a quarantine (its entry incarnation is gone) resolves as
+    /// a pool-side no-op but still balances this view's bookkeeping.
     pub fn unpin(&mut self, cluster_id: usize) -> bool {
         let key = self.key_of(cluster_id);
-        let held = match self.held_pins.get(&key).copied() {
-            Some(n) if n > 0 => n,
-            _ => return false,
+        let Some(epochs) = self.held_pins.get_mut(&key) else {
+            return false;
         };
-        if held == 1 {
+        let Some(epoch) = epochs.pop() else {
+            return false;
+        };
+        if epochs.is_empty() {
             self.held_pins.remove(&key);
-        } else {
-            self.held_pins.insert(key, held - 1);
         }
-        self.shared.unpin(key)
+        self.shared.unpin(key, epoch)
     }
 
     /// Whether ANY stream currently pins the cluster's entry.
@@ -876,7 +948,26 @@ impl<H> KvCacheManager<H> {
 
     /// Pins this view itself holds on the cluster's entry.
     pub fn own_pin_count(&self, cluster_id: usize) -> u32 {
-        self.held_pins.get(&self.key_of(cluster_id)).copied().unwrap_or(0)
+        self.held_pins
+            .get(&self.key_of(cluster_id))
+            .map(|epochs| epochs.len() as u32)
+            .unwrap_or(0)
+    }
+
+    /// Invalidate every pool entry whose device handle the predicate marks
+    /// stale — in serving, `|h| !backend.kv_current(h)` after a
+    /// [`BackendError::LaneDead`]. Removed entries' handles come back for
+    /// bookkeeping release; pins any view held on them (including this
+    /// one's) become orphans whose unpins are no-ops, so callers should
+    /// still unpin to balance their own accounting. See the module docs'
+    /// quarantine contract.
+    ///
+    /// [`BackendError::LaneDead`]: crate::runtime::BackendError::LaneDead
+    pub fn quarantine_stale(&mut self, is_stale: impl FnMut(&H) -> bool) -> Vec<H> {
+        let (out, quarantined) = self.shared.quarantine_stale(is_stale);
+        self.view.quarantined += quarantined;
+        self.view.released += out.len() as u64;
+        out
     }
 
     /// Release one cluster's entry (TTL sweeps). Unpinned: handles come
@@ -935,9 +1026,9 @@ impl<H> KvCacheManager<H> {
         for key in std::mem::take(&mut self.reserved) {
             self.shared.abort_install(self.stream, key);
         }
-        for (key, n) in std::mem::take(&mut self.held_pins) {
-            for _ in 0..n {
-                self.shared.unpin(key);
+        for (key, epochs) in std::mem::take(&mut self.held_pins) {
+            for epoch in epochs {
+                self.shared.unpin(key, epoch);
             }
         }
     }
@@ -1522,6 +1613,68 @@ mod tests {
         assert_eq!(deferred, vec![77], "handle surfaces once B is done");
         assert!(pool.collect_deferred().is_empty(), "and only once");
         assert_eq!(pool.stats().resident_bytes, 0);
+    }
+
+    #[test]
+    fn quarantine_invalidates_stale_entries_and_orphans_foreign_pins() {
+        // The lane-death recovery path end to end: handle 10 was minted by
+        // a now-dead lane incarnation; handles >= 100 by the live one.
+        let pool: Arc<SharedKvCache<u32>> =
+            Arc::new(SharedKvCache::new(CachePolicy::unbounded()));
+        let mut a = KvCacheManager::shared_view(&pool);
+        let mut b = KvCacheManager::shared_view(&pool);
+        let key = RepKey::of_parts(["bb"], [1]);
+        a.bind(0, key);
+        b.bind(0, key);
+        assert_eq!(a.lookup(0), Lookup::MustInstall);
+        a.install(0, 10, 64); // A pinned
+        assert!(b.lookup(0).is_hit()); // B pinned too
+
+        // A discovers LaneDead: quarantine sweeps the pool, pinned or not.
+        let dead = a.quarantine_stale(|&h| h < 100);
+        assert_eq!(dead, vec![10], "stale handle comes back exactly once");
+        assert!(!a.contains(0), "quarantined entry is gone");
+        assert_eq!(a.stats().quarantined, 1);
+        assert_eq!(pool.stats().quarantined, 1);
+        assert_eq!(pool.resident_bytes(), 0);
+
+        // A balances its own bookkeeping, then repays the prefill.
+        assert!(a.unpin(0), "own orphaned pin still balances the view");
+        assert_eq!(a.lookup(0), Lookup::MustInstall, "stale content must miss");
+        assert!(a.install(0, 100, 64).is_empty());
+
+        // B's pin was taken on the DEAD incarnation: unpinning it must not
+        // touch the fresh entry A's in-flight ticket depends on.
+        assert!(b.unpin(0));
+        assert_eq!(a.pin_count(0), 1, "orphaned unpin must not strip the fresh pin");
+        assert!(b.lookup(0).is_hit(), "B rejoins on the repaid entry");
+        assert_eq!(b.with_handle(0, |h| *h), Some(100));
+        b.unpin(0);
+        a.unpin(0);
+        assert!(pool.consistent());
+        assert_eq!(pool.drain_all(), vec![100]);
+    }
+
+    #[test]
+    fn quarantine_spares_live_entries_and_returns_doomed_handles_once() {
+        let mut m: KvCacheManager<u32> = unbounded();
+        m.install(0, 10, 8); // stale-to-be, pinned
+        m.install(1, 100, 8); // live, pinned
+        m.install(2, 11, 8); // stale-to-be AND doomed while pinned
+        assert!(m.release(2).is_empty(), "pinned release defers");
+        let mut out = m.quarantine_stale(|&h| h < 100);
+        out.sort_unstable();
+        assert_eq!(out, vec![10, 11], "stale entries swept, live one spared");
+        assert!(m.contains(1), "live entry stays resident");
+        assert_eq!(m.stats().quarantined, 2);
+        assert_eq!(m.resident_bytes(), 8);
+        // orphaned unpins are no-ops: the doomed entry 11 is already gone
+        // and must NOT surface a second time through the graveyard.
+        m.unpin(0);
+        m.unpin(2);
+        m.unpin(1);
+        assert!(m.pool().consistent());
+        assert_eq!(m.release_all(), vec![100], "nothing returned twice");
     }
 
     #[test]

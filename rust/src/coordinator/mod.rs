@@ -71,7 +71,7 @@ mod online;
 mod pipeline;
 mod session;
 
-pub use online::MultiStreamReport;
+pub use online::{MultiStreamReport, StreamOutcome};
 
 use crate::cache::{CachePolicy, CacheStats};
 use crate::cluster::Linkage;
@@ -107,6 +107,18 @@ pub struct ServeConfig {
     /// the stream's lifetime (the pre-TTL behaviour). A pinned (in-flight)
     /// representative always survives a sweep, however stale.
     pub cluster_ttl: Option<u64>,
+    /// Online path only: per-query recovery deadline. A query whose backend
+    /// op fails retryably is retried/repaid while its elapsed time stays
+    /// under this bound; once exceeded, the next retryable failure becomes
+    /// terminal for the stream (and a query that *succeeds* past the bound
+    /// is counted in [`crate::metrics::ReliabilityStats::deadline_hits`]).
+    /// `None` bounds recovery only by `max_retries`.
+    pub deadline: Option<std::time::Duration>,
+    /// Online path only: retryable-failure budget per backend stage of one
+    /// query (encode / prefill / extend / generate each get their own
+    /// budget). 0 disables recovery — the first failure, however
+    /// transient, errors the stream (the pre-fault-tolerance behaviour).
+    pub max_retries: u32,
 }
 
 impl Default for ServeConfig {
@@ -120,6 +132,8 @@ impl Default for ServeConfig {
             online_threshold: 0.5,
             pipeline_depth: 2,
             cluster_ttl: None,
+            deadline: None,
+            max_retries: 3,
         }
     }
 }
@@ -243,6 +257,8 @@ mod tests {
         assert!(c.online_threshold > 0.0);
         assert!(c.pipeline_depth >= 1, "scheduler needs at least serial lookahead");
         assert!(c.cluster_ttl.is_none(), "TTL is opt-in");
+        assert!(c.deadline.is_none(), "deadlines are opt-in");
+        assert!(c.max_retries >= 1, "transient faults must be survivable by default");
     }
 
     #[test]

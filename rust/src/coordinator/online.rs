@@ -90,6 +90,30 @@
 //! clusters keep their slot (ids are stable) and are counted in
 //! [`super::ServeReport::expired_clusters`].
 //!
+//! # Fault tolerance
+//!
+//! Backend failures surface as typed [`crate::runtime::BackendError`]s and
+//! the scheduler degrades to recompute-and-retry instead of erroring the
+//! stream — the representative KV pool is reconstructible state (RAGCache's
+//! observation), so losing it costs a prefill, never an answer. A
+//! [`Transient`] wait failure is retried in place; a [`LaneDead`] failure
+//! additionally quarantines every cache entry whose device handle belongs
+//! to the dead lane incarnation ([`KvCacheManager::quarantine_stale`]) and
+//! *repays* the representative prefill — single-flight still coalesces
+//! racing repayers, and epoch-tagged pins keep a foreign stream's orphaned
+//! unpin from ever stripping the repaid entry. Each backend stage of a
+//! query (encode / prefill / extend / generate) draws on a bounded budget
+//! ([`super::ServeConfig::max_retries`], optionally capped by the per-query
+//! [`super::ServeConfig::deadline`]); exhaustion propagates the underlying
+//! error and fails only this stream. Recovery work is counted in
+//! [`crate::metrics::ReliabilityStats`] (retries, quarantined entries,
+//! degraded spans/seconds, deadline hits, plus the lane supervisor's
+//! restart delta) on `BatchMetrics` and, fleet-wide plus per-stream
+//! outcomes, on [`MultiStreamReport`].
+//!
+//! [`Transient`]: crate::runtime::BackendError::Transient
+//! [`LaneDead`]: crate::runtime::BackendError::LaneDead
+//!
 //! # Latency accounting
 //!
 //! Each prep component is timed where it executes and charged to its own
@@ -113,10 +137,10 @@ use crate::cache::{CacheStats, KvCacheManager, LockStats, RepKey, SharedKvCache}
 use crate::data::{Dataset, Query};
 use crate::embed::sq_dist;
 use crate::graph::{Subgraph, TextualGraph};
-use crate::metrics::{LaneTimes, QueryLatency, Timer};
+use crate::metrics::{LaneTimes, QueryLatency, ReliabilityStats, Timer};
 use crate::retrieval::{GraphFeatures, Retriever};
-use crate::runtime::{pack_subgraph, KvHandle, PackedSubgraph, PendingEncode,
-                     PendingGenerate};
+use crate::runtime::{pack_subgraph, BackendError, KvHandle, PackedSubgraph,
+                     PendingEncode, PendingExtend, PendingGenerate};
 
 use super::session::PreparedQuestion;
 use super::{argmax, Coordinator, ServeReport};
@@ -184,7 +208,10 @@ struct PreppedQuery<'q> {
 
 /// The decoupled decode stage: everything needed to finalize query *i*
 /// while query *i+1* runs. Holds the query's cache pin (released at
-/// finalize) and its private prefix+question KV handle.
+/// finalize) and its private prefix+question KV handle — plus enough
+/// context (the tokenized question, the frozen prefix length, the query's
+/// wall timer) to rebuild that KV from the representative entry if the
+/// lane dies under the in-flight generate.
 struct InflightDecode<'q> {
     q: &'q Query,
     cid: usize,
@@ -193,18 +220,84 @@ struct InflightDecode<'q> {
     kv_q: KvHandle,
     first: i32,
     pending: PendingGenerate,
+    /// tokenized question, kept for decode-stage recovery (re-extend).
+    question: PreparedQuestion,
+    /// frozen representative prefix length (mirrors the cluster's).
+    plen: usize,
+    /// wall timer from the query's turn (bounds decode-stage recovery
+    /// against `ServeConfig::deadline`).
+    t_query: Timer,
+    /// this query needed at least one recovery action before its decode.
+    degraded: bool,
     /// composed component times up to the first token
     prompt_ready: f64,
     pftt: f64,
+}
+
+/// Bounded recovery budget for one backend stage of one query. `admit`
+/// spends one attempt on a failure while the error is retryable, attempts
+/// remain ([`super::ServeConfig::max_retries`]) and the query is still
+/// inside its deadline ([`super::ServeConfig::deadline`]); the first
+/// inadmissible failure propagates and fails the stream.
+struct RetryBudget {
+    attempts: u32,
+    max: u32,
+    deadline: Option<std::time::Duration>,
+}
+
+impl RetryBudget {
+    fn new(cfg: &super::ServeConfig) -> RetryBudget {
+        RetryBudget { attempts: 0, max: cfg.max_retries, deadline: cfg.deadline }
+    }
+
+    /// `Ok(())` means "retry now"; `Err` means the failure is terminal for
+    /// this stream (non-retryable error, budget exhausted, or the query
+    /// ran past its deadline). Borrows the error so the caller can still
+    /// branch on its kind after admission; the clone is terminal-path only.
+    fn admit(&mut self, e: &BackendError, t_query: &Timer) -> anyhow::Result<()> {
+        let past_deadline =
+            self.deadline.is_some_and(|d| t_query.secs() > d.as_secs_f64());
+        if !e.is_retryable() || self.attempts >= self.max || past_deadline {
+            return Err(e.clone().into());
+        }
+        self.attempts += 1;
+        Ok(())
+    }
+}
+
+/// How one stream of a [`Coordinator::serve_online_multi`] fleet ended.
+#[derive(Debug, Clone)]
+pub enum StreamOutcome {
+    /// The stream completed; its report sits at this index of
+    /// [`MultiStreamReport::streams`].
+    Completed(usize),
+    /// The stream failed with this (display-formatted) error chain. The
+    /// other streams' reports are unaffected — partial fleet results
+    /// survive in [`MultiStreamReport::streams`].
+    Failed(String),
 }
 
 /// Result of serving N concurrent query streams against one shared
 /// representative pool and one backend ([`Coordinator::serve_online_multi`]).
 #[derive(Debug, Default)]
 pub struct MultiStreamReport {
-    /// Per-stream reports, in stream order. Each carries its own hit/miss
-    /// TTFT split and its own per-stream [`CacheStats`] view (`cache`).
+    /// Per-stream reports for the streams that completed. Each carries its
+    /// own hit/miss TTFT split and its own per-stream [`CacheStats`] view
+    /// (`cache`). On success this is one report per input stream, in
+    /// stream order; under partial failure
+    /// ([`Coordinator::serve_online_multi_partial`]) use
+    /// [`outcomes`](Self::outcomes) to map input streams to reports.
     pub streams: Vec<ServeReport>,
+    /// Per-stream end states, in input-stream order: completed streams
+    /// point into [`streams`](Self::streams), failed ones carry their
+    /// error — one stream's failure does not discard the rest of the
+    /// fleet's results.
+    pub outcomes: Vec<StreamOutcome>,
+    /// Fleet-level fault-tolerance counters: the completed streams'
+    /// retry/quarantine/deadline counters summed, plus the lane
+    /// supervisor's restart delta across the whole run (counted once —
+    /// a restart is a backend-global event, not a per-stream one).
+    pub reliability: ReliabilityStats,
     /// Pool-level cache totals across every stream: `prefills` here is the
     /// number of representative prefills the whole fleet paid (equal to
     /// distinct representative keys when the budget is ample).
@@ -239,6 +332,14 @@ impl MultiStreamReport {
     pub fn dedup_bytes_saved(&self) -> u64 {
         self.shared.dedup_bytes_saved
     }
+
+    /// Streams that failed (see [`MultiStreamReport::outcomes`]).
+    pub fn failed_streams(&self) -> usize {
+        self.outcomes
+            .iter()
+            .filter(|o| matches!(o, StreamOutcome::Failed(_)))
+            .count()
+    }
 }
 
 impl<'e> Coordinator<'e> {
@@ -268,14 +369,43 @@ impl<'e> Coordinator<'e> {
     ///
     /// Fails if any stream fails (each stream surfaces its own error — a
     /// dead backend lane errors every stream instead of hanging any); the
-    /// pool is drained back to the backend either way. For per-stream
-    /// error inspection drive [`serve_online_with_cache`] over
+    /// pool is drained back to the backend either way. To keep the
+    /// completed streams' results when one stream fails, use
+    /// [`serve_online_multi_partial`]; for per-stream error inspection
+    /// drive [`serve_online_with_cache`] over
     /// [`KvCacheManager::shared_view`]s directly.
     ///
+    /// [`serve_online_multi_partial`]: Coordinator::serve_online_multi_partial
     /// [`serve_online_with_cache`]: Coordinator::serve_online_with_cache
     pub fn serve_online_multi<'q>(&self, ds: &Dataset, streams: &[Vec<&'q Query>],
                                   retriever: &dyn Retriever)
                                   -> anyhow::Result<MultiStreamReport> {
+        let report = self.serve_online_multi_partial(ds, streams, retriever)?;
+        let n = report.outcomes.len();
+        let mut failures = report.outcomes.iter().filter_map(|o| match o {
+            StreamOutcome::Failed(msg) => Some(msg.as_str()),
+            StreamOutcome::Completed(_) => None,
+        });
+        if let Some(first) = failures.next() {
+            let failed = 1 + failures.count();
+            return Err(anyhow::anyhow!("{first}")
+                .context(format!("{failed}/{n} online streams failed")));
+        }
+        Ok(report)
+    }
+
+    /// Like [`serve_online_multi`], but one stream's failure never
+    /// discards the fleet: completed streams keep their reports and
+    /// metrics, failed streams surface in
+    /// [`MultiStreamReport::outcomes`], and the call itself only errors on
+    /// setup failures (empty input, warmup) that would fail every stream
+    /// identically.
+    ///
+    /// [`serve_online_multi`]: Coordinator::serve_online_multi
+    pub fn serve_online_multi_partial<'q>(&self, ds: &Dataset,
+                                          streams: &[Vec<&'q Query>],
+                                          retriever: &dyn Retriever)
+                                          -> anyhow::Result<MultiStreamReport> {
         anyhow::ensure!(!streams.is_empty(), "serve_online_multi needs >= 1 stream");
         // compile/load once on the caller's thread so the workers race on
         // serving, not on warmup.
@@ -287,8 +417,9 @@ impl<'e> Coordinator<'e> {
         // measured fleet wall time — S-1 redundant rebuilds would otherwise
         // deflate the qps/wall rows the serving bench tracks.
         let feats = GraphFeatures::build(&ds.graph);
+        let restarts0 = self.engine.stats().map(|s| s.lane_restarts).unwrap_or(0);
         let t_wall = Timer::start();
-        let outcomes: Vec<anyhow::Result<ServeReport>> = std::thread::scope(|scope| {
+        let joined: Vec<anyhow::Result<ServeReport>> = std::thread::scope(|scope| {
             let handles: Vec<_> = streams
                 .iter()
                 .map(|qs| {
@@ -315,31 +446,31 @@ impl<'e> Coordinator<'e> {
         // reporting, whether the streams succeeded or not.
         self.engine.release_many(pool.drain_all());
         let wall_time = t_wall.secs();
+        // the supervisor's restart counter is backend-global: delta it once
+        // around the whole fleet rather than per overlapping stream.
+        let restarts = self.engine.stats()
+            .map(|s| s.lane_restarts)
+            .unwrap_or(restarts0)
+            .saturating_sub(restarts0);
 
-        let n = outcomes.len();
-        let mut reports = Vec::with_capacity(n);
-        let mut first_err: Option<anyhow::Error> = None;
-        let mut failed = 0usize;
-        for out in outcomes {
-            match out {
-                Ok(r) => reports.push(r),
-                Err(e) => {
-                    failed += 1;
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
-                }
-            }
-        }
-        if let Some(e) = first_err {
-            return Err(e.context(format!("{failed}/{n} online streams failed")));
-        }
-        Ok(MultiStreamReport {
-            streams: reports,
+        let mut report = MultiStreamReport {
             shared: pool.stats(),
             lock: pool.lock_stats(),
             wall_time,
-        })
+            ..MultiStreamReport::default()
+        };
+        for out in joined {
+            match out {
+                Ok(r) => {
+                    report.reliability.merge(&r.metrics.reliability);
+                    report.outcomes.push(StreamOutcome::Completed(report.streams.len()));
+                    report.streams.push(r);
+                }
+                Err(e) => report.outcomes.push(StreamOutcome::Failed(format!("{e:#}"))),
+            }
+        }
+        report.reliability.restarts = restarts;
+        Ok(report)
     }
 
     /// The depth-k online scheduler over a caller-supplied cache view: the
@@ -358,7 +489,30 @@ impl<'e> Coordinator<'e> {
         I: IntoIterator<Item = &'q Query>,
     {
         let feats = GraphFeatures::build(&ds.graph);
-        self.serve_online_inner(ds, query_stream, retriever, cache, &feats)
+        // restart accounting by supervisor-counter delta: nothing on the
+        // serving hot path, and measured outside the run's wall timer. The
+        // counter is backend-global, so when several streams share one
+        // backend each sees the fleet's restarts (documented on
+        // `ReliabilityStats::restarts`).
+        let restarts0 = self.engine.stats().map(|s| s.lane_restarts).unwrap_or(0);
+        let mut report =
+            self.serve_online_inner(ds, query_stream, retriever, cache, &feats)?;
+        let restarts1 =
+            self.engine.stats().map(|s| s.lane_restarts).unwrap_or(restarts0);
+        report.metrics.reliability.restarts = restarts1.saturating_sub(restarts0);
+        Ok(report)
+    }
+
+    /// Invalidate every cache entry whose device handle belongs to a dead
+    /// lane incarnation ([`crate::runtime::Backend::kv_current`]) and hand
+    /// the stale handles back to the backend (pure bookkeeping — the
+    /// device state died with the worker). Returns how many entries the
+    /// sweep quarantined.
+    fn quarantine_dead(&self, cache: &mut KvCacheManager<KvHandle>) -> u64 {
+        let before = cache.stats().quarantined;
+        let dead = cache.quarantine_stale(|h| !self.engine.kv_current(h));
+        self.engine.release_many(dead);
+        cache.stats().quarantined.saturating_sub(before)
     }
 
     /// [`serve_online_with_cache`] over pre-built retrieval features, so
@@ -430,6 +584,7 @@ impl<'e> Coordinator<'e> {
 
         let mut clusters: Vec<OnlineCluster> = Vec::new();
         let mut report = ServeReport::default();
+        let mut rel = ReliabilityStats::default();
         let mut llm_time = 0.0;
         let mut prefill_total = 0.0;
         let mut overlap_time = 0.0;
@@ -439,20 +594,131 @@ impl<'e> Coordinator<'e> {
         let t_wall = Timer::start();
 
         // Finalize one decoupled decode: wait the generate, detokenize,
-        // compose the record, release the private KV, drop the pin.
-        let finalize = |dec: InflightDecode<'q>,
+        // compose the record, release the private KV, drop the pin. A
+        // transient generate failure is resubmitted against the same
+        // private KV; a dead lane took that KV with it, so the decode is
+        // rebuilt — quarantine stale entries, re-acquire (or repay) the
+        // representative, re-extend (bit-identical first token under a
+        // deterministic backend), then generate again.
+        let finalize = |mut dec: InflightDecode<'q>,
+                        clusters: &[OnlineCluster],
                         cache: &mut KvCacheManager<KvHandle>,
                         report: &mut ServeReport,
                         llm_time: &mut f64,
-                        lane_llm: &mut LaneTimes|
+                        prefill_total: &mut f64,
+                        lane_llm: &mut LaneTimes,
+                        rel: &mut ReliabilityStats|
          -> anyhow::Result<()> {
-            let (gen, gen_t) = dec.pending.wait_timed()?;
+            let mut budget = RetryBudget::new(&self.cfg);
+            let mut t_rec: Option<Timer> = None;
+            let cur_len = (dec.plen + dec.question.qlen) as i32;
+            let (gen, gen_t) = loop {
+                match dec.pending.wait_timed() {
+                    Ok(out) => break out,
+                    Err(e) => {
+                        budget.admit(&e, &dec.t_query)?;
+                        rel.retries += 1;
+                        dec.degraded = true;
+                        t_rec.get_or_insert_with(Timer::start);
+                        if e.is_lane_dead() {
+                            // the private prefix+question KV died with the
+                            // lane incarnation: the answer is recomputed,
+                            // not lost.
+                            rel.quarantined_entries += self.quarantine_dead(cache);
+                            self.engine.release(dec.kv_q);
+                            dec.kv_q = 'rebuild: loop {
+                                // drop the (possibly orphaned) pin, then
+                                // re-pin through a fresh lookup; on a miss
+                                // the repay prefill retries in place — its
+                                // install reservation must be fulfilled,
+                                // never re-queried, or this stream would
+                                // single-flight-block on itself.
+                                cache.unpin(dec.cid);
+                                if !cache.lookup(dec.cid).is_hit() {
+                                    let cl = &clusters[dec.cid];
+                                    let (tokens, _plen) =
+                                        session.prefix_tokens(&ds.graph, &cl.rep);
+                                    let kv = loop {
+                                        let pending = self.engine.submit_prefill(
+                                            &self.cfg.backbone, &tokens,
+                                            cl.plen as i32)?;
+                                        match pending.wait_timed() {
+                                            Ok((kv, _logits, t)) => {
+                                                lane_llm.add(&t);
+                                                *llm_time += t.secs();
+                                                *prefill_total += t.secs();
+                                                break kv;
+                                            }
+                                            Err(e2) => {
+                                                budget.admit(&e2, &dec.t_query)?;
+                                                rel.retries += 1;
+                                                if e2.is_lane_dead() {
+                                                    rel.quarantined_entries +=
+                                                        self.quarantine_dead(cache);
+                                                }
+                                            }
+                                        }
+                                    };
+                                    let evicted =
+                                        cache.install(dec.cid, kv, entry_bytes);
+                                    self.engine.release_many(evicted);
+                                }
+                                let pending_ext = cache
+                                    .with_handle(dec.cid, |kv| {
+                                        self.engine.submit_extend(
+                                            &self.cfg.backbone, kv,
+                                            dec.plen as i32,
+                                            &dec.question.tokens,
+                                            dec.question.qlen as i32)
+                                    })
+                                    .ok_or_else(|| anyhow::anyhow!(
+                                        "online cluster cache missing during \
+                                         decode recovery"))??;
+                                match pending_ext.wait_timed() {
+                                    Ok((kv_q, row, ext_t)) => {
+                                        lane_llm.add(&ext_t);
+                                        *llm_time += ext_t.secs();
+                                        debug_assert_eq!(
+                                            argmax(&row), dec.first,
+                                            "recovered extend must reproduce \
+                                             the first token");
+                                        break 'rebuild kv_q;
+                                    }
+                                    Err(e2) => {
+                                        budget.admit(&e2, &dec.t_query)?;
+                                        rel.retries += 1;
+                                        if e2.is_lane_dead() {
+                                            rel.quarantined_entries +=
+                                                self.quarantine_dead(cache);
+                                        }
+                                        // stale (or transient) again:
+                                        // re-acquire from the top — the pin
+                                        // dance stays balanced because the
+                                        // loop re-enters at unpin.
+                                    }
+                                }
+                            };
+                        }
+                        dec.pending = self.engine.submit_generate(
+                            &self.cfg.backbone, &dec.kv_q, cur_len, dec.first)?;
+                    }
+                }
+            };
+            if let Some(t) = t_rec {
+                rel.degraded_secs += t.secs();
+            }
+            if dec.degraded {
+                rel.degraded_spans += 1;
+            }
             lane_llm.add(&gen_t);
             let t_host = Timer::start();
             let predicted = session.decode_answer(dec.first, &gen);
             let result = session.result(dec.q, predicted, dec.cid, dec.sg);
             let ttft = dec.prompt_ready + dec.pftt;
             let rt = ttft + gen_t.secs() + t_host.secs();
+            if self.cfg.deadline.is_some_and(|d| rt > d.as_secs_f64()) {
+                rel.deadline_hits += 1;
+            }
             *llm_time += gen_t.secs();
             report.metrics.per_query.push(QueryLatency {
                 rt,
@@ -478,6 +744,12 @@ impl<'e> Coordinator<'e> {
             let PreppedQuery { q, sg, enc, question, retrieval_secs, pack_secs } = cur;
             let now = arrival;
             arrival += 1;
+            // wall clock for this query's turn: bounds recovery against the
+            // configured deadline. `degraded` flips on the first recovery
+            // action and rides into the decode stage, where the span is
+            // counted once per query.
+            let t_query = Timer::start();
+            let mut degraded = false;
 
             // 0) TTL sweep: expire clusters whose centroid went cold, and
             //    release their KV entries. A pinned entry belongs to an
@@ -515,13 +787,35 @@ impl<'e> Coordinator<'e> {
             //    LLM work and the stall is ~0; at depth 1 (submit + wait
             //    inline) the stall is the full queue + device time, exactly
             //    the serial accounting.
-            let pending_enc = match enc {
+            let mut pending_enc = match enc {
                 EncStage::Pending(p) => p,
                 EncStage::Packed(packed) => self.engine.submit_encode(
                     &gnn, packed.x, packed.adj, packed.mask)?,
             };
             let t_stall = Timer::start();
-            let (emb, enc_t) = pending_enc.wait_timed()?;
+            let mut budget = RetryBudget::new(&self.cfg);
+            let mut t_rec: Option<Timer> = None;
+            let (emb, enc_t) = loop {
+                match pending_enc.wait_timed() {
+                    Ok(out) => break out,
+                    // a lost encode has no KV to invalidate: re-pack from
+                    // the retrieved subgraph and resubmit (the eager
+                    // submission's inputs went down with the ticket).
+                    Err(e) => {
+                        budget.admit(&e, &t_query)?;
+                        rel.retries += 1;
+                        degraded = true;
+                        t_rec.get_or_insert_with(Timer::start);
+                        let packed =
+                            pack_subgraph(&ds.graph, feats, &sg, c.n_max, c.feat_dim);
+                        pending_enc = self.engine.submit_encode(
+                            &gnn, packed.x, packed.adj, packed.mask)?;
+                    }
+                }
+            };
+            if let Some(t) = t_rec {
+                rel.degraded_secs += t.secs();
+            }
             let enc_stall = t_stall.secs();
             lane_gnn.add(&enc_t);
             let t_scan = Timer::start();
@@ -585,7 +879,7 @@ impl<'e> Coordinator<'e> {
             let hit = cache.lookup(cid).is_hit();
             let lookup_stall = t_lookup.secs();
             let mut rebuild_secs = 0.0;
-            let prefill_secs = if hit {
+            let mut prefill_secs = if hit {
                 0.0
             } else {
                 // an evicted-miss re-verbalizes the frozen representative.
@@ -605,12 +899,39 @@ impl<'e> Coordinator<'e> {
                         t
                     }
                 };
-                let pending = self.engine.submit_prefill(&self.cfg.backbone, &tokens,
-                                                         clusters[cid].plen as i32)?;
+                let mut pending = self.engine.submit_prefill(
+                    &self.cfg.backbone, &tokens, clusters[cid].plen as i32)?;
                 // the prep queue refills in the representative prefill's
                 // shadow — the longest call a miss makes before decode.
                 top_up(&mut queue, &mut stream, &mut overlap_time, true)?;
-                let (kv, _logits, prefill_t) = pending.wait_timed()?;
+                let mut budget = RetryBudget::new(&self.cfg);
+                let mut t_rec: Option<Timer> = None;
+                let (kv, prefill_t) = loop {
+                    match pending.wait_timed() {
+                        Ok((kv, _logits, t)) => break (kv, t),
+                        // retry in place: our install reservation from the
+                        // missed lookup stays held across attempts, so
+                        // waiting streams keep blocking until the install
+                        // below fulfills it. Re-querying the cache here
+                        // would single-flight-block on our own reservation.
+                        Err(e) => {
+                            budget.admit(&e, &t_query)?;
+                            rel.retries += 1;
+                            degraded = true;
+                            t_rec.get_or_insert_with(Timer::start);
+                            if e.is_lane_dead() {
+                                rel.quarantined_entries +=
+                                    self.quarantine_dead(cache);
+                            }
+                            pending = self.engine.submit_prefill(
+                                &self.cfg.backbone, &tokens,
+                                clusters[cid].plen as i32)?;
+                        }
+                    }
+                };
+                if let Some(t) = t_rec {
+                    rel.degraded_secs += t.secs();
+                }
                 lane_llm.add(&prefill_t);
                 let secs = prefill_t.secs();
                 // admitted pinned, fulfilling the lookup's reservation
@@ -620,7 +941,8 @@ impl<'e> Coordinator<'e> {
                 self.engine.release_many(evicted);
                 secs
             };
-            prefill_total += prefill_secs;
+            // (prefill_total is charged after the extend ladder below, so a
+            // repaid prefill during extend recovery lands in the same pot.)
 
             // 5) extend against the resident representative cache, the
             //    handle borrowed under the pool lock (our pin keeps the
@@ -632,17 +954,79 @@ impl<'e> Coordinator<'e> {
             let plen = clusters[cid].plen;
             debug_assert!(cache.pin_count(cid) >= 1,
                           "in-flight cluster must hold a pin across its tickets");
-            let pending_ext = cache
-                .with_handle(cid, |kv| {
-                    self.engine.submit_extend(&self.cfg.backbone, kv, plen as i32,
-                                              &question.tokens, question.qlen as i32)
-                })
-                .ok_or_else(|| anyhow::anyhow!("online cluster cache missing"))??;
+            let submit_ext = |cache: &mut KvCacheManager<KvHandle>|
+             -> anyhow::Result<PendingExtend> {
+                Ok(cache
+                    .with_handle(cid, |kv| {
+                        self.engine.submit_extend(&self.cfg.backbone, kv, plen as i32,
+                                                  &question.tokens,
+                                                  question.qlen as i32)
+                    })
+                    .ok_or_else(|| anyhow::anyhow!("online cluster cache missing"))??)
+            };
+            let mut pending_ext = submit_ext(cache)?;
             if let Some(dec) = pending_decode.take() {
-                finalize(dec, &mut *cache, &mut report, &mut llm_time, &mut lane_llm)?;
+                finalize(dec, &clusters, &mut *cache, &mut report, &mut llm_time,
+                         &mut prefill_total, &mut lane_llm, &mut rel)?;
             }
             top_up(&mut queue, &mut stream, &mut overlap_time, true)?;
-            let (kv_q, row, ext_t) = pending_ext.wait_timed()?;
+            let mut budget = RetryBudget::new(&self.cfg);
+            let mut t_rec: Option<Timer> = None;
+            let (kv_q, row, ext_t) = loop {
+                match pending_ext.wait_timed() {
+                    Ok(out) => break out,
+                    Err(e) => {
+                        budget.admit(&e, &t_query)?;
+                        rel.retries += 1;
+                        degraded = true;
+                        t_rec.get_or_insert_with(Timer::start);
+                        if e.is_lane_dead() {
+                            rel.quarantined_entries += self.quarantine_dead(cache);
+                            // the pinned representative may be gone with the
+                            // lane incarnation: drop the (possibly orphaned)
+                            // pin and re-pin through a fresh lookup, repaying
+                            // the prefill on a miss. The repay retries in
+                            // place — re-querying the cache while holding our
+                            // own install reservation would single-flight-
+                            // block this stream on itself.
+                            cache.unpin(cid);
+                            if !cache.lookup(cid).is_hit() {
+                                let t_rebuild = Timer::start();
+                                let (tokens, _plen) = session
+                                    .prefix_tokens(&ds.graph, &clusters[cid].rep);
+                                rebuild_secs += t_rebuild.secs();
+                                let kv = loop {
+                                    let pending = self.engine.submit_prefill(
+                                        &self.cfg.backbone, &tokens,
+                                        clusters[cid].plen as i32)?;
+                                    match pending.wait_timed() {
+                                        Ok((kv, _logits, t)) => {
+                                            lane_llm.add(&t);
+                                            prefill_secs += t.secs();
+                                            break kv;
+                                        }
+                                        Err(e2) => {
+                                            budget.admit(&e2, &t_query)?;
+                                            rel.retries += 1;
+                                            if e2.is_lane_dead() {
+                                                rel.quarantined_entries +=
+                                                    self.quarantine_dead(cache);
+                                            }
+                                        }
+                                    }
+                                };
+                                let evicted = cache.install(cid, kv, entry_bytes);
+                                self.engine.release_many(evicted);
+                            }
+                        }
+                        pending_ext = submit_ext(cache)?;
+                    }
+                }
+            };
+            if let Some(t) = t_rec {
+                rel.degraded_secs += t.secs();
+            }
+            prefill_total += prefill_secs;
             lane_llm.add(&ext_t);
             let t_host = Timer::start();
             let first = argmax(&row);
@@ -665,17 +1049,20 @@ impl<'e> Coordinator<'e> {
             let pending_gen = self.engine.submit_generate(
                 &self.cfg.backbone, &kv_q, (plen + question.qlen) as i32, first)?;
             let dec = InflightDecode {
-                q, cid, sg, hit, kv_q, first, pending: pending_gen, prompt_ready, pftt,
+                q, cid, sg, hit, kv_q, first, pending: pending_gen, question, plen,
+                t_query, degraded, prompt_ready, pftt,
             };
             if depth >= 2 {
                 pending_decode = Some(dec);
             } else {
-                finalize(dec, &mut *cache, &mut report, &mut llm_time, &mut lane_llm)?;
+                finalize(dec, &clusters, &mut *cache, &mut report, &mut llm_time,
+                         &mut prefill_total, &mut lane_llm, &mut rel)?;
             }
         }
         // drain the last in-flight decode
         if let Some(dec) = pending_decode.take() {
-            finalize(dec, &mut *cache, &mut report, &mut llm_time, &mut lane_llm)?;
+            finalize(dec, &clusters, &mut *cache, &mut report, &mut llm_time,
+                     &mut prefill_total, &mut lane_llm, &mut rel)?;
         }
 
         report.cluster_sizes = clusters.iter().map(|cl| cl.members).collect();
@@ -687,6 +1074,10 @@ impl<'e> Coordinator<'e> {
         report.metrics.pipeline_depth = depth;
         report.metrics.lane_llm = lane_llm;
         report.metrics.lane_gnn = lane_gnn;
+        // restarts stay 0 here: the supervisor counter is fleet-wide, so the
+        // delta is taken once by the caller (serve_online_with_cache or
+        // serve_online_multi_partial), never double-counted per stream.
+        report.metrics.reliability = rel;
         // end of stream: a private view drains the whole pool; a shared
         // view only drops this stream's pins and returns deferred handles
         // (the pool owner drains the rest once every stream is done).

@@ -47,6 +47,10 @@ pub struct Cell {
     pub pipeline_depth: usize,
     /// online cluster TTL in arrivals (see `ServeConfig::cluster_ttl`).
     pub cluster_ttl: Option<u64>,
+    /// per-query recovery deadline (see `ServeConfig::deadline`).
+    pub deadline: Option<std::time::Duration>,
+    /// per-stage retry budget (see `ServeConfig::max_retries`).
+    pub max_retries: u32,
 }
 
 impl Cell {
@@ -64,6 +68,8 @@ impl Cell {
             online_threshold: d.online_threshold,
             pipeline_depth: d.pipeline_depth,
             cluster_ttl: d.cluster_ttl,
+            deadline: d.deadline,
+            max_retries: d.max_retries,
         }
     }
 
@@ -77,6 +83,8 @@ impl Cell {
             online_threshold: self.online_threshold,
             pipeline_depth: self.pipeline_depth,
             cluster_ttl: self.cluster_ttl,
+            deadline: self.deadline,
+            max_retries: self.max_retries,
         }
     }
 }
@@ -265,6 +273,11 @@ pub fn serving_row(name: &str, r: &ServeReport) -> JsonRow {
         .int("cache_evictions", r.cache.evictions)
         .int("shared_hits", r.cache.shared_hits)
         .int("dedup_bytes_saved", r.cache.dedup_bytes_saved)
+        .int("lane_restarts", m.reliability.restarts)
+        .int("retries", m.reliability.retries)
+        .int("quarantined", m.reliability.quarantined_entries)
+        .int("deadline_hits", m.reliability.deadline_hits)
+        .num("degraded_ms", m.reliability.degraded_secs * 1e3)
 }
 
 /// One multi-stream run as a `BENCH_serving.json` row: fleet wall/qps plus
@@ -282,6 +295,12 @@ pub fn multi_serving_row(name: &str, m: &MultiStreamReport) -> JsonRow {
         .int("deferred_releases", m.shared.deferred_releases)
         .int("lock_acquisitions", m.lock.acquisitions)
         .int("lock_contended", m.lock.contended)
+        .int("failed_streams", m.failed_streams() as u64)
+        .int("lane_restarts", m.reliability.restarts)
+        .int("retries", m.reliability.retries)
+        .int("quarantined", m.reliability.quarantined_entries)
+        .int("deadline_hits", m.reliability.deadline_hits)
+        .num("degraded_ms", m.reliability.degraded_secs * 1e3)
 }
 
 /// One-line summary of a multi-stream run for the table binaries.
@@ -466,7 +485,9 @@ mod tests {
         for want in ["queries", "wall_s", "qps", "overlap_ms", "pipeline_depth",
                      "llm_lane_device_s", "llm_lane_window_s", "llm_device_calls",
                      "llm_fused_calls", "llm_mean_occupancy", "llm_window_stalls",
-                     "gnn_lane_device_s", "shared_hits", "dedup_bytes_saved"] {
+                     "gnn_lane_device_s", "shared_hits", "dedup_bytes_saved",
+                     "lane_restarts", "retries", "quarantined", "deadline_hits",
+                     "degraded_ms"] {
             assert!(keys.contains(&want), "missing field {want}");
         }
     }
@@ -515,7 +536,9 @@ mod tests {
         let keys: Vec<&str> = row.fields.iter().map(|(k, _)| k.as_str()).collect();
         for want in ["streams", "queries", "wall_s", "qps", "pool_prefills",
                      "shared_hits", "dedup_bytes_saved", "deferred_releases",
-                     "lock_acquisitions", "lock_contended"] {
+                     "lock_acquisitions", "lock_contended", "failed_streams",
+                     "lane_restarts", "retries", "quarantined", "deadline_hits",
+                     "degraded_ms"] {
             assert!(keys.contains(&want), "missing field {want}");
         }
         assert!(multi_summary(&m).contains("2 streams"));

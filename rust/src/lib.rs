@@ -71,12 +71,14 @@ pub mod prelude {
     pub use crate::cache::{CachePolicy, CacheStats, KvCacheManager, LockStats, Lookup,
                            RepKey, SharedKvCache};
     pub use crate::cluster::Linkage;
-    pub use crate::coordinator::{Coordinator, MultiStreamReport, ServeConfig, ServeReport};
+    pub use crate::coordinator::{Coordinator, MultiStreamReport, ServeConfig,
+                                 ServeReport, StreamOutcome};
     pub use crate::data::{Dataset, Split};
     pub use crate::graph::{Subgraph, TextualGraph};
-    pub use crate::metrics::{delta, BatchMetrics, Table};
+    pub use crate::metrics::{delta, BatchMetrics, ReliabilityStats, Table};
     pub use crate::retrieval::{GRetriever, GragRetriever, GraphFeatures, Retriever};
-    pub use crate::runtime::{sim_dataset, sim_store, ArtifactStore, Backend, BatchConfig,
-                             Engine, Lane, SimBackend, SimLatency};
+    pub use crate::runtime::{sim_dataset, sim_store, ArtifactStore, Backend,
+                             BackendError, BatchConfig, Engine, FaultPlan, Lane,
+                             SimBackend, SimLatency, SupervisorPolicy};
     pub use crate::util::cli::Args;
 }

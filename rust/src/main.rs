@@ -6,7 +6,8 @@
 //!           --backbone llama-3.2-3b-sim --batch 100 --clusters 1 \
 //!           [--baseline | --online] [--linkage ward] [--seed 7] \
 //!           [--cache-mb N] [--cache-entries N] [--threshold D] \
-//!           [--depth K] [--ttl N] [--artifacts PATH]
+//!           [--depth K] [--ttl N] [--deadline-ms N] [--max-retries N] \
+//!           [--artifacts PATH]
 //! ```
 
 use subgcache::prelude::*;
@@ -23,7 +24,7 @@ fn retriever_by_name(name: &str) -> anyhow::Result<Box<dyn Retriever>> {
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     if args.flag("help") {
-        println!("{}", include_str!("main.rs").lines().take(10)
+        println!("{}", include_str!("main.rs").lines().take(11)
                  .map(|l| l.trim_start_matches("//! ").trim_start_matches("//!"))
                  .collect::<Vec<_>>().join("\n"));
         return Ok(());
@@ -57,6 +58,18 @@ fn main() -> anyhow::Result<()> {
             as f32,
         pipeline_depth: args.usize_or("depth", default_cfg.pipeline_depth),
         cluster_ttl: args.get("ttl").map(|v| v.parse().expect("bad --ttl (arrivals)")),
+        deadline: match args.get("deadline-ms") {
+            Some(v) => {
+                let ms: f64 = v.parse()
+                    .map_err(|_| anyhow::anyhow!("bad --deadline-ms (milliseconds)"))?;
+                anyhow::ensure!(ms.is_finite() && ms > 0.0,
+                                "--deadline-ms must be a positive ms value");
+                Some(std::time::Duration::from_secs_f64(ms / 1e3))
+            }
+            None => default_cfg.deadline,
+        },
+        max_retries: args.usize_or("max-retries", default_cfg.max_retries as usize)
+            as u32,
     };
 
     let engine = Engine::start(&store)?;

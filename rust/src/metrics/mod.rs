@@ -123,6 +123,51 @@ impl LaneTimes {
     }
 }
 
+/// Fault-tolerance counters for one serving run: what broke, what the
+/// recovery machinery did about it, and how long the stream ran degraded.
+/// All-zero on a fault-free run — the happy path never touches these
+/// beyond the final copy into [`BatchMetrics`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ReliabilityStats {
+    /// Lane-worker restarts observed by this run (supervisor counter
+    /// delta across the run; fleet-wide, not per-stream, when several
+    /// streams share one backend).
+    pub restarts: u64,
+    /// Operations retried or repaid after a retryable backend error
+    /// (transient injections and dead-lane recoveries alike).
+    pub retries: u64,
+    /// Cache entries invalidated because their device KV belonged to a
+    /// dead lane incarnation.
+    pub quarantined_entries: u64,
+    /// Queries whose response time exceeded the configured deadline
+    /// (the answer is still served — the deadline bounds *recovery*,
+    /// not success).
+    pub deadline_hits: u64,
+    /// Queries that needed at least one recovery action (a span of
+    /// degraded service, however brief).
+    pub degraded_spans: u64,
+    /// Total seconds spent inside recovery (from first failure detection
+    /// to the op's eventual success), summed over degraded spans.
+    pub degraded_secs: f64,
+}
+
+impl ReliabilityStats {
+    /// True when nothing went wrong and nothing had to recover.
+    pub fn is_clean(&self) -> bool {
+        *self == ReliabilityStats::default()
+    }
+
+    /// Fold another run's counters into this one (fleet aggregation).
+    pub fn merge(&mut self, other: &ReliabilityStats) {
+        self.restarts += other.restarts;
+        self.retries += other.retries;
+        self.quarantined_entries += other.quarantined_entries;
+        self.deadline_hits += other.deadline_hits;
+        self.degraded_spans += other.degraded_spans;
+        self.degraded_secs += other.degraded_secs;
+    }
+}
+
 /// Batch-level result for one (dataset, method, backbone) cell of a table.
 #[derive(Debug, Clone, Default)]
 pub struct BatchMetrics {
@@ -161,6 +206,8 @@ pub struct BatchMetrics {
     /// Prefill KV bytes this stream did not pay because another stream
     /// already had (sum of entry bytes over `shared_hits`).
     pub dedup_bytes_saved: u64,
+    /// Fault-tolerance counters for this run (all-zero when nothing broke).
+    pub reliability: ReliabilityStats,
 }
 
 impl BatchMetrics {
@@ -553,6 +600,23 @@ mod tests {
     fn table_rejects_bad_row() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["x".to_string()]);
+    }
+
+    #[test]
+    fn reliability_merge_and_cleanliness() {
+        let mut a = ReliabilityStats::default();
+        assert!(a.is_clean(), "fresh stats must read as clean");
+        let b = ReliabilityStats {
+            restarts: 1, retries: 3, quarantined_entries: 2,
+            deadline_hits: 1, degraded_spans: 2, degraded_secs: 0.5,
+        };
+        a.merge(&b);
+        a.merge(&b);
+        assert!(!a.is_clean());
+        assert_eq!(a.retries, 6);
+        assert_eq!(a.restarts, 2);
+        assert_eq!(a.degraded_spans, 4);
+        assert!((a.degraded_secs - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -25,8 +25,11 @@
 //! # Contract
 //!
 //! * `submit_*` enqueues without blocking and returns a ticket; `wait`
-//!   blocks for the reply. A dead lane (worker thread exited) surfaces as an
-//!   `Err` from `submit_*` or from `wait` — never a hang, never a panic.
+//!   blocks for the reply. A dead lane (worker thread exited) surfaces as a
+//!   [`BackendError::LaneDead`] from `submit_*` or from `wait` — never a
+//!   hang, never a panic. Every backend failure is a typed [`BackendError`]
+//!   so callers can tell retryable (`Transient`, `LaneDead`) from terminal
+//!   (`Fatal`) without string matching.
 //! * `prefill`/`extend` return an opaque [`KvHandle`] the caller must
 //!   eventually pass to [`Backend::release`] / [`Backend::release_many`];
 //!   `extend` does NOT consume its input handle (the SubGCache property).
@@ -39,6 +42,84 @@
 use std::sync::mpsc::Receiver;
 
 use super::batch::BatchInfo;
+
+/// Typed failure taxonomy at the [`Backend`] boundary, so callers can
+/// distinguish retryable failures from terminal ones instead of matching
+/// error strings.
+///
+/// * [`Transient`](BackendError::Transient) — the op failed but the lane is
+///   healthy (an injected fault, a spurious device error). Resubmitting the
+///   same request may succeed; no backend state was lost.
+/// * [`LaneDead`](BackendError::LaneDead) — the lane worker died (or was
+///   restarted by the supervisor) while the request was queued or in
+///   flight. Every KV handle minted by the dead incarnation is gone; the
+///   caller must treat cached handles from it as invalid (see
+///   [`Backend::kv_current`]) and recompute.
+/// * [`Fatal`](BackendError::Fatal) — not retryable: bad arguments, unknown
+///   module, malformed backend output. Retrying the same request fails the
+///   same way.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BackendError {
+    /// Retryable one-off failure; the lane (and all KV state) is intact.
+    Transient { op: &'static str, reason: String },
+    /// The lane worker died; its KV incarnation is lost.
+    LaneDead { lane: Lane, reason: String },
+    /// Terminal: retrying cannot succeed.
+    Fatal { reason: String },
+}
+
+impl std::fmt::Display for BackendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendError::Transient { op, reason } => {
+                write!(f, "transient backend error in {op}: {reason}")
+            }
+            BackendError::LaneDead { lane, reason } => {
+                write!(f, "{} lane dead: {reason}", lane.name())
+            }
+            BackendError::Fatal { reason } => write!(f, "backend error: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for BackendError {}
+
+impl BackendError {
+    pub fn transient(op: &'static str, reason: impl Into<String>) -> BackendError {
+        BackendError::Transient { op, reason: reason.into() }
+    }
+
+    pub fn lane_dead(lane: Lane, reason: impl Into<String>) -> BackendError {
+        BackendError::LaneDead { lane, reason: reason.into() }
+    }
+
+    pub fn fatal(reason: impl std::fmt::Display) -> BackendError {
+        BackendError::Fatal { reason: reason.to_string() }
+    }
+
+    /// Terminal wrapper for an `anyhow` chain (full context preserved).
+    pub fn from_anyhow(e: anyhow::Error) -> BackendError {
+        BackendError::Fatal { reason: format!("{e:#}") }
+    }
+
+    /// Whether resubmitting (possibly after recomputing lost KV state)
+    /// may succeed: true for `Transient` and `LaneDead`, false for `Fatal`.
+    pub fn is_retryable(&self) -> bool {
+        !matches!(self, BackendError::Fatal { .. })
+    }
+
+    /// Whether this failure invalidated the lane's KV incarnation.
+    pub fn is_lane_dead(&self) -> bool {
+        matches!(self, BackendError::LaneDead { .. })
+    }
+
+    /// Pull the typed taxonomy back out of an `anyhow` chain (the
+    /// coordinator wraps backend errors with query context; `downcast_ref`
+    /// searches the whole chain).
+    pub fn classify(err: &anyhow::Error) -> Option<&BackendError> {
+        err.downcast_ref::<BackendError>()
+    }
+}
 
 /// A backend execution lane (one worker thread + queue each).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -84,6 +165,10 @@ pub struct EngineStats {
     /// per-member loop instead. Always 0 for the sim backend, which fuses
     /// everything.
     pub unbatched_fallbacks: u64,
+    /// Lane worker restarts performed by the backend's supervisor (summed
+    /// across lanes). 0 on a fault-free run; the PJRT engine treats lane
+    /// death as terminal today and always reports 0.
+    pub lane_restarts: u64,
 }
 
 /// Lane-side timing of one executed call, measured on the worker thread so
@@ -113,18 +198,20 @@ impl CallTiming {
 
 /// One in-flight reply slot. `wait` blocks until the lane answers; a
 /// dropped reply sender (lane worker died, or the request was never
-/// processed before shutdown) surfaces as an error instead of hanging
-/// forever.
+/// processed before shutdown) surfaces as [`BackendError::LaneDead`]
+/// instead of hanging forever.
 pub(crate) struct Ticket<T> {
-    pub(crate) rx: Receiver<anyhow::Result<T>>,
+    pub(crate) rx: Receiver<Result<T, BackendError>>,
+    pub(crate) lane: Lane,
 }
 
 impl<T> Ticket<T> {
-    pub(crate) fn wait(self) -> anyhow::Result<T> {
+    pub(crate) fn wait(self) -> Result<T, BackendError> {
         self.rx.recv().map_err(|_| {
-            anyhow::anyhow!(
-                "backend lane dropped the reply channel before answering \
-                 (lane worker died or the ticket's request was never run)"
+            BackendError::lane_dead(
+                self.lane,
+                "lane dropped the reply channel before answering (worker died \
+                 or was restarted before the ticket's request ran)",
             )
         })?
     }
@@ -142,13 +229,13 @@ pub type PendingExtend = PendingKv;
 
 impl PendingKv {
     /// Block for the new KV handle and the next-token logits row.
-    pub fn wait(self) -> anyhow::Result<(KvHandle, Vec<f32>)> {
+    pub fn wait(self) -> Result<(KvHandle, Vec<f32>), BackendError> {
         let (kv, logits, _) = self.wait_timed()?;
         Ok((kv, logits))
     }
 
     /// Like [`wait`](Self::wait), plus the lane-side [`CallTiming`].
-    pub fn wait_timed(self) -> anyhow::Result<(KvHandle, Vec<f32>, CallTiming)> {
+    pub fn wait_timed(self) -> Result<(KvHandle, Vec<f32>, CallTiming), BackendError> {
         let (id, logits, t) = self.0.wait()?;
         Ok((KvHandle(id), logits, t))
     }
@@ -158,11 +245,11 @@ impl PendingKv {
 pub struct PendingGenerate(pub(crate) Ticket<(Vec<i32>, CallTiming)>);
 
 impl PendingGenerate {
-    pub fn wait(self) -> anyhow::Result<Vec<i32>> {
+    pub fn wait(self) -> Result<Vec<i32>, BackendError> {
         Ok(self.wait_timed()?.0)
     }
 
-    pub fn wait_timed(self) -> anyhow::Result<(Vec<i32>, CallTiming)> {
+    pub fn wait_timed(self) -> Result<(Vec<i32>, CallTiming), BackendError> {
         self.0.wait()
     }
 }
@@ -171,11 +258,11 @@ impl PendingGenerate {
 pub struct PendingEncode(pub(crate) Ticket<(Vec<f32>, CallTiming)>);
 
 impl PendingEncode {
-    pub fn wait(self) -> anyhow::Result<Vec<f32>> {
+    pub fn wait(self) -> Result<Vec<f32>, BackendError> {
         Ok(self.wait_timed()?.0)
     }
 
-    pub fn wait_timed(self) -> anyhow::Result<(Vec<f32>, CallTiming)> {
+    pub fn wait_timed(self) -> Result<(Vec<f32>, CallTiming), BackendError> {
         self.0.wait()
     }
 }
@@ -199,7 +286,7 @@ pub trait Backend: Sync {
     /// LLM lane without blocking; the ticket yields the new KV handle and
     /// the next-token logits row after position `plen - 1`.
     fn submit_prefill(&self, module: &str, tokens: &[i32], plen: i32)
-                      -> anyhow::Result<PendingPrefill>;
+                      -> Result<PendingPrefill, BackendError>;
 
     /// Submit an extend of `q_tokens` (padded to Q, real length `qlen`) at
     /// position `plen` on top of `kv` (NOT consumed — it stays reusable, the
@@ -207,17 +294,17 @@ pub trait Backend: Sync {
     /// yields a new handle and the `[V]` logits row after the last real
     /// question token (row `qlen - 1`, clamped).
     fn submit_extend(&self, module: &str, kv: &KvHandle, plen: i32, q_tokens: &[i32],
-                     qlen: i32) -> anyhow::Result<PendingExtend>;
+                     qlen: i32) -> Result<PendingExtend, BackendError>;
 
     /// Submit a greedy decode of up to G tokens starting from `first_tok`
     /// at `cur_len` on the LLM lane. `kv` is not consumed.
     fn submit_generate(&self, module: &str, kv: &KvHandle, cur_len: i32, first_tok: i32)
-                       -> anyhow::Result<PendingGenerate>;
+                       -> Result<PendingGenerate, BackendError>;
 
     /// Submit a GNN subgraph embedding — x [N,F], adj [N,N], mask [N]
     /// (row-major flat) — on the GNN lane without blocking.
     fn submit_encode(&self, module: &str, x: Vec<f32>, adj: Vec<f32>, mask: Vec<f32>)
-                     -> anyhow::Result<PendingEncode>;
+                     -> Result<PendingEncode, BackendError>;
 
     /// Return a KV cache to the backend. Best-effort: a dead lane has
     /// already dropped its buffers, so failure to enqueue is ignored.
@@ -229,38 +316,48 @@ pub trait Backend: Sync {
 
     /// Resident bytes of one KV cache of `module` (k + v buffers), sized
     /// from the manifest. Errors for non-LLM modules.
-    fn kv_bytes(&self, module: &str) -> anyhow::Result<usize>;
+    fn kv_bytes(&self, module: &str) -> Result<usize, BackendError>;
 
     /// Load weights + compile all entries of `module` ahead of timing runs
     /// (routed to the module's lane; a no-op for backends without compile).
-    fn warmup(&self, module: &str) -> anyhow::Result<()>;
+    fn warmup(&self, module: &str) -> Result<(), BackendError>;
 
     /// Merged execution counters across all lanes.
-    fn stats(&self) -> anyhow::Result<EngineStats>;
+    fn stats(&self) -> Result<EngineStats, BackendError>;
+
+    /// Whether `kv` was minted by the *current* incarnation of its lane.
+    /// A backend whose supervisor restarted a lane loses every KV handle
+    /// that incarnation held; callers holding cached handles use this to
+    /// quarantine them after a [`BackendError::LaneDead`] instead of
+    /// retrying against dead device state. Backends without lane restarts
+    /// (the PJRT engine today) keep the default: every handle is current.
+    fn kv_current(&self, _kv: &KvHandle) -> bool {
+        true
+    }
 
     // -- blocking conveniences (submit + wait) -------------------------------
 
     /// Blocking prefill: [`Backend::submit_prefill`] + wait.
     fn prefill(&self, module: &str, tokens: &[i32], plen: i32)
-               -> anyhow::Result<(KvHandle, Vec<f32>)> {
+               -> Result<(KvHandle, Vec<f32>), BackendError> {
         self.submit_prefill(module, tokens, plen)?.wait()
     }
 
     /// Blocking extend: [`Backend::submit_extend`] + wait.
     fn extend(&self, module: &str, kv: &KvHandle, plen: i32, q_tokens: &[i32], qlen: i32)
-              -> anyhow::Result<(KvHandle, Vec<f32>)> {
+              -> Result<(KvHandle, Vec<f32>), BackendError> {
         self.submit_extend(module, kv, plen, q_tokens, qlen)?.wait()
     }
 
     /// Blocking generate: [`Backend::submit_generate`] + wait.
     fn generate(&self, module: &str, kv: &KvHandle, cur_len: i32, first_tok: i32)
-                -> anyhow::Result<Vec<i32>> {
+                -> Result<Vec<i32>, BackendError> {
         self.submit_generate(module, kv, cur_len, first_tok)?.wait()
     }
 
     /// Blocking encode: [`Backend::submit_encode`] + wait.
     fn encode(&self, module: &str, x: Vec<f32>, adj: Vec<f32>, mask: Vec<f32>)
-              -> anyhow::Result<Vec<f32>> {
+              -> Result<Vec<f32>, BackendError> {
         self.submit_encode(module, x, adj, mask)?.wait()
     }
 }
@@ -275,6 +372,7 @@ pub(crate) fn merge_stats(parts: Vec<EngineStats>) -> EngineStats {
         out.compile_secs += p.compile_secs;
         out.host_kv_bytes += p.host_kv_bytes;
         out.unbatched_fallbacks += p.unbatched_fallbacks;
+        out.lane_restarts += p.lane_restarts;
     }
     out.calls.sort_by(|a, b| a.0.cmp(&b.0));
     out
@@ -287,35 +385,55 @@ mod tests {
 
     #[test]
     fn wait_on_dropped_ticket_errors_instead_of_hanging() {
-        let (tx, rx) = channel::<anyhow::Result<(u64, Vec<f32>, CallTiming)>>();
+        let (tx, rx) = channel::<Result<(u64, Vec<f32>, CallTiming), BackendError>>();
         drop(tx);
-        let err = PendingKv(Ticket { rx }).wait().unwrap_err();
+        let err = PendingKv(Ticket { rx, lane: Lane::Llm }).wait().unwrap_err();
         assert!(err.to_string().contains("lane"), "unhelpful error: {err}");
+        assert!(err.is_lane_dead(), "a dropped reply sender means the lane died");
+        assert!(err.is_retryable(), "lane death is recoverable by recompute");
 
-        let (tx, rx) = channel::<anyhow::Result<(u64, Vec<f32>, CallTiming)>>();
+        let (tx, rx) = channel::<Result<(u64, Vec<f32>, CallTiming), BackendError>>();
         drop(tx);
-        assert!(PendingKv(Ticket { rx }).wait_timed().is_err());
+        assert!(PendingKv(Ticket { rx, lane: Lane::Llm }).wait_timed().is_err());
 
-        let (tx, rx) = channel::<anyhow::Result<(Vec<i32>, CallTiming)>>();
+        let (tx, rx) = channel::<Result<(Vec<i32>, CallTiming), BackendError>>();
         drop(tx);
-        assert!(PendingGenerate(Ticket { rx }).wait().is_err());
+        assert!(PendingGenerate(Ticket { rx, lane: Lane::Llm }).wait().is_err());
 
-        let (tx, rx) = channel::<anyhow::Result<(Vec<f32>, CallTiming)>>();
+        let (tx, rx) = channel::<Result<(Vec<f32>, CallTiming), BackendError>>();
         drop(tx);
-        assert!(PendingEncode(Ticket { rx }).wait().is_err());
+        assert!(PendingEncode(Ticket { rx, lane: Lane::Gnn }).wait().is_err());
     }
 
     #[test]
     fn ticket_delivers_value_sent_before_drop() {
         // a reply that was already sent must still arrive after the lane
         // side dropped its sender — wait is recv, not a liveness check.
-        let (tx, rx) = channel::<anyhow::Result<(u64, Vec<f32>, CallTiming)>>();
+        let (tx, rx) = channel::<Result<(u64, Vec<f32>, CallTiming), BackendError>>();
         tx.send(Ok((7, vec![1.0], CallTiming::default()))).unwrap();
         drop(tx);
-        let (kv, logits, t) = PendingKv(Ticket { rx }).wait_timed().unwrap();
+        let (kv, logits, t) =
+            PendingKv(Ticket { rx, lane: Lane::Llm }).wait_timed().unwrap();
         assert_eq!(kv, KvHandle(7));
         assert_eq!(logits, vec![1.0]);
         assert_eq!(t.secs(), 0.0);
+    }
+
+    #[test]
+    fn error_taxonomy_classifies_through_anyhow_context() {
+        use anyhow::Context as _;
+        let base: Result<(), BackendError> =
+            Err(BackendError::transient("extend", "injected fault"));
+        let wrapped: anyhow::Result<()> = base.context("query 7 failed");
+        let err = wrapped.unwrap_err();
+        let be = BackendError::classify(&err).expect("taxonomy survives context");
+        assert!(be.is_retryable() && !be.is_lane_dead());
+        assert!(matches!(be, BackendError::Transient { op: "extend", .. }));
+
+        let fatal = BackendError::fatal("unknown module");
+        assert!(!fatal.is_retryable());
+        let dead = BackendError::lane_dead(Lane::Llm, "killed");
+        assert!(dead.to_string().contains("lane"), "LaneDead names the lane");
     }
 
     #[test]
@@ -342,6 +460,7 @@ mod tests {
             compile_secs: 1.0,
             host_kv_bytes: 0,
             unbatched_fallbacks: 1,
+            lane_restarts: 1,
         };
         let b = EngineStats {
             calls: vec![("gat.encode".into(), 4, 0.25)],
@@ -349,12 +468,14 @@ mod tests {
             compile_secs: 0.5,
             host_kv_bytes: 8,
             unbatched_fallbacks: 2,
+            lane_restarts: 2,
         };
         let m = merge_stats(vec![a, b]);
         assert_eq!(m.live_kv, 3);
         assert!((m.compile_secs - 1.5).abs() < 1e-12);
         assert_eq!(m.host_kv_bytes, 8);
         assert_eq!(m.unbatched_fallbacks, 3);
+        assert_eq!(m.lane_restarts, 3);
         assert_eq!(m.calls[0].0, "gat.encode", "calls must be re-sorted");
         assert_eq!(m.calls[1].0, "m.prefill");
     }

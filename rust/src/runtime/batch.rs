@@ -235,6 +235,36 @@ mod tests {
     }
 
     #[test]
+    fn disconnected_mid_window_keeps_collected_members() {
+        // every sender dropped while the window is open: the batch launches
+        // with what it has — already-collected members still execute and
+        // reply; nothing hangs waiting out a channel that can never deliver.
+        let (tx, rx) = channel::<u32>();
+        tx.send(2).unwrap();
+        drop(tx);
+        let cfg = BatchConfig::new(8, Duration::from_secs(5));
+        let t0 = Instant::now();
+        let c = collect_window(&rx, 1, cfg, |_, _| true);
+        assert!(t0.elapsed() < Duration::from_millis(100),
+                "disconnect must close the window, not wait it out");
+        assert_eq!(c.members.iter().map(|(r, _)| *r).collect::<Vec<_>>(), [1, 2]);
+        assert!(c.carry.is_none(), "a dead channel cannot carry a request");
+        assert!(!c.stalled, "disconnect is not a window stall");
+    }
+
+    #[test]
+    fn disconnected_before_any_arrival_launches_the_first_alone() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        let cfg = BatchConfig::new(4, Duration::from_secs(5));
+        let t0 = Instant::now();
+        let c = collect_window(&rx, 9, cfg, |_, _| true);
+        assert!(t0.elapsed() < Duration::from_millis(100));
+        assert_eq!(c.members.len(), 1, "the in-hand request still runs");
+        assert!(c.carry.is_none() && !c.stalled);
+    }
+
+    #[test]
     fn zero_wait_fuses_only_whats_queued() {
         let (tx, rx) = channel::<u32>();
         tx.send(2).unwrap();

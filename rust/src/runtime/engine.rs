@@ -63,13 +63,13 @@ use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::{Duration, Instant};
 
-use super::backend::{merge_stats, Backend, CallTiming, EngineStats, KvHandle, Lane,
-                     PendingEncode, PendingExtend, PendingGenerate, PendingKv,
-                     PendingPrefill, Ticket};
+use super::backend::{merge_stats, Backend, BackendError, CallTiming, EngineStats,
+                     KvHandle, Lane, PendingEncode, PendingExtend, PendingGenerate,
+                     PendingKv, PendingPrefill, Ticket};
 use super::batch::{collect_window, BatchConfig, BatchInfo, Collected};
 use super::manifest::{EntrySpec, Manifest, ModuleSpec};
 
-type KvReply = Sender<anyhow::Result<(u64, Vec<f32>, CallTiming)>>;
+type KvReply = Sender<Result<(u64, Vec<f32>, CallTiming), BackendError>>;
 
 enum Req {
     Prefill {
@@ -94,7 +94,7 @@ enum Req {
         cur_len: i32,
         first_tok: i32,
         submitted: Instant,
-        reply: Sender<anyhow::Result<(Vec<i32>, CallTiming)>>,
+        reply: Sender<Result<(Vec<i32>, CallTiming), BackendError>>,
     },
     Encode {
         module: String,
@@ -102,7 +102,7 @@ enum Req {
         adj: Vec<f32>,
         mask: Vec<f32>,
         submitted: Instant,
-        reply: Sender<anyhow::Result<(Vec<f32>, CallTiming)>>,
+        reply: Sender<Result<(Vec<f32>, CallTiming), BackendError>>,
     },
     Release {
         kv: u64,
@@ -112,7 +112,7 @@ enum Req {
     },
     Warmup {
         module: String,
-        reply: Sender<anyhow::Result<()>>,
+        reply: Sender<Result<(), BackendError>>,
     },
     Stats {
         reply: Sender<EngineStats>,
@@ -201,16 +201,27 @@ impl Engine {
     }
 
     /// Lane a module executes on, derived from its manifest kind.
-    fn lane_for_module(&self, module: &str) -> anyhow::Result<Lane> {
-        lane_for_kind(&self.manifest.module(module)?.kind)
-            .ok_or_else(|| anyhow::anyhow!("module {module}: no lane for its kind"))
+    fn lane_for_module(&self, module: &str) -> Result<Lane, BackendError> {
+        let kind = &self
+            .manifest
+            .module(module)
+            .map_err(BackendError::from_anyhow)?
+            .kind;
+        lane_for_kind(kind).ok_or_else(|| {
+            BackendError::fatal(format!("module {module}: no lane for its kind"))
+        })
     }
 
-    /// Enqueue a request on a lane. A dead lane yields an error (failing
-    /// the one request) instead of panicking the caller's thread.
-    fn send(&self, lane: Lane, req: Req) -> anyhow::Result<()> {
+    /// Enqueue a request on a lane. A dead lane yields
+    /// [`BackendError::LaneDead`] (failing the one request) instead of
+    /// panicking the caller's thread; the PJRT engine has no supervisor
+    /// today, so lane death is terminal here.
+    fn send(&self, lane: Lane, req: Req) -> Result<(), BackendError> {
         self.lanes[lane as usize].tx.send(req).map_err(|_| {
-            anyhow::anyhow!("engine {} lane worker has shut down", lane.name())
+            BackendError::lane_dead(
+                lane,
+                format!("engine {} lane worker has shut down", lane.name()),
+            )
         })
     }
 
@@ -218,18 +229,18 @@ impl Engine {
     /// the LLM lane without blocking; the ticket yields the new KV handle
     /// and the next-token logits row after position `plen - 1`.
     pub fn submit_prefill(&self, module: &str, tokens: &[i32], plen: i32)
-                          -> anyhow::Result<PendingPrefill> {
+                          -> Result<PendingPrefill, BackendError> {
         let (reply, rx) = channel();
         self.send(Lane::Llm, Req::Prefill {
             module: module.into(), tokens: tokens.to_vec(), plen,
             submitted: Instant::now(), reply,
         })?;
-        Ok(PendingKv(Ticket { rx }))
+        Ok(PendingKv(Ticket { rx, lane: Lane::Llm }))
     }
 
     /// Blocking prefill: [`Engine::submit_prefill`] + wait.
     pub fn prefill(&self, module: &str, tokens: &[i32], plen: i32)
-                   -> anyhow::Result<(KvHandle, Vec<f32>)> {
+                   -> Result<(KvHandle, Vec<f32>), BackendError> {
         self.submit_prefill(module, tokens, plen)?.wait()
     }
 
@@ -240,53 +251,54 @@ impl Engine {
     /// token (row `qlen - 1`, clamped — an empty question selects row 0
     /// instead of panicking).
     pub fn submit_extend(&self, module: &str, kv: &KvHandle, plen: i32,
-                         q_tokens: &[i32], qlen: i32) -> anyhow::Result<PendingExtend> {
+                         q_tokens: &[i32], qlen: i32)
+                         -> Result<PendingExtend, BackendError> {
         let (reply, rx) = channel();
         self.send(Lane::Llm, Req::Extend {
             module: module.into(), kv: kv.0, plen, q_tokens: q_tokens.to_vec(), qlen,
             submitted: Instant::now(), reply,
         })?;
-        Ok(PendingKv(Ticket { rx }))
+        Ok(PendingKv(Ticket { rx, lane: Lane::Llm }))
     }
 
     /// Blocking extend: [`Engine::submit_extend`] + wait.
     pub fn extend(&self, module: &str, kv: &KvHandle, plen: i32, q_tokens: &[i32],
-                  qlen: i32) -> anyhow::Result<(KvHandle, Vec<f32>)> {
+                  qlen: i32) -> Result<(KvHandle, Vec<f32>), BackendError> {
         self.submit_extend(module, kv, plen, q_tokens, qlen)?.wait()
     }
 
     /// Submit a greedy decode of up to G tokens starting from `first_tok`
     /// at `cur_len`. `kv` is not consumed.
     pub fn submit_generate(&self, module: &str, kv: &KvHandle, cur_len: i32,
-                           first_tok: i32) -> anyhow::Result<PendingGenerate> {
+                           first_tok: i32) -> Result<PendingGenerate, BackendError> {
         let (reply, rx) = channel();
         self.send(Lane::Llm, Req::Generate {
             module: module.into(), kv: kv.0, cur_len, first_tok,
             submitted: Instant::now(), reply,
         })?;
-        Ok(PendingGenerate(Ticket { rx }))
+        Ok(PendingGenerate(Ticket { rx, lane: Lane::Llm }))
     }
 
     /// Blocking generate: [`Engine::submit_generate`] + wait.
     pub fn generate(&self, module: &str, kv: &KvHandle, cur_len: i32, first_tok: i32)
-                    -> anyhow::Result<Vec<i32>> {
+                    -> Result<Vec<i32>, BackendError> {
         self.submit_generate(module, kv, cur_len, first_tok)?.wait()
     }
 
     /// Submit a GNN subgraph embedding — x [N,F], adj [N,N], mask [N]
     /// (row-major flat) — on the GNN lane without blocking.
     pub fn submit_encode(&self, module: &str, x: Vec<f32>, adj: Vec<f32>,
-                         mask: Vec<f32>) -> anyhow::Result<PendingEncode> {
+                         mask: Vec<f32>) -> Result<PendingEncode, BackendError> {
         let (reply, rx) = channel();
         self.send(Lane::Gnn, Req::Encode {
             module: module.into(), x, adj, mask, submitted: Instant::now(), reply,
         })?;
-        Ok(PendingEncode(Ticket { rx }))
+        Ok(PendingEncode(Ticket { rx, lane: Lane::Gnn }))
     }
 
     /// Blocking encode: [`Engine::submit_encode`] + wait.
     pub fn encode(&self, module: &str, x: Vec<f32>, adj: Vec<f32>, mask: Vec<f32>)
-                  -> anyhow::Result<Vec<f32>> {
+                  -> Result<Vec<f32>, BackendError> {
         self.submit_encode(module, x, adj, mask)?.wait()
     }
 
@@ -310,32 +322,38 @@ impl Engine {
 
     /// Resident bytes of one KV cache of `module` (k + v buffers, f32),
     /// sized from the manifest. Errors for non-LLM modules.
-    pub fn kv_bytes(&self, module: &str) -> anyhow::Result<usize> {
+    pub fn kv_bytes(&self, module: &str) -> Result<usize, BackendError> {
         let dims = self
             .manifest
-            .module(module)?
+            .module(module)
+            .map_err(BackendError::from_anyhow)?
             .dims
-            .ok_or_else(|| anyhow::anyhow!("{module}: not an llm module, no KV geometry"))?;
+            .ok_or_else(|| {
+                BackendError::fatal(format!("{module}: not an llm module, no KV geometry"))
+            })?;
         Ok(2 * dims.kv_bytes_each())
     }
 
     /// Load weights + compile all entries of `module` ahead of timing runs,
     /// on the lane the module executes on.
-    pub fn warmup(&self, module: &str) -> anyhow::Result<()> {
+    pub fn warmup(&self, module: &str) -> Result<(), BackendError> {
         let lane = self.lane_for_module(module)?;
         let (reply, rx) = channel();
         self.send(lane, Req::Warmup { module: module.into(), reply })?;
-        Ticket { rx }.wait()
+        Ticket { rx, lane }.wait()
     }
 
     /// Merged execution counters across both lanes.
-    pub fn stats(&self) -> anyhow::Result<EngineStats> {
+    pub fn stats(&self) -> Result<EngineStats, BackendError> {
         let mut parts = Vec::with_capacity(Lane::ALL.len());
         for lane in Lane::ALL {
             let (reply, rx) = channel();
             self.send(lane, Req::Stats { reply })?;
             parts.push(rx.recv().map_err(|_| {
-                anyhow::anyhow!("engine {} lane died before replying", lane.name())
+                BackendError::lane_dead(
+                    lane,
+                    format!("engine {} lane died before replying to stats", lane.name()),
+                )
             })?);
         }
         Ok(merge_stats(parts))
@@ -344,22 +362,22 @@ impl Engine {
 
 impl Backend for Engine {
     fn submit_prefill(&self, module: &str, tokens: &[i32], plen: i32)
-                      -> anyhow::Result<PendingPrefill> {
+                      -> Result<PendingPrefill, BackendError> {
         Engine::submit_prefill(self, module, tokens, plen)
     }
 
     fn submit_extend(&self, module: &str, kv: &KvHandle, plen: i32, q_tokens: &[i32],
-                     qlen: i32) -> anyhow::Result<PendingExtend> {
+                     qlen: i32) -> Result<PendingExtend, BackendError> {
         Engine::submit_extend(self, module, kv, plen, q_tokens, qlen)
     }
 
     fn submit_generate(&self, module: &str, kv: &KvHandle, cur_len: i32, first_tok: i32)
-                       -> anyhow::Result<PendingGenerate> {
+                       -> Result<PendingGenerate, BackendError> {
         Engine::submit_generate(self, module, kv, cur_len, first_tok)
     }
 
     fn submit_encode(&self, module: &str, x: Vec<f32>, adj: Vec<f32>, mask: Vec<f32>)
-                     -> anyhow::Result<PendingEncode> {
+                     -> Result<PendingEncode, BackendError> {
         Engine::submit_encode(self, module, x, adj, mask)
     }
 
@@ -371,15 +389,15 @@ impl Backend for Engine {
         Engine::release_many(self, kvs)
     }
 
-    fn kv_bytes(&self, module: &str) -> anyhow::Result<usize> {
+    fn kv_bytes(&self, module: &str) -> Result<usize, BackendError> {
         Engine::kv_bytes(self, module)
     }
 
-    fn warmup(&self, module: &str) -> anyhow::Result<()> {
+    fn warmup(&self, module: &str) -> Result<(), BackendError> {
         Engine::warmup(self, module)
     }
 
-    fn stats(&self) -> anyhow::Result<EngineStats> {
+    fn stats(&self) -> Result<EngineStats, BackendError> {
         Engine::stats(self)
     }
 }
@@ -510,7 +528,7 @@ fn lane_main(root: PathBuf, manifest: Manifest, opts: EngineOpts, cfg: BatchConf
                     }
                 }
                 Req::Warmup { module, reply } => {
-                    let _ = reply.send(st.warmup(&module));
+                    let _ = reply.send(st.warmup(&module).map_err(BackendError::from_anyhow));
                 }
                 Req::Stats { reply } => {
                     let mut calls: Vec<(String, u64, f64)> = st
@@ -525,6 +543,7 @@ fn lane_main(root: PathBuf, manifest: Manifest, opts: EngineOpts, cfg: BatchConf
                         compile_secs: st.compile_secs,
                         host_kv_bytes: st.host_kv_bytes,
                         unbatched_fallbacks: st.unbatched_fallbacks,
+                        lane_restarts: 0, // the engine has no lane supervisor
                     });
                 }
                 Req::Shutdown => return,
@@ -539,11 +558,16 @@ fn lane_main(root: PathBuf, manifest: Manifest, opts: EngineOpts, cfg: BatchConf
 }
 
 /// Per-member staged result + reply slot (all members of one batch share a
-/// variant, but the reply channel types differ per variant).
+/// variant, but the reply channel types differ per variant). Worker-side
+/// execution errors are `anyhow` internally and become
+/// [`BackendError::Fatal`] at the staging boundary — a malformed output or
+/// bad argument fails the one ticket, never the lane worker.
 enum BatchOut {
-    Kv(anyhow::Result<(u64, Vec<f32>)>, KvReply),
-    Gen(anyhow::Result<Vec<i32>>, Sender<anyhow::Result<(Vec<i32>, CallTiming)>>),
-    Enc(anyhow::Result<Vec<f32>>, Sender<anyhow::Result<(Vec<f32>, CallTiming)>>),
+    Kv(Result<(u64, Vec<f32>), BackendError>, KvReply),
+    Gen(Result<Vec<i32>, BackendError>,
+        Sender<Result<(Vec<i32>, CallTiming), BackendError>>),
+    Enc(Result<Vec<f32>, BackendError>,
+        Sender<Result<(Vec<f32>, CallTiming), BackendError>>),
 }
 
 /// Outputs of one entry-point execution.
@@ -606,10 +630,11 @@ impl State {
                     }
                 }
                 Err(e) => {
-                    // anyhow errors don't clone; every member gets the text
-                    let msg = format!("fused {module}.{entry} failed: {e:#}");
+                    // BackendError clones, so every member gets the full text
+                    let err = BackendError::fatal(
+                        format!("fused {module}.{entry} failed: {e:#}"));
                     for (reply, submitted, picked) in slots {
-                        outs.push((BatchOut::Kv(Err(anyhow::anyhow!(msg.clone())), reply),
+                        outs.push((BatchOut::Kv(Err(err.clone()), reply),
                                    submitted, picked));
                     }
                 }
@@ -621,21 +646,27 @@ impl State {
             for (req, picked) in col.members.drain(..) {
                 let (out, submitted) = match req {
                     Req::Prefill { module, tokens, plen, submitted, reply } => {
-                        (BatchOut::Kv(self.prefill(&module, &tokens, plen), reply),
+                        (BatchOut::Kv(self.prefill(&module, &tokens, plen)
+                                          .map_err(BackendError::from_anyhow),
+                                      reply),
                          submitted)
                     }
                     Req::Extend { module, kv, plen, q_tokens, qlen, submitted, reply } => {
-                        (BatchOut::Kv(self.extend(&module, kv, plen, &q_tokens, qlen),
+                        (BatchOut::Kv(self.extend(&module, kv, plen, &q_tokens, qlen)
+                                          .map_err(BackendError::from_anyhow),
                                       reply),
                          submitted)
                     }
                     Req::Generate { module, kv, cur_len, first_tok, submitted, reply } => {
-                        (BatchOut::Gen(self.generate(&module, kv, cur_len, first_tok),
+                        (BatchOut::Gen(self.generate(&module, kv, cur_len, first_tok)
+                                           .map_err(BackendError::from_anyhow),
                                        reply),
                          submitted)
                     }
                     Req::Encode { module, x, adj, mask, submitted, reply } => {
-                        (BatchOut::Enc(self.encode(&module, &x, &adj, &mask), reply),
+                        (BatchOut::Enc(self.encode(&module, &x, &adj, &mask)
+                                           .map_err(BackendError::from_anyhow),
+                                       reply),
                          submitted)
                     }
                     _ => unreachable!("control requests never enter a batch"),
@@ -701,12 +732,19 @@ impl State {
                                 leaves.len(), 2 * n + 1);
                 let mut it = leaves.into_iter();
                 let mut pairs = Vec::with_capacity(n);
-                for _ in 0..n {
-                    let k = it.next().unwrap();
-                    let v = it.next().unwrap();
+                for i in 0..n {
+                    let (Some(k), Some(v)) = (it.next(), it.next()) else {
+                        anyhow::bail!(
+                            "{module}.{entry}: ran out of output leaves at member {i} \
+                             (malformed backend output)");
+                    };
                     pairs.push((k, v));
                 }
-                let logits = it.next().unwrap()
+                let logits_buf = it.next().ok_or_else(|| {
+                    anyhow::anyhow!("{module}.{entry}: missing fused logits leaf \
+                                     (malformed backend output)")
+                })?;
+                let logits = logits_buf
                     .to_literal_sync().map_err(xerr)?
                     .to_vec::<f32>().map_err(xerr)?;
                 anyhow::ensure!(logits.len() == n * vocab,
@@ -787,7 +825,13 @@ impl State {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp).map_err(xerr)?;
         self.compile_secs += t0.elapsed().as_secs_f64();
-        self.modules.get_mut(module).unwrap().exes.insert(entry.to_string(), exe);
+        self.modules
+            .get_mut(module)
+            .ok_or_else(|| {
+                anyhow::anyhow!("{module}: vanished from the module map during compile")
+            })?
+            .exes
+            .insert(entry.to_string(), exe);
         Ok(())
     }
 
@@ -938,9 +982,13 @@ impl State {
                 anyhow::ensure!(leaves.len() == 3,
                                 "{module}: {} kv-entry outputs, want (k, v, logits)",
                                 leaves.len());
-                let logits_buf = leaves.pop().unwrap();
-                let v = leaves.pop().unwrap();
-                let k = leaves.pop().unwrap();
+                let (Some(logits_buf), Some(v), Some(k)) =
+                    (leaves.pop(), leaves.pop(), leaves.pop())
+                else {
+                    anyhow::bail!(
+                        "{module}: kv-entry output leaves vanished mid-unpack \
+                         (malformed backend output)");
+                };
                 let id = if self.opts.host_bounce {
                     let kl = k.to_literal_sync().map_err(xerr)?;
                     let vl = v.to_literal_sync().map_err(xerr)?;

@@ -21,6 +21,48 @@
 //! thread has died fails submissions and outstanding waits with an error
 //! instead of hanging.
 //!
+//! # Error taxonomy
+//!
+//! Every backend failure is a typed [`BackendError`], so callers branch on
+//! kind instead of string-matching:
+//!
+//! * [`BackendError::Transient`] — one-off failure; the lane and all KV
+//!   state are intact. Resubmitting the same request may succeed.
+//! * [`BackendError::LaneDead`] — the lane worker died (or was restarted)
+//!   with the request queued or in flight. Every KV handle minted by that
+//!   incarnation is device-garbage: check cached handles with
+//!   [`Backend::kv_current`], quarantine the stale ones, recompute.
+//! * [`BackendError::Fatal`] — terminal (missing entry point, malformed
+//!   output); retrying fails identically.
+//!
+//! `is_retryable()` is the scheduler's branch: `Transient` and `LaneDead`
+//! are retryable (the latter after recomputing lost KV), `Fatal` is not.
+//!
+//! # Lane supervision
+//!
+//! [`SimBackend`] runs each lane under a supervisor: when a lane worker
+//! dies with restart budget remaining ([`SupervisorPolicy`] — capped
+//! exponential backoff, bounded restart count), the supervisor fails every
+//! pending ticket with `LaneDead`, re-warms the lane, bumps the lane's KV
+//! *generation* (so [`Backend::kv_current`] reports pre-death handles
+//! stale) and resumes service; requests submitted after the restart run
+//! normally. A lane that exhausts its budget is condemned: everything
+//! fails fast with `LaneDead`, nothing hangs. The PJRT [`Engine`] has no
+//! supervisor today — its `kv_current` keeps the default "always current",
+//! which makes caller-side quarantine a safe no-op there.
+//!
+//! # Injecting faults in a test
+//!
+//! [`FaultPlan`] makes failure deterministic: start the sim with
+//! [`SimBackend::start_faulty`] and a seeded plan — `kill_llm_at_op(n)`
+//! kills the LLM lane worker at its n-th executed op (the supervisor then
+//! restarts it), `transient_prob` injects seeded `Transient` reply
+//! failures *without* executing the op (so a retry is bit-identical), and
+//! `spike_prob`/`spike` stretches latencies. Assert recovery through
+//! [`SimBackend::lane_restarts`] / injected-fault counters and through the
+//! coordinator's `ReliabilityStats`; `rust/tests/chaos.rs` holds the
+//! worked examples.
+//!
 //! # Continuous micro-batching
 //!
 //! With a [`BatchConfig`] (`max_batch`, `max_wait`) the LLM lane worker
@@ -80,13 +122,15 @@ mod gnn;
 mod manifest;
 mod sim;
 
-pub use backend::{Backend, CallTiming, EngineStats, KvHandle, Lane, PendingEncode,
-                  PendingExtend, PendingGenerate, PendingKv, PendingPrefill};
+pub use backend::{Backend, BackendError, CallTiming, EngineStats, KvHandle, Lane,
+                  PendingEncode, PendingExtend, PendingGenerate, PendingKv,
+                  PendingPrefill};
 pub use batch::{BatchConfig, BatchInfo};
 pub use engine::Engine;
 pub use gnn::{pack_subgraph, PackedSubgraph};
 pub use manifest::{ArgSpec, Constants, EntrySpec, LlmDims, Manifest, ModuleSpec, ParamSpec};
-pub use sim::{sim_dataset, sim_store, BatchSlope, SimBackend, SimLatency, SIM_BACKBONE};
+pub use sim::{sim_dataset, sim_store, BatchSlope, FaultPlan, SimBackend, SimLatency,
+              SupervisorPolicy, SIM_BACKBONE};
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;

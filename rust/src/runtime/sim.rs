@@ -46,7 +46,7 @@
 //! jitter, small enough that suites stay fast.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -56,9 +56,9 @@ use crate::embed::FEAT_DIM;
 use crate::graph::{Edge, Node, Subgraph, TextualGraph};
 use crate::tokenizer::{split_text, Tokenizer, BOS_ID, EOS_ID, PAD_ID, UNK_ID};
 
-use super::backend::{merge_stats, Backend, CallTiming, EngineStats, KvHandle, Lane,
-                     PendingEncode, PendingExtend, PendingGenerate, PendingKv,
-                     PendingPrefill, Ticket};
+use super::backend::{merge_stats, Backend, BackendError, CallTiming, EngineStats,
+                     KvHandle, Lane, PendingEncode, PendingExtend, PendingGenerate,
+                     PendingKv, PendingPrefill, Ticket};
 use super::batch::{collect_window, BatchConfig, BatchInfo, Collected};
 use super::engine::lane_for_kind;
 use super::manifest::{Constants, LlmDims, Manifest, ModuleSpec};
@@ -221,7 +221,165 @@ impl SimLatency {
     }
 }
 
-type KvReply = Sender<anyhow::Result<(u64, Vec<f32>, CallTiming)>>;
+/// Deterministic chaos-injection plan for [`SimBackend`]: which ops fail,
+/// which lane dies, and when — all derived from `seed` and a per-lane op
+/// counter, so a chaos run is reproducible bit for bit. The default plan
+/// injects nothing and adds no work to the hot path.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Seed for the per-op injection rolls (same seed + same op index =
+    /// same decision).
+    pub seed: u64,
+    /// Kill the LLM lane worker right before it executes its Nth fusible
+    /// op (1-based, counted across incarnations). Fires at most once; the
+    /// supervisor then restarts the lane with a fresh (empty) KV
+    /// incarnation.
+    pub kill_llm_at_op: Option<u64>,
+    /// Like [`kill_llm_at_op`](Self::kill_llm_at_op) for the GNN lane.
+    pub kill_gnn_at_op: Option<u64>,
+    /// Per-op probability in [0, 1] of replying
+    /// [`BackendError::Transient`] instead of executing (the op has no
+    /// side effects when it fires — a clean retry target).
+    pub transient_prob: f64,
+    /// Per-op probability of sleeping an extra [`spike`](Self::spike)
+    /// before executing (a latency spike, not an error).
+    pub spike_prob: f64,
+    /// Extra device latency added when a spike roll hits.
+    pub spike: Duration,
+}
+
+impl FaultPlan {
+    /// The empty plan: no kills, no transients, no spikes.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    fn is_noop(&self) -> bool {
+        self.kill_llm_at_op.is_none()
+            && self.kill_gnn_at_op.is_none()
+            && self.transient_prob <= 0.0
+            && self.spike_prob <= 0.0
+    }
+}
+
+/// Lane-supervision knobs: how many times a dead lane worker may be
+/// restarted and how the restart backoff grows (capped exponential).
+#[derive(Debug, Clone, Copy)]
+pub struct SupervisorPolicy {
+    /// Restarts allowed per lane before death becomes terminal
+    /// ([`BackendError::LaneDead`] with an exhausted-budget message).
+    pub max_restarts: u32,
+    /// Backoff before the first restart; doubles on each consecutive one.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+}
+
+impl Default for SupervisorPolicy {
+    fn default() -> Self {
+        SupervisorPolicy {
+            max_restarts: 4,
+            backoff_base: Duration::from_millis(2),
+            backoff_cap: Duration::from_millis(50),
+        }
+    }
+}
+
+impl SupervisorPolicy {
+    /// Capped exponential backoff before restart number `n` (1-based):
+    /// `base * 2^(n-1)`, clamped to `backoff_cap`.
+    fn backoff(&self, n: u32) -> Duration {
+        let doublings = n.saturating_sub(1).min(16);
+        self.backoff_base
+            .saturating_mul(1u32 << doublings)
+            .min(self.backoff_cap)
+    }
+}
+
+/// What [`FaultState::on_op`] decided for one op.
+enum Inject {
+    None,
+    /// Reply `Transient` without executing.
+    Transient,
+    /// The worker must exit now, dropping every undelivered reply.
+    Kill,
+}
+
+/// Shared fault-injection state: the plan plus per-lane op counters that
+/// survive lane restarts (so a kill scheduled at op N fires exactly once
+/// no matter how submissions interleave).
+struct FaultState {
+    plan: FaultPlan,
+    noop: bool,
+    ops: [AtomicU64; 2],
+    killed: [AtomicBool; 2],
+    transients: AtomicU64,
+    spikes: AtomicU64,
+}
+
+impl FaultState {
+    fn new(plan: FaultPlan) -> FaultState {
+        let noop = plan.is_noop();
+        FaultState {
+            plan,
+            noop,
+            ops: [AtomicU64::new(0), AtomicU64::new(0)],
+            killed: [AtomicBool::new(false), AtomicBool::new(false)],
+            transients: AtomicU64::new(0),
+            spikes: AtomicU64::new(0),
+        }
+    }
+
+    /// Uniform roll in [0, 1) from (seed, salt) — pure, deterministic.
+    fn roll(seed: u64, salt: u64) -> f64 {
+        (splitmix(seed ^ salt) >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Advance `lane`'s op counter and decide this op's fate. Latency
+    /// spikes are applied here (the sleep lands inside the lane worker's
+    /// device span). A no-op plan returns immediately.
+    fn on_op(&self, lane: Lane) -> Inject {
+        if self.noop {
+            return Inject::None;
+        }
+        let li = lane as usize;
+        let idx = self.ops[li].fetch_add(1, Ordering::SeqCst) + 1;
+        let kill_at = match lane {
+            Lane::Llm => self.plan.kill_llm_at_op,
+            Lane::Gnn => self.plan.kill_gnn_at_op,
+        };
+        if kill_at == Some(idx) && !self.killed[li].swap(true, Ordering::SeqCst) {
+            return Inject::Kill;
+        }
+        let lane_salt = (li as u64 + 1) << 56;
+        if self.plan.spike_prob > 0.0
+            && Self::roll(self.plan.seed ^ 0x5350_494b, lane_salt | idx)
+                < self.plan.spike_prob
+        {
+            self.spikes.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(self.plan.spike);
+        }
+        if self.plan.transient_prob > 0.0
+            && Self::roll(self.plan.seed ^ 0x544e_5354, lane_salt | idx)
+                < self.plan.transient_prob
+        {
+            self.transients.fetch_add(1, Ordering::Relaxed);
+            return Inject::Transient;
+        }
+        Inject::None
+    }
+}
+
+/// KV handle ids carry their lane incarnation in the high bits, so a
+/// handle minted before a lane restart is recognizably stale afterwards
+/// (the quarantine signal for [`Backend::kv_current`]).
+const GEN_SHIFT: u32 = 48;
+
+fn handle_gen(id: u64) -> u64 {
+    id >> GEN_SHIFT
+}
+
+type KvReply = Sender<Result<(u64, Vec<f32>, CallTiming), BackendError>>;
 
 enum SReq {
     Prefill {
@@ -245,21 +403,21 @@ enum SReq {
         kv: u64,
         first_tok: i32,
         submitted: Instant,
-        reply: Sender<anyhow::Result<(Vec<i32>, CallTiming)>>,
+        reply: Sender<Result<(Vec<i32>, CallTiming), BackendError>>,
     },
     Encode {
         module: String,
         x: Vec<f32>,
         mask: Vec<f32>,
         submitted: Instant,
-        reply: Sender<anyhow::Result<(Vec<f32>, CallTiming)>>,
+        reply: Sender<Result<(Vec<f32>, CallTiming), BackendError>>,
     },
     Release {
         kvs: Vec<u64>,
     },
     Warmup {
         module: String,
-        reply: Sender<anyhow::Result<()>>,
+        reply: Sender<Result<(), BackendError>>,
     },
     Stats {
         reply: Sender<EngineStats>,
@@ -267,18 +425,68 @@ enum SReq {
     Shutdown,
 }
 
-struct SimLane {
+/// One lane's live link to its current worker incarnation, owned by the
+/// supervisor (every field behind the lane mutex).
+struct LaneLink {
     tx: Sender<SReq>,
     /// Test hook: set before a shutdown nudge to make the worker exit
     /// *before* draining its queue, dropping queued reply senders.
     poison: Arc<AtomicBool>,
-    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    /// Worker/KV incarnation, bumped on every supervisor restart and
+    /// encoded into the high bits of every handle this lane mints.
+    generation: u64,
+    restarts: u32,
+    /// [`SimBackend::kill_lane_for_test`] is terminal: a condemned lane is
+    /// never resurrected (the dead-lane regression tests pin that a killed
+    /// lane rejects submits forever).
+    condemned: bool,
+    /// Modules warmed on this lane; re-warmed onto fresh incarnations.
+    warmed: Vec<String>,
+}
+
+struct SimLane {
+    link: Mutex<LaneLink>,
 }
 
 /// The deterministic simulation [`Backend`]. See the module docs.
+///
+/// Lane workers are **supervised**: when a worker dies unexpectedly (a
+/// [`FaultPlan`] kill, or a panic), the next submission detects the dead
+/// channel, restarts the lane under [`SupervisorPolicy`] (capped
+/// exponential backoff, bounded restart budget, re-warmup of previously
+/// warmed modules) and retries the enqueue. In-flight tickets of the dead
+/// incarnation fail with [`BackendError::LaneDead`]; KV handles it minted
+/// become stale ([`Backend::kv_current`] turns false) and extend/generate
+/// against them also report `LaneDead`. Only
+/// [`kill_lane_for_test`](Self::kill_lane_for_test) is terminal.
 pub struct SimBackend {
     lanes: [SimLane; 2],
     manifest: Manifest,
+    lat: SimLatency,
+    cfg: BatchConfig,
+    faults: Arc<FaultState>,
+    policy: SupervisorPolicy,
+}
+
+/// Spawn one sim lane worker incarnation.
+fn spawn_sim_worker(manifest: &Manifest, lat: SimLatency, cfg: BatchConfig, lane: Lane,
+                    generation: u64, faults: &Arc<FaultState>)
+                    -> anyhow::Result<(Sender<SReq>, Arc<AtomicBool>,
+                                       std::thread::JoinHandle<()>)> {
+    let (tx, rx) = channel::<SReq>();
+    let poison = Arc::new(AtomicBool::new(false));
+    let worker_poison = Arc::clone(&poison);
+    let worker_manifest = manifest.clone();
+    let worker_faults = Arc::clone(faults);
+    let lane_cfg = if lane == Lane::Llm { cfg } else { BatchConfig::off() };
+    let thread = std::thread::Builder::new()
+        .name(format!("sim-{}-g{generation}", lane.name()))
+        .spawn(move || {
+            sim_lane_main(worker_manifest, lat, lane_cfg, lane, generation, rx,
+                          worker_poison, worker_faults)
+        })?;
+    Ok((tx, poison, thread))
 }
 
 impl SimBackend {
@@ -294,132 +502,269 @@ impl SimBackend {
     /// lane and see no cross-stream convergence).
     pub fn start_with(store: &ArtifactStore, lat: SimLatency, cfg: BatchConfig)
                       -> anyhow::Result<SimBackend> {
-        let manifest = store.manifest().clone();
-        let spawn = |lane: Lane| -> anyhow::Result<SimLane> {
-            let (tx, rx) = channel::<SReq>();
-            let poison = Arc::new(AtomicBool::new(false));
-            let worker_poison = Arc::clone(&poison);
-            let worker_manifest = manifest.clone();
-            let lane_cfg = if lane == Lane::Llm { cfg } else { BatchConfig::off() };
-            let thread = std::thread::Builder::new()
-                .name(format!("sim-{}", lane.name()))
-                .spawn(move || {
-                    sim_lane_main(worker_manifest, lat, lane_cfg, rx, worker_poison)
-                })?;
-            Ok(SimLane { tx, poison, thread: Mutex::new(Some(thread)) })
-        };
-        Ok(SimBackend { lanes: [spawn(Lane::Llm)?, spawn(Lane::Gnn)?], manifest })
+        SimBackend::start_faulty(store, lat, cfg, FaultPlan::none(),
+                                 SupervisorPolicy::default())
     }
 
-    fn send(&self, lane: Lane, req: SReq) -> anyhow::Result<()> {
-        self.lanes[lane as usize].tx.send(req).map_err(|_| {
-            anyhow::anyhow!("sim {} lane worker has shut down", lane.name())
+    /// Like [`start_with`](Self::start_with), plus a [`FaultPlan`] and an
+    /// explicit [`SupervisorPolicy`] — the chaos-test entry point.
+    pub fn start_faulty(store: &ArtifactStore, lat: SimLatency, cfg: BatchConfig,
+                        plan: FaultPlan, policy: SupervisorPolicy)
+                        -> anyhow::Result<SimBackend> {
+        let manifest = store.manifest().clone();
+        let faults = Arc::new(FaultState::new(plan));
+        let spawn = |lane: Lane| -> anyhow::Result<SimLane> {
+            let (tx, poison, thread) =
+                spawn_sim_worker(&manifest, lat, cfg, lane, 0, &faults)?;
+            Ok(SimLane {
+                link: Mutex::new(LaneLink {
+                    tx,
+                    poison,
+                    thread: Some(thread),
+                    generation: 0,
+                    restarts: 0,
+                    condemned: false,
+                    warmed: Vec::new(),
+                }),
+            })
+        };
+        Ok(SimBackend {
+            lanes: [spawn(Lane::Llm)?, spawn(Lane::Gnn)?],
+            manifest,
+            lat,
+            cfg,
+            faults,
+            policy,
         })
     }
 
+    fn link(&self, lane: Lane) -> std::sync::MutexGuard<'_, LaneLink> {
+        // a panic while holding the lane lock leaves no partial state worth
+        // protecting — recover the guard and keep serving
+        match self.lanes[lane as usize].link.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Enqueue on a lane, supervising the worker: a dead (non-condemned)
+    /// worker is restarted — capped exponential backoff, bumped
+    /// generation, re-warmup — and the enqueue retried, until the restart
+    /// budget runs out.
+    fn send(&self, lane: Lane, req: SReq) -> Result<(), BackendError> {
+        let mut link = self.link(lane);
+        let mut req = req;
+        loop {
+            req = match link.tx.send(req) {
+                Ok(()) => return Ok(()),
+                // the send hands the request back on failure; supervise
+                Err(e) => e.0,
+            };
+            if link.condemned {
+                return Err(BackendError::lane_dead(
+                    lane,
+                    format!("sim {} lane worker has shut down", lane.name()),
+                ));
+            }
+            if link.restarts >= self.policy.max_restarts {
+                return Err(BackendError::lane_dead(
+                    lane,
+                    format!("sim {} lane worker died and its restart budget ({}) \
+                             is exhausted",
+                            lane.name(), self.policy.max_restarts),
+                ));
+            }
+            if let Some(t) = link.thread.take() {
+                let _ = t.join();
+            }
+            link.restarts += 1;
+            link.generation += 1;
+            let backoff = self.policy.backoff(link.restarts);
+            if !backoff.is_zero() {
+                std::thread::sleep(backoff);
+            }
+            let (tx, poison, thread) =
+                spawn_sim_worker(&self.manifest, self.lat, self.cfg, lane,
+                                 link.generation, &self.faults)
+                    .map_err(|e| {
+                        BackendError::lane_dead(lane, format!("lane restart failed: {e}"))
+                    })?;
+            link.tx = tx;
+            link.poison = poison;
+            link.thread = Some(thread);
+            // re-warm what the dead incarnation had warmed, then retry the
+            // original request on the fresh worker
+            for m in &link.warmed {
+                let (reply, _rx) = channel();
+                let _ = link.tx.send(SReq::Warmup { module: m.clone(), reply });
+            }
+        }
+    }
+
+    /// Best-effort enqueue that never triggers a restart (KV releases: a
+    /// dead lane already dropped the buffers being returned).
+    fn send_casual(&self, lane: Lane, req: SReq) {
+        let _ = self.link(lane).tx.send(req);
+    }
+
     /// Test hook: kill one lane's worker thread *without* draining its
-    /// queue. Requests already being processed complete; requests still
-    /// queued get their reply senders dropped (so `wait` errors), and
-    /// later `submit_*` calls on the lane fail at the send. This is how the
-    /// dead-lane regression tests exercise the multi-lane ticket contract.
+    /// queue, **terminally** — the supervisor never resurrects a condemned
+    /// lane. Requests already being processed complete; requests still
+    /// queued get their reply senders dropped (so `wait` errors with
+    /// [`BackendError::LaneDead`]), and later `submit_*` calls on the lane
+    /// fail. This is how the dead-lane regression tests exercise the
+    /// multi-lane ticket contract. For *recoverable* lane death, schedule a
+    /// kill through [`FaultPlan`] instead.
     pub fn kill_lane_for_test(&self, lane: Lane) {
-        let l = &self.lanes[lane as usize];
-        l.poison.store(true, Ordering::SeqCst);
-        let _ = l.tx.send(SReq::Shutdown); // nudge an idle worker awake
-        if let Some(t) = l.thread.lock().unwrap().take() {
+        let mut link = self.link(lane);
+        link.condemned = true;
+        link.poison.store(true, Ordering::SeqCst);
+        let _ = link.tx.send(SReq::Shutdown); // nudge an idle worker awake
+        if let Some(t) = link.thread.take() {
             let _ = t.join();
         }
+    }
+
+    /// Supervisor restarts performed so far (summed across lanes).
+    pub fn lane_restarts(&self) -> u64 {
+        Lane::ALL.iter().map(|&l| self.link(l).restarts as u64).sum()
+    }
+
+    /// Injected faults so far: (transient errors, latency spikes).
+    pub fn injected_faults(&self) -> (u64, u64) {
+        (self.faults.transients.load(Ordering::Relaxed),
+         self.faults.spikes.load(Ordering::Relaxed))
     }
 }
 
 impl Backend for SimBackend {
     fn submit_prefill(&self, module: &str, tokens: &[i32], plen: i32)
-                      -> anyhow::Result<PendingPrefill> {
+                      -> Result<PendingPrefill, BackendError> {
         let (reply, rx) = channel();
         self.send(Lane::Llm, SReq::Prefill {
             module: module.into(), tokens: tokens.to_vec(), plen,
             submitted: Instant::now(), reply,
         })?;
-        Ok(PendingKv(Ticket { rx }))
+        Ok(PendingKv(Ticket { rx, lane: Lane::Llm }))
     }
 
     fn submit_extend(&self, module: &str, kv: &KvHandle, plen: i32, q_tokens: &[i32],
-                     qlen: i32) -> anyhow::Result<PendingExtend> {
+                     qlen: i32) -> Result<PendingExtend, BackendError> {
         let (reply, rx) = channel();
         self.send(Lane::Llm, SReq::Extend {
             module: module.into(), kv: kv.0, plen, q_tokens: q_tokens.to_vec(), qlen,
             submitted: Instant::now(), reply,
         })?;
-        Ok(PendingKv(Ticket { rx }))
+        Ok(PendingKv(Ticket { rx, lane: Lane::Llm }))
     }
 
     fn submit_generate(&self, module: &str, kv: &KvHandle, _cur_len: i32, first_tok: i32)
-                       -> anyhow::Result<PendingGenerate> {
+                       -> Result<PendingGenerate, BackendError> {
         let (reply, rx) = channel();
         self.send(Lane::Llm, SReq::Generate {
             module: module.into(), kv: kv.0, first_tok,
             submitted: Instant::now(), reply,
         })?;
-        Ok(PendingGenerate(Ticket { rx }))
+        Ok(PendingGenerate(Ticket { rx, lane: Lane::Llm }))
     }
 
     fn submit_encode(&self, module: &str, x: Vec<f32>, _adj: Vec<f32>, mask: Vec<f32>)
-                     -> anyhow::Result<PendingEncode> {
+                     -> Result<PendingEncode, BackendError> {
         let (reply, rx) = channel();
         self.send(Lane::Gnn, SReq::Encode {
             module: module.into(), x, mask, submitted: Instant::now(), reply,
         })?;
-        Ok(PendingEncode(Ticket { rx }))
+        Ok(PendingEncode(Ticket { rx, lane: Lane::Gnn }))
     }
 
     fn release(&self, kv: KvHandle) {
-        let _ = self.send(Lane::Llm, SReq::Release { kvs: vec![kv.0] });
+        // best-effort and never restart-triggering: a dead lane has already
+        // dropped the buffers being returned
+        self.send_casual(Lane::Llm, SReq::Release { kvs: vec![kv.0] });
     }
 
     fn release_many(&self, kvs: Vec<KvHandle>) {
         if kvs.is_empty() {
             return;
         }
-        let _ = self.send(Lane::Llm, SReq::Release {
+        self.send_casual(Lane::Llm, SReq::Release {
             kvs: kvs.into_iter().map(|h| h.0).collect(),
         });
     }
 
-    fn kv_bytes(&self, module: &str) -> anyhow::Result<usize> {
-        let dims = self.manifest.module(module)?.dims.ok_or_else(|| {
-            anyhow::anyhow!("{module}: not an llm module, no KV geometry")
-        })?;
+    fn kv_bytes(&self, module: &str) -> Result<usize, BackendError> {
+        let dims = self
+            .manifest
+            .module(module)
+            .map_err(BackendError::from_anyhow)?
+            .dims
+            .ok_or_else(|| {
+                BackendError::fatal(format!("{module}: not an llm module, no KV geometry"))
+            })?;
         Ok(2 * dims.kv_bytes_each())
     }
 
-    fn warmup(&self, module: &str) -> anyhow::Result<()> {
-        let lane = lane_for_kind(&self.manifest.module(module)?.kind)
-            .ok_or_else(|| anyhow::anyhow!("module {module}: no lane for its kind"))?;
+    fn warmup(&self, module: &str) -> Result<(), BackendError> {
+        let kind = &self
+            .manifest
+            .module(module)
+            .map_err(BackendError::from_anyhow)?
+            .kind;
+        let lane = lane_for_kind(kind).ok_or_else(|| {
+            BackendError::fatal(format!("module {module}: no lane for its kind"))
+        })?;
         let (reply, rx) = channel();
         self.send(lane, SReq::Warmup { module: module.into(), reply })?;
-        Ticket { rx }.wait()
+        Ticket { rx, lane }.wait()?;
+        // remember what was warmed so the supervisor can re-warm a fresh
+        // incarnation after a restart
+        let mut link = self.link(lane);
+        if !link.warmed.iter().any(|m| m == module) {
+            link.warmed.push(module.to_string());
+        }
+        Ok(())
     }
 
-    fn stats(&self) -> anyhow::Result<EngineStats> {
+    fn stats(&self) -> Result<EngineStats, BackendError> {
         let mut parts = Vec::with_capacity(Lane::ALL.len());
         for lane in Lane::ALL {
             let (reply, rx) = channel();
             self.send(lane, SReq::Stats { reply })?;
             parts.push(rx.recv().map_err(|_| {
-                anyhow::anyhow!("sim {} lane died before replying", lane.name())
+                BackendError::lane_dead(
+                    lane,
+                    format!("sim {} lane died before replying to stats", lane.name()),
+                )
             })?);
         }
-        Ok(merge_stats(parts))
+        let mut merged = merge_stats(parts);
+        merged.lane_restarts = self.lane_restarts();
+        Ok(merged)
+    }
+
+    /// A handle is current iff its generation tag matches the LLM lane's
+    /// live incarnation (handles are minted only on the LLM lane).
+    fn kv_current(&self, kv: &KvHandle) -> bool {
+        handle_gen(kv.0) == self.link(Lane::Llm).generation
     }
 }
 
 impl Drop for SimBackend {
     fn drop(&mut self) {
+        // raw sends on the live links — never supervise during teardown
         for lane in &self.lanes {
-            let _ = lane.tx.send(SReq::Shutdown);
+            let link = match lane.link.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            let _ = link.tx.send(SReq::Shutdown);
         }
         for lane in &self.lanes {
-            if let Some(t) = lane.thread.lock().unwrap().take() {
+            let mut link = match lane.link.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            if let Some(t) = link.thread.take() {
                 let _ = t.join();
             }
         }
@@ -433,6 +778,10 @@ impl Drop for SimBackend {
 struct SimState {
     manifest: Manifest,
     lat: SimLatency,
+    lane: Lane,
+    /// This worker's incarnation; minted KV handle ids carry it in their
+    /// high bits so stale handles are recognizable after a restart.
+    generation: u64,
     /// KV handle -> the effective (unpadded) token sequence it encodes.
     kvs: HashMap<u64, Vec<i32>>,
     next_id: u64,
@@ -452,11 +801,15 @@ fn sreq_key(r: &SReq) -> Option<(u8, &str)> {
     }
 }
 
-fn sim_lane_main(manifest: Manifest, lat: SimLatency, cfg: BatchConfig, rx: Receiver<SReq>,
-                 poison: Arc<AtomicBool>) {
+#[allow(clippy::too_many_arguments)]
+fn sim_lane_main(manifest: Manifest, lat: SimLatency, cfg: BatchConfig, lane: Lane,
+                 generation: u64, rx: Receiver<SReq>, poison: Arc<AtomicBool>,
+                 faults: Arc<FaultState>) {
     let mut st = SimState {
         manifest,
         lat,
+        lane,
+        generation,
         kvs: HashMap::new(),
         next_id: 1,
         counters: HashMap::new(),
@@ -483,7 +836,12 @@ fn sim_lane_main(manifest: Manifest, lat: SimLatency, cfg: BatchConfig, rx: Rece
                     }
                 }
                 SReq::Warmup { module, reply } => {
-                    let _ = reply.send(st.manifest.module(&module).map(|_| ()));
+                    let _ = reply.send(
+                        st.manifest
+                            .module(&module)
+                            .map(|_| ())
+                            .map_err(BackendError::from_anyhow),
+                    );
                 }
                 SReq::Stats { reply } => {
                     let mut calls: Vec<(String, u64, f64)> = st
@@ -498,6 +856,7 @@ fn sim_lane_main(manifest: Manifest, lat: SimLatency, cfg: BatchConfig, rx: Rece
                         compile_secs: 0.0,
                         host_kv_bytes: 0,
                         unbatched_fallbacks: 0,
+                        lane_restarts: 0, // accounted by the supervisor, not per worker
                     });
                 }
                 SReq::Shutdown => return,
@@ -512,16 +871,23 @@ fn sim_lane_main(manifest: Manifest, lat: SimLatency, cfg: BatchConfig, rx: Rece
             // each ticket's wait errors instead of hanging
             return;
         }
-        st.run_batch(col);
+        if !st.run_batch(col, &faults) {
+            // FaultPlan kill: abandon the batch (all reply senders drop, so
+            // every member's wait reports LaneDead) and exit the worker —
+            // the supervisor restarts the lane on the next submission
+            return;
+        }
     }
 }
 
 /// Per-member staged result + reply slot (all members of one batch share a
 /// variant, but the reply channel types differ per variant).
 enum BatchOut {
-    Kv(anyhow::Result<(u64, Vec<f32>)>, KvReply),
-    Gen(anyhow::Result<Vec<i32>>, Sender<anyhow::Result<(Vec<i32>, CallTiming)>>),
-    Enc(anyhow::Result<Vec<f32>>, Sender<anyhow::Result<(Vec<f32>, CallTiming)>>),
+    Kv(Result<(u64, Vec<f32>), BackendError>, KvReply),
+    Gen(Result<Vec<i32>, BackendError>,
+        Sender<Result<(Vec<i32>, CallTiming), BackendError>>),
+    Enc(Result<Vec<f32>, BackendError>,
+        Sender<Result<(Vec<f32>, CallTiming), BackendError>>),
 }
 
 impl SimState {
@@ -530,7 +896,13 @@ impl SimState {
     /// in arrival order (determinism: results are bit-identical to the
     /// unbatched path), then scatter per-member replies with the timing
     /// split described in [`crate::runtime::batch`].
-    fn run_batch(&mut self, mut col: Collected<SReq>) {
+    ///
+    /// Consults [`FaultState::on_op`] once per member: a `Transient` stages
+    /// a typed error for that one member *without executing it* (no side
+    /// effects — retrying it is clean and the rest of the batch is
+    /// unaffected), and a `Kill` returns `false` — the worker must exit,
+    /// dropping every reply sender of the batch.
+    fn run_batch(&mut self, mut col: Collected<SReq>, faults: &FaultState) -> bool {
         let n = col.members.len();
         let (op, base, slope) = match &col.members[0].0 {
             SReq::Prefill { .. } => ("prefill", self.lat.prefill, self.lat.per_item.prefill),
@@ -555,19 +927,34 @@ impl SimState {
         }
         let mut outs = Vec::with_capacity(n);
         for (req, picked) in col.members.drain(..) {
+            let inject = faults.on_op(self.lane);
+            if matches!(inject, Inject::Kill) {
+                return false; // abandon the batch; the worker dies here
+            }
+            fn transient<T>(op: &'static str) -> Result<T, BackendError> {
+                Err(BackendError::transient(op, "injected fault (FaultPlan)"))
+            }
+            let hit = matches!(inject, Inject::Transient);
             let (out, submitted) = match req {
                 SReq::Prefill { module, tokens, plen, submitted, reply } => {
-                    (BatchOut::Kv(self.prefill(&module, &tokens, plen), reply), submitted)
+                    let r = if hit { transient("prefill") }
+                            else { self.prefill(&module, &tokens, plen) };
+                    (BatchOut::Kv(r, reply), submitted)
                 }
                 SReq::Extend { module, kv, plen, q_tokens, qlen, submitted, reply } => {
-                    (BatchOut::Kv(self.extend(&module, kv, plen, &q_tokens, qlen), reply),
-                     submitted)
+                    let r = if hit { transient("extend") }
+                            else { self.extend(&module, kv, plen, &q_tokens, qlen) };
+                    (BatchOut::Kv(r, reply), submitted)
                 }
                 SReq::Generate { module, kv, first_tok, submitted, reply } => {
-                    (BatchOut::Gen(self.generate(&module, kv, first_tok), reply), submitted)
+                    let r = if hit { transient("generate") }
+                            else { self.generate(&module, kv, first_tok) };
+                    (BatchOut::Gen(r, reply), submitted)
                 }
                 SReq::Encode { module, x, mask, submitted, reply } => {
-                    (BatchOut::Enc(self.encode(&module, &x, &mask), reply), submitted)
+                    let r = if hit { transient("encode") }
+                            else { self.encode(&module, &x, &mask) };
+                    (BatchOut::Enc(r, reply), submitted)
                 }
                 _ => unreachable!("control requests never enter a batch"),
             };
@@ -596,60 +983,82 @@ impl SimState {
                 }
             }
         }
+        true
     }
 
-    fn llm_dims(&self, module: &str) -> anyhow::Result<LlmDims> {
-        self.manifest.module(module)?.dims.ok_or_else(|| {
-            anyhow::anyhow!("{module}: not an llm module")
-        })
+    fn llm_dims(&self, module: &str) -> Result<LlmDims, BackendError> {
+        self.manifest
+            .module(module)
+            .map_err(BackendError::from_anyhow)?
+            .dims
+            .ok_or_else(|| BackendError::fatal(format!("{module}: not an llm module")))
     }
 
     fn insert_kv(&mut self, seq: Vec<i32>) -> u64 {
-        let id = self.next_id;
+        // the id carries this worker's incarnation in its high bits, so
+        // handles outlive restarts recognizably stale (see `handle_gen`)
+        let id = (self.generation << GEN_SHIFT) | self.next_id;
         self.next_id += 1;
         self.kvs.insert(id, seq);
         id
     }
 
+    /// Resolve a KV handle, distinguishing "belongs to a dead incarnation"
+    /// (`LaneDead` — the caller should quarantine and recompute) from
+    /// "never existed / already released in this incarnation" (`Fatal`).
+    fn lookup_kv(&self, kv: u64) -> Result<&Vec<i32>, BackendError> {
+        if let Some(seq) = self.kvs.get(&kv) {
+            return Ok(seq);
+        }
+        if handle_gen(kv) != self.generation {
+            Err(BackendError::lane_dead(
+                self.lane,
+                format!("KV handle {kv} belongs to dead incarnation {} (lane is at \
+                         {}); its device state died with the worker",
+                        handle_gen(kv), self.generation),
+            ))
+        } else {
+            Err(BackendError::fatal(format!("unknown/released KV handle {kv}")))
+        }
+    }
+
     fn prefill(&mut self, module: &str, tokens: &[i32], plen: i32)
-               -> anyhow::Result<(u64, Vec<f32>)> {
+               -> Result<(u64, Vec<f32>), BackendError> {
         let dims = self.llm_dims(module)?;
         let c = self.manifest.constants;
-        anyhow::ensure!(tokens.len() == c.max_seq,
-                        "sim prefill: {} tokens, want {}", tokens.len(), c.max_seq);
-        anyhow::ensure!(plen >= 0 && plen as usize <= tokens.len(),
-                        "sim prefill: plen {plen} out of range");
+        if tokens.len() != c.max_seq {
+            return Err(BackendError::fatal(format!(
+                "sim prefill: {} tokens, want {}", tokens.len(), c.max_seq)));
+        }
+        if plen < 0 || plen as usize > tokens.len() {
+            return Err(BackendError::fatal(format!(
+                "sim prefill: plen {plen} out of range")));
+        }
         let seq = tokens[..plen as usize].to_vec();
         let logits = sim_logits(&seq, dims.vocab);
         Ok((self.insert_kv(seq), logits))
     }
 
     fn extend(&mut self, module: &str, kv: u64, _plen: i32, q_tokens: &[i32], qlen: i32)
-              -> anyhow::Result<(u64, Vec<f32>)> {
+              -> Result<(u64, Vec<f32>), BackendError> {
         let dims = self.llm_dims(module)?;
         let c = self.manifest.constants;
-        anyhow::ensure!(q_tokens.len() == c.max_q,
-                        "sim extend: {} tokens, want {}", q_tokens.len(), c.max_q);
+        if q_tokens.len() != c.max_q {
+            return Err(BackendError::fatal(format!(
+                "sim extend: {} tokens, want {}", q_tokens.len(), c.max_q)));
+        }
         let qlen = (qlen.max(0) as usize).min(q_tokens.len()); // clamp like the engine
-        let mut seq = self
-            .kvs
-            .get(&kv)
-            .ok_or_else(|| anyhow::anyhow!("unknown/released KV handle {kv}"))?
-            .clone();
+        let mut seq = self.lookup_kv(kv)?.clone();
         seq.extend_from_slice(&q_tokens[..qlen]);
         let logits = sim_logits(&seq, dims.vocab);
         Ok((self.insert_kv(seq), logits))
     }
 
     fn generate(&mut self, module: &str, kv: u64, first_tok: i32)
-                -> anyhow::Result<Vec<i32>> {
+                -> Result<Vec<i32>, BackendError> {
         let dims = self.llm_dims(module)?;
         let c = self.manifest.constants;
-        let seq = self
-            .kvs
-            .get(&kv)
-            .ok_or_else(|| anyhow::anyhow!("unknown/released KV handle {kv}"))?
-            .clone();
+        let seq = self.lookup_kv(kv)?.clone();
         // greedy roll-forward, like the generate HLO: the output includes
         // `first_tok` and stops at max_gen (decode stops at EOS host-side).
         let mut out = vec![first_tok];
@@ -666,12 +1075,17 @@ impl SimState {
         Ok(out)
     }
 
-    fn encode(&mut self, module: &str, x: &[f32], mask: &[f32]) -> anyhow::Result<Vec<f32>> {
-        let m = self.manifest.module(module)?;
-        anyhow::ensure!(m.kind == "gnn", "{module}: not a gnn module");
+    fn encode(&mut self, module: &str, x: &[f32], mask: &[f32])
+              -> Result<Vec<f32>, BackendError> {
+        let m = self.manifest.module(module).map_err(BackendError::from_anyhow)?;
+        if m.kind != "gnn" {
+            return Err(BackendError::fatal(format!("{module}: not a gnn module")));
+        }
         let c = self.manifest.constants;
         let (n, f) = (c.n_max, c.feat_dim);
-        anyhow::ensure!(x.len() == n * f && mask.len() == n, "sim encode: bad input sizes");
+        if x.len() != n * f || mask.len() != n {
+            return Err(BackendError::fatal("sim encode: bad input sizes"));
+        }
         // masked mean over packed node features: similar subgraphs land
         // close, disjoint ones far — enough signal for centroid matching.
         let mut out = vec![0f32; c.gnn_emb];
@@ -1017,5 +1431,108 @@ mod tests {
         toks[0] = c.bos_id;
         let (kv, _) = sim.prefill(SIM_BACKBONE, &toks, 1).unwrap();
         sim.release(kv);
+    }
+
+    #[test]
+    fn faultplan_kill_restarts_lane_and_stales_old_handles() {
+        let store = sim_store();
+        let plan = FaultPlan { kill_llm_at_op: Some(2), ..FaultPlan::none() };
+        let sim = SimBackend::start_faulty(&store, SimLatency::zero(),
+                                           BatchConfig::off(), plan,
+                                           SupervisorPolicy::default())
+            .unwrap();
+        let c = *store.constants();
+        let mut toks = vec![c.pad_id; c.max_seq];
+        toks[0] = c.bos_id;
+        // op 1 survives and mints a generation-0 handle
+        let (kv_old, _) = sim.prefill(SIM_BACKBONE, &toks, 1).unwrap();
+        assert!(sim.kv_current(&kv_old));
+        // op 2 triggers the kill: the worker dies mid-batch, so the ticket
+        // reports LaneDead instead of hanging
+        let err = sim.prefill(SIM_BACKBONE, &toks, 1).unwrap_err();
+        assert!(err.is_lane_dead(), "kill surfaces as LaneDead, got: {err}");
+        // the next submission finds the dead channel and the supervisor
+        // restarts the lane — same request succeeds on the fresh worker
+        let (kv_new, row_new) = sim.prefill(SIM_BACKBONE, &toks, 1).unwrap();
+        assert!(sim.kv_current(&kv_new));
+        // ...with answers bit-identical to a fault-free run
+        let fresh = SimBackend::start(&store, SimLatency::zero()).unwrap();
+        let (_, row_ref) = fresh.prefill(SIM_BACKBONE, &toks, 1).unwrap();
+        assert_eq!(row_new, row_ref, "restart must not change semantics");
+        // the pre-restart handle is recognizably stale: kv_current says so,
+        // and using it reports LaneDead (quarantine + recompute), not Fatal
+        assert!(!sim.kv_current(&kv_old), "old-incarnation handle must be stale");
+        let q = vec![c.pad_id; c.max_q];
+        let err = sim.extend(SIM_BACKBONE, &kv_old, 1, &q, 0).unwrap_err();
+        assert!(err.is_lane_dead(), "stale handle is LaneDead, got: {err}");
+        assert!(err.to_string().contains("incarnation"), "unhelpful error: {err}");
+        assert_eq!(sim.stats().unwrap().lane_restarts, 1);
+    }
+
+    #[test]
+    fn restart_budget_exhaustion_makes_lane_death_terminal() {
+        let store = sim_store();
+        let plan = FaultPlan { kill_llm_at_op: Some(1), ..FaultPlan::none() };
+        let policy = SupervisorPolicy { max_restarts: 0, ..Default::default() };
+        let sim = SimBackend::start_faulty(&store, SimLatency::zero(),
+                                           BatchConfig::off(), plan, policy)
+            .unwrap();
+        let c = *store.constants();
+        let mut toks = vec![c.pad_id; c.max_seq];
+        toks[0] = c.bos_id;
+        // op 1 kills the worker; the ticket unblocks with LaneDead
+        assert!(sim.prefill(SIM_BACKBONE, &toks, 1).unwrap_err().is_lane_dead());
+        // with a zero restart budget the supervisor refuses to resurrect
+        let err = sim.prefill(SIM_BACKBONE, &toks, 1).unwrap_err();
+        assert!(err.is_lane_dead());
+        assert!(err.to_string().contains("budget"), "unhelpful error: {err}");
+        // the GNN lane is untouched by the LLM lane's demise
+        let x = vec![0f32; c.n_max * c.feat_dim];
+        assert!(sim.encode("gat", x, vec![0.0; c.n_max * c.n_max],
+                           vec![0.0; c.n_max]).is_ok());
+    }
+
+    #[test]
+    fn transient_injection_errs_without_side_effects() {
+        let store = sim_store();
+        let plan = FaultPlan { seed: 7, transient_prob: 1.0, ..FaultPlan::none() };
+        let sim = SimBackend::start_faulty(&store, SimLatency::zero(),
+                                           BatchConfig::off(), plan,
+                                           SupervisorPolicy::default())
+            .unwrap();
+        let c = *store.constants();
+        let mut toks = vec![c.pad_id; c.max_seq];
+        toks[0] = c.bos_id;
+        let err = sim.prefill(SIM_BACKBONE, &toks, 1).unwrap_err();
+        assert!(err.is_retryable() && !err.is_lane_dead(),
+                "transient is retryable without a lane restart: {err}");
+        assert!(matches!(err, BackendError::Transient { op: "prefill", .. }));
+        // the op never executed: nothing was inserted into the KV map
+        assert_eq!(sim.stats().unwrap().live_kv, 0);
+        assert_eq!(sim.stats().unwrap().lane_restarts, 0);
+        assert!(sim.injected_faults().0 >= 1);
+    }
+
+    #[test]
+    fn fault_rolls_are_deterministic_across_runs() {
+        let store = sim_store();
+        let c = *store.constants();
+        let run = || {
+            let plan = FaultPlan { seed: 42, transient_prob: 0.5, ..FaultPlan::none() };
+            let sim = SimBackend::start_faulty(&store, SimLatency::zero(),
+                                               BatchConfig::off(), plan,
+                                               SupervisorPolicy::default())
+                .unwrap();
+            let mut toks = vec![c.pad_id; c.max_seq];
+            toks[0] = c.bos_id;
+            let outcomes: Vec<bool> = (0..16)
+                .map(|_| sim.prefill(SIM_BACKBONE, &toks, 1).is_ok())
+                .collect();
+            outcomes
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b, "same seed, same per-op fates");
+        assert!(a.iter().any(|&ok| ok) && a.iter().any(|&ok| !ok),
+                "prob 0.5 over 16 ops should mix outcomes (seed-dependent but fixed)");
     }
 }

@@ -1,0 +1,308 @@
+//! Chaos-injection suite: serving correctness under injected backend
+//! faults, driven by [`FaultPlan`] on the deterministic [`SimBackend`]
+//! (see `runtime` module docs, "Injecting faults in a test").
+//!
+//! The acceptance property: with the LLM lane killed mid-run plus a ~5%
+//! transient-failure rate, a 4-stream `serve_online_multi` fleet completes
+//! every stream with answers **bit-identical** to a fault-free run — the
+//! representative KV pool is reconstructible state, so faults cost
+//! recovery work (counted in `ReliabilityStats`), never answers. A
+//! fault-free run reports zero restarts/retries with unchanged metrics.
+//!
+//! Fault seeds below are chosen so the injection pattern is *provably*
+//! safe for the configured retry budget: the transient roll is a pure
+//! function of (seed, lane, op index), so for each seed used here the
+//! per-lane hit indices were enumerated up front — at least one hit lands
+//! inside the guaranteed-executed op range, and no lane has a run of
+//! consecutive hits long enough to exhaust `max_retries`.
+
+use std::time::Duration;
+
+use subgcache::data::Query;
+use subgcache::prelude::*;
+use subgcache::runtime::{sim_dataset, sim_store, ArtifactStore};
+
+mod common;
+
+fn faulty_env(lat: SimLatency, plan: FaultPlan, policy: SupervisorPolicy)
+              -> (ArtifactStore, SimBackend) {
+    let store = sim_store();
+    let backend = SimBackend::start_faulty(&store, lat, BatchConfig::off(), plan, policy)
+        .expect("faulty sim backend start");
+    (store, backend)
+}
+
+fn answers(r: &ServeReport) -> Vec<String> {
+    r.results.iter().map(|x| x.predicted.clone()).collect()
+}
+
+/// Single-cluster online config: every query shares one representative, so
+/// lane kills always strand a warm cached entry (the interesting case).
+fn chaos_config() -> ServeConfig {
+    ServeConfig { online_threshold: f32::INFINITY, ..common::sim_config() }
+}
+
+// ---------------------------------------------------------------------------
+// The acceptance property.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn killed_llm_lane_fleet_recovers_bit_identical() {
+    let lat = SimLatency::from_millis(2, 1, 1, 1);
+    let n_streams = 4;
+    let n_queries = 6;
+    let ds = sim_dataset(4, 4);
+    let queries = ds.sample_test(n_queries, 7);
+    let streams: Vec<Vec<&Query>> =
+        (0..n_streams).map(|_| queries.clone()).collect();
+
+    // fault-free reference fleet: zero recovery work on the books.
+    let clean = common::sim_env(lat);
+    let coord = Coordinator::new(&clean.store, &clean.backend, chaos_config()).unwrap();
+    let reference = coord
+        .serve_online_multi(&ds, &streams, &GRetriever::default())
+        .unwrap();
+    assert_eq!(reference.reliability.restarts, 0,
+               "fault-free fleet must report zero lane restarts");
+    assert_eq!(reference.reliability.retries, 0,
+               "fault-free fleet must report zero retries");
+    assert_eq!(reference.failed_streams(), 0);
+
+    // chaos fleet: the LLM lane dies at its 12th op (mid-run — the fleet
+    // executes >= 49 LLM ops) and ~5% of ops reply a transient error.
+    // seed 1 pre-enumerated: LLM transients at op 6/17/51 (op 6 is inside
+    // the guaranteed range), no consecutive hits on either lane.
+    let plan = FaultPlan {
+        seed: 1,
+        kill_llm_at_op: Some(12),
+        transient_prob: 0.05,
+        ..FaultPlan::none()
+    };
+    let (store, backend) = faulty_env(lat, plan, SupervisorPolicy::default());
+    let coord = Coordinator::new(&store, &backend, chaos_config()).unwrap();
+    let multi = coord
+        .serve_online_multi(&ds, &streams, &GRetriever::default())
+        .unwrap();
+
+    // every stream completed, in input order.
+    assert_eq!(multi.streams.len(), n_streams);
+    assert_eq!(multi.failed_streams(), 0);
+    for (i, o) in multi.outcomes.iter().enumerate() {
+        assert!(matches!(o, StreamOutcome::Completed(idx) if *idx == i),
+                "stream {i} must complete in order, got {o:?}");
+    }
+
+    // answers bit-identical to the fault-free fleet, stream for stream.
+    for (i, (got, want)) in multi.streams.iter().zip(&reference.streams).enumerate() {
+        assert_eq!(answers(got), answers(want),
+                   "stream {i} answers must survive the faults bit-identical");
+        assert_eq!(got.metrics.per_query.len(), n_queries);
+    }
+
+    // the recovery work is on the books.
+    assert!(multi.reliability.restarts >= 1,
+            "the killed lane must have been supervisor-restarted: {:?}",
+            multi.reliability);
+    assert!(multi.reliability.retries >= 1,
+            "the dead lane's in-flight tickets must have been retried: {:?}",
+            multi.reliability);
+    assert_eq!(multi.reliability.restarts, backend.lane_restarts(),
+               "fleet restart delta must match the supervisor's counter");
+    let (transients, _spikes) = backend.injected_faults();
+    assert!(transients >= 1, "seed 1 injects a transient inside the run");
+}
+
+// ---------------------------------------------------------------------------
+// An empty plan is inert: start_faulty(none) == start, metric for metric.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn empty_fault_plan_is_inert() {
+    let lat = SimLatency::from_millis(2, 1, 1, 1);
+    let ds = sim_dataset(4, 4);
+    let queries = ds.sample_test(6, 7);
+
+    let plain = common::sim_env(lat);
+    let coord = Coordinator::new(&plain.store, &plain.backend, chaos_config()).unwrap();
+    let want = coord
+        .serve_online(&ds, queries.iter().copied(), &GRetriever::default())
+        .unwrap();
+
+    let (store, backend) =
+        faulty_env(lat, FaultPlan::none(), SupervisorPolicy::default());
+    let coord = Coordinator::new(&store, &backend, chaos_config()).unwrap();
+    let got = coord
+        .serve_online(&ds, queries.iter().copied(), &GRetriever::default())
+        .unwrap();
+
+    assert_eq!(answers(&got), answers(&want));
+    assert_eq!(got.metrics.per_query.len(), want.metrics.per_query.len());
+    assert_eq!(got.metrics.hit_count(), want.metrics.hit_count());
+    assert_eq!(got.metrics.miss_count(), want.metrics.miss_count());
+    assert_eq!(got.cache.prefills, want.cache.prefills);
+    assert_eq!(got.cache.quarantined, 0);
+    assert!(got.metrics.reliability.is_clean(),
+            "no faults -> clean reliability: {:?}", got.metrics.reliability);
+    assert_eq!(backend.lane_restarts(), 0);
+    assert_eq!(backend.injected_faults(), (0, 0));
+}
+
+// ---------------------------------------------------------------------------
+// Transient-only plan: retried in place, no restarts, exact bookkeeping.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn transient_faults_retry_in_place() {
+    let lat = SimLatency::from_millis(2, 1, 1, 1);
+    let ds = sim_dataset(4, 4);
+    let queries = ds.sample_test(6, 7);
+
+    let clean = common::sim_env(lat);
+    let coord = Coordinator::new(&clean.store, &clean.backend, chaos_config()).unwrap();
+    let want = coord
+        .serve_online(&ds, queries.iter().copied(), &GRetriever::default())
+        .unwrap();
+
+    // seed 332 pre-enumerated at prob 0.25: LLM hits at op 4/10/12/15...,
+    // GNN at 2/3/8... — several inside the 13 guaranteed LLM ops and 6
+    // guaranteed GNN ops, max consecutive run 2 < default max_retries.
+    let plan = FaultPlan { seed: 332, transient_prob: 0.25, ..FaultPlan::none() };
+    let (store, backend) = faulty_env(lat, plan, SupervisorPolicy::default());
+    let coord = Coordinator::new(&store, &backend, chaos_config()).unwrap();
+    let got = coord
+        .serve_online(&ds, queries.iter().copied(), &GRetriever::default())
+        .unwrap();
+
+    assert_eq!(answers(&got), answers(&want),
+               "transient retries must be bit-identical (no side effects)");
+    let rel = got.metrics.reliability;
+    assert!(rel.retries >= 2, "seed 332 injects several transients: {rel:?}");
+    assert_eq!(rel.restarts, 0, "no lane ever died");
+    assert_eq!(rel.quarantined_entries, 0, "no KV incarnation was lost");
+    assert!(rel.degraded_spans >= 1, "retried queries count as degraded");
+    assert!(rel.degraded_secs > 0.0, "recovery spent measurable time");
+    // every injected transient is one coordinator retry — nothing waits on
+    // a ticket without a recovery ladder behind it.
+    let (transients, _spikes) = backend.injected_faults();
+    assert_eq!(rel.retries, transients,
+               "one retry per injected transient, exactly");
+}
+
+// ---------------------------------------------------------------------------
+// A lane kill strands the warm representative: quarantine + repay.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lane_kill_quarantines_and_repays_the_representative() {
+    let lat = SimLatency::from_millis(2, 1, 1, 1);
+    let ds = sim_dataset(4, 4);
+    let queries = ds.sample_test(6, 7);
+
+    let clean = common::sim_env(lat);
+    let coord = Coordinator::new(&clean.store, &clean.backend, chaos_config()).unwrap();
+    let want = coord
+        .serve_online(&ds, queries.iter().copied(), &GRetriever::default())
+        .unwrap();
+
+    // op 4 is early in the single stream's >= 13 LLM ops: the cluster's
+    // representative is already resident and pinned when the lane dies.
+    let plan = FaultPlan { seed: 9, kill_llm_at_op: Some(4), ..FaultPlan::none() };
+    let (store, backend) = faulty_env(lat, plan, SupervisorPolicy::default());
+    let coord = Coordinator::new(&store, &backend, chaos_config()).unwrap();
+    let got = coord
+        .serve_online(&ds, queries.iter().copied(), &GRetriever::default())
+        .unwrap();
+
+    assert_eq!(answers(&got), answers(&want),
+               "the repaid prefill must reproduce the lost KV bit-identical");
+    let rel = got.metrics.reliability;
+    assert_eq!(rel.restarts, 1, "exactly one supervisor restart: {rel:?}");
+    assert!(rel.retries >= 1);
+    assert!(rel.quarantined_entries >= 1,
+            "the stale representative entry must be quarantined: {rel:?}");
+    assert!(got.cache.quarantined >= 1, "cache stats agree: {:?}", got.cache);
+    assert!(got.cache.prefills > want.cache.prefills,
+            "the lost representative was repaid with a fresh prefill");
+    assert_eq!(backend.lane_restarts(), 1);
+}
+
+// ---------------------------------------------------------------------------
+// Budget semantics: recovery is bounded, deadlines are counted.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zero_retry_budget_disables_recovery() {
+    let lat = SimLatency::from_millis(1, 1, 1, 1);
+    let ds = sim_dataset(4, 4);
+    let queries = ds.sample_test(4, 7);
+
+    // every op fails transient; with max_retries = 0 the first failure is
+    // terminal for the stream.
+    let plan = FaultPlan { seed: 5, transient_prob: 1.0, ..FaultPlan::none() };
+    let (store, backend) = faulty_env(lat, plan, SupervisorPolicy::default());
+    let cfg = ServeConfig { max_retries: 0, ..chaos_config() };
+    let coord = Coordinator::new(&store, &backend, cfg).unwrap();
+    let err = coord
+        .serve_online(&ds, queries.iter().copied(), &GRetriever::default())
+        .expect_err("max_retries = 0 must propagate the first failure");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("transient"),
+            "the typed error must survive the chain: {msg}");
+}
+
+#[test]
+fn exhausted_restart_budget_condemns_the_lane() {
+    let lat = SimLatency::from_millis(1, 1, 1, 1);
+    let ds = sim_dataset(4, 4);
+    let queries = ds.sample_test(4, 7);
+
+    // the lane dies at op 2 and the supervisor has no restart budget: the
+    // lane is condemned and the stream's recovery attempts fail fast with
+    // LaneDead instead of hanging.
+    let plan = FaultPlan { seed: 5, kill_llm_at_op: Some(2), ..FaultPlan::none() };
+    let policy = SupervisorPolicy { max_restarts: 0, ..SupervisorPolicy::default() };
+    let (store, backend) = faulty_env(lat, plan, policy);
+    let coord = Coordinator::new(&store, &backend, chaos_config()).unwrap();
+    let err = coord
+        .serve_online(&ds, queries.iter().copied(), &GRetriever::default())
+        .expect_err("a condemned lane must fail the stream");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("lane"), "LaneDead must surface in the chain: {msg}");
+    assert_eq!(backend.lane_restarts(), 0, "no restart budget, no restarts");
+}
+
+#[test]
+fn deadline_hits_count_queries_past_the_bound() {
+    let lat = SimLatency::from_millis(2, 1, 1, 1);
+    let ds = sim_dataset(4, 4);
+    let queries = ds.sample_test(4, 7);
+
+    // a 1 ns deadline: every (fault-free) query completes — the deadline
+    // bounds *recovery*, it never aborts healthy work — but each one is
+    // counted as a deadline hit.
+    let env = common::sim_env(lat);
+    let cfg = ServeConfig {
+        deadline: Some(Duration::from_nanos(1)),
+        ..chaos_config()
+    };
+    let coord = Coordinator::new(&env.store, &env.backend, cfg).unwrap();
+    let r = coord
+        .serve_online(&ds, queries.iter().copied(), &GRetriever::default())
+        .unwrap();
+    let rel = r.metrics.reliability;
+    assert_eq!(rel.deadline_hits, r.metrics.per_query.len() as u64,
+               "every served query ran past a 1 ns deadline: {rel:?}");
+    assert_eq!(rel.retries, 0);
+    assert_eq!(rel.restarts, 0);
+
+    // and with a generous deadline nothing is counted.
+    let cfg = ServeConfig {
+        deadline: Some(Duration::from_secs(3600)),
+        ..chaos_config()
+    };
+    let coord = Coordinator::new(&env.store, &env.backend, cfg).unwrap();
+    let r = coord
+        .serve_online(&ds, queries.iter().copied(), &GRetriever::default())
+        .unwrap();
+    assert_eq!(r.metrics.reliability.deadline_hits, 0);
+}
