@@ -17,8 +17,14 @@
 //! pool, emitting the pool-level dedup row (`pool_prefills`,
 //! `shared_hits`, `dedup_bytes_saved`, lock contention) next to the serial
 //! rows — the cross-stream sharing regression surface.
+//!
+//! `--host-cache-bytes N` (via the shared cache flags) threads a host KV
+//! tier through every online cell; in sim-quick mode it additionally runs
+//! a single-entry-device-budget cell whose row must show nonzero
+//! `demotions`/`promotions`/`host_hits` — the tier regression surface.
 
-use subgcache::harness::{batch_config_from_args, multi_serving_row, run_cell_with,
+use subgcache::harness::{batch_config_from_args, cache_policy_from_args,
+                         multi_serving_row, run_cell_with,
                          run_multi_online_cell_with, run_online_cell_with, Cell,
                          ServingBench};
 use subgcache::prelude::*;
@@ -26,8 +32,8 @@ use subgcache::runtime::{SimBackend, SIM_BACKBONE};
 
 const OUT: &str = "BENCH_serving.json";
 
-fn artifact_mode(store: &ArtifactStore, streams: usize, batch_cfg: BatchConfig)
-                 -> anyhow::Result<ServingBench> {
+fn artifact_mode(store: &ArtifactStore, streams: usize, batch_cfg: BatchConfig,
+                 cache: CachePolicy) -> anyhow::Result<ServingBench> {
     let mut bench = ServingBench::new("artifacts");
     bench.set_batch(batch_cfg);
     let engine = Engine::start_with(store, batch_cfg)?;
@@ -45,12 +51,14 @@ fn artifact_mode(store: &ArtifactStore, streams: usize, batch_cfg: BatchConfig)
         for depth in [1usize, 2] {
             let mut cell = Cell::new(dataset, "g-retriever", backbone, 50);
             cell.pipeline_depth = depth;
+            cell.cache = cache;
             let r = run_online_cell_with(store, &engine, &ds, &cell)?;
             println!("online {dataset} k={depth}: {:.2}s wall ({:.1} q/s)",
                      r.online.metrics.wall_time, r.online.metrics.qps());
             bench.push(&format!("online {dataset} k={depth}"), &r.online);
         }
-        let cell = Cell::new(dataset, "g-retriever", backbone, 25);
+        let mut cell = Cell::new(dataset, "g-retriever", backbone, 25);
+        cell.cache = cache;
         let mr = run_multi_online_cell_with(store, &engine, &ds, &cell, streams)?;
         println!("online {dataset} streams={streams}: {:.2}s wall ({:.1} q/s, \
                   {} shared hits)",
@@ -61,7 +69,8 @@ fn artifact_mode(store: &ArtifactStore, streams: usize, batch_cfg: BatchConfig)
     Ok(bench)
 }
 
-fn sim_quick_mode(streams: usize, batch_cfg: BatchConfig) -> anyhow::Result<ServingBench> {
+fn sim_quick_mode(streams: usize, batch_cfg: BatchConfig, cache: CachePolicy)
+                  -> anyhow::Result<ServingBench> {
     let mut bench = ServingBench::new("sim-quick");
     bench.set_batch(batch_cfg);
     let store = sim_store();
@@ -83,6 +92,7 @@ fn sim_quick_mode(streams: usize, batch_cfg: BatchConfig) -> anyhow::Result<Serv
     for depth in [1usize, 2, 4] {
         let mut cell = Cell::new("sim", "g-retriever", SIM_BACKBONE, 12);
         cell.pipeline_depth = depth;
+        cell.cache = cache;
         cell.online_threshold = f32::INFINITY;
         let r = run_online_cell_with(&store, &sim, &ds, &cell)?;
         println!("online sim k={depth}: {:.3}s wall ({:.1} q/s, {:.1} ms overlapped)",
@@ -93,7 +103,8 @@ fn sim_quick_mode(streams: usize, batch_cfg: BatchConfig) -> anyhow::Result<Serv
     // cross-stream sharing smoke: N replicated streams, one shared pool.
     // Prefill dominates, so the dedup (one pool prefill per distinct
     // representative instead of N) is visible in the wall/qps row.
-    let cell = Cell::new("sim", "g-retriever", SIM_BACKBONE, 12);
+    let mut cell = Cell::new("sim", "g-retriever", SIM_BACKBONE, 12);
+    cell.cache = cache;
     let mr = run_multi_online_cell_with(&store, &sim, &ds, &cell, streams)?;
     println!("online sim streams={streams}: {:.3}s wall ({:.1} q/s), \
               {} pool prefills, {} shared hits, lock {}/{} contended",
@@ -102,6 +113,25 @@ fn sim_quick_mode(streams: usize, batch_cfg: BatchConfig) -> anyhow::Result<Serv
              mr.multi.lock.acquisitions);
     bench.push_row(multi_serving_row(
         &format!("online sim streams={streams}"), &mr.multi));
+    // host-tier smoke (`--host-cache-bytes`): one stream under a
+    // single-entry device budget, so cluster churn demotes representatives
+    // to the host tier and revisits promote them back — the
+    // demotions/promotions/host_hits counters in the emitted row are the
+    // regression surface. Copies are given a real per-byte cost so the
+    // promoted path's latency is visible, not free.
+    if cache.host_bytes > 0 {
+        let lat_tier = SimLatency::from_millis(6, 2, 2, 6)
+            .with_host_copy_per_byte(std::time::Duration::from_nanos(15));
+        let sim_tier = SimBackend::start_with(&store, lat_tier, batch_cfg)?;
+        let mut cell = Cell::new("sim", "g-retriever", SIM_BACKBONE, 12);
+        cell.cache = CachePolicy { max_entries: 1, ..cache };
+        let r = run_online_cell_with(&store, &sim_tier, &ds, &cell)?;
+        println!("online sim host-tier: {:.3}s wall, {} demotions, \
+                  {} promotions, {} host hits",
+                 r.online.metrics.wall_time, r.online.cache.demotions,
+                 r.online.cache.promotions, r.online.cache.host_hits);
+        bench.push("online sim host-tier", &r.online);
+    }
     Ok(bench)
 }
 
@@ -116,15 +146,17 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let streams = args.usize_or("streams", 4).max(1);
     let batch_cfg = batch_config_from_args(&args)?;
+    let cache = cache_policy_from_args(&args)?;
     let out = args.get_or("out", OUT).to_string();
     let artifacts = ArtifactStore::discover().ok();
     let mode = if artifacts.is_some() { "artifacts" } else { "sim-quick" };
     println!("== serving bench ({mode}, streams = {streams}, max_batch = {}, \
-              window = {:.1} ms) ==",
-             batch_cfg.max_batch, batch_cfg.max_wait.as_secs_f64() * 1e3);
+              window = {:.1} ms, host_cache = {} B) ==",
+             batch_cfg.max_batch, batch_cfg.max_wait.as_secs_f64() * 1e3,
+             cache.host_bytes);
     let bench = match &artifacts {
-        Some(store) => artifact_mode(store, streams, batch_cfg)?,
-        None => sim_quick_mode(streams, batch_cfg)?,
+        Some(store) => artifact_mode(store, streams, batch_cfg, cache)?,
+        None => sim_quick_mode(streams, batch_cfg, cache)?,
     };
     bench.emit(&out)?;
     println!("\nwrote {out} ({} rows)", bench.len());

@@ -3,6 +3,9 @@
 //! the nearest already-seen cluster centroid (within `--threshold`, squared
 //! Euclidean over GNN embeddings) and reuses a still-warm representative KV
 //! cache when the `--cache-entries`/`--cache-mb` budget kept it resident.
+//! `--host-cache-bytes N` adds a host tier under the device budget: an
+//! evicted representative demotes to host memory and a later revisit
+//! promotes it back with a copy instead of repaying the full prefill.
 //!
 //! The headline columns are the hit/miss TTFT split: a hit pays only the
 //! question `extend`, a miss pays the full representative prefill — the

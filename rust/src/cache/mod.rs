@@ -1,6 +1,6 @@
 //! Subgraph-level KV cache (the paper §3.4), grown from the seed's
-//! single-resident slot into a process-wide, thread-safe pool shared across
-//! concurrent query streams.
+//! single-resident slot into a process-wide, thread-safe, **tiered** pool
+//! shared across concurrent query streams.
 //!
 //! # Architecture
 //!
@@ -11,16 +11,70 @@
 //!   keyed by **representative content hash** ([`RepKey`]) so identical
 //!   representatives resident in two streams share ONE entry — the paper's
 //!   intra-stream reuse extended to inter-stream reuse (the same
-//!   deduplication insight prompt-cache systems exploit). Single lock with
-//!   contention counters ([`SharedKvCache::lock_stats`]); critical sections
-//!   are short and allocation-light, so a sharded map is a follow-on, not a
-//!   prerequisite.
+//!   deduplication insight prompt-cache systems exploit). The index is
+//!   **sharded by key** (`CachePolicy::shards` shards, each its own mutex +
+//!   condvar + [`LockStats`]), so tier-copy bookkeeping done under a lock
+//!   never serializes unrelated keys at high stream counts.
 //! * [`KvCacheManager`] — a thin **per-stream view** over a pool. Each
 //!   serving stream owns one view; the view carries the stream's own
 //!   hit/miss accounting ([`CacheStats`]), its cluster-id → content-key
 //!   bindings, and the pins it holds. [`KvCacheManager::new`] wraps a
 //!   private pool (exactly the PR 3 single-stream behaviour);
 //!   [`KvCacheManager::shared_view`] attaches to a shared one.
+//!
+//! # Tier lifecycle: resident → host → dead
+//!
+//! With `CachePolicy::host_bytes > 0` the pool is two-tiered. A device
+//! entry's KV is no longer destroyed by eviction — it is **demoted**:
+//!
+//! * **resident** — the entry lives on the device, pinnable, LRU-tracked.
+//! * **host** — budget eviction hands the caller a [`Demotion`] work item
+//!   (`{ handle, slot }`) instead of a bare release handle. The caller
+//!   copies the KV off-device (`Backend::demote_kv`) and gives the host
+//!   handle back via [`KvCacheManager::admit_host`]. Host entries are never
+//!   pinned and never satisfy a device read; they exist to be promoted.
+//! * **dead** — the host tier has its own byte budget
+//!   (`CachePolicy::host_bytes`) with LRU *demotion-to-death*: admitting a
+//!   host copy over budget returns the coldest host handles for release.
+//!   Death is also where a host copy goes when a fresh install supersedes
+//!   it (the tiers never hold two live copies of one key) or when a
+//!   checked-out promotion is abandoned.
+//!
+//! A lookup that finds a host copy returns [`Lookup::MustPromote`]: the
+//! host handle is **checked out** of the pool (single-flight — the key is
+//! reserved exactly as a `MustInstall` miss reserves it, so racing streams
+//! block and then hit the promoted entry), the caller copies it back up
+//! (`Backend::promote_kv`) and completes with
+//! [`KvCacheManager::install_promoted`]. The serving scheduler overlaps
+//! that copy in the **ticket shadow** — the promote ticket is submitted,
+//! pipeline prep for the next query runs while the copy is in flight, and
+//! only then is the ticket waited — so a promotion charges the caller the
+//! copy latency minus the shadowed work, strictly less than the repaid
+//! prefill it replaces. A host hit counts as a `miss` *plus* a `host_hit`
+//! (the caller still pays a copy), and the completed copy-up counts as a
+//! `promotion`, not a `prefill`.
+//!
+//! # Sharded-index locking rules
+//!
+//! * Every key lives in exactly one shard (`key % shards`); single-key
+//!   operations (lookup, install, pin/unpin, release) lock only that
+//!   shard's mutex. Install-reservation waiters block on that shard's
+//!   condvar.
+//! * Pool-global residency (`resident_bytes`, `peak_bytes`, `host_bytes`,
+//!   entry count) lives in atomics that are only mutated while holding the
+//!   owning shard's lock.
+//! * Cross-shard passes — budget eviction, host-budget enforcement,
+//!   [`drain_all`](SharedKvCache::drain_all), [`budget_ok`], [`consistent`]
+//!   — lock **all shards in ascending index order** (the deadlock-freedom
+//!   rule), so they observe a true snapshot: no mutator can be mid-update,
+//!   because every mutation happens under some shard lock.
+//! * The deferred-release graveyard is a single pool-level list locked
+//!   *after* any shard locks (shards → graveyard, never the reverse).
+//! * `install` admits its entry under the key's shard lock, **releases
+//!   it**, and only then runs the global eviction pass under all locks.
+//!   Concurrent installs may interleave here; each pass evicts to budget,
+//!   so whichever pass runs last restores the install-point invariant —
+//!   the just-installed entry is pinned and thus never a victim.
 //!
 //! # The sharing / pinning / eviction contract
 //!
@@ -33,10 +87,10 @@
 //!   caller must [`install`] (or [`abort_install`]) it. Another stream that
 //!   looks up a reserved key **blocks** until the reservation resolves,
 //!   then hits the freshly installed entry — so N streams racing on one
-//!   representative pay exactly one prefill, never N. A view dropped with
-//!   reservations outstanding (serve path unwound on error) aborts them, so
-//!   waiters never hang on a dead installer: they wake, re-reserve, and
-//!   surface their own error.
+//!   representative pay exactly one prefill (or one promotion), never N. A
+//!   view dropped with reservations outstanding (serve path unwound on
+//!   error) aborts them, so waiters never hang on a dead installer: they
+//!   wake, re-reserve, and surface their own error.
 //! * **Pins are global.** An entry's pin count sums every stream's pins.
 //!   [`lookup`] hits and [`install`]s return with the caller holding one
 //!   pin; pins nest; a view can only unpin pins it holds. Eviction (LRU,
@@ -55,27 +109,33 @@
 //!   stream's staleness must not reclaim the fleet's warm entry).
 //! * **Quarantine.** When a lane worker dies and restarts, device KV state
 //!   minted by the dead incarnation is gone even though the pool still
-//!   lists its handles. [`quarantine_stale`] sweeps the pool with a
-//!   caller-supplied staleness predicate (in serving:
+//!   lists its handles. [`quarantine_stale`] sweeps the **device tier**
+//!   with a caller-supplied staleness predicate (in serving:
 //!   `!backend.kv_current(h)`), removing every stale entry — **pinned or
 //!   not**, since pins protect live device reads and a dead incarnation
 //!   has none left to protect — and returning the dead handles for
-//!   bookkeeping release. Entries carry an install-epoch identity, so a
-//!   stream that held a pin on a quarantined entry can never unpin the
-//!   fresh re-install another stream paid for: its pin is orphaned and its
+//!   bookkeeping release. **Host-tier copies are never swept**: a host
+//!   buffer does not die with a device lane, so after a quarantine the
+//!   next lookup finds the host copy and re-promotes instead of repaying
+//!   the prefill. Entries carry an install-epoch identity, so a stream
+//!   that held a pin on a quarantined entry can never unpin the fresh
+//!   re-install another stream paid for: its pin is orphaned and its
 //!   eventual unpin is a no-op. Re-installs after a quarantine go through
 //!   the normal single-flight reservation, so N streams recovering the
-//!   same representative still pay exactly one repaid prefill.
-//! * **Handle conservation.** Every handle passed to [`install`] leaves the
-//!   pool exactly once — through an eviction vector, a release, a deferred
-//!   graveyard drain, a quarantine sweep, or the end-of-run
-//!   [`SharedKvCache::drain_all`] — and
-//!   is never returned while any stream pins it. The property tests here
-//!   and the concurrent suite in `rust/tests/shared_cache.rs` pin this
-//!   down.
+//!   same representative still pay exactly one repaid prefill (or one
+//!   re-promotion).
+//! * **Handle conservation.** Every handle passed to [`install`] or
+//!   [`admit_host`] leaves the pool exactly once — through a release
+//!   vector, a [`Demotion`] work item, a promotion checkout, a deferred
+//!   graveyard drain, a quarantine sweep, a host-tier death, or the
+//!   end-of-run [`SharedKvCache::drain_all`] — and is never returned while
+//!   any stream pins it. The property tests here and the concurrent suite
+//!   in `rust/tests/shared_cache.rs` pin this down.
 //!
 //! Generic over the handle type so the policy is testable without a PJRT
-//! engine; the real handle is [`crate::runtime::KvHandle`].
+//! engine; the real handle is [`crate::runtime::KvHandle`]. The pool never
+//! talks to a backend itself — tier copies are **caller-mediated** work
+//! items, which keeps the pool pure bookkeeping.
 //!
 //! [`bind`]: KvCacheManager::bind
 //! [`lookup`]: KvCacheManager::lookup
@@ -84,41 +144,70 @@
 //! [`release`]: KvCacheManager::release
 //! [`expire`]: KvCacheManager::expire
 //! [`quarantine_stale`]: KvCacheManager::quarantine_stale
+//! [`admit_host`]: KvCacheManager::admit_host
+//! [`budget_ok`]: SharedKvCache::budget_ok
+//! [`consistent`]: SharedKvCache::consistent
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 
-/// Admission/eviction budget for the multi-resident cache.
+/// Default shard count for new pools (a modest power of two: enough to
+/// spread a few dozen streams, small enough that all-shard passes stay
+/// cheap).
+pub const DEFAULT_SHARDS: usize = 8;
+
+/// Admission/eviction budget for the multi-resident, two-tier cache.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CachePolicy {
-    /// Total bytes of resident KV caches (k + v) the pool may hold.
+    /// Total bytes of device-resident KV caches (k + v) the pool may hold.
     pub max_bytes: usize,
-    /// Maximum number of concurrently resident representative caches.
+    /// Maximum number of concurrently device-resident representative caches.
     pub max_entries: usize,
+    /// Byte budget of the host tier. `0` disables demotion entirely:
+    /// eviction destroys the KV exactly as it did before the tier existed.
+    pub host_bytes: usize,
+    /// Number of index shards (clamped to at least 1 at pool construction).
+    pub shards: usize,
 }
 
 impl Default for CachePolicy {
     /// Multi-resident by default: up to 4 warm representatives, no byte cap
-    /// (the simulated backbones are small; real deployments set `max_bytes`).
+    /// (the simulated backbones are small; real deployments set `max_bytes`),
+    /// host tier off, [`DEFAULT_SHARDS`] index shards.
     fn default() -> Self {
-        CachePolicy { max_bytes: usize::MAX, max_entries: 4 }
+        CachePolicy {
+            max_bytes: usize::MAX,
+            max_entries: 4,
+            host_bytes: 0,
+            shards: DEFAULT_SHARDS,
+        }
     }
 }
 
 impl CachePolicy {
     pub fn new(max_bytes: usize, max_entries: usize) -> Self {
-        CachePolicy { max_bytes, max_entries }
+        CachePolicy { max_bytes, max_entries, ..Self::default() }
     }
 
-    /// No budget at all — every representative stays warm.
+    /// No budget at all — every representative stays warm on the device.
     pub fn unbounded() -> Self {
-        CachePolicy { max_bytes: usize::MAX, max_entries: usize::MAX }
+        CachePolicy { max_bytes: usize::MAX, max_entries: usize::MAX, ..Self::default() }
     }
 
     /// The seed's behaviour: at most one resident representative.
     pub fn single_resident() -> Self {
-        CachePolicy { max_bytes: usize::MAX, max_entries: 1 }
+        CachePolicy { max_entries: 1, ..Self::unbounded() }
+    }
+
+    /// Enable the host tier with the given byte budget (0 disables it).
+    pub fn with_host_bytes(self, host_bytes: usize) -> Self {
+        CachePolicy { host_bytes, ..self }
+    }
+
+    /// Override the index shard count (clamped to ≥ 1 at construction).
+    pub fn with_shards(self, shards: usize) -> Self {
+        CachePolicy { shards, ..self }
     }
 }
 
@@ -127,19 +216,30 @@ impl CachePolicy {
 /// Returned both per stream ([`KvCacheManager::stats`] — the view's own
 /// lookups/installs, with pool-level residency) and for the whole pool
 /// ([`SharedKvCache::stats`]). Per-view `prefills`/`hits`/`misses`/
-/// `evictions` sum to the pool's across all views.
+/// `evictions`/`released` and the tier counters (`demotions`/`promotions`/
+/// `host_hits`) sum to the pool's across all views.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CacheStats {
-    /// Installs = representative prefills actually paid.
+    /// Installs = representative prefills actually paid (a promotion is
+    /// counted in `promotions` instead — it repays a copy, not a prefill).
     pub prefills: u64,
-    /// Lookups that found a warm resident cache (including lookups that
-    /// waited out another stream's in-flight install of the same key).
+    /// Lookups that found a warm device-resident cache (including lookups
+    /// that waited out another stream's in-flight install of the same key).
     pub hits: u64,
-    /// Lookups that found nothing (new cluster or evicted).
+    /// Lookups that found no device entry (new cluster, evicted, or
+    /// host-resident-only — see `host_hits`).
     pub misses: u64,
-    /// Entries removed by the budget policy (subset of `released`).
+    /// Entries removed from the device tier by the budget policy, whether
+    /// they died or left as [`Demotion`] work items (subset of `released`).
     pub evictions: u64,
-    /// Handles returned to the caller, by eviction or explicit release.
+    /// Handles handed back to a caller for **disposal**, each counted
+    /// exactly once at the call that returns it: budget evictions
+    /// (including device handles leaving inside a [`Demotion`]), same-key
+    /// replacements, rejected installs, superseded host copies, host-tier
+    /// deaths, explicit releases, quarantine sweeps, and graveyard drains.
+    /// Handles parked in the graveyard count when a drain *returns* them,
+    /// not when they enter; a promotion checkout is handed back for **use**
+    /// (the copy-up), not disposal, so it is not counted here.
     pub released: u64,
     /// KV bytes of prefill work avoided: sum of entry bytes over hits.
     pub bytes_saved: u64,
@@ -154,10 +254,24 @@ pub struct CacheStats {
     pub deferred_releases: u64,
     /// Entries invalidated by [`KvCacheManager::quarantine_stale`] because
     /// their device handles belonged to a dead lane incarnation (subset of
-    /// `released`).
+    /// `released`). Host-tier copies are never quarantined.
     pub quarantined: u64,
+    /// Evicted device entries actually admitted to the host tier
+    /// (counted at [`KvCacheManager::admit_host`]; redundant copies —
+    /// the key re-resident by admission time — are released instead).
+    pub demotions: u64,
+    /// Host-tier copies re-installed on the device via
+    /// [`KvCacheManager::install_promoted`] (counted instead of
+    /// `prefills`).
+    pub promotions: u64,
+    /// Lookups that found a host-tier copy (subset of `misses`: the caller
+    /// still pays the promotion copy, just not the full prefill).
+    pub host_hits: u64,
     pub resident_bytes: usize,
     pub peak_bytes: usize,
+    /// Bytes currently resident in the host tier (residency snapshot, like
+    /// `resident_bytes`).
+    pub host_bytes: usize,
 }
 
 impl CacheStats {
@@ -168,8 +282,9 @@ impl CacheStats {
     }
 }
 
-/// Single-lock contention counters for the shared pool (the signal that
-/// says when the map needs sharding).
+/// Per-shard lock contention counters. [`SharedKvCache::lock_stats`] sums
+/// them across shards; [`SharedKvCache::shard_lock_stats`] exposes the
+/// per-shard split (the signal that says whether the shard count is right).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct LockStats {
     /// Lock acquisitions by any view/pool operation.
@@ -214,15 +329,24 @@ impl RepKey {
 
 /// Outcome of a [`KvCacheManager::lookup`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-#[must_use = "a MustInstall outcome carries a reservation that must be \
-              installed or aborted"]
+#[must_use = "a MustInstall/MustPromote outcome carries a reservation that \
+              must be installed, promoted, or aborted"]
 pub enum Lookup {
-    /// Warm entry found (possibly after waiting out another stream's
+    /// Warm device entry found (possibly after waiting out another stream's
     /// in-flight install). The caller now holds one pin.
     Hit,
-    /// Nothing resident. The caller holds the key's install reservation and
-    /// must `install` or `abort_install` it (dropping the view also aborts).
+    /// Nothing resident in either tier. The caller holds the key's install
+    /// reservation and must `install` or `abort_install` it (dropping the
+    /// view also aborts).
     MustInstall,
+    /// A host-tier copy was found and **checked out** (take it with
+    /// [`KvCacheManager::take_promotion`]). The caller holds the key's
+    /// reservation and must copy the KV back up and
+    /// [`install_promoted`](KvCacheManager::install_promoted) it, or
+    /// `abort_install` (which destroys the host copy). Callers that do not
+    /// speak the tier protocol may treat this as a miss and `install` a
+    /// fresh prefill — the abandoned checkout is buried and drained.
+    MustPromote,
 }
 
 impl Lookup {
@@ -232,10 +356,64 @@ impl Lookup {
 }
 
 // ---------------------------------------------------------------------------
+// Tier work items
+// ---------------------------------------------------------------------------
+
+/// Identity + size of a demoted entry, minted by the pool at eviction and
+/// handed back with the host handle at [`KvCacheManager::admit_host`].
+/// Fields are pool-private so a slot can only come from a real demotion.
+#[derive(Debug, Clone, Copy)]
+pub struct HostSlot {
+    key: u64,
+    bytes: usize,
+}
+
+impl HostSlot {
+    /// KV bytes of the demoted entry (what the host copy will occupy).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+/// A demotion work item: budget eviction under an enabled host tier hands
+/// the caller the device `handle` plus the `slot` identifying it. The
+/// caller copies the KV off-device (`Backend::demote_kv` consumes the
+/// device handle) and completes with
+/// [`KvCacheManager::admit_host`]`(slot, host_handle)`; if the copy fails,
+/// simply dropping the item loses only the host-tier opportunity.
+#[must_use = "carry out the demotion (backend.demote_kv + admit_host) or \
+              release the device handle"]
+#[derive(Debug)]
+pub struct Demotion<H> {
+    pub handle: H,
+    pub slot: HostSlot,
+}
+
+/// Result of a tier-aware install: handles to release on the backend now,
+/// plus demotion work items to carry out (empty when the host tier is
+/// disabled).
+#[must_use = "release the handles and carry out the demotions"]
+#[derive(Debug)]
+pub struct TieredOut<H> {
+    pub release: Vec<H>,
+    pub demote: Vec<Demotion<H>>,
+}
+
+impl<H> TieredOut<H> {
+    /// Flatten into plain release handles, dropping the host-tier
+    /// opportunity (the compat path for callers that predate the tiers).
+    pub fn into_release_all(self) -> Vec<H> {
+        let mut out = self.release;
+        out.extend(self.demote.into_iter().map(|d| d.handle));
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Shared pool
 // ---------------------------------------------------------------------------
 
-/// One resident representative cache.
+/// One device-resident representative cache.
 struct Entry<H> {
     key: u64,
     handle: H,
@@ -248,73 +426,140 @@ struct Entry<H> {
     /// release was requested while pinned: the handle moves to the
     /// graveyard when the last pin drops (unless a hit resurrects it).
     doomed: bool,
-    /// Install-epoch identity (the pool tick at admission, unique per
-    /// install under the lock). Distinguishes this entry from a later
-    /// re-install under the same key, so a pin orphaned by a quarantine
-    /// can never unpin the fresh entry that replaced its target.
+    /// Install-epoch identity (a pool-global tick at admission, unique per
+    /// install). Distinguishes this entry from a later re-install under the
+    /// same key, so a pin orphaned by a quarantine can never unpin the
+    /// fresh entry that replaced its target.
     epoch: u64,
+}
+
+/// One host-tier copy. Host entries are never pinned and never doomed:
+/// their whole lifecycle is admit → (checkout-for-promotion | LRU death |
+/// superseded-by-install).
+struct HostEntry<H> {
+    key: u64,
+    handle: H,
+    bytes: usize,
+    last_used: u64,
+}
+
+/// One shard of the index: its own mutex + condvar + contention counters.
+/// A key's device entry, host copy, and pending reservation all live in
+/// the same shard (`key % shards`).
+struct Shard<H> {
+    inner: Mutex<Inner<H>>,
+    /// Wakes lookups blocked on a pending install in THIS shard.
+    cv: Condvar,
+    acquisitions: AtomicU64,
+    contended: AtomicU64,
 }
 
 struct Inner<H> {
     entries: Vec<Entry<H>>,
+    /// host-tier copies of keys owned by this shard.
+    host: Vec<HostEntry<H>>,
     /// key → reserving stream id: a miss whose install is in flight.
     pending: HashMap<u64, u64>,
-    /// handles whose release was deferred past a foreign pin; drained by
-    /// the next handle-returning call on any view.
-    graveyard: Vec<H>,
-    tick: u64,
+    /// this shard's share of the pool counters (residency fields unused —
+    /// residency lives in the pool atomics; `SharedKvCache::stats` sums
+    /// the shards and fills residency in).
     stats: CacheStats,
+}
+
+/// How an install is accounted: a paid prefill or a repaid host copy.
+#[derive(Clone, Copy)]
+enum Admit {
+    Prefill,
+    Promote,
+}
+
+/// What a lookup found, pool-side.
+enum Found<H> {
+    Hit { bytes: usize, shared: bool, epoch: u64 },
+    /// Host copy checked out; the key is now reserved by the caller.
+    Promote { handle: H, bytes: usize },
+    /// Nothing in either tier; the key is now reserved by the caller.
+    Reserved,
 }
 
 /// Outcome details handed back to the view so per-stream stats stay exact.
 struct InstallOutcome<H> {
-    /// Handles safe to hand to the backend (evictions, replacements,
-    /// rejected duplicates, drained graveyard).
+    /// Handles safe to hand to the backend (evictions under a disabled
+    /// host tier, replacements, rejected duplicates, superseded host
+    /// copies, drained graveyard).
     out: Vec<H>,
-    /// How many of `out` were budget evictions.
+    /// Demotion work items (host tier enabled; empty otherwise).
+    demote: Vec<Demotion<H>>,
+    /// How many device entries the budget pass evicted (died or demoted).
     evictions: u64,
     /// Install-epoch of the entry the caller now holds a pin on (the fresh
     /// entry, or the pinned resident that rejected the install).
     epoch: u64,
 }
 
-/// The process-wide, thread-safe, byte-budgeted KV cache pool. `H` is an
-/// opaque device-cache handle; see the module docs for the full contract.
-/// All mutation goes through [`KvCacheManager`] views; the pool itself
-/// exposes only observation ([`stats`], [`lock_stats`], [`resident_bytes`])
-/// and end-of-run draining ([`drain_all`], [`collect_deferred`]).
+/// The process-wide, thread-safe, byte-budgeted, two-tier KV cache pool.
+/// `H` is an opaque device-cache handle; see the module docs for the full
+/// contract. All mutation goes through [`KvCacheManager`] views; the pool
+/// itself exposes only observation ([`stats`], [`lock_stats`],
+/// [`resident_bytes`], [`host_resident_bytes`]) and end-of-run draining
+/// ([`drain_all`], [`collect_deferred`]).
 ///
 /// [`stats`]: SharedKvCache::stats
 /// [`lock_stats`]: SharedKvCache::lock_stats
 /// [`resident_bytes`]: SharedKvCache::resident_bytes
+/// [`host_resident_bytes`]: SharedKvCache::host_resident_bytes
 /// [`drain_all`]: SharedKvCache::drain_all
 /// [`collect_deferred`]: SharedKvCache::collect_deferred
 pub struct SharedKvCache<H> {
     policy: CachePolicy,
-    inner: Mutex<Inner<H>>,
-    /// Wakes lookups blocked on another stream's pending install.
-    cv: Condvar,
+    shards: Box<[Shard<H>]>,
+    /// Deferred-release handles (doomed entries whose last pin dropped,
+    /// abandoned promotion checkouts). Pool-level because every
+    /// handle-returning call on ANY key drains the full backlog. Lock
+    /// order: shards → graveyard, never the reverse.
+    graveyard: Mutex<Vec<H>>,
+    /// Pool-global LRU / epoch clock (mutated with a bare `fetch_add`, so
+    /// epochs stay unique across shards).
+    tick: AtomicU64,
+    /// Device-tier residency. Mutated only under the owning shard's lock;
+    /// an all-shards holder therefore reads a stable snapshot.
+    resident: AtomicUsize,
+    peak: AtomicUsize,
+    /// Host-tier residency (same locking discipline as `resident`).
+    host_resident: AtomicUsize,
+    /// Device-tier entry count across shards.
+    entry_count: AtomicUsize,
     next_stream: AtomicU64,
-    lock_acquisitions: AtomicU64,
-    lock_contended: AtomicU64,
 }
 
 impl<H> SharedKvCache<H> {
     pub fn new(policy: CachePolicy) -> Self {
         assert!(policy.max_entries >= 1, "policy must admit at least one entry");
+        let nshards = policy.shards.max(1);
+        let shards = (0..nshards)
+            .map(|_| Shard {
+                inner: Mutex::new(Inner {
+                    entries: Vec::new(),
+                    host: Vec::new(),
+                    pending: HashMap::new(),
+                    stats: CacheStats::default(),
+                }),
+                cv: Condvar::new(),
+                acquisitions: AtomicU64::new(0),
+                contended: AtomicU64::new(0),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
         SharedKvCache {
             policy,
-            inner: Mutex::new(Inner {
-                entries: Vec::new(),
-                pending: HashMap::new(),
-                graveyard: Vec::new(),
-                tick: 0,
-                stats: CacheStats::default(),
-            }),
-            cv: Condvar::new(),
+            shards,
+            graveyard: Mutex::new(Vec::new()),
+            tick: AtomicU64::new(0),
+            resident: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            host_resident: AtomicUsize::new(0),
+            entry_count: AtomicUsize::new(0),
             next_stream: AtomicU64::new(1),
-            lock_acquisitions: AtomicU64::new(0),
-            lock_contended: AtomicU64::new(0),
         }
     }
 
@@ -322,143 +567,320 @@ impl<H> SharedKvCache<H> {
         self.policy
     }
 
-    /// Lock the pool, counting contention. Mutex poisoning is recovered:
+    fn shard(&self, key: u64) -> &Shard<H> {
+        &self.shards[(key % self.shards.len() as u64) as usize]
+    }
+
+    /// Lock one shard, counting contention. Mutex poisoning is recovered:
     /// every critical section below restores invariants before returning,
     /// so a panicking test thread must not cascade into every other stream.
-    fn lock(&self) -> MutexGuard<'_, Inner<H>> {
-        self.lock_acquisitions.fetch_add(1, Ordering::Relaxed);
-        match self.inner.try_lock() {
+    fn lock_shard<'a>(&'a self, sh: &'a Shard<H>) -> MutexGuard<'a, Inner<H>> {
+        sh.acquisitions.fetch_add(1, Ordering::Relaxed);
+        match sh.inner.try_lock() {
             Ok(g) => g,
             Err(std::sync::TryLockError::WouldBlock) => {
-                self.lock_contended.fetch_add(1, Ordering::Relaxed);
-                self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+                sh.contended.fetch_add(1, Ordering::Relaxed);
+                sh.inner.lock().unwrap_or_else(PoisonError::into_inner)
             }
             Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
         }
+    }
+
+    /// Lock every shard in ascending index order (the cross-shard passes'
+    /// deadlock-freedom rule).
+    fn lock_all(&self) -> Vec<MutexGuard<'_, Inner<H>>> {
+        self.shards.iter().map(|sh| self.lock_shard(sh)).collect()
+    }
+
+    fn lock_graveyard(&self) -> MutexGuard<'_, Vec<H>> {
+        self.graveyard.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Drain the deferred-release backlog into `out`, counting each drained
+    /// handle as released at THIS call (the call that returns it).
+    fn drain_graveyard_into(&self, out: &mut Vec<H>, stats: &mut CacheStats) {
+        let mut g = self.lock_graveyard();
+        stats.released += g.len() as u64;
+        out.append(&mut g);
+    }
+
+    fn next_tick(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed) + 1
     }
 
     fn register_stream(&self) -> u64 {
         self.next_stream.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Single-lock contention counters (when `contended` grows a meaningful
-    /// fraction of `acquisitions`, shard the map).
+    /// Pool-wide contention counters, summed over shards (when `contended`
+    /// grows a meaningful fraction of `acquisitions`, raise
+    /// `CachePolicy::shards`).
     pub fn lock_stats(&self) -> LockStats {
-        LockStats {
-            acquisitions: self.lock_acquisitions.load(Ordering::Relaxed),
-            contended: self.lock_contended.load(Ordering::Relaxed),
+        let mut total = LockStats::default();
+        for sh in self.shards.iter() {
+            total.acquisitions += sh.acquisitions.load(Ordering::Relaxed);
+            total.contended += sh.contended.load(Ordering::Relaxed);
         }
+        total
     }
 
-    /// Pool-level accounting: totals across every view.
+    /// Per-shard contention split (diagnostics: a single hot shard means a
+    /// skewed key population, not an undersized shard count).
+    pub fn shard_lock_stats(&self) -> Vec<LockStats> {
+        self.shards
+            .iter()
+            .map(|sh| LockStats {
+                acquisitions: sh.acquisitions.load(Ordering::Relaxed),
+                contended: sh.contended.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Pool-level accounting: totals across every view, shard by shard,
+    /// with residency snapshotted from the pool atomics.
     pub fn stats(&self) -> CacheStats {
-        self.lock().stats
+        let mut total = CacheStats::default();
+        for sh in self.shards.iter() {
+            let inner = self.lock_shard(sh);
+            let s = inner.stats;
+            total.prefills += s.prefills;
+            total.hits += s.hits;
+            total.misses += s.misses;
+            total.evictions += s.evictions;
+            total.released += s.released;
+            total.bytes_saved += s.bytes_saved;
+            total.shared_hits += s.shared_hits;
+            total.dedup_bytes_saved += s.dedup_bytes_saved;
+            total.deferred_releases += s.deferred_releases;
+            total.quarantined += s.quarantined;
+            total.demotions += s.demotions;
+            total.promotions += s.promotions;
+            total.host_hits += s.host_hits;
+        }
+        total.resident_bytes = self.resident.load(Ordering::Relaxed);
+        total.peak_bytes = self.peak.load(Ordering::Relaxed);
+        total.host_bytes = self.host_resident.load(Ordering::Relaxed);
+        total
     }
 
     pub fn resident_bytes(&self) -> usize {
-        self.lock().stats.resident_bytes
+        self.resident.load(Ordering::Relaxed)
     }
 
+    /// Bytes currently parked in the host tier.
+    pub fn host_resident_bytes(&self) -> usize {
+        self.host_resident.load(Ordering::Relaxed)
+    }
+
+    /// Device-resident entries across all shards.
     pub fn len(&self) -> usize {
-        self.lock().entries.len()
+        self.entry_count.load(Ordering::Relaxed)
     }
 
     pub fn is_empty(&self) -> bool {
-        self.lock().entries.is_empty()
+        self.len() == 0
     }
 
-    /// True while the pool satisfies its budget — or cannot (every resident
-    /// entry pinned), in which case running over budget is the contract.
-    /// This is the **install-point** invariant: eviction only runs at
-    /// install, so between a pinned overrun's unpin and the next install
-    /// the pool may legitimately sit over budget with evictable entries
-    /// (the same window the single-stream property tests have always
-    /// allowed). `install` re-asserts it under the lock on every call; use
-    /// [`consistent`](Self::consistent) for anytime polling instead.
+    /// Host-tier entries across all shards.
+    pub fn host_len(&self) -> usize {
+        self.shards.iter().map(|sh| self.lock_shard(sh).host.len()).sum()
+    }
+
+    /// True while the pool satisfies its device budget — or cannot (every
+    /// resident entry pinned), in which case running over budget is the
+    /// contract. This is the **install-point** invariant: eviction only
+    /// runs at install, so between a pinned overrun's unpin and the next
+    /// install the pool may legitimately sit over budget with evictable
+    /// entries (the same window the single-stream property tests have
+    /// always allowed). `install` re-asserts it under all shard locks on
+    /// every call; use [`consistent`](Self::consistent) for anytime polling
+    /// instead.
     pub fn budget_ok(&self) -> bool {
-        let inner = self.lock();
-        Self::budget_ok_inner(&self.policy, &inner)
+        let guards = self.lock_all();
+        self.budget_ok_locked(&guards)
     }
 
-    fn budget_ok_inner(policy: &CachePolicy, inner: &Inner<H>) -> bool {
-        let within = inner.stats.resident_bytes <= policy.max_bytes
-            && inner.entries.len() <= policy.max_entries;
-        within || inner.entries.iter().all(|e| e.pins > 0)
+    fn budget_ok_locked(&self, guards: &[MutexGuard<'_, Inner<H>>]) -> bool {
+        let within = self.resident.load(Ordering::Relaxed) <= self.policy.max_bytes
+            && self.entry_count.load(Ordering::Relaxed) <= self.policy.max_entries;
+        within || guards.iter().all(|g| g.entries.iter().all(|e| e.pins > 0))
     }
 
     /// Anytime internal-consistency check for the concurrent property
-    /// tests: byte accounting matches the entries, peak is monotone, a
-    /// doomed entry is always pinned (a doomed entry losing its last pin is
-    /// removed under the same lock), and no pending install reservation
-    /// shadows a resident key.
+    /// tests: byte/count accounting matches the entries in every tier,
+    /// peak is monotone, a doomed entry is always pinned (a doomed entry
+    /// losing its last pin is removed under the same lock), no pending
+    /// install reservation shadows a resident key, and the tiers never
+    /// hold two live copies of one key.
     pub fn consistent(&self) -> bool {
-        let inner = self.lock();
-        let bytes: usize = inner.entries.iter().map(|e| e.bytes).sum();
-        bytes == inner.stats.resident_bytes
-            && inner.stats.peak_bytes >= inner.stats.resident_bytes
-            && inner.entries.iter().all(|e| !e.doomed || e.pins > 0)
-            && inner.entries.iter().all(|e| !inner.pending.contains_key(&e.key))
+        let guards = self.lock_all();
+        let bytes: usize = guards.iter().flat_map(|g| g.entries.iter()).map(|e| e.bytes).sum();
+        let host_bytes: usize = guards.iter().flat_map(|g| g.host.iter()).map(|e| e.bytes).sum();
+        let count: usize = guards.iter().map(|g| g.entries.len()).sum();
+        bytes == self.resident.load(Ordering::Relaxed)
+            && host_bytes == self.host_resident.load(Ordering::Relaxed)
+            && count == self.entry_count.load(Ordering::Relaxed)
+            && self.peak.load(Ordering::Relaxed) >= self.resident.load(Ordering::Relaxed)
+            && guards.iter().all(|g| {
+                g.entries.iter().all(|e| !e.doomed || e.pins > 0)
+                    && g.entries.iter().all(|e| !g.pending.contains_key(&e.key))
+                    && g.host
+                        .iter()
+                        .all(|h| g.entries.iter().all(|e| e.key != h.key))
+            })
     }
 
-    /// Drain every resident entry **and** the graveyard, pinned or not.
-    /// Quiescent-only: call after every stream using the pool has finished
-    /// (pins left by an unwound stream are abandoned bookkeeping by then).
+    /// Drain every resident entry in **both tiers** and the graveyard,
+    /// pinned or not. Quiescent-only: call after every stream using the
+    /// pool has finished (pins left by an unwound stream are abandoned
+    /// bookkeeping by then). Every drained handle counts as released here —
+    /// the call that returns it.
     pub fn drain_all(&self) -> Vec<H> {
-        let mut inner = self.lock();
-        let mut out: Vec<H> = inner.graveyard.drain(..).collect();
-        let drained: Vec<H> = inner.entries.drain(..).map(|e| e.handle).collect();
-        inner.stats.released += (out.len() + drained.len()) as u64;
-        inner.stats.resident_bytes = 0;
-        out.extend(drained);
+        let mut guards = self.lock_all();
+        let mut out = Vec::new();
+        for g in guards.iter_mut() {
+            let n = g.entries.len() + g.host.len();
+            out.extend(g.entries.drain(..).map(|e| e.handle));
+            out.extend(g.host.drain(..).map(|e| e.handle));
+            g.stats.released += n as u64;
+        }
+        {
+            let mut grave = self.lock_graveyard();
+            guards[0].stats.released += grave.len() as u64;
+            out.append(&mut grave);
+        }
+        self.resident.store(0, Ordering::Relaxed);
+        self.host_resident.store(0, Ordering::Relaxed);
+        self.entry_count.store(0, Ordering::Relaxed);
         out
     }
 
-    /// Drain only the graveyard (deferred releases whose last pin dropped).
+    /// Drain only the graveyard (deferred releases whose last pin dropped,
+    /// abandoned promotion checkouts). Drained handles count as released
+    /// here — the call that returns them.
     pub fn collect_deferred(&self) -> Vec<H> {
-        let mut inner = self.lock();
-        let out: Vec<H> = inner.graveyard.drain(..).collect();
-        inner.stats.released += out.len() as u64;
+        let sh = &self.shards[0];
+        let mut inner = self.lock_shard(sh);
+        let mut out = Vec::new();
+        self.drain_graveyard_into(&mut out, &mut inner.stats);
         out
     }
 
-    // -- internal ops (called by views, under one lock each) ----------------
+    // -- internal ops (called by views) -------------------------------------
 
     fn idx(inner: &Inner<H>, key: u64) -> Option<usize> {
         inner.entries.iter().position(|e| e.key == key)
     }
 
-    fn lru_unpinned(inner: &Inner<H>) -> Option<usize> {
-        inner
-            .entries
-            .iter()
-            .enumerate()
-            .filter(|(_, e)| e.pins == 0)
-            .min_by_key(|(_, e)| e.last_used)
-            .map(|(i, _)| i)
+    fn host_idx(inner: &Inner<H>, key: u64) -> Option<usize> {
+        inner.host.iter().position(|e| e.key == key)
     }
 
-    fn over_budget(&self, inner: &Inner<H>) -> bool {
-        inner.stats.resident_bytes > self.policy.max_bytes
-            || inner.entries.len() > self.policy.max_entries
+    fn over_budget(&self) -> bool {
+        self.resident.load(Ordering::Relaxed) > self.policy.max_bytes
+            || self.entry_count.load(Ordering::Relaxed) > self.policy.max_entries
     }
 
-    fn evict_at(inner: &mut Inner<H>, i: usize) -> H {
-        let e = inner.entries.swap_remove(i);
-        inner.stats.evictions += 1;
-        inner.stats.released += 1;
-        inner.stats.resident_bytes -= e.bytes;
-        e.handle
+    /// Global LRU over unpinned device entries, across all locked shards.
+    fn global_lru_unpinned(guards: &[MutexGuard<'_, Inner<H>>]) -> Option<(usize, usize)> {
+        let mut pick: Option<(usize, usize, u64)> = None;
+        for (si, g) in guards.iter().enumerate() {
+            for (ei, e) in g.entries.iter().enumerate() {
+                let colder = match pick {
+                    None => true,
+                    Some((_, _, lu)) => e.last_used < lu,
+                };
+                if e.pins == 0 && colder {
+                    pick = Some((si, ei, e.last_used));
+                }
+            }
+        }
+        pick.map(|(si, ei, _)| (si, ei))
+    }
+
+    /// Evict device entries (global LRU, zero-pin only) until the device
+    /// budget holds or only pinned entries remain. With the host tier
+    /// enabled, victims leave as [`Demotion`] work items; otherwise they
+    /// die. Runs under ALL shard locks; see the module locking rules.
+    fn enforce_device_budget(&self) -> (Vec<H>, Vec<Demotion<H>>, u64) {
+        let mut out = Vec::new();
+        let mut demote = Vec::new();
+        let mut evictions = 0u64;
+        if !self.over_budget() {
+            return (out, demote, evictions);
+        }
+        let mut guards = self.lock_all();
+        while self.over_budget() {
+            let Some((si, ei)) = Self::global_lru_unpinned(&guards) else {
+                break; // only pinned entries left: run over budget
+            };
+            let e = guards[si].entries.swap_remove(ei);
+            self.resident.fetch_sub(e.bytes, Ordering::Relaxed);
+            self.entry_count.fetch_sub(1, Ordering::Relaxed);
+            let stats = &mut guards[si].stats;
+            stats.evictions += 1;
+            stats.released += 1;
+            evictions += 1;
+            if self.policy.host_bytes > 0 {
+                demote.push(Demotion {
+                    handle: e.handle,
+                    slot: HostSlot { key: e.key, bytes: e.bytes },
+                });
+            } else {
+                out.push(e.handle);
+            }
+        }
+        // the budget contract, asserted where it is defined — at the end of
+        // every install's eviction pass, under all locks. A concurrent
+        // install's pass fixes this one's overrun too, so the assert holds
+        // for every interleaving.
+        debug_assert!(
+            self.budget_ok_locked(&guards),
+            "install left the pool over budget with evictable entries"
+        );
+        (out, demote, evictions)
+    }
+
+    /// LRU demotion-to-death: drop the coldest host copies until the host
+    /// tier fits its byte budget. Host entries are never pinned, so this
+    /// always converges. Runs under ALL shard locks.
+    fn enforce_host_budget(&self) -> Vec<H> {
+        let mut out = Vec::new();
+        if self.host_resident.load(Ordering::Relaxed) <= self.policy.host_bytes {
+            return out;
+        }
+        let mut guards = self.lock_all();
+        while self.host_resident.load(Ordering::Relaxed) > self.policy.host_bytes {
+            let mut pick: Option<(usize, usize, u64)> = None;
+            for (si, g) in guards.iter().enumerate() {
+                for (ei, e) in g.host.iter().enumerate() {
+                    let colder = match pick {
+                        None => true,
+                        Some((_, _, lu)) => e.last_used < lu,
+                    };
+                    if colder {
+                        pick = Some((si, ei, e.last_used));
+                    }
+                }
+            }
+            let Some((si, ei, _)) = pick else { break };
+            let e = guards[si].host.swap_remove(ei);
+            self.host_resident.fetch_sub(e.bytes, Ordering::Relaxed);
+            guards[si].stats.released += 1;
+            out.push(e.handle);
+        }
+        out
     }
 
     /// Hit-or-reserve; blocks while another stream's install of `key` is
-    /// pending. Returns `(outcome, entry_bytes, was_shared, epoch)` — the
-    /// epoch identifies the pinned entry (0 on a miss).
-    fn lookup_or_reserve(&self, stream: u64, key: u64) -> (Lookup, usize, bool, u64) {
-        let mut inner = self.lock();
+    /// pending. A host-tier copy is checked out (and the key reserved) for
+    /// the caller to promote.
+    fn lookup_or_reserve(&self, stream: u64, key: u64) -> Found<H> {
+        let sh = self.shard(key);
+        let mut inner = self.lock_shard(sh);
         loop {
             if let Some(i) = Self::idx(&inner, key) {
-                inner.tick += 1;
-                let t = inner.tick;
+                let t = self.next_tick();
                 let e = &mut inner.entries[i];
                 // a hit on a doomed entry resurrects it: it is demonstrably
                 // still hot, and tearing it down under a fresh pin would
@@ -475,7 +897,7 @@ impl<H> SharedKvCache<H> {
                     inner.stats.shared_hits += 1;
                     inner.stats.dedup_bytes_saved += bytes as u64;
                 }
-                return (Lookup::Hit, bytes, shared, epoch);
+                return Found::Hit { bytes, shared, epoch };
             }
             // copy the owner out so the map borrow ends before the guard
             // is moved into the condvar wait (NLL cannot see through a
@@ -488,15 +910,25 @@ impl<H> SharedKvCache<H> {
                         "stream looked up a key it already holds a reservation \
                          for (install or abort_install it first)"
                     );
-                    inner = self
+                    inner = sh
                         .cv
                         .wait(inner)
                         .unwrap_or_else(PoisonError::into_inner);
                 }
                 None => {
-                    inner.pending.insert(key, stream);
                     inner.stats.misses += 1;
-                    return (Lookup::MustInstall, 0, false, 0);
+                    inner.pending.insert(key, stream);
+                    if let Some(hi) = Self::host_idx(&inner, key) {
+                        // host hit: check the copy out for promotion. The
+                        // reservation keeps it single-flight — racing
+                        // streams block above and then hit the promoted
+                        // entry, paying one copy, never N.
+                        let he = inner.host.swap_remove(hi);
+                        self.host_resident.fetch_sub(he.bytes, Ordering::Relaxed);
+                        inner.stats.host_hits += 1;
+                        return Found::Promote { handle: he.handle, bytes: he.bytes };
+                    }
+                    return Found::Reserved;
                 }
             }
         }
@@ -504,10 +936,20 @@ impl<H> SharedKvCache<H> {
 
     /// Install `handle` under `key`, fulfilling `stream`'s reservation if
     /// one exists. The entry is admitted pinned (one pin for the caller).
-    /// Colder zero-pin entries may be evicted to make room; if only pinned
-    /// entries remain the pool runs over budget instead.
-    fn install(&self, stream: u64, key: u64, handle: H, bytes: usize) -> InstallOutcome<H> {
-        let mut inner = self.lock();
+    /// Colder zero-pin entries may be evicted (demoted, with the host tier
+    /// enabled) to make room; if only pinned entries remain the pool runs
+    /// over budget instead. `admit` selects the accounting: a paid prefill
+    /// or a repaid promotion copy.
+    fn install(
+        &self,
+        stream: u64,
+        key: u64,
+        handle: H,
+        bytes: usize,
+        admit: Admit,
+    ) -> InstallOutcome<H> {
+        let sh = self.shard(key);
+        let mut inner = self.lock_shard(sh);
         // any reservation of this key — ours or another stream's blind-
         // raced one — is resolved by this install: the key is about to be
         // resident, so waiters wake into a hit and a reserving stream's
@@ -518,10 +960,22 @@ impl<H> SharedKvCache<H> {
         // with every current resident — including any entries about to be
         // evicted or replaced — until the caller releases the returned
         // handles, so this transient sum is the honest high-water mark.
-        inner.stats.peak_bytes =
-            inner.stats.peak_bytes.max(inner.stats.resident_bytes + bytes);
-        let mut out: Vec<H> = inner.graveyard.drain(..).collect();
-        inner.stats.released += out.len() as u64; // deferred backlog leaves here
+        self.peak
+            .fetch_max(self.resident.load(Ordering::Relaxed) + bytes, Ordering::Relaxed);
+        let mut out = Vec::new();
+        self.drain_graveyard_into(&mut out, &mut inner.stats);
+        // a resident install supersedes any host copy of the same content:
+        // the tiers never hold two live copies of one key.
+        if let Some(hi) = Self::host_idx(&inner, key) {
+            let he = inner.host.swap_remove(hi);
+            self.host_resident.fetch_sub(he.bytes, Ordering::Relaxed);
+            inner.stats.released += 1;
+            out.push(he.handle);
+        }
+        let count_admit = |stats: &mut CacheStats| match admit {
+            Admit::Prefill => stats.prefills += 1,
+            Admit::Promote => stats.promotions += 1,
+        };
         if let Some(i) = Self::idx(&inner, key) {
             // the key is already resident (e.g. another stream installed it
             // between this stream's reservation-free admission attempts, or
@@ -530,8 +984,7 @@ impl<H> SharedKvCache<H> {
             // answer is to keep it and hand the NEW handle straight back —
             // with a pin taken for the caller so its later unpin balances.
             if inner.entries[i].pins > 0 {
-                inner.tick += 1;
-                let t = inner.tick;
+                let t = self.next_tick();
                 let e = &mut inner.entries[i];
                 e.pins += 1;
                 e.last_used = t;
@@ -539,85 +992,118 @@ impl<H> SharedKvCache<H> {
                 // the caller just re-demanded this content: a doomed entry
                 // is resurrected, exactly as a lookup hit would.
                 e.doomed = false;
-                // the rejected install still PAID its prefill (the handle
-                // goes straight back for release) — count it, so per-view
-                // prefill counters always sum to the pool's.
-                inner.stats.prefills += 1;
+                // the rejected install still PAID its prefill (or its
+                // promotion copy — the handle goes straight back for
+                // release): count it, so per-view counters always sum to
+                // the pool's.
+                count_admit(&mut inner.stats);
                 inner.stats.released += 1;
                 out.push(handle);
-                self.cv.notify_all();
-                return InstallOutcome { out, evictions: 0, epoch };
+                sh.cv.notify_all();
+                return InstallOutcome { out, demote: Vec::new(), evictions: 0, epoch };
             }
             // replacement is not budget pressure: count the returned handle
             // in `released` only, never in `evictions`.
             let e = inner.entries.swap_remove(i);
             inner.stats.released += 1;
-            inner.stats.resident_bytes -= e.bytes;
+            self.resident.fetch_sub(e.bytes, Ordering::Relaxed);
+            self.entry_count.fetch_sub(1, Ordering::Relaxed);
             out.push(e.handle);
         }
-        inner.tick += 1;
-        let last_used = inner.tick;
-        inner.stats.prefills += 1;
-        inner.stats.resident_bytes += bytes;
+        let t = self.next_tick();
+        count_admit(&mut inner.stats);
+        let new_resident = self.resident.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(new_resident, Ordering::Relaxed);
+        self.entry_count.fetch_add(1, Ordering::Relaxed);
         inner.entries.push(Entry {
             key,
             handle,
             bytes,
             pins: 1,
-            last_used,
+            last_used: t,
             installer: stream,
             doomed: false,
-            // the admission tick is unique per install under the lock, so
+            // the admission tick is unique per install across shards, so
             // it doubles as the entry's identity across re-installs.
-            epoch: last_used,
+            epoch: t,
         });
-        let mut evictions = 0u64;
-        while self.over_budget(&inner) {
-            match Self::lru_unpinned(&inner) {
-                Some(i) => {
-                    out.push(Self::evict_at(&mut inner, i));
-                    evictions += 1;
-                }
-                None => break, // only pinned entries left: run over budget
-            }
-        }
-        // the budget contract, asserted where it is defined — at the end
-        // of every install, under the lock, for every concurrent caller.
-        debug_assert!(Self::budget_ok_inner(&self.policy, &inner),
-                      "install left the pool over budget with evictable entries");
         // waiters blocked on this key's reservation can now hit it.
-        self.cv.notify_all();
-        InstallOutcome { out, evictions, epoch: last_used }
+        sh.cv.notify_all();
+        // the eviction pass needs ALL shard locks (ascending), so this
+        // shard's must drop first. The fresh entry is pinned — never a
+        // victim — and a concurrent pass can only help.
+        drop(inner);
+        let (evicted, demote, evictions) = self.enforce_device_budget();
+        out.extend(evicted);
+        InstallOutcome { out, demote, evictions, epoch: t }
+    }
+
+    /// Complete a demotion: park `host` (the off-device copy of the entry
+    /// `slot` identifies) in the host tier. Returns handles to release —
+    /// LRU host-tier deaths forced by the host byte budget, plus `host`
+    /// itself if the copy became redundant (the key is resident or
+    /// host-parked again by the time the copy finished). The bool reports
+    /// whether the copy was admitted (a counted demotion).
+    fn admit_host(&self, slot: HostSlot, host: H) -> (Vec<H>, bool) {
+        let sh = self.shard(slot.key);
+        let mut inner = self.lock_shard(sh);
+        let redundant = self.policy.host_bytes == 0
+            || Self::idx(&inner, slot.key).is_some()
+            || Self::host_idx(&inner, slot.key).is_some();
+        if redundant {
+            inner.stats.released += 1;
+            return (vec![host], false);
+        }
+        let t = self.next_tick();
+        self.host_resident.fetch_add(slot.bytes, Ordering::Relaxed);
+        inner.stats.demotions += 1;
+        inner.host.push(HostEntry { key: slot.key, handle: host, bytes: slot.bytes, last_used: t });
+        drop(inner);
+        (self.enforce_host_budget(), true)
+    }
+
+    /// Park an abandoned handle (e.g. a promotion checkout whose copy-up
+    /// failed or was never attempted) in the graveyard; it surfaces — and
+    /// counts as released — at the next drain.
+    fn bury(&self, handle: H) {
+        self.lock_graveyard().push(handle);
     }
 
     /// Cancel `stream`'s reservation of `key` (error path). Waiters wake
     /// and re-race: one becomes the new installer.
     fn abort_install(&self, stream: u64, key: u64) {
-        let mut inner = self.lock();
+        let sh = self.shard(key);
+        let mut inner = self.lock_shard(sh);
         if inner.pending.get(&key) == Some(&stream) {
             inner.pending.remove(&key);
-            self.cv.notify_all();
+            sh.cv.notify_all();
         }
     }
 
-    /// Borrow the resident handle of `key` under the lock. The closure must
-    /// be short and non-blocking (it runs inside the pool's critical
-    /// section) — enqueueing a backend submit is fine, waiting a ticket is
-    /// not.
+    /// Borrow the resident handle of `key` under its shard lock. The
+    /// closure must be short and non-blocking (it runs inside the shard's
+    /// critical section) — enqueueing a backend submit is fine, waiting a
+    /// ticket is not.
     fn with_handle<R>(&self, key: u64, f: impl FnOnce(&H) -> R) -> Option<R> {
-        let inner = self.lock();
+        let inner = self.lock_shard(self.shard(key));
         Self::idx(&inner, key).map(|i| f(&inner.entries[i].handle))
     }
 
     fn contains(&self, key: u64) -> bool {
-        let inner = self.lock();
+        let inner = self.lock_shard(self.shard(key));
         Self::idx(&inner, key).is_some()
+    }
+
+    /// Whether `key` has a host-tier copy (not a hit; no LRU refresh).
+    fn contains_host(&self, key: u64) -> bool {
+        let inner = self.lock_shard(self.shard(key));
+        Self::host_idx(&inner, key).is_some()
     }
 
     /// Add one pin (nesting) to a resident entry. Returns the entry's
     /// epoch, or `None` if absent.
     fn pin(&self, key: u64) -> Option<u64> {
-        let mut inner = self.lock();
+        let mut inner = self.lock_shard(self.shard(key));
         match Self::idx(&inner, key) {
             Some(i) => {
                 inner.entries[i].pins += 1;
@@ -634,14 +1120,17 @@ impl<H> SharedKvCache<H> {
     /// resolved as a no-op: decrementing the fresh entry here would let
     /// eviction reclaim KV another stream's in-flight ticket still reads.
     fn unpin(&self, key: u64, epoch: u64) -> bool {
-        let mut inner = self.lock();
+        let mut inner = self.lock_shard(self.shard(key));
         match Self::idx(&inner, key) {
             Some(i) if inner.entries[i].epoch == epoch && inner.entries[i].pins > 0 => {
                 inner.entries[i].pins -= 1;
                 if inner.entries[i].pins == 0 && inner.entries[i].doomed {
                     let e = inner.entries.swap_remove(i);
-                    inner.stats.resident_bytes -= e.bytes;
-                    inner.graveyard.push(e.handle);
+                    self.resident.fetch_sub(e.bytes, Ordering::Relaxed);
+                    self.entry_count.fetch_sub(1, Ordering::Relaxed);
+                    // parked, not returned: counts as released at the
+                    // drain that surfaces it (shards → graveyard order).
+                    self.bury(e.handle);
                 }
                 true
             }
@@ -650,48 +1139,59 @@ impl<H> SharedKvCache<H> {
         }
     }
 
-    /// Remove every entry whose handle the predicate marks stale (its
-    /// device state died with a lane incarnation), pinned or not — pins
-    /// protect live device reads, and a dead incarnation has none left to
-    /// protect. Pins other streams hold on a removed entry become orphans:
-    /// their epoch no longer matches anything, so their eventual unpin is
-    /// a no-op rather than a corruption of a fresh re-install. Returns the
-    /// dead handles (for bookkeeping release to the backend) plus any
-    /// graveyard backlog, and the count quarantined.
+    /// Remove every **device** entry whose handle the predicate marks
+    /// stale (its device state died with a lane incarnation), pinned or
+    /// not — pins protect live device reads, and a dead incarnation has
+    /// none left to protect. Host-tier copies are never swept: they do not
+    /// live on the lane, so they survive and re-promote instead of
+    /// repaying the prefill. Pins other streams hold on a removed entry
+    /// become orphans: their epoch no longer matches anything, so their
+    /// eventual unpin is a no-op rather than a corruption of a fresh
+    /// re-install. Returns the dead handles (for bookkeeping release to
+    /// the backend) plus any graveyard backlog, and the count quarantined.
     pub fn quarantine_stale(&self, mut is_stale: impl FnMut(&H) -> bool) -> (Vec<H>, u64) {
-        let mut inner = self.lock();
-        let mut out: Vec<H> = inner.graveyard.drain(..).collect();
-        inner.stats.released += out.len() as u64;
+        let mut out = Vec::new();
         let mut quarantined = 0u64;
-        let mut i = 0;
-        while i < inner.entries.len() {
-            if is_stale(&inner.entries[i].handle) {
-                let e = inner.entries.swap_remove(i);
-                inner.stats.resident_bytes -= e.bytes;
-                inner.stats.released += 1;
-                inner.stats.quarantined += 1;
-                quarantined += 1;
-                out.push(e.handle);
-            } else {
-                i += 1;
+        for sh in self.shards.iter() {
+            let mut inner = self.lock_shard(sh);
+            let mut i = 0;
+            while i < inner.entries.len() {
+                if is_stale(&inner.entries[i].handle) {
+                    let e = inner.entries.swap_remove(i);
+                    self.resident.fetch_sub(e.bytes, Ordering::Relaxed);
+                    self.entry_count.fetch_sub(1, Ordering::Relaxed);
+                    inner.stats.released += 1;
+                    inner.stats.quarantined += 1;
+                    quarantined += 1;
+                    out.push(e.handle);
+                } else {
+                    i += 1;
+                }
             }
+        }
+        {
+            let sh = &self.shards[0];
+            let mut inner = self.lock_shard(sh);
+            self.drain_graveyard_into(&mut out, &mut inner.stats);
         }
         (out, quarantined)
     }
 
     fn pin_count(&self, key: u64) -> u32 {
-        let inner = self.lock();
+        let inner = self.lock_shard(self.shard(key));
         Self::idx(&inner, key).map(|i| inner.entries[i].pins).unwrap_or(0)
     }
 
     /// Release `key`'s entry. Unpinned: removed now, handle returned (plus
     /// any graveyard backlog). Pinned by anyone: the entry is doomed and
-    /// its handle deferred to the graveyard at last unpin. Returns
-    /// `(handles, deferred?)`.
+    /// its handle deferred to the graveyard at last unpin. A host-tier
+    /// copy of the key dies with it (release means "this content is
+    /// cold"). Returns `(handles, deferred?)`.
     fn release(&self, key: u64) -> (Vec<H>, bool) {
-        let mut inner = self.lock();
-        let mut out: Vec<H> = inner.graveyard.drain(..).collect();
-        inner.stats.released += out.len() as u64;
+        let sh = self.shard(key);
+        let mut inner = self.lock_shard(sh);
+        let mut out = Vec::new();
+        self.drain_graveyard_into(&mut out, &mut inner.stats);
         let mut deferred = false;
         if let Some(i) = Self::idx(&inner, key) {
             if inner.entries[i].pins > 0 {
@@ -701,9 +1201,16 @@ impl<H> SharedKvCache<H> {
             } else {
                 let e = inner.entries.swap_remove(i);
                 inner.stats.released += 1;
-                inner.stats.resident_bytes -= e.bytes;
+                self.resident.fetch_sub(e.bytes, Ordering::Relaxed);
+                self.entry_count.fetch_sub(1, Ordering::Relaxed);
                 out.push(e.handle);
             }
+        }
+        if let Some(hi) = Self::host_idx(&inner, key) {
+            let he = inner.host.swap_remove(hi);
+            self.host_resident.fetch_sub(he.bytes, Ordering::Relaxed);
+            inner.stats.released += 1;
+            out.push(he.handle);
         }
         (out, deferred)
     }
@@ -716,8 +1223,10 @@ impl<H> SharedKvCache<H> {
 /// A per-stream view over a [`SharedKvCache`] pool: the handle every
 /// serving path holds. Carries the stream's own [`CacheStats`], its
 /// cluster-id → content-key bindings, the pins it holds (released on drop),
-/// and any outstanding install reservations (aborted on drop, so waiters on
-/// another thread never hang on an unwound stream).
+/// any outstanding install reservations (aborted on drop, so waiters on
+/// another thread never hang on an unwound stream), and any promotion
+/// checkouts (buried on drop — an unwound stream never strands a host
+/// handle).
 ///
 /// [`KvCacheManager::new`] wraps a fresh private pool — single-stream
 /// behaviour, metric-for-metric the PR 3 manager. [`shared_view`] attaches
@@ -736,6 +1245,10 @@ pub struct KvCacheManager<H> {
     held_pins: HashMap<u64, Vec<u64>>,
     /// pool keys this view holds install reservations for.
     reserved: Vec<u64>,
+    /// host handles checked out by a [`Lookup::MustPromote`], waiting for
+    /// the caller to [`take_promotion`](Self::take_promotion) them
+    /// (key → (host handle, entry bytes)).
+    promotions_out: HashMap<u64, (H, usize)>,
     /// this stream's own counters (residency fields filled at `stats()`).
     view: CacheStats,
 }
@@ -767,6 +1280,7 @@ impl<H> KvCacheManager<H> {
             binds: HashMap::new(),
             held_pins: HashMap::new(),
             reserved: Vec::new(),
+            promotions_out: HashMap::new(),
             view: CacheStats::default(),
         }
     }
@@ -832,18 +1346,28 @@ impl<H> KvCacheManager<H> {
         self.held_pins.entry(key).or_default().push(epoch);
     }
 
-    /// Look up the cluster's entry. A hit refreshes LRU, records the
-    /// stream's hit stats, and takes one pin for the caller. A miss
+    /// Bury an unconsumed promotion checkout for `key`, if any (fresh
+    /// install superseded it, or the caller aborted).
+    fn bury_checkout(&mut self, key: u64) {
+        if let Some((stale, _)) = self.promotions_out.remove(&key) {
+            self.shared.bury(stale);
+        }
+    }
+
+    /// Look up the cluster's entry. A device hit refreshes LRU, records
+    /// the stream's hit stats, and takes one pin for the caller. A
+    /// host-tier hit ([`Lookup::MustPromote`]) checks the host handle out
+    /// — take it with [`take_promotion`](Self::take_promotion), copy it
+    /// back up, and [`install_promoted`](Self::install_promoted). A miss
     /// reserves the key: the caller must [`install`](Self::install) or
     /// [`abort_install`](Self::abort_install). Blocks while another stream
     /// installs the same key, then hits the fresh entry — the single-flight
-    /// discipline that makes N racing streams pay one prefill.
+    /// discipline that makes N racing streams pay one prefill (or one
+    /// promotion copy).
     pub fn lookup(&mut self, cluster_id: usize) -> Lookup {
         let key = self.key_for(cluster_id);
-        let (outcome, bytes, shared, epoch) =
-            self.shared.lookup_or_reserve(self.stream, key);
-        match outcome {
-            Lookup::Hit => {
+        match self.shared.lookup_or_reserve(self.stream, key) {
+            Found::Hit { bytes, shared, epoch } => {
                 self.note_pin(key, epoch);
                 self.view.hits += 1;
                 self.view.bytes_saved += bytes as u64;
@@ -851,13 +1375,52 @@ impl<H> KvCacheManager<H> {
                     self.view.shared_hits += 1;
                     self.view.dedup_bytes_saved += bytes as u64;
                 }
+                Lookup::Hit
             }
-            Lookup::MustInstall => {
+            Found::Promote { handle, bytes } => {
+                self.view.misses += 1;
+                self.view.host_hits += 1;
+                self.reserved.push(key);
+                self.promotions_out.insert(key, (handle, bytes));
+                Lookup::MustPromote
+            }
+            Found::Reserved => {
                 self.view.misses += 1;
                 self.reserved.push(key);
+                Lookup::MustInstall
             }
         }
-        outcome
+    }
+
+    /// The host handle (and entry bytes) checked out by this cluster's
+    /// [`Lookup::MustPromote`]. The caller owns the returned handle: copy
+    /// it back up (`Backend::promote_kv` — the backend consumes the host
+    /// copy on success) and [`install_promoted`](Self::install_promoted)
+    /// the device handle, or [`abort_install`](Self::abort_install) on
+    /// failure after releasing the host handle to the backend.
+    pub fn take_promotion(&mut self, cluster_id: usize) -> Option<(H, usize)> {
+        let key = self.key_of(cluster_id);
+        self.promotions_out.remove(&key)
+    }
+
+    /// Shared implementation of the install family.
+    fn admit(&mut self, cluster_id: usize, handle: H, bytes: usize, kind: Admit) -> TieredOut<H> {
+        let key = self.key_for(cluster_id);
+        self.reserved.retain(|&k| k != key);
+        // an unconsumed promotion checkout for this key is superseded by
+        // the fresh install: bury it (it surfaces at the next drain). This
+        // is the graceful path for callers that answered MustPromote with
+        // a plain prefill install.
+        self.bury_checkout(key);
+        let got = self.shared.install(self.stream, key, handle, bytes, kind);
+        self.note_pin(key, got.epoch);
+        match kind {
+            Admit::Prefill => self.view.prefills += 1,
+            Admit::Promote => self.view.promotions += 1,
+        }
+        self.view.evictions += got.evictions;
+        self.view.released += (got.out.len() + got.demote.len()) as u64;
+        TieredOut { release: got.out, demote: got.demote }
     }
 
     /// Install the KV cache of `cluster_id`'s representative, fulfilling
@@ -866,29 +1429,58 @@ impl<H> KvCacheManager<H> {
     /// admitted with one pin held by this view. Returns every handle the
     /// caller must release on the engine: budget evictions, a replaced
     /// same-key entry, the rejected new handle itself if a pinned resident
-    /// won the race, and any deferred-release backlog.
+    /// won the race, and any deferred-release backlog. **Compat wrapper**:
+    /// with the host tier enabled, demotion work items are flattened into
+    /// plain releases (the host-tier opportunity is dropped) — tier-aware
+    /// callers use [`install_tiered`](Self::install_tiered).
     pub fn install(&mut self, cluster_id: usize, handle: H, bytes: usize) -> Vec<H> {
-        let key = self.key_for(cluster_id);
-        self.reserved.retain(|&k| k != key);
-        let got = self.shared.install(self.stream, key, handle, bytes);
-        self.note_pin(key, got.epoch);
-        self.view.prefills += 1;
-        self.view.evictions += got.evictions;
-        self.view.released += got.out.len() as u64;
-        got.out
+        self.install_tiered(cluster_id, handle, bytes).into_release_all()
+    }
+
+    /// Tier-aware install: like [`install`](Self::install), but budget
+    /// victims come back as [`Demotion`] work items when the host tier is
+    /// enabled. The caller demotes each (`Backend::demote_kv`) and
+    /// completes with [`admit_host`](Self::admit_host).
+    pub fn install_tiered(&mut self, cluster_id: usize, handle: H, bytes: usize) -> TieredOut<H> {
+        self.admit(cluster_id, handle, bytes, Admit::Prefill)
+    }
+
+    /// Complete a promotion: install the device handle produced by copying
+    /// a checked-out host entry back up. Identical admission semantics to
+    /// [`install_tiered`](Self::install_tiered), but the pool counts a
+    /// `promotion` instead of a `prefill` — the stream repaid a copy, not
+    /// a prefill.
+    pub fn install_promoted(&mut self, cluster_id: usize, handle: H, bytes: usize) -> TieredOut<H> {
+        self.admit(cluster_id, handle, bytes, Admit::Promote)
+    }
+
+    /// Complete a demotion: hand the host copy of `slot`'s entry to the
+    /// pool. Returns handles to release — LRU host-tier deaths forced by
+    /// `CachePolicy::host_bytes`, or the now-redundant copy itself if the
+    /// key became resident again while the copy was in flight.
+    pub fn admit_host(&mut self, slot: HostSlot, host: H) -> Vec<H> {
+        let (out, admitted) = self.shared.admit_host(slot, host);
+        if admitted {
+            self.view.demotions += 1;
+        }
+        self.view.released += out.len() as u64;
+        out
     }
 
     /// Cancel this view's install reservation of a cluster (error paths;
-    /// dropping the view aborts all of them).
+    /// dropping the view aborts all of them). An unconsumed promotion
+    /// checkout is buried — waiters wake, find both tiers empty, and
+    /// re-race a fresh prefill.
     pub fn abort_install(&mut self, cluster_id: usize) {
         let key = self.key_of(cluster_id);
+        self.bury_checkout(key);
         if let Some(i) = self.reserved.iter().position(|&k| k == key) {
             self.reserved.swap_remove(i);
             self.shared.abort_install(self.stream, key);
         }
     }
 
-    /// Borrow the resident handle under the pool lock. Keep `f` short and
+    /// Borrow the resident handle under the shard lock. Keep `f` short and
     /// non-blocking: enqueueing a backend submit is the intended use. The
     /// caller should hold a pin (lookup/install) so the entry cannot vanish
     /// between its hit and this access.
@@ -896,9 +1488,15 @@ impl<H> KvCacheManager<H> {
         self.shared.with_handle(self.key_of(cluster_id), f)
     }
 
-    /// Non-mutating residency probe (no stats, no LRU refresh).
+    /// Non-mutating device-residency probe (no stats, no LRU refresh).
     pub fn contains(&self, cluster_id: usize) -> bool {
         self.shared.contains(self.key_of(cluster_id))
+    }
+
+    /// Non-mutating host-tier probe (no stats, no LRU refresh, no
+    /// checkout).
+    pub fn contains_host(&self, cluster_id: usize) -> bool {
+        self.shared.contains_host(self.key_of(cluster_id))
     }
 
     /// Protect a resident entry from eviction (pins nest, and count toward
@@ -954,13 +1552,15 @@ impl<H> KvCacheManager<H> {
             .unwrap_or(0)
     }
 
-    /// Invalidate every pool entry whose device handle the predicate marks
-    /// stale — in serving, `|h| !backend.kv_current(h)` after a
-    /// [`BackendError::LaneDead`]. Removed entries' handles come back for
-    /// bookkeeping release; pins any view held on them (including this
-    /// one's) become orphans whose unpins are no-ops, so callers should
-    /// still unpin to balance their own accounting. See the module docs'
-    /// quarantine contract.
+    /// Invalidate every **device** pool entry whose handle the predicate
+    /// marks stale — in serving, `|h| !backend.kv_current(h)` after a
+    /// [`BackendError::LaneDead`]. Host-tier copies are never swept: they
+    /// survive the lane death and re-promote instead of repaying the
+    /// prefill. Removed entries' handles come back for bookkeeping
+    /// release; pins any view held on them (including this one's) become
+    /// orphans whose unpins are no-ops, so callers should still unpin to
+    /// balance their own accounting. See the module docs' quarantine
+    /// contract.
     ///
     /// [`BackendError::LaneDead`]: crate::runtime::BackendError::LaneDead
     pub fn quarantine_stale(&mut self, is_stale: impl FnMut(&H) -> bool) -> Vec<H> {
@@ -971,9 +1571,10 @@ impl<H> KvCacheManager<H> {
     }
 
     /// Release one cluster's entry (TTL sweeps). Unpinned: handles come
-    /// back now. Pinned by any stream: deferred — the entry is doomed and
-    /// its handle surfaces through a later drain. Either way the returned
-    /// vector includes any deferred-release backlog that became safe.
+    /// back now (a host-tier copy of the key dies with it). Pinned by any
+    /// stream: deferred — the entry is doomed and its handle surfaces
+    /// through a later drain. Either way the returned vector includes any
+    /// deferred-release backlog that became safe.
     pub fn release(&mut self, cluster_id: usize) -> Vec<H> {
         let key = self.key_of(cluster_id);
         let (out, deferred) = self.shared.release(key);
@@ -1005,11 +1606,11 @@ impl<H> KvCacheManager<H> {
     }
 
     /// End-of-stream cleanup. Private view: drain the whole pool (the
-    /// serial paths' behaviour), pinned or not. Shared view: drop only this
-    /// stream's pins and reservations — other streams' entries stay warm —
-    /// and return any deferred handles that became safe; the pool owner
-    /// drains the rest via [`SharedKvCache::drain_all`] once every stream
-    /// is done.
+    /// serial paths' behaviour), both tiers, pinned or not. Shared view:
+    /// drop only this stream's pins, reservations, and checkouts — other
+    /// streams' entries stay warm — and return any deferred handles that
+    /// became safe; the pool owner drains the rest via
+    /// [`SharedKvCache::drain_all`] once every stream is done.
     pub fn release_all(&mut self) -> Vec<H> {
         self.drop_holds();
         let out = if self.private {
@@ -1021,8 +1622,12 @@ impl<H> KvCacheManager<H> {
         out
     }
 
-    /// Abort reservations and drop held pins (shared Drop/cleanup path).
+    /// Abort reservations, bury promotion checkouts, and drop held pins
+    /// (shared Drop/cleanup path).
     fn drop_holds(&mut self) {
+        for (_, (handle, _)) in std::mem::take(&mut self.promotions_out) {
+            self.shared.bury(handle);
+        }
         for key in std::mem::take(&mut self.reserved) {
             self.shared.abort_install(self.stream, key);
         }
@@ -1033,7 +1638,7 @@ impl<H> KvCacheManager<H> {
         }
     }
 
-    /// Entries resident in the underlying pool (all streams').
+    /// Device-resident entries in the underlying pool (all streams').
     pub fn len(&self) -> usize {
         self.shared.len()
     }
@@ -1059,15 +1664,18 @@ impl<H> KvCacheManager<H> {
     }
 
     /// This stream's accounting, with pool-level residency: `hits`/
-    /// `misses`/`prefills`/`evictions`/`released`/`bytes_saved` (and the
-    /// `shared_hits`/`dedup_bytes_saved` cross-stream split) count this
-    /// view's own operations; `resident_bytes`/`peak_bytes` snapshot the
-    /// pool. For a private view the two coincide with the pool totals.
+    /// `misses`/`prefills`/`evictions`/`released`/`bytes_saved` (the
+    /// `shared_hits`/`dedup_bytes_saved` cross-stream split and the
+    /// `demotions`/`promotions`/`host_hits` tier counters) count this
+    /// view's own operations; `resident_bytes`/`peak_bytes`/`host_bytes`
+    /// snapshot the pool. For a private view the two coincide with the
+    /// pool totals.
     pub fn stats(&self) -> CacheStats {
         let pool = self.shared.stats();
         CacheStats {
             resident_bytes: pool.resident_bytes,
             peak_bytes: pool.peak_bytes,
+            host_bytes: pool.host_bytes,
             ..self.view
         }
     }
@@ -1075,17 +1683,18 @@ impl<H> KvCacheManager<H> {
 
 impl<H> Drop for KvCacheManager<H> {
     /// A view dropped mid-error must not strand other streams: outstanding
-    /// install reservations are aborted (waiters wake and re-race) and this
-    /// stream's pins are dropped (its in-flight tickets are dead by now).
-    /// Handles the pool still holds are NOT drained here — the serve paths
-    /// drain on success via `release_all`/`drain_all`; after an unwind the
-    /// pool's handles are engine-owned ids the engine reclaims at shutdown
-    /// (a bounded leak, not corruption).
+    /// install reservations are aborted (waiters wake and re-race),
+    /// promotion checkouts are buried (the host handle surfaces at the
+    /// next drain), and this stream's pins are dropped (its in-flight
+    /// tickets are dead by now). Handles the pool still holds are NOT
+    /// drained here — the serve paths drain on success via
+    /// `release_all`/`drain_all`; after an unwind the pool's handles are
+    /// engine-owned ids the engine reclaims at shutdown (a bounded leak,
+    /// not corruption).
     fn drop(&mut self) {
         self.drop_holds();
     }
 }
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1759,5 +2368,276 @@ mod tests {
         assert_ne!(k("bb", &[1, 2]), k("bb", &[2, 1]), "order matters");
         assert_ne!(k("bb", &[1, 2]), k("bb2", &[1, 2]));
         assert_ne!(RepKey::of_parts(["ab", "c"], []), RepKey::of_parts(["a", "bc"], []));
+    }
+
+    // -- host-tier unit tests ------------------------------------------------
+
+    /// Tiered policy: one device slot, roomy host tier.
+    fn tiered(host_bytes: usize) -> CachePolicy {
+        CachePolicy::new(usize::MAX, 1).with_host_bytes(host_bytes)
+    }
+
+    #[test]
+    fn demote_then_promote_roundtrip_bookkeeping() {
+        let mut m: KvCacheManager<u32> = KvCacheManager::new(tiered(1 << 20));
+        assert_eq!(m.lookup(0), Lookup::MustInstall);
+        let out = m.install_tiered(0, 10, 64);
+        assert!(out.release.is_empty() && out.demote.is_empty());
+        m.unpin(0);
+
+        // installing cluster 1 overflows the single device slot: cluster
+        // 0's handle leaves as a Demotion work item, not a release.
+        assert_eq!(m.lookup(1), Lookup::MustInstall);
+        let out = m.install_tiered(1, 11, 64);
+        assert!(out.release.is_empty(), "host tier on: eviction does not destroy");
+        assert_eq!(out.demote.len(), 1);
+        let d = out.demote.into_iter().next().unwrap();
+        assert_eq!(d.handle, 10);
+        assert_eq!(d.slot.bytes(), 64);
+        m.unpin(1);
+
+        // the caller "copies" 10 off-device as host handle 1010.
+        assert!(m.admit_host(d.slot, 1010).is_empty());
+        assert!(m.contains_host(0));
+        assert!(!m.contains(0));
+        assert_eq!(m.pool().host_resident_bytes(), 64);
+        assert_eq!(m.pool().host_len(), 1);
+
+        // a lookup of cluster 0 finds the host copy: checkout + promote.
+        assert_eq!(m.lookup(0), Lookup::MustPromote);
+        let (host, bytes) = m.take_promotion(0).expect("checkout must be stashed");
+        assert_eq!((host, bytes), (1010, 64));
+        assert!(!m.contains_host(0), "checkout removes the host copy");
+        // promoting installs the fresh device handle; cluster 1 demotes in
+        // turn (single device slot).
+        let out = m.install_promoted(0, 20, 64);
+        assert!(out.release.is_empty());
+        assert_eq!(out.demote.len(), 1);
+        assert_eq!(out.demote[0].handle, 11);
+        m.unpin(0);
+
+        let s = m.stats();
+        assert_eq!(s.prefills, 2, "promotion is not a prefill");
+        assert_eq!(s.promotions, 1);
+        assert_eq!(s.host_hits, 1);
+        assert_eq!(s.demotions, 1);
+        assert_eq!(s.misses, 3, "a host hit still counts as a device miss");
+        assert_eq!(s.evictions, 2, "demotions are still budget evictions");
+        assert!(m.pool().consistent());
+        // drop the un-admitted second demotion + drain: every handle
+        // surfaces exactly once across tiers.
+        let mut all = m.release_all();
+        all.push(out.demote.into_iter().next().unwrap().handle);
+        all.sort_unstable();
+        assert_eq!(all, vec![11, 20]);
+    }
+
+    #[test]
+    fn install_supersedes_host_copy_of_same_key() {
+        let mut m: KvCacheManager<u32> = KvCacheManager::new(tiered(1 << 20));
+        assert_eq!(m.lookup(0), Lookup::MustInstall);
+        m.install_tiered(0, 10, 8);
+        m.unpin(0);
+        assert_eq!(m.lookup(1), Lookup::MustInstall);
+        let out = m.install_tiered(1, 11, 8);
+        let d = out.demote.into_iter().next().unwrap();
+        assert!(m.admit_host(d.slot, 1010).is_empty());
+        m.unpin(1);
+
+        // a caller that answers MustPromote with a plain prefill: the
+        // stale checkout is buried, the host copy never resurfaces as a
+        // second live copy, and the fresh install wins.
+        assert_eq!(m.lookup(0), Lookup::MustPromote);
+        let out = m.install_tiered(0, 20, 8);
+        assert!(!m.contains_host(0), "checkout already removed the host copy");
+        assert_eq!(out.release, vec![1010],
+                   "the buried checkout surfaces exactly once, at the install's drain");
+        assert_eq!(out.demote.len(), 1, "cluster 1 demotes under the budget");
+        assert_eq!(out.demote[0].handle, 11);
+        m.unpin(0);
+        assert!(m.pool().consistent());
+        assert_eq!(m.release_all(), vec![20]);
+    }
+
+    #[test]
+    fn host_budget_exhaustion_kills_coldest_copy() {
+        // host tier fits exactly one 64-byte copy: admitting a second
+        // demotion kills the first (LRU demotion-to-death).
+        let mut m: KvCacheManager<u32> = KvCacheManager::new(tiered(64));
+        assert_eq!(m.lookup(0), Lookup::MustInstall);
+        m.install_tiered(0, 10, 64);
+        m.unpin(0);
+        assert_eq!(m.lookup(1), Lookup::MustInstall);
+        let d0 = m.install_tiered(1, 11, 64).demote.into_iter().next().unwrap();
+        m.unpin(1);
+        assert!(m.admit_host(d0.slot, 1010).is_empty());
+        assert_eq!(m.lookup(2), Lookup::MustInstall);
+        let d1 = m.install_tiered(2, 12, 64).demote.into_iter().next().unwrap();
+        m.unpin(2);
+        let dead = m.admit_host(d1.slot, 1011);
+        assert_eq!(dead, vec![1010], "oldest host copy dies under the budget");
+        assert_eq!(m.pool().host_resident_bytes(), 64);
+        // the killed copy's key is now a true miss again.
+        assert_eq!(m.lookup(0), Lookup::MustInstall);
+        m.abort_install(0);
+        assert!(m.contains_host(1), "survivor still promotable");
+        assert!(m.pool().consistent());
+        m.release_all();
+    }
+
+    #[test]
+    fn host_tier_disabled_keeps_legacy_eviction() {
+        let mut m: KvCacheManager<u32> =
+            KvCacheManager::new(CachePolicy::new(usize::MAX, 1));
+        assert_eq!(m.lookup(0), Lookup::MustInstall);
+        m.install_tiered(0, 10, 8);
+        m.unpin(0);
+        assert_eq!(m.lookup(1), Lookup::MustInstall);
+        let out = m.install_tiered(1, 11, 8);
+        assert_eq!(out.release, vec![10], "host tier off: eviction destroys");
+        assert!(out.demote.is_empty());
+        assert_eq!(m.stats().demotions, 0);
+        m.unpin(1);
+        m.release_all();
+    }
+
+    #[test]
+    fn redundant_host_admission_is_released_not_counted() {
+        let mut m: KvCacheManager<u32> = KvCacheManager::new(tiered(1 << 20));
+        assert_eq!(m.lookup(0), Lookup::MustInstall);
+        m.install_tiered(0, 10, 8);
+        m.unpin(0);
+        assert_eq!(m.lookup(1), Lookup::MustInstall);
+        let d = m.install_tiered(1, 11, 8).demote.into_iter().next().unwrap();
+        m.unpin(1);
+        // before the demotion copy lands, the key is re-prefilled: the
+        // slow copy is redundant and must come straight back for release.
+        assert_eq!(m.lookup(0), Lookup::MustInstall);
+        let out = m.install_tiered(0, 20, 8);
+        assert_eq!(out.demote.len(), 1, "cluster 1 demotes in turn");
+        m.unpin(0);
+        let back = m.admit_host(d.slot, 1010);
+        assert_eq!(back, vec![1010], "redundant copy released, not admitted");
+        assert_eq!(m.stats().demotions, 0);
+        assert_eq!(m.pool().host_len(), 0);
+        assert!(m.pool().consistent());
+        m.release_all();
+    }
+
+    #[test]
+    fn quarantine_spares_host_tier_copies() {
+        let mut m: KvCacheManager<u32> = KvCacheManager::new(tiered(1 << 20));
+        assert_eq!(m.lookup(0), Lookup::MustInstall);
+        m.install_tiered(0, 10, 8);
+        m.unpin(0);
+        assert_eq!(m.lookup(1), Lookup::MustInstall);
+        let d = m.install_tiered(1, 11, 8).demote.into_iter().next().unwrap();
+        assert!(m.admit_host(d.slot, 1010).is_empty());
+
+        // the lane dies: every device handle is stale, the host copy is not.
+        let dead = m.quarantine_stale(|_| true);
+        assert_eq!(dead, vec![11], "only the device entry is swept");
+        assert!(m.contains_host(0), "host copy survives the lane death");
+        assert_eq!(m.lookup(0), Lookup::MustPromote,
+                   "post-quarantine lookup re-promotes instead of repaying");
+        let (host, _) = m.take_promotion(0).unwrap();
+        assert_eq!(host, 1010);
+        let out = m.install_promoted(0, 20, 8);
+        assert!(out.release.is_empty() && out.demote.is_empty());
+        m.unpin(1); // orphaned by the sweep: no-op
+        m.unpin(0);
+        assert_eq!(m.stats().promotions, 1);
+        assert!(m.pool().consistent());
+        assert_eq!(m.release_all(), vec![20]);
+    }
+
+    #[test]
+    fn view_tier_counters_sum_to_pool() {
+        // two shared views drive demote/promote traffic; per-view tier
+        // counters must sum to the pool's, and `released` must agree at
+        // every drain point.
+        let pool: Arc<SharedKvCache<u32>> = Arc::new(SharedKvCache::new(
+            CachePolicy::new(usize::MAX, 1).with_host_bytes(1 << 20),
+        ));
+        let mut a = KvCacheManager::shared_view(&pool);
+        let mut b = KvCacheManager::shared_view(&pool);
+        let ka = RepKey::of_parts(["bb"], [1]);
+        let kb = RepKey::of_parts(["bb"], [2]);
+        a.bind(0, ka);
+        b.bind(0, kb);
+        b.bind(1, ka);
+
+        assert_eq!(a.lookup(0), Lookup::MustInstall);
+        a.install_tiered(0, 10, 8);
+        a.unpin(0);
+        assert_eq!(b.lookup(0), Lookup::MustInstall);
+        let d = b.install_tiered(0, 11, 8).demote.into_iter().next().unwrap();
+        b.unpin(0);
+        assert!(b.admit_host(d.slot, 1010).is_empty());
+        assert_eq!(b.lookup(1), Lookup::MustPromote, "B promotes A's demoted rep");
+        let (host, bytes) = b.take_promotion(1).unwrap();
+        assert_eq!(host, 1010);
+        let _ = b.install_promoted(1, 20, bytes);
+        b.unpin(1);
+
+        let (pa, pb, pp) = (a.stats(), b.stats(), pool.stats());
+        assert_eq!(pa.prefills + pb.prefills, pp.prefills);
+        assert_eq!(pa.misses + pb.misses, pp.misses);
+        assert_eq!(pa.demotions + pb.demotions, pp.demotions);
+        assert_eq!(pa.promotions + pb.promotions, pp.promotions);
+        assert_eq!(pa.host_hits + pb.host_hits, pp.host_hits);
+        assert_eq!(pa.evictions + pb.evictions, pp.evictions);
+        assert_eq!(pa.released + pb.released, pp.released);
+        assert_eq!(pp.demotions, 1);
+        assert_eq!(pp.promotions, 1);
+        assert_eq!(pp.host_hits, 1);
+        // final drain: remaining handles surface exactly once, and the
+        // pool's released counter ends equal to every handle ever returned.
+        let mut drained = pool.drain_all();
+        drained.extend(
+            b.install_tiered(0, 30, 8)
+                .into_release_all(),
+        );
+        b.unpin(0);
+        drained.extend(pool.drain_all());
+        drained.sort_unstable();
+        assert!(pool.consistent());
+        assert!(drained.contains(&20) || drained.contains(&11));
+    }
+
+    #[test]
+    fn sharded_pool_single_shard_degenerates() {
+        // shards = 1 must behave exactly like the pre-sharding pool.
+        let mut m: KvCacheManager<u32> =
+            KvCacheManager::new(CachePolicy::new(usize::MAX, 2).with_shards(1));
+        serve_install(&mut m, 0, 10, 1);
+        m.unpin(0);
+        serve_install(&mut m, 1, 11, 1);
+        m.unpin(1);
+        assert!(m.lookup(0).is_hit());
+        m.unpin(0);
+        let evicted = serve_install(&mut m, 2, 12, 1);
+        assert_eq!(evicted, vec![11]);
+        assert_eq!(m.pool().shard_lock_stats().len(), 1);
+        m.unpin(2);
+        m.release_all();
+    }
+
+    #[test]
+    fn shard_lock_stats_split_covers_all_shards() {
+        let pool: Arc<SharedKvCache<u32>> =
+            Arc::new(SharedKvCache::new(CachePolicy::unbounded().with_shards(4)));
+        let mut v = KvCacheManager::shared_view(&pool);
+        for cid in 0..16 {
+            assert_eq!(v.lookup(cid), Lookup::MustInstall);
+            v.install(cid, cid as u32, 1);
+            v.unpin(cid);
+        }
+        let per_shard = pool.shard_lock_stats();
+        assert_eq!(per_shard.len(), 4);
+        let summed: u64 = per_shard.iter().map(|s| s.acquisitions).sum();
+        assert_eq!(summed, pool.lock_stats().acquisitions);
+        assert!(summed >= 32, "every op takes some shard lock: {summed}");
+        pool.drain_all();
     }
 }

@@ -99,7 +99,10 @@
 //! [`Transient`] wait failure is retried in place; a [`LaneDead`] failure
 //! additionally quarantines every cache entry whose device handle belongs
 //! to the dead lane incarnation ([`KvCacheManager::quarantine_stale`]) and
-//! *repays* the representative prefill — single-flight still coalesces
+//! *repays* the representative prefill — unless a host-tier copy survived
+//! (host handles outlive lane incarnations, so the sweep spares them; see
+//! the `cache` module docs), in which case recovery promotes the copy back
+//! to the device instead of repaying. Single-flight still coalesces
 //! racing repayers, and epoch-tagged pins keep a foreign stream's orphaned
 //! unpin from ever stripping the repaid entry. Each backend stage of a
 //! query (encode / prefill / extend / generate) draws on a bounded budget
@@ -124,7 +127,10 @@
 //! *stall* at the query's turn, and a lookup that blocked on another
 //! stream's in-flight install of the same representative is charged that
 //! stall in PFTT (it truly waited, even though the prefill itself was paid
-//! elsewhere). The per-query PFTT/TTFT (and their hit/miss split) therefore
+//! elsewhere). A host-tier hit is charged its promotion copy in PFTT and
+//! `llm_time` but never in `shared_prefill_time` — the tier's win is
+//! exactly that pot's shrinkage at equal answers. The per-query PFTT/TTFT
+//! (and their hit/miss split) therefore
 //! mean exactly what they meant under serial serving; the pipeline win
 //! surfaces in `BatchMetrics::wall_time` / `overlap_time` / per-lane
 //! `lane_llm` / `lane_gnn`, and the sharing win in
@@ -133,14 +139,16 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use crate::cache::{CacheStats, KvCacheManager, LockStats, RepKey, SharedKvCache};
+use crate::cache::{CacheStats, KvCacheManager, LockStats, Lookup, RepKey,
+                   SharedKvCache, TieredOut};
 use crate::data::{Dataset, Query};
 use crate::embed::sq_dist;
 use crate::graph::{Subgraph, TextualGraph};
 use crate::metrics::{LaneTimes, QueryLatency, ReliabilityStats, Timer};
 use crate::retrieval::{GraphFeatures, Retriever};
-use crate::runtime::{pack_subgraph, BackendError, KvHandle, PackedSubgraph,
-                     PendingEncode, PendingExtend, PendingGenerate};
+use crate::runtime::{pack_subgraph, BackendError, CallTiming, KvHandle,
+                     PackedSubgraph, PendingEncode, PendingExtend,
+                     PendingGenerate};
 
 use super::session::PreparedQuestion;
 use super::{argmax, Coordinator, ServeReport};
@@ -515,6 +523,50 @@ impl<'e> Coordinator<'e> {
         cache.stats().quarantined.saturating_sub(before)
     }
 
+    /// Carry out a tier-aware install's outputs: release the dead handles
+    /// on the backend, and demote each budget victim to the host tier
+    /// ([`crate::runtime::Backend::demote_kv`] +
+    /// [`KvCacheManager::admit_host`]), releasing any LRU host-tier deaths
+    /// the admission forces. A backend without a host tier (or a failed
+    /// copy) has already released the device handle inside `demote_kv` —
+    /// the victim simply dies, which is exactly the pre-tier behaviour.
+    fn finish_install(&self, cache: &mut KvCacheManager<KvHandle>,
+                      out: TieredOut<KvHandle>) {
+        self.engine.release_many(out.release);
+        for d in out.demote {
+            if let Ok(host) = self.engine.demote_kv(d.handle) {
+                let dead = cache.admit_host(d.slot, host);
+                self.engine.release_many(dead);
+            }
+        }
+    }
+
+    /// Blocking promotion of a checked-out host copy on a recovery path
+    /// (the fast path overlaps the copy in its ticket shadow instead — see
+    /// step 4 of the scheduler). `Some(t)` means the entry is
+    /// device-resident again with this stream's pin held, and `t` is the
+    /// promotion's lane timing for the caller's accounting. `None` means
+    /// no checkout existed or the copy could not be promoted — the host
+    /// handle has been released, and the caller (still holding the key's
+    /// install reservation) repays the prefill instead.
+    fn promote_on_recovery(&self, cache: &mut KvCacheManager<KvHandle>,
+                           cid: usize) -> Option<CallTiming> {
+        let (host, bytes) = cache.take_promotion(cid)?;
+        match self.engine.promote_kv(&host) {
+            Ok((kv, t)) => {
+                let out = cache.install_promoted(cid, kv, bytes);
+                self.finish_install(cache, out);
+                Some(t)
+            }
+            Err(_) => {
+                // the promote ticket only borrows the host copy, so after
+                // a failure it is still ours to free.
+                self.engine.release(host);
+                None
+            }
+        }
+    }
+
     /// [`serve_online_with_cache`] over pre-built retrieval features, so
     /// the multi-stream path builds them once for the whole fleet.
     ///
@@ -634,7 +686,22 @@ impl<'e> Coordinator<'e> {
                                 // never re-queried, or this stream would
                                 // single-flight-block on itself.
                                 cache.unpin(dec.cid);
-                                if !cache.lookup(dec.cid).is_hit() {
+                                let look = cache.lookup(dec.cid);
+                                let mut resident = look.is_hit();
+                                // a host-tier copy survived the lane death:
+                                // promote it back up instead of repaying
+                                // the prefill (blocking — recovery is off
+                                // the fast path already).
+                                if matches!(look, Lookup::MustPromote) {
+                                    if let Some(t) =
+                                        self.promote_on_recovery(cache, dec.cid)
+                                    {
+                                        lane_llm.add(&t);
+                                        *llm_time += t.secs();
+                                        resident = true;
+                                    }
+                                }
+                                if !resident {
                                     let cl = &clusters[dec.cid];
                                     let (tokens, _plen) =
                                         session.prefix_tokens(&ds.graph, &cl.rep);
@@ -659,9 +726,10 @@ impl<'e> Coordinator<'e> {
                                             }
                                         }
                                     };
-                                    let evicted =
-                                        cache.install(dec.cid, kv, entry_bytes);
-                                    self.engine.release_many(evicted);
+                                    let out =
+                                        cache.install_tiered(dec.cid, kv,
+                                                             entry_bytes);
+                                    self.finish_install(cache, out);
                                 }
                                 let pending_ext = cache
                                     .with_handle(dec.cid, |kv| {
@@ -876,10 +944,59 @@ impl<'e> Coordinator<'e> {
             //    is charged to this query's PFTT — it really waited, even
             //    though the prefill was paid elsewhere.
             let t_lookup = Timer::start();
-            let hit = cache.lookup(cid).is_hit();
+            let look = cache.lookup(cid);
             let lookup_stall = t_lookup.secs();
+            let hit = look.is_hit();
             let mut rebuild_secs = 0.0;
-            let mut prefill_secs = if hit {
+            let mut promote_secs = 0.0;
+            // 4b) host-tier hit: the representative was demoted under the
+            //    device budget, not destroyed. Copy it back up — the
+            //    promotion is submitted first and the prep queue refills
+            //    in its ticket shadow, so the stream is charged the copy
+            //    latency minus the overlapped prep: strictly less than a
+            //    repaid prefill under any sane copy bandwidth. A failed
+            //    promotion releases the surviving host copy and falls
+            //    through to the plain miss path below — the key's install
+            //    reservation from the lookup is still held either way, so
+            //    racing streams stay single-flight-blocked until the
+            //    install (promoted or prefilled) fulfills it.
+            let mut need_prefill = matches!(look, Lookup::MustInstall);
+            if matches!(look, Lookup::MustPromote) {
+                match cache.take_promotion(cid) {
+                    Some((host, bytes)) => {
+                        let submitted = self.engine.submit_promote(&host);
+                        if submitted.is_ok() {
+                            top_up(&mut queue, &mut stream, &mut overlap_time,
+                                   true)?;
+                        }
+                        match submitted.and_then(|p| p.wait_timed()) {
+                            Ok((kv, t)) => {
+                                lane_llm.add(&t);
+                                promote_secs = t.secs();
+                                let out =
+                                    cache.install_promoted(cid, kv, bytes);
+                                self.finish_install(cache, out);
+                            }
+                            Err(e) => {
+                                // the promote ticket only borrows the host
+                                // copy: free it, then repay the prefill.
+                                self.engine.release(host);
+                                let mut budget = RetryBudget::new(&self.cfg);
+                                budget.admit(&e, &t_query)?;
+                                rel.retries += 1;
+                                degraded = true;
+                                if e.is_lane_dead() {
+                                    rel.quarantined_entries +=
+                                        self.quarantine_dead(cache);
+                                }
+                                need_prefill = true;
+                            }
+                        }
+                    }
+                    None => need_prefill = true,
+                }
+            }
+            let mut prefill_secs = if !need_prefill {
                 0.0
             } else {
                 // an evicted-miss re-verbalizes the frozen representative.
@@ -936,9 +1053,11 @@ impl<'e> Coordinator<'e> {
                 let secs = prefill_t.secs();
                 // admitted pinned, fulfilling the lookup's reservation
                 // (waiting streams wake and hit); colder representatives
-                // may fall out — never a pinned one, on any stream.
-                let evicted = cache.install(cid, kv, entry_bytes);
-                self.engine.release_many(evicted);
+                // may fall out — never a pinned one, on any stream — and
+                // fall to the host tier instead of dying when one is
+                // configured.
+                let out = cache.install_tiered(cid, kv, entry_bytes);
+                self.finish_install(cache, out);
                 secs
             };
             // (prefill_total is charged after the extend ladder below, so a
@@ -990,7 +1109,20 @@ impl<'e> Coordinator<'e> {
                             // own install reservation would single-flight-
                             // block this stream on itself.
                             cache.unpin(cid);
-                            if !cache.lookup(cid).is_hit() {
+                            let look = cache.lookup(cid);
+                            let mut resident = look.is_hit();
+                            // a host-tier copy survived the lane death:
+                            // promote it instead of repaying the prefill.
+                            if matches!(look, Lookup::MustPromote) {
+                                if let Some(t) =
+                                    self.promote_on_recovery(cache, cid)
+                                {
+                                    lane_llm.add(&t);
+                                    promote_secs += t.secs();
+                                    resident = true;
+                                }
+                            }
+                            if !resident {
                                 let t_rebuild = Timer::start();
                                 let (tokens, _plen) = session
                                     .prefix_tokens(&ds.graph, &clusters[cid].rep);
@@ -1015,8 +1147,9 @@ impl<'e> Coordinator<'e> {
                                         }
                                     }
                                 };
-                                let evicted = cache.install(cid, kv, entry_bytes);
-                                self.engine.release_many(evicted);
+                                let out =
+                                    cache.install_tiered(cid, kv, entry_bytes);
+                                self.finish_install(cache, out);
                             }
                         }
                         pending_ext = submit_ext(cache)?;
@@ -1031,7 +1164,7 @@ impl<'e> Coordinator<'e> {
             let t_host = Timer::start();
             let first = argmax(&row);
             let first_host_secs = t_host.secs();
-            llm_time += prefill_secs + ext_t.secs();
+            llm_time += prefill_secs + promote_secs + ext_t.secs();
 
             // 6) latency accounting (no amortization — see the module docs
             //    in `coordinator`): a miss pays its prefill in PFTT, a hit
@@ -1041,7 +1174,12 @@ impl<'e> Coordinator<'e> {
             //    of its representative).
             let prompt_ready =
                 retrieval_secs + assign_secs + open_secs + rebuild_secs + question.tok_secs;
-            let pftt = lookup_stall + prefill_secs + ext_t.secs() + first_host_secs;
+            // a promoted (host-tier-hit) query's PFTT carries the copy it
+            // actually waited out, never a prefill; prefill_total stays a
+            // pure count of engine prefill seconds, so the tier's win is
+            // exactly prefill_total's shrinkage at equal correctness.
+            let pftt = lookup_stall + prefill_secs + promote_secs + ext_t.secs()
+                + first_host_secs;
 
             // 7) decode. k >= 2 leaves the generate in flight (finalized in
             //    the next query's extend shadow, or drained after the loop);

@@ -273,6 +273,10 @@ pub fn serving_row(name: &str, r: &ServeReport) -> JsonRow {
         .int("cache_evictions", r.cache.evictions)
         .int("shared_hits", r.cache.shared_hits)
         .int("dedup_bytes_saved", r.cache.dedup_bytes_saved)
+        .int("demotions", r.cache.demotions)
+        .int("promotions", r.cache.promotions)
+        .int("host_hits", r.cache.host_hits)
+        .int("host_bytes", r.cache.host_bytes as u64)
         .int("lane_restarts", m.reliability.restarts)
         .int("retries", m.reliability.retries)
         .int("quarantined", m.reliability.quarantined_entries)
@@ -293,6 +297,10 @@ pub fn multi_serving_row(name: &str, m: &MultiStreamReport) -> JsonRow {
         .int("shared_hits", m.shared.shared_hits)
         .int("dedup_bytes_saved", m.shared.dedup_bytes_saved)
         .int("deferred_releases", m.shared.deferred_releases)
+        .int("demotions", m.shared.demotions)
+        .int("promotions", m.shared.promotions)
+        .int("host_hits", m.shared.host_hits)
+        .int("host_bytes", m.shared.host_bytes as u64)
         .int("lock_acquisitions", m.lock.acquisitions)
         .int("lock_contended", m.lock.contended)
         .int("failed_streams", m.failed_streams() as u64)
@@ -390,8 +398,10 @@ pub fn batch_from_env(default: usize) -> usize {
         .unwrap_or(default)
 }
 
-/// Parse the shared `--cache-mb` / `--cache-entries` flags into a policy
-/// (one definition for every binary that exposes the cache budget).
+/// Parse the shared `--cache-mb` / `--cache-entries` / `--host-cache-bytes`
+/// flags into a policy (one definition for every binary that exposes the
+/// cache budget). `--host-cache-bytes 0` (the default) disables the host
+/// tier: device evictions destroy the entry instead of demoting it.
 pub fn cache_policy_from_args(args: &crate::util::cli::Args)
                               -> anyhow::Result<CachePolicy> {
     let d = CachePolicy::default();
@@ -405,9 +415,18 @@ pub fn cache_policy_from_args(args: &crate::util::cli::Args)
         }
         None => d.max_bytes,
     };
+    let host_bytes = match args.get("host-cache-bytes") {
+        Some(v) => v.parse().map_err(|_| {
+            anyhow::anyhow!("bad --host-cache-bytes '{v}' (expected a byte \
+                             count; 0 disables the host tier)")
+        })?,
+        None => d.host_bytes,
+    };
     Ok(CachePolicy {
         max_bytes,
         max_entries: args.usize_or("cache-entries", d.max_entries),
+        host_bytes,
+        ..d
     })
 }
 
@@ -486,10 +505,26 @@ mod tests {
                      "llm_lane_device_s", "llm_lane_window_s", "llm_device_calls",
                      "llm_fused_calls", "llm_mean_occupancy", "llm_window_stalls",
                      "gnn_lane_device_s", "shared_hits", "dedup_bytes_saved",
+                     "demotions", "promotions", "host_hits", "host_bytes",
                      "lane_restarts", "retries", "quarantined", "deadline_hits",
                      "degraded_ms"] {
             assert!(keys.contains(&want), "missing field {want}");
         }
+    }
+
+    #[test]
+    fn cache_policy_flag_forms() {
+        let parse = |s: &str| crate::util::cli::Args::parse(
+            s.split_whitespace().map(String::from));
+        let d = CachePolicy::default();
+        let off = cache_policy_from_args(&parse("")).unwrap();
+        assert_eq!(off.host_bytes, d.host_bytes);
+        let p = cache_policy_from_args(
+            &parse("--cache-mb 2 --host-cache-bytes 1000000")).unwrap();
+        assert_eq!(p.max_bytes, 2 << 20);
+        assert_eq!(p.host_bytes, 1_000_000);
+        assert_eq!(p.shards, d.shards, "shard count keeps the default");
+        assert!(cache_policy_from_args(&parse("--host-cache-bytes lots")).is_err());
     }
 
     #[test]
@@ -536,6 +571,7 @@ mod tests {
         let keys: Vec<&str> = row.fields.iter().map(|(k, _)| k.as_str()).collect();
         for want in ["streams", "queries", "wall_s", "qps", "pool_prefills",
                      "shared_hits", "dedup_bytes_saved", "deferred_releases",
+                     "demotions", "promotions", "host_hits", "host_bytes",
                      "lock_acquisitions", "lock_contended", "failed_streams",
                      "lane_restarts", "retries", "quarantined", "deadline_hits",
                      "degraded_ms"] {

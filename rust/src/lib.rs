@@ -21,7 +21,9 @@
 //!   globally-counted pins — so several representatives stay warm, an
 //!   admission can never evict any stream's in-flight cluster, and
 //!   identical representatives across concurrent streams are prefilled
-//!   exactly once (`serve_online_multi`).
+//!   exactly once (`serve_online_multi`). The index is sharded by content
+//!   key, and an optional host tier catches device evictions: demoted
+//!   entries promote back with a copy instead of repaying a prefill.
 //! * **[`runtime`]** — the execution layer behind the
 //!   [`runtime::Backend`] trait: the per-lane PJRT [`runtime::Engine`]
 //!   (LLM and GNN lanes on separate worker threads, device-resident KV)
@@ -68,8 +70,9 @@ pub mod util;
 
 /// Common imports for examples and binaries.
 pub mod prelude {
-    pub use crate::cache::{CachePolicy, CacheStats, KvCacheManager, LockStats, Lookup,
-                           RepKey, SharedKvCache};
+    pub use crate::cache::{CachePolicy, CacheStats, Demotion, HostSlot,
+                           KvCacheManager, LockStats, Lookup, RepKey,
+                           SharedKvCache, TieredOut};
     pub use crate::cluster::Linkage;
     pub use crate::coordinator::{Coordinator, MultiStreamReport, ServeConfig,
                                  ServeReport, StreamOutcome};

@@ -475,6 +475,39 @@ mod tests {
     }
 
     #[test]
+    fn zero_wall_runs_never_emit_non_finite_rates() {
+        // A populated run whose wall clock never got set (or measured 0 on
+        // a coarse timer) must report 0 rates, not inf/NaN — these numbers
+        // flow straight into BENCH_*.json, where a bare `inf`/`nan` token
+        // poisons every downstream consumer. CI asserts the emitted JSON
+        // is inf/NaN-free; this is the unit-level guard.
+        let mut m = bm(&[(0.1, true), (0.2, false)]);
+        m.lane_llm.add(&crate::runtime::CallTiming {
+            queue_secs: 0.1, device_secs: 0.4, ..Default::default()
+        });
+        m.wall_time = 0.0;
+        assert_eq!(m.qps(), 0.0);
+        assert_eq!(m.lane_busy_frac(crate::runtime::Lane::Llm), 0.0);
+        assert_eq!(m.lane_busy_frac(crate::runtime::Lane::Gnn), 0.0);
+        for v in [m.acc(), m.rt_ms(), m.ttft_ms(), m.pftt_ms(), m.qps(),
+                  m.ttft_hit_ms(), m.ttft_miss_ms(), m.pftt_hit_ms(),
+                  m.pftt_miss_ms()] {
+            assert!(v.is_finite(), "zero-wall metric leaked non-finite {v}");
+        }
+        // the empty run (no queries, no wall, no lane calls) is the
+        // degenerate corner every accessor must survive with an exact 0
+        let e = BatchMetrics::default();
+        for v in [e.acc(), e.rt_ms(), e.ttft_ms(), e.pftt_ms(), e.qps(),
+                  e.ttft_hit_ms(), e.ttft_miss_ms(), e.pftt_hit_ms(),
+                  e.pftt_miss_ms(),
+                  e.lane_busy_frac(crate::runtime::Lane::Llm),
+                  e.lane_llm.batch.mean_occupancy(),
+                  e.lane_llm.batch.fill_ratio(8)] {
+            assert_eq!(v, 0.0, "empty-run metric must be exactly 0");
+        }
+    }
+
+    #[test]
     fn hit_miss_split() {
         let mut m = BatchMetrics::default();
         for (ttft, hit) in [(0.1, Some(false)), (0.02, Some(true)), (0.04, Some(true))] {

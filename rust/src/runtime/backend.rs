@@ -254,6 +254,30 @@ impl PendingGenerate {
     }
 }
 
+/// Ticket for an in-flight host→device KV promotion (see
+/// [`Backend::submit_promote`]); yields the re-minted device handle.
+///
+/// Promotion is a pure copy — no logits, no token output — so the ticket
+/// carries only the new handle id and the lane-side [`CallTiming`]. The
+/// serving coordinator submits a promotion and then does its queue top-up
+/// work in the same shadow it uses for prefill tickets, which is what makes
+/// a host-tier hit cheaper than a repaid prefill: only the copy is on the
+/// critical path, and the copy is far cheaper than recomputing the KV.
+pub struct PendingPromote(pub(crate) Ticket<(u64, CallTiming)>);
+
+impl PendingPromote {
+    /// Block for the promoted (device-resident) KV handle.
+    pub fn wait(self) -> Result<KvHandle, BackendError> {
+        Ok(self.wait_timed()?.0)
+    }
+
+    /// Like [`wait`](Self::wait), plus the lane-side [`CallTiming`].
+    pub fn wait_timed(self) -> Result<(KvHandle, CallTiming), BackendError> {
+        let (id, t) = self.0.wait()?;
+        Ok((KvHandle(id), t))
+    }
+}
+
 /// Ticket for an in-flight GNN `encode` (see [`Backend::submit_encode`]).
 pub struct PendingEncode(pub(crate) Ticket<(Vec<f32>, CallTiming)>);
 
@@ -335,7 +359,40 @@ pub trait Backend: Sync {
         true
     }
 
+    // -- host KV tier (optional) ---------------------------------------------
+
+    /// Demote a device-resident KV cache to the backend's host tier: copy
+    /// the k/v buffers to host memory, free the device copy, and return a
+    /// **host-tier handle** that [`Backend::submit_promote`] (and
+    /// [`Backend::release`]) accept. Consumes `kv` either way — on error the
+    /// device copy must already have been released, so the caller never
+    /// leaks a handle.
+    ///
+    /// Backends without a host tier keep this default: the handle is
+    /// released and the call fails `Fatal`, which the cache layer treats as
+    /// "demotion unavailable — entry dies instead of moving tiers".
+    fn demote_kv(&self, kv: KvHandle) -> Result<KvHandle, BackendError> {
+        self.release(kv);
+        Err(BackendError::fatal("backend has no host KV tier (demote_kv unsupported)"))
+    }
+
+    /// Submit a host→device promotion of a host-tier handle (minted by
+    /// [`Backend::demote_kv`]) on the LLM lane without blocking. Borrows
+    /// `kv`: the host copy is consumed only when the promotion succeeds, so
+    /// after a [`BackendError::LaneDead`] the caller still holds a valid
+    /// host handle and can retry (or fall back to a prefill and release it).
+    ///
+    /// Backends without a host tier keep the default `Fatal`.
+    fn submit_promote(&self, _kv: &KvHandle) -> Result<PendingPromote, BackendError> {
+        Err(BackendError::fatal("backend has no host KV tier (promote unsupported)"))
+    }
+
     // -- blocking conveniences (submit + wait) -------------------------------
+
+    /// Blocking promote: [`Backend::submit_promote`] + wait.
+    fn promote_kv(&self, kv: &KvHandle) -> Result<(KvHandle, CallTiming), BackendError> {
+        self.submit_promote(kv)?.wait_timed()
+    }
 
     /// Blocking prefill: [`Backend::submit_prefill`] + wait.
     fn prefill(&self, module: &str, tokens: &[i32], plen: i32)
@@ -403,6 +460,22 @@ mod tests {
         let (tx, rx) = channel::<Result<(Vec<f32>, CallTiming), BackendError>>();
         drop(tx);
         assert!(PendingEncode(Ticket { rx, lane: Lane::Gnn }).wait().is_err());
+
+        let (tx, rx) = channel::<Result<(u64, CallTiming), BackendError>>();
+        drop(tx);
+        let err = PendingPromote(Ticket { rx, lane: Lane::Llm }).wait().unwrap_err();
+        assert!(err.is_lane_dead(), "a dropped promote ticket means the lane died");
+    }
+
+    #[test]
+    fn promote_ticket_delivers_handle_and_timing() {
+        let (tx, rx) = channel::<Result<(u64, CallTiming), BackendError>>();
+        tx.send(Ok((42, CallTiming { device_secs: 0.125, ..Default::default() })))
+            .unwrap();
+        let (kv, t) =
+            PendingPromote(Ticket { rx, lane: Lane::Llm }).wait_timed().unwrap();
+        assert_eq!(kv, KvHandle(42));
+        assert!((t.device_secs - 0.125).abs() < 1e-12);
     }
 
     #[test]

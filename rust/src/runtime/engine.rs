@@ -29,6 +29,17 @@
 //! visible. `SUBGCACHE_KV_HOST_BOUNCE=1` forces the bounce for parity
 //! testing.
 //!
+//! # Host KV tier
+//!
+//! [`Engine::demote_kv`] copies a device KV's k/v buffers to host literals
+//! on the LLM lane and frees the device copy; [`Engine::submit_promote`]
+//! re-uploads them into fresh device buffers later. Both moves are control
+//! traffic (never fused) and their copy cost lands in lane wall time.
+//! Demotion bytes are deliberately *not* counted in
+//! [`EngineStats::host_kv_bytes`]: that counter flags the tuple-literal
+//! store *fallback* regression, while a demotion is an intentional tier
+//! move requested by the cache layer.
+//!
 //! # Submit/wait
 //!
 //! Every execute request can be issued without blocking: `submit_prefill` /
@@ -65,7 +76,7 @@ use std::time::{Duration, Instant};
 
 use super::backend::{merge_stats, Backend, BackendError, CallTiming, EngineStats,
                      KvHandle, Lane, PendingEncode, PendingExtend, PendingGenerate,
-                     PendingKv, PendingPrefill, Ticket};
+                     PendingKv, PendingPrefill, PendingPromote, Ticket};
 use super::batch::{collect_window, BatchConfig, BatchInfo, Collected};
 use super::manifest::{EntrySpec, Manifest, ModuleSpec};
 
@@ -109,6 +120,20 @@ enum Req {
     },
     ReleaseMany {
         kvs: Vec<u64>,
+    },
+    /// Copy a device KV's k/v buffers to host literals, free the device
+    /// copy, and hand back a host-tier id (control traffic: never fuses).
+    Demote {
+        kv: u64,
+        submitted: Instant,
+        reply: Sender<Result<(u64, CallTiming), BackendError>>,
+    },
+    /// Re-upload a host-tier KV's literals to fresh device buffers; the
+    /// host copy is consumed only on success.
+    Promote {
+        host: u64,
+        submitted: Instant,
+        reply: Sender<Result<(u64, CallTiming), BackendError>>,
     },
     Warmup {
         module: String,
@@ -302,6 +327,32 @@ impl Engine {
         self.submit_encode(module, x, adj, mask)?.wait()
     }
 
+    /// Demote a device KV cache to the LLM lane's host tier: its k/v
+    /// buffers cross to host literals, the device copy is freed, and the
+    /// returned host handle can later be promoted back (or released). The
+    /// copy runs on the LLM lane, so its cost lands in lane wall time like
+    /// any other call. On error the device copy is already gone — the
+    /// handle is consumed either way.
+    pub fn demote_kv(&self, kv: KvHandle) -> Result<KvHandle, BackendError> {
+        let (reply, rx) = channel();
+        self.send(Lane::Llm, Req::Demote {
+            kv: kv.0, submitted: Instant::now(), reply,
+        })?;
+        let (id, _t) = (Ticket { rx, lane: Lane::Llm }).wait()?;
+        Ok(KvHandle(id))
+    }
+
+    /// Submit a host→device promotion of a handle minted by
+    /// [`Engine::demote_kv`] on the LLM lane without blocking. The host
+    /// literals are consumed only when the re-upload succeeds.
+    pub fn submit_promote(&self, kv: &KvHandle) -> Result<PendingPromote, BackendError> {
+        let (reply, rx) = channel();
+        self.send(Lane::Llm, Req::Promote {
+            host: kv.0, submitted: Instant::now(), reply,
+        })?;
+        Ok(PendingPromote(Ticket { rx, lane: Lane::Llm }))
+    }
+
     /// Return a KV cache to the engine (KV lives on the LLM lane).
     /// Best-effort: a dead lane has already dropped its device buffers, so
     /// failure to enqueue is ignored.
@@ -385,6 +436,14 @@ impl Backend for Engine {
         Engine::release(self, kv)
     }
 
+    fn demote_kv(&self, kv: KvHandle) -> Result<KvHandle, BackendError> {
+        Engine::demote_kv(self, kv)
+    }
+
+    fn submit_promote(&self, kv: &KvHandle) -> Result<PendingPromote, BackendError> {
+        Engine::submit_promote(self, kv)
+    }
+
     fn release_many(&self, kvs: Vec<KvHandle>) {
         Engine::release_many(self, kvs)
     }
@@ -440,12 +499,22 @@ struct KvEntry {
     v: xla::PjRtBuffer,
 }
 
+/// A demoted KV cache parked in lane-thread host memory (k & v literals),
+/// awaiting promotion back to device buffers or release.
+struct HostKvEntry {
+    k: xla::Literal,
+    v: xla::Literal,
+}
+
 struct State {
     root: PathBuf,
     manifest: Manifest,
     client: xla::PjRtClient,
     modules: HashMap<String, LoadedModule>,
     kvs: HashMap<u64, KvEntry>,
+    /// Host tier: demoted KVs, keyed by ids from the same counter as
+    /// device handles (so release can probe both maps unambiguously).
+    host_kvs: HashMap<u64, HostKvEntry>,
     next_id: u64,
     counters: HashMap<String, (u64, f64)>,
     compile_secs: f64,
@@ -482,6 +551,17 @@ fn req_key(r: &Req) -> Option<(u8, &str)> {
     }
 }
 
+/// Lane-side timing of one tier move (demote/promote): queue wait up to
+/// `picked`, then everything since `picked` (the host↔device copy) as the
+/// device span. Tier moves never ride a batch window.
+fn tier_timing(submitted: Instant, picked: Instant) -> CallTiming {
+    CallTiming {
+        queue_secs: picked.saturating_duration_since(submitted).as_secs_f64(),
+        device_secs: picked.elapsed().as_secs_f64(),
+        ..Default::default()
+    }
+}
+
 fn lane_main(root: PathBuf, manifest: Manifest, opts: EngineOpts, cfg: BatchConfig,
              rx: Receiver<Req>, ready: Sender<anyhow::Result<()>>) {
     let client = match xla::PjRtClient::cpu() {
@@ -497,6 +577,7 @@ fn lane_main(root: PathBuf, manifest: Manifest, opts: EngineOpts, cfg: BatchConf
         client,
         modules: HashMap::new(),
         kvs: HashMap::new(),
+        host_kvs: HashMap::new(),
         next_id: 1,
         counters: HashMap::new(),
         compile_secs: 0.0,
@@ -520,12 +601,26 @@ fn lane_main(root: PathBuf, manifest: Manifest, opts: EngineOpts, cfg: BatchConf
         if req_key(&req).is_none() {
             match req {
                 Req::Release { kv } => {
-                    st.kvs.remove(&kv);
+                    if st.kvs.remove(&kv).is_none() {
+                        st.host_kvs.remove(&kv);
+                    }
                 }
                 Req::ReleaseMany { kvs } => {
                     for kv in kvs {
-                        st.kvs.remove(&kv);
+                        if st.kvs.remove(&kv).is_none() {
+                            st.host_kvs.remove(&kv);
+                        }
                     }
+                }
+                Req::Demote { kv, submitted, reply } => {
+                    let picked = Instant::now();
+                    let r = st.demote(kv).map_err(BackendError::from_anyhow);
+                    let _ = reply.send(r.map(|id| (id, tier_timing(submitted, picked))));
+                }
+                Req::Promote { host, submitted, reply } => {
+                    let picked = Instant::now();
+                    let r = st.promote(host).map_err(BackendError::from_anyhow);
+                    let _ = reply.send(r.map(|id| (id, tier_timing(submitted, picked))));
                 }
                 Req::Warmup { module, reply } => {
                     let _ = reply.send(st.warmup(&module).map_err(BackendError::from_anyhow));
@@ -539,7 +634,7 @@ fn lane_main(root: PathBuf, manifest: Manifest, opts: EngineOpts, cfg: BatchConf
                     calls.sort_by(|a, b| a.0.cmp(&b.0));
                     let _ = reply.send(EngineStats {
                         calls,
-                        live_kv: st.kvs.len(),
+                        live_kv: st.kvs.len() + st.host_kvs.len(),
                         compile_secs: st.compile_secs,
                         host_kv_bytes: st.host_kv_bytes,
                         unbatched_fallbacks: st.unbatched_fallbacks,
@@ -952,6 +1047,41 @@ impl State {
         id
     }
 
+    /// Demote a device KV to the host tier: both buffers cross to host
+    /// literals synchronously, the device copy is dropped, and a fresh id
+    /// (same counter as device handles) names the parked copy. Deliberately
+    /// NOT counted in `host_kv_bytes` — that counter flags the *fallback*
+    /// store path regression; a demotion is an intentional tier move.
+    fn demote(&mut self, kv: u64) -> anyhow::Result<u64> {
+        let e = self
+            .kvs
+            .remove(&kv)
+            .ok_or_else(|| anyhow::anyhow!("unknown/released KV handle {kv}"))?;
+        let k = e.k.to_literal_sync().map_err(xerr)?;
+        let v = e.v.to_literal_sync().map_err(xerr)?;
+        let id = self.next_id;
+        self.next_id += 1;
+        self.host_kvs.insert(id, HostKvEntry { k, v });
+        Ok(id)
+    }
+
+    /// Promote a host-tier KV back to device buffers, re-minting a device
+    /// handle. The host literals are consumed only after both uploads
+    /// succeed, so a failed promote leaves the host copy retryable.
+    fn promote(&mut self, host: u64) -> anyhow::Result<u64> {
+        let (kb, vb) = {
+            let e = self.host_kvs.get(&host).ok_or_else(|| {
+                anyhow::anyhow!("unknown host-tier KV handle {host}")
+            })?;
+            let kd = literal_dims(&e.k)?;
+            let vd = literal_dims(&e.v)?;
+            (self.buf_from_f32_literal(&e.k, &kd)?,
+             self.buf_from_f32_literal(&e.v, &vd)?)
+        };
+        self.host_kvs.remove(&host);
+        Ok(self.insert_kv(kb, vb))
+    }
+
     /// Host-bounce KV storage: literal → host vec → fresh device buffer.
     /// Only reached on the tuple-literal fallback or under forced
     /// `SUBGCACHE_KV_HOST_BOUNCE`; every byte is counted so the zero-copy
@@ -1084,6 +1214,15 @@ impl State {
         let out = self.call(module, "encode", extras)?;
         first_output_literal(out)?.to_vec::<f32>().map_err(xerr)
     }
+}
+
+/// Array dims of a host literal (for re-uploading a demoted KV with its
+/// original shape).
+fn literal_dims(lit: &xla::Literal) -> anyhow::Result<Vec<usize>> {
+    let shape = lit.shape().map_err(xerr)?;
+    let arr = xla::ArrayShape::try_from(&shape)
+        .map_err(|e| anyhow::anyhow!("kv literal is not array-shaped: {e:?}"))?;
+    Ok(arr.dims().iter().map(|&d| d as usize).collect())
 }
 
 /// First output of a single-output entry as a host literal. The `Leaves`

@@ -21,6 +21,31 @@
 //! thread has died fails submissions and outstanding waits with an error
 //! instead of hanging.
 //!
+//! # The host KV tier
+//!
+//! Backends may offer a second, host-side residency for KV caches:
+//! [`Backend::demote_kv`] copies a device KV to host memory and frees the
+//! device copy (returning a **host-tier handle**), and
+//! [`Backend::submit_promote`] copies it back into fresh device buffers
+//! (ticket: [`PendingPromote`]). The contract the cache layer builds on:
+//!
+//! * `demote_kv` consumes its handle either way — on error the device copy
+//!   has already been released, so callers never leak.
+//! * `submit_promote` *borrows* the host handle; the host copy is consumed
+//!   only when the promotion succeeds, so after a `LaneDead` the caller
+//!   still holds a valid host copy to retry or release.
+//! * Host copies live outside any lane incarnation: a lane restart stales
+//!   every device handle but leaves host-tier handles current
+//!   ([`Backend::kv_current`] stays true), which is what lets quarantine
+//!   spare them.
+//! * Both moves run on the LLM lane as control traffic (never fused, never
+//!   fault-rolled in the sim), and their copy cost is real lane wall time —
+//!   [`SimLatency::host_copy_per_byte`] models it per KV byte; the PJRT
+//!   engine pays the actual literal transfer.
+//!
+//! Backends without a host tier keep the trait defaults (`Fatal`), which
+//! the cache layer treats as "demotion unavailable — evict to death".
+//!
 //! # Error taxonomy
 //!
 //! Every backend failure is a typed [`BackendError`], so callers branch on
@@ -124,7 +149,7 @@ mod sim;
 
 pub use backend::{Backend, BackendError, CallTiming, EngineStats, KvHandle, Lane,
                   PendingEncode, PendingExtend, PendingGenerate, PendingKv,
-                  PendingPrefill};
+                  PendingPrefill, PendingPromote};
 pub use batch::{BatchConfig, BatchInfo};
 pub use engine::Engine;
 pub use gnn::{pack_subgraph, PackedSubgraph};

@@ -58,7 +58,7 @@ use crate::tokenizer::{split_text, Tokenizer, BOS_ID, EOS_ID, PAD_ID, UNK_ID};
 
 use super::backend::{merge_stats, Backend, BackendError, CallTiming, EngineStats,
                      KvHandle, Lane, PendingEncode, PendingExtend, PendingGenerate,
-                     PendingKv, PendingPrefill, Ticket};
+                     PendingKv, PendingPrefill, PendingPromote, Ticket};
 use super::batch::{collect_window, BatchConfig, BatchInfo, Collected};
 use super::engine::lane_for_kind;
 use super::manifest::{Constants, LlmDims, Manifest, ModuleSpec};
@@ -85,6 +85,12 @@ pub struct SimLatency {
     pub generate: Duration,
     pub encode: Duration,
     pub per_item: BatchSlope,
+    /// Device↔host KV copy cost per byte (both directions): a demote or
+    /// promote of a KV cache sleeps `host_copy_per_byte * kv_bytes` on the
+    /// LLM lane. Zero by default — tier moves are free until a test opts
+    /// into modelling PCIe-ish transfer cost with
+    /// [`with_host_copy_per_byte`](Self::with_host_copy_per_byte).
+    pub host_copy_per_byte: Duration,
 }
 
 impl SimLatency {
@@ -109,6 +115,7 @@ impl SimLatency {
                 generate: Duration::from_millis(generate),
                 encode: Duration::from_millis(encode),
             },
+            host_copy_per_byte: Duration::ZERO,
         }
     }
 
@@ -123,6 +130,20 @@ impl SimLatency {
             encode: Duration::from_millis(encode),
         };
         self
+    }
+
+    /// Set the per-byte device↔host KV copy cost (see
+    /// [`host_copy_per_byte`](Self::host_copy_per_byte)).
+    pub fn with_host_copy_per_byte(mut self, per_byte: Duration) -> Self {
+        self.host_copy_per_byte = per_byte;
+        self
+    }
+
+    /// Device sleep of one tier move (demote or promote) of a `bytes`-sized
+    /// KV cache: `host_copy_per_byte * bytes`, saturating.
+    pub fn host_copy(&self, bytes: usize) -> Duration {
+        let b = bytes.min(u32::MAX as usize) as u32;
+        self.host_copy_per_byte.saturating_mul(b)
     }
 
     /// Serial per-query upper bound: one of each op back to back.
@@ -149,8 +170,16 @@ impl SimLatency {
     /// ≥ 0; an op with no batched rows keeps the serial-equivalent slope
     /// (= its base), claiming no fusion win that was never measured. An op
     /// with no matching row at all keeps zero latency (functional-only).
-    /// Errors if the file is unreadable, has no `results` array, or
-    /// matches no op at all.
+    ///
+    /// Degenerate fixtures fit conservatively instead of panicking or
+    /// producing garbage: a `batch=1` (or `batch=0`) row is a single-member
+    /// launch, so it feeds the **base**, never the slope — the `n - 1`
+    /// divisor is only ever applied with `n ≥ 2`. Rows whose `median_ns` is
+    /// missing or non-finite are skipped entirely, so a corrupt row can
+    /// never poison a fit with NaN/inf. A batch-rows-only fixture (no
+    /// unbatched row for the op) has no base to fit against and keeps the
+    /// op unfitted. Errors if the file is unreadable, has no `results`
+    /// array, or matches no op at all.
     pub fn from_bench_json(path: impl AsRef<std::path::Path>) -> anyhow::Result<SimLatency> {
         let path = path.as_ref();
         let json = crate::util::json::parse_file(path)?;
@@ -174,7 +203,12 @@ impl SimLatency {
                     continue;
                 }
                 let Some(median) = r.get("median_ns").as_f64() else { continue };
+                if !median.is_finite() {
+                    continue; // corrupt row: never poison the fit
+                }
                 match batch_n(name) {
+                    // n ≥ 2 keeps the (n - 1) slope divisor nonzero; a
+                    // batch=1 row is just an unbatched measurement
                     Some(n) if n >= 2 => batched.push((n, median)),
                     _ => bases.push(median),
                 }
@@ -210,11 +244,12 @@ impl SimLatency {
                 generate: per_generate,
                 encode: per_encode,
             },
+            host_copy_per_byte: Duration::ZERO, // not measured by the bench
         };
         anyhow::ensure!(
             lat.serial_sum() > 0.0,
             "{}: no per-op rows matched (row names must start with 'prefill ', \
-             'extend ', 'generate ' or 'encode ')",
+             'extend ', 'generate ' or 'encode ' and carry a finite median_ns)",
             path.display()
         );
         Ok(lat)
@@ -379,6 +414,41 @@ fn handle_gen(id: u64) -> u64 {
     id >> GEN_SHIFT
 }
 
+/// High bit tags a **host-tier** handle id (minted by `demote_kv`). Host
+/// copies live outside any lane incarnation, so the tag also marks the id
+/// as exempt from generation staleness: a host handle survives lane
+/// restarts and is always [`Backend::kv_current`]. Device ids can never
+/// collide with the tag — their generation field would have to reach
+/// 2^15 restarts first.
+const HOST_BIT: u64 = 1 << 63;
+
+fn is_host_handle(id: u64) -> bool {
+    id & HOST_BIT != 0
+}
+
+/// The sim's host KV tier: demoted token sequences keyed by host handle
+/// id. Owned by the [`SimBackend`] (not a lane worker), so host copies
+/// survive lane deaths and restarts — exactly the property the cache
+/// layer's quarantine path relies on.
+#[derive(Default)]
+struct SimHostStore {
+    kvs: Mutex<HashMap<u64, Vec<i32>>>,
+    next: AtomicU64,
+}
+
+impl SimHostStore {
+    fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<u64, Vec<i32>>> {
+        match self.kvs.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.lock().len()
+    }
+}
+
 type KvReply = Sender<Result<(u64, Vec<f32>, CallTiming), BackendError>>;
 
 enum SReq {
@@ -414,6 +484,21 @@ enum SReq {
     },
     Release {
         kvs: Vec<u64>,
+    },
+    /// Copy a device KV to the host store and free the device copy
+    /// (control traffic: never fuses, never rolls FaultPlan injections, so
+    /// chaos op indices stay stable with or without a host tier).
+    Demote {
+        kv: u64,
+        submitted: Instant,
+        reply: Sender<Result<(u64, CallTiming), BackendError>>,
+    },
+    /// Copy a host-store KV back onto the device; the host copy is
+    /// consumed only on success.
+    Promote {
+        host: u64,
+        submitted: Instant,
+        reply: Sender<Result<(u64, CallTiming), BackendError>>,
     },
     Warmup {
         module: String,
@@ -467,11 +552,15 @@ pub struct SimBackend {
     cfg: BatchConfig,
     faults: Arc<FaultState>,
     policy: SupervisorPolicy,
+    /// Host KV tier — backend-level (not lane-level) so demoted copies
+    /// survive lane restarts.
+    host: Arc<SimHostStore>,
 }
 
 /// Spawn one sim lane worker incarnation.
+#[allow(clippy::too_many_arguments)]
 fn spawn_sim_worker(manifest: &Manifest, lat: SimLatency, cfg: BatchConfig, lane: Lane,
-                    generation: u64, faults: &Arc<FaultState>)
+                    generation: u64, faults: &Arc<FaultState>, host: &Arc<SimHostStore>)
                     -> anyhow::Result<(Sender<SReq>, Arc<AtomicBool>,
                                        std::thread::JoinHandle<()>)> {
     let (tx, rx) = channel::<SReq>();
@@ -479,12 +568,13 @@ fn spawn_sim_worker(manifest: &Manifest, lat: SimLatency, cfg: BatchConfig, lane
     let worker_poison = Arc::clone(&poison);
     let worker_manifest = manifest.clone();
     let worker_faults = Arc::clone(faults);
+    let worker_host = Arc::clone(host);
     let lane_cfg = if lane == Lane::Llm { cfg } else { BatchConfig::off() };
     let thread = std::thread::Builder::new()
         .name(format!("sim-{}-g{generation}", lane.name()))
         .spawn(move || {
             sim_lane_main(worker_manifest, lat, lane_cfg, lane, generation, rx,
-                          worker_poison, worker_faults)
+                          worker_poison, worker_faults, worker_host)
         })?;
     Ok((tx, poison, thread))
 }
@@ -513,9 +603,10 @@ impl SimBackend {
                         -> anyhow::Result<SimBackend> {
         let manifest = store.manifest().clone();
         let faults = Arc::new(FaultState::new(plan));
+        let host = Arc::new(SimHostStore::default());
         let spawn = |lane: Lane| -> anyhow::Result<SimLane> {
             let (tx, poison, thread) =
-                spawn_sim_worker(&manifest, lat, cfg, lane, 0, &faults)?;
+                spawn_sim_worker(&manifest, lat, cfg, lane, 0, &faults, &host)?;
             Ok(SimLane {
                 link: Mutex::new(LaneLink {
                     tx,
@@ -528,13 +619,15 @@ impl SimBackend {
                 }),
             })
         };
+        let lanes = [spawn(Lane::Llm)?, spawn(Lane::Gnn)?];
         Ok(SimBackend {
-            lanes: [spawn(Lane::Llm)?, spawn(Lane::Gnn)?],
+            lanes,
             manifest,
             lat,
             cfg,
             faults,
             policy,
+            host,
         })
     }
 
@@ -585,7 +678,7 @@ impl SimBackend {
             }
             let (tx, poison, thread) =
                 spawn_sim_worker(&self.manifest, self.lat, self.cfg, lane,
-                                 link.generation, &self.faults)
+                                 link.generation, &self.faults, &self.host)
                     .map_err(|e| {
                         BackendError::lane_dead(lane, format!("lane restart failed: {e}"))
                     })?;
@@ -678,6 +771,12 @@ impl Backend for SimBackend {
     }
 
     fn release(&self, kv: KvHandle) {
+        // host-tier handles live in the backend-level store — drop them
+        // directly, no lane round-trip
+        if is_host_handle(kv.0) {
+            self.host.lock().remove(&kv.0);
+            return;
+        }
         // best-effort and never restart-triggering: a dead lane has already
         // dropped the buffers being returned
         self.send_casual(Lane::Llm, SReq::Release { kvs: vec![kv.0] });
@@ -687,9 +786,42 @@ impl Backend for SimBackend {
         if kvs.is_empty() {
             return;
         }
-        self.send_casual(Lane::Llm, SReq::Release {
-            kvs: kvs.into_iter().map(|h| h.0).collect(),
-        });
+        let (host, device): (Vec<u64>, Vec<u64>) =
+            kvs.into_iter().map(|h| h.0).partition(|&id| is_host_handle(id));
+        if !host.is_empty() {
+            let mut g = self.host.lock();
+            for id in host {
+                g.remove(&id);
+            }
+        }
+        if !device.is_empty() {
+            self.send_casual(Lane::Llm, SReq::Release { kvs: device });
+        }
+    }
+
+    fn demote_kv(&self, kv: KvHandle) -> Result<KvHandle, BackendError> {
+        if is_host_handle(kv.0) {
+            return Err(BackendError::fatal(format!(
+                "demote_kv: handle {} is already host-resident", kv.0)));
+        }
+        let (reply, rx) = channel();
+        self.send(Lane::Llm, SReq::Demote {
+            kv: kv.0, submitted: Instant::now(), reply,
+        })?;
+        let (id, _t) = (Ticket { rx, lane: Lane::Llm }).wait()?;
+        Ok(KvHandle(id))
+    }
+
+    fn submit_promote(&self, kv: &KvHandle) -> Result<PendingPromote, BackendError> {
+        if !is_host_handle(kv.0) {
+            return Err(BackendError::fatal(format!(
+                "promote: handle {} is device-resident, not host-tier", kv.0)));
+        }
+        let (reply, rx) = channel();
+        self.send(Lane::Llm, SReq::Promote {
+            host: kv.0, submitted: Instant::now(), reply,
+        })?;
+        Ok(PendingPromote(Ticket { rx, lane: Lane::Llm }))
     }
 
     fn kv_bytes(&self, module: &str) -> Result<usize, BackendError> {
@@ -742,10 +874,12 @@ impl Backend for SimBackend {
         Ok(merged)
     }
 
-    /// A handle is current iff its generation tag matches the LLM lane's
-    /// live incarnation (handles are minted only on the LLM lane).
+    /// A device handle is current iff its generation tag matches the LLM
+    /// lane's live incarnation (handles are minted only on the LLM lane).
+    /// Host-tier handles live outside any incarnation and are always
+    /// current — that is what lets quarantine spare host copies.
     fn kv_current(&self, kv: &KvHandle) -> bool {
-        handle_gen(kv.0) == self.link(Lane::Llm).generation
+        is_host_handle(kv.0) || handle_gen(kv.0) == self.link(Lane::Llm).generation
     }
 }
 
@@ -786,6 +920,10 @@ struct SimState {
     kvs: HashMap<u64, Vec<i32>>,
     next_id: u64,
     counters: HashMap<String, (u64, f64)>,
+    /// Backend-level host tier (shared across incarnations).
+    host: Arc<SimHostStore>,
+    /// Bytes of one backbone KV cache (k + v), for tier-copy latency.
+    kv_copy_bytes: usize,
 }
 
 /// Fusibility key: op kind + module (backbone). Two requests may share a
@@ -801,10 +939,28 @@ fn sreq_key(r: &SReq) -> Option<(u8, &str)> {
     }
 }
 
+/// Lane-side timing of one tier move (demote/promote): queue wait up to
+/// `picked`, then everything since `picked` (the copy sleep) as the device
+/// span. Tier moves never ride a batch window.
+fn tier_timing(submitted: Instant, picked: Instant) -> CallTiming {
+    CallTiming {
+        queue_secs: picked.saturating_duration_since(submitted).as_secs_f64(),
+        device_secs: picked.elapsed().as_secs_f64(),
+        ..Default::default()
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn sim_lane_main(manifest: Manifest, lat: SimLatency, cfg: BatchConfig, lane: Lane,
                  generation: u64, rx: Receiver<SReq>, poison: Arc<AtomicBool>,
-                 faults: Arc<FaultState>) {
+                 faults: Arc<FaultState>, host: Arc<SimHostStore>) {
+    let kv_copy_bytes = manifest
+        .llm_names()
+        .first()
+        .and_then(|n| manifest.module(n).ok())
+        .and_then(|m| m.dims)
+        .map(|d| 2 * d.kv_bytes_each())
+        .unwrap_or(0);
     let mut st = SimState {
         manifest,
         lat,
@@ -813,6 +969,8 @@ fn sim_lane_main(manifest: Manifest, lat: SimLatency, cfg: BatchConfig, lane: La
         kvs: HashMap::new(),
         next_id: 1,
         counters: HashMap::new(),
+        host,
+        kv_copy_bytes,
     };
     // An incompatible request that closed the previous batch window; it is
     // processed before anything newer (lane FIFO).
@@ -835,6 +993,16 @@ fn sim_lane_main(manifest: Manifest, lat: SimLatency, cfg: BatchConfig, lane: La
                         st.kvs.remove(&kv);
                     }
                 }
+                SReq::Demote { kv, submitted, reply } => {
+                    let picked = Instant::now();
+                    let r = st.demote(kv);
+                    let _ = reply.send(r.map(|id| (id, tier_timing(submitted, picked))));
+                }
+                SReq::Promote { host, submitted, reply } => {
+                    let picked = Instant::now();
+                    let r = st.promote(host);
+                    let _ = reply.send(r.map(|id| (id, tier_timing(submitted, picked))));
+                }
                 SReq::Warmup { module, reply } => {
                     let _ = reply.send(
                         st.manifest
@@ -850,9 +1018,12 @@ fn sim_lane_main(manifest: Manifest, lat: SimLatency, cfg: BatchConfig, lane: La
                         .map(|(k, &(n, s))| (k.clone(), n, s))
                         .collect();
                     calls.sort_by(|a, b| a.0.cmp(&b.0));
+                    // the LLM lane reports the shared host tier (exactly
+                    // one lane must, or merge_stats would double-count)
+                    let host_kv = if st.lane == Lane::Llm { st.host.len() } else { 0 };
                     let _ = reply.send(EngineStats {
                         calls,
-                        live_kv: st.kvs.len(),
+                        live_kv: st.kvs.len() + host_kv,
                         compile_secs: 0.0,
                         host_kv_bytes: 0,
                         unbatched_fallbacks: 0,
@@ -1010,6 +1181,10 @@ impl SimState {
         if let Some(seq) = self.kvs.get(&kv) {
             return Ok(seq);
         }
+        if is_host_handle(kv) {
+            return Err(BackendError::fatal(format!(
+                "KV handle {kv} is host-resident; promote it before use")));
+        }
         if handle_gen(kv) != self.generation {
             Err(BackendError::lane_dead(
                 self.lane,
@@ -1020,6 +1195,35 @@ impl SimState {
         } else {
             Err(BackendError::fatal(format!("unknown/released KV handle {kv}")))
         }
+    }
+
+    /// Demote `kv` to the host store: sleep the per-byte copy cost, free
+    /// the device copy, mint a [`HOST_BIT`]-tagged host id.
+    fn demote(&mut self, kv: u64) -> Result<u64, BackendError> {
+        self.lookup_kv(kv)?; // classify stale/unknown before any copy work
+        let copy = self.lat.host_copy(self.kv_copy_bytes);
+        if !copy.is_zero() {
+            std::thread::sleep(copy);
+        }
+        let seq = self.kvs.remove(&kv).expect("looked up above");
+        let id = HOST_BIT | (self.host.next.fetch_add(1, Ordering::Relaxed) + 1);
+        self.host.lock().insert(id, seq);
+        Ok(id)
+    }
+
+    /// Promote a host-store KV back onto the device. The host copy is
+    /// consumed only on success — an error (or a lane death before this
+    /// runs) leaves it intact for the caller to retry or release.
+    fn promote(&mut self, host: u64) -> Result<u64, BackendError> {
+        let seq = self.host.lock().get(&host).cloned().ok_or_else(|| {
+            BackendError::fatal(format!("unknown host-tier KV handle {host}"))
+        })?;
+        let copy = self.lat.host_copy(self.kv_copy_bytes);
+        if !copy.is_zero() {
+            std::thread::sleep(copy);
+        }
+        self.host.lock().remove(&host);
+        Ok(self.insert_kv(seq))
     }
 
     fn prefill(&mut self, module: &str, tokens: &[i32], plen: i32)
@@ -1391,6 +1595,135 @@ mod tests {
         assert_eq!(lat.per_item.generate, lat.generate);
         assert_eq!(lat.per_item.encode, lat.encode);
         assert!(SimLatency::from_bench_json("/nonexistent/BENCH.json").is_err());
+    }
+
+    #[test]
+    fn from_bench_json_survives_degenerate_fixture() {
+        // batch=1 rows feed the base (never a zero (n-1) divisor), rows
+        // with missing or non-finite median_ns are skipped, and a
+        // batched-rows-only op keeps zero latency — a conservative fit,
+        // never a panic or a NaN.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"),
+                           "/tests/fixtures/BENCH_engine_degenerate.json");
+        let lat = SimLatency::from_bench_json(path).unwrap();
+        assert_eq!(lat.prefill, Duration::from_millis(7),
+                   "batch=1 row is the base; the 1e999 row must be skipped");
+        assert_eq!(lat.per_item.prefill, lat.prefill,
+                   "no n>=2 rows: slope stays serial-equivalent");
+        assert_eq!(lat.generate, Duration::ZERO, "median-less row is skipped");
+        assert_eq!(lat.encode, Duration::ZERO,
+                   "batched rows with no base row leave the op unfitted");
+        assert_eq!(lat.extend, Duration::ZERO);
+        assert!(lat.serial_sum() > 0.0);
+    }
+
+    #[test]
+    fn host_tier_demote_promote_roundtrip_is_bit_identical() {
+        let (store, sim) = sim();
+        let c = *store.constants();
+        let mut toks = vec![c.pad_id; c.max_seq];
+        for (i, t) in toks.iter_mut().enumerate().take(30) {
+            *t = 5 + i as i32;
+        }
+        let q = {
+            let mut q = vec![c.pad_id; c.max_q];
+            q[0] = 101;
+            q[1] = 102;
+            q
+        };
+        let (kv, _) = sim.prefill(SIM_BACKBONE, &toks, 30).unwrap();
+        let (kv_ref, row_ref) = sim.extend(SIM_BACKBONE, &kv, 30, &q, 2).unwrap();
+        sim.release(kv_ref);
+
+        let host = sim.demote_kv(kv).unwrap();
+        assert!(is_host_handle(host.0), "demotion mints a HOST_BIT-tagged id");
+        assert!(sim.kv_current(&host), "host handles are always current");
+        assert_eq!(sim.stats().unwrap().live_kv, 1, "host copy counts as live");
+        // the device copy is gone: extending against the old id fails, and
+        // extending against the *host* id tells the caller to promote
+        let err = sim.extend(SIM_BACKBONE, &host, 30, &q, 2).unwrap_err();
+        assert!(err.to_string().contains("promote"), "unhelpful error: {err}");
+
+        let back = sim.promote_kv(&host).unwrap().0;
+        assert!(!is_host_handle(back.0));
+        let (kv2, row2) = sim.extend(SIM_BACKBONE, &back, 30, &q, 2).unwrap();
+        assert_eq!(row2, row_ref, "roundtrip through the host tier preserves bits");
+        // the host copy was consumed by the successful promotion
+        sim.release_many(vec![back, kv2]);
+        assert_eq!(sim.stats().unwrap().live_kv, 0);
+    }
+
+    #[test]
+    fn host_copy_latency_scales_with_kv_bytes() {
+        let store = sim_store();
+        let lat = SimLatency::zero()
+            .with_host_copy_per_byte(Duration::from_nanos(61));
+        let sim = SimBackend::start(&store, lat).unwrap();
+        let c = *store.constants();
+        let mut toks = vec![c.pad_id; c.max_seq];
+        toks[0] = c.bos_id;
+        let (kv, _) = sim.prefill(SIM_BACKBONE, &toks, 1).unwrap();
+        // sim KV = 2 * (2 layers * 256 seq * 2 heads * 8 dhead * 4B)
+        //        = 65536 bytes -> ~4 ms per copy at 61 ns/B
+        let bytes = sim.kv_bytes(SIM_BACKBONE).unwrap();
+        let expect = lat.host_copy(bytes);
+        assert!(expect >= Duration::from_millis(3), "fixture math changed?");
+        let t0 = Instant::now();
+        let host = sim.demote_kv(kv).unwrap();
+        assert!(t0.elapsed() >= expect, "demote must sleep the modelled copy");
+        let t1 = Instant::now();
+        let back = sim.promote_kv(&host).unwrap().0;
+        assert!(t1.elapsed() >= expect, "promote must sleep the modelled copy");
+        sim.release(back);
+    }
+
+    #[test]
+    fn host_copies_survive_lane_restart() {
+        let store = sim_store();
+        let plan = FaultPlan { kill_llm_at_op: Some(2), ..FaultPlan::none() };
+        let sim = SimBackend::start_faulty(&store, SimLatency::zero(),
+                                           BatchConfig::off(), plan,
+                                           SupervisorPolicy::default())
+            .unwrap();
+        let c = *store.constants();
+        let mut toks = vec![c.pad_id; c.max_seq];
+        toks[0] = c.bos_id;
+        let (kv, row_ref) = sim.prefill(SIM_BACKBONE, &toks, 1).unwrap();
+        // demote is control traffic: it neither advances the fault op
+        // counter nor dies with the lane
+        let host = sim.demote_kv(kv).unwrap();
+        // op 2 kills the worker; the supervisor restarts the lane on the
+        // next submission
+        assert!(sim.prefill(SIM_BACKBONE, &toks, 1).unwrap_err().is_lane_dead());
+        let (kv_new, _) = sim.prefill(SIM_BACKBONE, &toks, 1).unwrap();
+        assert!(sim.kv_current(&host),
+                "host copy is still current across the restart");
+        let (back, t) = sim.promote_kv(&host).unwrap();
+        assert!(t.device_secs >= 0.0);
+        // the promoted KV reproduces the pre-kill sequence exactly
+        let q = vec![c.pad_id; c.max_q];
+        let (kv3, row3) = sim.extend(SIM_BACKBONE, &back, 1, &q, 0).unwrap();
+        assert_eq!(row3, row_ref, "promoted KV must hash like the original");
+        sim.release_many(vec![kv_new, back, kv3]);
+        assert_eq!(sim.stats().unwrap().lane_restarts, 1);
+    }
+
+    #[test]
+    fn releasing_a_host_handle_frees_the_host_copy() {
+        let (store, sim) = sim();
+        let c = *store.constants();
+        let mut toks = vec![c.pad_id; c.max_seq];
+        toks[0] = c.bos_id;
+        let (kv, _) = sim.prefill(SIM_BACKBONE, &toks, 1).unwrap();
+        let host = sim.demote_kv(kv).unwrap();
+        assert_eq!(sim.stats().unwrap().live_kv, 1);
+        sim.release(host);
+        assert_eq!(sim.stats().unwrap().live_kv, 0);
+        // promoting a released host handle is a clean Fatal, not a hang
+        let (kv2, _) = sim.prefill(SIM_BACKBONE, &toks, 1).unwrap();
+        let host2 = sim.demote_kv(kv2).unwrap();
+        sim.release_many(vec![KvHandle(host2.0)]);
+        assert!(!sim.promote_kv(&host2).unwrap_err().is_retryable());
     }
 
     #[test]

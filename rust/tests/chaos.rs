@@ -16,6 +16,7 @@
 //! inside the guaranteed-executed op range, and no lane has a run of
 //! consecutive hits long enough to exhaust `max_retries`.
 
+use std::collections::BTreeSet;
 use std::time::Duration;
 
 use subgcache::data::Query;
@@ -110,6 +111,78 @@ fn killed_llm_lane_fleet_recovers_bit_identical() {
                "fleet restart delta must match the supervisor's counter");
     let (transients, _spikes) = backend.injected_faults();
     assert!(transients >= 1, "seed 1 injects a transient inside the run");
+}
+
+// ---------------------------------------------------------------------------
+// The acceptance property again, with the host KV tier enabled: a lane
+// kill invalidates device residency, but demoted host copies survive and
+// keep promoting — same bit-identical bar, extra tier traffic on the books.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn killed_llm_lane_fleet_recovers_with_host_tier_enabled() {
+    let lat = SimLatency::from_millis(4, 1, 1, 1)
+        .with_host_copy_per_byte(Duration::from_nanos(10));
+    let n_streams = 3;
+    let ds = sim_dataset(3, 4);
+    // two distinct representatives, alternated: under a one-entry device
+    // budget the fleet constantly demotes one rep while the other serves,
+    // so host copies exist whenever the kill lands.
+    let sample = ds.sample_test(8, 11);
+    let feats = GraphFeatures::build(&ds.graph);
+    let retr = GRetriever::default();
+    let mut seen: BTreeSet<(Vec<usize>, Vec<usize>)> = BTreeSet::new();
+    let mut picked: Vec<&Query> = Vec::new();
+    for &q in &sample {
+        let sg = retr.retrieve(&ds.graph, &feats, &q.text);
+        if seen.insert((sg.nodes.iter().copied().collect(),
+                        sg.edges.iter().copied().collect())) {
+            picked.push(q);
+            if picked.len() == 2 {
+                break;
+            }
+        }
+    }
+    assert_eq!(picked.len(), 2, "fixture must span two distinct reps");
+    let mut queries: Vec<&Query> = Vec::new();
+    for _ in 0..4 {
+        queries.push(picked[0]);
+        queries.push(picked[1]);
+    }
+    let streams: Vec<Vec<&Query>> =
+        (0..n_streams).map(|_| queries.clone()).collect();
+    let cfg = ServeConfig {
+        online_threshold: -1.0, // never join: content keying dedups reps
+        cache: CachePolicy::new(usize::MAX, 1).with_host_bytes(1 << 20),
+        ..common::sim_config()
+    };
+
+    let clean = common::sim_env(lat);
+    let coord = Coordinator::new(&clean.store, &clean.backend, cfg.clone()).unwrap();
+    let reference = coord
+        .serve_online_multi(&ds, &streams, &retr)
+        .unwrap();
+    assert!(reference.shared.demotions >= 1,
+            "the workload must exercise the tier: {:?}", reference.shared);
+    assert!(reference.shared.promotions >= 1, "{:?}", reference.shared);
+
+    let plan = FaultPlan { seed: 9, kill_llm_at_op: Some(12), ..FaultPlan::none() };
+    let (store, backend) = faulty_env(lat, plan, SupervisorPolicy::default());
+    let coord = Coordinator::new(&store, &backend, cfg).unwrap();
+    let multi = coord.serve_online_multi(&ds, &streams, &retr).unwrap();
+
+    assert_eq!(multi.failed_streams(), 0);
+    for (i, (got, want)) in multi.streams.iter().zip(&reference.streams).enumerate() {
+        assert_eq!(answers(got), answers(want),
+                   "stream {i} must survive the kill bit-identical with the \
+                    host tier enabled");
+    }
+    assert!(multi.reliability.restarts >= 1,
+            "the killed lane must have been restarted: {:?}", multi.reliability);
+    assert!(multi.shared.demotions >= 1, "{:?}", multi.shared);
+    assert!(multi.shared.promotions >= 1,
+            "host copies must promote across the lane death: {:?}", multi.shared);
+    assert_eq!(multi.reliability.restarts, backend.lane_restarts());
 }
 
 // ---------------------------------------------------------------------------

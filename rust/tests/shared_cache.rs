@@ -23,6 +23,11 @@
 //! * **Parity** — single-stream `serve_online` and a one-stream
 //!   `serve_online_multi` agree metric-for-metric with the serial PR 3
 //!   path for k ∈ {1, 2, 4}.
+//! * **Tiering** — with a host budget, a device eviction demotes the entry
+//!   to the host tier and a revisit promotes it back: strictly cheaper
+//!   than repaying the prefill, bit-identical answers, and copies killed
+//!   by the host budget (or stranded by a lane death) never leak and never
+//!   resurrect stale KV.
 
 use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -210,6 +215,206 @@ fn pool_prefills_equal_distinct_reps_under_never_join() {
                "prefills must equal distinct representative contents");
     assert_eq!(multi.shared.evictions, 0);
     assert_eq!(env.backend.stats().unwrap().live_kv, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Host tier: demote → promote round trips (the PR 7 acceptance criterion)
+// ---------------------------------------------------------------------------
+
+/// First `n` queries of `sample` with pairwise-distinct retrieved-subgraph
+/// contents — the minimal workload that churns a one-entry device budget.
+fn distinct_rep_queries<'q>(ds: &subgcache::data::Dataset, sample: &[&'q Query],
+                            n: usize) -> Vec<&'q Query> {
+    let feats = GraphFeatures::build(&ds.graph);
+    let r = GRetriever::default();
+    let mut seen: BTreeSet<(Vec<usize>, Vec<usize>)> = BTreeSet::new();
+    let mut out = Vec::new();
+    for q in sample {
+        let sg = r.retrieve(&ds.graph, &feats, &q.text);
+        if seen.insert((sg.nodes.iter().copied().collect(),
+                        sg.edges.iter().copied().collect())) {
+            out.push(*q);
+            if out.len() == n {
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// A demoted representative promotes back strictly cheaper than a repaid
+/// prefill, with bit-identical answers to a never-evicted run, and the
+/// tier counters (`demotions`/`promotions`/`host_hits`) on the books.
+#[test]
+fn demoted_rep_promotes_cheaper_than_repaid_prefill_bit_identical() {
+    // 30 ms prefill vs a ~4 ms promotion copy (65536 B × 61 ns/B): the
+    // gap must show up in the revisit's prompt-ready → first-token time.
+    let lat = SimLatency::from_millis(30, 2, 2, 2)
+        .with_host_copy_per_byte(Duration::from_nanos(61));
+    let env = common::sim_env(lat);
+    let ds = sim_dataset(3, 4);
+    let sample = ds.sample_test(8, 11);
+    let picked = distinct_rep_queries(&ds, &sample, 2);
+    assert_eq!(picked.len(), 2, "fixture must span two distinct reps");
+    // a, b, a: under a one-entry device budget the revisit of `a` finds
+    // it demoted, not resident. Never-join so every query opens its own
+    // cluster and the content keying (not cluster identity) dedups.
+    let queries = vec![picked[0], picked[1], picked[0]];
+    let cfg = ServeConfig { online_threshold: -1.0, ..common::sim_config() };
+    let coord = Coordinator::new(&env.store, &env.backend, cfg).unwrap();
+    let retr = GRetriever::default();
+
+    let serve = |policy: CachePolicy| {
+        let pool: Arc<SharedKvCache<subgcache::runtime::KvHandle>> =
+            Arc::new(SharedKvCache::new(policy));
+        let mut view = KvCacheManager::shared_view(&pool);
+        let r = coord
+            .serve_online_with_cache(&ds, queries.iter().copied(), &retr, &mut view)
+            .unwrap();
+        env.backend.release_many(pool.drain_all());
+        r
+    };
+    let tiered = serve(CachePolicy::new(usize::MAX, 1).with_host_bytes(1 << 20));
+    let repaid = serve(CachePolicy::new(usize::MAX, 1));
+    let warm = serve(CachePolicy::unbounded());
+
+    // the round trip must never change an answer.
+    let answers = |r: &ServeReport| -> Vec<String> {
+        r.results.iter().map(|x| x.predicted.clone()).collect()
+    };
+    assert_eq!(answers(&tiered), answers(&warm),
+               "demote → promote round trip changed an answer");
+    assert_eq!(answers(&repaid), answers(&warm), "repaid run changed an answer");
+
+    // tier counters nonzero, and the repay actually skipped.
+    assert_eq!(tiered.cache.prefills, 2, "the revisit must promote, not repay");
+    assert_eq!(tiered.cache.promotions, 1, "{:?}", tiered.cache);
+    assert_eq!(tiered.cache.host_hits, 1, "{:?}", tiered.cache);
+    assert_eq!(tiered.cache.demotions, 2,
+               "each eviction demotes (b again at the promote): {:?}", tiered.cache);
+    assert_eq!(repaid.cache.prefills, 3, "no host tier: the revisit repays");
+    assert_eq!(repaid.cache.promotions, 0);
+    assert_eq!(warm.cache.prefills, 2);
+    assert_eq!(warm.cache.evictions, 0);
+
+    // strictly cheaper: the promotion copy beats the repaid prefill.
+    let promoted = tiered.metrics.per_query[2].pftt;
+    let repay = repaid.metrics.per_query[2].pftt;
+    assert!(promoted > 0.0, "the copy is not free");
+    assert!(promoted < repay * 0.5,
+            "a host-tier hit must be well under a repaid prefill: \
+             promoted {promoted:.4}s vs repaid {repay:.4}s");
+    assert!(promoted < tiered.metrics.per_query[0].pftt,
+            "the promotion must also beat this run's own cold misses");
+    assert_eq!(tiered.metrics.per_query[2].cache_hit, Some(false),
+               "a promotion is still a device miss in the hit/miss split");
+
+    assert_eq!(env.backend.stats().unwrap().live_kv, 0,
+               "device KV and host copies must all drain");
+}
+
+/// Host budget smaller than one entry: every demotion is admitted and then
+/// immediately LRU-killed (demotion-to-death), so revisits are true misses
+/// again — and the killed copies drain back to the backend, never leak.
+#[test]
+fn host_budget_exhaustion_kills_copies_and_revisits_repay() {
+    let lat = SimLatency::from_millis(4, 1, 1, 1)
+        .with_host_copy_per_byte(Duration::from_nanos(5));
+    let env = common::sim_env(lat);
+    let ds = sim_dataset(3, 4);
+    let sample = ds.sample_test(8, 11);
+    let picked = distinct_rep_queries(&ds, &sample, 2);
+    assert_eq!(picked.len(), 2, "fixture must span two distinct reps");
+    let queries = vec![picked[0], picked[1], picked[0], picked[1]];
+    let cfg = ServeConfig { online_threshold: -1.0, ..common::sim_config() };
+    let coord = Coordinator::new(&env.store, &env.backend, cfg).unwrap();
+    let entry_bytes = env.backend.kv_bytes(subgcache::runtime::SIM_BACKBONE).unwrap();
+
+    let pool: Arc<SharedKvCache<subgcache::runtime::KvHandle>> =
+        Arc::new(SharedKvCache::new(
+            CachePolicy::new(usize::MAX, 1).with_host_bytes(entry_bytes / 2)));
+    let mut view = KvCacheManager::shared_view(&pool);
+    let r = coord
+        .serve_online_with_cache(&ds, queries.iter().copied(),
+                                 &GRetriever::default(), &mut view)
+        .unwrap();
+
+    assert_eq!(r.cache.prefills, 4, "dead host copies must not serve hits");
+    assert_eq!(r.cache.promotions, 0, "{:?}", r.cache);
+    assert_eq!(r.cache.host_hits, 0, "{:?}", r.cache);
+    assert_eq!(r.cache.demotions, 3,
+               "every eviction was offered to the tier: {:?}", r.cache);
+    assert_eq!(pool.host_resident_bytes(), 0, "no copy survives the budget");
+    env.backend.release_many(pool.drain_all());
+    assert_eq!(env.backend.stats().unwrap().live_kv, 0,
+               "killed host copies must drain back to the backend");
+}
+
+/// A lane death invalidates device residency, but host-tier copies survive
+/// and keep promoting after the supervisor restart — answers bit-identical
+/// to the fault-free run, with at most a bounded repay bill.
+#[test]
+fn quarantined_device_entries_repromote_from_surviving_host_copies() {
+    let lat = SimLatency::from_millis(5, 1, 1, 1)
+        .with_host_copy_per_byte(Duration::from_nanos(10));
+    let ds = sim_dataset(3, 4);
+    let sample = ds.sample_test(8, 11);
+    let picked = distinct_rep_queries(&ds, &sample, 2);
+    assert_eq!(picked.len(), 2, "fixture must span two distinct reps");
+    // long a/b alternation: under a one-entry device budget one rep is
+    // always on device and the other in the host tier, so the kill lands
+    // with a live host copy whichever op it interrupts.
+    let mut queries: Vec<&Query> = Vec::new();
+    for _ in 0..8 {
+        queries.push(picked[0]);
+        queries.push(picked[1]);
+    }
+    let cfg = ServeConfig { online_threshold: -1.0, ..common::sim_config() };
+    let policy = CachePolicy::new(usize::MAX, 1).with_host_bytes(1 << 20);
+    let retr = GRetriever::default();
+
+    let serve = |store: &ArtifactStore, backend: &SimBackend| {
+        let coord = Coordinator::new(store, backend, cfg.clone()).unwrap();
+        let pool: Arc<SharedKvCache<subgcache::runtime::KvHandle>> =
+            Arc::new(SharedKvCache::new(policy));
+        let mut view = KvCacheManager::shared_view(&pool);
+        let r = coord
+            .serve_online_with_cache(&ds, queries.iter().copied(), &retr, &mut view)
+            .unwrap();
+        backend.release_many(pool.drain_all());
+        r
+    };
+
+    let clean = common::sim_env(lat);
+    let want = serve(&clean.store, &clean.backend);
+    assert_eq!(want.cache.prefills, 2, "alternation must live off the tier");
+    assert!(want.cache.promotions >= 10, "{:?}", want.cache);
+
+    // kill the LLM lane mid-alternation; the supervisor restarts it.
+    let plan = FaultPlan { seed: 9, kill_llm_at_op: Some(20), ..FaultPlan::none() };
+    let store = subgcache::runtime::sim_store();
+    let backend = SimBackend::start_faulty(&store, lat, BatchConfig::off(), plan,
+                                           SupervisorPolicy::default())
+        .expect("faulty sim backend start");
+    let got = serve(&store, &backend);
+
+    let get = |r: &ServeReport| -> Vec<String> {
+        r.results.iter().map(|x| x.predicted.clone()).collect()
+    };
+    assert_eq!(get(&got), get(&want),
+               "promoted and repaid recovery must agree bit-identical");
+    let rel = got.metrics.reliability;
+    assert_eq!(rel.restarts, 1, "exactly one supervisor restart: {rel:?}");
+    assert!(got.cache.quarantined >= 1,
+            "the stranded device entry must be quarantined: {:?}", got.cache);
+    assert!(got.cache.promotions >= 1,
+            "host copies must keep promoting across the lane death: {:?}",
+            got.cache);
+    assert!(got.cache.prefills > want.cache.prefills,
+            "the quarantined key itself repays: {:?}", got.cache);
+    assert!(got.cache.prefills <= want.cache.prefills + 3,
+            "surviving host copies must cap the repay bill: {:?}", got.cache);
+    assert_eq!(backend.lane_restarts(), 1);
 }
 
 // ---------------------------------------------------------------------------
