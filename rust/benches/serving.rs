@@ -22,8 +22,18 @@
 //! tier through every online cell; in sim-quick mode it additionally runs
 //! a single-entry-device-budget cell whose row must show nonzero
 //! `demotions`/`promotions`/`host_hits` — the tier regression surface.
+//!
+//! `--fault-seed N --transient-prob P --spike-prob P --spike-ms MS` arm the
+//! sim's chaos plan and stamp every emitted row with the injection config,
+//! so faulty rows can never masquerade as clean ones. Sim-quick mode always
+//! finishes with an `online sim overload flash-crowd` cell — bounded
+//! (blocking) lane queues, an armed circuit breaker, a seeded flash crowd
+//! and the admission/brownout ladder enabled — whose
+//! `shed*`/`brownout_*`/`llm_queue_depth_*` fields are the overload-plane
+//! regression surface.
 
 use subgcache::harness::{batch_config_from_args, cache_policy_from_args,
+                         fault_flags_present, fault_plan_from_args,
                          multi_serving_row, run_cell_with,
                          run_multi_online_cell_with, run_online_cell_with, Cell,
                          ServingBench};
@@ -33,9 +43,17 @@ use subgcache::runtime::{SimBackend, SIM_BACKBONE};
 const OUT: &str = "BENCH_serving.json";
 
 fn artifact_mode(store: &ArtifactStore, streams: usize, batch_cfg: BatchConfig,
-                 cache: CachePolicy) -> anyhow::Result<ServingBench> {
+                 cache: CachePolicy, faults: Option<&FaultPlan>)
+                 -> anyhow::Result<ServingBench> {
     let mut bench = ServingBench::new("artifacts");
     bench.set_batch(batch_cfg);
+    if let Some(p) = faults {
+        // the PJRT engine has no injection hooks — the stamp records that
+        // the flags were given, so the row provenance stays honest.
+        println!("note: fault flags are recorded on rows but the PJRT engine \
+                  does not inject faults");
+        bench.set_faults(p);
+    }
     let engine = Engine::start_with(store, batch_cfg)?;
     let backbone = "llama-3.2-3b-sim";
     for dataset in ["scene_graph", "oag"] {
@@ -69,10 +87,14 @@ fn artifact_mode(store: &ArtifactStore, streams: usize, batch_cfg: BatchConfig,
     Ok(bench)
 }
 
-fn sim_quick_mode(streams: usize, batch_cfg: BatchConfig, cache: CachePolicy)
-                  -> anyhow::Result<ServingBench> {
+fn sim_quick_mode(streams: usize, batch_cfg: BatchConfig, cache: CachePolicy,
+                  faults: Option<&FaultPlan>) -> anyhow::Result<ServingBench> {
     let mut bench = ServingBench::new("sim-quick");
     bench.set_batch(batch_cfg);
+    if let Some(p) = faults {
+        bench.set_faults(p);
+    }
+    let plan = faults.cloned().unwrap_or_default();
     let store = sim_store();
     let ds = sim_dataset(4, 4);
     // virtual latencies with encode ≈ prefill, the regime where the lane
@@ -80,7 +102,8 @@ fn sim_quick_mode(streams: usize, batch_cfg: BatchConfig, cache: CachePolicy)
     // per-item slopes are sub-linear (fused calls cost base + slope·(n−1))
     // so a `--max-batch > 1` run shows its win in the same JSON.
     let lat = SimLatency::from_millis(6, 2, 2, 6).with_per_item_millis(2, 1, 1, 6);
-    let sim = SimBackend::start_with(&store, lat, batch_cfg)?;
+    let sim = SimBackend::start_faulty(&store, lat, batch_cfg, plan.clone(),
+                                       SupervisorPolicy::default())?;
     for &batch in &[8usize, 16] {
         let cell = Cell::new("sim", "g-retriever", SIM_BACKBONE, batch);
         let r = run_cell_with(&store, &sim, &ds, &cell)?;
@@ -132,6 +155,54 @@ fn sim_quick_mode(streams: usize, batch_cfg: BatchConfig, cache: CachePolicy)
                  r.online.cache.promotions, r.online.cache.host_hits);
         bench.push("online sim host-tier", &r.online);
     }
+    // overload smoke: a seeded flash crowd oversubscribes the LLM lane of a
+    // sim with bounded (blocking) lane queues, an armed circuit breaker, a
+    // deadline and the brownout ladder enabled — the row's
+    // shed/brownout/queue-depth fields are the overload-plane regression
+    // surface CI's finite-stats guard walks.
+    {
+        let sim_over = SimBackend::start_guarded(
+            &store, lat, batch_cfg, plan, SupervisorPolicy::default(),
+            QueueConfig::block(8, std::time::Duration::from_millis(200)),
+            Some(BreakerConfig::default()))?;
+        let mut cell = Cell::new("sim", "g-retriever", SIM_BACKBONE, 16);
+        cell.cache = cache;
+        cell.online_threshold = f32::INFINITY;
+        cell.deadline = Some(std::time::Duration::from_millis(60));
+        cell.overload = OverloadConfig {
+            arrivals: ArrivalPlan {
+                seed: 42,
+                process: ArrivalProcess::FlashCrowd {
+                    mean: std::time::Duration::from_millis(12),
+                    at: 4,
+                    size: 8,
+                },
+                zipf_skew: 1.2,
+            },
+            shed: true,
+            initial_estimate: std::time::Duration::from_secs_f64(lat.serial_sum()),
+            headroom: 1.0,
+            brownout: Some(BrownoutConfig {
+                backlog_steps: [
+                    std::time::Duration::from_millis(10),
+                    std::time::Duration::from_millis(25),
+                    std::time::Duration::from_millis(40),
+                ],
+                depth_watermark: None,
+                p95_watermark: None,
+                gen_cap: 8,
+            }),
+        };
+        let r = run_online_cell_with(&store, &sim_over, &ds, &cell)?;
+        let sh = &r.online.metrics.reliability.shed;
+        println!("online sim overload flash-crowd: {:.3}s wall, {} admitted, \
+                  {} shed ({} deadline / {} overloaded / {} brownout), \
+                  {} brownout spans",
+                 r.online.metrics.wall_time, sh.admitted, sh.total_shed(),
+                 sh.shed_deadline, sh.shed_overloaded, sh.shed_brownout,
+                 r.online.metrics.reliability.brownout_spans);
+        bench.push("online sim overload flash-crowd", &r.online);
+    }
     Ok(bench)
 }
 
@@ -147,16 +218,20 @@ fn main() -> anyhow::Result<()> {
     let streams = args.usize_or("streams", 4).max(1);
     let batch_cfg = batch_config_from_args(&args)?;
     let cache = cache_policy_from_args(&args)?;
+    // `--fault-seed/--transient-prob/--spike-prob/--spike-ms` drive the sim
+    // chaos plan and stamp every emitted row with the injection config.
+    let fault_plan = fault_plan_from_args(&args)?;
+    let faults = fault_flags_present(&args).then_some(&fault_plan);
     let out = args.get_or("out", OUT).to_string();
     let artifacts = ArtifactStore::discover().ok();
     let mode = if artifacts.is_some() { "artifacts" } else { "sim-quick" };
     println!("== serving bench ({mode}, streams = {streams}, max_batch = {}, \
-              window = {:.1} ms, host_cache = {} B) ==",
+              window = {:.1} ms, host_cache = {} B, fault_seed = {}) ==",
              batch_cfg.max_batch, batch_cfg.max_wait.as_secs_f64() * 1e3,
-             cache.host_bytes);
+             cache.host_bytes, fault_plan.seed);
     let bench = match &artifacts {
-        Some(store) => artifact_mode(store, streams, batch_cfg, cache)?,
-        None => sim_quick_mode(streams, batch_cfg, cache)?,
+        Some(store) => artifact_mode(store, streams, batch_cfg, cache, faults)?,
+        None => sim_quick_mode(streams, batch_cfg, cache, faults)?,
     };
     bench.emit(&out)?;
     println!("\nwrote {out} ({} rows)", bench.len());

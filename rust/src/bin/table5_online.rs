@@ -23,13 +23,14 @@
 //! device call; see `runtime` docs) — mostly useful with `--streams > 1`.
 //! `--bench-json [PATH]` emits the wall/qps summaries as
 //! `BENCH_serving.json` (same shape as `BENCH_engine.json`); rows record
-//! the batch config.
+//! the batch config. `--fault-seed/--transient-prob/--spike-prob/--spike-ms`
+//! stamp the chaos flags onto every emitted row (see `harness` docs).
 
 use subgcache::harness::{batch_config_from_args, batch_from_env, bench_json_from_args,
-                         cache_policy_from_args, cache_summary, multi_serving_row,
-                         multi_summary, online_cells, run_multi_online_cell,
-                         run_online_cell, throughput_summary, Cell, ServingBench,
-                         ONLINE_HEADER};
+                         cache_policy_from_args, cache_summary, fault_flags_present,
+                         fault_plan_from_args, multi_serving_row, multi_summary,
+                         online_cells, run_multi_online_cell, run_online_cell,
+                         throughput_summary, Cell, ServingBench, ONLINE_HEADER};
 use subgcache::metrics::Table;
 use subgcache::prelude::*;
 
@@ -52,6 +53,14 @@ fn main() -> anyhow::Result<()> {
     let bench_json = bench_json_from_args(&args);
     let mut bench = ServingBench::new("artifacts");
     bench.set_batch(batch_cfg);
+    // `--fault-seed/--transient-prob/--spike-prob/--spike-ms`: stamp the
+    // chaos flags onto every emitted row (the PJRT engine itself injects
+    // nothing — the stamp keeps row provenance honest when the same flags
+    // drive a sim run side by side).
+    let fault_plan = fault_plan_from_args(&args)?;
+    if fault_flags_present(&args) {
+        bench.set_faults(&fault_plan);
+    }
 
     println!("== Table 5: online (streaming) serving \
               (backbone: {backbone}, batch = {batch}, threshold = {threshold}, \

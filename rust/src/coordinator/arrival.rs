@@ -1,0 +1,267 @@
+//! Seeded open-loop arrival processes for overload experiments.
+//!
+//! The serving paths were a *closed* loop until the overload plane landed:
+//! the next query was prepped the moment the previous one finished, so the
+//! system could never be oversubscribed and deadlines only measured service
+//! time. An [`ArrivalPlan`] turns `serve_online` / `serve_online_multi` into
+//! an *open* system: each query has a plan-assigned arrival offset, the
+//! scheduler waits for that offset before admitting it, and a backlog forms
+//! whenever arrivals outpace service — which is exactly the regime where
+//! admission control and the brownout ladder earn their keep.
+//!
+//! Everything here is a pure function of `(seed, arrival index)` via
+//! splitmix64, so two runs with the same plan produce bit-identical
+//! schedules (and therefore, on `SimBackend`, bit-identical shed decisions).
+//! The clock object only caches the running offset; it never consults wall
+//! time or ambient randomness.
+
+use std::time::Duration;
+
+/// splitmix64 — the same tiny mixer the sim's fault plan uses, kept local so
+/// arrival schedules never share a stream with fault rolls.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Shape of the arrival process. All inter-arrival randomness is exponential
+/// (Poisson process) so mean rates compose the way queueing theory expects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalProcess {
+    /// Closed loop (the pre-overload default): the next query arrives the
+    /// instant the scheduler is ready for it. No pacing, no backlog.
+    Closed,
+    /// Open Poisson arrivals with the given mean inter-arrival gap.
+    Poisson { mean: Duration },
+    /// Arrivals land in back-to-back groups of `burst` (zero intra-burst
+    /// spacing); bursts are separated by `lull` plus an exponential gap.
+    Bursty { mean: Duration, burst: usize, lull: Duration },
+    /// Poisson background traffic, except arrivals `at .. at + size` all
+    /// land at the same instant (and, via [`ArrivalPlan::target`], all aim
+    /// at the hot cluster 0): a flash crowd on one representative.
+    FlashCrowd { mean: Duration, at: usize, size: usize },
+}
+
+/// A seeded arrival schedule plus a Zipf cluster-skew generator for
+/// synthesising overload workloads.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrivalPlan {
+    pub seed: u64,
+    pub process: ArrivalProcess,
+    /// Zipf exponent for [`target`](Self::target); `<= 0` means uniform.
+    pub zipf_skew: f64,
+}
+
+impl ArrivalPlan {
+    /// The inert plan: closed loop, no skew. This is the config default, so
+    /// every pre-overload serving path behaves exactly as before.
+    pub fn closed() -> Self {
+        ArrivalPlan { seed: 0, process: ArrivalProcess::Closed, zipf_skew: 0.0 }
+    }
+
+    pub fn is_open(&self) -> bool {
+        self.process != ArrivalProcess::Closed
+    }
+
+    /// Fresh clock over this plan's schedule, starting at arrival 0.
+    pub fn clock(&self) -> ArrivalClock {
+        ArrivalClock { plan: *self, i: 0, t: 0.0 }
+    }
+
+    /// Derive the plan for stream `s` of a multi-stream fleet: same process,
+    /// decorrelated seed, so streams don't burst in lock-step unless the
+    /// caller wants them to (pass the same plan to every stream manually).
+    pub fn stream_plan(&self, s: usize) -> ArrivalPlan {
+        ArrivalPlan { seed: splitmix64(self.seed ^ 0x5357_4d00 ^ s as u64), ..*self }
+    }
+
+    /// Uniform in (0, 1], pure in `(seed, salt, i)`.
+    fn unit(&self, salt: u64, i: u64) -> f64 {
+        let r = splitmix64(self.seed ^ salt ^ i.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        ((r >> 11) as f64 + 1.0) / 9_007_199_254_740_992.0
+    }
+
+    /// Exponential inter-arrival gap for arrival `i`.
+    fn gap(&self, mean: Duration, i: u64) -> f64 {
+        -mean.as_secs_f64() * self.unit(0x4152_5256, i).ln()
+    }
+
+    /// Which of `n` clusters/groups arrival `i` aims at: Zipf(`zipf_skew`)
+    /// over ranks, except a flash crowd always hammers the hot cluster 0.
+    /// Workload builders use this to synthesise skewed query streams.
+    pub fn target(&self, i: usize, n: usize) -> usize {
+        if n <= 1 {
+            return 0;
+        }
+        if let ArrivalProcess::FlashCrowd { at, size, .. } = self.process {
+            if i >= at && i < at.saturating_add(size) {
+                return 0;
+            }
+        }
+        let u = self.unit(0x5a49_5046, i as u64);
+        if self.zipf_skew <= 0.0 {
+            return ((u * n as f64) as usize).min(n - 1);
+        }
+        let total: f64 = (1..=n).map(|k| (k as f64).powf(-self.zipf_skew)).sum();
+        let mut acc = 0.0;
+        for k in 0..n {
+            acc += ((k + 1) as f64).powf(-self.zipf_skew);
+            if u * total <= acc {
+                return k;
+            }
+        }
+        n - 1
+    }
+}
+
+impl Default for ArrivalPlan {
+    fn default() -> Self {
+        ArrivalPlan::closed()
+    }
+}
+
+/// Walks a plan's schedule one arrival at a time. `next_offset` returns the
+/// absolute offset (from stream start) at which the next query arrives, or
+/// `None` for a closed loop (no pacing).
+#[derive(Debug, Clone)]
+pub struct ArrivalClock {
+    plan: ArrivalPlan,
+    i: u64,
+    t: f64,
+}
+
+impl ArrivalClock {
+    pub fn next_offset(&mut self) -> Option<Duration> {
+        let i = self.i;
+        self.i += 1;
+        match self.plan.process {
+            ArrivalProcess::Closed => return None,
+            ArrivalProcess::Poisson { mean } => {
+                if i > 0 {
+                    self.t += self.plan.gap(mean, i);
+                }
+            }
+            ArrivalProcess::Bursty { mean, burst, lull } => {
+                let burst = burst.max(1) as u64;
+                if i > 0 && i % burst == 0 {
+                    self.t += lull.as_secs_f64() + self.plan.gap(mean, i);
+                }
+            }
+            ArrivalProcess::FlashCrowd { mean, at, size } => {
+                let in_crowd =
+                    i as usize > at && (i as usize) < at.saturating_add(size.max(1));
+                if i > 0 && !in_crowd {
+                    self.t += self.plan.gap(mean, i);
+                }
+            }
+        }
+        Some(Duration::from_secs_f64(self.t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn offsets(plan: &ArrivalPlan, n: usize) -> Vec<Duration> {
+        let mut c = plan.clock();
+        (0..n).map(|_| c.next_offset().unwrap()).collect()
+    }
+
+    #[test]
+    fn closed_clock_yields_none_and_default_is_closed() {
+        let plan = ArrivalPlan::default();
+        assert!(!plan.is_open());
+        assert_eq!(plan.clock().next_offset(), None);
+    }
+
+    #[test]
+    fn poisson_offsets_are_monotone_deterministic_and_seeded() {
+        let plan = ArrivalPlan {
+            seed: 7,
+            process: ArrivalProcess::Poisson { mean: Duration::from_millis(3) },
+            zipf_skew: 0.0,
+        };
+        let a = offsets(&plan, 32);
+        assert_eq!(a[0], Duration::ZERO);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "strictly increasing: {a:?}");
+        assert_eq!(a, offsets(&plan, 32), "same seed, same schedule");
+        let other = ArrivalPlan { seed: 8, ..plan };
+        assert_ne!(a, offsets(&other, 32), "different seed, different schedule");
+    }
+
+    #[test]
+    fn bursty_packs_arrivals_into_bursts() {
+        let plan = ArrivalPlan {
+            seed: 11,
+            process: ArrivalProcess::Bursty {
+                mean: Duration::from_millis(5),
+                burst: 4,
+                lull: Duration::from_millis(2),
+            },
+            zipf_skew: 0.0,
+        };
+        let a = offsets(&plan, 8);
+        assert!(a[0] == a[1] && a[1] == a[2] && a[2] == a[3], "{a:?}");
+        assert!(a[4] == a[5] && a[5] == a[6] && a[6] == a[7], "{a:?}");
+        // inter-burst gap >= lull
+        assert!(a[4] - a[3] >= Duration::from_millis(2), "{a:?}");
+    }
+
+    #[test]
+    fn flash_crowd_lands_at_one_instant_on_the_hot_cluster() {
+        let plan = ArrivalPlan {
+            seed: 3,
+            process: ArrivalProcess::FlashCrowd {
+                mean: Duration::from_millis(4),
+                at: 3,
+                size: 5,
+            },
+            zipf_skew: 0.0,
+        };
+        let a = offsets(&plan, 10);
+        for i in 3..8 {
+            assert_eq!(a[i], a[3], "crowd arrival {i} shares the instant: {a:?}");
+            assert_eq!(plan.target(i, 6), 0, "crowd arrival {i} hits cluster 0");
+        }
+        assert!(a[8] > a[7], "traffic resumes after the crowd: {a:?}");
+        assert!(a[3] > a[2], "the crowd itself arrives after background traffic");
+    }
+
+    #[test]
+    fn zipf_targets_prefer_the_head_and_stay_in_bounds() {
+        let plan = ArrivalPlan {
+            seed: 19,
+            process: ArrivalProcess::Poisson { mean: Duration::from_millis(1) },
+            zipf_skew: 1.5,
+        };
+        let n = 8;
+        let mut counts = vec![0usize; n];
+        for i in 0..512 {
+            let t = plan.target(i, n);
+            assert!(t < n);
+            counts[t] += 1;
+        }
+        assert!(counts[0] > counts[n - 1], "head beats tail: {counts:?}");
+        assert!(counts[0] > 512 / n, "rank 0 beats the uniform share: {counts:?}");
+        assert_eq!(plan.target(5, 0), 0, "degenerate n is clamped");
+        assert_eq!(plan.target(5, 1), 0);
+    }
+
+    #[test]
+    fn stream_plans_decorrelate_but_keep_the_process() {
+        let plan = ArrivalPlan {
+            seed: 42,
+            process: ArrivalProcess::Poisson { mean: Duration::from_millis(2) },
+            zipf_skew: 1.0,
+        };
+        let s1 = plan.stream_plan(1);
+        assert_ne!(s1.seed, plan.seed);
+        assert_eq!(s1.process, plan.process);
+        assert_ne!(offsets(&plan, 16), offsets(&s1, 16));
+        assert_ne!(plan.stream_plan(1).seed, plan.stream_plan(2).seed);
+    }
+}

@@ -67,10 +67,12 @@
 //! [`crate::metrics::BatchMetrics::lane_gnn`] splitting queue/device time
 //! per lane.
 
+mod arrival;
 mod online;
 mod pipeline;
 mod session;
 
+pub use arrival::{ArrivalClock, ArrivalPlan, ArrivalProcess};
 pub use online::{MultiStreamReport, StreamOutcome};
 
 use crate::cache::{CachePolicy, CacheStats};
@@ -119,6 +121,99 @@ pub struct ServeConfig {
     /// budget). 0 disables recovery — the first failure, however
     /// transient, errors the stream (the pre-fault-tolerance behaviour).
     pub max_retries: u32,
+    /// Online path only: the overload plane — open-loop arrivals, admission
+    /// control / load shedding, and the brownout ladder. Default is fully
+    /// inert (closed loop, no shedding), so every pre-overload serving path
+    /// behaves exactly as before.
+    pub overload: OverloadConfig,
+}
+
+/// Overload-plane configuration (`ServeConfig::overload`); see the
+/// admission-control section of [`mod@online`]'s docs for the mechanism.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverloadConfig {
+    /// Seeded arrival schedule driving the stream as an open system.
+    /// [`ArrivalPlan::closed`] (the default) keeps the closed loop.
+    pub arrivals: ArrivalPlan,
+    /// Enable admission control: a query predicted (virtual backlog + the
+    /// service estimate) to miss `ServeConfig::deadline` is shed at
+    /// admission ([`QueryOutcome::Shed`]) instead of burning device time; a
+    /// query whose submit is terminally `Overloaded` is shed rather than
+    /// erroring the stream. Off by default — overruns are then only counted
+    /// after the fact in [`crate::metrics::ReliabilityStats::deadline_hits`].
+    pub shed: bool,
+    /// Calibrated per-query service-time estimate (e.g. the sim's
+    /// `SimLatency` serial sum). Zero falls back to an EWMA of observed
+    /// post-admission service times — adaptive, but no longer a pure
+    /// function of the arrival plan.
+    pub initial_estimate: std::time::Duration,
+    /// Deadline safety factor for admission: shed when
+    /// `predicted >= deadline * headroom`. `1.0` (default) sheds exactly at
+    /// the deadline; `< 1.0` sheds earlier, keeping slack for decode/host
+    /// time the estimate does not cover. Non-positive values are treated
+    /// as `1.0`.
+    pub headroom: f64,
+    /// Brownout ladder watermarks; `None` (default) disables degradation.
+    pub brownout: Option<BrownoutConfig>,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> Self {
+        OverloadConfig {
+            arrivals: ArrivalPlan::closed(),
+            shed: false,
+            initial_estimate: std::time::Duration::ZERO,
+            headroom: 1.0,
+            brownout: None,
+        }
+    }
+}
+
+/// Brownout ladder thresholds. The ladder level for a query is the number
+/// of `backlog_steps` at or below its predicted queueing delay (a zero step
+/// is disabled), bumped to at least 1 when a live watermark trips. Levels
+/// are cumulative — level 2 also applies level 1's degradation:
+///
+/// 1. clamp the pipeline lookahead to 1 (serial scheduling),
+/// 2. suspend new-cluster opens — join the nearest live representative
+///    (answer flagged degraded) or shed if none exists,
+/// 3. cap generate length at `gen_cap` tokens.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BrownoutConfig {
+    /// Predicted-wait thresholds for ladder levels 1..=3. A level engages
+    /// when the virtual-backlog wait reaches its step; `Duration::ZERO`
+    /// disables that step.
+    pub backlog_steps: [std::time::Duration; 3],
+    /// Live LLM-lane queue depth at which level >= 1 engages regardless of
+    /// the virtual backlog. `None` disables.
+    pub depth_watermark: Option<usize>,
+    /// Rolling p95 response time (last 32 served queries) at which
+    /// level >= 1 engages. `None` disables.
+    pub p95_watermark: Option<std::time::Duration>,
+    /// Generate-length cap applied at level 3 (clamped to >= 1).
+    pub gen_cap: usize,
+}
+
+/// Why a query was shed ([`QueryOutcome::Shed`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Admission control predicted a `ServeConfig::deadline` miss.
+    Deadline,
+    /// A backend submit stayed `Overloaded` (full bounded queue or open
+    /// circuit breaker) past the retry budget.
+    Overloaded,
+    /// Brownout level >= 2 suspended new-cluster opens and no live
+    /// representative existed to degrade to.
+    Brownout,
+}
+
+/// Per-query disposition of the online scheduler, in arrival order
+/// (`ServeReport::outcomes`). Every arrival gets exactly one outcome;
+/// `Served` queries also appear in `ServeReport::results`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueryOutcome {
+    Served { id: usize },
+    Shed { id: usize, reason: ShedReason },
 }
 
 impl Default for ServeConfig {
@@ -134,6 +229,7 @@ impl Default for ServeConfig {
             cluster_ttl: None,
             deadline: None,
             max_retries: 3,
+            overload: OverloadConfig::default(),
         }
     }
 }
@@ -163,6 +259,9 @@ pub struct ServeReport {
     /// (`ServeConfig::cluster_ttl`). Their sizes stay in `cluster_sizes`.
     pub expired_clusters: usize,
     pub cache: CacheStats,
+    /// Online path only: per-arrival disposition (served vs shed, with the
+    /// shed reason), in arrival order. Empty for the in-batch paths.
+    pub outcomes: Vec<QueryOutcome>,
 }
 
 impl ServeReport {
@@ -259,6 +358,13 @@ mod tests {
         assert!(c.cluster_ttl.is_none(), "TTL is opt-in");
         assert!(c.deadline.is_none(), "deadlines are opt-in");
         assert!(c.max_retries >= 1, "transient faults must be survivable by default");
+        // the overload plane must default fully inert: closed loop, no
+        // shedding, no brownout — or every pre-overload test would change.
+        assert!(!c.overload.arrivals.is_open(), "arrivals default closed");
+        assert!(!c.overload.shed, "shedding is opt-in");
+        assert!(c.overload.brownout.is_none(), "brownout is opt-in");
+        assert_eq!(c.overload.headroom, 1.0);
+        assert!(c.overload.initial_estimate.is_zero());
     }
 
     #[test]

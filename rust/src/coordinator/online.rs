@@ -117,6 +117,52 @@
 //! [`Transient`]: crate::runtime::BackendError::Transient
 //! [`LaneDead`]: crate::runtime::BackendError::LaneDead
 //!
+//! # Admission control & the brownout ladder
+//!
+//! With [`super::OverloadConfig`] engaged the stream runs as an *open*
+//! system: a seeded [`super::ArrivalPlan`] assigns each query an arrival
+//! offset, the scheduler waits for that offset before serving it, and a
+//! **virtual backlog** — a deterministic single-server queue model in which
+//! each admitted query occupies the server for the configured service
+//! estimate — predicts the queueing delay every arrival would suffer.
+//! Three mechanisms act on that prediction plus live signals:
+//!
+//! * **Admission control** (`shed = true`): a query whose predicted
+//!   completion (`wait + estimate`) cannot meet `ServeConfig::deadline`
+//!   (scaled by `headroom`) is shed at admission
+//!   ([`super::QueryOutcome::Shed`] with
+//!   [`super::ShedReason::Deadline`]) before any engine work is spent —
+//!   the whole point, versus the post-hoc `deadline_hits` counter.
+//!   Because the virtual backlog is a pure function of the arrival plan
+//!   and the estimate, the shed set is bit-reproducible across same-seed
+//!   runs on the sim backend. A *terminally* `Overloaded` submit (bounded
+//!   queue full / breaker open past the retry budget) likewise sheds the
+//!   query ([`super::ShedReason::Overloaded`]) instead of erroring the
+//!   stream — a shed leader first **aborts its install reservation**
+//!   ([`KvCacheManager::abort_install`]) so racing streams blocked on the
+//!   single-flight discipline wake and elect a new installer. Deep
+//!   lane-death recovery paths still propagate terminal errors: they mean
+//!   the backend is sick, not merely busy.
+//! * **Brownout ladder** ([`super::BrownoutConfig`]): the predicted wait
+//!   against `backlog_steps` — bumped to level ≥ 1 by a live LLM-lane
+//!   queue-depth or rolling-p95 watermark — selects a degradation level.
+//!   Level 1 clamps the pipeline lookahead to 1; level 2 suspends
+//!   new-cluster opens, joining the nearest live representative with the
+//!   answer flagged degraded (or shedding with
+//!   [`super::ShedReason::Brownout`] when no cluster exists); level 3
+//!   additionally caps generate length. Entering level ≥ 1 opens a
+//!   brownout span ([`crate::metrics::ReliabilityStats::brownout_spans`]);
+//!   returning to level 0 closes it and accumulates `brownout_secs`.
+//! * **Per-arrival gauges**: every turn samples
+//!   [`crate::runtime::Backend::queue_depth`] into
+//!   [`crate::metrics::LaneTimes`] (`depth_peak` / `mean_depth`), and every
+//!   disposition lands in [`super::ServeReport::outcomes`] plus
+//!   [`crate::metrics::ShedStats`] (admitted / shed-by-reason).
+//!
+//! The default [`super::OverloadConfig`] is fully inert (closed loop, no
+//! shedding, no brownout), preserving the closed-loop semantics of every
+//! pre-overload serving path bit for bit.
+//!
 //! # Latency accounting
 //!
 //! Each prep component is timed where it executes and charged to its own
@@ -146,12 +192,13 @@ use crate::embed::sq_dist;
 use crate::graph::{Subgraph, TextualGraph};
 use crate::metrics::{LaneTimes, QueryLatency, ReliabilityStats, Timer};
 use crate::retrieval::{GraphFeatures, Retriever};
-use crate::runtime::{pack_subgraph, BackendError, CallTiming, KvHandle,
+use crate::runtime::{pack_subgraph, BackendError, CallTiming, KvHandle, Lane,
                      PackedSubgraph, PendingEncode, PendingExtend,
-                     PendingGenerate};
+                     PendingGenerate, PendingPrefill};
 
 use super::session::PreparedQuestion;
-use super::{argmax, Coordinator, ServeReport};
+use super::{argmax, ArrivalPlan, Coordinator, QueryOutcome, ServeReport,
+            ShedReason};
 
 /// One open cluster of the stream. Deliberately small — a centroid, a
 /// member count, and the frozen representative subgraph (node/edge id
@@ -240,6 +287,9 @@ struct InflightDecode<'q> {
     /// composed component times up to the first token
     prompt_ready: f64,
     pftt: f64,
+    /// generate-length cap from the brownout ladder (level 3);
+    /// `usize::MAX` when uncapped. Applied at finalize, before decode.
+    gen_cap: usize,
 }
 
 /// Bounded recovery budget for one backend stage of one query. `admit`
@@ -262,6 +312,11 @@ impl RetryBudget {
     /// this stream (non-retryable error, budget exhausted, or the query
     /// ran past its deadline). Borrows the error so the caller can still
     /// branch on its kind after admission; the clone is terminal-path only.
+    ///
+    /// An [`Overloaded`](BackendError::Overloaded) failure is retryable
+    /// *only with backoff* (the runtime taxonomy's contract): admission
+    /// sleeps a capped exponential delay before returning, so a retry
+    /// storm cannot hammer a full bounded queue or an open breaker.
     fn admit(&mut self, e: &BackendError, t_query: &Timer) -> anyhow::Result<()> {
         let past_deadline =
             self.deadline.is_some_and(|d| t_query.secs() > d.as_secs_f64());
@@ -269,6 +324,11 @@ impl RetryBudget {
             return Err(e.clone().into());
         }
         self.attempts += 1;
+        if e.is_overloaded() {
+            const BACKOFF_BASE: std::time::Duration =
+                std::time::Duration::from_micros(500);
+            std::thread::sleep(BACKOFF_BASE * (1u32 << self.attempts.min(6)));
+        }
         Ok(())
     }
 }
@@ -425,18 +485,25 @@ impl<'e> Coordinator<'e> {
         // measured fleet wall time — S-1 redundant rebuilds would otherwise
         // deflate the qps/wall rows the serving bench tracks.
         let feats = GraphFeatures::build(&ds.graph);
-        let restarts0 = self.engine.stats().map(|s| s.lane_restarts).unwrap_or(0);
+        let stats0 = self.engine.stats();
+        let restarts0 = stats0.as_ref().map(|s| s.lane_restarts).unwrap_or(0);
+        let trips0 = stats0.map(|s| s.breaker_trips).unwrap_or(0);
         let t_wall = Timer::start();
         let joined: Vec<anyhow::Result<ServeReport>> = std::thread::scope(|scope| {
             let handles: Vec<_> = streams
                 .iter()
-                .map(|qs| {
+                .enumerate()
+                .map(|(si, qs)| {
                     let pool = Arc::clone(&pool);
                     let feats = &feats;
+                    // decorrelate each stream's arrival schedule (a no-op
+                    // for the default closed plan).
+                    let plan = self.cfg.overload.arrivals.stream_plan(si);
                     scope.spawn(move || {
                         let mut view = KvCacheManager::shared_view(&pool);
                         self.serve_online_inner(ds, qs.iter().copied(),
-                                                retriever, &mut view, feats)
+                                                retriever, &mut view, feats,
+                                                plan)
                     })
                 })
                 .collect();
@@ -454,12 +521,18 @@ impl<'e> Coordinator<'e> {
         // reporting, whether the streams succeeded or not.
         self.engine.release_many(pool.drain_all());
         let wall_time = t_wall.secs();
-        // the supervisor's restart counter is backend-global: delta it once
-        // around the whole fleet rather than per overlapping stream.
-        let restarts = self.engine.stats()
+        // the supervisor's restart counter (and the breaker's trip counter)
+        // is backend-global: delta each once around the whole fleet rather
+        // than per overlapping stream.
+        let stats1 = self.engine.stats();
+        let restarts = stats1.as_ref()
             .map(|s| s.lane_restarts)
             .unwrap_or(restarts0)
             .saturating_sub(restarts0);
+        let trips = stats1
+            .map(|s| s.breaker_trips)
+            .unwrap_or(trips0)
+            .saturating_sub(trips0);
 
         let mut report = MultiStreamReport {
             shared: pool.stats(),
@@ -478,6 +551,7 @@ impl<'e> Coordinator<'e> {
             }
         }
         report.reliability.restarts = restarts;
+        report.reliability.breaker_trips = trips;
         Ok(report)
     }
 
@@ -502,12 +576,18 @@ impl<'e> Coordinator<'e> {
         // counter is backend-global, so when several streams share one
         // backend each sees the fleet's restarts (documented on
         // `ReliabilityStats::restarts`).
-        let restarts0 = self.engine.stats().map(|s| s.lane_restarts).unwrap_or(0);
+        let stats0 = self.engine.stats();
+        let restarts0 = stats0.as_ref().map(|s| s.lane_restarts).unwrap_or(0);
+        let trips0 = stats0.map(|s| s.breaker_trips).unwrap_or(0);
         let mut report =
-            self.serve_online_inner(ds, query_stream, retriever, cache, &feats)?;
+            self.serve_online_inner(ds, query_stream, retriever, cache, &feats,
+                                    self.cfg.overload.arrivals)?;
+        let stats1 = self.engine.stats();
         let restarts1 =
-            self.engine.stats().map(|s| s.lane_restarts).unwrap_or(restarts0);
+            stats1.as_ref().map(|s| s.lane_restarts).unwrap_or(restarts0);
+        let trips1 = stats1.map(|s| s.breaker_trips).unwrap_or(trips0);
         report.metrics.reliability.restarts = restarts1.saturating_sub(restarts0);
+        report.metrics.reliability.breaker_trips = trips1.saturating_sub(trips0);
         Ok(report)
     }
 
@@ -567,14 +647,16 @@ impl<'e> Coordinator<'e> {
         }
     }
 
-    /// [`serve_online_with_cache`] over pre-built retrieval features, so
-    /// the multi-stream path builds them once for the whole fleet.
+    /// [`serve_online_with_cache`] over pre-built retrieval features (so
+    /// the multi-stream path builds them once for the whole fleet) and an
+    /// explicit arrival plan (so each stream of a fleet can carry its own
+    /// decorrelated seed — see [`ArrivalPlan::stream_plan`]).
     ///
     /// [`serve_online_with_cache`]: Coordinator::serve_online_with_cache
     fn serve_online_inner<'q, I>(&self, ds: &Dataset, query_stream: I,
                                  retriever: &dyn Retriever,
                                  cache: &mut KvCacheManager<KvHandle>,
-                                 feats: &GraphFeatures)
+                                 feats: &GraphFeatures, plan: ArrivalPlan)
                                  -> anyhow::Result<ServeReport>
     where
         I: IntoIterator<Item = &'q Query>,
@@ -588,6 +670,23 @@ impl<'e> Coordinator<'e> {
         let threshold = self.cfg.online_threshold;
         let depth = self.cfg.pipeline_depth.max(1);
         let eager_encode = depth >= 2;
+
+        // Overload plane (module docs: admission control & the brownout
+        // ladder). All state is per-stream; the virtual backlog and the
+        // ladder's backlog-driven levels are pure functions of the arrival
+        // plan and the service estimate, which is what makes the shed set
+        // reproducible across same-seed runs.
+        let overload = self.cfg.overload;
+        let shed_on = overload.shed;
+        let headroom = if overload.headroom > 0.0 { overload.headroom } else { 1.0 };
+        let mut est = overload.initial_estimate.as_secs_f64();
+        let est_fixed = est > 0.0;
+        let mut arrivals = plan.clock();
+        // virtual single-server backlog: when the server frees up, in
+        // seconds of stream time.
+        let mut backlog_end = 0.0f64;
+        let mut brown_level = 0usize;
+        let mut brown_t: Option<Timer> = None;
 
         // Host-only prep, shared by the pipeline's lookahead and the
         // first/fallback (non-overlapped) cases. Every component is timed
@@ -603,23 +702,35 @@ impl<'e> Coordinator<'e> {
             let pack_secs = t.secs();
             let question = session.prepare_question(&q.text);
             let enc = if eager_encode {
-                EncStage::Pending(self.engine.submit_encode(
-                    &gnn, packed.x, packed.adj, packed.mask)?)
+                match self.engine.submit_encode(
+                    &gnn, packed.x, packed.adj, packed.mask) {
+                    Ok(p) => EncStage::Pending(p),
+                    // a refused eager submit (bounded GNN queue full /
+                    // breaker open) is not an error: fall back to
+                    // submitting at the query's own turn — exactly the
+                    // depth-1 behaviour — where the retry budget applies.
+                    // (The packed inputs moved into the attempt; re-pack.)
+                    Err(e) if e.is_overloaded() => EncStage::Packed(
+                        pack_subgraph(&ds.graph, feats, &sg, c.n_max, c.feat_dim)),
+                    Err(e) => return Err(e.into()),
+                }
             } else {
                 EncStage::Packed(packed)
             };
             Ok(PreppedQuery { q, sg, enc, question, retrieval_secs, pack_secs })
         };
 
-        // Refill the prep queue up to depth k. `in_shadow` marks calls made
+        // Refill the prep queue up to `limit` (the full depth k, or the
+        // brownout-clamped effective depth). `in_shadow` marks calls made
         // under an in-flight engine ticket, whose prep time counts toward
         // `overlap_time` (the work itself is always charged to its query).
         let top_up = |queue: &mut VecDeque<PreppedQuery<'q>>,
                       stream: &mut dyn Iterator<Item = &'q Query>,
                       overlap_time: &mut f64,
-                      in_shadow: bool|
+                      in_shadow: bool,
+                      limit: usize|
          -> anyhow::Result<()> {
-            while queue.len() < depth {
+            while queue.len() < limit.max(1) {
                 match stream.next() {
                     Some(q) => {
                         let t = Timer::start();
@@ -779,6 +890,11 @@ impl<'e> Coordinator<'e> {
                 rel.degraded_spans += 1;
             }
             lane_llm.add(&gen_t);
+            // brownout level 3: serve a truncated answer rather than the
+            // full decode (the cap is stamped at the query's turn, so a
+            // recovery re-generate is capped identically).
+            let mut gen = gen;
+            gen.truncate(dec.gen_cap.max(1));
             let t_host = Timer::start();
             let predicted = session.decode_answer(dec.first, &gen);
             let result = session.result(dec.q, predicted, dec.cid, dec.sg);
@@ -804,14 +920,98 @@ impl<'e> Coordinator<'e> {
         let mut stream = query_stream.into_iter();
         let mut queue: VecDeque<PreppedQuery<'q>> = VecDeque::new();
         // the opening fill has no shadow to ride: prep inline.
-        top_up(&mut queue, &mut stream, &mut overlap_time, false)?;
+        top_up(&mut queue, &mut stream, &mut overlap_time, false, depth)?;
         let mut pending_decode: Option<InflightDecode<'q>> = None;
         let mut arrival: u64 = 0;
 
-        while let Some(cur) = queue.pop_front() {
+        'turns: while let Some(cur) = queue.pop_front() {
             let PreppedQuery { q, sg, enc, question, retrieval_secs, pack_secs } = cur;
             let now = arrival;
             arrival += 1;
+
+            // -1) open-loop arrival + admission control (module docs). The
+            //     query "arrives" at its plan offset: an open plan holds
+            //     service until that offset (host prep may have run ahead —
+            //     the open system gates service, not prep). The virtual
+            //     backlog then predicts its completion; with shedding on, a
+            //     predicted deadline miss is shed before any engine work.
+            let offset = arrivals.next_offset();
+            if let Some(a) = offset {
+                let lag = a.as_secs_f64() - t_wall.secs();
+                if lag > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(lag));
+                }
+            }
+            // a closed plan admits the moment the server frees up: zero
+            // virtual wait, pure service-time admission.
+            let arrive = offset.map(|a| a.as_secs_f64()).unwrap_or(backlog_end);
+            let start_est = backlog_end.max(arrive);
+            let wait_est = start_est - arrive;
+            let predicted = wait_est + est;
+
+            // brownout level for this turn: backlog-driven steps, bumped to
+            // >= 1 by the live queue-depth / rolling-p95 watermarks.
+            let mut level = 0usize;
+            if let Some(b) = overload.brownout {
+                level = b.backlog_steps
+                    .iter()
+                    .filter(|s| !s.is_zero() && wait_est >= s.as_secs_f64())
+                    .count();
+                if b.depth_watermark
+                    .is_some_and(|w| w > 0
+                        && self.engine.queue_depth(Lane::Llm) >= w)
+                {
+                    level = level.max(1);
+                }
+                if let Some(w) = b.p95_watermark {
+                    let pq = &report.metrics.per_query;
+                    let tail = &pq[pq.len().saturating_sub(32)..];
+                    if !tail.is_empty() {
+                        let mut rts: Vec<f64> =
+                            tail.iter().map(|x| x.rt).collect();
+                        rts.sort_by(|a, b| a.partial_cmp(b)
+                            .unwrap_or(std::cmp::Ordering::Equal));
+                        let p95 = rts[((rts.len() - 1) as f64 * 0.95) as usize];
+                        if p95 >= w.as_secs_f64() {
+                            level = level.max(1);
+                        }
+                    }
+                }
+            }
+            if level > 0 && brown_level == 0 {
+                rel.brownout_spans += 1;
+                brown_t = Some(Timer::start());
+            } else if level == 0 {
+                if let Some(t) = brown_t.take() {
+                    rel.brownout_secs += t.secs();
+                }
+            }
+            brown_level = level;
+            // level 1+: clamp the lookahead to serial scheduling — under
+            // overload, prepping deep only adds queueing.
+            let eff_depth = if level >= 1 { 1 } else { depth };
+
+            // per-arrival queue-depth gauges (peak/mean surface on the
+            // lane splits).
+            lane_llm.sample_depth(self.engine.queue_depth(Lane::Llm));
+            lane_gnn.sample_depth(self.engine.queue_depth(Lane::Gnn));
+
+            if shed_on
+                && self.cfg.deadline
+                    .is_some_and(|d| predicted >= d.as_secs_f64() * headroom)
+            {
+                rel.shed.shed_deadline += 1;
+                report.outcomes.push(QueryOutcome::Shed {
+                    id: q.id,
+                    reason: ShedReason::Deadline,
+                });
+                // a shed arrival never occupies the virtual server.
+                top_up(&mut queue, &mut stream, &mut overlap_time, false,
+                       eff_depth)?;
+                continue 'turns;
+            }
+            backlog_end = start_est + est;
+
             // wall clock for this query's turn: bounds recovery against the
             // configured deadline. `degraded` flips on the first recovery
             // action and rides into the decode stage, where the span is
@@ -855,14 +1055,29 @@ impl<'e> Coordinator<'e> {
             //    LLM work and the stall is ~0; at depth 1 (submit + wait
             //    inline) the stall is the full queue + device time, exactly
             //    the serial accounting.
-            let mut pending_enc = match enc {
-                EncStage::Pending(p) => p,
-                EncStage::Packed(packed) => self.engine.submit_encode(
-                    &gnn, packed.x, packed.adj, packed.mask)?,
-            };
-            let t_stall = Timer::start();
             let mut budget = RetryBudget::new(&self.cfg);
             let mut t_rec: Option<Timer> = None;
+            // submits draw on the same budget as wait failures: a refused
+            // submission (bounded queue full / breaker open) retries with
+            // backoff instead of instantly erroring the stream.
+            let t_stall = Timer::start();
+            let mut pending_enc = match enc {
+                EncStage::Pending(p) => p,
+                EncStage::Packed(mut packed) => loop {
+                    match self.engine.submit_encode(
+                        &gnn, packed.x, packed.adj, packed.mask) {
+                        Ok(p) => break p,
+                        Err(e) => {
+                            budget.admit(&e, &t_query)?;
+                            rel.retries += 1;
+                            degraded = true;
+                            t_rec.get_or_insert_with(Timer::start);
+                            packed = pack_subgraph(&ds.graph, feats, &sg,
+                                                   c.n_max, c.feat_dim);
+                        }
+                    }
+                },
+            };
             let (emb, enc_t) = loop {
                 match pending_enc.wait_timed() {
                     Ok(out) => break out,
@@ -874,10 +1089,18 @@ impl<'e> Coordinator<'e> {
                         rel.retries += 1;
                         degraded = true;
                         t_rec.get_or_insert_with(Timer::start);
-                        let packed =
-                            pack_subgraph(&ds.graph, feats, &sg, c.n_max, c.feat_dim);
-                        pending_enc = self.engine.submit_encode(
-                            &gnn, packed.x, packed.adj, packed.mask)?;
+                        pending_enc = loop {
+                            let packed = pack_subgraph(&ds.graph, feats, &sg,
+                                                       c.n_max, c.feat_dim);
+                            match self.engine.submit_encode(
+                                &gnn, packed.x, packed.adj, packed.mask) {
+                                Ok(p) => break p,
+                                Err(e2) => {
+                                    budget.admit(&e2, &t_query)?;
+                                    rel.retries += 1;
+                                }
+                            }
+                        };
                     }
                 }
             };
@@ -894,6 +1117,32 @@ impl<'e> Coordinator<'e> {
                 .map(|(i, cl)| (i, sq_dist(&cl.centroid, &emb)))
                 .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
             let joined = nearest.filter(|&(_, d)| d <= threshold).map(|(i, _)| i);
+            // brownout level 2: suspend new-cluster opens. A query that
+            // would open one instead joins the nearest live representative
+            // regardless of the threshold — its answer comes from a prefix
+            // it did not choose, so it is flagged degraded — rather than
+            // paying a fresh prefill under overload. With no live cluster
+            // to degrade to, the ladder's deepest resort is to shed.
+            let joined = match joined {
+                Some(cid) => Some(cid),
+                None if level >= 2 => match nearest.map(|(i, _)| i) {
+                    Some(cid) => {
+                        degraded = true;
+                        Some(cid)
+                    }
+                    None => {
+                        rel.shed.shed_brownout += 1;
+                        report.outcomes.push(QueryOutcome::Shed {
+                            id: q.id,
+                            reason: ShedReason::Brownout,
+                        });
+                        top_up(&mut queue, &mut stream, &mut overlap_time,
+                               false, eff_depth)?;
+                        continue 'turns;
+                    }
+                },
+                None => None,
+            };
             let assign_secs = pack_secs + enc_stall + t_scan.secs();
 
             // 3) open a new cluster if nothing was close enough. The prefix
@@ -967,7 +1216,7 @@ impl<'e> Coordinator<'e> {
                         let submitted = self.engine.submit_promote(&host);
                         if submitted.is_ok() {
                             top_up(&mut queue, &mut stream, &mut overlap_time,
-                                   true)?;
+                                   true, eff_depth)?;
                         }
                         match submitted.and_then(|p| p.wait_timed()) {
                             Ok((kv, t)) => {
@@ -1016,39 +1265,95 @@ impl<'e> Coordinator<'e> {
                         t
                     }
                 };
-                let mut pending = self.engine.submit_prefill(
-                    &self.cfg.backbone, &tokens, clusters[cid].plen as i32)?;
-                // the prep queue refills in the representative prefill's
-                // shadow — the longest call a miss makes before decode.
-                top_up(&mut queue, &mut stream, &mut overlap_time, true)?;
                 let mut budget = RetryBudget::new(&self.cfg);
                 let mut t_rec: Option<Timer> = None;
-                let (kv, prefill_t) = loop {
-                    match pending.wait_timed() {
-                        Ok((kv, _logits, t)) => break (kv, t),
+                let mut pending: Option<PendingPrefill> = None;
+                let mut first_submit = true;
+                let got = loop {
+                    let p = match pending.take() {
+                        Some(p) => p,
+                        None => match self.engine.submit_prefill(
+                            &self.cfg.backbone, &tokens,
+                            clusters[cid].plen as i32) {
+                            Ok(p) => {
+                                if first_submit {
+                                    first_submit = false;
+                                    // the prep queue refills in the
+                                    // representative prefill's shadow — the
+                                    // longest call a miss makes before
+                                    // decode.
+                                    top_up(&mut queue, &mut stream,
+                                           &mut overlap_time, true,
+                                           eff_depth)?;
+                                }
+                                p
+                            }
+                            // a refused submit (bounded queue full /
+                            // breaker open) retries through the budget with
+                            // backoff; terminal overload sheds below
+                            // instead of erroring the stream.
+                            Err(e) => match budget.admit(&e, &t_query) {
+                                Ok(()) => {
+                                    rel.retries += 1;
+                                    degraded = true;
+                                    t_rec.get_or_insert_with(Timer::start);
+                                    continue;
+                                }
+                                Err(err) => {
+                                    if shed_on && e.is_overloaded() {
+                                        break None;
+                                    }
+                                    return Err(err);
+                                }
+                            },
+                        },
+                    };
+                    match p.wait_timed() {
+                        Ok((kv, _logits, t)) => break Some((kv, t)),
                         // retry in place: our install reservation from the
                         // missed lookup stays held across attempts, so
                         // waiting streams keep blocking until the install
                         // below fulfills it. Re-querying the cache here
                         // would single-flight-block on our own reservation.
-                        Err(e) => {
-                            budget.admit(&e, &t_query)?;
-                            rel.retries += 1;
-                            degraded = true;
-                            t_rec.get_or_insert_with(Timer::start);
-                            if e.is_lane_dead() {
-                                rel.quarantined_entries +=
-                                    self.quarantine_dead(cache);
+                        Err(e) => match budget.admit(&e, &t_query) {
+                            Ok(()) => {
+                                rel.retries += 1;
+                                degraded = true;
+                                t_rec.get_or_insert_with(Timer::start);
+                                if e.is_lane_dead() {
+                                    rel.quarantined_entries +=
+                                        self.quarantine_dead(cache);
+                                }
                             }
-                            pending = self.engine.submit_prefill(
-                                &self.cfg.backbone, &tokens,
-                                clusters[cid].plen as i32)?;
-                        }
+                            Err(err) => {
+                                if shed_on && e.is_overloaded() {
+                                    break None;
+                                }
+                                return Err(err);
+                            }
+                        },
                     }
                 };
                 if let Some(t) = t_rec {
                     rel.degraded_secs += t.secs();
                 }
+                let Some((kv, prefill_t)) = got else {
+                    // terminal overload: shed this query, keep the stream.
+                    // Abort the install reservation the missed lookup took,
+                    // so single-flight waiters on other streams wake and
+                    // elect a new installer instead of blocking forever. A
+                    // miss holds no pin (the pin comes with the install),
+                    // so the reservation is the only state to unwind.
+                    cache.abort_install(cid);
+                    rel.shed.shed_overloaded += 1;
+                    report.outcomes.push(QueryOutcome::Shed {
+                        id: q.id,
+                        reason: ShedReason::Overloaded,
+                    });
+                    top_up(&mut queue, &mut stream, &mut overlap_time, false,
+                           eff_depth)?;
+                    continue 'turns;
+                };
                 lane_llm.add(&prefill_t);
                 let secs = prefill_t.secs();
                 // admitted pinned, fulfilling the lookup's reservation
@@ -1073,29 +1378,74 @@ impl<'e> Coordinator<'e> {
             let plen = clusters[cid].plen;
             debug_assert!(cache.pin_count(cid) >= 1,
                           "in-flight cluster must hold a pin across its tickets");
+            // the missing-cache anyhow error stays terminal (outer `?`);
+            // the backend error comes back typed so terminal overload can
+            // shed instead of erroring the stream.
             let submit_ext = |cache: &mut KvCacheManager<KvHandle>|
-             -> anyhow::Result<PendingExtend> {
-                Ok(cache
+             -> anyhow::Result<Result<PendingExtend, BackendError>> {
+                cache
                     .with_handle(cid, |kv| {
                         self.engine.submit_extend(&self.cfg.backbone, kv, plen as i32,
                                                   &question.tokens,
                                                   question.qlen as i32)
                     })
-                    .ok_or_else(|| anyhow::anyhow!("online cluster cache missing"))??)
+                    .ok_or_else(|| anyhow::anyhow!("online cluster cache missing"))
             };
-            let mut pending_ext = submit_ext(cache)?;
-            if let Some(dec) = pending_decode.take() {
-                finalize(dec, &clusters, &mut *cache, &mut report, &mut llm_time,
-                         &mut prefill_total, &mut lane_llm, &mut rel)?;
-            }
-            top_up(&mut queue, &mut stream, &mut overlap_time, true)?;
             let mut budget = RetryBudget::new(&self.cfg);
             let mut t_rec: Option<Timer> = None;
-            let (kv_q, row, ext_t) = loop {
-                match pending_ext.wait_timed() {
-                    Ok(out) => break out,
+            let mut pending_ext: Option<PendingExtend> = None;
+            let mut first_submit = true;
+            let got = loop {
+                let p = match pending_ext.take() {
+                    Some(p) => p,
+                    None => match submit_ext(cache)? {
+                        Ok(p) => {
+                            if first_submit {
+                                first_submit = false;
+                                // the previous query's decoupled decode
+                                // finalizes (and the prep queue refills) in
+                                // this extend's shadow.
+                                if let Some(dec) = pending_decode.take() {
+                                    finalize(dec, &clusters, &mut *cache,
+                                             &mut report, &mut llm_time,
+                                             &mut prefill_total, &mut lane_llm,
+                                             &mut rel)?;
+                                }
+                                top_up(&mut queue, &mut stream,
+                                       &mut overlap_time, true, eff_depth)?;
+                            }
+                            p
+                        }
+                        // a refused submit retries through the budget with
+                        // backoff; terminal overload sheds below.
+                        Err(e) => match budget.admit(&e, &t_query) {
+                            Ok(()) => {
+                                rel.retries += 1;
+                                degraded = true;
+                                t_rec.get_or_insert_with(Timer::start);
+                                continue;
+                            }
+                            Err(err) => {
+                                if shed_on && e.is_overloaded() {
+                                    break None;
+                                }
+                                return Err(err);
+                            }
+                        },
+                    },
+                };
+                match p.wait_timed() {
+                    Ok(out) => break Some(out),
                     Err(e) => {
-                        budget.admit(&e, &t_query)?;
+                        match budget.admit(&e, &t_query) {
+                            Ok(()) => {}
+                            Err(err) => {
+                                if shed_on && e.is_overloaded() {
+                                    break None;
+                                }
+                                return Err(err);
+                            }
+                        }
                         rel.retries += 1;
                         degraded = true;
                         t_rec.get_or_insert_with(Timer::start);
@@ -1152,13 +1502,29 @@ impl<'e> Coordinator<'e> {
                                 self.finish_install(cache, out);
                             }
                         }
-                        pending_ext = submit_ext(cache)?;
                     }
                 }
             };
             if let Some(t) = t_rec {
                 rel.degraded_secs += t.secs();
             }
+            let Some((kv_q, row, ext_t)) = got else {
+                // terminal overload at extend: the representative entry
+                // stays resident for later queries — drop only this query's
+                // pin and shed. Engine work already spent on this query
+                // (repaid prefill / promotion copy) stays charged.
+                cache.unpin(cid);
+                rel.shed.shed_overloaded += 1;
+                report.outcomes.push(QueryOutcome::Shed {
+                    id: q.id,
+                    reason: ShedReason::Overloaded,
+                });
+                prefill_total += prefill_secs;
+                llm_time += prefill_secs + promote_secs;
+                top_up(&mut queue, &mut stream, &mut overlap_time, false,
+                       eff_depth)?;
+                continue 'turns;
+            };
             prefill_total += prefill_secs;
             lane_llm.add(&ext_t);
             let t_host = Timer::start();
@@ -1183,14 +1549,62 @@ impl<'e> Coordinator<'e> {
 
             // 7) decode. k >= 2 leaves the generate in flight (finalized in
             //    the next query's extend shadow, or drained after the loop);
-            //    k = 1 waits inline, reproducing the serial pipeline.
-            let pending_gen = self.engine.submit_generate(
-                &self.cfg.backbone, &kv_q, (plen + question.qlen) as i32, first)?;
+            //    k = 1 — or a brownout-clamped turn — waits inline,
+            //    reproducing the serial pipeline.
+            let mut budget = RetryBudget::new(&self.cfg);
+            let pending_gen = loop {
+                match self.engine.submit_generate(
+                    &self.cfg.backbone, &kv_q,
+                    (plen + question.qlen) as i32, first) {
+                    Ok(p) => break Some(p),
+                    Err(e) => match budget.admit(&e, &t_query) {
+                        Ok(()) => {
+                            rel.retries += 1;
+                            degraded = true;
+                        }
+                        Err(err) => {
+                            if shed_on && e.is_overloaded() {
+                                break None;
+                            }
+                            return Err(err);
+                        }
+                    },
+                }
+            };
+            let Some(pending_gen) = pending_gen else {
+                // terminal overload at the decode submit: give the private
+                // prefix+question KV back, keep the representative resident
+                // (unpin only), shed. The extend's engine time is already
+                // charged above.
+                self.engine.release(kv_q);
+                cache.unpin(cid);
+                rel.shed.shed_overloaded += 1;
+                report.outcomes.push(QueryOutcome::Shed {
+                    id: q.id,
+                    reason: ShedReason::Overloaded,
+                });
+                top_up(&mut queue, &mut stream, &mut overlap_time, false,
+                       eff_depth)?;
+                continue 'turns;
+            };
             let dec = InflightDecode {
                 q, cid, sg, hit, kv_q, first, pending: pending_gen, question, plen,
                 t_query, degraded, prompt_ready, pftt,
+                gen_cap: if level >= 3 {
+                    overload.brownout.map_or(usize::MAX, |b| b.gen_cap.max(1))
+                } else {
+                    usize::MAX
+                },
             };
-            if depth >= 2 {
+            // the query is now past every shed point: it WILL be served.
+            rel.shed.admitted += 1;
+            report.outcomes.push(QueryOutcome::Served { id: q.id });
+            if !est_fixed {
+                // no calibrated estimate was configured: track the engine-
+                // bound service component with an EWMA of observed PFTT.
+                est = if est > 0.0 { 0.8 * est + 0.2 * pftt } else { pftt };
+            }
+            if eff_depth >= 2 {
                 pending_decode = Some(dec);
             } else {
                 finalize(dec, &clusters, &mut *cache, &mut report, &mut llm_time,
@@ -1201,6 +1615,10 @@ impl<'e> Coordinator<'e> {
         if let Some(dec) = pending_decode.take() {
             finalize(dec, &clusters, &mut *cache, &mut report, &mut llm_time,
                      &mut prefill_total, &mut lane_llm, &mut rel)?;
+        }
+        // close a still-open brownout span at end of stream.
+        if let Some(t) = brown_t.take() {
+            rel.brownout_secs += t.secs();
         }
 
         report.cluster_sizes = clusters.iter().map(|cl| cl.members).collect();

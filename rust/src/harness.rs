@@ -5,11 +5,12 @@
 
 use crate::cache::CachePolicy;
 use crate::cluster::Linkage;
-use crate::coordinator::{Coordinator, MultiStreamReport, ServeConfig, ServeReport};
+use crate::coordinator::{Coordinator, MultiStreamReport, OverloadConfig, ServeConfig,
+                         ServeReport};
 use crate::data::{Dataset, Query};
 use crate::metrics::{delta, delta_cells, metric_cells, Table};
 use crate::retrieval::{GRetriever, GragRetriever, Retriever};
-use crate::runtime::{ArtifactStore, Backend, BatchConfig};
+use crate::runtime::{ArtifactStore, Backend, BatchConfig, FaultPlan};
 use crate::util::bench::JsonRow;
 
 /// The paper's default cluster counts per dataset (§4.3: Scene Graph shines
@@ -51,6 +52,9 @@ pub struct Cell {
     pub deadline: Option<std::time::Duration>,
     /// per-stage retry budget (see `ServeConfig::max_retries`).
     pub max_retries: u32,
+    /// open-loop arrivals / admission control / brownout ladder (see
+    /// `ServeConfig::overload`). Defaults to the inert closed-loop plan.
+    pub overload: OverloadConfig,
 }
 
 impl Cell {
@@ -70,6 +74,7 @@ impl Cell {
             cluster_ttl: d.cluster_ttl,
             deadline: d.deadline,
             max_retries: d.max_retries,
+            overload: d.overload,
         }
     }
 
@@ -85,6 +90,7 @@ impl Cell {
             cluster_ttl: self.cluster_ttl,
             deadline: self.deadline,
             max_retries: self.max_retries,
+            overload: self.overload,
         }
     }
 }
@@ -282,6 +288,17 @@ pub fn serving_row(name: &str, r: &ServeReport) -> JsonRow {
         .int("quarantined", m.reliability.quarantined_entries)
         .int("deadline_hits", m.reliability.deadline_hits)
         .num("degraded_ms", m.reliability.degraded_secs * 1e3)
+        .int("llm_queue_depth_peak", m.lane_llm.depth_peak)
+        .num("llm_queue_depth_mean", m.lane_llm.mean_depth())
+        .int("admitted", m.reliability.shed.admitted)
+        .int("shed", m.reliability.shed.total_shed())
+        .int("shed_deadline", m.reliability.shed.shed_deadline)
+        .int("shed_overloaded", m.reliability.shed.shed_overloaded)
+        .int("shed_brownout", m.reliability.shed.shed_brownout)
+        .num("shed_rate", m.reliability.shed.shed_rate())
+        .int("brownout_spans", m.reliability.brownout_spans)
+        .num("brownout_ms", m.reliability.brownout_secs * 1e3)
+        .int("breaker_trips", m.reliability.breaker_trips)
 }
 
 /// One multi-stream run as a `BENCH_serving.json` row: fleet wall/qps plus
@@ -309,6 +326,15 @@ pub fn multi_serving_row(name: &str, m: &MultiStreamReport) -> JsonRow {
         .int("quarantined", m.reliability.quarantined_entries)
         .int("deadline_hits", m.reliability.deadline_hits)
         .num("degraded_ms", m.reliability.degraded_secs * 1e3)
+        .int("admitted", m.reliability.shed.admitted)
+        .int("shed", m.reliability.shed.total_shed())
+        .int("shed_deadline", m.reliability.shed.shed_deadline)
+        .int("shed_overloaded", m.reliability.shed.shed_overloaded)
+        .int("shed_brownout", m.reliability.shed.shed_brownout)
+        .num("shed_rate", m.reliability.shed.shed_rate())
+        .int("brownout_spans", m.reliability.brownout_spans)
+        .num("brownout_ms", m.reliability.brownout_secs * 1e3)
+        .int("breaker_trips", m.reliability.breaker_trips)
 }
 
 /// One-line summary of a multi-stream run for the table binaries.
@@ -328,12 +354,13 @@ pub fn multi_summary(m: &MultiStreamReport) -> String {
 pub struct ServingBench {
     mode: String,
     batch: Option<BatchConfig>,
+    faults: Option<FaultPlan>,
     rows: Vec<JsonRow>,
 }
 
 impl ServingBench {
     pub fn new(mode: &str) -> ServingBench {
-        ServingBench { mode: mode.to_string(), batch: None, rows: Vec::new() }
+        ServingBench { mode: mode.to_string(), batch: None, faults: None, rows: Vec::new() }
     }
 
     /// Stamp the LLM-lane batch config onto every row pushed from here on,
@@ -343,11 +370,27 @@ impl ServingBench {
         self.batch = Some(cfg);
     }
 
+    /// Stamp the chaos plan onto every row pushed from here on
+    /// (`fault_seed` / `transient_prob` / `spike_prob` / `spike_ms`), so a
+    /// row from a faulty run can never be compared against a clean run's
+    /// row without the difference being visible in the JSON itself.
+    pub fn set_faults(&mut self, plan: &FaultPlan) {
+        self.faults = Some(plan.clone());
+    }
+
     fn stamp(&self, row: JsonRow) -> JsonRow {
-        match self.batch {
+        let row = match self.batch {
             Some(cfg) => row
                 .int("max_batch", cfg.max_batch as u64)
                 .num("batch_window_ms", cfg.max_wait.as_secs_f64() * 1e3),
+            None => row,
+        };
+        match &self.faults {
+            Some(p) => row
+                .int("fault_seed", p.seed)
+                .num("transient_prob", p.transient_prob)
+                .num("spike_prob", p.spike_prob)
+                .num("spike_ms", p.spike.as_secs_f64() * 1e3),
             None => row,
         }
     }
@@ -453,6 +496,58 @@ pub fn batch_config_from_args(args: &crate::util::cli::Args)
                         std::time::Duration::from_secs_f64(wait_ms / 1e3)))
 }
 
+/// Parse the shared `--fault-seed` / `--transient-prob` / `--spike-prob` /
+/// `--spike-ms` chaos flags into a [`FaultPlan`] (one definition for every
+/// binary that can inject faults). Defaults to the empty plan — no flags,
+/// no injection. Probabilities must sit in [0, 1]; the spike duration must
+/// be finite and non-negative.
+pub fn fault_plan_from_args(args: &crate::util::cli::Args)
+                            -> anyhow::Result<FaultPlan> {
+    let prob = |name: &str| -> anyhow::Result<f64> {
+        match args.get(name) {
+            Some(v) => {
+                let p: f64 = v.parse().map_err(|_| {
+                    anyhow::anyhow!("bad --{name} '{v}' (expected a probability)")
+                })?;
+                anyhow::ensure!(p.is_finite() && (0.0..=1.0).contains(&p),
+                                "--{name} must sit in [0, 1]");
+                Ok(p)
+            }
+            None => Ok(0.0),
+        }
+    };
+    let seed: u64 = match args.get("fault-seed") {
+        Some(v) => v.parse().map_err(|_| {
+            anyhow::anyhow!("bad --fault-seed '{v}' (expected an integer seed)")
+        })?,
+        None => 0,
+    };
+    let spike_ms: f64 = match args.get("spike-ms") {
+        Some(v) => v.parse().map_err(|_| {
+            anyhow::anyhow!("bad --spike-ms '{v}' (expected milliseconds)")
+        })?,
+        None => 0.0,
+    };
+    anyhow::ensure!(spike_ms.is_finite() && spike_ms >= 0.0,
+                    "--spike-ms must be a finite, non-negative ms value");
+    Ok(FaultPlan {
+        seed,
+        transient_prob: prob("transient-prob")?,
+        spike_prob: prob("spike-prob")?,
+        spike: std::time::Duration::from_secs_f64(spike_ms / 1e3),
+        ..FaultPlan::none()
+    })
+}
+
+/// Whether any chaos flag was given at all — binaries use this to decide
+/// whether to stamp fault fields onto bench rows (absent flags keep rows
+/// byte-identical to pre-chaos output).
+pub fn fault_flags_present(args: &crate::util::cli::Args) -> bool {
+    ["fault-seed", "transient-prob", "spike-prob", "spike-ms"]
+        .iter()
+        .any(|&f| args.get(f).is_some())
+}
+
 /// Backbone list filtered by `SUBGCACHE_BACKBONES` (comma separated).
 pub fn backbones_from_env(store: &ArtifactStore) -> Vec<String> {
     let all: Vec<String> =
@@ -507,7 +602,10 @@ mod tests {
                      "gnn_lane_device_s", "shared_hits", "dedup_bytes_saved",
                      "demotions", "promotions", "host_hits", "host_bytes",
                      "lane_restarts", "retries", "quarantined", "deadline_hits",
-                     "degraded_ms"] {
+                     "degraded_ms", "llm_queue_depth_peak", "llm_queue_depth_mean",
+                     "admitted", "shed", "shed_deadline", "shed_overloaded",
+                     "shed_brownout", "shed_rate", "brownout_spans", "brownout_ms",
+                     "breaker_trips"] {
             assert!(keys.contains(&want), "missing field {want}");
         }
     }
@@ -574,10 +672,59 @@ mod tests {
                      "demotions", "promotions", "host_hits", "host_bytes",
                      "lock_acquisitions", "lock_contended", "failed_streams",
                      "lane_restarts", "retries", "quarantined", "deadline_hits",
-                     "degraded_ms"] {
+                     "degraded_ms", "admitted", "shed", "shed_deadline",
+                     "shed_overloaded", "shed_brownout", "shed_rate",
+                     "brownout_spans", "brownout_ms", "breaker_trips"] {
             assert!(keys.contains(&want), "missing field {want}");
         }
         assert!(multi_summary(&m).contains("2 streams"));
+    }
+
+    #[test]
+    fn fault_plan_flag_forms() {
+        let parse = |s: &str| crate::util::cli::Args::parse(
+            s.split_whitespace().map(String::from));
+        let none = fault_plan_from_args(&parse("")).unwrap();
+        assert_eq!(none.seed, 0);
+        assert_eq!(none.transient_prob, 0.0);
+        assert!(!fault_flags_present(&parse("--streams 4")));
+        let p = fault_plan_from_args(&parse(
+            "--fault-seed 9 --transient-prob 0.2 --spike-prob 0.05 --spike-ms 1.5"))
+            .unwrap();
+        assert_eq!(p.seed, 9);
+        assert!((p.transient_prob - 0.2).abs() < 1e-12);
+        assert!((p.spike_prob - 0.05).abs() < 1e-12);
+        assert_eq!(p.spike, std::time::Duration::from_micros(1500));
+        assert!(fault_flags_present(&parse("--spike-ms 1")));
+        assert!(fault_plan_from_args(&parse("--transient-prob 1.5")).is_err());
+        assert!(fault_plan_from_args(&parse("--spike-ms -2")).is_err());
+        assert!(fault_plan_from_args(&parse("--fault-seed xyz")).is_err());
+    }
+
+    #[test]
+    fn serving_bench_stamps_fault_plan_on_rows() {
+        let mut b = ServingBench::new("sim-chaos");
+        b.push("clean", &ServeReport::default());
+        b.set_faults(&FaultPlan {
+            seed: 99,
+            transient_prob: 0.25,
+            spike_prob: 0.1,
+            spike: std::time::Duration::from_millis(3),
+            ..FaultPlan::none()
+        });
+        b.push("faulty", &ServeReport::default());
+        let keys = |r: &JsonRow| -> Vec<String> {
+            r.fields.iter().map(|(k, _)| k.clone()).collect()
+        };
+        assert!(!keys(&b.rows[0]).contains(&"fault_seed".to_string()),
+                "rows pushed before set_faults stay unstamped");
+        let faulty = keys(&b.rows[1]);
+        for want in ["fault_seed", "transient_prob", "spike_prob", "spike_ms"] {
+            assert!(faulty.contains(&want.to_string()), "missing stamp {want}");
+        }
+        let seed = b.rows[1].fields.iter()
+            .find(|(k, _)| k == "fault_seed").unwrap().1.clone();
+        assert_eq!(seed, "99");
     }
 
     #[test]

@@ -74,14 +74,17 @@ pub mod prelude {
                            KvCacheManager, LockStats, Lookup, RepKey,
                            SharedKvCache, TieredOut};
     pub use crate::cluster::Linkage;
-    pub use crate::coordinator::{Coordinator, MultiStreamReport, ServeConfig,
-                                 ServeReport, StreamOutcome};
+    pub use crate::coordinator::{ArrivalPlan, ArrivalProcess, BrownoutConfig,
+                                 Coordinator, MultiStreamReport, OverloadConfig,
+                                 QueryOutcome, ServeConfig, ServeReport, ShedReason,
+                                 StreamOutcome};
     pub use crate::data::{Dataset, Split};
     pub use crate::graph::{Subgraph, TextualGraph};
     pub use crate::metrics::{delta, BatchMetrics, ReliabilityStats, Table};
     pub use crate::retrieval::{GRetriever, GragRetriever, GraphFeatures, Retriever};
     pub use crate::runtime::{sim_dataset, sim_store, ArtifactStore, Backend,
-                             BackendError, BatchConfig, Engine, FaultPlan, Lane,
-                             SimBackend, SimLatency, SupervisorPolicy};
+                             BackendError, BatchConfig, BreakerConfig, Engine,
+                             FaultPlan, FullPolicy, Lane, QueueConfig, SimBackend,
+                             SimLatency, SupervisorPolicy};
     pub use crate::util::cli::Args;
 }

@@ -70,6 +70,7 @@ fn main() -> anyhow::Result<()> {
         },
         max_retries: args.usize_or("max-retries", default_cfg.max_retries as usize)
             as u32,
+        overload: default_cfg.overload,
     };
 
     let engine = Engine::start(&store)?;

@@ -102,6 +102,14 @@ pub struct LaneTimes {
     pub device_time: f64,
     /// Occupancy/stall histogram over this run's device launches.
     pub batch: BatchHistogram,
+    /// Highest queue depth ([`crate::runtime::Backend::queue_depth`])
+    /// observed at any sample point during the run.
+    pub depth_peak: u64,
+    /// Sum of sampled queue depths (mean = `depth_sum / depth_samples`).
+    pub depth_sum: u64,
+    /// Number of queue-depth samples taken (0 when the serve path never
+    /// sampled — e.g. batch paths, which do not poll lane queues).
+    pub depth_samples: u64,
 }
 
 impl LaneTimes {
@@ -116,10 +124,79 @@ impl LaneTimes {
         self.batch.observe(&t.batch);
     }
 
+    /// Record one queue-depth gauge reading (sampled by the online serve
+    /// paths at admission points, not on a timer, so heavier traffic gets
+    /// proportionally more samples).
+    pub fn sample_depth(&mut self, depth: usize) {
+        let d = depth as u64;
+        self.depth_peak = self.depth_peak.max(d);
+        self.depth_sum += d;
+        self.depth_samples += 1;
+    }
+
+    /// Mean sampled queue depth; exactly 0.0 when nothing was sampled.
+    pub fn mean_depth(&self) -> f64 {
+        if self.depth_samples == 0 {
+            return 0.0;
+        }
+        self.depth_sum as f64 / self.depth_samples as f64
+    }
+
     /// Total lane seconds attributable to this run (queue + window +
     /// execution).
     pub fn total(&self) -> f64 {
         self.queue_time + self.window_time + self.device_time
+    }
+}
+
+/// Admission-control outcome counters for one serving run: how many
+/// queries were admitted versus shed, split by why they were shed. A shed
+/// query never touched a lane — shedding happens at admission, before any
+/// device work is spent (that is the point).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ShedStats {
+    /// Queries admitted past the admission controller (served, possibly
+    /// degraded). With shedding disabled this equals the offered load.
+    pub admitted: u64,
+    /// Shed because the admission-time completion estimate already missed
+    /// the configured deadline.
+    pub shed_deadline: u64,
+    /// Shed because the backend reported [`crate::runtime::BackendError::Overloaded`]
+    /// (full bounded queue or open circuit breaker) and the retry budget
+    /// was exhausted.
+    pub shed_overloaded: u64,
+    /// Shed by the brownout ladder's deepest step (load shedding as the
+    /// last resort past degraded service).
+    pub shed_brownout: u64,
+}
+
+impl ShedStats {
+    /// Total shed queries across all reasons.
+    pub fn total_shed(&self) -> u64 {
+        self.shed_deadline + self.shed_overloaded + self.shed_brownout
+    }
+
+    /// Offered load: everything that arrived at admission.
+    pub fn offered(&self) -> u64 {
+        self.admitted + self.total_shed()
+    }
+
+    /// Fraction of offered load that was shed; exactly 0.0 with no
+    /// arrivals (never NaN — these rates land in BENCH_*.json).
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.offered();
+        if offered == 0 {
+            return 0.0;
+        }
+        self.total_shed() as f64 / offered as f64
+    }
+
+    /// Fold another run's counters into this one (fleet aggregation).
+    pub fn merge(&mut self, other: &ShedStats) {
+        self.admitted += other.admitted;
+        self.shed_deadline += other.shed_deadline;
+        self.shed_overloaded += other.shed_overloaded;
+        self.shed_brownout += other.shed_brownout;
     }
 }
 
@@ -149,6 +226,18 @@ pub struct ReliabilityStats {
     /// Total seconds spent inside recovery (from first failure detection
     /// to the op's eventual success), summed over degraded spans.
     pub degraded_secs: f64,
+    /// Admission-control outcomes (admitted vs shed, by reason). All-zero
+    /// with shedding disabled or no overload.
+    pub shed: ShedStats,
+    /// Times the brownout ladder stepped down at least one level from
+    /// healthy (a contiguous degraded-service span; stepping deeper within
+    /// one span does not start a new one).
+    pub brownout_spans: u64,
+    /// Total seconds spent at any brownout level below healthy.
+    pub brownout_secs: f64,
+    /// Lane circuit-breaker trips observed by this run (backend counter
+    /// delta across the run; fleet-wide when streams share a backend).
+    pub breaker_trips: u64,
 }
 
 impl ReliabilityStats {
@@ -165,6 +254,10 @@ impl ReliabilityStats {
         self.deadline_hits += other.deadline_hits;
         self.degraded_spans += other.degraded_spans;
         self.degraded_secs += other.degraded_secs;
+        self.shed.merge(&other.shed);
+        self.brownout_spans += other.brownout_spans;
+        self.brownout_secs += other.brownout_secs;
+        self.breaker_trips += other.breaker_trips;
     }
 }
 
@@ -642,6 +735,10 @@ mod tests {
         let b = ReliabilityStats {
             restarts: 1, retries: 3, quarantined_entries: 2,
             deadline_hits: 1, degraded_spans: 2, degraded_secs: 0.5,
+            shed: ShedStats {
+                admitted: 10, shed_deadline: 2, shed_overloaded: 1, shed_brownout: 1,
+            },
+            brownout_spans: 1, brownout_secs: 0.25, breaker_trips: 2,
         };
         a.merge(&b);
         a.merge(&b);
@@ -650,6 +747,44 @@ mod tests {
         assert_eq!(a.restarts, 2);
         assert_eq!(a.degraded_spans, 4);
         assert!((a.degraded_secs - 1.0).abs() < 1e-12);
+        assert_eq!(a.shed.admitted, 20);
+        assert_eq!(a.shed.total_shed(), 8);
+        assert_eq!(a.shed.offered(), 28);
+        assert_eq!(a.brownout_spans, 2);
+        assert!((a.brownout_secs - 0.5).abs() < 1e-12);
+        assert_eq!(a.breaker_trips, 4);
+        // a merely-shedding run is NOT clean: shed queries are a service
+        // degradation even though nothing crashed
+        let only_shed = ReliabilityStats {
+            shed: ShedStats { shed_deadline: 1, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(!only_shed.is_clean());
+    }
+
+    #[test]
+    fn shed_rate_is_finite_for_every_corner() {
+        // extends the zero-wall sweep: shed/depth rates flow into
+        // BENCH_*.json and must never emit NaN, even with zero arrivals.
+        let empty = ShedStats::default();
+        assert_eq!(empty.shed_rate(), 0.0);
+        assert_eq!(empty.offered(), 0);
+        let all_shed = ShedStats { shed_deadline: 4, ..Default::default() };
+        assert!((all_shed.shed_rate() - 1.0).abs() < 1e-12);
+        let mixed = ShedStats {
+            admitted: 6, shed_deadline: 1, shed_overloaded: 2, shed_brownout: 1,
+        };
+        assert!((mixed.shed_rate() - 0.4).abs() < 1e-12);
+        assert!(mixed.shed_rate().is_finite());
+        // depth gauge: unsampled means an exact 0.0 mean, never 0/0
+        let lt = LaneTimes::default();
+        assert_eq!(lt.mean_depth(), 0.0);
+        let mut lt = LaneTimes::default();
+        lt.sample_depth(3);
+        lt.sample_depth(5);
+        lt.sample_depth(0);
+        assert_eq!(lt.depth_peak, 5);
+        assert!((lt.mean_depth() - 8.0 / 3.0).abs() < 1e-12);
     }
 
     #[test]

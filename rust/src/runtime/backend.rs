@@ -55,6 +55,13 @@ use super::batch::BatchInfo;
 ///   flight. Every KV handle minted by the dead incarnation is gone; the
 ///   caller must treat cached handles from it as invalid (see
 ///   [`Backend::kv_current`]) and recompute.
+/// * [`Overloaded`](BackendError::Overloaded) — the lane refused the
+///   submission because its bounded queue is full (or its circuit breaker
+///   is open). Nothing was enqueued and no backend state was touched.
+///   Retryable **only with backoff**: an immediate resubmit lands on the
+///   same full queue, so schedulers must wait (or shed the query) first —
+///   unlike [`Transient`](BackendError::Transient), where an immediate
+///   retry is fine.
 /// * [`Fatal`](BackendError::Fatal) — not retryable: bad arguments, unknown
 ///   module, malformed backend output. Retrying the same request fails the
 ///   same way.
@@ -64,6 +71,9 @@ pub enum BackendError {
     Transient { op: &'static str, reason: String },
     /// The lane worker died; its KV incarnation is lost.
     LaneDead { lane: Lane, reason: String },
+    /// The lane refused the submission (bounded queue full, or circuit
+    /// breaker open). Nothing was enqueued; retry only after backing off.
+    Overloaded { lane: Lane, reason: String },
     /// Terminal: retrying cannot succeed.
     Fatal { reason: String },
 }
@@ -76,6 +86,9 @@ impl std::fmt::Display for BackendError {
             }
             BackendError::LaneDead { lane, reason } => {
                 write!(f, "{} lane dead: {reason}", lane.name())
+            }
+            BackendError::Overloaded { lane, reason } => {
+                write!(f, "{} lane overloaded: {reason}", lane.name())
             }
             BackendError::Fatal { reason } => write!(f, "backend error: {reason}"),
         }
@@ -93,6 +106,10 @@ impl BackendError {
         BackendError::LaneDead { lane, reason: reason.into() }
     }
 
+    pub fn overloaded(lane: Lane, reason: impl Into<String>) -> BackendError {
+        BackendError::Overloaded { lane, reason: reason.into() }
+    }
+
     pub fn fatal(reason: impl std::fmt::Display) -> BackendError {
         BackendError::Fatal { reason: reason.to_string() }
     }
@@ -103,7 +120,10 @@ impl BackendError {
     }
 
     /// Whether resubmitting (possibly after recomputing lost KV state)
-    /// may succeed: true for `Transient` and `LaneDead`, false for `Fatal`.
+    /// may succeed: true for `Transient`, `LaneDead` and `Overloaded`,
+    /// false for `Fatal`. `Overloaded` is retryable **only with backoff**
+    /// (check [`is_overloaded`](Self::is_overloaded) before an immediate
+    /// retry) — resubmitting instantly just hammers the same full queue.
     pub fn is_retryable(&self) -> bool {
         !matches!(self, BackendError::Fatal { .. })
     }
@@ -111,6 +131,12 @@ impl BackendError {
     /// Whether this failure invalidated the lane's KV incarnation.
     pub fn is_lane_dead(&self) -> bool {
         matches!(self, BackendError::LaneDead { .. })
+    }
+
+    /// Whether the lane refused the submission for lack of capacity
+    /// (bounded queue full or circuit breaker open). Retry implies backoff.
+    pub fn is_overloaded(&self) -> bool {
+        matches!(self, BackendError::Overloaded { .. })
     }
 
     /// Pull the typed taxonomy back out of an `anyhow` chain (the
@@ -142,6 +168,146 @@ impl Lane {
     }
 }
 
+/// What a lane does when a work submission finds its bounded queue full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FullPolicy {
+    /// Wait up to `timeout` for a slot, then fail
+    /// [`BackendError::Overloaded`]. A submit therefore never blocks
+    /// longer than the timeout — bounded queues mean bounded waits.
+    Block { timeout: std::time::Duration },
+    /// Fail [`BackendError::Overloaded`] immediately.
+    Reject,
+}
+
+/// Bounded-queue policy for a lane's submit path. `capacity == 0` means
+/// unbounded (the pre-overload-plane behaviour, and the default): work
+/// submissions are never refused. With a nonzero capacity, at most
+/// `capacity` *work* requests (prefill/extend/generate/encode — anything
+/// that occupies device time) may be queued or in flight on the lane at
+/// once; control traffic (release/warmup/stats/tier moves) always passes,
+/// since refusing a release would leak KV under the very pressure the
+/// bound exists to relieve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueConfig {
+    /// Maximum queued-or-executing work requests per lane; 0 = unbounded.
+    pub capacity: usize,
+    /// What to do when the queue is full.
+    pub full_policy: FullPolicy,
+}
+
+impl Default for QueueConfig {
+    fn default() -> QueueConfig {
+        QueueConfig::unbounded()
+    }
+}
+
+impl QueueConfig {
+    /// No bound (the default): submissions always enqueue.
+    pub fn unbounded() -> QueueConfig {
+        QueueConfig { capacity: 0, full_policy: FullPolicy::Reject }
+    }
+
+    /// Bounded queue that fails fast when full.
+    pub fn reject(capacity: usize) -> QueueConfig {
+        QueueConfig { capacity, full_policy: FullPolicy::Reject }
+    }
+
+    /// Bounded queue that waits up to `timeout` for a slot before failing.
+    pub fn block(capacity: usize, timeout: std::time::Duration) -> QueueConfig {
+        QueueConfig { capacity, full_policy: FullPolicy::Block { timeout } }
+    }
+
+    /// Whether this config actually bounds the queue.
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+}
+
+/// Admission gate a lane's submit path consults before enqueueing work:
+/// a counted semaphore over the lane's `mpsc` channel, enforcing
+/// [`QueueConfig`]. Shared by the sim backend and the PJRT engine so the
+/// `Overloaded` contract doesn't fork between backends.
+///
+/// `admit` is called on the submitting thread (charged to the caller, like
+/// the enqueue itself); `release` is called by the lane worker when it
+/// *picks up* the request, so "depth" counts queued work, which is exactly
+/// the backlog an admission controller wants to see.
+pub(crate) struct QueueGate {
+    cfg: QueueConfig,
+    depth: std::sync::Mutex<usize>,
+    freed: std::sync::Condvar,
+}
+
+impl QueueGate {
+    pub(crate) fn new(cfg: QueueConfig) -> QueueGate {
+        QueueGate { cfg, depth: std::sync::Mutex::new(0), freed: std::sync::Condvar::new() }
+    }
+
+    /// Take a queue slot for one work request, or fail `Overloaded` per
+    /// the configured full policy. Unbounded configs always admit.
+    pub(crate) fn admit(&self, lane: Lane) -> Result<(), BackendError> {
+        let cap = self.cfg.capacity;
+        let mut depth = self.depth.lock().unwrap();
+        if cap == 0 {
+            *depth += 1;
+            return Ok(());
+        }
+        if *depth < cap {
+            *depth += 1;
+            return Ok(());
+        }
+        match self.cfg.full_policy {
+            FullPolicy::Reject => Err(BackendError::overloaded(
+                lane,
+                format!("queue full ({cap} requests queued, policy: reject)"),
+            )),
+            FullPolicy::Block { timeout } => {
+                let deadline = std::time::Instant::now() + timeout;
+                loop {
+                    let now = std::time::Instant::now();
+                    if *depth < cap {
+                        *depth += 1;
+                        return Ok(());
+                    }
+                    if now >= deadline {
+                        return Err(BackendError::overloaded(
+                            lane,
+                            format!("queue full ({cap} requests queued, blocked \
+                                     {timeout:?} without a slot freeing)"),
+                        ));
+                    }
+                    let (d, _) = self.freed.wait_timeout(depth, deadline - now).unwrap();
+                    depth = d;
+                }
+            }
+        }
+    }
+
+    /// Free `n` queue slots (the lane worker picked up `n` work requests).
+    pub(crate) fn release(&self, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let mut depth = self.depth.lock().unwrap();
+        *depth = depth.saturating_sub(n);
+        drop(depth);
+        self.freed.notify_all();
+    }
+
+    /// Current queued-work depth (the gauge sampled into `LaneTimes`).
+    pub(crate) fn depth(&self) -> usize {
+        *self.depth.lock().unwrap()
+    }
+
+    /// Zero the depth and wake all blocked submitters: a lane restart drops
+    /// the old channel (and every request queued in it), so the slots those
+    /// requests held no longer correspond to anything.
+    pub(crate) fn reset(&self) {
+        *self.depth.lock().unwrap() = 0;
+        self.freed.notify_all();
+    }
+}
+
 /// Opaque reference to a backend-resident KV cache (k & v buffers).
 /// Deliberately not `Clone`: exactly one owner, released explicitly.
 #[derive(Debug, PartialEq, Eq, Hash)]
@@ -169,6 +335,11 @@ pub struct EngineStats {
     /// across lanes). 0 on a fault-free run; the PJRT engine treats lane
     /// death as terminal today and always reports 0.
     pub lane_restarts: u64,
+    /// Times a lane circuit breaker tripped open (K consecutive transients
+    /// within its window; submissions then fail fast as `Overloaded` until
+    /// a half-open probe succeeds). Summed across lanes; always 0 for
+    /// backends without a breaker (the PJRT engine today).
+    pub breaker_trips: u64,
 }
 
 /// Lane-side timing of one executed call, measured on the worker thread so
@@ -349,6 +520,13 @@ pub trait Backend: Sync {
     /// Merged execution counters across all lanes.
     fn stats(&self) -> Result<EngineStats, BackendError>;
 
+    /// Work requests currently queued (or executing) on `lane` — the
+    /// queue-depth gauge overload control samples into `LaneTimes`.
+    /// Backends without bounded-queue accounting keep the default 0.
+    fn queue_depth(&self, _lane: Lane) -> usize {
+        0
+    }
+
     /// Whether `kv` was minted by the *current* incarnation of its lane.
     /// A backend whose supervisor restarted a lane loses every KV handle
     /// that incarnation held; callers holding cached handles use this to
@@ -430,6 +608,7 @@ pub(crate) fn merge_stats(parts: Vec<EngineStats>) -> EngineStats {
         out.host_kv_bytes += p.host_kv_bytes;
         out.unbatched_fallbacks += p.unbatched_fallbacks;
         out.lane_restarts += p.lane_restarts;
+        out.breaker_trips += p.breaker_trips;
     }
     out.calls.sort_by(|a, b| a.0.cmp(&b.0));
     out
@@ -507,6 +686,78 @@ mod tests {
         assert!(!fatal.is_retryable());
         let dead = BackendError::lane_dead(Lane::Llm, "killed");
         assert!(dead.to_string().contains("lane"), "LaneDead names the lane");
+
+        let full = BackendError::overloaded(Lane::Llm, "queue full");
+        assert!(full.is_retryable(), "overload clears — retry (with backoff) is sane");
+        assert!(full.is_overloaded() && !full.is_lane_dead());
+        assert!(!dead.is_overloaded() && !fatal.is_overloaded());
+        assert!(full.to_string().contains("llm lane overloaded"),
+                "Overloaded names the lane: {full}");
+    }
+
+    #[test]
+    fn queue_gate_reject_policy_fails_fast_when_full() {
+        let g = QueueGate::new(QueueConfig::reject(2));
+        g.admit(Lane::Llm).unwrap();
+        g.admit(Lane::Llm).unwrap();
+        assert_eq!(g.depth(), 2);
+        let err = g.admit(Lane::Llm).unwrap_err();
+        assert!(err.is_overloaded(), "full reject queue must be Overloaded: {err}");
+        g.release(1);
+        assert_eq!(g.depth(), 1);
+        g.admit(Lane::Llm).expect("freed slot admits again");
+    }
+
+    #[test]
+    fn queue_gate_block_policy_times_out_bounded() {
+        let g = QueueGate::new(QueueConfig::block(
+            1, std::time::Duration::from_millis(5)));
+        g.admit(Lane::Llm).unwrap();
+        let t0 = std::time::Instant::now();
+        let err = g.admit(Lane::Llm).unwrap_err();
+        assert!(err.is_overloaded());
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(5),
+                "Block must wait for the timeout before failing");
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5),
+                "a full bounded queue must never block (nearly) forever");
+    }
+
+    #[test]
+    fn queue_gate_block_policy_wakes_on_release() {
+        use std::sync::Arc;
+        let g = Arc::new(QueueGate::new(QueueConfig::block(
+            1, std::time::Duration::from_secs(10))));
+        g.admit(Lane::Llm).unwrap();
+        let g2 = Arc::clone(&g);
+        let waiter = std::thread::spawn(move || g2.admit(Lane::Llm));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        g.release(1);
+        waiter.join().unwrap().expect("released slot must wake the blocked submit");
+        assert_eq!(g.depth(), 1);
+    }
+
+    #[test]
+    fn queue_gate_unbounded_tracks_depth_without_refusing() {
+        let g = QueueGate::new(QueueConfig::unbounded());
+        assert!(!QueueConfig::unbounded().enabled());
+        for _ in 0..100 {
+            g.admit(Lane::Gnn).unwrap();
+        }
+        assert_eq!(g.depth(), 100, "unbounded still gauges depth");
+        g.release(100);
+        assert_eq!(g.depth(), 0);
+    }
+
+    #[test]
+    fn queue_gate_reset_frees_everything() {
+        let g = QueueGate::new(QueueConfig::reject(1));
+        g.admit(Lane::Llm).unwrap();
+        assert!(g.admit(Lane::Llm).is_err());
+        g.reset();
+        assert_eq!(g.depth(), 0);
+        g.admit(Lane::Llm).expect("reset gate admits again");
+        g.release(5);
+        assert_eq!(g.depth(), 0, "release never underflows");
     }
 
     #[test]
@@ -534,6 +785,7 @@ mod tests {
             host_kv_bytes: 0,
             unbatched_fallbacks: 1,
             lane_restarts: 1,
+            breaker_trips: 1,
         };
         let b = EngineStats {
             calls: vec![("gat.encode".into(), 4, 0.25)],
@@ -542,6 +794,7 @@ mod tests {
             host_kv_bytes: 8,
             unbatched_fallbacks: 2,
             lane_restarts: 2,
+            breaker_trips: 0,
         };
         let m = merge_stats(vec![a, b]);
         assert_eq!(m.live_kv, 3);
@@ -549,6 +802,7 @@ mod tests {
         assert_eq!(m.host_kv_bytes, 8);
         assert_eq!(m.unbatched_fallbacks, 3);
         assert_eq!(m.lane_restarts, 3);
+        assert_eq!(m.breaker_trips, 1);
         assert_eq!(m.calls[0].0, "gat.encode", "calls must be re-sorted");
         assert_eq!(m.calls[1].0, "m.prefill");
     }

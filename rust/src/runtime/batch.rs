@@ -34,6 +34,20 @@
 //! [`BatchInfo::leader`] marks exactly one member per launch;
 //! `metrics::LaneTimes` sums `device_secs` over leaders only, keeping
 //! lane-busy fractions ≤ wall time no matter the occupancy.
+//!
+//! # Interaction with bounded queues
+//!
+//! When the lane runs under a [`super::QueueConfig`] bound, a queue slot is
+//! taken at submit and released only when the worker *pulls* the request off
+//! the channel — for a fused launch that means [`collect_window`] returning,
+//! at which point the lane releases one slot per collected member in a
+//! single step. Members sitting inside an open batch window therefore still
+//! count against the bound (they have been picked but not yet launched for
+//! under `max_wait`); this is deliberate — the bound tracks admitted,
+//! unfinished submissions, so an open window cannot be used to smuggle
+//! unbounded work past admission control. `Backend::queue_depth` reports
+//! the same number: slots currently held, whether waiting in the channel or
+//! riding a forming window.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};

@@ -68,15 +68,35 @@
 //! the full contract. Ops with a batched HLO entry (`prefill_batch<n>`)
 //! execute genuinely fused; a multi-member batch without one runs as a
 //! per-member loop and increments [`EngineStats::unbatched_fallbacks`].
+//!
+//! # Bounded queues
+//!
+//! Each lane's submit path runs through the same [`QueueConfig`] contract
+//! as the sim backend: `SUBGCACHE_QUEUE_CAP` bounds the number of *work*
+//! requests (prefill/extend/generate/encode) queued per lane, and
+//! `SUBGCACHE_QUEUE_BLOCK_MS` selects the `Block{timeout}` full policy
+//! (unset = `Reject`). A full queue fails the submit with
+//! [`BackendError::Overloaded`] — retryable only with backoff — instead of
+//! growing the mpsc channel without bound. Control traffic
+//! (release/demote/promote/warmup/stats/shutdown) always bypasses the
+//! bound so the cache and stats planes keep working under overload. A
+//! queued request occupies its slot until the lane worker picks it into a
+//! batch window, so [`Backend::queue_depth`] gauges waiting work, not
+//! in-flight work. The engine has **no circuit breaker**: unlike the sim
+//! backend it has no lane supervisor, so a sick lane is terminal
+//! ([`BackendError::LaneDead`]) rather than a transient source worth
+//! tripping on.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::backend::{merge_stats, Backend, BackendError, CallTiming, EngineStats,
                      KvHandle, Lane, PendingEncode, PendingExtend, PendingGenerate,
-                     PendingKv, PendingPrefill, PendingPromote, Ticket};
+                     PendingKv, PendingPrefill, PendingPromote, QueueConfig, QueueGate,
+                     Ticket};
 use super::batch::{collect_window, BatchConfig, BatchInfo, Collected};
 use super::manifest::{EntrySpec, Manifest, ModuleSpec};
 
@@ -165,6 +185,9 @@ struct LaneHandle {
 pub struct Engine {
     /// Indexed by `Lane as usize` ([`Lane::Llm`] = 0, [`Lane::Gnn`] = 1).
     lanes: [LaneHandle; 2],
+    /// Per-lane admission gates bounding queued *work* requests (shared
+    /// with each lane worker, which frees slots at batch pickup).
+    gates: [Arc<QueueGate>; 2],
     /// Copy of the manifest kept on the handle side so byte-sizing and
     /// lane-routing queries need no worker-thread roundtrip.
     manifest: Manifest,
@@ -182,6 +205,30 @@ fn batch_config_from_env() -> BatchConfig {
         .and_then(|v| v.parse().ok())
         .unwrap_or(0u64);
     BatchConfig::new(max_batch, Duration::from_millis(wait_ms))
+}
+
+/// Default per-lane [`QueueConfig`] from the environment: unbounded unless
+/// `SUBGCACHE_QUEUE_CAP` sets a capacity; `SUBGCACHE_QUEUE_BLOCK_MS`
+/// selects the blocking full policy (otherwise a full queue rejects).
+fn queue_config_from_env() -> QueueConfig {
+    queue_config_from(
+        std::env::var("SUBGCACHE_QUEUE_CAP").ok().as_deref(),
+        std::env::var("SUBGCACHE_QUEUE_BLOCK_MS").ok().as_deref(),
+    )
+}
+
+/// Pure core of [`queue_config_from_env`]: unset/unparsable/zero capacity
+/// means unbounded (the seed's behaviour); a capacity with no (or
+/// unparsable) block window means reject-when-full.
+fn queue_config_from(cap: Option<&str>, block_ms: Option<&str>) -> QueueConfig {
+    let cap: usize = cap.and_then(|v| v.parse().ok()).unwrap_or(0);
+    if cap == 0 {
+        return QueueConfig::unbounded();
+    }
+    match block_ms.and_then(|v| v.parse::<u64>().ok()) {
+        Some(ms) => QueueConfig::block(cap, Duration::from_millis(ms)),
+        None => QueueConfig::reject(cap),
+    }
 }
 
 impl Engine {
@@ -204,16 +251,19 @@ impl Engine {
             trace: std::env::var("SUBGCACHE_TRACE").is_ok(),
             host_bounce: std::env::var("SUBGCACHE_KV_HOST_BOUNCE").is_ok(),
         };
+        let queue = queue_config_from_env();
+        let gates = [Arc::new(QueueGate::new(queue)), Arc::new(QueueGate::new(queue))];
         let spawn = |lane: Lane| -> anyhow::Result<LaneHandle> {
             let (tx, rx) = channel::<Req>();
             let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
             let root = root.clone();
             let thread_manifest = manifest.clone();
             let lane_cfg = if lane == Lane::Llm { cfg } else { BatchConfig::off() };
+            let gate = gates[lane as usize].clone();
             let thread = std::thread::Builder::new()
                 .name(format!("pjrt-{}", lane.name()))
                 .spawn(move || {
-                    lane_main(root, thread_manifest, opts, lane_cfg, rx, ready_tx)
+                    lane_main(root, thread_manifest, opts, lane_cfg, gate, rx, ready_tx)
                 })?;
             ready_rx.recv().map_err(|_| {
                 anyhow::anyhow!("engine {} lane died during startup", lane.name())
@@ -222,7 +272,7 @@ impl Engine {
         };
         let llm = spawn(Lane::Llm)?;
         let gnn = spawn(Lane::Gnn)?;
-        Ok(Engine { lanes: [llm, gnn], manifest })
+        Ok(Engine { lanes: [llm, gnn], gates, manifest })
     }
 
     /// Lane a module executes on, derived from its manifest kind.
@@ -237,17 +287,28 @@ impl Engine {
         })
     }
 
-    /// Enqueue a request on a lane. A dead lane yields
+    /// Enqueue a request on a lane. Work requests (the fusible ops) pass
+    /// the lane's admission gate first: a full bounded queue yields
+    /// [`BackendError::Overloaded`] without enqueuing anything, while
+    /// control traffic always goes through. A dead lane yields
     /// [`BackendError::LaneDead`] (failing the one request) instead of
     /// panicking the caller's thread; the PJRT engine has no supervisor
     /// today, so lane death is terminal here.
     fn send(&self, lane: Lane, req: Req) -> Result<(), BackendError> {
-        self.lanes[lane as usize].tx.send(req).map_err(|_| {
+        let is_work = req_key(&req).is_some();
+        if is_work {
+            self.gates[lane as usize].admit(lane)?;
+        }
+        let sent = self.lanes[lane as usize].tx.send(req).map_err(|_| {
             BackendError::lane_dead(
                 lane,
                 format!("engine {} lane worker has shut down", lane.name()),
             )
-        })
+        });
+        if is_work && sent.is_err() {
+            self.gates[lane as usize].release(1);
+        }
+        sent
     }
 
     /// Submit a prefill of `tokens` (padded to S, real length `plen`) on
@@ -459,6 +520,10 @@ impl Backend for Engine {
     fn stats(&self) -> Result<EngineStats, BackendError> {
         Engine::stats(self)
     }
+
+    fn queue_depth(&self, lane: Lane) -> usize {
+        self.gates[lane as usize].depth()
+    }
 }
 
 impl Drop for Engine {
@@ -563,7 +628,7 @@ fn tier_timing(submitted: Instant, picked: Instant) -> CallTiming {
 }
 
 fn lane_main(root: PathBuf, manifest: Manifest, opts: EngineOpts, cfg: BatchConfig,
-             rx: Receiver<Req>, ready: Sender<anyhow::Result<()>>) {
+             gate: Arc<QueueGate>, rx: Receiver<Req>, ready: Sender<anyhow::Result<()>>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => c,
         Err(e) => {
@@ -639,6 +704,7 @@ fn lane_main(root: PathBuf, manifest: Manifest, opts: EngineOpts, cfg: BatchConf
                         host_kv_bytes: st.host_kv_bytes,
                         unbatched_fallbacks: st.unbatched_fallbacks,
                         lane_restarts: 0, // the engine has no lane supervisor
+                        breaker_trips: 0, // ... and therefore no circuit breaker
                     });
                 }
                 Req::Shutdown => return,
@@ -648,6 +714,10 @@ fn lane_main(root: PathBuf, manifest: Manifest, opts: EngineOpts, cfg: BatchConf
         }
         let mut col = collect_window(&rx, req, cfg, |a, b| req_key(a) == req_key(b));
         carry = col.carry.take();
+        // Free the admission slots of everything picked into this batch:
+        // queue depth gauges *waiting* work. A carried request keeps its
+        // slot until the batch it actually executes in.
+        gate.release(col.members.len());
         st.run_batch(col);
     }
 }
@@ -1274,5 +1344,30 @@ mod tests {
         assert_eq!(lane_for_kind("llm"), Some(Lane::Llm));
         assert_eq!(lane_for_kind("gnn"), Some(Lane::Gnn));
         assert_eq!(lane_for_kind("tts"), None);
+    }
+
+    #[test]
+    fn queue_config_parsing_matches_env_contract() {
+        use crate::runtime::backend::FullPolicy;
+
+        // unset / unparsable / zero capacity: unbounded, the seed behaviour.
+        assert!(!queue_config_from(None, None).enabled());
+        assert!(!queue_config_from(Some("nope"), None).enabled());
+        assert!(!queue_config_from(Some("0"), Some("5")).enabled());
+
+        // a capacity alone rejects when full.
+        let cfg = queue_config_from(Some("8"), None);
+        assert_eq!(cfg.capacity, 8);
+        assert_eq!(cfg.full_policy, FullPolicy::Reject);
+
+        // a capacity plus a block window blocks (bounded) when full.
+        let cfg = queue_config_from(Some("8"), Some("25"));
+        assert_eq!(cfg.capacity, 8);
+        assert_eq!(cfg.full_policy,
+                   FullPolicy::Block { timeout: Duration::from_millis(25) });
+
+        // an unparsable block window falls back to reject, not unbounded.
+        let cfg = queue_config_from(Some("8"), Some("soon"));
+        assert_eq!(cfg.full_policy, FullPolicy::Reject);
     }
 }

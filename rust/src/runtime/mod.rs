@@ -57,11 +57,50 @@
 //!   with the request queued or in flight. Every KV handle minted by that
 //!   incarnation is device-garbage: check cached handles with
 //!   [`Backend::kv_current`], quarantine the stale ones, recompute.
+//! * [`BackendError::Overloaded`] — the lane *refused* the submission for
+//!   lack of capacity: its bounded queue ([`QueueConfig`]) is full, or its
+//!   circuit breaker is open. Nothing was enqueued and no state changed —
+//!   distinct from `Transient`, which is a failure of accepted work.
 //! * [`BackendError::Fatal`] — terminal (missing entry point, malformed
 //!   output); retrying fails identically.
 //!
-//! `is_retryable()` is the scheduler's branch: `Transient` and `LaneDead`
-//! are retryable (the latter after recomputing lost KV), `Fatal` is not.
+//! `is_retryable()` is the scheduler's branch: `Transient`, `LaneDead` and
+//! `Overloaded` are retryable (`LaneDead` after recomputing lost KV), and
+//! `Fatal` is not — but `Overloaded` is retryable **only with backoff**
+//! (`is_overloaded()` is the sub-branch): hammering a full queue or an open
+//! breaker with immediate resubmits is exactly the retry storm the overload
+//! plane exists to stop. The coordinator's `RetryBudget` enforces a capped
+//! exponential backoff on every `Overloaded` admission.
+//!
+//! # Bounded queues & the overload plane
+//!
+//! Each lane's submit path can be bounded by a [`QueueConfig`]: `capacity`
+//! caps in-flight work requests per lane, and `full_policy` picks between
+//! failing fast ([`FullPolicy::Reject`] → `Overloaded`) and blocking up to
+//! a timeout ([`FullPolicy::Block`] → `Overloaded` only after the timeout —
+//! a submit never blocks forever). Slots are taken at submit and released
+//! at worker pickup; control traffic (release/warmup/stats) bypasses the
+//! bound so backpressure can never deadlock cleanup. The live gauge is
+//! [`Backend::queue_depth`], which serving samples into
+//! [`crate::metrics::LaneTimes`]. The sim accepts a config via
+//! [`SimBackend::start_guarded`]; the PJRT engine reads
+//! `SUBGCACHE_QUEUE_CAP` / `SUBGCACHE_QUEUE_BLOCK_MS` at startup, next to
+//! its `SUBGCACHE_MAX_BATCH` batching vars.
+//!
+//! # Circuit breaker
+//!
+//! [`SimBackend::start_guarded`] can also arm a per-lane circuit breaker
+//! ([`BreakerConfig`]): K consecutive `Transient` failures within a rolling
+//! window trip the lane open — submissions then fail fast as `Overloaded`
+//! (no queueing, no device work) until a cooldown elapses, after which one
+//! half-open probe submission is admitted; its success closes the breaker,
+//! another transient re-opens it. The breaker observes *results* only — it
+//! never advances the fault plan's op counters, so arming it does not
+//! perturb seeded chaos schedules. Trips are counted in
+//! [`EngineStats::breaker_trips`] and surface as
+//! `ReliabilityStats::breaker_trips` deltas on serving reports. The PJRT
+//! engine has no breaker (no supervisor: lane death is terminal there, so
+//! there is no sick-but-alive state to protect).
 //!
 //! # Lane supervision
 //!
@@ -147,15 +186,15 @@ mod gnn;
 mod manifest;
 mod sim;
 
-pub use backend::{Backend, BackendError, CallTiming, EngineStats, KvHandle, Lane,
-                  PendingEncode, PendingExtend, PendingGenerate, PendingKv,
-                  PendingPrefill, PendingPromote};
+pub use backend::{Backend, BackendError, CallTiming, EngineStats, FullPolicy, KvHandle,
+                  Lane, PendingEncode, PendingExtend, PendingGenerate, PendingKv,
+                  PendingPrefill, PendingPromote, QueueConfig};
 pub use batch::{BatchConfig, BatchInfo};
 pub use engine::Engine;
 pub use gnn::{pack_subgraph, PackedSubgraph};
 pub use manifest::{ArgSpec, Constants, EntrySpec, LlmDims, Manifest, ModuleSpec, ParamSpec};
-pub use sim::{sim_dataset, sim_store, BatchSlope, FaultPlan, SimBackend, SimLatency,
-              SupervisorPolicy, SIM_BACKBONE};
+pub use sim::{sim_dataset, sim_store, BatchSlope, BreakerConfig, FaultPlan, SimBackend,
+              SimLatency, SupervisorPolicy, SIM_BACKBONE};
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;

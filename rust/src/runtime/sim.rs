@@ -58,7 +58,8 @@ use crate::tokenizer::{split_text, Tokenizer, BOS_ID, EOS_ID, PAD_ID, UNK_ID};
 
 use super::backend::{merge_stats, Backend, BackendError, CallTiming, EngineStats,
                      KvHandle, Lane, PendingEncode, PendingExtend, PendingGenerate,
-                     PendingKv, PendingPrefill, PendingPromote, Ticket};
+                     PendingKv, PendingPrefill, PendingPromote, QueueConfig, QueueGate,
+                     Ticket};
 use super::batch::{collect_window, BatchConfig, BatchInfo, Collected};
 use super::engine::lane_for_kind;
 use super::manifest::{Constants, LlmDims, Manifest, ModuleSpec};
@@ -331,6 +332,151 @@ impl SupervisorPolicy {
     }
 }
 
+/// Lane circuit-breaker knobs: `threshold` *consecutive* transient failures
+/// within `window` of each other trip the lane's breaker open. While open,
+/// work submissions on the lane fail fast as [`BackendError::Overloaded`]
+/// (nothing is enqueued, so a retry storm can't pile onto a sick lane).
+/// After `cooldown`, exactly one **half-open probe** submission is admitted:
+/// its success closes the breaker, another transient re-opens it for a
+/// fresh cooldown. Control traffic (release/warmup/stats/tier moves) is
+/// never gated.
+#[derive(Debug, Clone, Copy)]
+pub struct BreakerConfig {
+    /// Consecutive transients that trip the breaker.
+    pub threshold: u32,
+    /// Two failures further apart than this do not count as consecutive.
+    pub window: Duration,
+    /// How long the breaker stays open before admitting a half-open probe.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            threshold: 5,
+            window: Duration::from_secs(1),
+            cooldown: Duration::from_millis(25),
+        }
+    }
+}
+
+#[derive(Default)]
+struct BreakerInner {
+    consecutive: u32,
+    last_failure: Option<Instant>,
+    /// `Some` while the breaker is open (or half-open, once the deadline
+    /// has passed and a probe is eligible).
+    open_until: Option<Instant>,
+    /// A half-open probe is in flight; further submits stay rejected until
+    /// its outcome is recorded.
+    probing: bool,
+    trips: u64,
+}
+
+/// Per-lane circuit-breaker state, shared between the submit path (which
+/// checks it) and the lane workers (which record executed-op outcomes into
+/// it). Observing *results* — never [`FaultState::on_op`] decisions — keeps
+/// the fault-roll op indices identical with and without a breaker, so
+/// seeded chaos runs stay bit-reproducible.
+struct BreakerState {
+    cfg: Option<BreakerConfig>,
+    lanes: [Mutex<BreakerInner>; 2],
+}
+
+impl BreakerState {
+    fn new(cfg: Option<BreakerConfig>) -> BreakerState {
+        BreakerState { cfg, lanes: [Mutex::default(), Mutex::default()] }
+    }
+
+    fn lock(&self, lane: Lane) -> std::sync::MutexGuard<'_, BreakerInner> {
+        match self.lanes[lane as usize].lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    /// Gate one work submission: `Err(Overloaded)` while the breaker is
+    /// open, except for the single half-open probe after the cooldown.
+    fn check(&self, lane: Lane) -> Result<(), BackendError> {
+        if self.cfg.is_none() {
+            return Ok(());
+        }
+        let mut b = self.lock(lane);
+        let Some(until) = b.open_until else { return Ok(()) };
+        let now = Instant::now();
+        if now < until {
+            return Err(BackendError::overloaded(
+                lane,
+                format!("circuit breaker open after {} consecutive transients \
+                         (half-open probe in {:?})",
+                        b.consecutive, until - now),
+            ));
+        }
+        if b.probing {
+            return Err(BackendError::overloaded(
+                lane, "circuit breaker half-open; probe already in flight"));
+        }
+        b.probing = true;
+        Ok(())
+    }
+
+    /// Record one executed work op's outcome (lane-worker side). `ok`
+    /// closes the breaker and zeroes the consecutive count; a transient
+    /// failure counts toward the threshold and re-opens a probing breaker.
+    fn record(&self, lane: Lane, ok: bool) {
+        let Some(cfg) = self.cfg else { return };
+        let mut b = self.lock(lane);
+        if ok {
+            let trips = b.trips;
+            *b = BreakerInner { trips, ..BreakerInner::default() };
+            return;
+        }
+        let now = Instant::now();
+        let within = b
+            .last_failure
+            .is_some_and(|t| now.duration_since(t) <= cfg.window);
+        b.consecutive = if within { b.consecutive + 1 } else { 1 };
+        b.last_failure = Some(now);
+        let open = b.open_until.is_some();
+        if b.probing || (!open && b.consecutive >= cfg.threshold) {
+            // closed -> open on threshold, or half-open -> open on a failed
+            // probe; each transition counts as a trip
+            b.open_until = Some(now + cfg.cooldown);
+            b.probing = false;
+            b.trips += 1;
+        }
+    }
+
+    /// Forget everything for `lane` (keeping the trip counter): a restarted
+    /// worker is a fresh incarnation and deserves a closed breaker.
+    fn reset(&self, lane: Lane) {
+        if self.cfg.is_none() {
+            return;
+        }
+        let mut b = self.lock(lane);
+        *b = BreakerInner { trips: b.trips, ..BreakerInner::default() };
+    }
+
+    fn trips(&self) -> u64 {
+        if self.cfg.is_none() {
+            return 0;
+        }
+        Lane::ALL.iter().map(|&l| self.lock(l).trips).sum()
+    }
+}
+
+/// Feed one executed op's outcome to the breaker: success closes it, a
+/// `Transient` counts toward the trip threshold, and anything else (Fatal
+/// misuse, staleness) is not a lane-health signal and is ignored.
+fn observe_breaker<T>(breaker: &BreakerState, lane: Lane,
+                      r: &Result<T, BackendError>) {
+    match r {
+        Ok(_) => breaker.record(lane, true),
+        Err(BackendError::Transient { .. }) => breaker.record(lane, false),
+        Err(_) => {}
+    }
+}
+
 /// What [`FaultState::on_op`] decided for one op.
 enum Inject {
     None,
@@ -555,12 +701,19 @@ pub struct SimBackend {
     /// Host KV tier — backend-level (not lane-level) so demoted copies
     /// survive lane restarts.
     host: Arc<SimHostStore>,
+    /// Per-lane bounded-queue gates (unbounded by default); work submits
+    /// take a slot here, the lane worker frees it at pickup.
+    gates: [Arc<QueueGate>; 2],
+    /// Per-lane circuit breakers (inert unless started with a
+    /// [`BreakerConfig`]).
+    breaker: Arc<BreakerState>,
 }
 
 /// Spawn one sim lane worker incarnation.
 #[allow(clippy::too_many_arguments)]
 fn spawn_sim_worker(manifest: &Manifest, lat: SimLatency, cfg: BatchConfig, lane: Lane,
-                    generation: u64, faults: &Arc<FaultState>, host: &Arc<SimHostStore>)
+                    generation: u64, faults: &Arc<FaultState>, host: &Arc<SimHostStore>,
+                    gate: &Arc<QueueGate>, breaker: &Arc<BreakerState>)
                     -> anyhow::Result<(Sender<SReq>, Arc<AtomicBool>,
                                        std::thread::JoinHandle<()>)> {
     let (tx, rx) = channel::<SReq>();
@@ -569,12 +722,15 @@ fn spawn_sim_worker(manifest: &Manifest, lat: SimLatency, cfg: BatchConfig, lane
     let worker_manifest = manifest.clone();
     let worker_faults = Arc::clone(faults);
     let worker_host = Arc::clone(host);
+    let worker_gate = Arc::clone(gate);
+    let worker_breaker = Arc::clone(breaker);
     let lane_cfg = if lane == Lane::Llm { cfg } else { BatchConfig::off() };
     let thread = std::thread::Builder::new()
         .name(format!("sim-{}-g{generation}", lane.name()))
         .spawn(move || {
             sim_lane_main(worker_manifest, lat, lane_cfg, lane, generation, rx,
-                          worker_poison, worker_faults, worker_host)
+                          worker_poison, worker_faults, worker_host, worker_gate,
+                          worker_breaker)
         })?;
     Ok((tx, poison, thread))
 }
@@ -597,16 +753,38 @@ impl SimBackend {
     }
 
     /// Like [`start_with`](Self::start_with), plus a [`FaultPlan`] and an
-    /// explicit [`SupervisorPolicy`] — the chaos-test entry point.
+    /// explicit [`SupervisorPolicy`] — the chaos-test entry point. Queues
+    /// stay unbounded and no circuit breaker is armed (the pre-overload
+    /// behaviour); see [`start_guarded`](Self::start_guarded).
     pub fn start_faulty(store: &ArtifactStore, lat: SimLatency, cfg: BatchConfig,
                         plan: FaultPlan, policy: SupervisorPolicy)
                         -> anyhow::Result<SimBackend> {
+        SimBackend::start_guarded(store, lat, cfg, plan, policy,
+                                  QueueConfig::unbounded(), None)
+    }
+
+    /// The full overload-plane entry point: [`start_faulty`] plus bounded
+    /// lane queues ([`QueueConfig`] — applied to both lanes) and an
+    /// optional per-lane circuit breaker ([`BreakerConfig`]). A full queue
+    /// or an open breaker fails work submissions with
+    /// [`BackendError::Overloaded`]; control traffic (release / warmup /
+    /// stats / tier moves) always passes. The breaker observes executed-op
+    /// *outcomes* only, so arming it never perturbs [`FaultPlan`] op
+    /// indices — seeded chaos runs stay bit-reproducible.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_guarded(store: &ArtifactStore, lat: SimLatency, cfg: BatchConfig,
+                         plan: FaultPlan, policy: SupervisorPolicy,
+                         queue: QueueConfig, breaker: Option<BreakerConfig>)
+                         -> anyhow::Result<SimBackend> {
         let manifest = store.manifest().clone();
         let faults = Arc::new(FaultState::new(plan));
         let host = Arc::new(SimHostStore::default());
+        let gates = [Arc::new(QueueGate::new(queue)), Arc::new(QueueGate::new(queue))];
+        let breaker = Arc::new(BreakerState::new(breaker));
         let spawn = |lane: Lane| -> anyhow::Result<SimLane> {
             let (tx, poison, thread) =
-                spawn_sim_worker(&manifest, lat, cfg, lane, 0, &faults, &host)?;
+                spawn_sim_worker(&manifest, lat, cfg, lane, 0, &faults, &host,
+                                 &gates[lane as usize], &breaker)?;
             Ok(SimLane {
                 link: Mutex::new(LaneLink {
                     tx,
@@ -628,6 +806,8 @@ impl SimBackend {
             faults,
             policy,
             host,
+            gates,
+            breaker,
         })
     }
 
@@ -640,11 +820,31 @@ impl SimBackend {
         }
     }
 
-    /// Enqueue on a lane, supervising the worker: a dead (non-condemned)
-    /// worker is restarted — capped exponential backoff, bumped
-    /// generation, re-warmup — and the enqueue retried, until the restart
-    /// budget runs out.
+    /// Enqueue on a lane: overload-gate work requests (circuit breaker
+    /// check, then a bounded-queue slot), then hand to the supervised
+    /// enqueue. A refused submission ([`BackendError::Overloaded`]) touches
+    /// no lane state — nothing to undo, retry only after backing off.
     fn send(&self, lane: Lane, req: SReq) -> Result<(), BackendError> {
+        let is_work = sreq_key(&req).is_some();
+        if is_work {
+            self.breaker.check(lane)?;
+            // take the queue slot BEFORE the link mutex: a Block-policy
+            // wait must never hold the lane lock (control traffic and
+            // other submitters keep flowing while this caller waits)
+            self.gates[lane as usize].admit(lane)?;
+        }
+        let sent = self.send_supervised(lane, req);
+        if is_work && sent.is_err() {
+            // the request never reached the queue; give its slot back
+            self.gates[lane as usize].release(1);
+        }
+        sent
+    }
+
+    /// Supervised enqueue: a dead (non-condemned) worker is restarted —
+    /// capped exponential backoff, bumped generation, re-warmup — and the
+    /// enqueue retried, until the restart budget runs out.
+    fn send_supervised(&self, lane: Lane, req: SReq) -> Result<(), BackendError> {
         let mut link = self.link(lane);
         let mut req = req;
         loop {
@@ -678,13 +878,19 @@ impl SimBackend {
             }
             let (tx, poison, thread) =
                 spawn_sim_worker(&self.manifest, self.lat, self.cfg, lane,
-                                 link.generation, &self.faults, &self.host)
+                                 link.generation, &self.faults, &self.host,
+                                 &self.gates[lane as usize], &self.breaker)
                     .map_err(|e| {
                         BackendError::lane_dead(lane, format!("lane restart failed: {e}"))
                     })?;
             link.tx = tx;
             link.poison = poison;
             link.thread = Some(thread);
+            // the dead incarnation's channel dropped every queued request,
+            // so the slots they held are meaningless — free them (and any
+            // blocked submitters) and give the fresh worker a closed breaker
+            self.gates[lane as usize].reset();
+            self.breaker.reset(lane);
             // re-warm what the dead incarnation had warmed, then retry the
             // original request on the fresh worker
             for m in &link.warmed {
@@ -716,6 +922,10 @@ impl SimBackend {
         if let Some(t) = link.thread.take() {
             let _ = t.join();
         }
+        // wake any Block-policy submitters still waiting on a queue slot:
+        // their retried enqueue then fails fast with LaneDead instead of
+        // blocking out the full timeout
+        self.gates[lane as usize].reset();
     }
 
     /// Supervisor restarts performed so far (summed across lanes).
@@ -727,6 +937,12 @@ impl SimBackend {
     pub fn injected_faults(&self) -> (u64, u64) {
         (self.faults.transients.load(Ordering::Relaxed),
          self.faults.spikes.load(Ordering::Relaxed))
+    }
+
+    /// Circuit-breaker trips so far (summed across lanes; 0 when no
+    /// breaker was armed).
+    pub fn breaker_trips(&self) -> u64 {
+        self.breaker.trips()
     }
 }
 
@@ -871,7 +1087,14 @@ impl Backend for SimBackend {
         }
         let mut merged = merge_stats(parts);
         merged.lane_restarts = self.lane_restarts();
+        merged.breaker_trips = self.breaker.trips();
         Ok(merged)
+    }
+
+    /// Work requests queued on `lane` (admitted but not yet picked up by
+    /// the worker) — the depth gauge behind the bounded-queue policy.
+    fn queue_depth(&self, lane: Lane) -> usize {
+        self.gates[lane as usize].depth()
     }
 
     /// A device handle is current iff its generation tag matches the LLM
@@ -953,7 +1176,8 @@ fn tier_timing(submitted: Instant, picked: Instant) -> CallTiming {
 #[allow(clippy::too_many_arguments)]
 fn sim_lane_main(manifest: Manifest, lat: SimLatency, cfg: BatchConfig, lane: Lane,
                  generation: u64, rx: Receiver<SReq>, poison: Arc<AtomicBool>,
-                 faults: Arc<FaultState>, host: Arc<SimHostStore>) {
+                 faults: Arc<FaultState>, host: Arc<SimHostStore>,
+                 gate: Arc<QueueGate>, breaker: Arc<BreakerState>) {
     let kv_copy_bytes = manifest
         .llm_names()
         .first()
@@ -1028,6 +1252,7 @@ fn sim_lane_main(manifest: Manifest, lat: SimLatency, cfg: BatchConfig, lane: La
                         host_kv_bytes: 0,
                         unbatched_fallbacks: 0,
                         lane_restarts: 0, // accounted by the supervisor, not per worker
+                        breaker_trips: 0, // likewise backend-level, not per worker
                     });
                 }
                 SReq::Shutdown => return,
@@ -1037,12 +1262,16 @@ fn sim_lane_main(manifest: Manifest, lat: SimLatency, cfg: BatchConfig, lane: La
         }
         let mut col = collect_window(&rx, req, cfg, |a, b| sreq_key(a) == sreq_key(b));
         carry = col.carry.take();
+        // every member has left the channel: free its queue slot now (a
+        // carried work request frees its slot in the batch it executes in,
+        // where it is counted as a member)
+        gate.release(col.members.len());
         if poison.load(Ordering::SeqCst) {
             // die mid-batch: every member's reply sender drops here, so
             // each ticket's wait errors instead of hanging
             return;
         }
-        if !st.run_batch(col, &faults) {
+        if !st.run_batch(col, &faults, &breaker) {
             // FaultPlan kill: abandon the batch (all reply senders drop, so
             // every member's wait reports LaneDead) and exit the worker —
             // the supervisor restarts the lane on the next submission
@@ -1073,7 +1302,8 @@ impl SimState {
     /// effects — retrying it is clean and the rest of the batch is
     /// unaffected), and a `Kill` returns `false` — the worker must exit,
     /// dropping every reply sender of the batch.
-    fn run_batch(&mut self, mut col: Collected<SReq>, faults: &FaultState) -> bool {
+    fn run_batch(&mut self, mut col: Collected<SReq>, faults: &FaultState,
+                 breaker: &BreakerState) -> bool {
         let n = col.members.len();
         let (op, base, slope) = match &col.members[0].0 {
             SReq::Prefill { .. } => ("prefill", self.lat.prefill, self.lat.per_item.prefill),
@@ -1110,21 +1340,25 @@ impl SimState {
                 SReq::Prefill { module, tokens, plen, submitted, reply } => {
                     let r = if hit { transient("prefill") }
                             else { self.prefill(&module, &tokens, plen) };
+                    observe_breaker(breaker, self.lane, &r);
                     (BatchOut::Kv(r, reply), submitted)
                 }
                 SReq::Extend { module, kv, plen, q_tokens, qlen, submitted, reply } => {
                     let r = if hit { transient("extend") }
                             else { self.extend(&module, kv, plen, &q_tokens, qlen) };
+                    observe_breaker(breaker, self.lane, &r);
                     (BatchOut::Kv(r, reply), submitted)
                 }
                 SReq::Generate { module, kv, first_tok, submitted, reply } => {
                     let r = if hit { transient("generate") }
                             else { self.generate(&module, kv, first_tok) };
+                    observe_breaker(breaker, self.lane, &r);
                     (BatchOut::Gen(r, reply), submitted)
                 }
                 SReq::Encode { module, x, mask, submitted, reply } => {
                     let r = if hit { transient("encode") }
                             else { self.encode(&module, &x, &mask) };
+                    observe_breaker(breaker, self.lane, &r);
                     (BatchOut::Enc(r, reply), submitted)
                 }
                 _ => unreachable!("control requests never enter a batch"),
@@ -1867,5 +2101,189 @@ mod tests {
         assert_eq!(a, b, "same seed, same per-op fates");
         assert!(a.iter().any(|&ok| ok) && a.iter().any(|&ok| !ok),
                 "prob 0.5 over 16 ops should mix outcomes (seed-dependent but fixed)");
+    }
+
+    /// `start_guarded` with everything defaulted except the knob under test.
+    fn guarded(store: &ArtifactStore, lat: SimLatency, plan: FaultPlan,
+               queue: QueueConfig, breaker: Option<BreakerConfig>) -> SimBackend {
+        SimBackend::start_guarded(store, lat, BatchConfig::off(), plan,
+                                  SupervisorPolicy::default(), queue, breaker)
+            .unwrap()
+    }
+
+    #[test]
+    fn bounded_queue_rejects_when_full_and_frees_on_pickup() {
+        let store = sim_store();
+        // slow encodes keep the GNN worker busy; capacity 1 means one
+        // request may sit queued behind the in-flight one
+        let sim = guarded(&store, SimLatency::from_millis(0, 0, 0, 60),
+                          FaultPlan::none(), QueueConfig::reject(1), None);
+        let c = *store.constants();
+        let x = vec![0f32; c.n_max * c.feat_dim];
+        let adj = vec![0f32; c.n_max * c.n_max];
+        let mask = vec![0f32; c.n_max];
+        let busy = sim.submit_encode("gat", x.clone(), adj.clone(), mask.clone()).unwrap();
+        // let the worker pick `busy` up (its slot frees at pickup)
+        std::thread::sleep(Duration::from_millis(15));
+        let queued = sim.submit_encode("gat", x.clone(), adj.clone(), mask.clone())
+            .unwrap();
+        assert_eq!(sim.queue_depth(Lane::Gnn), 1, "one request queued");
+        let err = sim.submit_encode("gat", x.clone(), adj.clone(), mask.clone())
+            .unwrap_err();
+        assert!(err.is_overloaded(), "full queue must refuse as Overloaded: {err}");
+        assert!(err.is_retryable() && !err.is_lane_dead());
+        // the LLM lane has its own gate and is unaffected
+        let mut toks = vec![c.pad_id; c.max_seq];
+        toks[0] = c.bos_id;
+        let (kv, _) = sim.prefill(SIM_BACKBONE, &toks, 1).unwrap();
+        sim.release(kv);
+        // once the backlog drains, the lane admits again
+        busy.wait().unwrap();
+        queued.wait().unwrap();
+        sim.encode("gat", x, adj, mask).expect("drained lane admits again");
+    }
+
+    #[test]
+    fn bounded_queue_block_policy_never_blocks_forever() {
+        let store = sim_store();
+        let sim = guarded(&store, SimLatency::from_millis(0, 0, 0, 200),
+                          FaultPlan::none(),
+                          QueueConfig::block(1, Duration::from_millis(20)), None);
+        let c = *store.constants();
+        let x = vec![0f32; c.n_max * c.feat_dim];
+        let adj = vec![0f32; c.n_max * c.n_max];
+        let mask = vec![0f32; c.n_max];
+        let busy = sim.submit_encode("gat", x.clone(), adj.clone(), mask.clone()).unwrap();
+        std::thread::sleep(Duration::from_millis(15));
+        let queued = sim.submit_encode("gat", x.clone(), adj.clone(), mask.clone())
+            .unwrap();
+        // the worker is busy for ~200 ms, far past the 20 ms block budget:
+        // the submit must give up as Overloaded, never hang
+        let t0 = Instant::now();
+        let err = sim.submit_encode("gat", x, adj, mask).unwrap_err();
+        assert!(err.is_overloaded(), "blocked-out submit is Overloaded: {err}");
+        assert!(t0.elapsed() >= Duration::from_millis(20), "Block waits its budget");
+        assert!(t0.elapsed() < Duration::from_millis(150),
+                "the wait is bounded by the timeout, not by the backlog");
+        busy.wait().unwrap();
+        queued.wait().unwrap();
+    }
+
+    #[test]
+    fn control_traffic_bypasses_queue_bound() {
+        let store = sim_store();
+        let sim = guarded(&store, SimLatency::from_millis(60, 0, 0, 0),
+                          FaultPlan::none(), QueueConfig::reject(1), None);
+        let c = *store.constants();
+        let mut toks = vec![c.pad_id; c.max_seq];
+        toks[0] = c.bos_id;
+        let busy = sim.submit_prefill(SIM_BACKBONE, &toks, 1).unwrap();
+        std::thread::sleep(Duration::from_millis(15));
+        let queued = sim.submit_prefill(SIM_BACKBONE, &toks, 1).unwrap();
+        assert!(sim.submit_prefill(SIM_BACKBONE, &toks, 1).unwrap_err()
+                    .is_overloaded());
+        // stats and warmup are control traffic: they pass the full queue
+        // (refusing a release/stats under pressure would leak KV and blind
+        // the very controller that needs the numbers)
+        sim.warmup(SIM_BACKBONE).expect("warmup bypasses the bound");
+        let st = sim.stats().expect("stats bypasses the bound");
+        assert_eq!(st.breaker_trips, 0);
+        let (kv, _) = busy.wait().unwrap();
+        let (kv2, _) = queued.wait().unwrap();
+        sim.release_many(vec![kv, kv2]);
+    }
+
+    #[test]
+    fn breaker_trips_fail_fast_without_advancing_fault_ops() {
+        let store = sim_store();
+        let plan = FaultPlan { seed: 7, transient_prob: 1.0, ..FaultPlan::none() };
+        let breaker = BreakerConfig {
+            threshold: 2,
+            window: Duration::from_secs(5),
+            cooldown: Duration::from_millis(30),
+        };
+        let sim = guarded(&store, SimLatency::zero(), plan,
+                          QueueConfig::unbounded(), Some(breaker));
+        let c = *store.constants();
+        let mut toks = vec![c.pad_id; c.max_seq];
+        toks[0] = c.bos_id;
+        // two consecutive transients trip the breaker
+        for _ in 0..2 {
+            let err = sim.prefill(SIM_BACKBONE, &toks, 1).unwrap_err();
+            assert!(matches!(err, BackendError::Transient { .. }), "got: {err}");
+        }
+        assert_eq!(sim.breaker_trips(), 1, "threshold=2 trips after 2 transients");
+        assert_eq!(sim.injected_faults().0, 2);
+        // while open, submits fail fast as Overloaded — and never reach the
+        // lane, so the fault-plan op counter must NOT advance (the property
+        // that keeps seeded chaos runs reproducible under a breaker)
+        let err = sim.prefill(SIM_BACKBONE, &toks, 1).unwrap_err();
+        assert!(err.is_overloaded(), "open breaker fails fast: {err}");
+        assert_eq!(sim.injected_faults().0, 2, "fail-fast ops never roll faults");
+        assert_eq!(sim.stats().unwrap().breaker_trips, 1, "trips surface in stats");
+        // after the cooldown, exactly one half-open probe reaches the lane;
+        // with transient_prob=1 it fails and re-trips the breaker
+        std::thread::sleep(Duration::from_millis(40));
+        let err = sim.prefill(SIM_BACKBONE, &toks, 1).unwrap_err();
+        assert!(matches!(err, BackendError::Transient { .. }),
+                "half-open probe reaches the lane: {err}");
+        assert_eq!(sim.injected_faults().0, 3, "the probe rolls exactly one fault");
+        assert_eq!(sim.breaker_trips(), 2, "failed probe re-opens (a new trip)");
+        assert!(sim.prefill(SIM_BACKBONE, &toks, 1).unwrap_err().is_overloaded());
+        // the GNN lane's breaker is independent
+        let x = vec![0f32; c.n_max * c.feat_dim];
+        let r = sim.encode("gat", x, vec![0.0; c.n_max * c.n_max], vec![0.0; c.n_max]);
+        assert!(!matches!(r, Err(BackendError::Overloaded { .. })),
+                "lanes trip independently");
+    }
+
+    #[test]
+    fn breaker_closes_on_successful_probe() {
+        let store = sim_store();
+        // seed picked so the first LLM ops roll transient, transient,
+        // then clean (prob 0.5, deterministic per seed — see
+        // fault_rolls_are_deterministic_across_runs)
+        let seed = first_seed_with_pattern(&[false, false, true]);
+        let plan = FaultPlan { seed, transient_prob: 0.5, ..FaultPlan::none() };
+        let breaker = BreakerConfig {
+            threshold: 2,
+            window: Duration::from_secs(5),
+            cooldown: Duration::from_millis(10),
+        };
+        let sim = guarded(&store, SimLatency::zero(), plan,
+                          QueueConfig::unbounded(), Some(breaker));
+        let c = *store.constants();
+        let mut toks = vec![c.pad_id; c.max_seq];
+        toks[0] = c.bos_id;
+        assert!(sim.prefill(SIM_BACKBONE, &toks, 1).is_err());
+        assert!(sim.prefill(SIM_BACKBONE, &toks, 1).is_err());
+        assert_eq!(sim.breaker_trips(), 1);
+        std::thread::sleep(Duration::from_millis(15));
+        // op 3 rolls clean: the half-open probe succeeds and closes the
+        // breaker — subsequent submits flow normally again
+        let (kv, _) = sim.prefill(SIM_BACKBONE, &toks, 1)
+            .expect("successful probe closes the breaker");
+        let (kv2, _) = sim.prefill(SIM_BACKBONE, &toks, 1)
+            .expect("breaker closed: submits flow");
+        sim.release_many(vec![kv, kv2]);
+        assert_eq!(sim.breaker_trips(), 1, "no new trips after recovery");
+    }
+
+    /// Find the smallest seed whose first LLM-lane transient rolls (prob
+    /// 0.5) match `pattern` (`true` = op executes, `false` = transient) —
+    /// mirrors [`FaultState::on_op`]'s roll exactly.
+    fn first_seed_with_pattern(pattern: &[bool]) -> u64 {
+        let lane_salt = (Lane::Llm as u64 + 1) << 56;
+        'seed: for seed in 0..10_000u64 {
+            for (i, &ok) in pattern.iter().enumerate() {
+                let idx = i as u64 + 1;
+                let hit = FaultState::roll(seed ^ 0x544e_5354, lane_salt | idx) < 0.5;
+                if hit == ok {
+                    continue 'seed;
+                }
+            }
+            return seed;
+        }
+        panic!("no seed under 10k matches {pattern:?}");
     }
 }

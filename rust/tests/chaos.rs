@@ -379,3 +379,163 @@ fn deadline_hits_count_queries_past_the_bound() {
         .unwrap();
     assert_eq!(r.metrics.reliability.deadline_hits, 0);
 }
+
+// ---------------------------------------------------------------------------
+// The overload plane: a seeded flash crowd against bounded lane queues
+// sheds deterministically and never corrupts an admitted answer.
+// ---------------------------------------------------------------------------
+
+fn overload_env(lat: SimLatency, queue: QueueConfig) -> (ArtifactStore, SimBackend) {
+    let store = sim_store();
+    let backend = SimBackend::start_guarded(
+        &store, lat, BatchConfig::off(), FaultPlan::none(),
+        SupervisorPolicy::default(), queue, Some(BreakerConfig::default()))
+        .expect("guarded sim backend start");
+    (store, backend)
+}
+
+/// Flash crowd of 6 arrivals at one instant over ~10 ms background traffic,
+/// with a 25 ms deadline and a fixed 7 ms service estimate: the crowd's
+/// virtual backlog provably crosses the deadline from its 4th member on, so
+/// the shed set is nonempty and a pure function of the seed — no wall
+/// clock, no watermarks.
+fn overload_config(lat: SimLatency) -> ServeConfig {
+    ServeConfig {
+        deadline: Some(Duration::from_millis(25)),
+        overload: OverloadConfig {
+            arrivals: ArrivalPlan {
+                seed: 21,
+                process: ArrivalProcess::FlashCrowd {
+                    mean: Duration::from_millis(10),
+                    at: 3,
+                    size: 6,
+                },
+                zipf_skew: 0.0,
+            },
+            shed: true,
+            initial_estimate: Duration::from_secs_f64(lat.serial_sum()),
+            headroom: 1.0,
+            brownout: Some(BrownoutConfig {
+                backlog_steps: [Duration::from_millis(5),
+                                Duration::from_millis(50),
+                                Duration::ZERO],
+                depth_watermark: None,
+                p95_watermark: None,
+                gen_cap: 8,
+            }),
+        },
+        ..chaos_config()
+    }
+}
+
+#[test]
+fn flash_crowd_sheds_deterministically_and_admitted_answers_survive() {
+    let lat = SimLatency::from_millis(4, 1, 1, 1);
+    let ds = sim_dataset(4, 4);
+    let queries = ds.sample_test(12, 7);
+
+    // unloaded reference: closed loop, no shedding — the answer every
+    // admitted query must still produce under load.
+    let clean = common::sim_env(lat);
+    let coord = Coordinator::new(&clean.store, &clean.backend, chaos_config()).unwrap();
+    let reference = coord
+        .serve_online(&ds, queries.iter().copied(), &GRetriever::default())
+        .unwrap();
+    let reference_answers: std::collections::BTreeMap<usize, &str> = reference
+        .results.iter().map(|r| (r.id, r.predicted.as_str())).collect();
+
+    let run = || {
+        let (store, backend) =
+            overload_env(lat, QueueConfig::block(4, Duration::from_millis(500)));
+        let coord = Coordinator::new(&store, &backend, overload_config(lat)).unwrap();
+        coord
+            .serve_online(&ds, queries.iter().copied(), &GRetriever::default())
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+
+    // one outcome per offered arrival; the crowd forced real sheds, the
+    // opening queries were admitted, and nothing blocked forever (the test
+    // finishing at all proves the Block(500 ms) bound held).
+    assert_eq!(a.outcomes.len(), queries.len());
+    let rel = &a.metrics.reliability;
+    assert_eq!(rel.shed.offered(), queries.len() as u64, "{:?}", rel.shed);
+    assert!(rel.shed.shed_deadline >= 3,
+            "a 6-wide crowd over a 25 ms deadline sheds its tail: {:?}", rel.shed);
+    assert!(rel.shed.admitted >= 1,
+            "the opening query always fits the empty backlog: {:?}", rel.shed);
+    assert_eq!(rel.shed.admitted, a.metrics.per_query.len() as u64);
+    assert_eq!(rel.shed.admitted, a.results.len() as u64);
+    let rate = rel.shed.shed_rate();
+    assert!(rate.is_finite() && rate > 0.0 && rate < 1.0, "shed rate {rate}");
+    assert!(rel.brownout_spans >= 1,
+            "a crowd member waits >= 7 ms virtual, past the 5 ms step: {rel:?}");
+    assert!(rel.brownout_secs > 0.0);
+
+    // bit-reproducible: the shed set is a function of the seed alone.
+    assert_eq!(a.outcomes, b.outcomes, "same seed must shed the same arrivals");
+    assert_eq!(a.metrics.reliability.shed, b.metrics.reliability.shed);
+    assert_eq!(a.metrics.reliability.brownout_spans,
+               b.metrics.reliability.brownout_spans);
+    assert_eq!(answers(&a), answers(&b));
+
+    // outcomes agree with the served results, in arrival order.
+    let served: Vec<usize> = a.outcomes.iter().filter_map(|o| match o {
+        QueryOutcome::Served { id } => Some(*id),
+        QueryOutcome::Shed { .. } => None,
+    }).collect();
+    assert_eq!(served, a.results.iter().map(|r| r.id).collect::<Vec<_>>());
+
+    // every admitted query's answer is bit-identical to the unloaded run.
+    for r in &a.results {
+        let want = reference_answers
+            .get(&r.id)
+            .expect("admitted query must exist in the reference run");
+        assert_eq!(r.predicted.as_str(), *want,
+                   "query {} answer must survive the overload", r.id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Edge deadline: deadline zero + shedding on sheds EVERY query at
+// admission — no device work, consistent counters, finite rates.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zero_deadline_sheds_everything_at_admission() {
+    let lat = SimLatency::from_millis(2, 1, 1, 1);
+    let ds = sim_dataset(4, 4);
+    let queries = ds.sample_test(5, 7);
+
+    let env = common::sim_env(lat);
+    let cfg = ServeConfig {
+        deadline: Some(Duration::ZERO),
+        overload: OverloadConfig { shed: true, ..OverloadConfig::default() },
+        ..chaos_config()
+    };
+    let coord = Coordinator::new(&env.store, &env.backend, cfg).unwrap();
+    let r = coord
+        .serve_online(&ds, queries.iter().copied(), &GRetriever::default())
+        .unwrap();
+
+    assert_eq!(r.outcomes.len(), queries.len());
+    assert!(r.outcomes.iter().all(
+                |o| matches!(o, QueryOutcome::Shed { reason: ShedReason::Deadline, .. })),
+            "deadline 0 admits nothing: {:?}", r.outcomes);
+    assert!(r.results.is_empty());
+    assert!(r.metrics.per_query.is_empty());
+    let rel = &r.metrics.reliability;
+    assert_eq!(rel.shed.admitted, 0);
+    assert_eq!(rel.shed.shed_deadline, queries.len() as u64);
+    assert_eq!(rel.shed.offered(), queries.len() as u64);
+    assert_eq!(rel.shed.shed_rate(), 1.0);
+    assert!(rel.shed.shed_rate().is_finite());
+    assert_eq!(rel.deadline_hits, 0,
+               "a query shed at admission never ran, so it cannot overrun");
+    assert_eq!(rel.retries, 0);
+    assert!(!rel.is_clean(), "an all-shed run is not a clean run: {rel:?}");
+    // and throughput math over an empty served set stays finite.
+    assert!(r.metrics.qps().is_finite());
+    assert!(r.metrics.rt_ms().is_finite());
+}

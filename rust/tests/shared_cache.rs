@@ -736,6 +736,111 @@ fn dead_llm_lane_mid_run_errors_every_stream() {
     assert!(err.to_string().contains("lane"), "unhelpful error: {err}");
 }
 
+/// A shed install leader must abort its reservation so blocked
+/// single-flight waiters wake (the overload-plane analogue of the
+/// dead-lane wake above): with a one-slot fail-fast LLM queue held full by
+/// two long foreign prefills, every install leader's prefill submit is
+/// terminally `Overloaded` and — with `overload.shed` on — sheds the query
+/// instead of erroring the stream. The racing stream blocked in the
+/// single-flight lookup must wake on the leader's `abort_install`, elect
+/// itself the new installer, and shed in turn; the test completing at all
+/// is the no-stranded-condvar-waiter proof, and the pool must stay
+/// consistent with nothing leaked.
+#[test]
+fn shed_leader_aborts_reservation_and_wakes_single_flight_waiters() {
+    // prefill dominates: the two occupier prefills hold the one-slot LLM
+    // queue full (one executing with its slot released at pickup, one
+    // queued holding the slot) for ~400 ms — far longer than the streams
+    // need to run their submit-shed races.
+    let lat = SimLatency::from_millis(400, 1, 1, 1);
+    let store = subgcache::runtime::sim_store();
+    let backend = SimBackend::start_guarded(
+        &store, lat, BatchConfig::off(), FaultPlan::none(),
+        SupervisorPolicy::default(), QueueConfig::reject(1), None)
+        .expect("guarded sim backend start");
+    let ds = sim_dataset(4, 4);
+    let sample = ds.sample_test(4, 7);
+    // the same query three times per stream: three install races, each
+    // abort re-arming the single-flight reservation for the next turn.
+    let queries = vec![sample[0], sample[0], sample[0]];
+    let cfg = ServeConfig {
+        online_threshold: f32::INFINITY,
+        pipeline_depth: 1,
+        max_retries: 2,
+        overload: OverloadConfig { shed: true, ..OverloadConfig::default() },
+        ..common::sim_config()
+    };
+    let coord = Coordinator::new(&store, &backend, cfg).unwrap();
+
+    // occupy the LLM lane: the first prefill is picked up (slot released),
+    // the second sits in the channel holding the single queue slot.
+    let bb = subgcache::runtime::SIM_BACKBONE;
+    let occ1 = backend.submit_prefill(bb, &[1, 2, 3, 4], 4).unwrap();
+    std::thread::sleep(Duration::from_millis(10)); // let the worker take occ1
+    let occ2 = backend.submit_prefill(bb, &[1, 2, 3, 4], 4).unwrap();
+
+    let pool: Arc<SharedKvCache<subgcache::runtime::KvHandle>> =
+        Arc::new(SharedKvCache::new(CachePolicy::default()));
+    let retr = GRetriever::default();
+    let reports: Vec<anyhow::Result<ServeReport>> = std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                let (coord, ds, retr, queries) = (&coord, &ds, &retr, &queries);
+                scope.spawn(move || {
+                    let mut view = KvCacheManager::shared_view(&pool);
+                    coord.serve_online_with_cache(ds, queries.iter().copied(), retr,
+                                                  &mut view)
+                })
+            })
+            .collect();
+        workers
+            .into_iter()
+            .map(|h| h.join().expect("stream must shed, not panic"))
+            .collect()
+    });
+
+    let mut shed_overloaded = 0u64;
+    for (si, rep) in reports.into_iter().enumerate() {
+        // reaching here at all proves neither stream stranded on the
+        // single-flight condvar: the leader's shed aborted its reservation.
+        let rep = rep.unwrap_or_else(|e| {
+            panic!("stream {si}: terminal overload must shed, not error: {e}")
+        });
+        let shed = rep.metrics.reliability.shed;
+        assert_eq!(rep.outcomes.len(), queries.len(),
+                   "stream {si}: every arrival gets an outcome");
+        assert_eq!(shed.offered(), queries.len() as u64, "stream {si}");
+        assert_eq!(rep.results.len(), shed.admitted as usize,
+                   "stream {si}: served results must match admissions");
+        assert!(shed.shed_overloaded >= 1,
+                "stream {si}: the full queue must shed at least the first \
+                 query: {shed:?}");
+        for out in &rep.outcomes {
+            if let QueryOutcome::Shed { reason, .. } = out {
+                assert!(matches!(reason, ShedReason::Overloaded),
+                        "stream {si}: only overload sheds expected: {out:?}");
+            }
+        }
+        assert!(rep.metrics.lane_llm.depth_peak >= 1,
+                "stream {si}: the held queue slot must show on the gauge");
+        shed_overloaded += shed.shed_overloaded;
+    }
+    assert!(shed_overloaded >= 2,
+            "both streams must have shed under the held queue");
+
+    // nothing installed may linger, and the pool books must balance.
+    assert!(pool.consistent(), "pool accounting inconsistent after sheds");
+    backend.release_many(pool.drain_all());
+
+    // the occupiers finish and drain: no handle leaks from the whole dance.
+    let (kv1, _) = occ1.wait().expect("occupier prefill 1");
+    backend.release(kv1);
+    let (kv2, _) = occ2.wait().expect("occupier prefill 2");
+    backend.release(kv2);
+    assert_eq!(backend.stats().unwrap().live_kv, 0, "leaked KV handles");
+}
+
 /// Single-stream serving through the shared-cache machinery must be
 /// metric-for-metric identical to the serial PR 3 path, for k in {1,2,4}.
 ///
