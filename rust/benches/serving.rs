@@ -22,6 +22,10 @@
 //! tier through every online cell; in sim-quick mode it additionally runs
 //! a single-entry-device-budget cell whose row must show nonzero
 //! `demotions`/`promotions`/`host_hits` — the tier regression surface.
+//! `--disk-cache-bytes N` does the same for the disk archive tier: a
+//! squeezed-host cell whose row must show nonzero
+//! `archived`/`recalls`/`disk_hits` (CI emits it as
+//! `BENCH_serving_disk.json`).
 //!
 //! `--fault-seed N --transient-prob P --spike-prob P --spike-ms MS` arm the
 //! sim's chaos plan and stamp every emitted row with the injection config,
@@ -155,6 +159,29 @@ fn sim_quick_mode(streams: usize, batch_cfg: BatchConfig, cache: CachePolicy,
                  r.online.cache.promotions, r.online.cache.host_hits);
         bench.push("online sim host-tier", &r.online);
     }
+    // disk-tier smoke (`--disk-cache-bytes`): same single-entry device
+    // budget, but with a host budget squeezed down to one demoted copy so
+    // churn pushes colder representatives off the host tier and into the
+    // disk archive; revisits then recall them disk → host → device. The
+    // archived/recalls/disk_hits counters in the emitted row are the
+    // regression surface.
+    if cache.disk_bytes > 0 {
+        let lat_tier = SimLatency::from_millis(6, 2, 2, 6)
+            .with_host_copy_per_byte(std::time::Duration::from_nanos(15));
+        let sim_tier = SimBackend::start_with(&store, lat_tier, batch_cfg)?;
+        let mut cell = Cell::new("sim", "g-retriever", SIM_BACKBONE, 12);
+        cell.cache = CachePolicy {
+            max_entries: 1,
+            host_bytes: cache.host_bytes.clamp(1, 4096),
+            ..cache
+        };
+        let r = run_online_cell_with(&store, &sim_tier, &ds, &cell)?;
+        println!("online sim disk-tier: {:.3}s wall, {} archived, \
+                  {} recalls, {} disk hits",
+                 r.online.metrics.wall_time, r.online.cache.archived,
+                 r.online.cache.recalls, r.online.cache.disk_hits);
+        bench.push("online sim disk-tier", &r.online);
+    }
     // overload smoke: a seeded flash crowd oversubscribes the LLM lane of a
     // sim with bounded (blocking) lane queues, an armed circuit breaker, a
     // deadline and the brownout ladder enabled — the row's
@@ -226,9 +253,10 @@ fn main() -> anyhow::Result<()> {
     let artifacts = ArtifactStore::discover().ok();
     let mode = if artifacts.is_some() { "artifacts" } else { "sim-quick" };
     println!("== serving bench ({mode}, streams = {streams}, max_batch = {}, \
-              window = {:.1} ms, host_cache = {} B, fault_seed = {}) ==",
+              window = {:.1} ms, host_cache = {} B, disk_cache = {} B, \
+              fault_seed = {}) ==",
              batch_cfg.max_batch, batch_cfg.max_wait.as_secs_f64() * 1e3,
-             cache.host_bytes, fault_plan.seed);
+             cache.host_bytes, cache.disk_bytes, fault_plan.seed);
     let bench = match &artifacts {
         Some(store) => artifact_mode(store, streams, batch_cfg, cache, faults)?,
         None => sim_quick_mode(streams, batch_cfg, cache, faults)?,

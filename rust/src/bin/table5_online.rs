@@ -6,6 +6,9 @@
 //! `--host-cache-bytes N` adds a host tier under the device budget: an
 //! evicted representative demotes to host memory and a later revisit
 //! promotes it back with a copy instead of repaying the full prefill.
+//! `--disk-cache-bytes N` adds a third tier under that: a host-budget
+//! death archives the KV bytes to an on-disk file and a later revisit
+//! recalls them disk → host → device — still cheaper than the prefill.
 //!
 //! The headline columns are the hit/miss TTFT split: a hit pays only the
 //! question `extend`, a miss pays the full representative prefill — the

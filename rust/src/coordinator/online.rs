@@ -607,16 +607,25 @@ impl<'e> Coordinator<'e> {
     /// on the backend, and demote each budget victim to the host tier
     /// ([`crate::runtime::Backend::demote_kv`] +
     /// [`KvCacheManager::admit_host`]), releasing any LRU host-tier deaths
-    /// the admission forces. A backend without a host tier (or a failed
-    /// copy) has already released the device handle inside `demote_kv` —
-    /// the victim simply dies, which is exactly the pre-tier behaviour.
+    /// the admission forces and carrying any disk-tier spills to the
+    /// archive ([`crate::runtime::Backend::archive_kv`] +
+    /// [`KvCacheManager::admit_disk`]). A backend without a host tier (or
+    /// a failed copy) has already released the device handle inside
+    /// `demote_kv` — the victim simply dies, which is exactly the pre-tier
+    /// behaviour; likewise a failed serialization inside `archive_kv`
+    /// consumes the host handle and the spill is simply dropped.
     fn finish_install(&self, cache: &mut KvCacheManager<KvHandle>,
                       out: TieredOut<KvHandle>) {
         self.engine.release_many(out.release);
         for d in out.demote {
             if let Ok(host) = self.engine.demote_kv(d.handle) {
-                let dead = cache.admit_host(d.slot, host);
-                self.engine.release_many(dead);
+                let adm = cache.admit_host(d.slot, host);
+                self.engine.release_many(adm.release);
+                for a in adm.archive {
+                    if let Ok(bytes) = self.engine.archive_kv(a.handle) {
+                        cache.admit_disk(a.slot, &bytes);
+                    }
+                }
             }
         }
     }
@@ -641,6 +650,30 @@ impl<'e> Coordinator<'e> {
             Err(_) => {
                 // the promote ticket only borrows the host copy, so after
                 // a failure it is still ours to free.
+                self.engine.release(host);
+                None
+            }
+        }
+    }
+
+    /// Blocking recall of a checked-out archive payload on a recovery path:
+    /// rebuild the host copy ([`crate::runtime::Backend::recall_kv`]), then
+    /// walk it up exactly like a promotion. `Some(t)` means the entry is
+    /// device-resident again with this stream's pin held. `None` means no
+    /// checkout existed or the walk failed — the disk record was consumed
+    /// at checkout, any minted host copy has been released, and the caller
+    /// (still holding the key's install reservation) repays the prefill.
+    fn recall_on_recovery(&self, cache: &mut KvCacheManager<KvHandle>,
+                          cid: usize) -> Option<CallTiming> {
+        let (payload, bytes) = cache.take_recall(cid)?;
+        let host = self.engine.recall_kv(&payload).ok()?;
+        match self.engine.promote_kv(&host) {
+            Ok((kv, t)) => {
+                let out = cache.install_recalled(cid, kv, bytes);
+                self.finish_install(cache, out);
+                Some(t)
+            }
+            Err(_) => {
                 self.engine.release(host);
                 None
             }
@@ -803,14 +836,29 @@ impl<'e> Coordinator<'e> {
                                 // promote it back up instead of repaying
                                 // the prefill (blocking — recovery is off
                                 // the fast path already).
-                                if matches!(look, Lookup::MustPromote) {
-                                    if let Some(t) =
-                                        self.promote_on_recovery(cache, dec.cid)
-                                    {
-                                        lane_llm.add(&t);
-                                        *llm_time += t.secs();
-                                        resident = true;
+                                match look {
+                                    Lookup::MustPromote => {
+                                        if let Some(t) =
+                                            self.promote_on_recovery(cache, dec.cid)
+                                        {
+                                            lane_llm.add(&t);
+                                            *llm_time += t.secs();
+                                            resident = true;
+                                        }
                                     }
+                                    // an archived disk copy survived: recall
+                                    // it through the host tier instead of
+                                    // repaying the prefill.
+                                    Lookup::MustRecall => {
+                                        if let Some(t) =
+                                            self.recall_on_recovery(cache, dec.cid)
+                                        {
+                                            lane_llm.add(&t);
+                                            *llm_time += t.secs();
+                                            resident = true;
+                                        }
+                                    }
+                                    _ => {}
                                 }
                                 if !resident {
                                     let cl = &clusters[dec.cid];
@@ -1245,6 +1293,50 @@ impl<'e> Coordinator<'e> {
                     None => need_prefill = true,
                 }
             }
+            // 4c) disk-tier hit: the representative fell off the host tier
+            //    into the archive. The record was consumed at checkout, so
+            //    this is the one shot at it: rebuild the host copy from the
+            //    payload, then ride the exact promote machinery above —
+            //    same ticket-shadow prep overlap, same failure ladder. Any
+            //    failure (recall, submit, or the copy itself) releases
+            //    whatever tier-resident copy exists and falls through to
+            //    the repaid prefill under the still-held reservation.
+            if matches!(look, Lookup::MustRecall) {
+                match cache.take_recall(cid) {
+                    Some((payload, bytes)) => match self.engine.recall_kv(&payload) {
+                        Ok(host) => {
+                            let submitted = self.engine.submit_promote(&host);
+                            if submitted.is_ok() {
+                                top_up(&mut queue, &mut stream, &mut overlap_time,
+                                       true, eff_depth)?;
+                            }
+                            match submitted.and_then(|p| p.wait_timed()) {
+                                Ok((kv, t)) => {
+                                    lane_llm.add(&t);
+                                    promote_secs = t.secs();
+                                    let out =
+                                        cache.install_recalled(cid, kv, bytes);
+                                    self.finish_install(cache, out);
+                                }
+                                Err(e) => {
+                                    self.engine.release(host);
+                                    let mut budget = RetryBudget::new(&self.cfg);
+                                    budget.admit(&e, &t_query)?;
+                                    rel.retries += 1;
+                                    degraded = true;
+                                    if e.is_lane_dead() {
+                                        rel.quarantined_entries +=
+                                            self.quarantine_dead(cache);
+                                    }
+                                    need_prefill = true;
+                                }
+                            }
+                        }
+                        Err(_) => need_prefill = true,
+                    },
+                    None => need_prefill = true,
+                }
+            }
             let mut prefill_secs = if !need_prefill {
                 0.0
             } else {
@@ -1461,16 +1553,29 @@ impl<'e> Coordinator<'e> {
                             cache.unpin(cid);
                             let look = cache.lookup(cid);
                             let mut resident = look.is_hit();
-                            // a host-tier copy survived the lane death:
-                            // promote it instead of repaying the prefill.
-                            if matches!(look, Lookup::MustPromote) {
-                                if let Some(t) =
-                                    self.promote_on_recovery(cache, cid)
-                                {
-                                    lane_llm.add(&t);
-                                    promote_secs += t.secs();
-                                    resident = true;
+                            // a host- or disk-tier copy survived the lane
+                            // death: walk it back up instead of repaying
+                            // the prefill.
+                            match look {
+                                Lookup::MustPromote => {
+                                    if let Some(t) =
+                                        self.promote_on_recovery(cache, cid)
+                                    {
+                                        lane_llm.add(&t);
+                                        promote_secs += t.secs();
+                                        resident = true;
+                                    }
                                 }
+                                Lookup::MustRecall => {
+                                    if let Some(t) =
+                                        self.recall_on_recovery(cache, cid)
+                                    {
+                                        lane_llm.add(&t);
+                                        promote_secs += t.secs();
+                                        resident = true;
+                                    }
+                                }
+                                _ => {}
                             }
                             if !resident {
                                 let t_rebuild = Timer::start();

@@ -283,6 +283,11 @@ pub fn serving_row(name: &str, r: &ServeReport) -> JsonRow {
         .int("promotions", r.cache.promotions)
         .int("host_hits", r.cache.host_hits)
         .int("host_bytes", r.cache.host_bytes as u64)
+        .int("released", r.cache.released)
+        .int("archived", r.cache.archived)
+        .int("recalls", r.cache.recalls)
+        .int("disk_hits", r.cache.disk_hits)
+        .int("disk_bytes", r.cache.disk_bytes as u64)
         .int("lane_restarts", m.reliability.restarts)
         .int("retries", m.reliability.retries)
         .int("quarantined", m.reliability.quarantined_entries)
@@ -318,6 +323,11 @@ pub fn multi_serving_row(name: &str, m: &MultiStreamReport) -> JsonRow {
         .int("promotions", m.shared.promotions)
         .int("host_hits", m.shared.host_hits)
         .int("host_bytes", m.shared.host_bytes as u64)
+        .int("released", m.shared.released)
+        .int("archived", m.shared.archived)
+        .int("recalls", m.shared.recalls)
+        .int("disk_hits", m.shared.disk_hits)
+        .int("disk_bytes", m.shared.disk_bytes as u64)
         .int("lock_acquisitions", m.lock.acquisitions)
         .int("lock_contended", m.lock.contended)
         .int("failed_streams", m.failed_streams() as u64)
@@ -442,9 +452,12 @@ pub fn batch_from_env(default: usize) -> usize {
 }
 
 /// Parse the shared `--cache-mb` / `--cache-entries` / `--host-cache-bytes`
-/// flags into a policy (one definition for every binary that exposes the
-/// cache budget). `--host-cache-bytes 0` (the default) disables the host
-/// tier: device evictions destroy the entry instead of demoting it.
+/// / `--disk-cache-bytes` flags into a policy (one definition for every
+/// binary that exposes the cache budget). `--host-cache-bytes 0` (the
+/// default) disables the host tier: device evictions destroy the entry
+/// instead of demoting it. `--disk-cache-bytes 0` (the default) likewise
+/// disables the archive tier: host-budget deaths destroy the copy instead
+/// of spilling it to disk.
 pub fn cache_policy_from_args(args: &crate::util::cli::Args)
                               -> anyhow::Result<CachePolicy> {
     let d = CachePolicy::default();
@@ -465,10 +478,18 @@ pub fn cache_policy_from_args(args: &crate::util::cli::Args)
         })?,
         None => d.host_bytes,
     };
+    let disk_bytes = match args.get("disk-cache-bytes") {
+        Some(v) => v.parse().map_err(|_| {
+            anyhow::anyhow!("bad --disk-cache-bytes '{v}' (expected a byte \
+                             count; 0 disables the disk archive tier)")
+        })?,
+        None => d.disk_bytes,
+    };
     Ok(CachePolicy {
         max_bytes,
         max_entries: args.usize_or("cache-entries", d.max_entries),
         host_bytes,
+        disk_bytes,
         ..d
     })
 }
@@ -601,6 +622,7 @@ mod tests {
                      "llm_fused_calls", "llm_mean_occupancy", "llm_window_stalls",
                      "gnn_lane_device_s", "shared_hits", "dedup_bytes_saved",
                      "demotions", "promotions", "host_hits", "host_bytes",
+                     "released", "archived", "recalls", "disk_hits", "disk_bytes",
                      "lane_restarts", "retries", "quarantined", "deadline_hits",
                      "degraded_ms", "llm_queue_depth_peak", "llm_queue_depth_mean",
                      "admitted", "shed", "shed_deadline", "shed_overloaded",
@@ -617,12 +639,16 @@ mod tests {
         let d = CachePolicy::default();
         let off = cache_policy_from_args(&parse("")).unwrap();
         assert_eq!(off.host_bytes, d.host_bytes);
+        assert_eq!(off.disk_bytes, d.disk_bytes);
         let p = cache_policy_from_args(
-            &parse("--cache-mb 2 --host-cache-bytes 1000000")).unwrap();
+            &parse("--cache-mb 2 --host-cache-bytes 1000000 \
+                    --disk-cache-bytes 5000000")).unwrap();
         assert_eq!(p.max_bytes, 2 << 20);
         assert_eq!(p.host_bytes, 1_000_000);
+        assert_eq!(p.disk_bytes, 5_000_000);
         assert_eq!(p.shards, d.shards, "shard count keeps the default");
         assert!(cache_policy_from_args(&parse("--host-cache-bytes lots")).is_err());
+        assert!(cache_policy_from_args(&parse("--disk-cache-bytes much")).is_err());
     }
 
     #[test]
@@ -670,6 +696,7 @@ mod tests {
         for want in ["streams", "queries", "wall_s", "qps", "pool_prefills",
                      "shared_hits", "dedup_bytes_saved", "deferred_releases",
                      "demotions", "promotions", "host_hits", "host_bytes",
+                     "released", "archived", "recalls", "disk_hits", "disk_bytes",
                      "lock_acquisitions", "lock_contended", "failed_streams",
                      "lane_restarts", "retries", "quarantined", "deadline_hits",
                      "degraded_ms", "admitted", "shed", "shed_deadline",

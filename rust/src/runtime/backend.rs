@@ -565,6 +565,34 @@ pub trait Backend: Sync {
         Err(BackendError::fatal("backend has no host KV tier (promote unsupported)"))
     }
 
+    // -- disk KV tier (optional) ---------------------------------------------
+
+    /// Serialize a **host-tier** KV cache (minted by [`Backend::demote_kv`])
+    /// to plain bytes for the cache layer's disk archive, freeing the host
+    /// copy. Consumes `kv` either way — on error the host copy must already
+    /// have been released, so the caller never leaks a handle. The bytes
+    /// round-trip through [`Backend::recall_kv`] bit-identically.
+    ///
+    /// Backends without a disk tier keep this default: the handle is
+    /// released and the call fails `Fatal`, which the cache layer treats as
+    /// "archival unavailable — the spill is dropped instead of archived".
+    fn archive_kv(&self, kv: KvHandle) -> Result<Vec<u8>, BackendError> {
+        self.release(kv);
+        Err(BackendError::fatal("backend has no disk KV tier (archive_kv unsupported)"))
+    }
+
+    /// Rebuild a host-tier KV handle from bytes produced by
+    /// [`Backend::archive_kv`]. The returned handle feeds the normal
+    /// promote path ([`Backend::submit_promote`] / [`Backend::promote_kv`])
+    /// — the disk → host → device recall walk. Fails `Fatal` on malformed
+    /// bytes (a torn archive degraded to garbage must surface as an error,
+    /// never a bogus KV).
+    ///
+    /// Backends without a disk tier keep the default `Fatal`.
+    fn recall_kv(&self, _bytes: &[u8]) -> Result<KvHandle, BackendError> {
+        Err(BackendError::fatal("backend has no disk KV tier (recall_kv unsupported)"))
+    }
+
     // -- blocking conveniences (submit + wait) -------------------------------
 
     /// Blocking promote: [`Backend::submit_promote`] + wait.

@@ -155,6 +155,17 @@ enum Req {
         submitted: Instant,
         reply: Sender<Result<(u64, CallTiming), BackendError>>,
     },
+    /// Serialize a host-tier KV to archive bytes, consuming the host copy
+    /// either way (control traffic: never fuses).
+    Archive {
+        host: u64,
+        reply: Sender<Result<Vec<u8>, BackendError>>,
+    },
+    /// Rebuild a host-tier KV from archive bytes, minting a fresh host id.
+    Recall {
+        bytes: Vec<u8>,
+        reply: Sender<Result<u64, BackendError>>,
+    },
     Warmup {
         module: String,
         reply: Sender<Result<(), BackendError>>,
@@ -414,6 +425,23 @@ impl Engine {
         Ok(PendingPromote(Ticket { rx, lane: Lane::Llm }))
     }
 
+    /// Serialize a host-tier KV (minted by [`Engine::demote_kv`]) to
+    /// archive bytes on the LLM lane, freeing the host copy either way.
+    pub fn archive_kv(&self, kv: KvHandle) -> Result<Vec<u8>, BackendError> {
+        let (reply, rx) = channel();
+        self.send(Lane::Llm, Req::Archive { host: kv.0, reply })?;
+        Ticket { rx, lane: Lane::Llm }.wait()
+    }
+
+    /// Rebuild a host-tier KV handle from [`Engine::archive_kv`] bytes on
+    /// the LLM lane; feed it to [`Engine::submit_promote`] to finish the
+    /// disk → host → device recall walk.
+    pub fn recall_kv(&self, bytes: &[u8]) -> Result<KvHandle, BackendError> {
+        let (reply, rx) = channel();
+        self.send(Lane::Llm, Req::Recall { bytes: bytes.to_vec(), reply })?;
+        Ok(KvHandle(Ticket { rx, lane: Lane::Llm }.wait()?))
+    }
+
     /// Return a KV cache to the engine (KV lives on the LLM lane).
     /// Best-effort: a dead lane has already dropped its device buffers, so
     /// failure to enqueue is ignored.
@@ -505,6 +533,14 @@ impl Backend for Engine {
         Engine::submit_promote(self, kv)
     }
 
+    fn archive_kv(&self, kv: KvHandle) -> Result<Vec<u8>, BackendError> {
+        Engine::archive_kv(self, kv)
+    }
+
+    fn recall_kv(&self, bytes: &[u8]) -> Result<KvHandle, BackendError> {
+        Engine::recall_kv(self, bytes)
+    }
+
     fn release_many(&self, kvs: Vec<KvHandle>) {
         Engine::release_many(self, kvs)
     }
@@ -564,11 +600,20 @@ struct KvEntry {
     v: xla::PjRtBuffer,
 }
 
-/// A demoted KV cache parked in lane-thread host memory (k & v literals),
-/// awaiting promotion back to device buffers or release.
-struct HostKvEntry {
-    k: xla::Literal,
-    v: xla::Literal,
+/// A host-side f32 tensor (flat data + dims) — the parked form of a KV
+/// buffer rebuilt from archive bytes, ready for re-upload.
+struct HostTensor {
+    data: Vec<f32>,
+    dims: Vec<usize>,
+}
+
+/// A demoted KV cache parked in lane-thread host memory, awaiting
+/// promotion back to device buffers, archival to bytes, or release.
+/// `Literal` is the demote path's form (buffers crossed as literals);
+/// `Raw` is a recall rebuilt from disk-archive bytes.
+enum HostKvEntry {
+    Literal { k: xla::Literal, v: xla::Literal },
+    Raw { k: HostTensor, v: HostTensor },
 }
 
 struct State {
@@ -686,6 +731,12 @@ fn lane_main(root: PathBuf, manifest: Manifest, opts: EngineOpts, cfg: BatchConf
                     let picked = Instant::now();
                     let r = st.promote(host).map_err(BackendError::from_anyhow);
                     let _ = reply.send(r.map(|id| (id, tier_timing(submitted, picked))));
+                }
+                Req::Archive { host, reply } => {
+                    let _ = reply.send(st.archive(host).map_err(BackendError::from_anyhow));
+                }
+                Req::Recall { bytes, reply } => {
+                    let _ = reply.send(st.recall(&bytes).map_err(BackendError::from_anyhow));
                 }
                 Req::Warmup { module, reply } => {
                     let _ = reply.send(st.warmup(&module).map_err(BackendError::from_anyhow));
@@ -1131,25 +1182,72 @@ impl State {
         let v = e.v.to_literal_sync().map_err(xerr)?;
         let id = self.next_id;
         self.next_id += 1;
-        self.host_kvs.insert(id, HostKvEntry { k, v });
+        self.host_kvs.insert(id, HostKvEntry::Literal { k, v });
         Ok(id)
     }
 
     /// Promote a host-tier KV back to device buffers, re-minting a device
-    /// handle. The host literals are consumed only after both uploads
-    /// succeed, so a failed promote leaves the host copy retryable.
+    /// handle. The host copy is consumed only after both uploads succeed,
+    /// so a failed promote leaves it retryable.
     fn promote(&mut self, host: u64) -> anyhow::Result<u64> {
         let (kb, vb) = {
             let e = self.host_kvs.get(&host).ok_or_else(|| {
                 anyhow::anyhow!("unknown host-tier KV handle {host}")
             })?;
-            let kd = literal_dims(&e.k)?;
-            let vd = literal_dims(&e.v)?;
-            (self.buf_from_f32_literal(&e.k, &kd)?,
-             self.buf_from_f32_literal(&e.v, &vd)?)
+            match e {
+                HostKvEntry::Literal { k, v } => {
+                    let kd = literal_dims(k)?;
+                    let vd = literal_dims(v)?;
+                    (self.buf_from_f32_literal(k, &kd)?,
+                     self.buf_from_f32_literal(v, &vd)?)
+                }
+                HostKvEntry::Raw { k, v } => {
+                    (self.buf_f32(&k.data, &k.dims)?, self.buf_f32(&v.data, &v.dims)?)
+                }
+            }
         };
         self.host_kvs.remove(&host);
         Ok(self.insert_kv(kb, vb))
+    }
+
+    /// Serialize a host-tier KV to archive bytes: per tensor,
+    /// `[ndims u32 LE][dims u64 LE × n][f32 LE data]`, k then v. Consumes
+    /// the host copy either way (the `archive_kv` contract: on error the
+    /// copy is already gone, the caller never leaks a handle).
+    fn archive(&mut self, host: u64) -> anyhow::Result<Vec<u8>> {
+        let e = self.host_kvs.remove(&host).ok_or_else(|| {
+            anyhow::anyhow!("unknown host-tier KV handle {host}")
+        })?;
+        let (k, v) = match e {
+            HostKvEntry::Literal { k, v } => (literal_tensor(&k)?, literal_tensor(&v)?),
+            HostKvEntry::Raw { k, v } => (k, v),
+        };
+        let mut out = Vec::with_capacity(4 * (k.data.len() + v.data.len()) + 64);
+        for t in [&k, &v] {
+            out.extend_from_slice(&(t.dims.len() as u32).to_le_bytes());
+            for &d in &t.dims {
+                out.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            for &x in &t.data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Rebuild a host-tier KV from [`State::archive`] bytes, minting a
+    /// fresh host id (same counter as device handles). Malformed bytes
+    /// error out — a torn archive must never become a bogus KV.
+    fn recall(&mut self, bytes: &[u8]) -> anyhow::Result<u64> {
+        let mut off = 0usize;
+        let k = parse_tensor(bytes, &mut off)?;
+        let v = parse_tensor(bytes, &mut off)?;
+        anyhow::ensure!(off == bytes.len(),
+                        "archived KV payload has {} trailing bytes", bytes.len() - off);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.host_kvs.insert(id, HostKvEntry::Raw { k, v });
+        Ok(id)
     }
 
     /// Host-bounce KV storage: literal → host vec → fresh device buffer.
@@ -1284,6 +1382,43 @@ impl State {
         let out = self.call(module, "encode", extras)?;
         first_output_literal(out)?.to_vec::<f32>().map_err(xerr)
     }
+}
+
+/// Flatten a host literal into a [`HostTensor`] (the archive path's form).
+fn literal_tensor(lit: &xla::Literal) -> anyhow::Result<HostTensor> {
+    let dims = literal_dims(lit)?;
+    let n: usize = dims.iter().product();
+    let mut data = vec![0f32; n];
+    lit.copy_raw_to(&mut data).map_err(xerr)?;
+    Ok(HostTensor { data, dims })
+}
+
+/// Parse one `[ndims u32 LE][dims u64 LE × n][f32 LE data]` tensor frame
+/// from `bytes` at `*off`, advancing the offset. Every length is bounds-
+/// checked so truncated or garbage payloads fail cleanly.
+fn parse_tensor(bytes: &[u8], off: &mut usize) -> anyhow::Result<HostTensor> {
+    fn take<'a>(bytes: &'a [u8], off: &mut usize, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(bytes.len() - *off >= n, "archived KV payload truncated");
+        let s = &bytes[*off..*off + n];
+        *off += n;
+        Ok(s)
+    }
+    let ndims = u32::from_le_bytes(take(bytes, off, 4)?.try_into().unwrap()) as usize;
+    anyhow::ensure!(ndims <= 8, "archived KV tensor claims {ndims} dims");
+    let mut dims = Vec::with_capacity(ndims);
+    for _ in 0..ndims {
+        let d = u64::from_le_bytes(take(bytes, off, 8)?.try_into().unwrap());
+        anyhow::ensure!(d <= u32::MAX as u64, "archived KV dim {d} out of range");
+        dims.push(d as usize);
+    }
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n.checked_mul(4).is_some_and(|b| b <= bytes.len() - *off),
+                    "archived KV tensor data truncated");
+    let data = take(bytes, off, n * 4)?
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(HostTensor { data, dims })
 }
 
 /// Array dims of a host literal (for re-uploading a demoted KV with its

@@ -1040,6 +1040,39 @@ impl Backend for SimBackend {
         Ok(PendingPromote(Ticket { rx, lane: Lane::Llm }))
     }
 
+    fn archive_kv(&self, kv: KvHandle) -> Result<Vec<u8>, BackendError> {
+        if !is_host_handle(kv.0) {
+            self.release(kv);
+            return Err(BackendError::fatal(format!(
+                "archive_kv: handle {} is device-resident, not host-tier", kv.0)));
+        }
+        // the host store is backend-owned (no lane traffic): serialize the
+        // token sequence as little-endian i32s, consuming the host copy.
+        let seq = self.host.lock().remove(&kv.0).ok_or_else(|| {
+            BackendError::fatal(format!("archive_kv: unknown host-tier handle {}", kv.0))
+        })?;
+        let mut out = Vec::with_capacity(seq.len() * 4);
+        for t in seq {
+            out.extend_from_slice(&t.to_le_bytes());
+        }
+        Ok(out)
+    }
+
+    fn recall_kv(&self, bytes: &[u8]) -> Result<KvHandle, BackendError> {
+        if bytes.len() % 4 != 0 {
+            return Err(BackendError::fatal(format!(
+                "recall_kv: payload length {} is not a whole token sequence",
+                bytes.len())));
+        }
+        let seq: Vec<i32> = bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let id = HOST_BIT | (self.host.next.fetch_add(1, Ordering::Relaxed) + 1);
+        self.host.lock().insert(id, seq);
+        Ok(KvHandle(id))
+    }
+
     fn kv_bytes(&self, module: &str) -> Result<usize, BackendError> {
         let dims = self
             .manifest
@@ -1885,6 +1918,54 @@ mod tests {
         // the host copy was consumed by the successful promotion
         sim.release_many(vec![back, kv2]);
         assert_eq!(sim.stats().unwrap().live_kv, 0);
+    }
+
+    #[test]
+    fn disk_tier_archive_recall_roundtrip_is_bit_identical() {
+        // archive a demoted host copy to bytes, rebuild it with recall_kv,
+        // promote, and extend: results must match the never-archived run.
+        let (store, sim) = sim();
+        let c = *store.constants();
+        let mut toks = vec![c.pad_id; c.max_seq];
+        for (i, t) in toks.iter_mut().enumerate().take(24) {
+            *t = 7 + i as i32;
+        }
+        let q = {
+            let mut q = vec![c.pad_id; c.max_q];
+            q[0] = 201;
+            q
+        };
+        let (kv, _) = sim.prefill(SIM_BACKBONE, &toks, 24).unwrap();
+        let (kv_ref, row_ref) = sim.extend(SIM_BACKBONE, &kv, 24, &q, 1).unwrap();
+        sim.release(kv_ref);
+
+        let host = sim.demote_kv(kv).unwrap();
+        let bytes = sim.archive_kv(host).unwrap();
+        assert!(!bytes.is_empty());
+        assert_eq!(sim.stats().unwrap().live_kv, 0, "archive consumes the host copy");
+
+        let host2 = sim.recall_kv(&bytes).unwrap();
+        assert!(is_host_handle(host2.0), "recall mints a host-tier handle");
+        let back = sim.promote_kv(&host2).unwrap().0;
+        let (kv2, row2) = sim.extend(SIM_BACKBONE, &back, 24, &q, 1).unwrap();
+        assert_eq!(row2, row_ref, "roundtrip through the archive preserves bits");
+        sim.release_many(vec![back, kv2]);
+        assert_eq!(sim.stats().unwrap().live_kv, 0);
+    }
+
+    #[test]
+    fn archive_of_device_handle_fails_and_releases() {
+        let (store, sim) = sim();
+        let c = *store.constants();
+        let mut toks = vec![c.pad_id; c.max_seq];
+        toks[0] = c.bos_id;
+        let (kv, _) = sim.prefill(SIM_BACKBONE, &toks, 1).unwrap();
+        let err = sim.archive_kv(kv).unwrap_err();
+        assert!(err.to_string().contains("host-tier"), "unhelpful error: {err}");
+        assert_eq!(sim.stats().unwrap().live_kv, 0,
+                   "the counted fallback must release the device handle");
+        // malformed payloads surface as errors, never bogus KVs.
+        assert!(sim.recall_kv(&[1, 2, 3]).is_err());
     }
 
     #[test]

@@ -186,6 +186,88 @@ fn killed_llm_lane_fleet_recovers_with_host_tier_enabled() {
 }
 
 // ---------------------------------------------------------------------------
+// The same bar with the disk archive under a host budget too small to keep
+// any copy: quarantine sweeps only device residency, so archived records
+// survive the lane death and recovery recalls them instead of repaying.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn killed_llm_lane_fleet_recovers_with_disk_tier_enabled() {
+    let lat = SimLatency::from_millis(4, 1, 1, 1)
+        .with_host_copy_per_byte(Duration::from_nanos(10));
+    let n_streams = 3;
+    let ds = sim_dataset(3, 4);
+    let sample = ds.sample_test(8, 11);
+    let feats = GraphFeatures::build(&ds.graph);
+    let retr = GRetriever::default();
+    let mut seen: BTreeSet<(Vec<usize>, Vec<usize>)> = BTreeSet::new();
+    let mut picked: Vec<&Query> = Vec::new();
+    for &q in &sample {
+        let sg = retr.retrieve(&ds.graph, &feats, &q.text);
+        if seen.insert((sg.nodes.iter().copied().collect(),
+                        sg.edges.iter().copied().collect())) {
+            picked.push(q);
+            if picked.len() == 2 {
+                break;
+            }
+        }
+    }
+    assert_eq!(picked.len(), 2, "fixture must span two distinct reps");
+    // a/b alternation under a one-entry device budget and a half-entry host
+    // budget: every demotion spills straight through to the disk archive,
+    // and every revisit is a disk recall — so the kill always lands with
+    // live archived records on disk and none in host memory.
+    let mut queries: Vec<&Query> = Vec::new();
+    for _ in 0..4 {
+        queries.push(picked[0]);
+        queries.push(picked[1]);
+    }
+    let streams: Vec<Vec<&Query>> =
+        (0..n_streams).map(|_| queries.clone()).collect();
+    let probe = common::sim_env(lat);
+    let entry_bytes = probe.backend
+        .kv_bytes(subgcache::runtime::SIM_BACKBONE).unwrap();
+    let cfg = ServeConfig {
+        online_threshold: -1.0, // never join: content keying dedups reps
+        cache: CachePolicy::new(usize::MAX, 1)
+            .with_host_bytes(entry_bytes / 2)
+            .with_disk_bytes(64 << 20),
+        ..common::sim_config()
+    };
+
+    let coord = Coordinator::new(&probe.store, &probe.backend, cfg.clone()).unwrap();
+    let reference = coord
+        .serve_online_multi(&ds, &streams, &retr)
+        .unwrap();
+    assert!(reference.shared.archived >= 1,
+            "the workload must exercise the archive: {:?}", reference.shared);
+    assert!(reference.shared.recalls >= 1, "{:?}", reference.shared);
+    assert!(reference.shared.disk_hits >= 1, "{:?}", reference.shared);
+
+    let plan = FaultPlan { seed: 9, kill_llm_at_op: Some(12), ..FaultPlan::none() };
+    let (store, backend) = faulty_env(lat, plan, SupervisorPolicy::default());
+    let coord = Coordinator::new(&store, &backend, cfg).unwrap();
+    let multi = coord.serve_online_multi(&ds, &streams, &retr).unwrap();
+
+    assert_eq!(multi.failed_streams(), 0);
+    for (i, (got, want)) in multi.streams.iter().zip(&reference.streams).enumerate() {
+        assert_eq!(answers(got), answers(want),
+                   "stream {i} must survive the kill bit-identical with the \
+                    disk tier enabled");
+    }
+    assert!(multi.reliability.restarts >= 1,
+            "the killed lane must have been restarted: {:?}", multi.reliability);
+    assert!(multi.shared.quarantined >= 1,
+            "the stranded device entry must be quarantined: {:?}", multi.shared);
+    assert!(multi.shared.archived >= 1, "{:?}", multi.shared);
+    assert!(multi.shared.recalls >= 1,
+            "archived records must keep recalling across the lane death: {:?}",
+            multi.shared);
+    assert!(multi.shared.disk_hits >= 1, "{:?}", multi.shared);
+    assert_eq!(multi.reliability.restarts, backend.lane_restarts());
+}
+
+// ---------------------------------------------------------------------------
 // An empty plan is inert: start_faulty(none) == start, metric for metric.
 // ---------------------------------------------------------------------------
 

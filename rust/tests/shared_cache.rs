@@ -417,6 +417,87 @@ fn quarantined_device_entries_repromote_from_surviving_host_copies() {
     assert_eq!(backend.lane_restarts(), 1);
 }
 
+/// Three tiers end to end: a device eviction demotes to a host budget too
+/// small to keep the copy, which spills it to the disk archive; the revisit
+/// recalls disk → host → device bit-identical and strictly cheaper than the
+/// repaid prefill, with `archived`/`recalls`/`disk_hits` on the books.
+#[test]
+fn archived_rep_recalls_cheaper_than_repaid_prefill_bit_identical() {
+    // 30 ms prefill vs a ~4 ms recall walk (the promote copy dominates:
+    // 65536 B × 61 ns/B): the gap must show up in the revisit's PFTT.
+    let lat = SimLatency::from_millis(30, 2, 2, 2)
+        .with_host_copy_per_byte(Duration::from_nanos(61));
+    let env = common::sim_env(lat);
+    let ds = sim_dataset(3, 4);
+    let sample = ds.sample_test(8, 11);
+    let picked = distinct_rep_queries(&ds, &sample, 2);
+    assert_eq!(picked.len(), 2, "fixture must span two distinct reps");
+    // a, b, a under a one-entry device budget AND a half-entry host budget:
+    // installing `b` demotes `a` to the host tier, whose budget immediately
+    // spills it to disk — so the revisit of `a` is a disk recall, not a
+    // promotion.
+    let queries = vec![picked[0], picked[1], picked[0]];
+    let cfg = ServeConfig { online_threshold: -1.0, ..common::sim_config() };
+    let coord = Coordinator::new(&env.store, &env.backend, cfg).unwrap();
+    let retr = GRetriever::default();
+    let entry_bytes = env.backend.kv_bytes(subgcache::runtime::SIM_BACKBONE).unwrap();
+
+    let serve = |policy: CachePolicy| {
+        let pool: Arc<SharedKvCache<subgcache::runtime::KvHandle>> =
+            Arc::new(SharedKvCache::new(policy));
+        let mut view = KvCacheManager::shared_view(&pool);
+        let r = coord
+            .serve_online_with_cache(&ds, queries.iter().copied(), &retr, &mut view)
+            .unwrap();
+        env.backend.release_many(pool.drain_all());
+        r
+    };
+    let tiered = serve(CachePolicy::new(usize::MAX, 1)
+        .with_host_bytes(entry_bytes / 2)
+        .with_disk_bytes(64 << 20));
+    let repaid = serve(CachePolicy::new(usize::MAX, 1));
+    let warm = serve(CachePolicy::unbounded());
+
+    // the archive round trip must never change an answer.
+    let answers = |r: &ServeReport| -> Vec<String> {
+        r.results.iter().map(|x| x.predicted.clone()).collect()
+    };
+    assert_eq!(answers(&tiered), answers(&warm),
+               "demote → archive → recall round trip changed an answer");
+    assert_eq!(answers(&repaid), answers(&warm), "repaid run changed an answer");
+
+    // tier counters nonzero, and the repay actually skipped.
+    assert_eq!(tiered.cache.prefills, 2, "the revisit must recall, not repay");
+    assert_eq!(tiered.cache.recalls, 1, "{:?}", tiered.cache);
+    assert_eq!(tiered.cache.disk_hits, 1, "{:?}", tiered.cache);
+    assert_eq!(tiered.cache.archived, 2,
+               "both host-budget deaths must spill to disk: {:?}", tiered.cache);
+    assert_eq!(tiered.cache.demotions, 2, "{:?}", tiered.cache);
+    assert_eq!(tiered.cache.promotions, 0,
+               "the half-entry host budget keeps no copy to promote: {:?}",
+               tiered.cache);
+    assert_eq!(tiered.cache.host_hits, 0, "{:?}", tiered.cache);
+    assert_eq!(repaid.cache.prefills, 3, "no disk tier: the revisit repays");
+    assert_eq!(repaid.cache.recalls, 0);
+    assert_eq!(warm.cache.prefills, 2);
+    assert_eq!(warm.cache.evictions, 0);
+
+    // strictly cheaper: the recall walk beats the repaid prefill.
+    let recalled = tiered.metrics.per_query[2].pftt;
+    let repay = repaid.metrics.per_query[2].pftt;
+    assert!(recalled > 0.0, "the recall walk is not free");
+    assert!(recalled < repay * 0.5,
+            "a disk-tier hit must be well under a repaid prefill: \
+             recalled {recalled:.4}s vs repaid {repay:.4}s");
+    assert!(recalled < tiered.metrics.per_query[0].pftt,
+            "the recall must also beat this run's own cold misses");
+    assert_eq!(tiered.metrics.per_query[2].cache_hit, Some(false),
+               "a recall is still a device miss in the hit/miss split");
+
+    assert_eq!(env.backend.stats().unwrap().live_kv, 0,
+               "device KV, host copies and recalled handles must all drain");
+}
+
 // ---------------------------------------------------------------------------
 // Randomized concurrent workloads (the satellite property tests)
 // ---------------------------------------------------------------------------
